@@ -1,0 +1,14 @@
+//! A1 — the §7 chunking hypothesis, tested: chunk-size sweep on the
+//! chunked_big workload against the unchunked stream algorithm.
+//! Run: `cargo bench --bench ablation_chunk`.
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::bench_config();
+    common::banner("ablation_chunk (A1)", &cfg);
+    let sizes = [1, 4, 16, 64, 128, 256];
+    let report = stream_future::bench_harness::paper::ablation_chunk(&cfg, &sizes)?;
+    println!("{report}");
+    Ok(())
+}

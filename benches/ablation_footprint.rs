@@ -1,0 +1,71 @@
+//! A4 — elementary-operation footprint sweep on the *stream* algorithm:
+//! the mechanism behind the paper's F3 ("the overhead incurred by
+//! parallelization … is compensated when the footprint of coefficients
+//! is big enough").
+//!
+//! The paper turns the knob once (×100000000001). On a JVM that single
+//! step makes each multiply-add micro-second-scale; our BigInt does the
+//! same product in ~40 ns, so one step is invisible against ~1.2 µs of
+//! Future machinery. This sweep raises the factor to the k-th power
+//! (coefficients of ~2k limbs) and reports par(1)/seq — the overhead
+//! ratio must fall monotonically toward 1 as the footprint grows, which
+//! is exactly F3's mechanism expressed on a 1-core testbed.
+//!
+//! Run: `cargo bench --bench ablation_footprint`.
+
+mod common;
+
+use std::time::Instant;
+
+use stream_future::bigint::BigInt;
+use stream_future::poly::{stream_times, Polynomial};
+use stream_future::prelude::*;
+use stream_future::testkit::with_stack;
+use stream_future::workload::fateman_pair;
+
+fn main() {
+    let cfg = common::bench_config();
+    common::banner("ablation_footprint (A4)", &cfg);
+    // Smaller degree than Table 1: BigInt^16 coefficients are heavy.
+    let degree = (cfg.scaled_fateman_degree() / 2).max(3);
+    let (p_small, q_small) = fateman_pair(cfg.fateman_vars, degree);
+    println!(
+        "workload: Fateman (1+Σx)^{degree} over {} vars, coefficients × {}^k\n",
+        cfg.fateman_vars, cfg.big_factor
+    );
+    println!(
+        "{:>4} {:>7} {:>10} {:>10} {:>12}",
+        "k", "limbs", "seq (s)", "par(1) (s)", "par(1)/seq"
+    );
+
+    let factor = BigInt::from(cfg.big_factor);
+    for k in [0u32, 1, 2, 4, 8, 16, 32] {
+        let mut scale = BigInt::one();
+        for _ in 0..k {
+            scale = &scale * &factor;
+        }
+        let p: Polynomial<BigInt> =
+            p_small.map_coeffs(|c| &BigInt::from(*c) * &scale);
+        let q: Polynomial<BigInt> =
+            q_small.map_coeffs(|c| &BigInt::from(*c) * &scale);
+        let limbs = p.leading().map(|(_, c)| c.limb_len()).unwrap_or(0);
+
+        let want = p.mul(&q);
+
+        let (ps, qs) = (p.clone(), q.clone());
+        let t = Instant::now();
+        let got = with_stack(1024, move || stream_times(&LazyEval, &ps, &qs));
+        let seq = t.elapsed().as_secs_f64();
+        assert_eq!(got, want, "seq k={k}");
+
+        let (pp, qp) = (p.clone(), q.clone());
+        let eval = FutureEval::new(Executor::new(1));
+        let t = Instant::now();
+        let got = with_stack(1024, move || stream_times(&eval, &pp, &qp));
+        let par1 = t.elapsed().as_secs_f64();
+        assert_eq!(got, want, "par1 k={k}");
+
+        println!("{k:>4} {limbs:>7} {seq:>10.3} {par1:>10.3} {:>12.2}", par1 / seq);
+    }
+    println!("\nablation_footprint done (ratio must fall toward 1 as k grows — F3's mechanism)");
+}

@@ -1,0 +1,13 @@
+//! A2 — chunked-multiply backend ablation: AOT PJRT kernel vs the
+//! pure-Rust scalar block multiplier.
+//! Run: `cargo bench --bench ablation_kernel`.
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::bench_config();
+    common::banner("ablation_kernel (A2)", &cfg);
+    let report = stream_future::bench_harness::paper::ablation_kernel(&cfg)?;
+    println!("{report}");
+    Ok(())
+}

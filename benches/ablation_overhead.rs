@@ -1,0 +1,141 @@
+//! A3 — overhead anatomy: microbenchmarks for the mechanisms behind the
+//! paper's observations 1–4 (task grain vs coordination overhead).
+//!
+//! Measures, in order:
+//! 1. executor task spawn→complete cost (the price of one stream cell
+//!    under the Future strategy);
+//! 2. suspension construction+force cost per strategy (Lazy vs Future vs
+//!    Strict) over a stream walk;
+//! 3. `Fut` continuation-chain cost per stage (`map` without forcing);
+//! 4. the elementary-operation footprint knob: one term-product
+//!    multiply-add at growing coefficient sizes (i64 → BigInt at
+//!    100000000001^k), i.e. *why* `stream_big` recovers;
+//! 5. executor queue throughput under producer contention.
+//!
+//! Run: `cargo bench --bench ablation_overhead`.
+
+mod common;
+
+use std::time::Instant;
+
+use stream_future::bigint::BigInt;
+use stream_future::exec::Executor;
+use stream_future::poly::Coeff;
+use stream_future::prelude::*;
+use stream_future::susp::Fut;
+
+fn time_per<R>(label: &str, iters: u64, f: impl FnOnce() -> R) -> f64 {
+    let t = Instant::now();
+    let _keep = f();
+    let total = t.elapsed().as_secs_f64();
+    let per = total / iters as f64 * 1e9;
+    println!("{label:<52} {per:>12.1} ns/op   ({total:.3}s / {iters} ops)");
+    per
+}
+
+fn main() {
+    let cfg = common::bench_config();
+    common::banner("ablation_overhead (A3)", &cfg);
+    let n: u64 = (100_000f64 * cfg.scale) as u64;
+    let n = n.max(10_000);
+
+    // 1. Raw task spawn→complete.
+    {
+        let ex = Executor::new(1);
+        time_per("task spawn+complete (par(1) pool)", n, || {
+            for _ in 0..n {
+                ex.spawn(|| {});
+            }
+            ex.wait_idle();
+        });
+    }
+
+    // 2. Stream-cell cost per strategy.
+    {
+        let len = n as u32;
+        time_per("stream cell construct+force, Lazy (seq)", n, || {
+            Stream::range(LazyEval, 0, len).force_all()
+        });
+        time_per("stream cell construct+force, Strict", n, || {
+            Stream::range(StrictEval, 0, len).force_all()
+        });
+        let ex = Executor::new(1);
+        time_per("stream cell construct+force, Future par(1)", n, || {
+            Stream::range(FutureEval::new(ex.clone()), 0, len).force_all()
+        });
+        let ex2 = Executor::new(2);
+        time_per("stream cell construct+force, Future par(2)", n, || {
+            Stream::range(FutureEval::new(ex2.clone()), 0, len).force_all()
+        });
+    }
+
+    // 3. Continuation chaining (map) per stage.
+    {
+        let ex = Executor::new(1);
+        let depth = (n / 10).max(1_000);
+        time_per("Fut::and_then chain, per stage", depth, || {
+            let mut cur = Fut::spawn(&ex, || 0u64);
+            for _ in 0..depth {
+                cur = cur.and_then(|x| x + 1);
+            }
+            *cur.force()
+        });
+    }
+
+    // 4. Elementary-op footprint sweep (the paper's `_big` knob).
+    {
+        let reps = (n / 10).max(1_000);
+        let a = 123_456i64;
+        let b = 789_012i64;
+        time_per("term multiply-add, i64", reps, || {
+            let mut acc = 0i64;
+            for _ in 0..reps {
+                acc = acc.wrapping_add(std::hint::black_box(a).wrapping_mul(b));
+            }
+            acc
+        });
+        let factor = BigInt::from(100_000_000_001i64);
+        let mut fa = BigInt::from(a);
+        let mut fb = BigInt::from(b);
+        for k in 1..=4u32 {
+            fa = Coeff::mul(&fa, &factor);
+            fb = Coeff::mul(&fb, &factor);
+            let (fa2, fb2) = (fa.clone(), fb.clone());
+            let label = format!(
+                "term multiply-add, BigInt ~{} limbs (factor^{k})",
+                fa.limb_len() + fb.limb_len()
+            );
+            time_per(&label, reps, move || {
+                let mut acc = BigInt::zero();
+                for _ in 0..reps {
+                    acc = Coeff::add(&acc, &Coeff::mul(&fa2, &fb2));
+                }
+                acc
+            });
+        }
+    }
+
+    // 5. Queue throughput under contention.
+    {
+        for workers in [1usize, 2, 4] {
+            let ex = Executor::new(workers);
+            let label = format!("queue throughput, {workers} workers, 4 producers");
+            time_per(&label, n, || {
+                std::thread::scope(|s| {
+                    for _ in 0..4 {
+                        let ex = ex.clone();
+                        let per = n / 4;
+                        s.spawn(move || {
+                            for _ in 0..per {
+                                ex.spawn(|| {});
+                            }
+                        });
+                    }
+                });
+                ex.wait_idle();
+            });
+        }
+    }
+
+    println!("\nablation_overhead done");
+}

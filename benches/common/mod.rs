@@ -1,0 +1,47 @@
+//! Shared bench-target plumbing.
+//!
+//! Every `cargo bench` target regenerates one of the paper's evaluation
+//! artifacts via the library's `bench_harness::paper` module, so the CLI
+//! (`sfut table1`) and `cargo bench --bench table1` print identical
+//! reports.
+//!
+//! Environment knobs:
+//! * `SFUT_SCALE`          — workload scale (default 0.35 so a full
+//!   `cargo bench` sweep finishes in minutes; 1.0 = paper size —
+//!   EXPERIMENTS.md records the scale=1.0 runs)
+//! * `SFUT_BENCH_SAMPLES`  — samples per cell (default 1)
+//! * `SFUT_BENCH_WARMUP`   — warmup runs per cell (default 1; the warmup
+//!   also absorbs allocator settling between RSS-heavy cells)
+//! * `SFUT_NO_KERNEL=1`    — disable the PJRT engine
+
+use stream_future::config::Config;
+
+pub fn bench_config() -> Config {
+    let mut cfg = Config::default();
+    cfg.scale = std::env::var("SFUT_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.35);
+    cfg.samples = std::env::var("SFUT_BENCH_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    cfg.warmup = std::env::var("SFUT_BENCH_WARMUP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    if std::env::var("SFUT_NO_KERNEL").is_ok() {
+        cfg.use_kernel = false;
+    }
+    // `cargo bench` runs from the workspace root; resolve artifacts
+    // relative to the manifest so the engine finds them from anywhere.
+    cfg.artifacts_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    cfg
+}
+
+pub fn banner(name: &str, cfg: &Config) {
+    eprintln!(
+        "== {name} :: scale={} samples={} warmup={} kernel={} ==",
+        cfg.scale, cfg.samples, cfg.warmup, cfg.use_kernel
+    );
+}

@@ -1,0 +1,12 @@
+//! Regenerates the paper's fig3 (see bench_harness::paper::fig3).
+//! Run: `cargo bench --bench fig3` (env knobs in benches/common/mod.rs).
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::bench_config();
+    common::banner("fig3", &cfg);
+    let report = stream_future::bench_harness::paper::fig3(&cfg)?;
+    println!("{report}");
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Regenerates the paper's fig4 (see bench_harness::paper::fig4).
+//! Run: `cargo bench --bench fig4` (env knobs in benches/common/mod.rs).
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::bench_config();
+    common::banner("fig4", &cfg);
+    let report = stream_future::bench_harness::paper::fig4(&cfg)?;
+    println!("{report}");
+    Ok(())
+}

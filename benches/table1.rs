@@ -1,0 +1,12 @@
+//! Regenerates the paper's table1 (see bench_harness::paper::table1).
+//! Run: `cargo bench --bench table1` (env knobs in benches/common/mod.rs).
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::bench_config();
+    common::banner("table1", &cfg);
+    let report = stream_future::bench_harness::paper::table1(&cfg)?;
+    println!("{report}");
+    Ok(())
+}

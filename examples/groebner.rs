@@ -1,0 +1,85 @@
+//! Gröbner bases with parallel Buchberger — the application domain the
+//! paper's references [5, 6, 9] study (parallel polynomial operations in
+//! the large Buchberger algorithm).
+//!
+//! ```bash
+//! cargo run --release --example groebner
+//! ```
+//!
+//! Computes reduced Gröbner bases for classic small ideals (Cox–Little–
+//! O'Shea's textbook ideal, cyclic-3, Katsura-3) over exact rationals,
+//! sequentially and with generation-parallel pair reduction, verifies
+//! both against Buchberger's criterion, and reports timings.
+
+use std::time::Instant;
+
+use stream_future::exec::Executor;
+use stream_future::poly::groebner::{buchberger_par, buchberger_seq, is_groebner};
+use stream_future::poly::{parse_polynomial, Polynomial};
+use stream_future::rational::Rational;
+
+fn parse_all(inputs: &[&str], names: &[&str]) -> Vec<Polynomial<Rational>> {
+    inputs.iter().map(|s| parse_polynomial(s, names).unwrap()).collect()
+}
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+    let exec = Executor::new(cores);
+
+    let systems: Vec<(&str, Vec<&str>, Vec<&str>)> = vec![
+        (
+            "CLO textbook (grlex)",
+            vec!["x", "y"],
+            vec!["x^3 - 2*x*y", "x^2*y - 2*y^2 + x"],
+        ),
+        (
+            "cyclic-3",
+            vec!["x", "y", "z"],
+            vec!["x + y + z", "x*y + y*z + z*x", "x*y*z - 1"],
+        ),
+        (
+            "katsura-3",
+            vec!["x", "y", "z"],
+            vec![
+                "x + 2*y + 2*z - 1",
+                "x^2 + 2*y^2 + 2*z^2 - x",
+                "2*x*y + 2*y*z - y",
+            ],
+        ),
+        (
+            "intersecting quadrics",
+            vec!["x", "y", "z"],
+            vec!["x^2 + y + z - 1", "x + y^2 + z - 1", "x + y + z^2 - 1"],
+        ),
+    ];
+
+    for (name, vars, gens) in systems {
+        println!("== {name} ==");
+        let generators = parse_all(&gens, &vars);
+        for g in &generators {
+            println!("  in:  {g}");
+        }
+
+        let t = Instant::now();
+        let seq = buchberger_seq(&generators);
+        let t_seq = t.elapsed();
+        let t = Instant::now();
+        let par = buchberger_par(&exec, &generators);
+        let t_par = t.elapsed();
+
+        assert!(is_groebner(&seq), "sequential basis fails Buchberger's criterion");
+        assert!(is_groebner(&par), "parallel basis fails Buchberger's criterion");
+        assert_eq!(seq, par, "parallel and sequential bases differ");
+
+        for b in &seq {
+            println!("  out: {b}");
+        }
+        println!(
+            "  seq {:.2?}  par({cores}) {:.2?}  [{} basis elements, verified]\n",
+            t_seq,
+            t_par,
+            seq.len()
+        );
+    }
+    println!("groebner OK");
+}

@@ -1,0 +1,112 @@
+//! End-to-end driver: the full three-layer system on a real workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example pipeline_e2e
+//! ```
+//!
+//! Exercises every layer in one run:
+//!   L1/L2 — the AOT Pallas/JAX artifacts are loaded and executed via
+//!           PJRT for the chunked block products;
+//!   L3   — the coordinator routes Table-1-style jobs through the
+//!          stream/future machinery, verifies each against the oracle,
+//!          and reports timings, throughput, engine and executor
+//!          metrics.
+//!
+//! The printed report is recorded in EXPERIMENTS.md §End-to-end.
+
+use anyhow::Result;
+use stream_future::bench_harness::{render_table, Cell, ReportTable};
+use stream_future::config::{Config, Mode, Workload};
+use stream_future::coordinator::{JobRequest, Pipeline};
+use stream_future::workload::fateman_terms;
+
+fn main() -> Result<()> {
+    let scale: f64 = std::env::var("SFUT_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.6);
+    let mut cfg = Config::default();
+    cfg.scale = scale;
+    cfg.samples = 1;
+    cfg.warmup = 0;
+
+    let pipeline = Pipeline::new(cfg.clone())?;
+    match pipeline.engine() {
+        Some(engine) => println!(
+            "PJRT engine up: platform={}, poly artifacts {:?}, sieve artifacts {:?}",
+            engine.platform(),
+            engine.poly_shapes(),
+            engine.sieve_shapes()
+        ),
+        None => println!(
+            "WARNING: artifacts not built — chunked workloads fall back to rust-scalar \
+             (run `make artifacts`)"
+        ),
+    }
+
+    let degree = cfg.scaled_fateman_degree();
+    let terms = fateman_terms(cfg.fateman_vars, degree);
+    let term_products = terms * terms;
+    println!(
+        "workload: Fateman p·(p+1), (1+Σx)^{degree} over {} vars = {terms} terms \
+         ({term_products} term-products); primes n={}\n",
+        cfg.fateman_vars,
+        cfg.scaled_primes_n()
+    );
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+    let mut modes = vec![Mode::Seq, Mode::Par(1), Mode::Par(2)];
+    if cores > 2 {
+        modes.push(Mode::Par(cores));
+    }
+    let cols: Vec<String> = modes.iter().map(Mode::label).collect();
+    let mut table = ReportTable::new(
+        "End-to-end timings (seconds)",
+        cols.iter().map(String::as_str).collect(),
+    );
+
+    let workloads = [
+        Workload::Primes,
+        Workload::Stream,
+        Workload::StreamBig,
+        Workload::List,
+        Workload::ListBig,
+        Workload::Chunked,
+        Workload::ChunkedBig,
+    ];
+    for w in workloads {
+        for &m in &modes {
+            let req = JobRequest { workload: w, mode: m };
+            let result = pipeline.run(&req)?;
+            anyhow::ensure!(result.verified, "{} failed verification", req.label());
+            table.set(w.name(), &m.label(), Cell::Seconds(result.seconds));
+            if w == Workload::Chunked && m == Mode::Seq {
+                println!("chunked backend: {}", result.backend);
+            }
+        }
+    }
+
+    println!("\n{}", render_table(&table));
+
+    // Throughput on the chunked kernel path.
+    let fastest_par = format!("par({})", cores.min(2).max(1));
+    if let Some(secs) = table.seconds("chunked", &fastest_par) {
+        println!(
+            "chunked {fastest_par} throughput: {:.1}M term-products/s",
+            term_products as f64 / secs / 1e6
+        );
+    }
+
+    if let Some(engine) = pipeline.engine() {
+        let stats = engine.stats();
+        println!(
+            "\nengine stats: {} poly calls, {} sieve calls, {:.3}s total kernel exec",
+            stats.poly_calls,
+            stats.sieve_calls,
+            stats.total_exec_nanos as f64 / 1e9
+        );
+    }
+    println!("\nmetrics snapshot:\n{}", pipeline.metrics().snapshot().render());
+    println!("pipeline_e2e OK — all jobs verified against oracles");
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! The paper's §6 example: sparse polynomial multiplication on the
+//! Fateman benchmark, comparing the three algorithms
+//! (stream / parallel-collections list / chunked) and the two
+//! coefficient rings (i64 vs BigInt×100000000001 — the paper's `_big`).
+//!
+//! ```bash
+//! cargo run --release --example polymul -- [degree] [vars] [chunk]
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use stream_future::bigint::BigInt;
+use stream_future::poly::{
+    chunked_times, list_times_par, list_times_seq, stream_times, Coeff, Polynomial,
+    RustMultiplier,
+};
+use stream_future::prelude::*;
+use stream_future::testkit::with_stack;
+use stream_future::workload::{fateman_pair, fateman_pair_big, fateman_terms};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let degree: u32 = args.first().and_then(|s| s.parse().ok()).unwrap_or(6);
+    let vars: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let chunk: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+
+    println!(
+        "Fateman benchmark: p = (1 + Σx)^{degree} over {vars} vars \
+         ({} terms); computing p·(p+1)\n",
+        fateman_terms(vars, degree)
+    );
+
+    println!("== small coefficients (i64) ==");
+    let (p, q) = fateman_pair(vars, degree);
+    run_all("i64", &p, &q, chunk);
+
+    println!("\n== big coefficients (BigInt × 100000000001, the paper's `_big`) ==");
+    let (pb, qb) = fateman_pair_big(vars, degree, 100_000_000_001);
+    run_all("big", &pb, &qb, chunk);
+}
+
+fn run_all<C: Coeff>(tag: &str, p: &Polynomial<C>, q: &Polynomial<C>, chunk: usize) {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+    let want = time(&format!("[{tag}] classical mul (oracle)"), || p.mul(q));
+
+    {
+        let (p, q) = (p.clone(), q.clone());
+        let got = time(&format!("[{tag}] stream seq"), move || {
+            with_stack(1024, move || stream_times(&LazyEval, &p, &q))
+        });
+        assert_eq!(got, want);
+    }
+    {
+        let (p, q) = (p.clone(), q.clone());
+        let eval = FutureEval::new(Executor::new(cores));
+        let got = time(&format!("[{tag}] stream par({cores})"), move || {
+            with_stack(1024, move || stream_times(&eval, &p, &q))
+        });
+        assert_eq!(got, want);
+    }
+    let got = time(&format!("[{tag}] list seq"), || list_times_seq(p, q));
+    assert_eq!(got, want);
+    let exec = Executor::new(cores);
+    let got = time(&format!("[{tag}] list par({cores})"), || list_times_par(&exec, p, q));
+    assert_eq!(got, want);
+    let got = time(&format!("[{tag}] chunked({chunk}) seq"), || {
+        chunked_times(&LazyEval, p, q, chunk, Arc::new(RustMultiplier))
+    });
+    assert_eq!(got, want);
+    let eval = FutureEval::new(Executor::new(cores));
+    let got = time(&format!("[{tag}] chunked({chunk}) par({cores})"), || {
+        chunked_times(&eval, p, q, chunk, Arc::new(RustMultiplier))
+    });
+    assert_eq!(got, want);
+    println!(
+        "  result: {} terms, leading coefficient {}",
+        want.num_terms(),
+        want.leading().map(|(_, c)| c.to_string()).unwrap_or_default()
+    );
+}
+
+fn time<R>(name: &str, f: impl FnOnce() -> R) -> R {
+    let t = Instant::now();
+    let out = f();
+    println!("  {name:<32} {:>8.3}s", t.elapsed().as_secs_f64());
+    out
+}
+
+// Keep BigInt in the example's public face (the `_big` ring).
+#[allow(dead_code)]
+fn big(x: i64) -> BigInt {
+    BigInt::from(x)
+}

@@ -1,0 +1,50 @@
+//! Quickstart: the paper's construct in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! A stream algorithm is written once against the monadic interface;
+//! substituting the `Future` strategy for `Lazy` (one argument) makes it
+//! pipeline-parallel — the paper's central move.
+
+use stream_future::prelude::*;
+use stream_future::poly::{parse_polynomial, stream_times, Polynomial};
+use stream_future::sieve;
+
+fn main() {
+    // ── 1. Streams over the Lazy monad (Scala's Stream) ─────────────
+    let naturals = Stream::range(LazyEval, 1, 1_000_000);
+    let first_squares: Vec<u32> = naturals.map_elems(|x| x * x).take(5).to_vec();
+    println!("lazy squares:   {first_squares:?}");
+    // Only 5 cells were ever computed; the range is a million long.
+
+    // ── 2. Substitute Future for Lazy: same code, now parallel ──────
+    let exec = Executor::new(2); // the paper's par(2)
+    let eval = FutureEval::new(exec.clone());
+    let naturals = Stream::range(eval, 1, 50);
+    let squares: Vec<u32> = naturals.map_elems(|x| x * x).take(5).to_vec();
+    println!("future squares: {squares:?}");
+    println!(
+        "executor ran {} tasks on {} workers",
+        exec.stats().tasks_executed,
+        exec.parallelism()
+    );
+
+    // ── 3. The paper's §5 prime sieve, both ways ─────────────────────
+    let seq_primes = sieve::primes(LazyEval, 100);
+    let par_primes = sieve::primes(FutureEval::new(Executor::new(2)), 100);
+    assert_eq!(seq_primes, par_primes);
+    println!("primes < 100:   {seq_primes:?}");
+
+    // ── 4. The paper's §6 polynomial multiplication ──────────────────
+    let a: Polynomial<i64> = parse_polynomial("x^2 + 2*x*y + y^2", &["x", "y"]).unwrap();
+    let b: Polynomial<i64> = parse_polynomial("x - y", &["x", "y"]).unwrap();
+    let seq_prod = stream_times(&LazyEval, &a, &b);
+    let par_prod = stream_times(&FutureEval::new(Executor::new(2)), &a, &b);
+    assert_eq!(seq_prod, par_prod);
+    assert_eq!(seq_prod, a.mul(&b)); // matches the classical algorithm
+    println!("({a}) * ({b}) = {seq_prod}");
+
+    println!("\nquickstart OK");
+}

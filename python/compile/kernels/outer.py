@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: dense per-chunk term outer product.
+
+The paper's §7 observes that its stream pipeline only pays off once
+"elementary computations" are big enough; the chunked extension makes the
+elementary unit a *block pair* of polynomial terms, whose product is a
+dense computation: an exponent broadcast-add plus a coefficient outer
+product.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the coefficient outer
+product is a rank-1 matmul `xc[:, None] @ yc[None, :]`, which maps onto
+the MXU systolic array; the exponent add is pure VPU elementwise work.
+BlockSpec tiles the x-side so one (TX × By) output tile plus its inputs
+stay VMEM-resident; the grid walks x-tiles, which is the HBM↔VMEM
+schedule the Scala original expressed with task granularity.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the interpreter to plain
+HLO (same numerics, runnable from the Rust runtime). Real-TPU estimates
+live in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# x-side tile rows per grid step. 8 keeps the output tile (8*By rows)
+# aligned with the f32/f64 sublane quantum on real TPUs.
+TILE_X = 8
+
+
+def _outer_kernel(xe_ref, xc_ref, ye_ref, yc_ref, oe_ref, oc_ref):
+    """One grid step: products of TILE_X x-terms against the whole y block.
+
+    Refs (VMEM tiles):
+      xe_ref: i32[TILE_X, V]   xc_ref: f64[TILE_X]
+      ye_ref: i32[By, V]       yc_ref: f64[By]
+      oe_ref: i32[TILE_X*By, V]
+      oc_ref: f64[TILE_X*By]
+    """
+    xe = xe_ref[...]
+    ye = ye_ref[...]
+    tx, v = xe.shape
+    by = ye.shape[0]
+    # Exponent broadcast-add (VPU).
+    oe_ref[...] = (xe[:, None, :] + ye[None, :, :]).reshape(tx * by, v)
+    # Coefficient outer product as a rank-1 matmul (MXU on real TPU).
+    xc = xc_ref[...].reshape(tx, 1)
+    yc = yc_ref[...].reshape(1, by)
+    oc_ref[...] = jnp.dot(xc, yc, preferred_element_type=jnp.float64).reshape(tx * by)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_outer(x_exps, x_coefs, y_exps, y_coefs, *, interpret=True):
+    """All pairwise term products; out[i*By + j] = x[i] * y[j].
+
+    Shapes: x_exps i32[Bx, V], x_coefs f64[Bx], y_exps i32[By, V],
+    y_coefs f64[By] with Bx divisible by TILE_X.
+    """
+    bx, v = x_exps.shape
+    by, _ = y_exps.shape
+    if bx % TILE_X != 0:
+        raise ValueError(f"Bx={bx} must be a multiple of TILE_X={TILE_X}")
+    grid = (bx // TILE_X,)
+    return pl.pallas_call(
+        _outer_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_X, v), lambda i: (i, 0)),      # x exps tile
+            pl.BlockSpec((TILE_X,), lambda i: (i,)),           # x coefs tile
+            pl.BlockSpec((by, v), lambda i: (0, 0)),           # whole y exps
+            pl.BlockSpec((by,), lambda i: (0,)),               # whole y coefs
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_X * by, v), lambda i: (i, 0)),  # output exps tile
+            pl.BlockSpec((TILE_X * by,), lambda i: (i,)),      # output coefs tile
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bx * by, v), jnp.int32),
+            jax.ShapeDtypeStruct((bx * by,), jnp.float64),
+        ],
+        interpret=interpret,
+    )(x_exps, x_coefs, y_exps, y_coefs)
+
+
+def vmem_footprint_bytes(bx, by, v, tile_x=TILE_X):
+    """Estimated VMEM residency of one grid step (DESIGN.md roofline)."""
+    in_bytes = tile_x * v * 4 + tile_x * 8 + by * v * 4 + by * 8
+    out_bytes = tile_x * by * v * 4 + tile_x * by * 8
+    return in_bytes + out_bytes

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Both references mirror the Rust scalar implementations
+(`poly::RustMultiplier`, `sieve::RustSiever`) exactly; pytest checks
+kernel == ref, and the Rust integration tests check PJRT(artifact) ==
+Rust scalar, closing the loop.
+"""
+
+import jax.numpy as jnp
+
+
+def block_outer_ref(x_exps, x_coefs, y_exps, y_coefs):
+    """All pairwise term products of two term blocks.
+
+    Args:
+      x_exps:  i32[Bx, V] exponent rows.
+      x_coefs: f64[Bx] coefficients.
+      y_exps:  i32[By, V].
+      y_coefs: f64[By].
+
+    Returns:
+      (i32[Bx*By, V] exponent sums, f64[Bx*By] coefficient products),
+      row-major: out[i*By + j] = x[i] * y[j].
+    """
+    bx, v = x_exps.shape
+    by, _ = y_exps.shape
+    exps = (x_exps[:, None, :] + y_exps[None, :, :]).reshape(bx * by, v)
+    coefs = (x_coefs[:, None] * y_coefs[None, :]).reshape(bx * by)
+    return exps, coefs
+
+
+def sieve_mask_ref(candidates, primes):
+    """Survivor mask for block trial division.
+
+    Args:
+      candidates: i32[B] values to test (> 0).
+      primes:     i32[P] trial divisors (> 0; pad with a sentinel larger
+                  than every candidate, e.g. 2^31 - 1, so padding never
+                  eliminates).
+
+    Returns:
+      i32[B]: 1 where the candidate is divisible by no prime, else 0.
+    """
+    rem = candidates[:, None] % primes[None, :]
+    survives = jnp.all(rem != 0, axis=1)
+    return survives.astype(jnp.int32)

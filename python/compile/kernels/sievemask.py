@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: block trial-division survivor mask.
+
+The chunked sieve (§7 improvement applied to the primes workload) tests a
+block of candidates against the seed primes in one dense step: a
+`candidates × primes` remainder grid reduced by logical-and over the
+prime axis. The candidate axis is tiled with BlockSpec; the prime vector
+is small (≤ P_PAD) and stays resident.
+
+Padding contract: the prime vector is padded to a fixed width with a
+sentinel **larger than every candidate** (the Rust side uses 2^31 - 1),
+so `candidate % sentinel == candidate != 0` never eliminates anything.
+
+`interpret=True`: see outer.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Candidate rows per grid step.
+TILE_C = 128
+
+
+def _sieve_kernel(cand_ref, prime_ref, mask_ref):
+    """One grid step: TILE_C candidates against the whole prime vector.
+
+    Refs (VMEM tiles):
+      cand_ref:  i32[TILE_C]
+      prime_ref: i32[P]
+      mask_ref:  i32[TILE_C]
+    """
+    cand = cand_ref[...]
+    primes = prime_ref[...]
+    rem = cand[:, None] % primes[None, :]
+    mask_ref[...] = jnp.all(rem != 0, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sieve_mask(candidates, primes, *, interpret=True):
+    """i32[B] mask: 1 where the candidate survives all trial divisions.
+
+    Shapes: candidates i32[B] with B divisible by TILE_C, primes i32[P].
+    """
+    (b,) = candidates.shape
+    (p,) = primes.shape
+    if b % TILE_C != 0:
+        raise ValueError(f"B={b} must be a multiple of TILE_C={TILE_C}")
+    grid = (b // TILE_C,)
+    return pl.pallas_call(
+        _sieve_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_C,), lambda i: (i,)),  # candidate tile
+            pl.BlockSpec((p,), lambda i: (0,)),        # whole prime vector
+        ],
+        out_specs=pl.BlockSpec((TILE_C,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=interpret,
+    )(candidates, primes)

@@ -1,0 +1,54 @@
+"""L2: the JAX compute graphs the Rust hot path calls through PJRT.
+
+The paper's contribution is coordination (L3); the dense per-chunk
+computations of the §7 chunking extension live here. Each entry point is
+a thin jitted wrapper over an L1 Pallas kernel plus any surrounding
+glue, so the kernel lowers into the same HLO module and the whole thing
+ships as one artifact.
+
+f64 note: coefficients ride in f64 lanes; products are exact while they
+stay within ±2^53, and the Rust side checks that per block pair before
+offloading (poly::TermBlock::kernel_exact_with).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels.outer import block_outer  # noqa: E402
+from .kernels.sievemask import sieve_mask  # noqa: E402
+
+
+def poly_block_outer(x_exps, x_coefs, y_exps, y_coefs):
+    """Chunked polynomial multiply, per-block-pair dense core.
+
+    out[i*By + j] = (x_exps[i] + y_exps[j], x_coefs[i] * y_coefs[j]).
+    Blocks shorter than the artifact shape are zero-padded by the caller
+    (zero coefficients multiply to zero and are dropped on unpack).
+    """
+    return block_outer(x_exps, x_coefs, y_exps, y_coefs, interpret=True)
+
+
+def sieve_block_mask(candidates, primes):
+    """Chunked sieve survivor mask (see kernels/sievemask.py)."""
+    return sieve_mask(candidates, primes, interpret=True)
+
+
+def example_args_poly(bx, by, v):
+    """Abstract input signature for AOT lowering of poly_block_outer."""
+    return (
+        jax.ShapeDtypeStruct((bx, v), jnp.int32),
+        jax.ShapeDtypeStruct((bx,), jnp.float64),
+        jax.ShapeDtypeStruct((by, v), jnp.int32),
+        jax.ShapeDtypeStruct((by,), jnp.float64),
+    )
+
+
+def example_args_sieve(b, p):
+    """Abstract input signature for AOT lowering of sieve_block_mask."""
+    return (
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((p,), jnp.int32),
+    )

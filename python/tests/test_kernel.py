@@ -1,0 +1,152 @@
+"""Kernel vs pure-jnp reference — the core L1 correctness signal."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from compile.kernels.outer import TILE_X, block_outer, vmem_footprint_bytes
+from compile.kernels.ref import block_outer_ref, sieve_mask_ref
+from compile.kernels.sievemask import TILE_C, sieve_mask
+
+SENTINEL = 2**31 - 1
+
+
+def random_term_block(rng, count, nvars, coef_scale=1000.0):
+    exps = rng.integers(0, 30, size=(count, nvars)).astype(np.int32)
+    coefs = rng.integers(-coef_scale, coef_scale + 1, size=(count,)).astype(np.float64)
+    return jnp.asarray(exps), jnp.asarray(coefs)
+
+
+class TestBlockOuter:
+    @pytest.mark.parametrize("bx,by,v", [(8, 8, 4), (32, 32, 8), (8, 16, 8), (64, 64, 8)])
+    def test_matches_ref(self, bx, by, v):
+        rng = np.random.default_rng(42 + bx + by + v)
+        xe, xc = random_term_block(rng, bx, v)
+        ye, yc = random_term_block(rng, by, v)
+        ke, kc = block_outer(xe, xc, ye, yc)
+        re, rc = block_outer_ref(xe, xc, ye, yc)
+        np.testing.assert_array_equal(np.asarray(ke), np.asarray(re))
+        np.testing.assert_array_equal(np.asarray(kc), np.asarray(rc))
+
+    def test_row_major_layout(self):
+        # out[i*By + j] = x[i] * y[j] — the Rust unpack relies on it.
+        xe = jnp.zeros((8, 2), jnp.int32).at[1, 0].set(5)
+        xc = jnp.arange(1.0, 9.0)
+        ye = jnp.zeros((8, 2), jnp.int32).at[2, 1].set(7)
+        yc = jnp.arange(10.0, 18.0)
+        ke, kc = block_outer(xe, xc, ye, yc)
+        assert kc[1 * 8 + 2] == xc[1] * yc[2]
+        np.testing.assert_array_equal(np.asarray(ke[1 * 8 + 2]), [5, 7])
+
+    def test_zero_coefficients_pass_through(self):
+        # Zero-padding of ragged blocks must produce zero products.
+        xe = jnp.ones((8, 4), jnp.int32)
+        xc = jnp.zeros((8,))
+        ye = jnp.ones((8, 4), jnp.int32)
+        yc = jnp.ones((8,))
+        _, kc = block_outer(xe, xc, ye, yc)
+        assert np.all(np.asarray(kc) == 0.0)
+
+    def test_exactness_at_2_53_boundary(self):
+        big = float(2**26)
+        xe = jnp.zeros((8, 2), jnp.int32)
+        xc = jnp.full((8,), big)
+        ye = jnp.zeros((8, 2), jnp.int32)
+        yc = jnp.full((8,), big)
+        _, kc = block_outer(xe, xc, ye, yc)
+        assert np.all(np.asarray(kc) == 2.0**52)
+
+    def test_rejects_non_tile_multiple(self):
+        xe = jnp.zeros((TILE_X + 1, 2), jnp.int32)
+        xc = jnp.zeros((TILE_X + 1,))
+        ye = jnp.zeros((8, 2), jnp.int32)
+        yc = jnp.zeros((8,))
+        with pytest.raises(ValueError, match="multiple of TILE_X"):
+            block_outer(xe, xc, ye, yc)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        bx_tiles=st.integers(1, 4),
+        by=st.integers(1, 48),
+        v=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, bx_tiles, by, v, seed):
+        rng = np.random.default_rng(seed)
+        xe, xc = random_term_block(rng, TILE_X * bx_tiles, v)
+        ye, yc = random_term_block(rng, by, v)
+        ke, kc = block_outer(xe, xc, ye, yc)
+        re, rc = block_outer_ref(xe, xc, ye, yc)
+        np.testing.assert_array_equal(np.asarray(ke), np.asarray(re))
+        np.testing.assert_allclose(np.asarray(kc), np.asarray(rc), rtol=0, atol=0)
+
+    def test_vmem_footprint_model(self):
+        # One 128x128 f64 step stays far under 16 MB VMEM.
+        assert vmem_footprint_bytes(128, 128, 8) < 16 * 2**20
+
+
+class TestSieveMask:
+    def pad_primes(self, primes, width=64):
+        out = np.full((width,), SENTINEL, np.int32)
+        out[: len(primes)] = primes
+        return jnp.asarray(out)
+
+    def test_matches_ref(self):
+        cands = jnp.arange(2, 2 + TILE_C, dtype=jnp.int32)
+        primes = self.pad_primes([2, 3, 5, 7, 11])
+        got = sieve_mask(cands, primes)
+        want = sieve_mask_ref(cands, primes)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_known_survivors(self):
+        base = 100
+        cands = jnp.arange(base, base + TILE_C, dtype=jnp.int32)
+        primes = self.pad_primes([2, 3, 5, 7])
+        got = np.asarray(sieve_mask(cands, primes))
+        for i, c in enumerate(range(base, base + TILE_C)):
+            want = all(c % p for p in (2, 3, 5, 7))
+            assert got[i] == int(want), f"candidate {c}"
+
+    def test_sentinel_padding_is_neutral(self):
+        cands = jnp.arange(2, 2 + TILE_C, dtype=jnp.int32)
+        p_narrow = self.pad_primes([2, 3], width=8)
+        p_wide = self.pad_primes([2, 3], width=64)
+        np.testing.assert_array_equal(
+            np.asarray(sieve_mask(cands, p_narrow)),
+            np.asarray(sieve_mask(cands, p_wide)),
+        )
+
+    def test_multi_tile_grid(self):
+        cands = jnp.arange(2, 2 + 4 * TILE_C, dtype=jnp.int32)
+        primes = self.pad_primes([2, 3, 5, 7, 11, 13])
+        got = sieve_mask(cands, primes)
+        want = sieve_mask_ref(cands, primes)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_rejects_non_tile_multiple(self):
+        with pytest.raises(ValueError, match="multiple of TILE_C"):
+            sieve_mask(jnp.zeros((5,), jnp.int32), jnp.ones((4,), jnp.int32))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        tiles=st.integers(1, 3),
+        nprimes=st.integers(1, 20),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, tiles, nprimes, seed):
+        rng = np.random.default_rng(seed)
+        cands = jnp.asarray(
+            rng.integers(2, 100_000, size=(tiles * TILE_C,)).astype(np.int32)
+        )
+        primes = self.pad_primes(
+            sorted(set(rng.integers(2, 300, size=(nprimes,)).tolist()))
+        )
+        got = sieve_mask(cands, primes)
+        want = sieve_mask_ref(cands, primes)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

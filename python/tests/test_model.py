@@ -1,0 +1,39 @@
+"""L2 model entry points: shapes, dtypes, and AOT signatures."""
+
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from compile import model
+
+
+def test_poly_block_outer_shapes_and_dtypes():
+    bx, by, v = 32, 32, 8
+    xe = jnp.zeros((bx, v), jnp.int32)
+    xc = jnp.ones((bx,), jnp.float64)
+    ye = jnp.zeros((by, v), jnp.int32)
+    yc = jnp.ones((by,), jnp.float64)
+    oe, oc = model.poly_block_outer(xe, xc, ye, yc)
+    assert oe.shape == (bx * by, v) and oe.dtype == jnp.int32
+    assert oc.shape == (bx * by,) and oc.dtype == jnp.float64
+    assert np.all(np.asarray(oc) == 1.0)
+
+
+def test_sieve_block_mask_shapes():
+    cands = jnp.arange(2, 2 + 512, dtype=jnp.int32)
+    primes = jnp.full((64,), 2**31 - 1, jnp.int32)
+    mask = model.sieve_block_mask(cands, primes)
+    assert mask.shape == (512,) and mask.dtype == jnp.int32
+    assert np.all(np.asarray(mask) == 1)  # sentinel-only primes eliminate nothing
+
+
+def test_example_args_match_entry_points():
+    args = model.example_args_poly(32, 32, 8)
+    lowered = jax.jit(model.poly_block_outer).lower(*args)
+    assert lowered is not None
+    args = model.example_args_sieve(512, 64)
+    lowered = jax.jit(model.sieve_block_mask).lower(*args)
+    assert lowered is not None

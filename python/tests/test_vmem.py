@@ -1,0 +1,24 @@
+"""Roofline / footprint model checks for DESIGN.md's TPU estimates."""
+
+from compile.kernels.outer import TILE_X, vmem_footprint_bytes
+
+
+def test_footprint_scales_linearly_in_by():
+    f1 = vmem_footprint_bytes(128, 64, 8)
+    f2 = vmem_footprint_bytes(128, 128, 8)
+    assert f2 > f1
+    # Output tile dominates: ~2x when By doubles.
+    assert 1.5 < f2 / f1 < 2.5
+
+
+def test_all_compiled_variants_fit_vmem():
+    # Every AOT variant must keep one grid step far below 16 MB VMEM.
+    from compile.aot import NVARS, POLY_VARIANTS
+
+    for bx, by in POLY_VARIANTS:
+        fp = vmem_footprint_bytes(bx, by, NVARS)
+        assert fp < 16 * 2**20 / 4, f"{bx}x{by}: {fp} bytes"
+
+
+def test_tile_x_is_sublane_aligned():
+    assert TILE_X % 8 == 0

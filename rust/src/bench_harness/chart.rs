@@ -1,0 +1,74 @@
+//! ASCII bar charts mirroring the paper's Figures 3 and 4 (horizontal
+//! bars, one group per workload, one bar per execution mode).
+
+/// `series`: `[(group_label, [(bar_label, seconds)])]`.
+/// `width`: maximum bar width in characters.
+pub fn ascii_bar_chart(
+    title: &str,
+    series: &[(String, Vec<(String, f64)>)],
+    width: usize,
+) -> String {
+    let max_v = series
+        .iter()
+        .flat_map(|(_, bars)| bars.iter().map(|(_, v)| *v))
+        .fold(0.0f64, f64::max);
+    let label_w = series
+        .iter()
+        .flat_map(|(_, bars)| bars.iter().map(|(l, _)| l.len()))
+        .max()
+        .unwrap_or(4);
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (group, bars) in series {
+        out.push_str(&format!("{group}\n"));
+        for (label, v) in bars {
+            let n = if max_v > 0.0 {
+                ((v / max_v) * width as f64).round() as usize
+            } else {
+                0
+            };
+            out.push_str(&format!(
+                "  {label:<label_w$} |{} {v:.2}\n",
+                "#".repeat(n.max(if *v > 0.0 { 1 } else { 0 }))
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bars_scale_to_width() {
+        let series = vec![(
+            "g".to_string(),
+            vec![("a".to_string(), 1.0), ("b".to_string(), 2.0)],
+        )];
+        let chart = ascii_bar_chart("t", &series, 10);
+        let lines: Vec<&str> = chart.lines().collect();
+        let a_bar = lines[2].matches('#').count();
+        let b_bar = lines[3].matches('#').count();
+        assert_eq!(b_bar, 10);
+        assert_eq!(a_bar, 5);
+    }
+
+    #[test]
+    fn zero_values_have_no_bar() {
+        let series = vec![("g".to_string(), vec![("a".to_string(), 0.0)])];
+        let chart = ascii_bar_chart("t", &series, 10);
+        assert!(!chart.lines().nth(2).unwrap().contains('#'));
+    }
+
+    #[test]
+    fn tiny_nonzero_values_render_one_hash() {
+        let series = vec![(
+            "g".to_string(),
+            vec![("tiny".to_string(), 0.001), ("big".to_string(), 100.0)],
+        )];
+        let chart = ascii_bar_chart("t", &series, 20);
+        assert!(chart.lines().nth(2).unwrap().contains('#'));
+    }
+}

@@ -1,0 +1,64 @@
+//! Benchmark harness — sampling, statistics, and the table/figure
+//! renderers that regenerate the paper's Table 1 and Figures 3–4.
+//!
+//! `criterion` is not available offline; this is a purpose-built
+//! replacement: warmup + N timed samples per cell, median/MAD statistics
+//! (robust against scheduler noise, which matters because the measured
+//! quantity *is* scheduling behaviour), CSV output for plotting, and
+//! ASCII bar charts mirroring the paper's figures.
+
+mod chart;
+pub mod paper;
+mod sampler;
+mod table;
+
+pub use chart::ascii_bar_chart;
+pub use sampler::{measure, BenchOptions, Measurement};
+pub use table::{render_csv, render_table, Cell, ReportTable};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn measure_reports_sane_stats() {
+        let opts = BenchOptions { warmup: 1, samples: 5, ..Default::default() };
+        let m = measure("sleepy", &opts, || {
+            std::thread::sleep(Duration::from_millis(2));
+        });
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.median >= Duration::from_millis(1), "median={:?}", m.median);
+        assert!(m.median < Duration::from_millis(200));
+        assert!(m.mad <= m.median);
+    }
+
+    #[test]
+    fn table_renders_rows_and_columns() {
+        let mut t = ReportTable::new("Table 1. Timings (seconds)", vec!["seq", "par(1)", "par(2)"]);
+        t.set("primes", "seq", Cell::Seconds(3.4));
+        t.set("primes", "par(2)", Cell::Seconds(5.9));
+        t.set("stream", "seq", Cell::Seconds(14.0));
+        t.set("stream", "par(1)", Cell::Seconds(35.1));
+        let text = render_table(&t);
+        assert!(text.contains("primes"));
+        assert!(text.contains("3.4"));
+        assert!(text.contains("par(2)"));
+        // Missing cells render as blanks, like the paper's table.
+        assert!(text.contains("stream"));
+        let csv = render_csv(&t);
+        assert!(csv.starts_with("workload,seq,par(1),par(2)"));
+        assert!(csv.contains("primes,3.40,,5.90"));
+    }
+
+    #[test]
+    fn chart_draws_bars() {
+        let series = vec![
+            ("primes".to_string(), vec![("seq".to_string(), 3.4), ("par(2)".to_string(), 5.9)]),
+        ];
+        let chart = ascii_bar_chart("Timings for primes (seconds)", &series, 40);
+        assert!(chart.contains("primes"));
+        assert!(chart.contains('#'));
+        assert!(chart.contains("5.9"));
+    }
+}

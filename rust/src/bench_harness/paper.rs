@@ -1,0 +1,393 @@
+//! Regeneration of the paper's evaluation artifacts (§7): Table 1,
+//! Figure 3, Figure 4, plus the A1–A3 ablations from DESIGN.md.
+//!
+//! Shared by the `sfut` CLI subcommands and the `cargo bench` targets in
+//! `benches/`, so both entry points print identical reports.
+//!
+//! Absolute seconds will differ from the paper's Atom D410 (see
+//! EXPERIMENTS.md for the shape comparison); the qualitative findings
+//! F1–F5 are what these harnesses exhibit.
+
+use anyhow::Result;
+
+use super::{ascii_bar_chart, render_csv, render_table, Cell, ReportTable};
+use crate::config::{Config, Mode, Workload};
+use crate::coordinator::{JobRequest, Pipeline};
+
+/// The paper's three measurement columns.
+pub fn paper_modes() -> Vec<Mode> {
+    vec![Mode::Seq, Mode::Par(1), Mode::Par(2)]
+}
+
+/// paper_modes plus a machine-sized column (our extension: real cores,
+/// not hyperthreads).
+pub fn extended_modes() -> Vec<Mode> {
+    let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+    let mut modes = paper_modes();
+    if n > 2 {
+        modes.push(Mode::Par(n));
+    }
+    modes
+}
+
+/// Median seconds for one cell: `samples` timed runs (after `warmup`),
+/// result verified against the oracle on the first sample only.
+pub fn time_cell(pipeline: &Pipeline, req: &JobRequest, cfg: &Config) -> Result<f64> {
+    for _ in 0..cfg.warmup {
+        pipeline.run_opts(req, false)?;
+    }
+    let mut secs = Vec::with_capacity(cfg.samples);
+    for i in 0..cfg.samples {
+        let result = pipeline.run_opts(req, i == 0)?;
+        anyhow::ensure!(
+            result.verified,
+            "{} failed verification against the oracle",
+            req.label()
+        );
+        eprintln!(
+            "  [{}] sample {}/{}: {:.3}s",
+            req.label(),
+            i + 1,
+            cfg.samples,
+            result.seconds
+        );
+        secs.push(result.seconds);
+    }
+    secs.sort_by(f64::total_cmp);
+    Ok(secs[secs.len() / 2])
+}
+
+fn fill_table(
+    pipeline: &Pipeline,
+    cfg: &Config,
+    table: &mut ReportTable,
+    workloads: &[Workload],
+    modes: &[Mode],
+) -> Result<()> {
+    for &w in workloads {
+        for &m in modes {
+            let req = JobRequest { workload: w, mode: m };
+            let secs = time_cell(pipeline, &req, cfg)?;
+            table.set(w.name(), &m.label(), Cell::Seconds(secs));
+        }
+    }
+    Ok(())
+}
+
+/// **Table 1**: six workloads × {seq, par(1), par(2)} (+ par(N) when the
+/// machine has more cores). Returns table + CSV + finding checks.
+pub fn table1(cfg: &Config) -> Result<String> {
+    let pipeline = Pipeline::new(cfg.clone())?;
+    let modes = extended_modes();
+    let cols: Vec<String> = modes.iter().map(Mode::label).collect();
+    let mut table = ReportTable::new(
+        &format!(
+            "Table 1. Timings (seconds) — scale={}, fateman=(1+Σx)^{} over {} vars, primes n={}",
+            cfg.scale,
+            cfg.scaled_fateman_degree(),
+            cfg.fateman_vars,
+            cfg.scaled_primes_n()
+        ),
+        cols.iter().map(String::as_str).collect(),
+    );
+    let workloads = [
+        Workload::Primes,
+        Workload::PrimesX3,
+        Workload::Stream,
+        Workload::StreamBig,
+        Workload::List,
+        Workload::ListBig,
+    ];
+    fill_table(&pipeline, cfg, &mut table, &workloads, &modes)?;
+
+    let mut out = render_table(&table);
+    out.push('\n');
+    out.push_str(&render_csv(&table));
+    out.push('\n');
+    out.push_str(&findings(&table));
+    Ok(out)
+}
+
+/// Check the paper's qualitative findings against a measured table.
+///
+/// The checks adapt to the testbed's core count: the paper's Atom D410
+/// had one core plus hyperthreading (expected speedup ≈1.2×); on a
+/// 1-core container no wall-clock parallel gain is physically available,
+/// so the speedup-dependent findings (F3 wall-clock form, F4) are
+/// checked in their overhead form instead and flagged as such.
+pub fn findings(t: &ReportTable) -> String {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut out = format!("paper findings check (testbed: {cores} core(s)):\n");
+    let mut check = |name: &str, desc: &str, ok: Option<bool>| {
+        let verdict = match ok {
+            Some(true) => "HOLDS",
+            Some(false) => "DIFFERS",
+            None => "n/a (cells missing)",
+        };
+        out.push_str(&format!("  {name}: {desc}: {verdict}\n"));
+    };
+    let get = |r: &str, c: &str| t.seconds(r, c);
+    // F1: primes does not scale (par(2) not faster than seq).
+    check(
+        "F1",
+        "primes par(2) >= seq (stream sieve does not scale)",
+        get("primes", "par(2)").zip(get("primes", "seq")).map(|(p, s)| p >= 0.9 * s),
+    );
+    // F2: stream small coefficients do not scale: par(2) >= seq.
+    check(
+        "F2",
+        "stream par(2) >= seq (small coefficients do not scale)",
+        get("stream", "par(2)").zip(get("stream", "seq")).map(|(p, s)| p >= 0.9 * s),
+    );
+    // F3: big coefficients compensate the parallelization overhead.
+    if cores >= 2 {
+        check(
+            "F3",
+            "stream_big par(2) < par(1) (big coefficients recover)",
+            get("stream_big", "par(2)")
+                .zip(get("stream_big", "par(1)"))
+                .map(|(p2, p1)| p2 < p1),
+        );
+    } else {
+        // Overhead-ratio form: the relative cost of the Future machinery
+        // must shrink when elementary operations grow (the mechanism
+        // behind the paper's crossover).
+        let ratio = |w: &str| {
+            get(w, "par(1)").zip(get(w, "seq")).map(|(p, s)| p / s)
+        };
+        check(
+            "F3'",
+            "stream_big par(1)/seq < stream par(1)/seq (overhead amortized by \
+             big coefficients; wall-clock form needs >1 core)",
+            ratio("stream_big").zip(ratio("stream")).map(|(big, small)| big < small),
+        );
+    }
+    // F4: list baseline scales with hardware.
+    if cores >= 2 {
+        check(
+            "F4",
+            "list par(2) < seq (data-parallel baseline scales)",
+            get("list", "par(2)").zip(get("list", "seq")).map(|(p, s)| p < s),
+        );
+    } else {
+        check(
+            "F4'",
+            "list par(2) <= ~1.4x seq (data-parallel overhead is small; \
+             speedup form needs >1 core)",
+            get("list", "par(2)").zip(get("list", "seq")).map(|(p, s)| p <= 1.4 * s),
+        );
+    }
+    // F5: sequential stream is in the same league as the optimized
+    // iterative baseline (paper: "not worse than half as fast").
+    check(
+        "F5",
+        "stream seq <= ~4x list seq (streaming approach is sound)",
+        get("stream", "seq").zip(get("list", "seq")).map(|(st, l)| st <= 4.0 * l),
+    );
+    out
+}
+
+/// **Figure 3**: primes timings bar chart.
+pub fn fig3(cfg: &Config) -> Result<String> {
+    let pipeline = Pipeline::new(cfg.clone())?;
+    let modes = paper_modes();
+    let cols: Vec<String> = modes.iter().map(Mode::label).collect();
+    let mut table = ReportTable::new(
+        "Figure 3 data. Timings for primes (seconds)",
+        cols.iter().map(String::as_str).collect(),
+    );
+    fill_table(
+        &pipeline,
+        cfg,
+        &mut table,
+        &[Workload::Primes, Workload::PrimesX3],
+        &modes,
+    )?;
+    Ok(chart_from_table("Figure 3. Timings for primes (seconds)", &table))
+}
+
+/// **Figure 4**: polynomial multiplication timings bar chart.
+pub fn fig4(cfg: &Config) -> Result<String> {
+    let pipeline = Pipeline::new(cfg.clone())?;
+    let modes = paper_modes();
+    let cols: Vec<String> = modes.iter().map(Mode::label).collect();
+    let mut table = ReportTable::new(
+        "Figure 4 data. Timings for polynomial multiplication (seconds)",
+        cols.iter().map(String::as_str).collect(),
+    );
+    fill_table(
+        &pipeline,
+        cfg,
+        &mut table,
+        &[Workload::Stream, Workload::StreamBig, Workload::List, Workload::ListBig],
+        &modes,
+    )?;
+    Ok(chart_from_table(
+        "Figure 4. Timings for polynomial multiplication (seconds)",
+        &table,
+    ))
+}
+
+fn chart_from_table(title: &str, table: &ReportTable) -> String {
+    let series: Vec<(String, Vec<(String, f64)>)> = table
+        .rows()
+        .iter()
+        .map(|row| {
+            (
+                row.clone(),
+                table
+                    .columns
+                    .iter()
+                    .filter_map(|c| table.seconds(row, c).map(|s| (c.clone(), s)))
+                    .collect(),
+            )
+        })
+        .collect();
+    let mut out = ascii_bar_chart(title, &series, 50);
+    out.push('\n');
+    out.push_str(&render_csv(table));
+    out
+}
+
+/// **A1**: chunk-size sweep (the §7 improvement hypothesis, tested).
+pub fn ablation_chunk(cfg: &Config, chunk_sizes: &[usize]) -> Result<String> {
+    let modes = [Mode::Seq, Mode::Par(2), machine_mode()];
+    let cols: Vec<String> = modes.iter().map(Mode::label).collect();
+    let mut table = ReportTable::new(
+        "A1. Chunked stream multiply: chunk-size sweep (seconds, chunked_big workload)",
+        cols.iter().map(String::as_str).collect(),
+    );
+    for &chunk in chunk_sizes {
+        let mut c = cfg.clone();
+        c.chunk_size = chunk;
+        let pipeline = Pipeline::new(c.clone())?;
+        for &m in &modes {
+            let req = JobRequest { workload: Workload::ChunkedBig, mode: m };
+            let secs = time_cell(&pipeline, &req, &c)?;
+            table.set(&format!("chunk={chunk}"), &m.label(), Cell::Seconds(secs));
+        }
+    }
+    // Reference row: the unchunked stream algorithm.
+    let pipeline = Pipeline::new(cfg.clone())?;
+    for &m in &modes {
+        let req = JobRequest { workload: Workload::StreamBig, mode: m };
+        let secs = time_cell(&pipeline, &req, cfg)?;
+        table.set("unchunked(stream_big)", &m.label(), Cell::Seconds(secs));
+    }
+    let mut out = render_table(&table);
+    out.push('\n');
+    out.push_str(&render_csv(&table));
+    Ok(out)
+}
+
+/// **A2**: kernel offload vs pure-Rust block backend on the chunked
+/// workload (small coefficients: kernel-eligible path).
+pub fn ablation_kernel(cfg: &Config) -> Result<String> {
+    let modes = [Mode::Seq, machine_mode()];
+    let cols: Vec<String> = modes.iter().map(Mode::label).collect();
+    let mut table = ReportTable::new(
+        "A2. Chunked multiply backend: PJRT kernel vs pure-Rust block (seconds)",
+        cols.iter().map(String::as_str).collect(),
+    );
+    for (row, use_kernel) in [("pjrt-kernel", true), ("rust-scalar", false)] {
+        let mut c = cfg.clone();
+        c.use_kernel = use_kernel;
+        let pipeline = Pipeline::new(c.clone())?;
+        if use_kernel && pipeline.engine().is_none() {
+            table.set(row, &modes[0].label(), Cell::Text("no artifacts".into()));
+            continue;
+        }
+        for &m in &modes {
+            let req = JobRequest { workload: Workload::Chunked, mode: m };
+            let secs = time_cell(&pipeline, &req, &c)?;
+            table.set(row, &m.label(), Cell::Seconds(secs));
+        }
+    }
+    let mut out = render_table(&table);
+    out.push('\n');
+    out.push_str(&render_csv(&table));
+    Ok(out)
+}
+
+fn machine_mode() -> Mode {
+    Mode::Par(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_config() -> Config {
+        let mut cfg = Config::default();
+        cfg.primes_n = 300;
+        cfg.fateman_degree = 2;
+        cfg.samples = 1;
+        cfg.warmup = 0;
+        cfg.use_kernel = false;
+        cfg
+    }
+
+    #[test]
+    fn table1_renders_all_rows() {
+        let out = table1(&tiny_config()).unwrap();
+        for row in ["primes", "primes_x3", "stream", "stream_big", "list", "list_big"] {
+            assert!(out.contains(row), "missing row {row} in:\n{out}");
+        }
+        assert!(out.contains("paper findings check"));
+        assert!(out.contains("seq"));
+        assert!(out.contains("par(1)"));
+        assert!(out.contains("par(2)"));
+    }
+
+    #[test]
+    fn fig3_renders_chart_and_csv() {
+        let out = fig3(&tiny_config()).unwrap();
+        assert!(out.contains("Figure 3"));
+        assert!(out.contains('#'));
+        assert!(out.contains("workload,seq,par(1),par(2)"));
+    }
+
+    #[test]
+    fn fig4_renders_chart_and_csv() {
+        let out = fig4(&tiny_config()).unwrap();
+        assert!(out.contains("Figure 4"));
+        assert!(out.contains("stream_big"));
+    }
+
+    #[test]
+    fn ablation_chunk_sweeps() {
+        let out = ablation_chunk(&tiny_config(), &[4, 16]).unwrap();
+        assert!(out.contains("chunk=4"));
+        assert!(out.contains("chunk=16"));
+        assert!(out.contains("unchunked(stream_big)"));
+    }
+
+    #[test]
+    fn ablation_kernel_handles_missing_artifacts() {
+        let mut cfg = tiny_config();
+        cfg.artifacts_dir = "/nonexistent".into();
+        let out = ablation_kernel(&cfg).unwrap();
+        assert!(out.contains("rust-scalar"));
+        assert!(out.contains("no artifacts"));
+    }
+
+    #[test]
+    fn findings_report_shapes() {
+        let mut t = ReportTable::new("t", vec!["seq", "par(1)", "par(2)"]);
+        // Synthetic numbers shaped like the paper's Table 1.
+        t.set("primes", "seq", Cell::Seconds(3.4));
+        t.set("primes", "par(2)", Cell::Seconds(5.9));
+        t.set("stream", "seq", Cell::Seconds(14.0));
+        t.set("stream", "par(1)", Cell::Seconds(35.1));
+        t.set("stream", "par(2)", Cell::Seconds(37.7));
+        t.set("stream_big", "seq", Cell::Seconds(48.0));
+        t.set("stream_big", "par(1)", Cell::Seconds(67.5));
+        t.set("stream_big", "par(2)", Cell::Seconds(49.5));
+        t.set("list", "seq", Cell::Seconds(8.2));
+        t.set("list", "par(2)", Cell::Seconds(5.7));
+        let report = findings(&t);
+        assert!(report.contains("F1: "));
+        // With the paper's own numbers, every finding holds.
+        assert_eq!(report.matches("HOLDS").count(), 5, "{report}");
+    }
+}

@@ -1,0 +1,146 @@
+//! Timed sampling with robust statistics.
+
+use std::time::{Duration, Instant};
+
+/// Sampling controls. `SFUT_BENCH_SAMPLES` / `SFUT_BENCH_WARMUP`
+/// environment variables override (CI shrinks, perf runs grow).
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    pub warmup: usize,
+    pub samples: usize,
+    /// Print progress to stderr as cells complete.
+    pub verbose: bool,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        let samples = std::env::var("SFUT_BENCH_SAMPLES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(5);
+        let warmup = std::env::var("SFUT_BENCH_WARMUP")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1);
+        BenchOptions { warmup, samples, verbose: true }
+    }
+}
+
+/// Result of measuring one cell.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<Duration>,
+    /// Median — the reported statistic (robust to scheduler noise).
+    pub median: Duration,
+    /// Median absolute deviation — the reported spread.
+    pub mad: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Measurement {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Run `f` `warmup + samples` times; keep the last `samples` timings.
+pub fn measure(name: &str, opts: &BenchOptions, mut f: impl FnMut()) -> Measurement {
+    assert!(opts.samples > 0, "samples must be >= 1");
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(opts.samples);
+    for i in 0..opts.samples {
+        let start = Instant::now();
+        f();
+        let took = start.elapsed();
+        samples.push(took);
+        if opts.verbose {
+            eprintln!("  [{name}] sample {}/{}: {took:?}", i + 1, opts.samples);
+        }
+    }
+    summarize(name, samples)
+}
+
+fn summarize(name: &str, samples: Vec<Duration>) -> Measurement {
+    let mut sorted = samples.clone();
+    sorted.sort_unstable();
+    let median = percentile_sorted(&sorted, 0.5);
+    let mut devs: Vec<Duration> = sorted
+        .iter()
+        .map(|&s| if s > median { s - median } else { median - s })
+        .collect();
+    devs.sort_unstable();
+    let mad = percentile_sorted(&devs, 0.5);
+    Measurement {
+        name: name.to_string(),
+        min: sorted[0],
+        max: *sorted.last().unwrap(),
+        median,
+        mad,
+        samples,
+    }
+}
+
+fn percentile_sorted(sorted: &[Duration], q: f64) -> Duration {
+    debug_assert!(!sorted.is_empty());
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_odd_count() {
+        let m = summarize(
+            "x",
+            vec![
+                Duration::from_millis(10),
+                Duration::from_millis(30),
+                Duration::from_millis(20),
+            ],
+        );
+        assert_eq!(m.median, Duration::from_millis(20));
+        assert_eq!(m.min, Duration::from_millis(10));
+        assert_eq!(m.max, Duration::from_millis(30));
+        assert_eq!(m.mad, Duration::from_millis(10));
+    }
+
+    #[test]
+    fn summarize_single_sample() {
+        let m = summarize("x", vec![Duration::from_millis(7)]);
+        assert_eq!(m.median, Duration::from_millis(7));
+        assert_eq!(m.mad, Duration::ZERO);
+    }
+
+    #[test]
+    fn measure_runs_warmup_plus_samples() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = AtomicUsize::new(0);
+        let opts = BenchOptions { warmup: 2, samples: 3, verbose: false };
+        let m = measure("count", &opts, || {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 5);
+        assert_eq!(m.samples.len(), 3);
+    }
+
+    #[test]
+    fn median_is_robust_to_one_outlier() {
+        let m = summarize(
+            "x",
+            vec![
+                Duration::from_millis(10),
+                Duration::from_millis(11),
+                Duration::from_millis(12),
+                Duration::from_millis(11),
+                Duration::from_millis(500), // GC-pause-style outlier
+            ],
+        );
+        assert_eq!(m.median, Duration::from_millis(11));
+    }
+}

@@ -1,0 +1,186 @@
+//! Table 1-style report tables: named rows × named columns of optional
+//! cells, rendered as aligned text (the paper's table) and CSV.
+
+use std::collections::BTreeMap;
+
+/// One table cell.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cell {
+    Seconds(f64),
+    Text(String),
+}
+
+impl Cell {
+    fn render(&self) -> String {
+        match self {
+            Cell::Seconds(s) => {
+                if *s >= 100.0 {
+                    format!("{s:.0}")
+                } else if *s >= 10.0 {
+                    format!("{s:.1}")
+                } else {
+                    format!("{s:.2}")
+                }
+            }
+            Cell::Text(t) => t.clone(),
+        }
+    }
+}
+
+/// Row-major sparse table preserving row insertion order (like the
+/// paper: primes, primes_x3, stream, stream_big, list, list_big).
+pub struct ReportTable {
+    pub title: String,
+    pub columns: Vec<String>,
+    row_order: Vec<String>,
+    cells: BTreeMap<(String, String), Cell>,
+}
+
+impl ReportTable {
+    pub fn new(title: &str, columns: Vec<&str>) -> Self {
+        ReportTable {
+            title: title.to_string(),
+            columns: columns.into_iter().map(str::to_string).collect(),
+            row_order: Vec::new(),
+            cells: BTreeMap::new(),
+        }
+    }
+
+    pub fn set(&mut self, row: &str, col: &str, cell: Cell) {
+        assert!(
+            self.columns.iter().any(|c| c == col),
+            "unknown column {col:?} (have {:?})",
+            self.columns
+        );
+        if !self.row_order.iter().any(|r| r == row) {
+            self.row_order.push(row.to_string());
+        }
+        self.cells.insert((row.to_string(), col.to_string()), cell);
+    }
+
+    pub fn get(&self, row: &str, col: &str) -> Option<&Cell> {
+        self.cells.get(&(row.to_string(), col.to_string()))
+    }
+
+    pub fn rows(&self) -> &[String] {
+        &self.row_order
+    }
+
+    /// Seconds value of a cell, if numeric.
+    pub fn seconds(&self, row: &str, col: &str) -> Option<f64> {
+        match self.get(row, col)? {
+            Cell::Seconds(s) => Some(*s),
+            Cell::Text(_) => None,
+        }
+    }
+}
+
+/// Aligned-text rendering (the paper's Table 1 layout).
+pub fn render_table(t: &ReportTable) -> String {
+    let mut out = String::new();
+    out.push_str(&t.title);
+    out.push('\n');
+    let row_w = t
+        .row_order
+        .iter()
+        .map(String::len)
+        .chain(std::iter::once("workload".len()))
+        .max()
+        .unwrap_or(8);
+    let col_ws: Vec<usize> = t
+        .columns
+        .iter()
+        .map(|c| {
+            t.row_order
+                .iter()
+                .filter_map(|r| t.get(r, c))
+                .map(|cell| cell.render().len())
+                .chain(std::iter::once(c.len()))
+                .max()
+                .unwrap_or(c.len())
+        })
+        .collect();
+    // Header.
+    out.push_str(&format!("| {:<row_w$} |", "workload"));
+    for (c, w) in t.columns.iter().zip(&col_ws) {
+        out.push_str(&format!(" {c:>w$} |"));
+    }
+    out.push('\n');
+    out.push_str(&format!("|{}|", "-".repeat(row_w + 2)));
+    for w in &col_ws {
+        out.push_str(&format!("{}|", "-".repeat(w + 2)));
+    }
+    out.push('\n');
+    // Body.
+    for r in &t.row_order {
+        out.push_str(&format!("| {r:<row_w$} |"));
+        for (c, w) in t.columns.iter().zip(&col_ws) {
+            let text = t.get(r, c).map(Cell::render).unwrap_or_default();
+            out.push_str(&format!(" {text:>w$} |"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV rendering for downstream plotting.
+pub fn render_csv(t: &ReportTable) -> String {
+    let mut out = String::from("workload");
+    for c in &t.columns {
+        out.push(',');
+        out.push_str(c);
+    }
+    out.push('\n');
+    for r in &t.row_order {
+        out.push_str(r);
+        for c in &t.columns {
+            out.push(',');
+            if let Some(cell) = t.get(r, c) {
+                out.push_str(&cell.render());
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_formats_by_magnitude() {
+        assert_eq!(Cell::Seconds(3.41).render(), "3.41");
+        assert_eq!(Cell::Seconds(15.73).render(), "15.7");
+        assert_eq!(Cell::Seconds(148.0).render(), "148");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown column")]
+    fn unknown_column_is_loud() {
+        let mut t = ReportTable::new("t", vec!["a"]);
+        t.set("r", "b", Cell::Seconds(1.0));
+    }
+
+    #[test]
+    fn row_order_is_insertion_order() {
+        let mut t = ReportTable::new("t", vec!["c"]);
+        t.set("zebra", "c", Cell::Seconds(1.0));
+        t.set("ant", "c", Cell::Seconds(2.0));
+        assert_eq!(t.rows(), &["zebra".to_string(), "ant".to_string()]);
+        let text = render_table(&t);
+        let zi = text.find("zebra").unwrap();
+        let ai = text.find("ant").unwrap();
+        assert!(zi < ai);
+    }
+
+    #[test]
+    fn seconds_accessor() {
+        let mut t = ReportTable::new("t", vec!["c"]);
+        t.set("r", "c", Cell::Seconds(2.5));
+        assert_eq!(t.seconds("r", "c"), Some(2.5));
+        assert_eq!(t.seconds("r", "missing"), None);
+        t.set("r2", "c", Cell::Text("n/a".into()));
+        assert_eq!(t.seconds("r2", "c"), None);
+    }
+}

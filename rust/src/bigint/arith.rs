@@ -1,0 +1,366 @@
+//! Magnitude arithmetic and operator impls for [`BigInt`].
+
+use std::cmp::Ordering;
+use std::ops::{Add, Mul, Neg, Sub};
+
+use super::{BigInt, Sign};
+
+/// Operand size (in limbs) above which multiplication switches from
+/// schoolbook to Karatsuba. Chosen by the §Perf sweep in
+/// `benches/ablation_overhead.rs`; 32 limbs ≈ 1024 bits.
+pub const KARATSUBA_THRESHOLD: usize = 32;
+
+// ---------------------------------------------------------------------
+// magnitude primitives (little-endian u32 slices)
+// ---------------------------------------------------------------------
+
+pub(crate) fn mag_cmp(a: &[u32], b: &[u32]) -> Ordering {
+    if a.len() != b.len() {
+        return a.len().cmp(&b.len());
+    }
+    for (x, y) in a.iter().rev().zip(b.iter().rev()) {
+        match x.cmp(y) {
+            Ordering::Equal => continue,
+            ord => return ord,
+        }
+    }
+    Ordering::Equal
+}
+
+pub(crate) fn mag_add(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let (long, short) = if a.len() >= b.len() { (a, b) } else { (b, a) };
+    let mut out = Vec::with_capacity(long.len() + 1);
+    let mut carry = 0u64;
+    for i in 0..long.len() {
+        let s = long[i] as u64 + *short.get(i).unwrap_or(&0) as u64 + carry;
+        out.push(s as u32);
+        carry = s >> 32;
+    }
+    if carry != 0 {
+        out.push(carry as u32);
+    }
+    out
+}
+
+/// `a - b`; requires `a >= b` (caller compares magnitudes first).
+pub(crate) fn mag_sub(a: &[u32], b: &[u32]) -> Vec<u32> {
+    debug_assert!(mag_cmp(a, b) != Ordering::Less, "mag_sub underflow");
+    let mut out = Vec::with_capacity(a.len());
+    let mut borrow = 0i64;
+    for i in 0..a.len() {
+        let d = a[i] as i64 - *b.get(i).unwrap_or(&0) as i64 - borrow;
+        if d < 0 {
+            out.push((d + (1i64 << 32)) as u32);
+            borrow = 1;
+        } else {
+            out.push(d as u32);
+            borrow = 0;
+        }
+    }
+    debug_assert_eq!(borrow, 0);
+    out
+}
+
+/// Schoolbook O(n·m) product.
+fn mag_mul_school(a: &[u32], b: &[u32]) -> Vec<u32> {
+    if a.is_empty() || b.is_empty() {
+        return Vec::new();
+    }
+    let mut out = vec![0u32; a.len() + b.len()];
+    for (i, &ai) in a.iter().enumerate() {
+        if ai == 0 {
+            continue;
+        }
+        let mut carry = 0u64;
+        let ai = ai as u64;
+        for (j, &bj) in b.iter().enumerate() {
+            let t = ai * bj as u64 + out[i + j] as u64 + carry;
+            out[i + j] = t as u32;
+            carry = t >> 32;
+        }
+        let mut k = i + b.len();
+        while carry != 0 {
+            let t = out[k] as u64 + carry;
+            out[k] = t as u32;
+            carry = t >> 32;
+            k += 1;
+        }
+    }
+    out
+}
+
+/// Karatsuba product: T(n) = 3·T(n/2) + O(n).
+fn mag_mul_karatsuba(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let n = a.len().min(b.len());
+    if n < KARATSUBA_THRESHOLD {
+        return mag_mul_school(a, b);
+    }
+    let half = a.len().max(b.len()) / 2;
+    let (a_lo, a_hi) = split(a, half);
+    let (b_lo, b_hi) = split(b, half);
+
+    let z0 = mag_mul_karatsuba(a_lo, b_lo);
+    let z2 = mag_mul_karatsuba(a_hi, b_hi);
+    let a_sum = mag_add(a_lo, a_hi);
+    let b_sum = mag_add(b_lo, b_hi);
+    let z1_full = mag_mul_karatsuba(&a_sum, &b_sum);
+    // z1 = z1_full - z0 - z2  (non-negative by construction)
+    let z1 = mag_sub(&trim(z1_full), &trim(mag_add(&z0, &z2)));
+
+    // out = z0 + z1 << (32*half) + z2 << (64*half)
+    let mut out = z0;
+    add_shifted(&mut out, &z1, half);
+    add_shifted(&mut out, &z2, 2 * half);
+    out
+}
+
+fn split(x: &[u32], at: usize) -> (&[u32], &[u32]) {
+    if x.len() <= at {
+        (x, &[])
+    } else {
+        x.split_at(at)
+    }
+}
+
+fn trim(mut v: Vec<u32>) -> Vec<u32> {
+    while v.last() == Some(&0) {
+        v.pop();
+    }
+    v
+}
+
+/// `acc += x << (32*shift)` in place.
+fn add_shifted(acc: &mut Vec<u32>, x: &[u32], shift: usize) {
+    if acc.len() < shift + x.len() + 1 {
+        acc.resize(shift + x.len() + 1, 0);
+    }
+    let mut carry = 0u64;
+    for (i, &xi) in x.iter().enumerate() {
+        let t = acc[shift + i] as u64 + xi as u64 + carry;
+        acc[shift + i] = t as u32;
+        carry = t >> 32;
+    }
+    let mut k = shift + x.len();
+    while carry != 0 {
+        let t = acc[k] as u64 + carry;
+        acc[k] = t as u32;
+        carry = t >> 32;
+        k += 1;
+    }
+}
+
+pub(crate) fn mag_mul(a: &[u32], b: &[u32]) -> Vec<u32> {
+    if a.len().min(b.len()) >= KARATSUBA_THRESHOLD {
+        mag_mul_karatsuba(a, b)
+    } else {
+        mag_mul_school(a, b)
+    }
+}
+
+/// Divide magnitude by a single small divisor; returns (quotient, rem).
+pub(crate) fn mag_divmod_small(a: &[u32], d: u32) -> (Vec<u32>, u32) {
+    assert!(d != 0, "division by zero");
+    let mut out = vec![0u32; a.len()];
+    let mut rem = 0u64;
+    for i in (0..a.len()).rev() {
+        let cur = (rem << 32) | a[i] as u64;
+        out[i] = (cur / d as u64) as u32;
+        rem = cur % d as u64;
+    }
+    (out, rem as u32)
+}
+
+// ---------------------------------------------------------------------
+// signed operations
+// ---------------------------------------------------------------------
+
+fn add_signed(a: &BigInt, b: &BigInt) -> BigInt {
+    match (a.sign, b.sign) {
+        (Sign::Zero, _) => b.clone(),
+        (_, Sign::Zero) => a.clone(),
+        (sa, sb) if sa == sb => {
+            BigInt { sign: sa, limbs: mag_add(&a.limbs, &b.limbs) }.normalize()
+        }
+        (sa, _) => match mag_cmp(&a.limbs, &b.limbs) {
+            Ordering::Equal => BigInt::zero(),
+            Ordering::Greater => {
+                BigInt { sign: sa, limbs: mag_sub(&a.limbs, &b.limbs) }.normalize()
+            }
+            Ordering::Less => BigInt {
+                sign: if sa == Sign::Positive { Sign::Negative } else { Sign::Positive },
+                limbs: mag_sub(&b.limbs, &a.limbs),
+            }
+            .normalize(),
+        },
+    }
+}
+
+fn mul_signed(a: &BigInt, b: &BigInt) -> BigInt {
+    if a.is_zero() || b.is_zero() {
+        return BigInt::zero();
+    }
+    let sign = if a.sign == b.sign { Sign::Positive } else { Sign::Negative };
+    BigInt { sign, limbs: mag_mul(&a.limbs, &b.limbs) }.normalize()
+}
+
+impl PartialOrd for BigInt {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for BigInt {
+    fn cmp(&self, other: &Self) -> Ordering {
+        let rank = |s: Sign| match s {
+            Sign::Negative => 0,
+            Sign::Zero => 1,
+            Sign::Positive => 2,
+        };
+        match rank(self.sign).cmp(&rank(other.sign)) {
+            Ordering::Equal => {}
+            ord => return ord,
+        }
+        match self.sign {
+            Sign::Zero => Ordering::Equal,
+            Sign::Positive => mag_cmp(&self.limbs, &other.limbs),
+            Sign::Negative => mag_cmp(&other.limbs, &self.limbs),
+        }
+    }
+}
+
+macro_rules! forward_binop {
+    ($trait:ident, $method:ident, $f:ident) => {
+        impl $trait for &BigInt {
+            type Output = BigInt;
+            fn $method(self, rhs: &BigInt) -> BigInt {
+                $f(self, rhs)
+            }
+        }
+        impl $trait for BigInt {
+            type Output = BigInt;
+            fn $method(self, rhs: BigInt) -> BigInt {
+                $f(&self, &rhs)
+            }
+        }
+        impl $trait<&BigInt> for BigInt {
+            type Output = BigInt;
+            fn $method(self, rhs: &BigInt) -> BigInt {
+                $f(&self, rhs)
+            }
+        }
+        impl $trait<BigInt> for &BigInt {
+            type Output = BigInt;
+            fn $method(self, rhs: BigInt) -> BigInt {
+                $f(self, &rhs)
+            }
+        }
+    };
+}
+
+fn sub_signed(a: &BigInt, b: &BigInt) -> BigInt {
+    add_signed(a, &b.neg())
+}
+
+forward_binop!(Add, add, add_signed);
+forward_binop!(Sub, sub, sub_signed);
+forward_binop!(Mul, mul, mul_signed);
+
+impl Neg for BigInt {
+    type Output = BigInt;
+    fn neg(self) -> BigInt {
+        BigInt::neg(&self)
+    }
+}
+
+impl Neg for &BigInt {
+    type Output = BigInt;
+    fn neg(self) -> BigInt {
+        BigInt::neg(self)
+    }
+}
+
+impl std::hash::Hash for BigInt {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        std::mem::discriminant(&self.sign).hash(state);
+        self.limbs.hash(state);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn big(v: i128) -> BigInt {
+        BigInt::from(v)
+    }
+
+    #[test]
+    fn mag_add_carries_across_limbs() {
+        assert_eq!(mag_add(&[u32::MAX], &[1]), vec![0, 1]);
+        assert_eq!(mag_add(&[u32::MAX, u32::MAX], &[1]), vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn mag_sub_borrows() {
+        // mag_sub may leave trailing zero limbs; callers normalize.
+        assert_eq!(trim(mag_sub(&[0, 1], &[1])), vec![u32::MAX]);
+    }
+
+    #[test]
+    fn schoolbook_known_product() {
+        // (2^32 - 1)^2 = 2^64 - 2^33 + 1
+        let p = mag_mul_school(&[u32::MAX], &[u32::MAX]);
+        assert_eq!(p, vec![1, u32::MAX - 1]);
+    }
+
+    #[test]
+    fn karatsuba_matches_schoolbook() {
+        // Deterministic pseudo-random limbs, sizes straddling the
+        // threshold (including asymmetric operands).
+        let mut seed = 0x9E3779B97F4A7C15u64;
+        let mut next = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            seed as u32
+        };
+        for (na, nb) in [(40, 40), (64, 64), (100, 3), (3, 100), (65, 33), (128, 96)] {
+            let a: Vec<u32> = (0..na).map(|_| next()).collect();
+            let b: Vec<u32> = (0..nb).map(|_| next()).collect();
+            let k = trim(mag_mul_karatsuba(&a, &b));
+            let s = trim(mag_mul_school(&a, &b));
+            assert_eq!(k, s, "sizes {na}x{nb}");
+        }
+    }
+
+    #[test]
+    fn divmod_small_roundtrip() {
+        let x = big(123456789012345678901234567890);
+        let (q, r) = mag_divmod_small(&x.limbs, 7);
+        let q = BigInt { sign: Sign::Positive, limbs: q }.normalize();
+        assert_eq!(&q * &big(7) + big(r as i128), x);
+    }
+
+    #[test]
+    fn signed_cmp_total_order() {
+        let vals = [big(-10), big(-1), big(0), big(1), big(10), big(1i128 << 90)];
+        for (i, a) in vals.iter().enumerate() {
+            for (j, b) in vals.iter().enumerate() {
+                assert_eq!(a.cmp(b), i.cmp(&j), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn big_coefficient_workload_shape() {
+        // The paper's stream_big factor.
+        let f = big(100000000001);
+        let mut acc = BigInt::one();
+        for _ in 0..20 {
+            acc = &acc * &f;
+        }
+        // 100000000001^20 has exactly 221 decimal digits.
+        assert_eq!(acc.to_string().len(), 221);
+        assert!(acc.limb_len() > 20);
+    }
+}

@@ -1,0 +1,180 @@
+//! Conversions between [`BigInt`] and native integers / strings.
+
+use super::{BigInt, Sign};
+
+impl From<u64> for BigInt {
+    fn from(v: u64) -> Self {
+        BigInt {
+            sign: if v == 0 { Sign::Zero } else { Sign::Positive },
+            limbs: u128_limbs(v as u128),
+        }
+    }
+}
+
+impl From<u128> for BigInt {
+    fn from(v: u128) -> Self {
+        BigInt {
+            sign: if v == 0 { Sign::Zero } else { Sign::Positive },
+            limbs: u128_limbs(v),
+        }
+    }
+}
+
+impl From<i64> for BigInt {
+    fn from(v: i64) -> Self {
+        BigInt::from(v as i128)
+    }
+}
+
+impl From<i32> for BigInt {
+    fn from(v: i32) -> Self {
+        BigInt::from(v as i128)
+    }
+}
+
+impl From<i128> for BigInt {
+    fn from(v: i128) -> Self {
+        let sign = match v {
+            0 => Sign::Zero,
+            _ if v < 0 => Sign::Negative,
+            _ => Sign::Positive,
+        };
+        BigInt { sign, limbs: u128_limbs(v.unsigned_abs()) }
+    }
+}
+
+fn u128_limbs(mut v: u128) -> Vec<u32> {
+    let mut limbs = Vec::new();
+    while v != 0 {
+        limbs.push(v as u32);
+        v >>= 32;
+    }
+    limbs
+}
+
+impl BigInt {
+    /// Lossy conversion to `i128`; `None` when out of range.
+    pub fn to_i128(&self) -> Option<i128> {
+        if self.limbs.len() > 4 {
+            return None;
+        }
+        let mut mag: u128 = 0;
+        for (i, &l) in self.limbs.iter().enumerate() {
+            mag |= (l as u128) << (32 * i);
+        }
+        match self.sign {
+            Sign::Zero => Some(0),
+            Sign::Positive => (mag <= i128::MAX as u128).then_some(mag as i128),
+            Sign::Negative => {
+                (mag <= i128::MAX as u128 + 1).then(|| (mag as i128).wrapping_neg())
+            }
+        }
+    }
+
+    /// Approximate conversion to `f64` (used by the PJRT kernel bridge
+    /// for small-coefficient blocks; exactness is checked by the caller).
+    pub fn to_f64(&self) -> f64 {
+        let mut mag = 0f64;
+        for &l in self.limbs.iter().rev() {
+            mag = mag * 4294967296.0 + l as f64;
+        }
+        match self.sign {
+            Sign::Negative => -mag,
+            _ => mag,
+        }
+    }
+}
+
+/// Error parsing a decimal string into [`BigInt`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseBigIntError(pub String);
+
+impl std::fmt::Display for ParseBigIntError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid BigInt literal: {}", self.0)
+    }
+}
+
+impl std::error::Error for ParseBigIntError {}
+
+impl std::str::FromStr for BigInt {
+    type Err = ParseBigIntError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let (neg, digits) = match s.strip_prefix('-') {
+            Some(rest) => (true, rest),
+            None => (false, s.strip_prefix('+').unwrap_or(s)),
+        };
+        if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+            return Err(ParseBigIntError(s.to_string()));
+        }
+        // Horner over chunks of 9 decimal digits (10^9 < 2^32).
+        let mut acc = BigInt::zero();
+        let chunk_mul = BigInt::from(1_000_000_000u64);
+        let bytes = digits.as_bytes();
+        let mut i = 0;
+        // First (short) chunk.
+        let first = bytes.len() % 9;
+        if first > 0 {
+            let v: u64 = digits[..first].parse().unwrap();
+            acc = BigInt::from(v);
+            i = first;
+        }
+        while i < bytes.len() {
+            let v: u64 = digits[i..i + 9].parse().unwrap();
+            acc = &acc * &chunk_mul + BigInt::from(v);
+            i += 9;
+        }
+        if neg && !acc.is_zero() {
+            acc = acc.neg();
+        }
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_native_roundtrips() {
+        for v in [0i128, 1, -1, i64::MAX as i128, i64::MIN as i128, i128::MAX, i128::MIN] {
+            assert_eq!(BigInt::from(v).to_i128(), Some(v), "{v}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_to_i128_is_none() {
+        let too_big = &BigInt::from(i128::MAX) * &BigInt::from(2i64);
+        assert_eq!(too_big.to_i128(), None);
+    }
+
+    #[test]
+    fn parse_and_print_roundtrip() {
+        for s in ["0", "1", "-1", "100000000001", "-987654321098765432109876543210"] {
+            let v: BigInt = s.parse().unwrap();
+            assert_eq!(v.to_string(), s, "{s}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for s in ["", "-", "+", "12a", " 1", "1 ", "--2"] {
+            assert!(s.parse::<BigInt>().is_err(), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn parse_accepts_plus_and_minus_zero() {
+        assert_eq!("+7".parse::<BigInt>().unwrap(), BigInt::from(7i64));
+        assert_eq!("-0".parse::<BigInt>().unwrap(), BigInt::zero());
+    }
+
+    #[test]
+    fn to_f64_is_close_for_moderate_values() {
+        let v: BigInt = "100000000001".parse().unwrap();
+        assert_eq!(v.to_f64(), 100000000001.0);
+        let neg = BigInt::from(-12345i64);
+        assert_eq!(neg.to_f64(), -12345.0);
+    }
+}

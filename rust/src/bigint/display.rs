@@ -1,0 +1,65 @@
+//! Decimal formatting for [`BigInt`].
+
+use super::arith::mag_divmod_small;
+use super::{BigInt, Sign};
+
+impl std::fmt::Display for BigInt {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_zero() {
+            return f.write_str("0");
+        }
+        // Repeated division by 10^9 produces 9-digit chunks, least
+        // significant first.
+        let mut chunks: Vec<u32> = Vec::new();
+        let mut mag = self.limbs.clone();
+        while !mag.is_empty() {
+            let (q, r) = mag_divmod_small(&mag, 1_000_000_000);
+            chunks.push(r);
+            mag = q;
+            while mag.last() == Some(&0) {
+                mag.pop();
+            }
+        }
+        let mut s = String::new();
+        if self.sign == Sign::Negative {
+            s.push('-');
+        }
+        let mut iter = chunks.iter().rev();
+        if let Some(first) = iter.next() {
+            s.push_str(&first.to_string());
+        }
+        for chunk in iter {
+            s.push_str(&format!("{chunk:09}"));
+        }
+        f.write_str(&s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_zero() {
+        assert_eq!(BigInt::zero().to_string(), "0");
+    }
+
+    #[test]
+    fn displays_with_inner_zero_padding() {
+        // 2^64 = 18446744073709551616: middle chunks must be zero-padded.
+        let v = BigInt::from(1u128 << 64);
+        assert_eq!(v.to_string(), "18446744073709551616");
+    }
+
+    #[test]
+    fn displays_negative() {
+        assert_eq!(BigInt::from(-100000000001i64).to_string(), "-100000000001");
+    }
+
+    #[test]
+    fn matches_i128_display_on_range() {
+        for v in [-1_000_000_007i128, -1, 0, 7, 999_999_999, 1_000_000_000, i128::MAX] {
+            assert_eq!(BigInt::from(v).to_string(), v.to_string());
+        }
+    }
+}

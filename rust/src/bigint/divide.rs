@@ -1,0 +1,237 @@
+//! Full division and gcd for [`BigInt`] — required by the exact rational
+//! field ([`crate::rational`]) that the Gröbner application runs on
+//! (floating-point Buchberger is numerically unstable: cancellation
+//! residues become spurious basis elements).
+
+use std::cmp::Ordering;
+
+use super::arith::{mag_cmp, mag_sub};
+use super::{BigInt, Sign};
+
+impl BigInt {
+    /// Truncated division: returns `(q, r)` with `self = q·other + r`,
+    /// `|r| < |other|`, and `r` carrying the sign of `self` (like Rust's
+    /// `/` and `%` on integers). Panics on division by zero.
+    pub fn divmod(&self, other: &BigInt) -> (BigInt, BigInt) {
+        assert!(!other.is_zero(), "BigInt division by zero");
+        if self.is_zero() {
+            return (BigInt::zero(), BigInt::zero());
+        }
+        let (qm, rm) = mag_divmod(&self.limbs, &other.limbs);
+        let q_sign = if self.sign == other.sign { Sign::Positive } else { Sign::Negative };
+        let q = BigInt { sign: q_sign, limbs: qm }.normalize();
+        let r = BigInt { sign: self.sign, limbs: rm }.normalize();
+        (q, r)
+    }
+
+    /// Quotient of truncated division.
+    pub fn div(&self, other: &BigInt) -> BigInt {
+        self.divmod(other).0
+    }
+
+    /// Remainder of truncated division.
+    pub fn rem(&self, other: &BigInt) -> BigInt {
+        self.divmod(other).1
+    }
+
+    /// Exact division: panics if `other` does not divide `self`.
+    pub fn div_exact(&self, other: &BigInt) -> BigInt {
+        let (q, r) = self.divmod(other);
+        assert!(r.is_zero(), "div_exact: {other} does not divide {self}");
+        q
+    }
+
+    /// Greatest common divisor (always non-negative; `gcd(0,0) = 0`).
+    pub fn gcd(&self, other: &BigInt) -> BigInt {
+        let mut a = self.abs();
+        let mut b = other.abs();
+        while !b.is_zero() {
+            let r = a.rem(&b);
+            a = b;
+            b = r.abs();
+        }
+        a
+    }
+}
+
+/// Magnitude division, little-endian u32 limbs: schoolbook long division
+/// with a 64-bit trial quotient per output limb (Knuth D, simplified via
+/// the shift-and-subtract refinement loop).
+fn mag_divmod(a: &[u32], b: &[u32]) -> (Vec<u32>, Vec<u32>) {
+    match mag_cmp(a, b) {
+        Ordering::Less => return (Vec::new(), a.to_vec()),
+        Ordering::Equal => return (vec![1], Vec::new()),
+        Ordering::Greater => {}
+    }
+    if b.len() == 1 {
+        let (q, r) = super::arith::mag_divmod_small(a, b[0]);
+        return (q, if r == 0 { Vec::new() } else { vec![r] });
+    }
+
+    // Long division producing one u32 quotient limb per step, msb-first.
+    // rem holds the running remainder (always < b after each step).
+    let mut quotient = vec![0u32; a.len()];
+    let mut rem: Vec<u32> = Vec::new();
+    for i in (0..a.len()).rev() {
+        // rem = rem << 32 | a[i]
+        rem.insert(0, a[i]);
+        while rem.last() == Some(&0) {
+            rem.pop();
+        }
+        if mag_cmp(&rem, b) == Ordering::Less {
+            continue;
+        }
+        // Binary-search the quotient limb: the largest q with q·b ≤ rem.
+        // (32 fixed iterations beats Knuth-style trial+refine here and
+        // cannot degenerate on unnormalized divisors.)
+        let mut lo = 1u64; // rem >= b, so q >= 1
+        let mut hi = u32::MAX as u64;
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if mag_cmp(&mag_mul_small(b, mid as u32), &rem) == Ordering::Greater {
+                hi = mid - 1;
+            } else {
+                lo = mid;
+            }
+        }
+        let q = lo as u32;
+        let prod = mag_mul_small(b, q);
+        rem = trim(mag_sub(&rem, &prod));
+        quotient[i] = q;
+    }
+    (trim(quotient), rem)
+}
+
+fn mag_mul_small(b: &[u32], q: u32) -> Vec<u32> {
+    if q == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(b.len() + 1);
+    let mut carry = 0u64;
+    for &limb in b {
+        let t = limb as u64 * q as u64 + carry;
+        out.push(t as u32);
+        carry = t >> 32;
+    }
+    if carry != 0 {
+        out.push(carry as u32);
+    }
+    trim(out)
+}
+
+fn trim(mut v: Vec<u32>) -> Vec<u32> {
+    while v.last() == Some(&0) {
+        v.pop();
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::{runner, Gen};
+
+    fn big(s: &str) -> BigInt {
+        s.parse().unwrap()
+    }
+
+    #[test]
+    fn small_divisions() {
+        let (q, r) = BigInt::from(17i64).divmod(&BigInt::from(5i64));
+        assert_eq!((q, r), (BigInt::from(3i64), BigInt::from(2i64)));
+        let (q, r) = BigInt::from(-17i64).divmod(&BigInt::from(5i64));
+        assert_eq!((q, r), (BigInt::from(-3i64), BigInt::from(-2i64)));
+        let (q, r) = BigInt::from(17i64).divmod(&BigInt::from(-5i64));
+        assert_eq!((q, r), (BigInt::from(-3i64), BigInt::from(2i64)));
+        let (q, r) = BigInt::from(-17i64).divmod(&BigInt::from(-5i64));
+        assert_eq!((q, r), (BigInt::from(3i64), BigInt::from(-2i64)));
+    }
+
+    #[test]
+    #[should_panic(expected = "division by zero")]
+    fn divide_by_zero_panics() {
+        let _ = BigInt::from(1i64).divmod(&BigInt::zero());
+    }
+
+    #[test]
+    fn multi_limb_division() {
+        let a = big("340282366920938463463374607431768211456"); // 2^128
+        let b = big("18446744073709551616"); // 2^64
+        let (q, r) = a.divmod(&b);
+        assert_eq!(q, b);
+        assert!(r.is_zero());
+        // Non-exact case.
+        let (q, r) = big("1000000000000000000000000000000000000007")
+            .divmod(&big("1000000000000000000003"));
+        assert_eq!(&q * &big("1000000000000000000003") + &r,
+                   big("1000000000000000000000000000000000000007"));
+    }
+
+    #[test]
+    fn prop_divmod_identity_i128() {
+        let mut r = runner(1500);
+        r.run(|g: &mut Gen| {
+            let a = g.i64_any() as i128;
+            let mut b = g.i64_any() as i128;
+            if b == 0 {
+                b = 7;
+            }
+            let (q, rem) = BigInt::from(a).divmod(&BigInt::from(b));
+            assert_eq!(q, BigInt::from(a / b), "{a}/{b}");
+            assert_eq!(rem, BigInt::from(a % b), "{a}%{b}");
+        });
+    }
+
+    #[test]
+    fn prop_divmod_identity_multilimb() {
+        let mut r = runner(300);
+        r.run(|g: &mut Gen| {
+            // Random big a (up to 8 limbs), smaller b (up to 4 limbs).
+            let a = BigInt {
+                sign: Sign::Positive,
+                limbs: g.vec(1..9, |g| g.u32_any()),
+            }
+            .normalize();
+            let b = BigInt {
+                sign: Sign::Positive,
+                limbs: g.vec(1..5, |g| g.u32_any()),
+            }
+            .normalize();
+            if b.is_zero() {
+                return;
+            }
+            let (q, rem) = a.divmod(&b);
+            assert_eq!(&(&q * &b) + &rem, a, "identity a={a} b={b}");
+            assert!(rem.abs() < b.abs(), "remainder bound a={a} b={b}");
+        });
+    }
+
+    #[test]
+    fn gcd_basics() {
+        assert_eq!(BigInt::from(12i64).gcd(&BigInt::from(18i64)), BigInt::from(6i64));
+        assert_eq!(BigInt::from(-12i64).gcd(&BigInt::from(18i64)), BigInt::from(6i64));
+        assert_eq!(BigInt::from(7i64).gcd(&BigInt::zero()), BigInt::from(7i64));
+        assert_eq!(BigInt::zero().gcd(&BigInt::zero()), BigInt::zero());
+        // Big coprime pair.
+        let a = big("100000000001"); // 11 × 909090909... actually 100000000001 = 11·9090909091
+        let b = big("99999999999");
+        let g = a.gcd(&b);
+        assert_eq!(a.rem(&g), BigInt::zero());
+        assert_eq!(b.rem(&g), BigInt::zero());
+    }
+
+    #[test]
+    fn div_exact_roundtrip() {
+        let a = big("123456789123456789123456789");
+        let b = big("987654321987654321");
+        let prod = &a * &b;
+        assert_eq!(prod.div_exact(&a), b);
+        assert_eq!(prod.div_exact(&b), a);
+    }
+
+    #[test]
+    #[should_panic(expected = "div_exact")]
+    fn div_exact_rejects_inexact() {
+        let _ = BigInt::from(10i64).div_exact(&BigInt::from(3i64));
+    }
+}

@@ -1,0 +1,192 @@
+//! Arbitrary-precision signed integers.
+//!
+//! Substrate for the paper's `stream_big` / `list_big` workloads, whose
+//! whole point is coefficients too large for machine words (the paper
+//! scales Fateman's coefficients by 100000000001 so that each elementary
+//! multiply-add has a footprint big enough to amortize task overhead).
+//! Scala gets `BigInt` from the JVM; nothing equivalent is available
+//! offline, so it is built here: sign-magnitude representation over `u32`
+//! limbs (little-endian), schoolbook + Karatsuba multiplication, and long
+//! division sufficient for decimal printing and divisibility tests.
+
+mod arith;
+mod convert;
+mod display;
+mod divide;
+
+pub use arith::KARATSUBA_THRESHOLD;
+
+/// Sign of a [`BigInt`]. Zero is always `Sign::Zero` with empty limbs —
+/// a canonical-form invariant checked by `debug_assert_canonical`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sign {
+    Negative,
+    Zero,
+    Positive,
+}
+
+/// Arbitrary-precision signed integer, sign-magnitude over little-endian
+/// `u32` limbs.
+///
+/// Invariants (canonical form):
+/// * no trailing zero limb (the most significant limb is nonzero);
+/// * `sign == Sign::Zero` iff `limbs.is_empty()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BigInt {
+    pub(crate) sign: Sign,
+    /// Little-endian magnitude.
+    pub(crate) limbs: Vec<u32>,
+}
+
+impl BigInt {
+    pub const fn zero() -> Self {
+        BigInt { sign: Sign::Zero, limbs: Vec::new() }
+    }
+
+    pub fn one() -> Self {
+        BigInt::from(1i64)
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.sign == Sign::Zero
+    }
+
+    pub fn is_negative(&self) -> bool {
+        self.sign == Sign::Negative
+    }
+
+    pub fn is_positive(&self) -> bool {
+        self.sign == Sign::Positive
+    }
+
+    /// Number of limbs in the magnitude (0 for zero). Proxy for the
+    /// "footprint of elementary operations" knob the paper turns.
+    pub fn limb_len(&self) -> usize {
+        self.limbs.len()
+    }
+
+    /// Number of significant bits in the magnitude (0 for zero).
+    pub fn bit_len(&self) -> usize {
+        match self.limbs.last() {
+            None => 0,
+            Some(&top) => (self.limbs.len() - 1) * 32 + (32 - top.leading_zeros() as usize),
+        }
+    }
+
+    pub fn abs(&self) -> BigInt {
+        BigInt {
+            sign: if self.is_zero() { Sign::Zero } else { Sign::Positive },
+            limbs: self.limbs.clone(),
+        }
+    }
+
+    pub fn neg(&self) -> BigInt {
+        BigInt {
+            sign: match self.sign {
+                Sign::Negative => Sign::Positive,
+                Sign::Zero => Sign::Zero,
+                Sign::Positive => Sign::Negative,
+            },
+            limbs: self.limbs.clone(),
+        }
+    }
+
+    /// Restore canonical form after limb surgery.
+    pub(crate) fn normalize(mut self) -> Self {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+        if self.limbs.is_empty() {
+            self.sign = Sign::Zero;
+        } else if self.sign == Sign::Zero {
+            self.sign = Sign::Positive;
+        }
+        self
+    }
+
+    /// Canonical-form check (used by property tests).
+    pub fn is_canonical(&self) -> bool {
+        self.limbs.last() != Some(&0) && (self.limbs.is_empty() == (self.sign == Sign::Zero))
+    }
+}
+
+impl Default for BigInt {
+    fn default() -> Self {
+        BigInt::zero()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::{runner, Gen};
+
+    fn big(v: i128) -> BigInt {
+        BigInt::from(v)
+    }
+
+    #[test]
+    fn zero_is_canonical() {
+        let z = BigInt::zero();
+        assert!(z.is_zero());
+        assert_eq!(z.limb_len(), 0);
+        assert_eq!(z.bit_len(), 0);
+        assert_eq!(big(5) + big(-5), z);
+    }
+
+    #[test]
+    fn bit_len_matches_known_values() {
+        assert_eq!(big(1).bit_len(), 1);
+        assert_eq!(big(255).bit_len(), 8);
+        assert_eq!(big(256).bit_len(), 9);
+        assert_eq!(big(1i128 << 100).bit_len(), 101);
+    }
+
+    #[test]
+    fn abs_neg_roundtrip() {
+        let v = big(-42);
+        assert_eq!(v.abs(), big(42));
+        assert_eq!(v.neg(), big(42));
+        assert_eq!(v.neg().neg(), v);
+        assert_eq!(BigInt::zero().neg(), BigInt::zero());
+    }
+
+    #[test]
+    fn prop_i64_arith_agrees_with_i128() {
+        // Property: BigInt arithmetic agrees with native i128 on values
+        // that fit — covers add/sub/mul sign combinations exhaustively
+        // under random sampling.
+        let mut r = runner(2000);
+        r.run(|g: &mut Gen| {
+            let a = g.i64_any() as i128;
+            let b = g.i64_any() as i128;
+            let (ba, bb) = (BigInt::from(a), BigInt::from(b));
+            assert_eq!(&ba + &bb, BigInt::from(a + b), "add {a} {b}");
+            assert_eq!(&ba - &bb, BigInt::from(a - b), "sub {a} {b}");
+            assert_eq!(&ba * &bb, BigInt::from(a * b), "mul {a} {b}");
+            assert_eq!(ba.cmp(&bb), a.cmp(&b), "cmp {a} {b}");
+        });
+    }
+
+    #[test]
+    fn prop_ring_axioms() {
+        let mut r = runner(500);
+        r.run(|g: &mut Gen| {
+            let a = BigInt::from(g.i64_any());
+            let b = BigInt::from(g.i64_any());
+            let c = BigInt::from(g.i64_any());
+            // commutativity
+            assert_eq!(&a + &b, &b + &a);
+            assert_eq!(&a * &b, &b * &a);
+            // associativity
+            assert_eq!((&a + &b) + &c, &a + &(&b + &c));
+            assert_eq!((&a * &b) * &c, &a * &(&b * &c));
+            // distributivity
+            assert_eq!(&a * &(&b + &c), &(&a * &b) + &(&a * &c));
+            // identities
+            assert_eq!(&a + &BigInt::zero(), a);
+            assert_eq!(&a * &BigInt::one(), a);
+            assert_eq!(&a * &BigInt::zero(), BigInt::zero());
+        });
+    }
+}

@@ -1,0 +1,362 @@
+//! Run configuration: a typed config struct, a TOML-subset parser (no
+//! serde offline), CLI-flag overlay, and validation.
+//!
+//! Precedence, lowest to highest: defaults < config file < `--set k=v`
+//! CLI overrides. Everything the benches and the coordinator vary
+//! (parallelism, workload sizes, chunking, artifact paths) lives here so
+//! experiments are reproducible from a single file.
+
+mod parser;
+
+pub use parser::{parse_toml_subset, TomlValue};
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Evaluation mode requested for a run: the paper's seq / par(n) axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Lazy suspensions (the paper's `seq` column).
+    Seq,
+    /// Future suspensions on an n-worker pool (`par(n)`).
+    Par(usize),
+    /// Strict evaluation (control; not in the paper's table).
+    Strict,
+}
+
+impl Mode {
+    pub fn label(&self) -> String {
+        match self {
+            Mode::Seq => "seq".to_string(),
+            Mode::Par(n) => format!("par({n})"),
+            Mode::Strict => "strict".to_string(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Mode, ConfigError> {
+        if s == "seq" {
+            return Ok(Mode::Seq);
+        }
+        if s == "strict" {
+            return Ok(Mode::Strict);
+        }
+        if let Some(inner) = s.strip_prefix("par(").and_then(|r| r.strip_suffix(')')) {
+            let n: usize = inner
+                .parse()
+                .map_err(|_| ConfigError::new(format!("bad parallelism in mode: {s}")))?;
+            if n == 0 {
+                return Err(ConfigError::new("par(0) is not a mode"));
+            }
+            return Ok(Mode::Par(n));
+        }
+        if let Some(n) = s.strip_prefix("par") {
+            // Accept "par2" shorthand.
+            if let Ok(n) = n.parse::<usize>() {
+                if n > 0 {
+                    return Ok(Mode::Par(n));
+                }
+            }
+        }
+        Err(ConfigError::new(format!("unknown mode: {s} (want seq | strict | par(N))")))
+    }
+}
+
+/// Workload selector matching the rows of Table 1 plus our extensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    /// primes (n = `primes_n`).
+    Primes,
+    /// primes_x3 (n = 3 × `primes_n`).
+    PrimesX3,
+    /// stream — Fateman product via stream algorithm, small coefficients.
+    Stream,
+    /// stream_big — big coefficients (× `big_factor`^1).
+    StreamBig,
+    /// list — parallel-collections baseline.
+    List,
+    /// list_big — baseline with big coefficients.
+    ListBig,
+    /// chunked — §7's improvement: blocked stream multiply.
+    Chunked,
+    /// chunked_big.
+    ChunkedBig,
+}
+
+impl Workload {
+    pub const ALL: [Workload; 8] = [
+        Workload::Primes,
+        Workload::PrimesX3,
+        Workload::Stream,
+        Workload::StreamBig,
+        Workload::List,
+        Workload::ListBig,
+        Workload::Chunked,
+        Workload::ChunkedBig,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::Primes => "primes",
+            Workload::PrimesX3 => "primes_x3",
+            Workload::Stream => "stream",
+            Workload::StreamBig => "stream_big",
+            Workload::List => "list",
+            Workload::ListBig => "list_big",
+            Workload::Chunked => "chunked",
+            Workload::ChunkedBig => "chunked_big",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Workload, ConfigError> {
+        Workload::ALL
+            .iter()
+            .copied()
+            .find(|w| w.name() == s)
+            .ok_or_else(|| ConfigError::new(format!("unknown workload: {s}")))
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    /// Primes workload bound (the paper: 20000; primes_x3 uses 3×).
+    pub primes_n: u32,
+    /// Fateman base polynomial: (1 + x + y + z + t)^k. The paper (via
+    /// Fateman's benchmark) uses degree 20 on 4 variables; k is the
+    /// scaling knob.
+    pub fateman_vars: usize,
+    pub fateman_degree: u32,
+    /// Big-coefficient factor (paper: 100000000001).
+    pub big_factor: i64,
+    /// Block size for the chunked variants (§7 improvement).
+    pub chunk_size: usize,
+    /// Directory holding AOT artifacts (*.hlo.txt).
+    pub artifacts_dir: PathBuf,
+    /// Use the PJRT kernel for chunked block products when artifacts are
+    /// present.
+    pub use_kernel: bool,
+    /// Worker stack size (deep recursion in stream forcing).
+    pub stack_size: usize,
+    /// Bench harness: measurement samples per cell.
+    pub samples: usize,
+    /// Bench harness: warmup iterations per cell.
+    pub warmup: usize,
+    /// Scale factor applied to workload sizes (1.0 = paper scale).
+    pub scale: f64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            primes_n: 20_000,
+            fateman_vars: 4,
+            fateman_degree: 12,
+            big_factor: 100_000_000_001,
+            chunk_size: 64,
+            artifacts_dir: PathBuf::from("artifacts"),
+            use_kernel: true,
+            stack_size: 256 << 20,
+            samples: 5,
+            warmup: 1,
+            scale: 1.0,
+        }
+    }
+}
+
+/// Configuration error with a message and optional source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError {
+    pub message: String,
+    pub line: Option<usize>,
+}
+
+impl ConfigError {
+    pub fn new(message: impl Into<String>) -> Self {
+        ConfigError { message: message.into(), line: None }
+    }
+
+    pub fn at(message: impl Into<String>, line: usize) -> Self {
+        ConfigError { message: message.into(), line: Some(line) }
+    }
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.line {
+            Some(l) => write!(f, "config error at line {l}: {}", self.message),
+            None => write!(f, "config error: {}", self.message),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl Config {
+    /// Load from a TOML-subset file, then apply `key=value` overrides.
+    pub fn load(
+        path: Option<&std::path::Path>,
+        overrides: &[(String, String)],
+    ) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        if let Some(path) = path {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| ConfigError::new(format!("cannot read {}: {e}", path.display())))?;
+            let values = parse_toml_subset(&text)?;
+            cfg.apply_values(&values)?;
+        }
+        for (k, v) in overrides {
+            cfg.set(k, v)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply_values(&mut self, values: &BTreeMap<String, TomlValue>) -> Result<(), ConfigError> {
+        for (k, v) in values {
+            self.set(k, &v.as_raw_string())?;
+        }
+        Ok(())
+    }
+
+    /// Set a single dotted key. Unknown keys are errors — typos in
+    /// experiment configs must not silently run the default.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), ConfigError> {
+        fn p<T: std::str::FromStr>(key: &str, v: &str) -> Result<T, ConfigError> {
+            v.trim().parse().map_err(|_| ConfigError::new(format!("bad value for {key}: {v}")))
+        }
+        match key {
+            "primes_n" | "primes.n" => self.primes_n = p(key, value)?,
+            "fateman_vars" | "fateman.vars" => self.fateman_vars = p(key, value)?,
+            "fateman_degree" | "fateman.degree" => self.fateman_degree = p(key, value)?,
+            "big_factor" | "fateman.big_factor" => self.big_factor = p(key, value)?,
+            "chunk_size" | "chunked.size" => self.chunk_size = p(key, value)?,
+            "artifacts_dir" | "runtime.artifacts_dir" => {
+                self.artifacts_dir = PathBuf::from(value.trim().trim_matches('"'));
+            }
+            "use_kernel" | "runtime.use_kernel" => self.use_kernel = p(key, value)?,
+            "stack_size" | "exec.stack_size" => self.stack_size = p(key, value)?,
+            "samples" | "bench.samples" => self.samples = p(key, value)?,
+            "warmup" | "bench.warmup" => self.warmup = p(key, value)?,
+            "scale" | "bench.scale" => self.scale = p(key, value)?,
+            _ => return Err(ConfigError::new(format!("unknown config key: {key}"))),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.primes_n < 3 {
+            return Err(ConfigError::new("primes_n must be >= 3"));
+        }
+        if self.fateman_vars == 0 || self.fateman_vars > 8 {
+            return Err(ConfigError::new("fateman_vars must be in 1..=8"));
+        }
+        if self.fateman_degree == 0 {
+            return Err(ConfigError::new("fateman_degree must be >= 1"));
+        }
+        if self.chunk_size == 0 {
+            return Err(ConfigError::new("chunk_size must be >= 1"));
+        }
+        if self.samples == 0 {
+            return Err(ConfigError::new("samples must be >= 1"));
+        }
+        if !(self.scale > 0.0) {
+            return Err(ConfigError::new("scale must be > 0"));
+        }
+        Ok(())
+    }
+
+    /// Effective primes bound after `scale`.
+    pub fn scaled_primes_n(&self) -> u32 {
+        ((self.primes_n as f64 * self.scale) as u32).max(3)
+    }
+
+    /// Effective Fateman degree after `scale` (cube-root-ish damping:
+    /// term count grows ~degree^vars).
+    pub fn scaled_fateman_degree(&self) -> u32 {
+        ((self.fateman_degree as f64 * self.scale.powf(0.5)) as u32).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        assert_eq!(Mode::parse("seq").unwrap(), Mode::Seq);
+        assert_eq!(Mode::parse("strict").unwrap(), Mode::Strict);
+        assert_eq!(Mode::parse("par(2)").unwrap(), Mode::Par(2));
+        assert_eq!(Mode::parse("par4").unwrap(), Mode::Par(4));
+        assert!(Mode::parse("par(0)").is_err());
+        assert!(Mode::parse("warp").is_err());
+        assert_eq!(Mode::Par(2).label(), "par(2)");
+    }
+
+    #[test]
+    fn workload_names_roundtrip() {
+        for w in Workload::ALL {
+            assert_eq!(Workload::parse(w.name()).unwrap(), w);
+        }
+        assert!(Workload::parse("nope").is_err());
+    }
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn set_unknown_key_fails() {
+        let mut c = Config::default();
+        assert!(c.set("primes_m", "10").is_err());
+    }
+
+    #[test]
+    fn overrides_apply_in_order() {
+        let cfg = Config::load(
+            None,
+            &[
+                ("primes_n".to_string(), "500".to_string()),
+                ("primes_n".to_string(), "700".to_string()),
+                ("chunk_size".to_string(), "16".to_string()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.primes_n, 700);
+        assert_eq!(cfg.chunk_size, 16);
+    }
+
+    #[test]
+    fn bad_values_are_reported() {
+        let mut c = Config::default();
+        let err = c.set("primes_n", "many").unwrap_err();
+        assert!(err.message.contains("primes_n"));
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let mut c = Config::default();
+        c.primes_n = 1;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.scale = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn load_from_file() {
+        let dir = std::env::temp_dir().join("sfut-config-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.toml");
+        std::fs::write(
+            &path,
+            "# experiment\nprimes_n = 1234\nuse_kernel = false\nscale = 0.5\n",
+        )
+        .unwrap();
+        let cfg = Config::load(Some(&path), &[]).unwrap();
+        assert_eq!(cfg.primes_n, 1234);
+        assert!(!cfg.use_kernel);
+        assert_eq!(cfg.scale, 0.5);
+        assert_eq!(cfg.scaled_primes_n(), 617);
+    }
+}

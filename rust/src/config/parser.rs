@@ -1,0 +1,181 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supports exactly what experiment configs need (serde/toml are not
+//! available offline):
+//!
+//! * `key = value` pairs; values: integers, floats, booleans, quoted
+//!   strings;
+//! * `[section]` headers (keys become `section.key`);
+//! * `#` comments and blank lines.
+//!
+//! Arrays, inline tables, multi-line strings and datetimes are rejected
+//! with a line-numbered error rather than mis-parsed.
+
+use std::collections::BTreeMap;
+
+use super::ConfigError;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl TomlValue {
+    /// The raw string form fed into `Config::set` (strings unquoted).
+    pub fn as_raw_string(&self) -> String {
+        match self {
+            TomlValue::Int(v) => v.to_string(),
+            TomlValue::Float(v) => v.to_string(),
+            TomlValue::Bool(v) => v.to_string(),
+            TomlValue::Str(v) => v.clone(),
+        }
+    }
+}
+
+/// Parse `text`; keys inside `[section]` are returned as `section.key`.
+pub fn parse_toml_subset(text: &str) -> Result<BTreeMap<String, TomlValue>, ConfigError> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| ConfigError::at("unterminated [section]", lineno))?
+                .trim();
+            if name.is_empty() || !name.chars().all(is_key_char) {
+                return Err(ConfigError::at(format!("bad section name: {name}"), lineno));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| ConfigError::at(format!("expected key = value, got: {line}"), lineno))?;
+        let key = key.trim();
+        if key.is_empty() || !key.chars().all(is_key_char) {
+            return Err(ConfigError::at(format!("bad key: {key}"), lineno));
+        }
+        let full_key =
+            if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        let value = parse_value(value.trim(), lineno)?;
+        if out.insert(full_key.clone(), value).is_some() {
+            return Err(ConfigError::at(format!("duplicate key: {full_key}"), lineno));
+        }
+    }
+    Ok(out)
+}
+
+fn is_key_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.'
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string is content, not a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue, ConfigError> {
+    if s.is_empty() {
+        return Err(ConfigError::at("missing value", lineno));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| ConfigError::at("unterminated string", lineno))?;
+        if inner.contains('"') {
+            return Err(ConfigError::at("embedded quote in string", lineno));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if s.starts_with('[') || s.starts_with('{') {
+        return Err(ConfigError::at("arrays/tables are not supported", lineno));
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(v) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(v));
+    }
+    if let Ok(v) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    Err(ConfigError::at(format!("cannot parse value: {s}"), lineno))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let m = parse_toml_subset(
+            "a = 1\nb = -2.5\nc = true\nd = \"hi\"\nbig = 100_000_000_001\n",
+        )
+        .unwrap();
+        assert_eq!(m["a"], TomlValue::Int(1));
+        assert_eq!(m["b"], TomlValue::Float(-2.5));
+        assert_eq!(m["c"], TomlValue::Bool(true));
+        assert_eq!(m["d"], TomlValue::Str("hi".to_string()));
+        assert_eq!(m["big"], TomlValue::Int(100_000_000_001));
+    }
+
+    #[test]
+    fn sections_prefix_keys() {
+        let m = parse_toml_subset("[bench]\nsamples = 3\n[exec]\nstack_size = 1024\n").unwrap();
+        assert_eq!(m["bench.samples"], TomlValue::Int(3));
+        assert_eq!(m["exec.stack_size"], TomlValue::Int(1024));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let m = parse_toml_subset("# header\n\na = 1 # trailing\ns = \"a # not comment\"\n")
+            .unwrap();
+        assert_eq!(m["a"], TomlValue::Int(1));
+        assert_eq!(m["s"], TomlValue::Str("a # not comment".to_string()));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_toml_subset("a = 1\nwhat\n").unwrap_err();
+        assert_eq!(err.line, Some(2));
+        let err = parse_toml_subset("x = [1,2]\n").unwrap_err();
+        assert!(err.message.contains("not supported"));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let err = parse_toml_subset("a = 1\na = 2\n").unwrap_err();
+        assert!(err.message.contains("duplicate"));
+    }
+
+    #[test]
+    fn bad_section_rejected() {
+        assert!(parse_toml_subset("[bad\n").is_err());
+        assert!(parse_toml_subset("[]\n").is_err());
+    }
+
+    #[test]
+    fn unterminated_string_rejected() {
+        assert!(parse_toml_subset("s = \"oops\n").is_err());
+    }
+}

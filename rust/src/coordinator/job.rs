@@ -1,0 +1,121 @@
+//! Job requests and results.
+
+use crate::config::{Mode, Workload};
+
+/// A request routed through the [`Pipeline`](super::Pipeline): one
+/// workload under one evaluation mode — one cell of the paper's Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobRequest {
+    pub workload: Workload,
+    pub mode: Mode,
+}
+
+impl JobRequest {
+    /// Parse `"<workload> <mode>"` (the serve protocol / CLI form).
+    pub fn parse(s: &str) -> Result<JobRequest, String> {
+        let mut parts = s.split_whitespace();
+        let w = parts.next().ok_or("missing workload")?;
+        let m = parts.next().ok_or("missing mode")?;
+        if parts.next().is_some() {
+            return Err(format!("trailing input in job spec: {s}"));
+        }
+        Ok(JobRequest {
+            workload: Workload::parse(w).map_err(|e| e.to_string())?,
+            mode: Mode::parse(m).map_err(|e| e.to_string())?,
+        })
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}.{}", self.workload.name(), self.mode.label())
+    }
+}
+
+/// Workload-specific result summary, used for verification and
+/// reporting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ResultDetail {
+    Primes {
+        count: usize,
+        largest: u32,
+    },
+    Poly {
+        terms: usize,
+        /// Decimal rendering of the leading coefficient (ring-agnostic).
+        leading_coeff: String,
+    },
+}
+
+/// Outcome of one job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobResult {
+    pub request: JobRequest,
+    pub seconds: f64,
+    pub detail: ResultDetail,
+    /// Result checked against the independent oracle (Eratosthenes /
+    /// classical multiplication).
+    pub verified: bool,
+    /// Which block backend served chunked workloads ("rust-scalar",
+    /// "pjrt-kernel", or "-" for non-chunked).
+    pub backend: String,
+}
+
+impl JobResult {
+    /// One-line rendering for the serve protocol.
+    pub fn render_line(&self) -> String {
+        let detail = match &self.detail {
+            ResultDetail::Primes { count, largest } => {
+                format!("primes={count} largest={largest}")
+            }
+            ResultDetail::Poly { terms, leading_coeff } => {
+                format!("terms={terms} leading={leading_coeff}")
+            }
+        };
+        format!(
+            "ok workload={} mode={} seconds={:.3} verified={} backend={} {detail}",
+            self.request.workload.name(),
+            self.request.mode.label(),
+            self.seconds,
+            self.verified,
+            self.backend,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_job_specs() {
+        let j = JobRequest::parse("primes seq").unwrap();
+        assert_eq!(j.workload, Workload::Primes);
+        assert_eq!(j.mode, Mode::Seq);
+        let j = JobRequest::parse("stream_big par(4)").unwrap();
+        assert_eq!(j.mode, Mode::Par(4));
+        assert!(JobRequest::parse("primes").is_err());
+        assert!(JobRequest::parse("primes seq extra").is_err());
+        assert!(JobRequest::parse("warp seq").is_err());
+    }
+
+    #[test]
+    fn labels() {
+        let j = JobRequest { workload: Workload::StreamBig, mode: Mode::Par(2) };
+        assert_eq!(j.label(), "stream_big.par(2)");
+    }
+
+    #[test]
+    fn render_line_roundtrips_key_fields() {
+        let r = JobResult {
+            request: JobRequest { workload: Workload::Primes, mode: Mode::Seq },
+            seconds: 1.5,
+            detail: ResultDetail::Primes { count: 25, largest: 97 },
+            verified: true,
+            backend: "-".into(),
+        };
+        let line = r.render_line();
+        assert!(line.contains("workload=primes"));
+        assert!(line.contains("seconds=1.500"));
+        assert!(line.contains("primes=25"));
+        assert!(line.contains("verified=true"));
+    }
+}

@@ -1,0 +1,109 @@
+//! The coordinator: L3's service layer.
+//!
+//! The paper's contribution is the stream/future construct itself, so the
+//! coordinator is the thin-but-real system around it: a [`Pipeline`] that
+//! owns the configuration, the optional PJRT engine, and the metrics
+//! registry; a router ([`Pipeline::run`]) that maps `(workload, mode)`
+//! requests onto the algorithm implementations with the right evaluation
+//! strategy; and a [`serve`] line-protocol request loop (the `sfut serve`
+//! subcommand) so workloads can be driven externally.
+//!
+//! Every run executes on a dedicated driver thread with the configured
+//! stack size (deep Lazy filter chains need it), with per-stage timing
+//! published to the metrics registry.
+
+mod job;
+mod router;
+mod server;
+mod tcp;
+
+pub use job::{JobRequest, JobResult, ResultDetail};
+pub use router::Pipeline;
+pub use server::serve;
+pub use tcp::TcpServer;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, Mode, Workload};
+
+    fn small_config() -> Config {
+        let mut cfg = Config::default();
+        cfg.primes_n = 500;
+        cfg.fateman_degree = 3;
+        cfg.chunk_size = 16;
+        cfg.use_kernel = false; // unit tests stay kernel-independent
+        cfg
+    }
+
+    #[test]
+    fn pipeline_runs_every_workload_seq() {
+        let pipeline = Pipeline::new(small_config()).unwrap();
+        for w in Workload::ALL {
+            let res = pipeline.run(&JobRequest { workload: w, mode: Mode::Seq }).unwrap();
+            assert!(res.verified, "{} failed verification", w.name());
+            assert!(res.seconds >= 0.0);
+        }
+    }
+
+    #[test]
+    fn pipeline_runs_every_workload_par2() {
+        let pipeline = Pipeline::new(small_config()).unwrap();
+        for w in Workload::ALL {
+            let res =
+                pipeline.run(&JobRequest { workload: w, mode: Mode::Par(2) }).unwrap();
+            assert!(res.verified, "{} failed verification", w.name());
+        }
+    }
+
+    #[test]
+    fn primes_detail_counts() {
+        let pipeline = Pipeline::new(small_config()).unwrap();
+        let res = pipeline
+            .run(&JobRequest { workload: Workload::Primes, mode: Mode::Seq })
+            .unwrap();
+        match res.detail {
+            ResultDetail::Primes { count, largest } => {
+                assert_eq!(count, 95); // π(500)
+                assert_eq!(largest, 499);
+            }
+            _ => panic!("wrong detail kind"),
+        }
+    }
+
+    #[test]
+    fn poly_detail_counts() {
+        let pipeline = Pipeline::new(small_config()).unwrap();
+        let res = pipeline
+            .run(&JobRequest { workload: Workload::Stream, mode: Mode::Par(2) })
+            .unwrap();
+        match res.detail {
+            ResultDetail::Poly { terms, .. } => {
+                // (1+x+y+z+t)^3 · ((1+x+y+z+t)^3 + 1) over 4 vars:
+                // support of degree-6 expansion = C(10,4) = 210.
+                assert_eq!(terms, 210);
+            }
+            _ => panic!("wrong detail kind"),
+        }
+    }
+
+    #[test]
+    fn metrics_accumulate_across_runs() {
+        let pipeline = Pipeline::new(small_config()).unwrap();
+        let req = JobRequest { workload: Workload::Primes, mode: Mode::Seq };
+        pipeline.run(&req).unwrap();
+        pipeline.run(&req).unwrap();
+        let snap = pipeline.metrics().snapshot();
+        assert_eq!(snap.counters["jobs.completed"], 2);
+        assert!(snap.timers.contains_key("job.primes.seq"));
+    }
+
+    #[test]
+    fn strict_mode_works_as_control() {
+        let pipeline = Pipeline::new(small_config()).unwrap();
+        let res = pipeline
+            .run(&JobRequest { workload: Workload::Stream, mode: Mode::Strict })
+            .unwrap();
+        assert!(res.verified);
+    }
+}

@@ -1,0 +1,279 @@
+//! The pipeline router: `(workload, mode)` → algorithm × strategy.
+//!
+//! Monomorphization meets runtime dispatch here: the algorithms are
+//! generic over [`Eval`], the request is a runtime value, so the router
+//! holds the `match` that instantiates the right combination — exactly
+//! the substitution the paper performs by editing one import.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use log::{debug, info};
+
+use super::job::{JobRequest, JobResult, ResultDetail};
+use crate::config::{Config, Mode, Workload};
+use crate::exec::{Executor, ExecutorConfig};
+use crate::metrics::MetricsRegistry;
+use crate::poly::{
+    chunked_times, list_times_par, list_times_seq, stream_times, BlockMultiplier, Coeff,
+    Polynomial, RustMultiplier,
+};
+use crate::runtime::{KernelMultiplier, XlaEngine};
+use crate::sieve;
+use crate::susp::{FutureEval, LazyEval, StrictEval};
+use crate::workload::{fateman_pair, fateman_pair_big, Sizes};
+
+/// Long-lived coordinator state: config, optional PJRT engine, metrics.
+pub struct Pipeline {
+    cfg: Config,
+    sizes: Sizes,
+    engine: Option<Arc<XlaEngine>>,
+    metrics: MetricsRegistry,
+}
+
+impl Pipeline {
+    /// Build a pipeline. When `cfg.use_kernel` is set and the artifacts
+    /// directory exists, the PJRT engine is started (compiling every
+    /// artifact); otherwise chunked workloads run on the pure-Rust block
+    /// backend.
+    pub fn new(cfg: Config) -> Result<Pipeline> {
+        cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let engine = if cfg.use_kernel && cfg.artifacts_dir.join("manifest.toml").exists() {
+            let engine = XlaEngine::start(&cfg.artifacts_dir)
+                .context("starting PJRT engine (set use_kernel=false to skip)")?;
+            Some(Arc::new(engine))
+        } else {
+            info!("pjrt engine disabled (use_kernel={} artifacts at {:?})",
+                  cfg.use_kernel, cfg.artifacts_dir);
+            None
+        };
+        let sizes = Sizes::from_config(&cfg);
+        Ok(Pipeline { cfg, sizes, engine, metrics: MetricsRegistry::new() })
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    pub fn engine(&self) -> Option<&Arc<XlaEngine>> {
+        self.engine.as_ref()
+    }
+
+    /// The block multiplier chunked workloads will use.
+    pub fn multiplier(&self) -> Arc<dyn BlockMultiplier> {
+        match &self.engine {
+            Some(engine) => Arc::new(KernelMultiplier::new(Arc::clone(engine))),
+            None => Arc::new(RustMultiplier),
+        }
+    }
+
+    /// Run one job on a dedicated big-stack driver thread; publishes
+    /// timing to the metrics registry and verifies the result against
+    /// the independent oracle. Only the workload itself is timed —
+    /// verification runs after the clock stops.
+    pub fn run(&self, req: &JobRequest) -> Result<JobResult> {
+        self.run_opts(req, true)
+    }
+
+    /// [`Pipeline::run`] with verification made optional: the bench
+    /// harness verifies the first sample of a cell and skips the oracle
+    /// (a full classical multiplication) on the remaining ones.
+    pub fn run_opts(&self, req: &JobRequest, verify: bool) -> Result<JobResult> {
+        let req = *req;
+        let label = req.label();
+        let timer = self.metrics.timer(&format!("job.{label}"));
+
+        let started = Instant::now();
+        let detail = self.run_on_driver(req)?;
+        let took = started.elapsed();
+
+        timer.record(took);
+        debug!("job {label} finished in {:.3}s", took.as_secs_f64());
+        self.metrics.counter("jobs.completed").inc();
+        let verified = !verify || self.verify(req.workload, &detail);
+        if !verified {
+            self.metrics.counter("jobs.verification_failed").inc();
+        }
+        let backend = match req.workload {
+            Workload::Chunked | Workload::ChunkedBig => self.multiplier().name().to_string(),
+            _ => "-".to_string(),
+        };
+        Ok(JobResult {
+            request: req,
+            seconds: took.as_secs_f64(),
+            detail,
+            verified,
+            backend,
+        })
+    }
+
+    /// Execute the workload body on a thread with the configured stack.
+    fn run_on_driver(&self, req: JobRequest) -> Result<ResultDetail> {
+        let stack = self.cfg.stack_size;
+        std::thread::scope(|s| {
+            std::thread::Builder::new()
+                .name(format!("sfut-driver-{}", req.label()))
+                .stack_size(stack)
+                .spawn_scoped(s, || self.workload_body(req))
+                .context("spawning driver thread")?
+                .join()
+                .map_err(|p| {
+                    anyhow::anyhow!(
+                        "workload panicked: {}",
+                        crate::susp::panic_text(&*p)
+                    )
+                })?
+        })
+    }
+
+    fn executor(&self, n: usize) -> Executor {
+        let mut cfg = ExecutorConfig::with_parallelism(n);
+        cfg.stack_size = self.cfg.stack_size;
+        Executor::with_config(cfg)
+    }
+
+    fn workload_body(&self, req: JobRequest) -> Result<ResultDetail> {
+        let sizes = &self.sizes;
+        match req.workload {
+            Workload::Primes => Ok(self.run_sieve(req.mode, sizes.primes_n)),
+            Workload::PrimesX3 => Ok(self.run_sieve(req.mode, sizes.primes_x3_n)),
+            Workload::Stream => {
+                let (p, q) = fateman_pair(sizes.fateman_vars, sizes.fateman_degree);
+                let prod = self.run_stream_times(req.mode, &p, &q);
+                Ok(poly_detail(&prod))
+            }
+            Workload::StreamBig => {
+                let (p, q) = fateman_pair_big(
+                    sizes.fateman_vars,
+                    sizes.fateman_degree,
+                    sizes.big_factor,
+                );
+                let prod = self.run_stream_times(req.mode, &p, &q);
+                Ok(poly_detail(&prod))
+            }
+            Workload::List => {
+                let (p, q) = fateman_pair(sizes.fateman_vars, sizes.fateman_degree);
+                let prod = self.run_list_times(req.mode, &p, &q);
+                Ok(poly_detail(&prod))
+            }
+            Workload::ListBig => {
+                let (p, q) = fateman_pair_big(
+                    sizes.fateman_vars,
+                    sizes.fateman_degree,
+                    sizes.big_factor,
+                );
+                let prod = self.run_list_times(req.mode, &p, &q);
+                Ok(poly_detail(&prod))
+            }
+            Workload::Chunked => {
+                let (p, q) = fateman_pair(sizes.fateman_vars, sizes.fateman_degree);
+                let prod = self.run_chunked_times(req.mode, &p, &q);
+                Ok(poly_detail(&prod))
+            }
+            Workload::ChunkedBig => {
+                let (p, q) = fateman_pair_big(
+                    sizes.fateman_vars,
+                    sizes.fateman_degree,
+                    sizes.big_factor,
+                );
+                let prod = self.run_chunked_times(req.mode, &p, &q);
+                Ok(poly_detail(&prod))
+            }
+        }
+    }
+
+    fn run_sieve(&self, mode: Mode, n: u32) -> ResultDetail {
+        let primes = match mode {
+            Mode::Seq => sieve::primes(LazyEval, n),
+            Mode::Strict => sieve::primes(StrictEval, n),
+            Mode::Par(k) => sieve::primes(FutureEval::new(self.executor(k)), n),
+        };
+        ResultDetail::Primes {
+            count: primes.len(),
+            largest: primes.last().copied().unwrap_or(0),
+        }
+    }
+
+    fn run_stream_times<C: Coeff>(
+        &self,
+        mode: Mode,
+        p: &Polynomial<C>,
+        q: &Polynomial<C>,
+    ) -> Polynomial<C> {
+        match mode {
+            Mode::Seq => stream_times(&LazyEval, p, q),
+            Mode::Strict => stream_times(&StrictEval, p, q),
+            Mode::Par(k) => stream_times(&FutureEval::new(self.executor(k)), p, q),
+        }
+    }
+
+    fn run_list_times<C: Coeff>(
+        &self,
+        mode: Mode,
+        p: &Polynomial<C>,
+        q: &Polynomial<C>,
+    ) -> Polynomial<C> {
+        match mode {
+            Mode::Seq | Mode::Strict => list_times_seq(p, q),
+            Mode::Par(k) => list_times_par(&self.executor(k), p, q),
+        }
+    }
+
+    fn run_chunked_times<C: Coeff>(
+        &self,
+        mode: Mode,
+        p: &Polynomial<C>,
+        q: &Polynomial<C>,
+    ) -> Polynomial<C> {
+        let mult = self.multiplier();
+        let chunk = self.sizes.chunk_size;
+        match mode {
+            Mode::Seq => chunked_times(&LazyEval, p, q, chunk, mult),
+            Mode::Strict => chunked_times(&StrictEval, p, q, chunk, mult),
+            Mode::Par(k) => {
+                chunked_times(&FutureEval::new(self.executor(k)), p, q, chunk, mult)
+            }
+        }
+    }
+
+    /// Check against the independent oracle: Eratosthenes for primes,
+    /// classical multiplication for polynomials.
+    fn verify(&self, workload: Workload, detail: &ResultDetail) -> bool {
+        let sizes = &self.sizes;
+        match (workload, detail) {
+            (Workload::Primes, ResultDetail::Primes { count, largest }) => {
+                let oracle = sieve::eratosthenes(sizes.primes_n);
+                oracle.len() == *count && oracle.last().copied().unwrap_or(0) == *largest
+            }
+            (Workload::PrimesX3, ResultDetail::Primes { count, largest }) => {
+                let oracle = sieve::eratosthenes(sizes.primes_x3_n);
+                oracle.len() == *count && oracle.last().copied().unwrap_or(0) == *largest
+            }
+            (Workload::Stream | Workload::List | Workload::Chunked, d) => {
+                let (p, q) = fateman_pair(sizes.fateman_vars, sizes.fateman_degree);
+                poly_detail(&p.mul(&q)) == *d
+            }
+            (Workload::StreamBig | Workload::ListBig | Workload::ChunkedBig, d) => {
+                let (p, q) = fateman_pair_big(
+                    sizes.fateman_vars,
+                    sizes.fateman_degree,
+                    sizes.big_factor,
+                );
+                poly_detail(&p.mul(&q)) == *d
+            }
+            _ => false,
+        }
+    }
+}
+
+fn poly_detail<C: Coeff>(p: &Polynomial<C>) -> ResultDetail {
+    ResultDetail::Poly {
+        terms: p.num_terms(),
+        leading_coeff: p.leading().map(|(_, c)| c.to_string()).unwrap_or_else(|| "0".into()),
+    }
+}

@@ -1,0 +1,134 @@
+//! Line-protocol request server (the `sfut serve` subcommand).
+//!
+//! Protocol (one request per line):
+//!
+//! ```text
+//! run <workload> <mode>   → ok workload=... seconds=... | err <message>
+//! metrics                 → multi-line snapshot, terminated by "."
+//! config                  → one line per effective config field
+//! help                    → command summary
+//! quit                    → closes the session
+//! ```
+//!
+//! Written against `BufRead`/`Write` so tests drive it with in-memory
+//! buffers; `main.rs` connects it to stdin/stdout.
+
+use std::io::{BufRead, Write};
+
+use anyhow::Result;
+
+use super::job::JobRequest;
+use super::router::Pipeline;
+
+/// Serve requests from `input`, writing responses to `output`, until
+/// `quit` or EOF. Returns the number of jobs executed.
+pub fn serve(pipeline: &Pipeline, input: impl BufRead, mut output: impl Write) -> Result<u64> {
+    let mut jobs = 0u64;
+    for line in input.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (cmd, rest) = match line.split_once(char::is_whitespace) {
+            Some((c, r)) => (c, r.trim()),
+            None => (line, ""),
+        };
+        match cmd {
+            "quit" | "exit" => break,
+            "help" => {
+                writeln!(output, "commands: run <workload> <mode> | metrics | config | quit")?;
+                writeln!(
+                    output,
+                    "workloads: {}",
+                    crate::config::Workload::ALL.map(|w| w.name()).join(" ")
+                )?;
+                writeln!(output, "modes: seq strict par(N)")?;
+            }
+            "config" => {
+                writeln!(output, "{:#?}", pipeline.config())?;
+            }
+            "metrics" => {
+                write!(output, "{}", pipeline.metrics().snapshot().render())?;
+                writeln!(output, ".")?;
+            }
+            "run" => match JobRequest::parse(rest) {
+                Ok(req) => match pipeline.run(&req) {
+                    Ok(result) => {
+                        jobs += 1;
+                        writeln!(output, "{}", result.render_line())?;
+                    }
+                    Err(e) => writeln!(output, "err {e:#}")?,
+                },
+                Err(e) => writeln!(output, "err {e}")?,
+            },
+            other => writeln!(output, "err unknown command: {other}")?,
+        }
+        output.flush()?;
+    }
+    Ok(jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn pipeline() -> Pipeline {
+        let mut cfg = Config::default();
+        cfg.primes_n = 200;
+        cfg.fateman_degree = 2;
+        cfg.use_kernel = false;
+        Pipeline::new(cfg).unwrap()
+    }
+
+    fn drive(input: &str) -> (u64, String) {
+        let p = pipeline();
+        let mut out = Vec::new();
+        let jobs = serve(&p, input.as_bytes(), &mut out).unwrap();
+        (jobs, String::from_utf8(out).unwrap())
+    }
+
+    #[test]
+    fn runs_jobs_and_reports() {
+        let (jobs, out) = drive("run primes seq\nrun stream par(2)\nquit\n");
+        assert_eq!(jobs, 2);
+        assert!(out.contains("ok workload=primes mode=seq"));
+        assert!(out.contains("ok workload=stream mode=par(2)"));
+        assert!(out.contains("verified=true"));
+    }
+
+    #[test]
+    fn bad_requests_get_err_lines() {
+        let (jobs, out) = drive("run nope seq\nrun primes warp\nfrobnicate\n");
+        assert_eq!(jobs, 0);
+        assert_eq!(out.lines().filter(|l| l.starts_with("err")).count(), 3);
+    }
+
+    #[test]
+    fn metrics_command_renders_snapshot() {
+        let (_, out) = drive("run primes seq\nmetrics\nquit\n");
+        assert!(out.contains("jobs.completed"));
+        assert!(out.lines().any(|l| l == "."));
+    }
+
+    #[test]
+    fn help_lists_workloads() {
+        let (_, out) = drive("help\n");
+        assert!(out.contains("stream_big"));
+        assert!(out.contains("par(N)"));
+    }
+
+    #[test]
+    fn eof_terminates_cleanly() {
+        let (jobs, _) = drive("run primes seq\n");
+        assert_eq!(jobs, 1);
+    }
+
+    #[test]
+    fn blank_lines_ignored() {
+        let (jobs, out) = drive("\n\nrun primes seq\n\n");
+        assert_eq!(jobs, 1);
+        assert_eq!(out.lines().count(), 1);
+    }
+}

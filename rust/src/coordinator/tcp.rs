@@ -1,0 +1,183 @@
+//! TCP front-end for the line-protocol server: `sfut serve --tcp ADDR`.
+//!
+//! One session thread per connection, all sharing the [`Pipeline`] (and
+//! therefore the PJRT engine, the metrics registry, and the config).
+//! The protocol is identical to the stdio server (`server.rs`).
+
+use std::io::BufReader;
+use std::net::{TcpListener, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use log::{info, warn};
+
+use super::router::Pipeline;
+use super::server::serve;
+
+/// Handle to a running TCP server (for tests and graceful shutdown).
+pub struct TcpServer {
+    local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    sessions: Arc<AtomicU64>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind and start accepting. `pipeline` is shared across sessions.
+    pub fn start(pipeline: Arc<Pipeline>, addr: impl ToSocketAddrs) -> Result<TcpServer> {
+        let listener = TcpListener::bind(addr).context("binding TCP listener")?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        info!("sfut tcp server listening on {local_addr}");
+        let stop = Arc::new(AtomicBool::new(false));
+        let sessions = Arc::new(AtomicU64::new(0));
+        let stop2 = Arc::clone(&stop);
+        let sessions2 = Arc::clone(&sessions);
+        let accept_thread = std::thread::Builder::new()
+            .name("sfut-tcp-accept".to_string())
+            .spawn(move || {
+                accept_loop(listener, pipeline, stop2, sessions2);
+            })
+            .context("spawning accept thread")?;
+        Ok(TcpServer { local_addr, stop, sessions, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    /// Total sessions accepted so far.
+    pub fn sessions(&self) -> u64 {
+        self.sessions.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting new connections and join the accept thread.
+    /// In-flight sessions drain on their own threads.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    pipeline: Arc<Pipeline>,
+    stop: Arc<AtomicBool>,
+    sessions: Arc<AtomicU64>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((socket, peer)) => {
+                sessions.fetch_add(1, Ordering::Relaxed);
+                info!("accepted session from {peer}");
+                let pipeline = Arc::clone(&pipeline);
+                let name = format!("sfut-session-{peer}");
+                let spawned = std::thread::Builder::new().name(name).spawn(move || {
+                    let reader = match socket.try_clone() {
+                        Ok(r) => BufReader::new(r),
+                        Err(e) => {
+                            warn!("session {peer}: clone failed: {e}");
+                            return;
+                        }
+                    };
+                    match serve(&pipeline, reader, socket) {
+                        Ok(jobs) => info!("session {peer} done ({jobs} jobs)"),
+                        Err(e) => warn!("session {peer} errored: {e:#}"),
+                    }
+                });
+                if let Err(e) = spawned {
+                    warn!("could not spawn session thread: {e}");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(e) => {
+                warn!("accept error: {e}");
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use std::io::{BufRead, BufReader as StdBufReader, Write};
+    use std::net::TcpStream;
+
+    fn pipeline() -> Arc<Pipeline> {
+        let mut cfg = Config::default();
+        cfg.primes_n = 200;
+        cfg.fateman_degree = 2;
+        cfg.use_kernel = false;
+        Arc::new(Pipeline::new(cfg).unwrap())
+    }
+
+    fn session(addr: std::net::SocketAddr, script: &str) -> Vec<String> {
+        let mut sock = TcpStream::connect(addr).unwrap();
+        sock.write_all(script.as_bytes()).unwrap();
+        sock.flush().unwrap();
+        // Half-close: server sees EOF after our last command.
+        sock.shutdown(std::net::Shutdown::Write).unwrap();
+        StdBufReader::new(sock).lines().map(|l| l.unwrap()).collect()
+    }
+
+    #[test]
+    fn tcp_roundtrip_single_session() {
+        let server = TcpServer::start(pipeline(), "127.0.0.1:0").unwrap();
+        let lines = session(server.local_addr(), "run primes seq\nquit\n");
+        assert!(lines.iter().any(|l| l.contains("ok workload=primes")), "{lines:?}");
+    }
+
+    #[test]
+    fn tcp_concurrent_sessions_share_metrics() {
+        let p = pipeline();
+        let server = TcpServer::start(Arc::clone(&p), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(move || {
+                    let lines = session(addr, "run primes seq\n");
+                    assert!(lines.iter().any(|l| l.starts_with("ok")), "{lines:?}");
+                });
+            }
+        });
+        assert_eq!(p.metrics().snapshot().counters["jobs.completed"], 3);
+        assert!(server.sessions() >= 3);
+    }
+
+    #[test]
+    fn tcp_shutdown_stops_accepting() {
+        let mut server = TcpServer::start(pipeline(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        server.shutdown();
+        // Connection may be refused or accepted-then-dropped; either way
+        // no job response should come back.
+        if let Ok(mut sock) = TcpStream::connect(addr) {
+            let _ = sock.write_all(b"run primes seq\n");
+            let _ = sock.shutdown(std::net::Shutdown::Write);
+            let mut buf = String::new();
+            use std::io::Read;
+            let _ = sock.read_to_string(&mut buf);
+            assert!(!buf.contains("ok workload"), "server answered after shutdown: {buf}");
+        }
+    }
+
+    #[test]
+    fn bad_commands_get_errors_over_tcp() {
+        let server = TcpServer::start(pipeline(), "127.0.0.1:0").unwrap();
+        let lines = session(server.local_addr(), "frobnicate\nrun nope seq\n");
+        assert_eq!(lines.iter().filter(|l| l.starts_with("err")).count(), 2, "{lines:?}");
+    }
+}

@@ -1,0 +1,183 @@
+//! Task executor substrate.
+//!
+//! The paper relies on Scala's `scala.concurrent` machinery: a thread pool
+//! with *managed blocking* (the JVM `ForkJoinPool` grows compensation
+//! threads when a worker blocks in `Await.result`). Nothing equivalent is
+//! available offline, and the Future machinery is the paper's subject, so
+//! this module builds it from scratch:
+//!
+//! * [`Executor`] — a fixed-parallelism worker pool with an injector queue.
+//! * Managed blocking ([`Executor::blocking`]) — when a worker is about to
+//!   block (the paper's `Await.result` inside `plus`), a compensation
+//!   worker is spun up so the configured parallelism is preserved and
+//!   `par(1)` cannot deadlock on a dependency chain.
+//! * Panic propagation — a panicking task poisons its future; the panic
+//!   payload resurfaces at the `force` site, not in a dead worker log.
+//!
+//! The pool size is the experimental variable of the paper's evaluation:
+//! `par(1)` and `par(2)` in Table 1 are literally `Executor::new(1)` and
+//! `Executor::new(2)`.
+
+mod pool;
+mod queue;
+
+pub use pool::{Executor, ExecutorConfig, ExecutorStats};
+pub use queue::JobQueue;
+
+use std::sync::Arc;
+
+/// A unit of work submitted to the executor.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// Set while a worker thread is running jobs, so [`current_worker`]
+    /// can detect "am I on the pool?" (needed for managed blocking).
+    static CURRENT: std::cell::RefCell<Option<Arc<pool::Inner>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Returns a handle to the executor the current thread is a worker of,
+/// or `None` when called from an external (driver) thread.
+pub(crate) fn current_worker() -> Option<Arc<pool::Inner>> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+pub(crate) fn set_current_worker(inner: Option<Arc<pool::Inner>>) {
+    CURRENT.with(|c| *c.borrow_mut() = inner);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    #[test]
+    fn runs_submitted_jobs() {
+        let ex = Executor::new(2);
+        let n = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let n = n.clone();
+            ex.spawn(move || {
+                n.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        ex.wait_idle();
+        assert_eq!(n.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallelism_one_still_progresses_with_blocking() {
+        // A task that blocks waiting for a later task must not deadlock a
+        // 1-worker pool: managed blocking spawns a compensation worker.
+        let ex = Executor::new(1);
+        let (tx, rx) = std::sync::mpsc::channel::<u32>();
+        let ex2 = ex.clone();
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<u32>();
+        ex.spawn(move || {
+            // Schedule the producer *after* we are already running.
+            ex2.spawn(move || {
+                tx.send(42).unwrap();
+            });
+            // Block for its result under managed blocking.
+            let v = Executor::blocking(|| rx.recv().unwrap());
+            done_tx.send(v).unwrap();
+        });
+        let got = done_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(got, 42);
+    }
+
+    #[test]
+    fn observes_configured_parallelism() {
+        // With parallelism=2, at most 2 non-blocked jobs run at once.
+        let ex = Executor::new(2);
+        let running = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        for _ in 0..32 {
+            let running = running.clone();
+            let peak = peak.clone();
+            ex.spawn(move || {
+                let now = running.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(2));
+                running.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+        ex.wait_idle();
+        assert!(peak.load(Ordering::SeqCst) <= 2, "peak={}", peak.load(Ordering::SeqCst));
+        assert!(peak.load(Ordering::SeqCst) >= 1);
+    }
+
+    #[test]
+    fn wait_idle_sees_recursive_spawns() {
+        let ex = Executor::new(4);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let ex2 = ex.clone();
+        let hits2 = hits.clone();
+        ex.spawn(move || {
+            hits2.fetch_add(1, Ordering::SeqCst);
+            for _ in 0..10 {
+                let hits3 = hits2.clone();
+                ex2.spawn(move || {
+                    hits3.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        ex.wait_idle();
+        assert_eq!(hits.load(Ordering::SeqCst), 11);
+    }
+
+    #[test]
+    fn stats_count_executed_tasks() {
+        let ex = Executor::new(2);
+        for _ in 0..10 {
+            ex.spawn(|| {});
+        }
+        ex.wait_idle();
+        let stats = ex.stats();
+        assert_eq!(stats.tasks_executed, 10);
+    }
+
+    #[test]
+    fn panicked_task_does_not_kill_pool() {
+        let ex = Executor::new(1);
+        ex.spawn(|| panic!("boom"));
+        let ok = Arc::new(AtomicUsize::new(0));
+        let ok2 = ok.clone();
+        ex.spawn(move || {
+            ok2.store(1, Ordering::SeqCst);
+        });
+        ex.wait_idle();
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+        assert_eq!(ex.stats().tasks_panicked, 1);
+    }
+
+    #[test]
+    fn heavy_contention_completes() {
+        let ex = Executor::new(4);
+        let total = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10_000 {
+            let total = total.clone();
+            ex.spawn(move || {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        ex.wait_idle();
+        assert_eq!(total.load(Ordering::SeqCst), 10_000);
+    }
+
+    #[test]
+    fn results_collected_in_order_via_mutex() {
+        let ex = Executor::new(3);
+        let out = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..50u32 {
+            let out = out.clone();
+            ex.spawn(move || out.lock().unwrap().push(i));
+        }
+        ex.wait_idle();
+        let mut v = out.lock().unwrap().clone();
+        v.sort_unstable();
+        assert_eq!(v, (0..50).collect::<Vec<_>>());
+    }
+}

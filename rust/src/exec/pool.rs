@@ -1,0 +1,289 @@
+//! Worker pool with managed blocking (a miniature ForkJoinPool).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::queue::{JobQueue, Popped};
+use super::{current_worker, set_current_worker, Job};
+
+/// Tuning knobs for an [`Executor`].
+#[derive(Debug, Clone)]
+pub struct ExecutorConfig {
+    /// Target number of concurrently *running* (non-blocked) workers.
+    /// This is the paper's par(n) variable.
+    pub parallelism: usize,
+    /// Stack size per worker. Recursive stream forcing (the sieve builds a
+    /// filter chain thousands of stages deep) needs generous stacks.
+    pub stack_size: usize,
+    /// How long a compensation (transient) worker lingers idle before
+    /// retiring.
+    pub keepalive: Duration,
+    /// Hard cap on live threads (deadlock insurance must not become a
+    /// fork bomb).
+    pub max_threads: usize,
+    /// Thread-name prefix, for debuggability.
+    pub name: String,
+}
+
+impl ExecutorConfig {
+    pub fn with_parallelism(parallelism: usize) -> Self {
+        ExecutorConfig {
+            parallelism: parallelism.max(1),
+            stack_size: 64 << 20,
+            keepalive: Duration::from_millis(200),
+            max_threads: 512,
+            name: "sfut-worker".to_string(),
+        }
+    }
+}
+
+impl Default for ExecutorConfig {
+    fn default() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        Self::with_parallelism(n)
+    }
+}
+
+/// Counters exposed by [`Executor::stats`]. All monotonically increasing
+/// except `queue_depth`/`live_threads` which are instantaneous.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ExecutorStats {
+    pub tasks_spawned: u64,
+    pub tasks_executed: u64,
+    pub tasks_panicked: u64,
+    pub compensation_threads: u64,
+    pub blocking_sections: u64,
+    pub queue_depth: usize,
+    pub live_threads: usize,
+}
+
+pub(crate) struct Inner {
+    pub(crate) queue: JobQueue,
+    cfg: ExecutorConfig,
+    sync: Mutex<PoolState>,
+    idle: Condvar,
+    /// Jobs spawned and not yet finished (queued or running).
+    /// Atomic so the per-task hot path never takes `sync` (§Perf opt-2);
+    /// `sync` + `idle` are only touched on the 0-transition.
+    pending: AtomicUsize,
+    // Monotonic counters (lock-free; read by stats()).
+    tasks_spawned: AtomicU64,
+    tasks_executed: AtomicU64,
+    tasks_panicked: AtomicU64,
+    compensation_threads: AtomicU64,
+    blocking_sections: AtomicU64,
+    next_worker_id: AtomicUsize,
+}
+
+#[derive(Default)]
+struct PoolState {
+    /// Live worker threads.
+    live: usize,
+    /// Workers currently inside a managed-blocking section.
+    blocked: usize,
+}
+
+/// Handle to a worker pool. Cloning is cheap; the pool shuts down (after
+/// draining queued jobs) when the last external handle is dropped, or
+/// eagerly on [`Executor::shutdown`].
+#[derive(Clone)]
+pub struct Executor {
+    handle: Arc<Handle>,
+}
+
+struct Handle {
+    inner: Arc<Inner>,
+}
+
+impl Drop for Handle {
+    fn drop(&mut self) {
+        self.inner.queue.shutdown();
+    }
+}
+
+impl Executor {
+    /// Pool with `parallelism` workers and default tuning.
+    pub fn new(parallelism: usize) -> Self {
+        Self::with_config(ExecutorConfig::with_parallelism(parallelism))
+    }
+
+    /// Pool sized to the machine.
+    pub fn machine_sized() -> Self {
+        Self::with_config(ExecutorConfig::default())
+    }
+
+    pub fn with_config(cfg: ExecutorConfig) -> Self {
+        let inner = Arc::new(Inner {
+            queue: JobQueue::new(),
+            cfg,
+            sync: Mutex::new(PoolState::default()),
+            idle: Condvar::new(),
+            pending: AtomicUsize::new(0),
+            tasks_spawned: AtomicU64::new(0),
+            tasks_executed: AtomicU64::new(0),
+            tasks_panicked: AtomicU64::new(0),
+            compensation_threads: AtomicU64::new(0),
+            blocking_sections: AtomicU64::new(0),
+            next_worker_id: AtomicUsize::new(0),
+        });
+        for _ in 0..inner.cfg.parallelism {
+            Inner::spawn_worker(&inner, false);
+        }
+        Executor { handle: Arc::new(Handle { inner }) }
+    }
+
+    /// Configured parallelism (the paper's par(n)).
+    pub fn parallelism(&self) -> usize {
+        self.handle.inner.cfg.parallelism
+    }
+
+    /// Submit a job. Jobs submitted after shutdown are silently dropped.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.handle.inner.spawn_job(Box::new(f));
+    }
+
+    /// Run `f`, which may block, from inside a worker without starving the
+    /// pool: the calling worker is marked blocked and a compensation
+    /// worker is started so the configured parallelism is preserved.
+    /// Safe (and a no-op wrapper) on non-worker threads.
+    ///
+    /// This is the moral equivalent of Scala's
+    /// `scala.concurrent.blocking { ... }` that backs `Await.result`.
+    pub fn blocking<R>(f: impl FnOnce() -> R) -> R {
+        match current_worker() {
+            Some(inner) => inner.managed_blocking(f),
+            None => f(),
+        }
+    }
+
+    /// Block until no job is pending (queued or running). Jobs spawned by
+    /// running jobs are awaited too.
+    pub fn wait_idle(&self) {
+        let inner = &self.handle.inner;
+        let mut st = inner.sync.lock().unwrap();
+        while inner.pending.load(Ordering::Acquire) > 0 {
+            st = inner.idle.wait(st).unwrap();
+        }
+        drop(st);
+    }
+
+    /// Eagerly shut down; queued jobs drain, workers then exit.
+    pub fn shutdown(&self) {
+        self.handle.inner.queue.shutdown();
+    }
+
+    pub fn stats(&self) -> ExecutorStats {
+        let inner = &self.handle.inner;
+        let st = inner.sync.lock().unwrap();
+        ExecutorStats {
+            tasks_spawned: inner.tasks_spawned.load(Ordering::Relaxed),
+            tasks_executed: inner.tasks_executed.load(Ordering::Relaxed),
+            tasks_panicked: inner.tasks_panicked.load(Ordering::Relaxed),
+            compensation_threads: inner.compensation_threads.load(Ordering::Relaxed),
+            blocking_sections: inner.blocking_sections.load(Ordering::Relaxed),
+            queue_depth: inner.queue.len(),
+            live_threads: st.live,
+        }
+    }
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor")
+            .field("parallelism", &self.handle.inner.cfg.parallelism)
+            .finish()
+    }
+}
+
+impl Inner {
+    fn spawn_job(self: &Arc<Self>, job: Job) {
+        self.tasks_spawned.fetch_add(1, Ordering::Relaxed);
+        self.pending.fetch_add(1, Ordering::AcqRel);
+        if !self.queue.push(job) {
+            // Shut down: account the drop so wait_idle terminates.
+            self.finish_job_accounting();
+        }
+    }
+
+    /// Decrement `pending`; on the 0-transition, wake idle waiters. The
+    /// brief `sync` lock pairs with `wait_idle`'s check-under-lock so a
+    /// waiter cannot sleep between its check and our notify.
+    fn finish_job_accounting(&self) {
+        if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _guard = self.sync.lock().unwrap();
+            self.idle.notify_all();
+        }
+    }
+
+    fn spawn_worker(self: &Arc<Self>, transient: bool) {
+        let mut st = self.sync.lock().unwrap();
+        if st.live >= self.cfg.max_threads {
+            return; // cap reached; queued work will be picked up eventually
+        }
+        st.live += 1;
+        drop(st);
+        if transient {
+            self.compensation_threads.fetch_add(1, Ordering::Relaxed);
+        }
+        let id = self.next_worker_id.fetch_add(1, Ordering::Relaxed);
+        let me = Arc::clone(self);
+        let name = format!("{}-{}{}", self.cfg.name, if transient { "c" } else { "" }, id);
+        let spawned = std::thread::Builder::new()
+            .name(name)
+            .stack_size(self.cfg.stack_size)
+            .spawn(move || me.worker_loop(transient));
+        if spawned.is_err() {
+            // Could not start a thread: undo the liveness accounting.
+            let mut st = self.sync.lock().unwrap();
+            st.live -= 1;
+        }
+    }
+
+    fn worker_loop(self: Arc<Self>, transient: bool) {
+        set_current_worker(Some(Arc::clone(&self)));
+        let timeout = if transient { Some(self.cfg.keepalive) } else { None };
+        loop {
+            match self.queue.pop(timeout) {
+                Popped::Job(job) => self.run_job(job),
+                Popped::Shutdown => break,
+                Popped::TimedOut => break, // transient worker retires
+            }
+        }
+        set_current_worker(None);
+        let mut st = self.sync.lock().unwrap();
+        st.live -= 1;
+    }
+
+    fn run_job(self: &Arc<Self>, job: Job) {
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        self.tasks_executed.fetch_add(1, Ordering::Relaxed);
+        if res.is_err() {
+            // The panic belongs to the task, not the worker. Futures built
+            // on this pool catch their own panics before this point; a bare
+            // spawn that panics is counted and swallowed.
+            self.tasks_panicked.fetch_add(1, Ordering::Relaxed);
+        }
+        self.finish_job_accounting();
+    }
+
+    fn managed_blocking<R>(self: Arc<Self>, f: impl FnOnce() -> R) -> R {
+        self.blocking_sections.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut st = self.sync.lock().unwrap();
+            st.blocked += 1;
+            let running = st.live - st.blocked;
+            let need_compensation = running < self.cfg.parallelism;
+            drop(st);
+            if need_compensation {
+                self.spawn_worker(true);
+            }
+        }
+        // The closure may itself re-enter the executor; keep the worker
+        // marker in place so nested blocking also compensates.
+        let out = f();
+        let mut st = self.sync.lock().unwrap();
+        st.blocked -= 1;
+        out
+    }
+}

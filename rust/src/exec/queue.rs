@@ -1,0 +1,165 @@
+//! The injector queue shared by all workers.
+//!
+//! A `Mutex<VecDeque>` + `Condvar` is deliberately the *baseline*
+//! implementation; the §Perf pass measures it against a sharded variant
+//! (see `benches/ablation_overhead.rs`). At the paper's task granularity
+//! (hundreds of microseconds and up for `stream_big`) the single lock is
+//! nowhere near the bottleneck; at `primes` granularity it is part of the
+//! overhead the paper itself observes (observation 1 in §7).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::Job;
+
+/// FIFO job queue with blocking pop and shutdown support.
+pub struct JobQueue {
+    inner: Mutex<QueueState>,
+    available: Condvar,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// Result of a blocking pop.
+pub enum Popped {
+    /// A job to run.
+    Job(Job),
+    /// The queue was shut down and drained.
+    Shutdown,
+    /// Timed out waiting (used by compensation workers to retire).
+    TimedOut,
+}
+
+impl JobQueue {
+    pub fn new() -> Self {
+        JobQueue {
+            inner: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+        }
+    }
+
+    /// Push a job; wakes one waiting worker. Returns `false` when the
+    /// queue is already shut down (the job is dropped).
+    pub fn push(&self, job: Job) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        if st.shutdown {
+            return false;
+        }
+        st.jobs.push_back(job);
+        drop(st);
+        self.available.notify_one();
+        true
+    }
+
+    /// Blocking pop with an optional timeout.
+    pub fn pop(&self, timeout: Option<Duration>) -> Popped {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if let Some(job) = st.jobs.pop_front() {
+                return Popped::Job(job);
+            }
+            if st.shutdown {
+                return Popped::Shutdown;
+            }
+            match timeout {
+                Some(t) => {
+                    let (g, res) = self.available.wait_timeout(st, t).unwrap();
+                    st = g;
+                    if res.timed_out() && st.jobs.is_empty() {
+                        return if st.shutdown { Popped::Shutdown } else { Popped::TimedOut };
+                    }
+                }
+                None => {
+                    st = self.available.wait(st).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<Job> {
+        self.inner.lock().unwrap().jobs.pop_front()
+    }
+
+    /// Number of queued (not yet started) jobs.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Mark the queue shut down; wakes all waiting workers. Queued jobs
+    /// still drain (workers exit once empty + shutdown).
+    pub fn shutdown(&self) {
+        self.inner.lock().unwrap().shutdown = true;
+        self.available.notify_all();
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.inner.lock().unwrap().shutdown
+    }
+}
+
+impl Default for JobQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn push_pop_fifo() {
+        let q = JobQueue::new();
+        let hit = Arc::new(AtomicBool::new(false));
+        let hit2 = hit.clone();
+        assert!(q.push(Box::new(move || hit2.store(true, Ordering::SeqCst))));
+        match q.pop(None) {
+            Popped::Job(j) => j(),
+            _ => panic!("expected job"),
+        }
+        assert!(hit.load(Ordering::SeqCst));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn shutdown_rejects_push_and_unblocks_pop() {
+        let q = Arc::new(JobQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || matches!(q2.pop(None), Popped::Shutdown));
+        std::thread::sleep(Duration::from_millis(20));
+        q.shutdown();
+        assert!(h.join().unwrap());
+        assert!(!q.push(Box::new(|| {})));
+    }
+
+    #[test]
+    fn timed_pop_times_out() {
+        let q = JobQueue::new();
+        match q.pop(Some(Duration::from_millis(10))) {
+            Popped::TimedOut => {}
+            _ => panic!("expected timeout"),
+        }
+    }
+
+    #[test]
+    fn drains_queued_jobs_after_shutdown() {
+        let q = JobQueue::new();
+        q.push(Box::new(|| {}));
+        q.push(Box::new(|| {}));
+        q.shutdown();
+        assert!(matches!(q.pop(None), Popped::Job(_)));
+        assert!(matches!(q.pop(None), Popped::Job(_)));
+        assert!(matches!(q.pop(None), Popped::Shutdown));
+    }
+}

@@ -1,0 +1,48 @@
+//! # stream-future
+//!
+//! Production-grade reproduction of **"Parallelizing Stream with Future"**
+//! (Raphaël Jolly, 2013): a lazily-evaluated stream whose cons-cell tail
+//! is abstracted over a *suspension monad*, so that substituting `Future`
+//! for `Lazy` turns any stream-expressed algorithm into a pipeline-
+//! parallel one.
+//!
+//! Architecture (three layers):
+//!
+//! * **L3 (this crate)** — the stream/future machinery, the executor, the
+//!   paper's two applications (prime sieve, sparse polynomial
+//!   multiplication), the data-parallel baseline, the chunking extension
+//!   (§7), and the coordinator/benchmark harness that regenerates the
+//!   paper's Table 1 and Figures 3–4.
+//! * **L2 (python/compile/model.py)** — JAX graphs for the dense per-chunk
+//!   block computations, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the block
+//!   outer-product and sieve-mask hot spots, called by L2.
+//!
+//! The [`runtime`] module loads the AOT artifacts via PJRT so the Rust
+//! hot path can offload chunk products; Python never runs at request
+//! time.
+
+pub mod bench_harness;
+pub mod bigint;
+pub mod config;
+pub mod coordinator;
+pub mod exec;
+pub mod logging;
+pub mod metrics;
+pub mod par;
+pub mod poly;
+pub mod rational;
+pub mod runtime;
+pub mod sieve;
+pub mod stream;
+pub mod susp;
+pub mod testkit;
+pub mod workload;
+
+/// The most common imports, bundled.
+pub mod prelude {
+    pub use crate::config::{Config, Mode, Workload};
+    pub use crate::exec::Executor;
+    pub use crate::stream::Stream;
+    pub use crate::susp::{Eval, FutureEval, LazyEval, StrictEval, Susp};
+}

@@ -1,0 +1,72 @@
+//! Logging: a minimal, dependency-light `log` backend.
+//!
+//! Level comes from `SFUT_LOG` (`error|warn|info|debug|trace`, default
+//! `warn`); output is stderr with elapsed-time stamps and thread names,
+//! so pipeline traces read like:
+//!
+//! ```text
+//! [   0.013s INFO  sfut-xla-engine] compiled poly_outer_64x64
+//! [   0.471s DEBUG sfut-driver-stream.par(2)] job finished in 0.45s
+//! ```
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger {
+    start: Instant,
+    level: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata<'_>) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record<'_>) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let thread = std::thread::current();
+        eprintln!(
+            "[{t:>8.3}s {:<5} {}] {}",
+            record.level(),
+            thread.name().unwrap_or("?"),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+/// Install the logger (idempotent). Reads `SFUT_LOG` for the level.
+pub fn init() {
+    let level = match std::env::var("SFUT_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("info") => Level::Info,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Warn,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now(), level });
+    // Err means a logger is already set (tests, double init) — fine.
+    let _ = log::set_logger(logger);
+    log::set_max_level(LevelFilter::Trace.min(level.to_level_filter()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        init();
+        init();
+        log::info!("logging smoke test (visible only with SFUT_LOG=info)");
+    }
+}

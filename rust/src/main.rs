@@ -1,0 +1,215 @@
+//! `sfut` — CLI launcher for the stream-future reproduction.
+//!
+//! ```text
+//! sfut run <workload> <mode> [options]     run one Table-1 cell
+//! sfut table1 [options]                    regenerate Table 1
+//! sfut fig3 [options]                      regenerate Figure 3
+//! sfut fig4 [options]                      regenerate Figure 4
+//! sfut serve [options]                     line-protocol request loop on stdio
+//! sfut info [options]                      platform / artifact / config report
+//!
+//! options:
+//!   --config <file>      TOML-subset config file
+//!   --set <key>=<value>  override one config key (repeatable)
+//!   --scale <f>          shorthand for --set scale=<f>
+//!   --no-kernel          shorthand for --set use_kernel=false
+//!   --samples <n>        bench samples per cell
+//! ```
+//!
+//! (clap is unavailable offline; parsing is hand-rolled and strict —
+//! unknown flags are errors, not surprises.)
+
+use std::io::{stdin, stdout, BufReader};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+use stream_future::bench_harness::paper;
+use stream_future::config::Config;
+use stream_future::coordinator::{serve, JobRequest, Pipeline};
+
+struct Cli {
+    command: String,
+    positional: Vec<String>,
+    config_file: Option<PathBuf>,
+    overrides: Vec<(String, String)>,
+}
+
+fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
+    let command = args.next().unwrap_or_else(|| "help".to_string());
+    let mut cli = Cli {
+        command,
+        positional: Vec::new(),
+        config_file: None,
+        overrides: Vec::new(),
+    };
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--config" => {
+                let v = args.next().context("--config needs a path")?;
+                cli.config_file = Some(PathBuf::from(v));
+            }
+            "--set" => {
+                let v = args.next().context("--set needs key=value")?;
+                let (k, val) = v.split_once('=').context("--set needs key=value")?;
+                cli.overrides.push((k.to_string(), val.to_string()));
+            }
+            "--scale" => {
+                let v = args.next().context("--scale needs a number")?;
+                cli.overrides.push(("scale".to_string(), v));
+            }
+            "--samples" => {
+                let v = args.next().context("--samples needs a number")?;
+                cli.overrides.push(("samples".to_string(), v));
+            }
+            "--no-kernel" => {
+                cli.overrides.push(("use_kernel".to_string(), "false".to_string()));
+            }
+            other if other.starts_with("--") => bail!("unknown flag: {other}"),
+            other => cli.positional.push(other.to_string()),
+        }
+    }
+    Ok(cli)
+}
+
+fn load_config(cli: &Cli) -> Result<Config> {
+    Config::load(cli.config_file.as_deref(), &cli.overrides).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn real_main() -> Result<()> {
+    stream_future::logging::init();
+    let cli = parse_args(std::env::args().skip(1))?;
+    match cli.command.as_str() {
+        "run" => {
+            if cli.positional.len() != 2 {
+                bail!("usage: sfut run <workload> <mode>");
+            }
+            let cfg = load_config(&cli)?;
+            let pipeline = Pipeline::new(cfg)?;
+            let req = JobRequest::parse(&cli.positional.join(" "))
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let result = pipeline.run(&req)?;
+            println!("{}", result.render_line());
+            if !result.verified {
+                bail!("result failed verification against the oracle");
+            }
+            Ok(())
+        }
+        "table1" => {
+            let cfg = load_config(&cli)?;
+            let report = paper::table1(&cfg)?;
+            print!("{report}");
+            Ok(())
+        }
+        "fig3" => {
+            let cfg = load_config(&cli)?;
+            let report = paper::fig3(&cfg)?;
+            print!("{report}");
+            Ok(())
+        }
+        "fig4" => {
+            let cfg = load_config(&cli)?;
+            let report = paper::fig4(&cfg)?;
+            print!("{report}");
+            Ok(())
+        }
+        "serve" => {
+            let cfg = load_config(&cli)?;
+            let pipeline = Pipeline::new(cfg)?;
+            if let Some(addr) = cli.positional.first() {
+                // `sfut serve <addr>` — TCP mode; runs until killed.
+                let server = stream_future::coordinator::TcpServer::start(
+                    std::sync::Arc::new(pipeline),
+                    addr.as_str(),
+                )?;
+                eprintln!("sfut serve: listening on {}", server.local_addr());
+                loop {
+                    std::thread::sleep(std::time::Duration::from_secs(3600));
+                }
+            }
+            eprintln!("sfut serve: type `help` for commands");
+            let jobs = serve(&pipeline, BufReader::new(stdin()), stdout())?;
+            eprintln!("served {jobs} jobs");
+            Ok(())
+        }
+        "info" => {
+            let cfg = load_config(&cli)?;
+            println!("config: {cfg:#?}");
+            let pipeline = Pipeline::new(cfg)?;
+            match pipeline.engine() {
+                Some(engine) => {
+                    println!("pjrt platform: {}", engine.platform());
+                    println!("poly artifacts: {:?}", engine.poly_shapes());
+                    println!("sieve artifacts: {:?}", engine.sieve_shapes());
+                }
+                None => println!("pjrt engine: disabled (no artifacts or use_kernel=false)"),
+            }
+            println!(
+                "machine parallelism: {}",
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            );
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!(
+                "sfut — reproduction of 'Parallelizing Stream with Future' (Jolly, 2013)\n\
+                 \n\
+                 usage: sfut <command> [options]\n\
+                 \n\
+                 commands:\n\
+                 \x20 run <workload> <mode>   run one Table-1 cell (e.g. `run stream_big par(2)`)\n\
+                 \x20 table1                  regenerate the paper's Table 1\n\
+                 \x20 fig3                    regenerate Figure 3 (primes chart)\n\
+                 \x20 fig4                    regenerate Figure 4 (polynomial chart)\n\
+                 \x20 serve                   request loop on stdin/stdout\n\
+                 \x20 info                    platform / artifact / config report\n\
+                 \n\
+                 options: --config <file> | --set k=v | --scale <f> | --samples <n> | --no-kernel\n\
+                 workloads: primes primes_x3 stream stream_big list list_big chunked chunked_big\n\
+                 modes: seq strict par(N)"
+            );
+            Ok(())
+        }
+        other => bail!("unknown command: {other} (try `sfut help`)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> impl Iterator<Item = String> + '_ {
+        s.split_whitespace().map(str::to_string)
+    }
+
+    #[test]
+    fn parses_run_command() {
+        let cli = parse_args(args("run primes seq --scale 0.5 --no-kernel")).unwrap();
+        assert_eq!(cli.command, "run");
+        assert_eq!(cli.positional, vec!["primes", "seq"]);
+        assert!(cli.overrides.contains(&("scale".to_string(), "0.5".to_string())));
+        assert!(cli.overrides.contains(&("use_kernel".to_string(), "false".to_string())));
+    }
+
+    #[test]
+    fn rejects_unknown_flags() {
+        assert!(parse_args(args("run --frobnicate")).is_err());
+        assert!(parse_args(args("table1 --set novalue")).is_err());
+    }
+
+    #[test]
+    fn set_splits_on_first_equals() {
+        let cli = parse_args(args("run --set artifacts_dir=/a/b=c")).unwrap();
+        assert_eq!(cli.overrides[0], ("artifacts_dir".to_string(), "/a/b=c".to_string()));
+    }
+}

@@ -1,0 +1,129 @@
+//! Log-bucketed latency histogram (HdrHistogram-lite).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Power-of-two-bucketed histogram of nanosecond values. 64 buckets cover
+/// 1 ns .. ~584 years; enough resolution for percentile reporting in the
+//  bench harness.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(nanos: u64) -> usize {
+        (64 - nanos.max(1).leading_zeros() as usize) - 1
+    }
+
+    pub fn record(&self, d: Duration) {
+        let n = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.buckets[Self::bucket_of(n)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(n, Ordering::Relaxed);
+        self.max.fetch_max(n, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max.load(Ordering::Relaxed))
+    }
+
+    /// Upper bound of the bucket containing the q-quantile (0.0..=1.0).
+    /// Resolution is one power of two — good enough to tell 1 µs from
+    /// 100 µs task grain, which is what the paper's observation 1 needs.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((total as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_nanos(1u64 << (i + 1).min(63));
+            }
+        }
+        self.max()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("mean", &self.mean())
+            .field("p50", &self.quantile(0.5))
+            .field("p99", &self.quantile(0.99))
+            .field("max", &self.max())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn records_and_buckets() {
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record(Duration::from_nanos(1000)); // bucket ~2^9
+        }
+        h.record(Duration::from_millis(10)); // outlier
+        assert_eq!(h.count(), 101);
+        // p50 should be near 1 µs (within its power-of-two bucket).
+        assert!(h.quantile(0.5) <= Duration::from_nanos(2048));
+        // p100 catches the outlier.
+        assert!(h.quantile(1.0) >= Duration::from_millis(8));
+        assert!(h.max() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn bucket_of_boundaries() {
+        assert_eq!(Histogram::bucket_of(1), 0);
+        assert_eq!(Histogram::bucket_of(2), 1);
+        assert_eq!(Histogram::bucket_of(3), 1);
+        assert_eq!(Histogram::bucket_of(4), 2);
+        assert_eq!(Histogram::bucket_of(u64::MAX), 63);
+        // zero clamps to bucket 0 rather than panicking
+        assert_eq!(Histogram::bucket_of(0), 0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Lightweight metrics: counters, gauges, timers and a registry that the
+//! coordinator and benchmark harness use to report per-stage statistics.
+//!
+//! Everything is lock-free on the hot path (atomics); rendering snapshots
+//! takes the registry lock only.
+
+mod histogram;
+mod registry;
+
+pub use histogram::Histogram;
+pub use registry::{MetricsRegistry, Snapshot};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Counter(AtomicU64::new(0)))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (e.g. queue depth).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Gauge(AtomicU64::new(0)))
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Accumulates total nanoseconds and event count; reports mean latency.
+#[derive(Debug, Default)]
+pub struct Timer {
+    nanos: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Timer {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Timer::default())
+    }
+
+    /// Time a closure.
+    pub fn time<R>(&self, f: impl FnOnce() -> R) -> R {
+        let start = Instant::now();
+        let out = f();
+        self.record(start.elapsed());
+        out
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn total(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::Relaxed))
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            Duration::ZERO
+        } else {
+            self.total() / c as u32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn gauge_overwrites() {
+        let g = Gauge::new();
+        g.set(10);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn timer_records() {
+        let t = Timer::new();
+        let out = t.time(|| {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(out, 42);
+        assert_eq!(t.count(), 1);
+        assert!(t.total() >= Duration::from_millis(4));
+        assert!(t.mean() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn timer_mean_of_zero_events_is_zero() {
+        let t = Timer::new();
+        assert_eq!(t.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn counter_is_thread_safe() {
+        let c = Counter::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 8000);
+    }
+}

@@ -1,0 +1,146 @@
+//! Named metric registry + snapshot rendering.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::{Counter, Gauge, Histogram, Timer};
+
+/// Central registry the coordinator publishes metrics through. Cheap to
+/// clone (shared).
+#[derive(Clone, Default)]
+pub struct MetricsRegistry {
+    inner: Arc<Mutex<Inner>>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    timers: BTreeMap<String, Arc<Timer>>,
+    histograms: BTreeMap<String, Arc<Histogram>>,
+}
+
+/// Point-in-time view of every metric, ready for rendering.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, u64>,
+    /// name -> (count, mean)
+    pub timers: BTreeMap<String, (u64, Duration)>,
+    /// name -> (count, mean, p50, p99, max)
+    pub histograms: BTreeMap<String, (u64, Duration, Duration, Duration, Duration)>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.counters.entry(name.to_string()).or_insert_with(Counter::new).clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.gauges.entry(name.to_string()).or_insert_with(Gauge::new).clone()
+    }
+
+    pub fn timer(&self, name: &str) -> Arc<Timer> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.timers.entry(name.to_string()).or_insert_with(Timer::new).clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let inner = self.inner.lock().unwrap();
+        Snapshot {
+            counters: inner.counters.iter().map(|(k, v)| (k.clone(), v.get())).collect(),
+            gauges: inner.gauges.iter().map(|(k, v)| (k.clone(), v.get())).collect(),
+            timers: inner
+                .timers
+                .iter()
+                .map(|(k, v)| (k.clone(), (v.count(), v.mean())))
+                .collect(),
+            histograms: inner
+                .histograms
+                .iter()
+                .map(|(k, v)| {
+                    (
+                        k.clone(),
+                        (v.count(), v.mean(), v.quantile(0.5), v.quantile(0.99), v.max()),
+                    )
+                })
+                .collect(),
+        }
+    }
+}
+
+impl Snapshot {
+    /// Human-readable multi-line report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("counter  {k:<40} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("gauge    {k:<40} {v}\n"));
+        }
+        for (k, (n, mean)) in &self.timers {
+            out.push_str(&format!("timer    {k:<40} n={n} mean={mean:?}\n"));
+        }
+        for (k, (n, mean, p50, p99, max)) in &self.histograms {
+            out.push_str(&format!(
+                "hist     {k:<40} n={n} mean={mean:?} p50={p50:?} p99={p99:?} max={max:?}\n"
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_name_returns_same_metric() {
+        let reg = MetricsRegistry::new();
+        reg.counter("a").inc();
+        reg.counter("a").inc();
+        assert_eq!(reg.counter("a").get(), 2);
+    }
+
+    #[test]
+    fn snapshot_contains_all_kinds() {
+        let reg = MetricsRegistry::new();
+        reg.counter("c").add(3);
+        reg.gauge("g").set(7);
+        reg.timer("t").record(Duration::from_micros(5));
+        reg.histogram("h").record(Duration::from_micros(9));
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters["c"], 3);
+        assert_eq!(snap.gauges["g"], 7);
+        assert_eq!(snap.timers["t"].0, 1);
+        assert_eq!(snap.histograms["h"].0, 1);
+        let text = snap.render();
+        assert!(text.contains("counter"));
+        assert!(text.contains("hist"));
+    }
+
+    #[test]
+    fn registry_clone_shares_state() {
+        let reg = MetricsRegistry::new();
+        let reg2 = reg.clone();
+        reg.counter("shared").inc();
+        assert_eq!(reg2.snapshot().counters["shared"], 1);
+    }
+}

@@ -1,0 +1,154 @@
+//! Data-parallel collections substrate — the paper's *control* technique.
+//!
+//! The `list` / `list_big` rows of Table 1 use "a more classical
+//! parallelization technique, based on parallel collections" [4,8]:
+//! SIMD-style data parallelism (one operation applied independently to
+//! many elements), in contrast to the stream pipeline's task parallelism.
+//! Scala gets this from `par`; offline Rust gets it here: fork-join
+//! `par_map` and `par_reduce` over an [`Executor`].
+
+use crate::exec::Executor;
+use crate::susp::{Fut, Susp};
+
+/// Apply `f` to every element, fanning chunks out over `exec`.
+/// Preserves order.
+pub fn par_map<T, U, F>(exec: &Executor, items: &[T], f: F) -> Vec<U>
+where
+    T: Clone + Send + Sync + 'static,
+    U: Clone + Send + Sync + 'static,
+    F: Fn(&T) -> U + Send + Sync + Clone + 'static,
+{
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let chunk = split_size(items.len(), exec.parallelism());
+    let futs: Vec<Fut<Vec<U>>> = items
+        .chunks(chunk)
+        .map(|c| {
+            let c = c.to_vec();
+            let f = f.clone();
+            Fut::spawn(exec, move || c.iter().map(&f).collect())
+        })
+        .collect();
+    let mut out = Vec::with_capacity(items.len());
+    for fut in futs {
+        out.extend(fut.force().iter().cloned());
+    }
+    out
+}
+
+/// Tree-reduce with an associative `merge`; `identity` for the empty
+/// input. Matches how Scala's aggregate combines per-chunk results.
+pub fn par_reduce<T, F>(exec: &Executor, mut items: Vec<T>, identity: T, merge: F) -> T
+where
+    T: Clone + Send + Sync + 'static,
+    F: Fn(&T, &T) -> T + Send + Sync + Clone + 'static,
+{
+    if items.is_empty() {
+        return identity;
+    }
+    while items.len() > 1 {
+        let mut next: Vec<Fut<T>> = Vec::with_capacity(items.len().div_ceil(2));
+        let mut it = items.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => {
+                    let merge = merge.clone();
+                    next.push(Fut::spawn(exec, move || merge(&a, &b)));
+                }
+                None => next.push(Fut::ready(exec, a)),
+            }
+        }
+        items = next.into_iter().map(|f| f.force().clone()).collect();
+    }
+    items.pop().unwrap()
+}
+
+/// `par_map` then `par_reduce` without materializing twice.
+pub fn par_map_reduce<T, U, F, M>(
+    exec: &Executor,
+    items: &[T],
+    f: F,
+    identity: U,
+    merge: M,
+) -> U
+where
+    T: Clone + Send + Sync + 'static,
+    U: Clone + Send + Sync + 'static,
+    F: Fn(&T) -> U + Send + Sync + Clone + 'static,
+    M: Fn(&U, &U) -> U + Send + Sync + Clone + 'static,
+{
+    let mapped = par_map(exec, items, f);
+    par_reduce(exec, mapped, identity, merge)
+}
+
+/// Chunk size giving ~4 chunks per worker (limits stragglers without
+/// drowning the queue).
+fn split_size(len: usize, parallelism: usize) -> usize {
+    (len / (parallelism * 4).max(1)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let ex = Executor::new(4);
+        let xs: Vec<u64> = (0..1000).collect();
+        let got = par_map(&ex, &xs, |x| x * x + 1);
+        let want: Vec<u64> = xs.iter().map(|x| x * x + 1).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let ex = Executor::new(2);
+        let got: Vec<u64> = par_map(&ex, &[] as &[u64], |x| *x);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn par_map_single_worker() {
+        let ex = Executor::new(1);
+        let xs: Vec<u32> = (0..50).collect();
+        assert_eq!(par_map(&ex, &xs, |x| x + 1), (1..51).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_reduce_sums() {
+        let ex = Executor::new(4);
+        let xs: Vec<u64> = (1..=100).collect();
+        let got = par_reduce(&ex, xs, 0, |a, b| a + b);
+        assert_eq!(got, 5050);
+    }
+
+    #[test]
+    fn par_reduce_empty_gives_identity() {
+        let ex = Executor::new(2);
+        assert_eq!(par_reduce(&ex, Vec::<u64>::new(), 42, |a, b| a + b), 42);
+    }
+
+    #[test]
+    fn par_reduce_single() {
+        let ex = Executor::new(2);
+        assert_eq!(par_reduce(&ex, vec![7u64], 0, |a, b| a + b), 7);
+    }
+
+    #[test]
+    fn par_map_reduce_composes() {
+        let ex = Executor::new(3);
+        let xs: Vec<u64> = (0..37).collect();
+        let got = par_map_reduce(&ex, &xs, |x| x * 2, 0, |a, b| a + b);
+        assert_eq!(got, 36 * 37);
+    }
+
+    #[test]
+    fn order_preserved_with_odd_sizes() {
+        let ex = Executor::new(5);
+        for len in [1usize, 2, 3, 17, 101] {
+            let xs: Vec<usize> = (0..len).collect();
+            assert_eq!(par_map(&ex, &xs, |x| *x), xs, "len={len}");
+        }
+    }
+}

@@ -1,0 +1,303 @@
+//! Chunked polynomial multiplication — the §7 improvement hypothesis
+//! ("grouping [elementary computations] in bigger chunks may provide
+//! better efficiency"), implemented and evaluated (benches A1/A2).
+//!
+//! The elementary unit becomes a *block pair*: a block of `x` terms × a
+//! block of `y` terms produces all `Bx·By` pairwise term products in one
+//! task. The dense inner computation (exponent broadcast-add +
+//! coefficient outer product) is behind [`BlockMultiplier`], so the
+//! AOT-compiled Pallas kernel (`runtime::KernelMultiplier`) can take it
+//! on the hot path; [`RustMultiplier`] is the portable fallback and the
+//! oracle.
+//!
+//! The kernel carries coefficients in `f64` lanes, which is exact only
+//! while every pairwise product stays within ±2⁵³. Each block pair is
+//! checked ([`TermBlock::kernel_exact_with`]); ineligible pairs (the
+//! `_big` BigInt workloads) automatically take the generic path — this
+//! is also measured, as A2's crossover.
+
+use std::sync::Arc;
+
+use super::{Coeff, Monomial, Polynomial, Term};
+use crate::stream::Stream;
+use crate::susp::Eval;
+
+/// A dense block of terms in struct-of-arrays layout, matching the AOT
+/// kernel's calling convention: `exps` is row-major `[count × nvars]`
+/// `i32`, `coefs` is `[count]` `f64`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TermBlock {
+    pub nvars: usize,
+    pub exps: Vec<i32>,
+    pub coefs: Vec<f64>,
+}
+
+impl TermBlock {
+    pub fn count(&self) -> usize {
+        self.coefs.len()
+    }
+
+    /// Pack generic terms; `None` if any coefficient is not exactly
+    /// representable in `f64`.
+    pub fn pack<C: Coeff>(nvars: usize, terms: &[Term<C>]) -> Option<TermBlock> {
+        let mut exps = Vec::with_capacity(terms.len() * nvars);
+        let mut coefs = Vec::with_capacity(terms.len());
+        for (m, c) in terms {
+            debug_assert_eq!(m.nvars(), nvars);
+            exps.extend(m.exps().iter().map(|&e| e as i32));
+            coefs.push(c.to_exact_f64()?);
+        }
+        Some(TermBlock { nvars, exps, coefs })
+    }
+
+    /// Unpack into generic terms; `None` if any coefficient fails the
+    /// exact reverse conversion.
+    pub fn unpack<C: Coeff>(&self) -> Option<Vec<Term<C>>> {
+        let mut out = Vec::with_capacity(self.count());
+        for i in 0..self.count() {
+            let exps: Vec<u16> = self.exps[i * self.nvars..(i + 1) * self.nvars]
+                .iter()
+                .map(|&e| u16::try_from(e).ok())
+                .collect::<Option<_>>()?;
+            let c = C::from_exact_f64(self.coefs[i])?;
+            out.push((Monomial::from_exps(exps), c));
+        }
+        Some(out)
+    }
+
+    /// Would every pairwise coefficient product of `self × other` stay
+    /// exact in f64?
+    pub fn kernel_exact_with(&self, other: &TermBlock) -> bool {
+        let max_a = self.coefs.iter().fold(0f64, |m, c| m.max(c.abs()));
+        let max_b = other.coefs.iter().fold(0f64, |m, c| m.max(c.abs()));
+        max_a * max_b <= 9_007_199_254_740_992.0 // 2^53
+    }
+}
+
+/// Dense per-block-pair outer product. Implementations must return
+/// exactly `x.count() * y.count()` products in row-major order
+/// (`out[i*ny + j] = x[i] * y[j]`).
+pub trait BlockMultiplier: Send + Sync + 'static {
+    fn outer_product(&self, x: &TermBlock, y: &TermBlock) -> TermBlock;
+
+    /// Diagnostic name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Largest block rows supported per side (AOT artifacts have fixed
+    /// shapes; the chunker respects this).
+    fn max_block(&self) -> usize {
+        usize::MAX
+    }
+}
+
+/// Portable scalar implementation — the oracle the kernel is tested
+/// against, and the fallback when artifacts are absent or a block is
+/// not exactly representable.
+pub struct RustMultiplier;
+
+impl BlockMultiplier for RustMultiplier {
+    fn outer_product(&self, x: &TermBlock, y: &TermBlock) -> TermBlock {
+        assert_eq!(x.nvars, y.nvars, "mixed variable counts");
+        let v = x.nvars;
+        let (nx, ny) = (x.count(), y.count());
+        let mut exps = Vec::with_capacity(nx * ny * v);
+        let mut coefs = Vec::with_capacity(nx * ny);
+        for i in 0..nx {
+            let xe = &x.exps[i * v..(i + 1) * v];
+            for j in 0..ny {
+                let ye = &y.exps[j * v..(j + 1) * v];
+                exps.extend(xe.iter().zip(ye).map(|(&a, &b)| a + b));
+                coefs.push(x.coefs[i] * y.coefs[j]);
+            }
+        }
+        TermBlock { nvars: v, exps, coefs }
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-scalar"
+    }
+}
+
+/// Generic (ring-exact) pairwise block product, used when the f64 path
+/// is not exact.
+fn generic_block_product<C: Coeff>(
+    nvars: usize,
+    xs: &[Term<C>],
+    ys: &[Term<C>],
+) -> Polynomial<C> {
+    let mut terms = Vec::with_capacity(xs.len() * ys.len());
+    for (mx, cx) in xs {
+        for (my, cy) in ys {
+            terms.push((mx.mul(my), cx.mul(cy)));
+        }
+    }
+    Polynomial::from_terms(nvars, terms)
+}
+
+/// Chunked product: blocks of `x` × blocks of `y`, one suspension (task)
+/// per block pair, partial products merged by sorted addition.
+pub fn chunked_times<C: Coeff, E: Eval>(
+    eval: &E,
+    x: &Polynomial<C>,
+    y: &Polynomial<C>,
+    chunk_size: usize,
+    multiplier: Arc<dyn BlockMultiplier>,
+) -> Polynomial<C> {
+    assert_eq!(x.nvars(), y.nvars(), "mixed variable counts");
+    assert!(chunk_size > 0, "chunk_size must be positive");
+    let nvars = x.nvars();
+    if x.is_zero() || y.is_zero() {
+        return Polynomial::zero(nvars);
+    }
+    let chunk = chunk_size.min(multiplier.max_block());
+
+    let x_blocks: Vec<Arc<Vec<Term<C>>>> =
+        x.terms().chunks(chunk).map(|c| Arc::new(c.to_vec())).collect();
+    let y_blocks: Vec<Arc<Vec<Term<C>>>> =
+        y.terms().chunks(chunk).map(|c| Arc::new(c.to_vec())).collect();
+
+    // All block pairs, streamed: one task per pair under Future.
+    let pairs: Vec<(Arc<Vec<Term<C>>>, Arc<Vec<Term<C>>>)> = x_blocks
+        .iter()
+        .flat_map(|bx| y_blocks.iter().map(move |by| (Arc::clone(bx), Arc::clone(by))))
+        .collect();
+
+    let mult = Arc::clone(&multiplier);
+    let partials: Stream<Polynomial<C>, E> = Stream::from_vec(eval.clone(), pairs)
+        .map_elems(move |(bx, by)| block_pair_product(nvars, bx, by, &*mult));
+
+    // Sequential sorted merge of the pipeline's outputs.
+    partials.fold(Polynomial::zero(nvars), |acc, p| acc.add(p))
+}
+
+fn block_pair_product<C: Coeff>(
+    nvars: usize,
+    bx: &Arc<Vec<Term<C>>>,
+    by: &Arc<Vec<Term<C>>>,
+    multiplier: &dyn BlockMultiplier,
+) -> Polynomial<C> {
+    // Try the dense f64 path (kernel-offloadable).
+    if let (Some(px), Some(py)) = (TermBlock::pack(nvars, bx), TermBlock::pack(nvars, by)) {
+        if px.kernel_exact_with(&py) {
+            let out = multiplier.outer_product(&px, &py);
+            debug_assert_eq!(out.count(), px.count() * py.count());
+            if let Some(terms) = out.unpack::<C>() {
+                return Polynomial::from_terms(nvars, terms);
+            }
+        }
+    }
+    // Ring-exact fallback (BigInt / overflow-risk blocks).
+    generic_block_product(nvars, bx, by)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bigint::BigInt;
+    use crate::exec::Executor;
+    use crate::poly::parse_polynomial;
+    use crate::susp::{FutureEval, LazyEval};
+    use crate::testkit::prop::{runner, Gen};
+
+    fn p(s: &str) -> Polynomial<i64> {
+        parse_polynomial(s, &["x", "y", "z"]).unwrap()
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let a = p("3*x^2*y - 4*z + 7");
+        let block = TermBlock::pack(3, a.terms()).unwrap();
+        assert_eq!(block.count(), 3);
+        let back: Vec<Term<i64>> = block.unpack().unwrap();
+        assert_eq!(back, a.terms());
+    }
+
+    #[test]
+    fn pack_rejects_inexact() {
+        let huge = Polynomial::constant(2, (1i64 << 53) + 1);
+        assert!(TermBlock::pack(2, huge.terms()).is_none());
+    }
+
+    #[test]
+    fn unpack_rejects_fractional() {
+        let b = TermBlock { nvars: 1, exps: vec![0], coefs: vec![0.5] };
+        assert!(b.unpack::<i64>().is_none());
+    }
+
+    #[test]
+    fn kernel_exactness_guard() {
+        let small = TermBlock { nvars: 1, exps: vec![0], coefs: vec![1e6] };
+        let big = TermBlock { nvars: 1, exps: vec![0], coefs: vec![1e12] };
+        assert!(small.kernel_exact_with(&small));
+        assert!(!big.kernel_exact_with(&big));
+    }
+
+    #[test]
+    fn rust_multiplier_outer_product() {
+        let x = TermBlock { nvars: 2, exps: vec![1, 0, 0, 1], coefs: vec![2.0, 3.0] };
+        let y = TermBlock { nvars: 2, exps: vec![1, 1], coefs: vec![5.0] };
+        let out = RustMultiplier.outer_product(&x, &y);
+        assert_eq!(out.count(), 2);
+        assert_eq!(out.exps, vec![2, 1, 1, 2]);
+        assert_eq!(out.coefs, vec![10.0, 15.0]);
+    }
+
+    #[test]
+    fn chunked_matches_classical() {
+        let a = p("1 + x + y + z").pow(4);
+        let b = a.add(&Polynomial::one(3));
+        let want = a.mul(&b);
+        for chunk in [1, 2, 7, 64, 1000] {
+            let got = chunked_times(&LazyEval, &a, &b, chunk, Arc::new(RustMultiplier));
+            assert_eq!(got, want, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn chunked_future_matches() {
+        let a = p("1 + x + y + z").pow(5);
+        let b = a.clone();
+        let want = a.mul(&b);
+        let ex = Executor::new(4);
+        let eval = FutureEval::new(ex);
+        assert_eq!(chunked_times(&eval, &a, &b, 32, Arc::new(RustMultiplier)), want);
+    }
+
+    #[test]
+    fn chunked_bigint_takes_generic_path() {
+        let factor = BigInt::from(100_000_000_001i64);
+        let a = p("1 + x + y").pow(3).map_coeffs(|c| BigInt::from(*c).mul(&factor));
+        let b = a.clone();
+        let want = a.mul(&b);
+        let got = chunked_times(&LazyEval, &a, &b, 16, Arc::new(RustMultiplier));
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn zero_operands() {
+        let a = p("x + 1");
+        let z = Polynomial::<i64>::zero(3);
+        assert!(chunked_times(&LazyEval, &a, &z, 8, Arc::new(RustMultiplier)).is_zero());
+        assert!(chunked_times(&LazyEval, &z, &a, 8, Arc::new(RustMultiplier)).is_zero());
+    }
+
+    #[test]
+    fn prop_chunked_equals_classical() {
+        let mut r = runner(40);
+        r.run(|g: &mut Gen| {
+            let a = random_poly(g, 2, 9);
+            let b = random_poly(g, 2, 9);
+            let chunk = g.usize_in(1..10);
+            let got = chunked_times(&LazyEval, &a, &b, chunk, Arc::new(RustMultiplier));
+            assert_eq!(got, a.mul(&b), "a={a} b={b} chunk={chunk}");
+        });
+    }
+
+    fn random_poly(g: &mut Gen, nvars: usize, max_terms: usize) -> Polynomial<i64> {
+        let terms = g.vec(0..max_terms.max(1), |g| {
+            let exps: Vec<u16> = (0..nvars).map(|_| g.u32_in(0..5) as u16).collect();
+            (Monomial::from_exps(exps), g.i64_in(-9..=9))
+        });
+        Polynomial::from_terms(nvars, terms)
+    }
+}

@@ -1,0 +1,239 @@
+//! Polynomial division: term divisibility, multivariate division with
+//! remainder, exact division, derivatives and evaluation — the algebra
+//! the Gröbner application (and the test suite's inverses) needs.
+
+use super::{Coeff, Monomial, Polynomial};
+
+impl Monomial {
+    /// Does `self` divide `other` (componentwise `≤`)?
+    pub fn divides(&self, other: &Monomial) -> bool {
+        debug_assert_eq!(self.nvars(), other.nvars());
+        self.exps().iter().zip(other.exps()).all(|(&a, &b)| a <= b)
+    }
+
+    /// `self / other`; caller guarantees `other.divides(self)`.
+    pub fn div(&self, other: &Monomial) -> Monomial {
+        debug_assert!(other.divides(self), "{other} does not divide {self}");
+        Monomial::from_exps(
+            self.exps().iter().zip(other.exps()).map(|(&a, &b)| a - b).collect(),
+        )
+    }
+
+    /// Least common multiple (componentwise max) — the S-polynomial's
+    /// pivot monomial.
+    pub fn lcm(&self, other: &Monomial) -> Monomial {
+        debug_assert_eq!(self.nvars(), other.nvars());
+        Monomial::from_exps(
+            self.exps().iter().zip(other.exps()).map(|(&a, &b)| a.max(b)).collect(),
+        )
+    }
+
+    /// Are the two monomials coprime (disjoint support)? Buchberger's
+    /// first criterion skips such pairs.
+    pub fn coprime(&self, other: &Monomial) -> bool {
+        self.exps().iter().zip(other.exps()).all(|(&a, &b)| a == 0 || b == 0)
+    }
+}
+
+/// A field-like coefficient: adds exact division. Implemented for `f64`
+/// and for rationals-over-i64 workloads via exact integer division when
+/// it is exact (panics otherwise — the Gröbner example uses f64).
+pub trait FieldCoeff: Coeff {
+    fn div(&self, other: &Self) -> Self;
+}
+
+impl FieldCoeff for f64 {
+    fn div(&self, other: &Self) -> Self {
+        self / other
+    }
+}
+
+impl<C: Coeff> Polynomial<C> {
+    /// Formal partial derivative with respect to variable `var`.
+    pub fn derivative(&self, var: usize) -> Polynomial<C>
+    where
+        C: From<i64>,
+    {
+        assert!(var < self.nvars(), "variable index out of range");
+        let terms = self
+            .terms()
+            .iter()
+            .filter(|(m, _)| m.exps()[var] > 0)
+            .map(|(m, c)| {
+                let e = m.exps()[var];
+                let mut exps = m.exps().to_vec();
+                exps[var] = e - 1;
+                (Monomial::from_exps(exps), c.mul(&C::from(e as i64)))
+            })
+            .collect();
+        Polynomial::from_terms(self.nvars(), terms)
+    }
+
+    /// Evaluate at a point (Horner-free straightforward evaluation; the
+    /// workloads are sparse so per-term powering is fine).
+    pub fn eval(&self, point: &[C]) -> C {
+        assert_eq!(point.len(), self.nvars(), "point arity mismatch");
+        let mut acc = C::zero();
+        for (m, c) in self.terms() {
+            let mut term = c.clone();
+            for (i, &e) in m.exps().iter().enumerate() {
+                for _ in 0..e {
+                    term = term.mul(&point[i]);
+                }
+            }
+            acc = acc.add(&term);
+        }
+        acc
+    }
+}
+
+impl<C: FieldCoeff> Polynomial<C> {
+    /// Multivariate division with remainder by a list of divisors
+    /// (the generalized division algorithm): returns `(quotients, r)`
+    /// with `self = Σ qᵢ·dᵢ + r` and no term of `r` divisible by any
+    /// divisor's leading monomial.
+    pub fn div_rem(&self, divisors: &[Polynomial<C>]) -> (Vec<Polynomial<C>>, Polynomial<C>) {
+        assert!(!divisors.is_empty(), "need at least one divisor");
+        for d in divisors {
+            assert!(!d.is_zero(), "division by the zero polynomial");
+            assert_eq!(d.nvars(), self.nvars(), "mixed variable counts");
+        }
+        let nvars = self.nvars();
+        let mut quotients = vec![Polynomial::zero(nvars); divisors.len()];
+        let mut remainder = Polynomial::zero(nvars);
+        let mut p = self.clone();
+        while let Some((lm, lc)) = p.leading().map(|(m, c)| (m.clone(), c.clone())) {
+            let mut reduced = false;
+            for (i, d) in divisors.iter().enumerate() {
+                let (dm, dc) = d.leading().expect("nonzero divisor");
+                if dm.divides(&lm) {
+                    let qm = lm.div(dm);
+                    let qc = FieldCoeff::div(&lc, dc);
+                    let qterm = Polynomial::from_terms(nvars, vec![(qm.clone(), qc.clone())]);
+                    quotients[i] = quotients[i].add(&qterm);
+                    p = p.sub(&d.mul_term(&qm, &qc));
+                    reduced = true;
+                    break;
+                }
+            }
+            if !reduced {
+                // Leading term is irreducible: move it to the remainder.
+                let head = Polynomial::from_terms(nvars, vec![(lm.clone(), lc.clone())]);
+                remainder = remainder.add(&head);
+                p = p.sub(&head);
+            }
+        }
+        (quotients, remainder)
+    }
+
+    /// Normal form of `self` modulo `divisors` (the remainder only).
+    pub fn normal_form(&self, divisors: &[Polynomial<C>]) -> Polynomial<C> {
+        self.div_rem(divisors).1
+    }
+
+    /// Scale so the leading coefficient is 1.
+    pub fn monic(&self) -> Polynomial<C> {
+        match self.leading() {
+            None => self.clone(),
+            Some((_, lc)) => {
+                let inv_scale = lc.clone();
+                self.map_coeffs(|c| FieldCoeff::div(c, &inv_scale))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::parse_polynomial;
+
+    const XY: &[&str] = &["x", "y"];
+
+    fn p(s: &str) -> Polynomial<f64> {
+        parse_polynomial(s, XY).unwrap()
+    }
+
+    #[test]
+    fn monomial_divides_div_lcm() {
+        let a = Monomial::from_exps(vec![1, 2]);
+        let b = Monomial::from_exps(vec![2, 2]);
+        assert!(a.divides(&b));
+        assert!(!b.divides(&a));
+        assert_eq!(b.div(&a), Monomial::from_exps(vec![1, 0]));
+        assert_eq!(a.lcm(&b), b);
+        let c = Monomial::from_exps(vec![0, 3]);
+        let d = Monomial::from_exps(vec![2, 0]);
+        assert!(c.coprime(&d));
+        assert!(!a.coprime(&b));
+    }
+
+    #[test]
+    fn division_identity_holds() {
+        let f = p("x^2*y + x*y^2 + y^2");
+        let d1 = p("x*y - 1");
+        let d2 = p("y^2 - 1");
+        let (qs, r) = f.div_rem(&[d1.clone(), d2.clone()]);
+        // f = q1*d1 + q2*d2 + r (the CLO textbook example).
+        let recombined = qs[0].mul(&d1).add(&qs[1].mul(&d2)).add(&r);
+        assert_eq!(recombined, f);
+        // No remainder term divisible by a leading monomial.
+        for (m, _) in r.terms() {
+            assert!(!d1.leading().unwrap().0.divides(m));
+            assert!(!d2.leading().unwrap().0.divides(m));
+        }
+    }
+
+    #[test]
+    fn exact_division_has_zero_remainder() {
+        let a = p("x + y + 1");
+        let b = p("x - y + 2");
+        let prod = a.mul(&b);
+        let (qs, r) = prod.div_rem(&[a.clone()]);
+        assert!(r.is_zero());
+        assert_eq!(qs[0], b);
+    }
+
+    #[test]
+    fn normal_form_of_member_is_zero() {
+        let d = p("x^2 - y");
+        let f = d.mul(&p("3*x*y + 7"));
+        assert!(f.normal_form(&[d]).is_zero());
+    }
+
+    #[test]
+    fn derivative_rules() {
+        let f: Polynomial<i64> =
+            parse_polynomial("x^3 + 2*x*y^2 + 5*y + 7", XY).unwrap();
+        assert_eq!(
+            f.derivative(0),
+            parse_polynomial::<i64>("3*x^2 + 2*y^2", XY).unwrap()
+        );
+        assert_eq!(
+            f.derivative(1),
+            parse_polynomial::<i64>("4*x*y + 5", XY).unwrap()
+        );
+        // d/dx of a constant is zero.
+        let k: Polynomial<i64> = parse_polynomial("42", XY).unwrap();
+        assert!(k.derivative(0).is_zero());
+    }
+
+    #[test]
+    fn eval_matches_hand_computation() {
+        let f: Polynomial<i64> = parse_polynomial("x^2*y - 3*x + 1", XY).unwrap();
+        assert_eq!(f.eval(&[2, 5]), 4 * 5 - 6 + 1);
+        assert_eq!(f.eval(&[0, 0]), 1);
+    }
+
+    #[test]
+    fn monic_normalizes_leading_coefficient() {
+        let f = p("4*x^2 + 2*y");
+        let m = f.monic();
+        assert_eq!(m.leading().unwrap().1, 1.0);
+        // x^2 + 0.5*y
+        let want = p("x^2").add(&p("y").mul_term(&Monomial::one(2), &0.5));
+        assert_eq!(m, want);
+        // Monic of zero is zero.
+        assert!(Polynomial::<f64>::zero(2).monic().is_zero());
+    }
+}

@@ -1,0 +1,270 @@
+//! Gröbner bases via Buchberger's algorithm — the domain application the
+//! paper's own references motivate ([5] Kredel, [6] Melenk & Neun, [9]
+//! Schwab all study *parallel polynomial operations in the (large)
+//! Buchberger algorithm*).
+//!
+//! The algorithm is the classical pair-queue Buchberger with the two
+//! standard criteria (coprime leading monomials; pair already covered),
+//! in two execution flavours:
+//!
+//! * [`buchberger_seq`] — sequential reference;
+//! * [`buchberger_par`] — S-polynomial construction and reduction of a
+//!   *generation* of pairs fanned out over the executor (the
+//!   data-parallel shape [6] describes), with the basis updated between
+//!   generations.
+//!
+//! Coefficients must form an exact field: use
+//! [`Rational`](crate::rational::Rational). (An earlier `f64` attempt
+//! demonstrated the classic failure mode — 1e-17 cancellation residues
+//! surviving as spurious leading terms and collapsing the computed
+//! variety; see EXPERIMENTS.md §Numerics.)
+
+use crate::exec::Executor;
+use crate::par::par_map;
+use crate::poly::{FieldCoeff, Polynomial};
+
+/// Build the S-polynomial of `f` and `g`:
+/// `S(f,g) = (lcm/lt(f))·f − (lcm/lt(g))·g`.
+pub fn s_polynomial<C: FieldCoeff>(f: &Polynomial<C>, g: &Polynomial<C>) -> Polynomial<C> {
+    let (fm, fc) = f.leading().expect("nonzero f");
+    let (gm, gc) = g.leading().expect("nonzero g");
+    let lcm = fm.lcm(gm);
+    let a = f.mul_term(&lcm.div(fm), &FieldCoeff::div(&C::one(), fc));
+    let b = g.mul_term(&lcm.div(gm), &FieldCoeff::div(&C::one(), gc));
+    a.sub(&b)
+}
+
+fn criteria_skip<C: FieldCoeff>(f: &Polynomial<C>, g: &Polynomial<C>) -> bool {
+    // Buchberger's first criterion: coprime leading monomials reduce to
+    // zero — skip the pair.
+    let (fm, _) = f.leading().expect("nonzero");
+    let (gm, _) = g.leading().expect("nonzero");
+    fm.coprime(gm)
+}
+
+/// Sequential Buchberger. Returns a reduced, monic Gröbner basis.
+pub fn buchberger_seq<C: FieldCoeff>(generators: &[Polynomial<C>]) -> Vec<Polynomial<C>> {
+    let mut basis: Vec<Polynomial<C>> =
+        generators.iter().filter(|p| !p.is_zero()).cloned().collect();
+    let mut pairs: Vec<(usize, usize)> = all_pairs(basis.len());
+    while let Some((i, j)) = pairs.pop() {
+        if criteria_skip(&basis[i], &basis[j]) {
+            continue;
+        }
+        let s = s_polynomial(&basis[i], &basis[j]);
+        let r = s.normal_form(&basis);
+        if !r.is_zero() {
+            let k = basis.len();
+            for i in 0..k {
+                pairs.push((i, k));
+            }
+            basis.push(r);
+        }
+    }
+    reduce_basis(basis)
+}
+
+/// Generation-parallel Buchberger: each round reduces *all* outstanding
+/// pairs in parallel against the current basis, then admits the new
+/// non-zero remainders at once (deduplicated by leading monomial). This
+/// is the fan-out/fan-in structure of [6]; it may do slightly more
+/// reductions than the sequential version but produces the same reduced
+/// basis.
+pub fn buchberger_par<C: FieldCoeff>(
+    exec: &Executor,
+    generators: &[Polynomial<C>],
+) -> Vec<Polynomial<C>> {
+    let mut basis: Vec<Polynomial<C>> =
+        generators.iter().filter(|p| !p.is_zero()).cloned().collect();
+    let mut pairs: Vec<(usize, usize)> = all_pairs(basis.len());
+    while !pairs.is_empty() {
+        let snapshot = basis.clone();
+        let todo: Vec<(usize, usize)> = std::mem::take(&mut pairs);
+        let reduced: Vec<Polynomial<C>> = par_map(exec, &todo, move |&(i, j)| {
+            if criteria_skip(&snapshot[i], &snapshot[j]) {
+                Polynomial::zero(snapshot[i].nvars())
+            } else {
+                s_polynomial(&snapshot[i], &snapshot[j]).normal_form(&snapshot)
+            }
+        });
+        // Admit new elements one at a time, re-reducing against the
+        // growing basis so intra-generation duplicates collapse.
+        for r in reduced {
+            if r.is_zero() {
+                continue;
+            }
+            let r = r.normal_form(&basis);
+            if r.is_zero() {
+                continue;
+            }
+            let k = basis.len();
+            for i in 0..k {
+                pairs.push((i, k));
+            }
+            basis.push(r);
+        }
+    }
+    reduce_basis(basis)
+}
+
+fn all_pairs(n: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(n * (n.saturating_sub(1)) / 2);
+    for j in 1..n {
+        for i in 0..j {
+            out.push((i, j));
+        }
+    }
+    out
+}
+
+/// Inter-reduce and normalize: drop basis elements whose leading
+/// monomial is divisible by another's, reduce each against the rest,
+/// make monic, sort descending by leading monomial.
+pub fn reduce_basis<C: FieldCoeff>(mut basis: Vec<Polynomial<C>>) -> Vec<Polynomial<C>> {
+    // Drop redundant leading terms.
+    let mut keep: Vec<Polynomial<C>> = Vec::new();
+    for (i, p) in basis.iter().enumerate() {
+        let (pm, _) = p.leading().expect("nonzero basis element");
+        let redundant = basis.iter().enumerate().any(|(j, q)| {
+            if i == j {
+                return false;
+            }
+            let (qm, _) = q.leading().expect("nonzero");
+            // Divisible by a *different* leading monomial, or an equal one
+            // kept earlier.
+            qm.divides(pm) && (qm != pm || j < i)
+        });
+        if !redundant {
+            keep.push(p.clone());
+        }
+    }
+    basis = keep;
+    // Tail-reduce each against the others.
+    let mut out: Vec<Polynomial<C>> = Vec::with_capacity(basis.len());
+    for i in 0..basis.len() {
+        let others: Vec<Polynomial<C>> = basis
+            .iter()
+            .enumerate()
+            .filter(|&(j, _)| j != i)
+            .map(|(_, q)| q.clone())
+            .collect();
+        let p = if others.is_empty() {
+            basis[i].clone()
+        } else {
+            basis[i].normal_form(&others)
+        };
+        if !p.is_zero() {
+            out.push(p.monic());
+        }
+    }
+    out.sort_by(|a, b| {
+        b.leading().expect("nonzero").0.cmp(&a.leading().expect("nonzero").0)
+    });
+    out
+}
+
+/// Is `basis` a Gröbner basis? (Every S-polynomial reduces to zero —
+/// Buchberger's criterion; used by tests and the example as the
+/// independent check.)
+pub fn is_groebner<C: FieldCoeff>(basis: &[Polynomial<C>]) -> bool {
+    for j in 1..basis.len() {
+        for i in 0..j {
+            if criteria_skip(&basis[i], &basis[j]) {
+                continue;
+            }
+            if !s_polynomial(&basis[i], &basis[j]).normal_form(basis).is_zero() {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::parse_polynomial;
+    use crate::rational::Rational;
+
+    fn p2(s: &str) -> Polynomial<Rational> {
+        parse_polynomial(s, &["x", "y"]).unwrap()
+    }
+
+    fn p3(s: &str) -> Polynomial<Rational> {
+        parse_polynomial(s, &["x", "y", "z"]).unwrap()
+    }
+
+    #[test]
+    fn s_polynomial_cancels_leading_terms() {
+        let f = p2("x^2*y - 1");
+        let g = p2("x*y^2 - x");
+        let s = s_polynomial(&f, &g);
+        // lcm = x^2 y^2; S = y·f/1 - x·g/1 = (x^2y^2 - y) - (x^2y^2 - x^2)
+        assert_eq!(s, p2("x^2 - y"));
+    }
+
+    #[test]
+    fn textbook_example_cox_little_oshea() {
+        // I = <x^3 - 2xy, x^2 y - 2y^2 + x> (CLO §2.7): the reduced
+        // grlex Gröbner basis is {x^2, xy, y^2 - x/2}.
+        let f1 = p2("x^3 - 2*x*y");
+        let f2 = p2("x^2*y - 2*y^2 + x");
+        let basis = buchberger_seq(&[f1, f2]);
+        assert!(is_groebner(&basis), "basis fails Buchberger's criterion");
+        assert_eq!(basis.len(), 3);
+        let rendered: Vec<String> = basis.iter().map(|p| p.to_string()).collect();
+        assert!(rendered.contains(&"x^2".to_string()), "{rendered:?}");
+        assert!(rendered.contains(&"x*y".to_string()), "{rendered:?}");
+        assert!(rendered.iter().any(|s| s.starts_with("y^2")), "{rendered:?}");
+        // Exact arithmetic: the third element is y^2 - x/2 precisely.
+        assert!(rendered.contains(&"y^2 + -1/2*x".to_string()), "{rendered:?}");
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let gens = [p3("x^2 + y + z - 1"), p3("x + y^2 + z - 1"), p3("x + y + z^2 - 1")];
+        let seq = buchberger_seq(&gens);
+        let ex = Executor::new(3);
+        let par = buchberger_par(&ex, &gens);
+        assert!(is_groebner(&seq));
+        assert!(is_groebner(&par));
+        assert_eq!(seq.len(), par.len(), "seq={seq:?}\npar={par:?}");
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn groebner_of_groebner_is_fixed_point() {
+        let gens = [p2("x^2 - y"), p2("y^2 - x")];
+        let basis = buchberger_seq(&gens);
+        let again = buchberger_seq(&basis);
+        assert_eq!(basis, again);
+    }
+
+    #[test]
+    fn single_generator_is_its_own_basis() {
+        let f = p2("x^2*y - 3");
+        let basis = buchberger_seq(&[f.clone()]);
+        assert_eq!(basis, vec![f.monic()]);
+        assert!(is_groebner(&basis));
+    }
+
+    #[test]
+    fn membership_test_via_normal_form() {
+        // x^2+y+z-1 etc. generate an ideal containing their combinations.
+        let gens = [p3("x^2 + y + z - 1"), p3("x + y^2 + z - 1")];
+        let basis = buchberger_seq(&gens);
+        let member = gens[0].mul(&p3("x + y")).add(&gens[1].mul(&p3("z^2")));
+        assert!(member.normal_form(&basis).is_zero());
+        let non_member = p3("x + 1");
+        assert!(!non_member.normal_form(&basis).is_zero());
+    }
+
+    #[test]
+    fn criteria_skip_on_coprime_leads() {
+        let f = p2("x^3 + y");
+        let g = p2("y^4 + x");
+        assert!(criteria_skip(&f, &g));
+    }
+}

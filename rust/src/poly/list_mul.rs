@@ -1,0 +1,116 @@
+//! The `list` / `list_big` control workloads — "straightforward
+//! parallelization of polynomial multiplication using parallel
+//! collections" [4]: map `x·(bᵢtᵢ)` over the terms of `y` in parallel,
+//! then reduce the partial products by `+`.
+//!
+//! Sequentially this degenerates to the classical iterative algorithm
+//! (the paper's observation 3 baseline: "a well optimized classical
+//! iterative/imperative implementation").
+
+use super::{Coeff, Polynomial};
+use crate::exec::Executor;
+use crate::par::{par_map, par_reduce};
+
+/// Sequential baseline: accumulate term-by-term products iteratively.
+pub fn list_times_seq<C: Coeff>(x: &Polynomial<C>, y: &Polynomial<C>) -> Polynomial<C> {
+    x.mul(y)
+}
+
+/// Parallel-collections baseline: `y.par.map(term => x*term).reduce(_+_)`.
+///
+/// Scala's parallel collections split the source into one partition per
+/// task (a few per worker), run the sequential fold *within* each
+/// partition, and combine partitions with the reducer — `aggregate`
+/// semantics. We mirror that: y's terms are partitioned, each partition
+/// computes its partial product with the optimized sequential kernel,
+/// and the few partials are tree-reduced. (A first version reduced one
+/// partial *per term*, which buries the baseline in merge traffic the
+/// Scala splitter never generates — see EXPERIMENTS.md §Perf.)
+pub fn list_times_par<C: Coeff>(
+    exec: &Executor,
+    x: &Polynomial<C>,
+    y: &Polynomial<C>,
+) -> Polynomial<C> {
+    assert_eq!(x.nvars(), y.nvars(), "mixed variable counts");
+    let nvars = x.nvars();
+    if x.is_zero() || y.is_zero() {
+        return Polynomial::zero(nvars);
+    }
+    // One partition per task slot (4 per worker limits stragglers).
+    let partitions = (exec.parallelism() * 4).max(1);
+    let per = y.num_terms().div_ceil(partitions);
+    let parts: Vec<Polynomial<C>> = y
+        .terms()
+        .chunks(per)
+        .map(|terms| Polynomial::from_terms(nvars, terms.to_vec()))
+        .collect();
+    let x = x.clone();
+    let partials = par_map(exec, &parts, move |part| x.mul(part));
+    par_reduce(exec, partials, Polynomial::zero(nvars), |a, b| a.add(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bigint::BigInt;
+    use crate::poly::parse_polynomial;
+    use crate::testkit::prop::{runner, Gen};
+    use crate::poly::Monomial;
+
+    fn p(s: &str) -> Polynomial<i64> {
+        parse_polynomial(s, &["x", "y", "z"]).unwrap()
+    }
+
+    #[test]
+    fn par_matches_seq_small() {
+        let ex = Executor::new(4);
+        let a = p("x + y + 1").pow(3);
+        let b = p("x - z + 2").pow(3);
+        assert_eq!(list_times_par(&ex, &a, &b), list_times_seq(&a, &b));
+    }
+
+    #[test]
+    fn par_with_one_worker() {
+        let ex = Executor::new(1);
+        let a = p("x^2 + y");
+        let b = p("z + 1");
+        assert_eq!(list_times_par(&ex, &a, &b), a.mul(&b));
+    }
+
+    #[test]
+    fn zero_operands() {
+        let ex = Executor::new(2);
+        let a = p("x + 1");
+        let z = Polynomial::<i64>::zero(3);
+        assert!(list_times_par(&ex, &a, &z).is_zero());
+        assert!(list_times_par(&ex, &z, &a).is_zero());
+    }
+
+    #[test]
+    fn bigint_parallel_product() {
+        let ex = Executor::new(3);
+        let factor = BigInt::from(100_000_000_001i64);
+        let a = p("1 + x + y + z").pow(4).map_coeffs(|c| BigInt::from(*c).mul(&factor));
+        let b = a.clone();
+        assert_eq!(list_times_par(&ex, &a, &b), a.mul(&b));
+    }
+
+    #[test]
+    fn prop_par_equals_seq() {
+        let ex = Executor::new(4);
+        let mut r = runner(40);
+        r.run(move |g: &mut Gen| {
+            let a = random_poly(g, 3, 8);
+            let b = random_poly(g, 3, 8);
+            assert_eq!(list_times_par(&ex, &a, &b), a.mul(&b), "a={a} b={b}");
+        });
+    }
+
+    fn random_poly(g: &mut Gen, nvars: usize, max_terms: usize) -> Polynomial<i64> {
+        let terms = g.vec(0..max_terms.max(1), |g| {
+            let exps: Vec<u16> = (0..nvars).map(|_| g.u32_in(0..5) as u16).collect();
+            (Monomial::from_exps(exps), g.i64_in(-9..=9))
+        });
+        Polynomial::from_terms(nvars, terms)
+    }
+}

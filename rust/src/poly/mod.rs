@@ -1,0 +1,40 @@
+//! Sparse multivariate polynomial algebra — the substrate for the
+//! paper's second example (§6) and its evaluation workloads
+//! (`stream`, `stream_big`, `list`, `list_big`).
+//!
+//! The paper uses the *distributive representation*
+//! `x = c₀m₀ + c₁m₁ + … + cₙmₙ` with terms ordered by a monomial order;
+//! multiplication decomposes into multiply-by-a-term and streaming
+//! addition (Figure 2). This module provides:
+//!
+//! * [`Monomial`] — exponent vectors under graded-lex order;
+//! * [`Coeff`] — the coefficient-ring abstraction ([`i64`], [`i128`],
+//!   [`BigInt`](crate::bigint::BigInt), [`f64`]); the `_big` workloads
+//!   swap rings exactly as the paper swaps `Int` for scaled `BigInt`;
+//! * [`Polynomial`] — strict sorted-term polynomials with the classical
+//!   iterative arithmetic (the `list` baseline's core);
+//! * [`stream_mul`] — the paper's stream algorithm (`times` / `multiply`
+//!   / `plus`), generic over the evaluation strategy;
+//! * [`list_mul`] — the parallel-collections control [4];
+//! * [`chunked_mul`] — the §7 chunking improvement, with a pluggable
+//!   dense block multiplier so the AOT Pallas kernel can take the
+//!   per-block outer product (see `runtime::KernelMultiplier`).
+
+pub mod chunked_mul;
+mod division;
+pub mod groebner;
+pub mod list_mul;
+mod monomial;
+mod parse;
+mod polynomial;
+mod ring;
+pub mod stream_mul;
+
+pub use chunked_mul::{chunked_times, BlockMultiplier, RustMultiplier, TermBlock};
+pub use division::FieldCoeff;
+pub use list_mul::{list_times_par, list_times_seq};
+pub use monomial::Monomial;
+pub use parse::parse_polynomial;
+pub use polynomial::{Polynomial, Term};
+pub use ring::Coeff;
+pub use stream_mul::{multiply, plus, stream_times, times, PolyStream};

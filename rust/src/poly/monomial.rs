@@ -1,0 +1,182 @@
+//! Monomials: exponent vectors under graded-lexicographic order.
+//!
+//! The paper's `Array[N]` with an order `s > t` (its `plus` branches on
+//! the comparison). Graded-lex (total degree first, then lexicographic)
+//! is the order Fateman's benchmark [2] and most CA systems default to;
+//! any total order compatible with multiplication works for the
+//! algorithm.
+
+use std::sync::Arc;
+
+/// An exponent vector. Immutable and cheaply cloneable (terms are copied
+/// between tasks constantly in the stream algorithm).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Monomial {
+    exps: Arc<[u16]>,
+}
+
+impl Monomial {
+    /// The constant monomial `1` over `nvars` variables.
+    pub fn one(nvars: usize) -> Self {
+        Monomial { exps: vec![0u16; nvars].into() }
+    }
+
+    /// A single variable `x_i`.
+    pub fn var(nvars: usize, i: usize) -> Self {
+        assert!(i < nvars, "variable index out of range");
+        let mut exps = vec![0u16; nvars];
+        exps[i] = 1;
+        Monomial { exps: exps.into() }
+    }
+
+    pub fn from_exps(exps: Vec<u16>) -> Self {
+        Monomial { exps: exps.into() }
+    }
+
+    pub fn exps(&self) -> &[u16] {
+        &self.exps
+    }
+
+    pub fn nvars(&self) -> usize {
+        self.exps.len()
+    }
+
+    /// Total degree.
+    pub fn degree(&self) -> u32 {
+        self.exps.iter().map(|&e| e as u32).sum()
+    }
+
+    pub fn is_one(&self) -> bool {
+        self.exps.iter().all(|&e| e == 0)
+    }
+
+    /// Monomial product — elementwise exponent addition (`s * m` in the
+    /// paper's `multiply`). Panics on exponent overflow rather than
+    /// silently wrapping.
+    pub fn mul(&self, other: &Monomial) -> Monomial {
+        assert_eq!(self.nvars(), other.nvars(), "mixed variable counts");
+        let exps: Vec<u16> = self
+            .exps
+            .iter()
+            .zip(other.exps.iter())
+            .map(|(&a, &b)| a.checked_add(b).expect("exponent overflow"))
+            .collect();
+        Monomial { exps: exps.into() }
+    }
+
+    /// Render with the given variable names (falls back to `x{i}`).
+    pub fn render(&self, names: &[&str]) -> String {
+        if self.is_one() {
+            return "1".to_string();
+        }
+        let mut parts = Vec::new();
+        for (i, &e) in self.exps.iter().enumerate() {
+            if e == 0 {
+                continue;
+            }
+            let name = names.get(i).copied().map(str::to_string).unwrap_or(format!("x{i}"));
+            if e == 1 {
+                parts.push(name);
+            } else {
+                parts.push(format!("{name}^{e}"));
+            }
+        }
+        parts.join("*")
+    }
+}
+
+impl PartialOrd for Monomial {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Monomial {
+    /// Graded-lex: higher total degree first; ties broken
+    /// lexicographically on the exponent vector.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        debug_assert_eq!(self.nvars(), other.nvars(), "mixed variable counts");
+        self.degree()
+            .cmp(&other.degree())
+            .then_with(|| self.exps.iter().cmp(other.exps.iter()))
+    }
+}
+
+impl std::fmt::Display for Monomial {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.render(&["x", "y", "z", "t", "u", "v", "w", "s"]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(exps: &[u16]) -> Monomial {
+        Monomial::from_exps(exps.to_vec())
+    }
+
+    #[test]
+    fn one_and_var() {
+        assert!(Monomial::one(3).is_one());
+        assert_eq!(Monomial::var(3, 1).exps(), &[0, 1, 0]);
+        assert_eq!(Monomial::var(3, 1).degree(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn var_out_of_range_panics() {
+        Monomial::var(2, 5);
+    }
+
+    #[test]
+    fn product_adds_exponents() {
+        assert_eq!(m(&[1, 2, 0]).mul(&m(&[0, 1, 3])), m(&[1, 3, 3]));
+        assert_eq!(m(&[1, 1]).mul(&Monomial::one(2)), m(&[1, 1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "exponent overflow")]
+    fn product_overflow_panics() {
+        m(&[u16::MAX]).mul(&m(&[1]));
+    }
+
+    #[test]
+    fn graded_lex_order() {
+        // Degree dominates.
+        assert!(m(&[2, 0]) > m(&[0, 1]));
+        // Same degree: lexicographic.
+        assert!(m(&[1, 1]) > m(&[0, 2]));
+        assert!(m(&[2, 0]) > m(&[1, 1]));
+        // Equal.
+        assert_eq!(m(&[1, 2]).cmp(&m(&[1, 2])), std::cmp::Ordering::Equal);
+    }
+
+    #[test]
+    fn order_compatible_with_multiplication() {
+        // s > t implies s*m > t*m — required for the stream algorithm's
+        // merge to stay sorted under multiply-by-a-term.
+        let pairs = [
+            (m(&[2, 0, 1]), m(&[1, 1, 1])),
+            (m(&[0, 3, 0]), m(&[0, 1, 1])),
+            (m(&[5, 0, 0]), m(&[0, 0, 4])),
+        ];
+        let mults = [m(&[1, 0, 2]), m(&[0, 0, 0]), m(&[3, 3, 3])];
+        for (s, t) in &pairs {
+            let ord = s.cmp(t);
+            for mm in &mults {
+                assert_eq!(s.mul(mm).cmp(&t.mul(mm)), ord, "{s} vs {t} times {mm}");
+            }
+        }
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(Monomial::one(4).to_string(), "1");
+        assert_eq!(m(&[1, 0, 2, 0]).to_string(), "x*z^2");
+        assert_eq!(m(&[0, 1, 0, 1]).to_string(), "y*t");
+        // Falls back past the provided names.
+        let wide = Monomial::var(9, 8);
+        assert_eq!(wide.render(&["x"]), "x8");
+    }
+}

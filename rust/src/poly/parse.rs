@@ -1,0 +1,213 @@
+//! A small polynomial expression parser for examples and the CLI:
+//! sums of terms like `3*x^2*y - 4*z + 7`, variables drawn from a
+//! caller-provided name list.
+
+use super::{Coeff, Monomial, Polynomial, Term};
+
+/// Parse error with position.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParsePolyError {
+    pub message: String,
+    pub at: usize,
+}
+
+impl std::fmt::Display for ParsePolyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "parse error at byte {}: {}", self.at, self.message)
+    }
+}
+
+impl std::error::Error for ParsePolyError {}
+
+/// Parse `text` into a polynomial over `names`. Coefficient literals go
+/// through the ring's exact-f64 conversion (every ring here represents
+/// small integers exactly).
+pub fn parse_polynomial<C: Coeff>(
+    text: &str,
+    names: &[&str],
+) -> Result<Polynomial<C>, ParsePolyError> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0, names };
+    let terms = p.expression()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing input"));
+    }
+    Ok(Polynomial::from_terms(names.len(), terms))
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    names: &'a [&'a str],
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, message: &str) -> ParsePolyError {
+        ParsePolyError { message: message.to_string(), at: self.pos }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.bytes.get(self.pos).is_some_and(|b| b.is_ascii_whitespace()) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expression<C: Coeff>(&mut self) -> Result<Vec<Term<C>>, ParsePolyError> {
+        let mut terms = Vec::new();
+        let mut sign = 1i64;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+            sign = -1;
+        } else if self.peek() == Some(b'+') {
+            self.pos += 1;
+        }
+        loop {
+            let (m, c) = self.term::<C>(sign)?;
+            terms.push((m, c));
+            match self.peek() {
+                Some(b'+') => {
+                    self.pos += 1;
+                    sign = 1;
+                }
+                Some(b'-') => {
+                    self.pos += 1;
+                    sign = -1;
+                }
+                _ => break,
+            }
+        }
+        Ok(terms)
+    }
+
+    fn term<C: Coeff>(&mut self, sign: i64) -> Result<Term<C>, ParsePolyError> {
+        let mut coeff: i64 = sign;
+        let mut exps = vec![0u16; self.names.len()];
+        loop {
+            match self.peek() {
+                Some(b) if b.is_ascii_digit() => {
+                    let n = self.number()?;
+                    coeff = coeff
+                        .checked_mul(n)
+                        .ok_or_else(|| self.err("coefficient overflow"))?;
+                }
+                Some(b) if b.is_ascii_alphabetic() => {
+                    let (idx, e) = self.variable_power()?;
+                    exps[idx] = exps[idx]
+                        .checked_add(e)
+                        .ok_or_else(|| self.err("exponent overflow"))?;
+                }
+                _ => return Err(self.err("expected a number or variable")),
+            }
+            if self.peek() == Some(b'*') {
+                self.pos += 1;
+                continue;
+            }
+            break;
+        }
+        let c = C::from_exact_f64(coeff as f64)
+            .ok_or_else(|| self.err("coefficient not representable in this ring"))?;
+        Ok((Monomial::from_exps(exps), c))
+    }
+
+    fn number(&mut self) -> Result<i64, ParsePolyError> {
+        self.skip_ws();
+        let start = self.pos;
+        while self.bytes.get(self.pos).is_some_and(|b| b.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .unwrap()
+            .parse()
+            .map_err(|_| self.err("bad number"))
+    }
+
+    fn variable_power(&mut self) -> Result<(usize, u16), ParsePolyError> {
+        self.skip_ws();
+        let start = self.pos;
+        while self
+            .bytes
+            .get(self.pos)
+            .is_some_and(|b| b.is_ascii_alphanumeric() && !b.is_ascii_whitespace())
+            && !matches!(self.bytes.get(self.pos), Some(b'^'))
+        {
+            // Stop variable names at operators.
+            if matches!(self.bytes[self.pos], b'*' | b'+' | b'-') {
+                break;
+            }
+            self.pos += 1;
+        }
+        let name = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let idx = self
+            .names
+            .iter()
+            .position(|n| *n == name)
+            .ok_or_else(|| self.err(&format!("unknown variable: {name}")))?;
+        let mut e = 1u16;
+        if self.peek() == Some(b'^') {
+            self.pos += 1;
+            let n = self.number()?;
+            e = u16::try_from(n).map_err(|_| self.err("exponent out of range"))?;
+        }
+        Ok((idx, e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const XYZ: &[&str] = &["x", "y", "z"];
+
+    fn parse(s: &str) -> Polynomial<i64> {
+        parse_polynomial(s, XYZ).unwrap()
+    }
+
+    #[test]
+    fn parses_constants_and_vars() {
+        assert_eq!(parse("7").to_string(), "7");
+        assert_eq!(parse("x").to_string(), "x");
+        assert_eq!(parse("-x").to_string(), "-1*x");
+    }
+
+    #[test]
+    fn parses_products_and_powers() {
+        assert_eq!(parse("3*x^2*y").to_string(), "3*x^2*y");
+        assert_eq!(parse("x*x*x"), parse("x^3"));
+        assert_eq!(parse("2*3*x"), parse("6*x"));
+    }
+
+    #[test]
+    fn parses_sums_with_signs() {
+        let p = parse("x^2 - 2*x + 1");
+        assert_eq!(p.num_terms(), 3);
+        assert_eq!(p, parse("1 + x^2 - 2*x"));
+    }
+
+    #[test]
+    fn combines_like_terms() {
+        assert_eq!(parse("x + x"), parse("2*x"));
+        assert!(parse("x - x").is_zero());
+    }
+
+    #[test]
+    fn parse_mul_roundtrip() {
+        let a = parse("x + y + 1");
+        let b = parse("x - y");
+        let prod = a.mul(&b);
+        assert_eq!(prod, parse("x^2 - y^2 + x - y"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_polynomial::<i64>("", XYZ).is_err());
+        assert!(parse_polynomial::<i64>("x +", XYZ).is_err());
+        assert!(parse_polynomial::<i64>("q", XYZ).is_err());
+        assert!(parse_polynomial::<i64>("x^99999999", XYZ).is_err());
+        assert!(parse_polynomial::<i64>("x y", XYZ).is_err());
+    }
+}

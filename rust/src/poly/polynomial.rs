@@ -1,0 +1,367 @@
+//! Strict sparse polynomials: sorted term vectors and the classical
+//! iterative arithmetic (the optimized imperative implementation the
+//! paper's `list` baseline is built on).
+
+use std::collections::BTreeMap;
+
+use super::{Coeff, Monomial};
+
+/// One term `c·m`.
+pub type Term<C> = (Monomial, C);
+
+/// Sparse polynomial in distributive representation: terms sorted by
+/// monomial order, **descending**, no zero coefficients, no duplicate
+/// monomials (canonical form).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Polynomial<C: Coeff> {
+    nvars: usize,
+    terms: Vec<Term<C>>,
+}
+
+impl<C: Coeff> Polynomial<C> {
+    pub fn zero(nvars: usize) -> Self {
+        Polynomial { nvars, terms: Vec::new() }
+    }
+
+    pub fn one(nvars: usize) -> Self {
+        Polynomial { nvars, terms: vec![(Monomial::one(nvars), C::one())] }
+    }
+
+    /// The variable `x_i` as a polynomial.
+    pub fn var(nvars: usize, i: usize) -> Self {
+        Polynomial { nvars, terms: vec![(Monomial::var(nvars, i), C::one())] }
+    }
+
+    pub fn constant(nvars: usize, c: C) -> Self {
+        if c.is_zero() {
+            return Self::zero(nvars);
+        }
+        Polynomial { nvars, terms: vec![(Monomial::one(nvars), c)] }
+    }
+
+    /// Build from arbitrary terms: sorts, combines duplicates, drops
+    /// zeros.
+    pub fn from_terms(nvars: usize, terms: Vec<Term<C>>) -> Self {
+        let mut map: BTreeMap<Monomial, C> = BTreeMap::new();
+        for (m, c) in terms {
+            assert_eq!(m.nvars(), nvars, "term variable count mismatch");
+            match map.get_mut(&m) {
+                Some(acc) => *acc = acc.add(&c),
+                None => {
+                    map.insert(m, c);
+                }
+            }
+        }
+        let terms: Vec<Term<C>> =
+            map.into_iter().rev().filter(|(_, c)| !c.is_zero()).collect();
+        Polynomial { nvars, terms }
+    }
+
+    /// Terms in descending monomial order.
+    pub fn terms(&self) -> &[Term<C>] {
+        &self.terms
+    }
+
+    pub fn into_terms(self) -> Vec<Term<C>> {
+        self.terms
+    }
+
+    pub fn nvars(&self) -> usize {
+        self.nvars
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    pub fn num_terms(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// Leading (largest) monomial.
+    pub fn leading(&self) -> Option<&Term<C>> {
+        self.terms.first()
+    }
+
+    pub fn degree(&self) -> u32 {
+        self.terms.iter().map(|(m, _)| m.degree()).max().unwrap_or(0)
+    }
+
+    /// Canonical-form check (used by property tests).
+    pub fn is_canonical(&self) -> bool {
+        self.terms.windows(2).all(|w| w[0].0 > w[1].0)
+            && self.terms.iter().all(|(m, c)| !c.is_zero() && m.nvars() == self.nvars)
+    }
+
+    // -----------------------------------------------------------------
+    // classical arithmetic (merge-based, the `list` baseline's core)
+    // -----------------------------------------------------------------
+
+    /// Addition by sorted merge — the imperative counterpart of the
+    /// paper's streaming `plus`.
+    pub fn add(&self, other: &Polynomial<C>) -> Polynomial<C> {
+        assert_eq!(self.nvars, other.nvars, "mixed variable counts");
+        let mut out = Vec::with_capacity(self.terms.len() + other.terms.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.terms.len() && j < other.terms.len() {
+            let (ma, ca) = &self.terms[i];
+            let (mb, cb) = &other.terms[j];
+            match ma.cmp(mb) {
+                std::cmp::Ordering::Greater => {
+                    out.push((ma.clone(), ca.clone()));
+                    i += 1;
+                }
+                std::cmp::Ordering::Less => {
+                    out.push((mb.clone(), cb.clone()));
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    let c = ca.add(cb);
+                    if !c.is_zero() {
+                        out.push((ma.clone(), c));
+                    }
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        out.extend_from_slice(&self.terms[i..]);
+        out.extend(other.terms[j..].iter().cloned());
+        Polynomial { nvars: self.nvars, terms: out }
+    }
+
+    pub fn sub(&self, other: &Polynomial<C>) -> Polynomial<C> {
+        self.add(&other.neg())
+    }
+
+    pub fn neg(&self) -> Polynomial<C> {
+        Polynomial {
+            nvars: self.nvars,
+            terms: self.terms.iter().map(|(m, c)| (m.clone(), c.neg())).collect(),
+        }
+    }
+
+    /// Multiply by one term (`multiply(x, m, c)` in strict form). Order
+    /// is preserved because the monomial order is multiplication-
+    /// compatible.
+    pub fn mul_term(&self, m: &Monomial, c: &C) -> Polynomial<C> {
+        if c.is_zero() {
+            return Polynomial::zero(self.nvars);
+        }
+        Polynomial {
+            nvars: self.nvars,
+            terms: self
+                .terms
+                .iter()
+                .map(|(tm, tc)| (tm.mul(m), tc.mul(c)))
+                .filter(|(_, c)| !c.is_zero())
+                .collect(),
+        }
+    }
+
+    /// Classical iterative product: accumulate `x·(b·t)` over the terms
+    /// of `other` into a tree map (the well-optimized imperative
+    /// implementation the paper credits `list` with being).
+    pub fn mul(&self, other: &Polynomial<C>) -> Polynomial<C> {
+        assert_eq!(self.nvars, other.nvars, "mixed variable counts");
+        let mut acc: BTreeMap<Monomial, C> = BTreeMap::new();
+        for (mb, cb) in &other.terms {
+            for (ma, ca) in &self.terms {
+                let m = ma.mul(mb);
+                let c = ca.mul(cb);
+                match acc.get_mut(&m) {
+                    Some(slot) => *slot = slot.add(&c),
+                    None => {
+                        acc.insert(m, c);
+                    }
+                }
+            }
+        }
+        let terms: Vec<Term<C>> =
+            acc.into_iter().rev().filter(|(_, c)| !c.is_zero()).collect();
+        Polynomial { nvars: self.nvars, terms }
+    }
+
+    /// Exponentiation by repeated squaring.
+    pub fn pow(&self, mut e: u32) -> Polynomial<C> {
+        let mut base = self.clone();
+        let mut acc = Polynomial::one(self.nvars);
+        while e > 0 {
+            if e & 1 == 1 {
+                acc = acc.mul(&base);
+            }
+            e >>= 1;
+            if e > 0 {
+                base = base.mul(&base);
+            }
+        }
+        acc
+    }
+
+    /// Map coefficients into another ring (e.g. `i64 → BigInt` for the
+    /// `_big` workloads).
+    pub fn map_coeffs<D: Coeff>(&self, f: impl Fn(&C) -> D) -> Polynomial<D> {
+        Polynomial {
+            nvars: self.nvars,
+            terms: self
+                .terms
+                .iter()
+                .map(|(m, c)| (m.clone(), f(c)))
+                .filter(|(_, c)| !c.is_zero())
+                .collect(),
+        }
+    }
+
+    /// Scale every coefficient (the paper's ×100000000001 knob).
+    pub fn scale(&self, k: &C) -> Polynomial<C> {
+        self.mul_term(&Monomial::one(self.nvars), k)
+    }
+}
+
+impl<C: Coeff> std::fmt::Display for Polynomial<C> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_zero() {
+            return f.write_str("0");
+        }
+        let mut first = true;
+        for (m, c) in &self.terms {
+            if !first {
+                f.write_str(" + ")?;
+            }
+            first = false;
+            if m.is_one() {
+                write!(f, "{c}")?;
+            } else if *c == C::one() {
+                write!(f, "{m}")?;
+            } else {
+                write!(f, "{c}*{m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bigint::BigInt;
+    use crate::testkit::prop::{runner, Gen};
+
+    fn xyz() -> (Polynomial<i64>, Polynomial<i64>, Polynomial<i64>) {
+        (Polynomial::var(3, 0), Polynomial::var(3, 1), Polynomial::var(3, 2))
+    }
+
+    /// Random small polynomial for property tests.
+    pub(crate) fn random_poly(g: &mut Gen, nvars: usize, max_terms: usize) -> Polynomial<i64> {
+        let terms = g.vec(0..max_terms.max(1), |g| {
+            let exps: Vec<u16> = (0..nvars).map(|_| g.u32_in(0..5) as u16).collect();
+            (Monomial::from_exps(exps), g.i64_in(-9..=9))
+        });
+        Polynomial::from_terms(nvars, terms)
+    }
+
+    #[test]
+    fn canonical_construction() {
+        let m = Monomial::from_exps;
+        let p = Polynomial::from_terms(
+            2,
+            vec![
+                (m(vec![1, 0]), 2i64),
+                (m(vec![0, 1]), 3),
+                (m(vec![1, 0]), -2), // cancels the first
+                (m(vec![0, 0]), 0),  // dropped
+            ],
+        );
+        assert_eq!(p.num_terms(), 1);
+        assert!(p.is_canonical());
+        assert_eq!(p.to_string(), "3*y");
+    }
+
+    #[test]
+    fn add_merges_and_cancels() {
+        let (x, y, _) = xyz();
+        let a = x.add(&y);
+        let b = x.neg();
+        assert_eq!(a.add(&b), y);
+        assert!(a.sub(&a).is_zero());
+    }
+
+    #[test]
+    fn binomial_square() {
+        let (x, y, _) = xyz();
+        let p = x.add(&y); // x + y
+        let sq = p.mul(&p);
+        // x^2 + 2xy + y^2
+        assert_eq!(sq.num_terms(), 3);
+        assert_eq!(sq.to_string(), "x^2 + 2*x*y + y^2");
+    }
+
+    #[test]
+    fn pow_matches_repeated_mul() {
+        let (x, y, z) = xyz();
+        let p = x.add(&y).add(&z).add(&Polynomial::one(3));
+        let mut byhand = Polynomial::one(3);
+        for _ in 0..5 {
+            byhand = byhand.mul(&p);
+        }
+        assert_eq!(p.pow(5), byhand);
+        assert_eq!(p.pow(0), Polynomial::one(3));
+        // (1+x+y+z)^5 over 3 vars has C(8,3) = 56 terms.
+        assert_eq!(p.pow(5).num_terms(), 56);
+    }
+
+    #[test]
+    fn mul_term_preserves_order() {
+        let (x, y, _) = xyz();
+        let p = x.add(&y).pow(3);
+        let q = p.mul_term(&Monomial::var(3, 2), &7);
+        assert!(q.is_canonical());
+        assert_eq!(q.num_terms(), p.num_terms());
+    }
+
+    #[test]
+    fn zero_cases() {
+        let z: Polynomial<i64> = Polynomial::zero(2);
+        let one = Polynomial::one(2);
+        assert!(z.mul(&one).is_zero());
+        assert_eq!(one.mul(&one), one);
+        assert!(one.mul_term(&Monomial::one(2), &0).is_zero());
+        assert_eq!(z.to_string(), "0");
+        assert_eq!(Polynomial::<i64>::constant(2, 0), z);
+    }
+
+    #[test]
+    fn map_coeffs_to_bigint() {
+        let (x, y, _) = xyz();
+        let p = x.add(&y).pow(4);
+        let big = p.map_coeffs(|c| BigInt::from(*c));
+        assert_eq!(big.num_terms(), p.num_terms());
+        let rescaled = big.scale(&BigInt::from(100_000_000_001i64));
+        assert_eq!(rescaled.leading().unwrap().1, BigInt::from(100_000_000_001i64));
+    }
+
+    #[test]
+    fn prop_ring_axioms_for_polynomials() {
+        let mut r = runner(150);
+        r.run(|g: &mut Gen| {
+            let a = random_poly(g, 3, 6);
+            let b = random_poly(g, 3, 6);
+            let c = random_poly(g, 3, 6);
+            assert_eq!(a.add(&b), b.add(&a));
+            assert_eq!(a.mul(&b), b.mul(&a));
+            assert_eq!(a.add(&b).add(&c), a.add(&b.add(&c)));
+            assert_eq!(a.mul(&b).mul(&c), a.mul(&b.mul(&c)));
+            assert_eq!(a.mul(&b.add(&c)), a.mul(&b).add(&a.mul(&c)));
+            assert!(a.add(&b).is_canonical());
+            assert!(a.mul(&b).is_canonical());
+            assert!(a.sub(&a).is_zero());
+        });
+    }
+
+    #[test]
+    fn display_reads_naturally() {
+        let (x, y, _) = xyz();
+        let p = x.mul(&x).add(&y.scale(&-2)).add(&Polynomial::constant(3, 5));
+        assert_eq!(p.to_string(), "x^2 + -2*y + 5");
+    }
+}

@@ -1,0 +1,228 @@
+//! Coefficient-ring abstraction.
+//!
+//! The paper's evaluation turns exactly one knob between `stream` and
+//! `stream_big`: the coefficient ring (machine integers vs JVM `BigInt`
+//! scaled by 100000000001) — "in order to increase the footprint of
+//! elementary operations". [`Coeff`] makes that knob a type parameter.
+
+use crate::bigint::BigInt;
+
+/// A commutative ring of coefficients. All operations are by-reference
+/// (big coefficients must not be copied to be added).
+pub trait Coeff:
+    Clone + Send + Sync + PartialEq + std::fmt::Debug + std::fmt::Display + 'static
+{
+    fn zero() -> Self;
+    fn one() -> Self;
+    fn is_zero(&self) -> bool;
+    fn add(&self, other: &Self) -> Self;
+    fn mul(&self, other: &Self) -> Self;
+    fn neg(&self) -> Self;
+
+    /// `self + other * k` — the fused step of the accumulating baselines.
+    fn add_mul(&self, other: &Self, k: &Self) -> Self {
+        self.add(&other.mul(k))
+    }
+
+    /// Exact value as `f64` when representable (the PJRT kernel path
+    /// carries coefficients as f64 lanes; `None` opts a block out of
+    /// kernel offload).
+    fn to_exact_f64(&self) -> Option<f64>;
+
+    /// Inverse of [`Coeff::to_exact_f64`].
+    fn from_exact_f64(v: f64) -> Option<Self>;
+}
+
+/// Largest integer magnitude `f64` holds exactly.
+const F64_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+
+impl Coeff for i64 {
+    fn zero() -> Self {
+        0
+    }
+
+    fn one() -> Self {
+        1
+    }
+
+    fn is_zero(&self) -> bool {
+        *self == 0
+    }
+
+    fn add(&self, other: &Self) -> Self {
+        self.checked_add(*other).expect("i64 coefficient overflow in add")
+    }
+
+    fn mul(&self, other: &Self) -> Self {
+        self.checked_mul(*other).expect("i64 coefficient overflow in mul")
+    }
+
+    fn neg(&self) -> Self {
+        self.checked_neg().expect("i64 coefficient overflow in neg")
+    }
+
+    fn to_exact_f64(&self) -> Option<f64> {
+        let v = *self as f64;
+        (v.abs() <= F64_EXACT && v as i64 == *self).then_some(v)
+    }
+
+    fn from_exact_f64(v: f64) -> Option<Self> {
+        (v.fract() == 0.0 && v.abs() <= F64_EXACT).then_some(v as i64)
+    }
+}
+
+impl Coeff for i128 {
+    fn zero() -> Self {
+        0
+    }
+
+    fn one() -> Self {
+        1
+    }
+
+    fn is_zero(&self) -> bool {
+        *self == 0
+    }
+
+    fn add(&self, other: &Self) -> Self {
+        self.checked_add(*other).expect("i128 coefficient overflow in add")
+    }
+
+    fn mul(&self, other: &Self) -> Self {
+        self.checked_mul(*other).expect("i128 coefficient overflow in mul")
+    }
+
+    fn neg(&self) -> Self {
+        self.checked_neg().expect("i128 coefficient overflow in neg")
+    }
+
+    fn to_exact_f64(&self) -> Option<f64> {
+        let v = *self as f64;
+        (v.abs() <= F64_EXACT && v as i128 == *self).then_some(v)
+    }
+
+    fn from_exact_f64(v: f64) -> Option<Self> {
+        (v.fract() == 0.0 && v.abs() <= F64_EXACT).then_some(v as i128)
+    }
+}
+
+impl Coeff for BigInt {
+    fn zero() -> Self {
+        BigInt::zero()
+    }
+
+    fn one() -> Self {
+        BigInt::one()
+    }
+
+    fn is_zero(&self) -> bool {
+        BigInt::is_zero(self)
+    }
+
+    fn add(&self, other: &Self) -> Self {
+        self + other
+    }
+
+    fn mul(&self, other: &Self) -> Self {
+        self * other
+    }
+
+    fn neg(&self) -> Self {
+        BigInt::neg(self)
+    }
+
+    fn to_exact_f64(&self) -> Option<f64> {
+        self.to_i128().and_then(|v| v.to_exact_f64())
+    }
+
+    fn from_exact_f64(v: f64) -> Option<Self> {
+        i128::from_exact_f64(v).map(BigInt::from)
+    }
+}
+
+/// Floating coefficients are used by kernel cross-checks, not by the
+/// paper's workloads (exact arithmetic there).
+impl Coeff for f64 {
+    fn zero() -> Self {
+        0.0
+    }
+
+    fn one() -> Self {
+        1.0
+    }
+
+    fn is_zero(&self) -> bool {
+        *self == 0.0
+    }
+
+    fn add(&self, other: &Self) -> Self {
+        self + other
+    }
+
+    fn mul(&self, other: &Self) -> Self {
+        self * other
+    }
+
+    fn neg(&self) -> Self {
+        -self
+    }
+
+    fn to_exact_f64(&self) -> Option<f64> {
+        Some(*self)
+    }
+
+    fn from_exact_f64(v: f64) -> Option<Self> {
+        Some(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercise_ring<C: Coeff + From<i32>>() {
+        let two: C = 2.into();
+        let three: C = 3.into();
+        assert_eq!(two.add(&three), 5.into());
+        assert_eq!(two.mul(&three), 6.into());
+        assert_eq!(two.neg().add(&two), C::zero());
+        assert!(C::zero().is_zero());
+        assert!(!C::one().is_zero());
+        assert_eq!(two.add_mul(&three, &two), 8.into());
+    }
+
+    #[test]
+    fn i64_ring() {
+        exercise_ring::<i64>();
+    }
+
+    #[test]
+    fn i128_ring() {
+        exercise_ring::<i128>();
+    }
+
+    #[test]
+    fn bigint_ring() {
+        exercise_ring::<BigInt>();
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn i64_overflow_is_loud() {
+        i64::MAX.add(&1);
+    }
+
+    #[test]
+    fn exact_f64_roundtrip() {
+        assert_eq!(12345i64.to_exact_f64(), Some(12345.0));
+        assert_eq!(i64::from_exact_f64(12345.0), Some(12345));
+        // 2^53 + 1 is not exactly representable.
+        let big = (1i64 << 53) + 1;
+        assert_eq!(big.to_exact_f64(), None);
+        assert_eq!(i64::from_exact_f64(0.5), None);
+        // BigInt beyond i128 range is not representable either.
+        let huge: BigInt = "123456789012345678901234567890123456789012".parse().unwrap();
+        assert_eq!(huge.to_exact_f64(), None);
+        assert_eq!(BigInt::from(7i64).to_exact_f64(), Some(7.0));
+    }
+}

@@ -1,0 +1,295 @@
+//! The paper's §6: sparse polynomial multiplication as a stream
+//! computation.
+//!
+//! ```text
+//! type T = Stream[(Array[N], C)]
+//! def times(x: T, y: T) = (zero /: y) { (l, r) =>
+//!   val (a, b) = r
+//!   l + multiply(x, a, b)
+//! }
+//! ```
+//!
+//! `multiply` (by one term) and `plus` (streaming merge-add) are
+//! expressed recursively over the monadic stream, so the whole
+//! multiplication becomes the pipeline of Figure 2: under the Future
+//! strategy every `multiply` stage and every `plus` merge stage runs as
+//! its own chain of tasks.
+//!
+//! Faithfulness notes:
+//! * the cancellation case in `plus` forces the tail (`result.tail`),
+//!   which the paper concedes "results in a call to Await.result … we
+//!   have not been able to avoid it";
+//! * the equal-monomial case uses the `for (sx <- tailx; sy <- taily)`
+//!   comprehension, i.e. `flatMap` + `map` over the suspended tails.
+
+use super::{Coeff, Monomial, Polynomial, Term};
+use crate::stream::Stream;
+use crate::susp::Eval;
+
+/// The paper's `type T = Stream[(Array[N], C)]`.
+pub type PolyStream<C, E> = Stream<Term<C>, E>;
+
+/// Multiply a term stream by a single term `c·m` — the paper's
+/// `multiply(x, m, c)`.
+///
+/// ```text
+/// case (s, a)#::tail => {
+///   val (sm, ac) = (s * m, a * c)
+///   val result = (sm, ac)#::tail.map(multiply(_, m, c))
+///   if (!ac.isZero) result else result.tail
+/// }
+/// ```
+pub fn multiply<C: Coeff, E: Eval>(
+    x: &PolyStream<C, E>,
+    m: &Monomial,
+    c: &C,
+) -> PolyStream<C, E> {
+    match x.uncons() {
+        None => Stream::Empty,
+        Some(((s, a), tail, eval)) => {
+            let (sm, ac) = (s.mul(m), a.mul(c));
+            let (m2, c2) = (m.clone(), c.clone());
+            let mapped = eval.map(tail, move |t: PolyStream<C, E>| multiply(&t, &m2, &c2));
+            let result = Stream::cons_cell(eval.clone(), (sm, ac), mapped);
+            if !ac_is_zero(&result) {
+                result
+            } else {
+                // Coefficient cancelled (possible in non-domain rings):
+                // drop the head, forcing the tail as the paper does.
+                result.tail().expect("cons has a tail").clone()
+            }
+        }
+    }
+}
+
+fn ac_is_zero<C: Coeff, E: Eval>(s: &PolyStream<C, E>) -> bool {
+    s.head().map(|(_, c)| c.is_zero()).unwrap_or(false)
+}
+
+/// Streaming merge-add — the paper's `plus(x, y)`, including the
+/// flatMap/map comprehension on the equal-monomial branch and the forced
+/// tail on cancellation.
+pub fn plus<C: Coeff, E: Eval>(
+    x: &PolyStream<C, E>,
+    y: &PolyStream<C, E>,
+) -> PolyStream<C, E> {
+    match (x.uncons(), y.uncons()) {
+        (None, _) => y.clone(),
+        (_, None) => x.clone(),
+        (Some(((s, a), tailx, eval)), Some(((t, b), taily, _))) => {
+            match s.cmp(t) {
+                std::cmp::Ordering::Greater => {
+                    // (s, a) #:: tailx.map(plus(_, y))
+                    let y2 = y.clone();
+                    let merged =
+                        eval.map(tailx, move |tx: PolyStream<C, E>| plus(&tx, &y2));
+                    Stream::cons_cell(eval.clone(), (s.clone(), a.clone()), merged)
+                }
+                std::cmp::Ordering::Less => {
+                    // (t, b) #:: taily.map(plus(x, _))
+                    let x2 = x.clone();
+                    let merged =
+                        eval.map(taily, move |ty: PolyStream<C, E>| plus(&x2, &ty));
+                    Stream::cons_cell(eval.clone(), (t.clone(), b.clone()), merged)
+                }
+                std::cmp::Ordering::Equal => {
+                    let c = a.add(b);
+                    // for (sx <- tailx; sy <- taily) yield plus(sx, sy)
+                    let taily2 = taily.clone();
+                    let eval2 = eval.clone();
+                    let both = eval.flat_map(tailx, move |tx: PolyStream<C, E>| {
+                        eval2.map(&taily2, move |ty: PolyStream<C, E>| plus(&tx, &ty))
+                    });
+                    let result = Stream::cons_cell(eval.clone(), (s.clone(), c.clone()), both);
+                    if !c.is_zero() {
+                        result
+                    } else {
+                        // Cancellation: the paper's forced result.tail
+                        // (the unavoidable Await.result).
+                        result.tail().expect("cons has a tail").clone()
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The paper's `times`: fold `multiply`-and-`plus` over the terms of `y`.
+pub fn times<C: Coeff, E: Eval>(
+    eval: &E,
+    x: &Polynomial<C>,
+    y: &Polynomial<C>,
+) -> PolyStream<C, E> {
+    assert_eq!(x.nvars(), y.nvars(), "mixed variable counts");
+    let x_stream: PolyStream<C, E> = Stream::from_vec(eval.clone(), x.terms().to_vec());
+    let mut acc: PolyStream<C, E> = Stream::Empty;
+    for (m, c) in y.terms() {
+        let product = multiply(&x_stream, m, c);
+        acc = plus(&acc, &product);
+    }
+    acc
+}
+
+/// Run [`times`] to completion and collect into a strict [`Polynomial`]
+/// (the paper's final `.force`).
+pub fn stream_times<C: Coeff, E: Eval>(
+    eval: &E,
+    x: &Polynomial<C>,
+    y: &Polynomial<C>,
+) -> Polynomial<C> {
+    let result = times(eval, x, y);
+    collect(x.nvars(), &result)
+}
+
+/// Collect a (sorted, canonical) term stream into a strict polynomial,
+/// verifying canonical form on the way out.
+pub fn collect<C: Coeff, E: Eval>(nvars: usize, s: &PolyStream<C, E>) -> Polynomial<C> {
+    let terms = s.to_vec();
+    debug_assert!(
+        terms.windows(2).all(|w| w[0].0 > w[1].0),
+        "stream result not strictly descending"
+    );
+    // From_terms re-canonicalizes defensively (cheap: input is sorted).
+    Polynomial::from_terms(nvars, terms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Executor;
+    use crate::poly::parse_polynomial;
+    use crate::susp::{FutureEval, LazyEval, StrictEval};
+    use crate::testkit::prop::{runner, Gen};
+
+    const XYZ: &[&str] = &["x", "y", "z"];
+
+    fn p(s: &str) -> Polynomial<i64> {
+        parse_polynomial(s, XYZ).unwrap()
+    }
+
+    fn stream_of<E: Eval>(eval: &E, poly: &Polynomial<i64>) -> PolyStream<i64, E> {
+        Stream::from_vec(eval.clone(), poly.terms().to_vec())
+    }
+
+    #[test]
+    fn multiply_by_term_matches_strict() {
+        let a = p("x^2 + 2*x*y + y^2");
+        let m = Monomial::from_exps(vec![0, 0, 1]);
+        let got = collect(3, &multiply(&stream_of(&LazyEval, &a), &m, &3));
+        assert_eq!(got, a.mul_term(&m, &3));
+    }
+
+    #[test]
+    fn multiply_by_zero_coefficient() {
+        let a = p("x + y");
+        let got = collect(3, &multiply(&stream_of(&LazyEval, &a), &Monomial::one(3), &0));
+        assert!(got.is_zero());
+    }
+
+    #[test]
+    fn plus_merges_disjoint() {
+        let a = p("x^2");
+        let b = p("y + 1");
+        let got = collect(3, &plus(&stream_of(&LazyEval, &a), &stream_of(&LazyEval, &b)));
+        assert_eq!(got, a.add(&b));
+    }
+
+    #[test]
+    fn plus_combines_equal_monomials() {
+        let a = p("x + y");
+        let b = p("x - y");
+        let got = collect(3, &plus(&stream_of(&LazyEval, &a), &stream_of(&LazyEval, &b)));
+        assert_eq!(got, p("2*x"));
+    }
+
+    #[test]
+    fn plus_with_cancellation_forces_tail() {
+        // x - x cancels at the head: exercises the paper's Await path.
+        let a = p("x + 1");
+        let b = p("-x + 2");
+        let got = collect(3, &plus(&stream_of(&LazyEval, &a), &stream_of(&LazyEval, &b)));
+        assert_eq!(got, p("3"));
+    }
+
+    #[test]
+    fn plus_total_cancellation_gives_zero() {
+        let a = p("x^2 + y + 4");
+        let got = collect(3, &plus(&stream_of(&LazyEval, &a), &stream_of(&LazyEval, &a.neg())));
+        assert!(got.is_zero());
+    }
+
+    #[test]
+    fn times_matches_classical_small() {
+        let a = p("x + y + 1");
+        let b = p("x - y + 2");
+        assert_eq!(stream_times(&LazyEval, &a, &b), a.mul(&b));
+    }
+
+    #[test]
+    fn times_with_zero_and_one() {
+        let a = p("x^2 + 3*y");
+        let zero = Polynomial::<i64>::zero(3);
+        let one = Polynomial::<i64>::one(3);
+        assert!(stream_times(&LazyEval, &a, &zero).is_zero());
+        assert!(stream_times(&LazyEval, &zero, &a).is_zero());
+        assert_eq!(stream_times(&LazyEval, &a, &one), a);
+    }
+
+    #[test]
+    fn all_strategies_agree_on_fateman_slice() {
+        // (1+x+y+z)^4 × ((1+x+y+z)^4 + 1): the paper's benchmark shape,
+        // scaled down.
+        let base = p("1 + x + y + z").pow(4);
+        let other = base.add(&Polynomial::one(3));
+        let want = base.mul(&other);
+        assert_eq!(stream_times(&LazyEval, &base, &other), want);
+        assert_eq!(stream_times(&StrictEval, &base, &other), want);
+        let ex = Executor::new(4);
+        assert_eq!(stream_times(&FutureEval::new(ex), &base, &other), want);
+        let ex1 = Executor::new(1);
+        assert_eq!(stream_times(&FutureEval::new(ex1), &base, &other), want);
+    }
+
+    #[test]
+    fn bigint_coefficients_roundtrip() {
+        use crate::bigint::BigInt;
+        let factor = BigInt::from(100_000_000_001i64);
+        let base = p("1 + x + y + z").pow(3).map_coeffs(|c| BigInt::from(*c).mul(&factor));
+        let other = base.clone();
+        let want = base.mul(&other);
+        let ex = Executor::new(2);
+        assert_eq!(stream_times(&FutureEval::new(ex), &base, &other), want);
+    }
+
+    #[test]
+    fn prop_stream_times_equals_classical() {
+        let mut r = runner(60);
+        r.run(|g: &mut Gen| {
+            let a = random_poly(g, 3, 7);
+            let b = random_poly(g, 3, 7);
+            assert_eq!(stream_times(&LazyEval, &a, &b), a.mul(&b), "a={a} b={b}");
+        });
+    }
+
+    #[test]
+    fn prop_future_stream_times_equals_classical() {
+        let ex = Executor::new(3);
+        let eval = FutureEval::new(ex);
+        let mut r = runner(25);
+        r.run(move |g: &mut Gen| {
+            let a = random_poly(g, 2, 6);
+            let b = random_poly(g, 2, 6);
+            assert_eq!(stream_times(&eval, &a, &b), a.mul(&b), "a={a} b={b}");
+        });
+    }
+
+    /// Random small polynomial (duplicated from polynomial.rs tests to
+    /// keep modules self-contained).
+    fn random_poly(g: &mut Gen, nvars: usize, max_terms: usize) -> Polynomial<i64> {
+        let terms = g.vec(0..max_terms.max(1), |g| {
+            let exps: Vec<u16> = (0..nvars).map(|_| g.u32_in(0..5) as u16).collect();
+            (Monomial::from_exps(exps), g.i64_in(-9..=9))
+        });
+        Polynomial::from_terms(nvars, terms)
+    }
+}

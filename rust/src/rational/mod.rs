@@ -1,0 +1,228 @@
+//! Exact rational numbers over [`BigInt`] — the coefficient field the
+//! Gröbner application runs on.
+//!
+//! Floating-point Buchberger is numerically unstable: terms that should
+//! cancel exactly leave ~1e-17 residues which then masquerade as new
+//! leading terms and corrupt the basis (observed directly in this repo's
+//! first f64 attempt — see EXPERIMENTS.md). `Rational` keeps every
+//! reduction exact.
+//!
+//! Representation: `num / den`, always normalized — `den > 0`,
+//! `gcd(|num|, den) = 1`, and zero is `0/1`.
+
+use crate::bigint::BigInt;
+use crate::poly::{Coeff, FieldCoeff};
+
+/// An exact rational number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Rational {
+    num: BigInt,
+    den: BigInt, // invariant: positive
+}
+
+impl Rational {
+    pub fn zero() -> Self {
+        Rational { num: BigInt::zero(), den: BigInt::one() }
+    }
+
+    pub fn one() -> Self {
+        Rational { num: BigInt::one(), den: BigInt::one() }
+    }
+
+    /// Build and normalize. Panics if `den` is zero.
+    pub fn new(num: BigInt, den: BigInt) -> Self {
+        assert!(!den.is_zero(), "rational with zero denominator");
+        Rational { num, den }.normalize()
+    }
+
+    pub fn from_int(v: impl Into<BigInt>) -> Self {
+        Rational { num: v.into(), den: BigInt::one() }
+    }
+
+    pub fn numerator(&self) -> &BigInt {
+        &self.num
+    }
+
+    pub fn denominator(&self) -> &BigInt {
+        &self.den
+    }
+
+    pub fn is_integer(&self) -> bool {
+        self.den == BigInt::one()
+    }
+
+    pub fn recip(&self) -> Rational {
+        assert!(!self.num.is_zero(), "reciprocal of zero");
+        Rational::new(self.den.clone(), self.num.clone())
+    }
+
+    fn normalize(mut self) -> Self {
+        if self.num.is_zero() {
+            return Rational::zero();
+        }
+        if self.den.is_negative() {
+            self.num = self.num.neg();
+            self.den = self.den.neg();
+        }
+        let g = self.num.gcd(&self.den);
+        if g != BigInt::one() {
+            self.num = self.num.div_exact(&g);
+            self.den = self.den.div_exact(&g);
+        }
+        self
+    }
+}
+
+impl From<i64> for Rational {
+    fn from(v: i64) -> Self {
+        Rational::from_int(v)
+    }
+}
+
+impl From<i32> for Rational {
+    fn from(v: i32) -> Self {
+        Rational::from_int(v as i64)
+    }
+}
+
+impl std::fmt::Display for Rational {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_integer() {
+            write!(f, "{}", self.num)
+        } else {
+            write!(f, "{}/{}", self.num, self.den)
+        }
+    }
+}
+
+impl Coeff for Rational {
+    fn zero() -> Self {
+        Rational::zero()
+    }
+
+    fn one() -> Self {
+        Rational::one()
+    }
+
+    fn is_zero(&self) -> bool {
+        self.num.is_zero()
+    }
+
+    fn add(&self, other: &Self) -> Self {
+        // a/b + c/d = (ad + cb) / bd
+        let num = &(&self.num * &other.den) + &(&other.num * &self.den);
+        let den = &self.den * &other.den;
+        Rational::new(num, den)
+    }
+
+    fn mul(&self, other: &Self) -> Self {
+        Rational::new(&self.num * &other.num, &self.den * &other.den)
+    }
+
+    fn neg(&self) -> Self {
+        Rational { num: self.num.neg(), den: self.den.clone() }
+    }
+
+    fn to_exact_f64(&self) -> Option<f64> {
+        if !self.is_integer() {
+            return None;
+        }
+        self.num.to_i128().and_then(|v| v.to_exact_f64())
+    }
+
+    fn from_exact_f64(v: f64) -> Option<Self> {
+        i128::from_exact_f64(v).map(|i| Rational::from_int(BigInt::from(i)))
+    }
+}
+
+impl FieldCoeff for Rational {
+    fn div(&self, other: &Self) -> Self {
+        assert!(!other.is_zero(), "rational division by zero");
+        Rational::new(&self.num * &other.den, &self.den * &other.num)
+    }
+}
+
+impl PartialOrd for Rational {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Rational {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // a/b vs c/d  (b, d > 0)  ⇔  ad vs cb
+        (&self.num * &other.den).cmp(&(&other.num * &self.den))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::{runner, Gen};
+
+    fn q(n: i64, d: i64) -> Rational {
+        Rational::new(BigInt::from(n), BigInt::from(d))
+    }
+
+    #[test]
+    fn normalization() {
+        assert_eq!(q(2, 4), q(1, 2));
+        assert_eq!(q(-2, -4), q(1, 2));
+        assert_eq!(q(2, -4), q(-1, 2));
+        assert_eq!(q(0, 5), Rational::zero());
+        assert_eq!(q(6, 3).to_string(), "2");
+        assert_eq!(q(1, 3).to_string(), "1/3");
+        assert_eq!(q(-1, 3).to_string(), "-1/3");
+    }
+
+    #[test]
+    #[should_panic(expected = "zero denominator")]
+    fn zero_denominator_panics() {
+        let _ = Rational::new(BigInt::one(), BigInt::zero());
+    }
+
+    #[test]
+    fn field_operations() {
+        assert_eq!(q(1, 2).add(&q(1, 3)), q(5, 6));
+        assert_eq!(q(1, 2).mul(&q(2, 3)), q(1, 3));
+        assert_eq!(FieldCoeff::div(&q(1, 2), &q(3, 4)), q(2, 3));
+        assert_eq!(q(1, 3).add(&q(-1, 3)), Rational::zero());
+        assert_eq!(q(2, 5).recip(), q(5, 2));
+        assert_eq!(q(7, 3).neg().add(&q(7, 3)), Rational::zero());
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(q(1, 3) < q(1, 2));
+        assert!(q(-1, 2) < q(1, 3));
+        assert!(q(2, 4) == q(1, 2));
+    }
+
+    #[test]
+    fn exact_f64_bridge() {
+        assert_eq!(q(6, 3).to_exact_f64(), Some(2.0));
+        assert_eq!(q(1, 3).to_exact_f64(), None);
+        assert_eq!(Rational::from_exact_f64(5.0), Some(q(5, 1)));
+        assert_eq!(Rational::from_exact_f64(0.5), None);
+    }
+
+    #[test]
+    fn prop_field_axioms() {
+        let mut r = runner(300);
+        r.run(|g: &mut Gen| {
+            let a = q(g.i64_in(-50..=50), g.i64_in(1..=20));
+            let b = q(g.i64_in(-50..=50), g.i64_in(1..=20));
+            let c = q(g.i64_in(-50..=50), g.i64_in(1..=20));
+            assert_eq!(a.add(&b), b.add(&a));
+            assert_eq!(a.mul(&b), b.mul(&a));
+            assert_eq!(a.add(&b).add(&c), a.add(&b.add(&c)));
+            assert_eq!(a.mul(&b).mul(&c), a.mul(&b.mul(&c)));
+            assert_eq!(a.mul(&b.add(&c)), a.mul(&b).add(&a.mul(&c)));
+            assert_eq!(a.add(&a.neg()), Rational::zero());
+            if !b.is_zero() {
+                // (a/b)·b = a
+                assert_eq!(FieldCoeff::div(&a, &b).mul(&b), a);
+            }
+        });
+    }
+}

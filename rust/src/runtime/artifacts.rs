@@ -1,0 +1,128 @@
+//! Artifact manifest: which AOT-compiled HLO modules exist and at which
+//! shapes. Written by `python -m compile.aot`, parsed with the same
+//! TOML-subset parser the config system uses.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::parse_toml_subset;
+
+/// Kind + compiled shape of one artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `poly_block_outer`: term-block outer product.
+    PolyOuter { bx: usize, by: usize, nvars: usize },
+    /// `sieve_block_mask`: trial-division survivor mask.
+    SieveMask { candidates: usize, primes: usize },
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: ArtifactKind,
+}
+
+/// Parse `<dir>/manifest.toml` into artifact specs.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let manifest_path = dir.join("manifest.toml");
+    let text = std::fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {}", manifest_path.display()))?;
+    let values = parse_toml_subset(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // Group the flattened `section.key` entries back into sections.
+    let mut sections: std::collections::BTreeMap<String, Vec<(String, String)>> =
+        Default::default();
+    for (k, v) in &values {
+        let Some((section, key)) = k.split_once('.') else {
+            bail!("manifest key outside a section: {k}");
+        };
+        sections
+            .entry(section.to_string())
+            .or_default()
+            .push((key.to_string(), v.as_raw_string()));
+    }
+
+    let mut specs = Vec::new();
+    for (name, kvs) in sections {
+        let get = |key: &str| -> Result<String> {
+            kvs.iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v.clone())
+                .with_context(|| format!("artifact {name}: missing key {key}"))
+        };
+        let get_usize = |key: &str| -> Result<usize> {
+            get(key)?.parse().with_context(|| format!("artifact {name}: bad {key}"))
+        };
+        let kind = match get("kind")?.as_str() {
+            "poly_outer" => ArtifactKind::PolyOuter {
+                bx: get_usize("bx")?,
+                by: get_usize("by")?,
+                nvars: get_usize("nvars")?,
+            },
+            "sieve_mask" => ArtifactKind::SieveMask {
+                candidates: get_usize("candidates")?,
+                primes: get_usize("primes")?,
+            },
+            other => bail!("artifact {name}: unknown kind {other}"),
+        };
+        let path = dir.join(get("path")?);
+        specs.push(ArtifactSpec { name: name.clone(), path, kind });
+    }
+    if specs.is_empty() {
+        bail!("manifest at {} lists no artifacts", manifest_path.display());
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(content: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "sfut-manifest-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.toml"), content).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_both_kinds() {
+        let dir = write_manifest(
+            "[poly_outer_8x8]\npath = \"p.hlo.txt\"\nkind = \"poly_outer\"\n\
+             bx = 8\nby = 8\nnvars = 4\n\
+             [sieve_mask_128x16]\npath = \"s.hlo.txt\"\nkind = \"sieve_mask\"\n\
+             candidates = 128\nprimes = 16\n",
+        );
+        let specs = load_manifest(&dir).unwrap();
+        assert_eq!(specs.len(), 2);
+        let poly = specs.iter().find(|s| s.name == "poly_outer_8x8").unwrap();
+        assert_eq!(poly.kind, ArtifactKind::PolyOuter { bx: 8, by: 8, nvars: 4 });
+        assert!(poly.path.ends_with("p.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_key_is_reported() {
+        let dir = write_manifest("[a]\npath = \"x\"\nkind = \"poly_outer\"\nbx = 8\n");
+        let err = load_manifest(&dir).unwrap_err();
+        assert!(err.to_string().contains("missing key") || format!("{err:#}").contains("by"));
+    }
+
+    #[test]
+    fn unknown_kind_is_reported() {
+        let dir = write_manifest("[a]\npath = \"x\"\nkind = \"mystery\"\n");
+        assert!(load_manifest(&dir).is_err());
+    }
+
+    #[test]
+    fn empty_manifest_is_error() {
+        let dir = write_manifest("# nothing here\n");
+        assert!(load_manifest(&dir).is_err());
+    }
+}

@@ -1,0 +1,337 @@
+//! The PJRT engine-service thread.
+//!
+//! Owns the (non-`Send`) `PjRtClient` and all compiled executables;
+//! serves block-kernel requests over an MPSC channel. Startup compiles
+//! every artifact in the manifest eagerly, so the first hot-path call
+//! pays no compile latency.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use log::{debug, info};
+
+use super::artifacts::{load_manifest, ArtifactKind, ArtifactSpec};
+use crate::exec::Executor;
+
+/// Request/response protocol between callers and the engine thread.
+enum Request {
+    PolyOuter {
+        bx: usize,
+        by: usize,
+        x_exps: Vec<i32>,
+        x_coefs: Vec<f64>,
+        y_exps: Vec<i32>,
+        y_coefs: Vec<f64>,
+        reply: mpsc::SyncSender<Result<(Vec<i32>, Vec<f64>)>>,
+    },
+    SieveMask {
+        candidates: Vec<i32>,
+        primes: Vec<i32>,
+        reply: mpsc::SyncSender<Result<Vec<i32>>>,
+    },
+    Shutdown,
+}
+
+/// Instantaneous engine counters.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub poly_calls: u64,
+    pub sieve_calls: u64,
+    pub total_exec_nanos: u64,
+}
+
+struct Shared {
+    poly_calls: AtomicU64,
+    sieve_calls: AtomicU64,
+    total_exec_nanos: AtomicU64,
+}
+
+/// Handle to the engine-service thread. Cheap to clone; the thread shuts
+/// down when the last handle drops.
+#[derive(Clone)]
+pub struct XlaEngine {
+    tx: mpsc::Sender<Request>,
+    /// Compiled poly shapes (bx, by) → nvars.
+    poly_shapes: BTreeMap<(usize, usize), usize>,
+    /// Compiled sieve shapes (candidates, primes).
+    sieve_shapes: Vec<(usize, usize)>,
+    shared: Arc<Shared>,
+    platform: String,
+}
+
+impl XlaEngine {
+    /// Load the manifest in `dir`, compile every artifact on a fresh
+    /// engine thread, and return a handle once everything is ready.
+    pub fn start(dir: &Path) -> Result<XlaEngine> {
+        let specs = load_manifest(dir)?;
+        let shared = Arc::new(Shared {
+            poly_calls: AtomicU64::new(0),
+            sieve_calls: AtomicU64::new(0),
+            total_exec_nanos: AtomicU64::new(0),
+        });
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<String>>(1);
+        let specs_for_thread = specs.clone();
+        let shared2 = Arc::clone(&shared);
+        std::thread::Builder::new()
+            .name("sfut-xla-engine".to_string())
+            .spawn(move || engine_thread(specs_for_thread, rx, ready_tx, shared2))
+            .context("spawning engine thread")?;
+        let platform = ready_rx
+            .recv()
+            .context("engine thread died during startup")??;
+
+        let mut poly_shapes = BTreeMap::new();
+        let mut sieve_shapes = Vec::new();
+        for s in &specs {
+            match s.kind {
+                ArtifactKind::PolyOuter { bx, by, nvars } => {
+                    poly_shapes.insert((bx, by), nvars);
+                }
+                ArtifactKind::SieveMask { candidates, primes } => {
+                    sieve_shapes.push((candidates, primes));
+                }
+            }
+        }
+        sieve_shapes.sort_unstable();
+        Ok(XlaEngine { tx, poly_shapes, sieve_shapes, shared, platform })
+    }
+
+    /// PJRT platform name ("Host" for the CPU plugin).
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Compiled poly-outer shapes, ascending.
+    pub fn poly_shapes(&self) -> Vec<(usize, usize, usize)> {
+        self.poly_shapes.iter().map(|(&(bx, by), &v)| (bx, by, v)).collect()
+    }
+
+    pub fn smallest_poly_shape(&self) -> Option<(usize, usize, usize)> {
+        self.poly_shapes().into_iter().next()
+    }
+
+    /// Largest compiled (bx, by, nvars).
+    pub fn largest_poly_shape(&self) -> Option<(usize, usize, usize)> {
+        self.poly_shapes().into_iter().last()
+    }
+
+    /// Pick the smallest compiled poly shape fitting (nx, ny); falls back
+    /// to the largest shape (caller then splits).
+    pub fn pick_poly_shape(&self, nx: usize, ny: usize) -> Option<(usize, usize, usize)> {
+        self.poly_shapes()
+            .into_iter()
+            .find(|&(bx, by, _)| bx >= nx && by >= ny)
+            .or_else(|| self.largest_poly_shape())
+    }
+
+    pub fn sieve_shapes(&self) -> &[(usize, usize)] {
+        &self.sieve_shapes
+    }
+
+    pub fn smallest_sieve_shape(&self) -> Option<(usize, usize)> {
+        self.sieve_shapes.first().copied()
+    }
+
+    /// Execute the poly-outer artifact compiled at exactly `(bx, by)`.
+    /// Inputs must already be padded: `x_exps.len() == bx * nvars`, etc.
+    pub fn poly_outer(
+        &self,
+        bx: usize,
+        by: usize,
+        x_exps: &[i32],
+        x_coefs: &[f64],
+        y_exps: &[i32],
+        y_coefs: &[f64],
+    ) -> Result<(Vec<i32>, Vec<f64>)> {
+        let nvars = *self
+            .poly_shapes
+            .get(&(bx, by))
+            .ok_or_else(|| anyhow!("no poly_outer artifact compiled at {bx}x{by}"))?;
+        anyhow::ensure!(x_exps.len() == bx * nvars, "x_exps len");
+        anyhow::ensure!(x_coefs.len() == bx, "x_coefs len");
+        anyhow::ensure!(y_exps.len() == by * nvars, "y_exps len");
+        anyhow::ensure!(y_coefs.len() == by, "y_coefs len");
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::PolyOuter {
+                bx,
+                by,
+                x_exps: x_exps.to_vec(),
+                x_coefs: x_coefs.to_vec(),
+                y_exps: y_exps.to_vec(),
+                y_coefs: y_coefs.to_vec(),
+                reply,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        self.shared.poly_calls.fetch_add(1, Ordering::Relaxed);
+        // A pool worker may be the caller: park under managed blocking.
+        Executor::blocking(|| rx.recv()).map_err(|_| anyhow!("engine dropped reply"))?
+    }
+
+    /// Execute the sieve-mask artifact compiled at exactly
+    /// `(candidates.len(), primes.len())`.
+    pub fn sieve_mask(&self, candidates: &[i32], primes: &[i32]) -> Result<Vec<i32>> {
+        let shape = (candidates.len(), primes.len());
+        anyhow::ensure!(
+            self.sieve_shapes.contains(&shape),
+            "no sieve_mask artifact compiled at {}x{}",
+            shape.0,
+            shape.1
+        );
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::SieveMask {
+                candidates: candidates.to_vec(),
+                primes: primes.to_vec(),
+                reply,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        self.shared.sieve_calls.fetch_add(1, Ordering::Relaxed);
+        Executor::blocking(|| rx.recv()).map_err(|_| anyhow!("engine dropped reply"))?
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            poly_calls: self.shared.poly_calls.load(Ordering::Relaxed),
+            sieve_calls: self.shared.sieve_calls.load(Ordering::Relaxed),
+            total_exec_nanos: self.shared.total_exec_nanos.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Eager shutdown (otherwise happens when the last handle drops).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+/// Body of the engine thread: compile everything, then serve.
+fn engine_thread(
+    specs: Vec<ArtifactSpec>,
+    rx: mpsc::Receiver<Request>,
+    ready_tx: mpsc::SyncSender<Result<String>>,
+    shared: Arc<Shared>,
+) {
+    let setup = || -> Result<(
+        xla::PjRtClient,
+        BTreeMap<(usize, usize), (xla::PjRtLoadedExecutable, usize)>,
+        BTreeMap<(usize, usize), xla::PjRtLoadedExecutable>,
+    )> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        let mut poly = BTreeMap::new();
+        let mut sieve = BTreeMap::new();
+        for spec in &specs {
+            let proto = xla::HloModuleProto::from_text_file(&spec.path)
+                .map_err(|e| anyhow!("parsing {}: {e}", spec.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", spec.name))?;
+            match spec.kind {
+                ArtifactKind::PolyOuter { bx, by, nvars } => {
+                    poly.insert((bx, by), (exe, nvars));
+                }
+                ArtifactKind::SieveMask { candidates, primes } => {
+                    sieve.insert((candidates, primes), exe);
+                }
+            }
+        }
+        Ok((client, poly, sieve))
+    };
+
+    let (client, poly, sieve) = match setup() {
+        Ok(v) => v,
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    info!(
+        "xla engine ready: platform={}, {} poly + {} sieve executables",
+        client.platform_name(),
+        poly.len(),
+        sieve.len()
+    );
+    let _ = ready_tx.send(Ok(client.platform_name()));
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::PolyOuter { bx, by, x_exps, x_coefs, y_exps, y_coefs, reply } => {
+                let start = Instant::now();
+                debug!("poly_outer {bx}x{by}");
+                let result = run_poly(&poly, bx, by, &x_exps, &x_coefs, &y_exps, &y_coefs);
+                shared
+                    .total_exec_nanos
+                    .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let _ = reply.send(result);
+            }
+            Request::SieveMask { candidates, primes, reply } => {
+                let start = Instant::now();
+                let result = run_sieve(&sieve, &candidates, &primes);
+                shared
+                    .total_exec_nanos
+                    .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let _ = reply.send(result);
+            }
+        }
+    }
+    drop(client);
+}
+
+fn run_poly(
+    poly: &BTreeMap<(usize, usize), (xla::PjRtLoadedExecutable, usize)>,
+    bx: usize,
+    by: usize,
+    x_exps: &[i32],
+    x_coefs: &[f64],
+    y_exps: &[i32],
+    y_coefs: &[f64],
+) -> Result<(Vec<i32>, Vec<f64>)> {
+    let Some((exe, nvars)) = poly.get(&(bx, by)) else {
+        bail!("no poly executable at {bx}x{by}");
+    };
+    let v = *nvars as i64;
+    let xe = xla::Literal::vec1(x_exps)
+        .reshape(&[bx as i64, v])
+        .map_err(|e| anyhow!("reshape x_exps: {e}"))?;
+    let xc = xla::Literal::vec1(x_coefs);
+    let ye = xla::Literal::vec1(y_exps)
+        .reshape(&[by as i64, v])
+        .map_err(|e| anyhow!("reshape y_exps: {e}"))?;
+    let yc = xla::Literal::vec1(y_coefs);
+    let result = exe
+        .execute::<xla::Literal>(&[xe, xc, ye, yc])
+        .map_err(|e| anyhow!("execute poly_outer: {e}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetch result: {e}"))?;
+    let (oe, oc) = result.to_tuple2().map_err(|e| anyhow!("untuple: {e}"))?;
+    Ok((
+        oe.to_vec::<i32>().map_err(|e| anyhow!("exps to_vec: {e}"))?,
+        oc.to_vec::<f64>().map_err(|e| anyhow!("coefs to_vec: {e}"))?,
+    ))
+}
+
+fn run_sieve(
+    sieve: &BTreeMap<(usize, usize), xla::PjRtLoadedExecutable>,
+    candidates: &[i32],
+    primes: &[i32],
+) -> Result<Vec<i32>> {
+    let shape = (candidates.len(), primes.len());
+    let Some(exe) = sieve.get(&shape) else {
+        bail!("no sieve executable at {}x{}", shape.0, shape.1);
+    };
+    let c = xla::Literal::vec1(candidates);
+    let p = xla::Literal::vec1(primes);
+    let result = exe
+        .execute::<xla::Literal>(&[c, p])
+        .map_err(|e| anyhow!("execute sieve_mask: {e}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetch result: {e}"))?;
+    let mask = result.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+    mask.to_vec::<i32>().map_err(|e| anyhow!("mask to_vec: {e}"))
+}

@@ -1,0 +1,100 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, built
+//! once by `make artifacts` — Python never runs on the request path) and
+//! execute them from the Rust hot path.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so the
+//! client and its compiled executables live on a dedicated **engine
+//! thread**; callers talk to it through a channel-based service façade
+//! ([`XlaEngine`]). Kernel calls are block-granular (a 128×128 term
+//! outer product per request), so a single service thread sustains the
+//! pipeline easily; the A2 ablation measures the handoff cost.
+//!
+//! [`KernelMultiplier`] / [`KernelSiever`] adapt the engine to the
+//! algorithm-side traits (`poly::BlockMultiplier`, `sieve::BlockSiever`),
+//! padding ragged blocks to the artifact's compiled shape and slicing
+//! results back.
+//!
+//! Everything degrades gracefully: if the artifacts directory is missing
+//! the caller falls back to the pure-Rust block implementations (see
+//! `coordinator::Pipeline`).
+
+mod artifacts;
+mod engine;
+mod multiplier;
+
+pub use artifacts::{load_manifest, ArtifactKind, ArtifactSpec};
+pub use engine::{EngineStats, XlaEngine};
+pub use multiplier::{KernelMultiplier, KernelSiever};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.toml").exists().then_some(dir)
+    }
+
+    #[test]
+    fn manifest_loads_when_built() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let specs = load_manifest(&dir).unwrap();
+        assert!(specs.iter().any(|s| matches!(s.kind, ArtifactKind::PolyOuter { .. })));
+        assert!(specs.iter().any(|s| matches!(s.kind, ArtifactKind::SieveMask { .. })));
+        for s in &specs {
+            assert!(s.path.exists(), "{} missing", s.path.display());
+        }
+    }
+
+    #[test]
+    fn engine_runs_poly_outer_artifact() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let engine = XlaEngine::start(&dir).unwrap();
+        let (bx, by, v) = engine.smallest_poly_shape().unwrap();
+        let x_exps = vec![0i32; bx * v];
+        let x_coefs: Vec<f64> = (0..bx).map(|i| i as f64).collect();
+        let y_exps = vec![1i32; by * v];
+        let y_coefs: Vec<f64> = (0..by).map(|i| (i + 1) as f64).collect();
+        let (oe, oc) = engine.poly_outer(bx, by, &x_exps, &x_coefs, &y_exps, &y_coefs).unwrap();
+        assert_eq!(oe.len(), bx * by * v);
+        assert_eq!(oc.len(), bx * by);
+        // Row-major check: out[i*by + j] = xc[i] * yc[j].
+        assert_eq!(oc[by + 2], 1.0 * 3.0);
+        assert!(oe.iter().all(|&e| e == 1));
+        assert!(engine.stats().poly_calls >= 1);
+    }
+
+    #[test]
+    fn engine_runs_sieve_artifact() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let engine = XlaEngine::start(&dir).unwrap();
+        let (b, p) = engine.smallest_sieve_shape().unwrap();
+        let sentinel = i32::MAX;
+        let mut primes = vec![sentinel; p];
+        primes[0] = 2;
+        primes[1] = 3;
+        let cands: Vec<i32> = (10..10 + b as i32).collect();
+        let mask = engine.sieve_mask(&cands, &primes).unwrap();
+        assert_eq!(mask.len(), b);
+        for (i, &c) in cands.iter().enumerate() {
+            let want = (c % 2 != 0 && c % 3 != 0) as i32;
+            assert_eq!(mask[i], want, "candidate {c}");
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_clean_error() {
+        let err = XlaEngine::start(Path::new("/nonexistent/artifacts"));
+        assert!(err.is_err());
+    }
+}

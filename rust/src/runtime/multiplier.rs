@@ -1,0 +1,235 @@
+//! Adapters from the [`XlaEngine`] to the algorithm-side traits:
+//! ragged-block padding, shape selection, and result slicing.
+
+use std::sync::Arc;
+
+use super::XlaEngine;
+use crate::poly::{BlockMultiplier, TermBlock};
+use crate::sieve::BlockSiever;
+
+/// Pad-value for unused prime lanes: larger than every candidate, so
+/// `c % SENTINEL == c != 0` never eliminates (matches
+/// python/compile/kernels/sievemask.py's contract).
+pub const PRIME_SENTINEL: i32 = i32::MAX;
+
+/// [`BlockMultiplier`] backed by the AOT `poly_outer` artifact.
+///
+/// Blocks are padded with zero coefficients up to the compiled shape;
+/// zero products are dropped again by `TermBlock::unpack` →
+/// `Polynomial::from_terms`. Exponent vectors are padded to the
+/// artifact's `nvars` with zero exponents.
+pub struct KernelMultiplier {
+    engine: Arc<XlaEngine>,
+}
+
+impl KernelMultiplier {
+    pub fn new(engine: Arc<XlaEngine>) -> Self {
+        KernelMultiplier { engine }
+    }
+
+    /// Pad `block` to (rows, nvars_padded); returns (exps, coefs).
+    fn pad(block: &TermBlock, rows: usize, nvars_pad: usize) -> (Vec<i32>, Vec<f64>) {
+        let n = block.count();
+        debug_assert!(n <= rows && block.nvars <= nvars_pad);
+        let mut exps = vec![0i32; rows * nvars_pad];
+        for i in 0..n {
+            exps[i * nvars_pad..i * nvars_pad + block.nvars]
+                .copy_from_slice(&block.exps[i * block.nvars..(i + 1) * block.nvars]);
+        }
+        let mut coefs = vec![0f64; rows];
+        coefs[..n].copy_from_slice(&block.coefs);
+        (exps, coefs)
+    }
+}
+
+impl BlockMultiplier for KernelMultiplier {
+    fn outer_product(&self, x: &TermBlock, y: &TermBlock) -> TermBlock {
+        assert_eq!(x.nvars, y.nvars, "mixed variable counts");
+        let (nx, ny) = (x.count(), y.count());
+        let (bx, by, nvars_pad) = self
+            .engine
+            .pick_poly_shape(nx, ny)
+            .expect("engine has no poly artifacts");
+        assert!(
+            nx <= bx && ny <= by,
+            "block {nx}x{ny} exceeds largest compiled shape {bx}x{by} \
+             (chunked_times clamps chunk_size to max_block)"
+        );
+        assert!(x.nvars <= nvars_pad, "nvars {} exceeds artifact width {nvars_pad}", x.nvars);
+
+        let (xe, xc) = Self::pad(x, bx, nvars_pad);
+        let (ye, yc) = Self::pad(y, by, nvars_pad);
+        let (oe, oc) = self
+            .engine
+            .poly_outer(bx, by, &xe, &xc, &ye, &yc)
+            .expect("poly_outer artifact execution failed");
+
+        // Slice the (bx × by) padded result back to (nx × ny), row-major,
+        // restoring the caller's nvars.
+        let v = x.nvars;
+        let mut exps = Vec::with_capacity(nx * ny * v);
+        let mut coefs = Vec::with_capacity(nx * ny);
+        for i in 0..nx {
+            for j in 0..ny {
+                let row = i * by + j;
+                exps.extend_from_slice(&oe[row * nvars_pad..row * nvars_pad + v]);
+                coefs.push(oc[row]);
+            }
+        }
+        TermBlock { nvars: v, exps, coefs }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-kernel"
+    }
+
+    fn max_block(&self) -> usize {
+        self.engine.largest_poly_shape().map(|(bx, by, _)| bx.min(by)).unwrap_or(0)
+    }
+}
+
+/// [`BlockSiever`] backed by the AOT `sieve_mask` artifact.
+///
+/// Candidate blocks are padded with a repeat of the first candidate (its
+/// mask lanes are discarded); primes are padded with [`PRIME_SENTINEL`].
+/// Prime vectors wider than the artifact are split and the masks ANDed.
+pub struct KernelSiever {
+    engine: Arc<XlaEngine>,
+}
+
+impl KernelSiever {
+    pub fn new(engine: Arc<XlaEngine>) -> Self {
+        KernelSiever { engine }
+    }
+}
+
+impl BlockSiever for KernelSiever {
+    fn survivors(&self, candidates: &[u32], primes: &[u32]) -> Vec<bool> {
+        if candidates.is_empty() {
+            return Vec::new();
+        }
+        let shapes = self.engine.sieve_shapes().to_vec();
+        assert!(!shapes.is_empty(), "engine has no sieve artifacts");
+        // Smallest candidate shape that fits, else the largest (split).
+        let &(cand_b, prime_p) = shapes
+            .iter()
+            .find(|&&(b, _)| b >= candidates.len())
+            .unwrap_or_else(|| shapes.last().unwrap());
+
+        let mut out = vec![true; candidates.len()];
+        for chunk_start in (0..candidates.len()).step_by(cand_b) {
+            let chunk = &candidates[chunk_start..(chunk_start + cand_b).min(candidates.len())];
+            let mut cands = vec![chunk[0] as i32; cand_b];
+            for (i, &c) in chunk.iter().enumerate() {
+                cands[i] = i32::try_from(c).expect("candidate fits i32");
+            }
+            // Split wide prime vectors; AND the masks.
+            let mut prime_chunks: Vec<Vec<i32>> = Vec::new();
+            if primes.is_empty() {
+                prime_chunks.push(vec![PRIME_SENTINEL; prime_p]);
+            }
+            for ps in primes.chunks(prime_p) {
+                let mut padded = vec![PRIME_SENTINEL; prime_p];
+                for (i, &p) in ps.iter().enumerate() {
+                    padded[i] = i32::try_from(p).expect("prime fits i32");
+                }
+                prime_chunks.push(padded);
+            }
+            for padded in &prime_chunks {
+                let mask = self
+                    .engine
+                    .sieve_mask(&cands, padded)
+                    .expect("sieve_mask artifact execution failed");
+                for (i, &m) in mask.iter().take(chunk.len()).enumerate() {
+                    if m == 0 {
+                        out[chunk_start + i] = false;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-kernel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::RustMultiplier;
+    use crate::sieve::RustSiever;
+    use crate::testkit::prop::{runner, Gen};
+    use std::path::Path;
+
+    fn engine() -> Option<Arc<XlaEngine>> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.toml").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Arc::new(XlaEngine::start(&dir).unwrap()))
+    }
+
+    fn random_block(g: &mut Gen, count: usize, nvars: usize) -> TermBlock {
+        TermBlock {
+            nvars,
+            exps: (0..count * nvars).map(|_| g.u32_in(0..20) as i32).collect(),
+            coefs: (0..count).map(|_| g.i64_in(-999..=999) as f64).collect(),
+        }
+    }
+
+    #[test]
+    fn kernel_multiplier_matches_rust_oracle() {
+        let Some(engine) = engine() else { return };
+        let km = KernelMultiplier::new(engine);
+        let mut r = runner(20);
+        r.run(|g: &mut Gen| {
+            let nx = g.usize_in(1..33);
+            let ny = g.usize_in(1..33);
+            let v = g.usize_in(1..8);
+            let x = random_block(g, nx, v);
+            let y = random_block(g, ny, v);
+            let got = km.outer_product(&x, &y);
+            let want = RustMultiplier.outer_product(&x, &y);
+            assert_eq!(got, want, "nx={nx} ny={ny} v={v}");
+        });
+    }
+
+    #[test]
+    fn kernel_multiplier_handles_full_blocks() {
+        let Some(engine) = engine() else { return };
+        let km = KernelMultiplier::new(engine);
+        let max = km.max_block();
+        let mut g = Gen::from_seed(7);
+        let x = random_block(&mut g, max, 8);
+        let y = random_block(&mut g, max, 8);
+        let got = km.outer_product(&x, &y);
+        let want = RustMultiplier.outer_product(&x, &y);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn kernel_siever_matches_rust_oracle() {
+        let Some(engine) = engine() else { return };
+        let ks = KernelSiever::new(engine);
+        let mut r = runner(10);
+        r.run(|g: &mut Gen| {
+            let n = g.usize_in(1..700);
+            let candidates: Vec<u32> = (0..n).map(|_| g.u32_in(2..100_000)).collect();
+            let nprimes = g.usize_in(0..80); // > artifact width: forces split
+            let primes: Vec<u32> = (0..nprimes).map(|_| g.u32_in(2..300)).collect();
+            let got = ks.survivors(&candidates, &primes);
+            let want = RustSiever.survivors(&candidates, &primes);
+            assert_eq!(got, want, "n={n} nprimes={nprimes}");
+        });
+    }
+
+    #[test]
+    fn empty_candidates() {
+        let Some(engine) = engine() else { return };
+        let ks = KernelSiever::new(engine);
+        assert!(ks.survivors(&[], &[2, 3]).is_empty());
+    }
+}

@@ -1,0 +1,176 @@
+//! Chunked sieve — the §7 improvement applied to the primes workload.
+//!
+//! The paper's observation 1 blames the sieve's failure to scale on
+//! too-fine elementary operations (one task per stream cell). Here the
+//! elementary unit is a *block* of candidates:
+//!
+//! 1. **Seed phase (sequential):** sieve candidates up to `√n` with
+//!    per-block trial division, accumulating the seed primes.
+//! 2. **Fan-out phase (parallel):** every remaining block only needs the
+//!    seed primes to be decided, so blocks become independent tasks in a
+//!    future stream — exactly the coarsening §7 asks for.
+//!
+//! Per-block divisibility testing is a dense `candidates × primes`
+//! remainder grid: the [`BlockSiever`] trait lets the runtime swap in the
+//! AOT-compiled Pallas kernel (`sieve_mask`) for the inner loop.
+//!
+//! Note: using the `√n` cutoff is mathematically sound but departs from
+//! the paper's deliberately naive sieve (which divides by every smaller
+//! prime); the chunked variant is *our* extension of the paper's future
+//! work, benchmarked as `A1`/`A2`, never as a reproduction of Table 1's
+//! `primes` rows.
+
+use std::sync::Arc;
+
+use crate::stream::{Chunk, Stream};
+use crate::susp::Eval;
+
+/// Strategy for the dense per-block divisibility test.
+pub trait BlockSiever: Send + Sync + 'static {
+    /// `out[i] == true` iff `candidates[i]` is divisible by **no** element
+    /// of `primes`. `primes` entries are all ≥ 2; a candidate equal to a
+    /// prime divides itself, so callers pass only primes `< candidate`
+    /// (guaranteed here by phase structure: seed primes ≤ √n < block lo).
+    fn survivors(&self, candidates: &[u32], primes: &[u32]) -> Vec<bool>;
+
+    /// Diagnostic name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Portable scalar implementation (also the oracle for the kernel).
+pub struct RustSiever;
+
+impl BlockSiever for RustSiever {
+    fn survivors(&self, candidates: &[u32], primes: &[u32]) -> Vec<bool> {
+        candidates
+            .iter()
+            .map(|&c| primes.iter().all(|&p| c % p != 0))
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-scalar"
+    }
+}
+
+/// All primes below `n`, block-granular, generic over the evaluation
+/// strategy and the block siever.
+pub fn chunked_primes_with_runtime<E: Eval>(
+    eval: E,
+    n: u32,
+    chunk_size: usize,
+    siever: Arc<dyn BlockSiever>,
+) -> Vec<u32> {
+    assert!(chunk_size > 0, "chunk_size must be positive");
+    if n <= 2 {
+        return Vec::new();
+    }
+
+    // Phase 1: sequential seed sieve up to ceil(sqrt(n)) (inclusive).
+    let mut seed_hi = (n as f64).sqrt() as u32 + 1;
+    seed_hi = seed_hi.min(n);
+    let mut seed: Vec<u32> = Vec::new();
+    for c in 2..seed_hi {
+        if seed.iter().take_while(|&&p| p * p <= c).all(|&p| c % p != 0) {
+            seed.push(c);
+        }
+    }
+    if seed_hi >= n {
+        return seed.into_iter().filter(|&p| p < n).collect();
+    }
+    let seed = Arc::new(seed);
+
+    // Phase 2: independent blocks over [seed_hi, n) as a future/lazy
+    // stream of chunks — one suspension per block.
+    let blocks: Vec<(u32, u32)> = {
+        let mut v = Vec::new();
+        let mut lo = seed_hi;
+        while lo < n {
+            let hi = (lo as u64 + chunk_size as u64).min(n as u64) as u32;
+            v.push((lo, hi));
+            lo = hi;
+        }
+        v
+    };
+    let block_stream: Stream<Chunk<u32>, E> = {
+        let seed2 = Arc::clone(&seed);
+        let siever2 = Arc::clone(&siever);
+        Stream::from_vec(eval, blocks).map_elems(move |&(lo, hi)| {
+            let candidates: Vec<u32> = (lo..hi).collect();
+            let mask = siever2.survivors(&candidates, &seed2);
+            debug_assert_eq!(mask.len(), candidates.len());
+            Arc::new(
+                candidates
+                    .into_iter()
+                    .zip(mask)
+                    .filter_map(|(c, keep)| keep.then_some(c))
+                    .collect::<Vec<u32>>(),
+            )
+        })
+    };
+
+    let mut out: Vec<u32> = (*seed).clone();
+    for block in block_stream.iter() {
+        out.extend(block.iter().copied());
+    }
+    out
+}
+
+/// [`chunked_primes_with_runtime`] with the portable scalar siever.
+pub fn chunked_primes<E: Eval>(eval: E, n: u32, chunk_size: usize) -> Vec<u32> {
+    chunked_primes_with_runtime(eval, n, chunk_size, Arc::new(RustSiever))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Executor;
+    use crate::sieve::eratosthenes;
+    use crate::susp::{FutureEval, LazyEval};
+
+    #[test]
+    fn matches_oracle_small() {
+        for n in [0, 2, 3, 4, 5, 10, 30, 100] {
+            assert_eq!(chunked_primes(LazyEval, n, 8), eratosthenes(n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn matches_oracle_across_chunk_sizes() {
+        let oracle = eratosthenes(5000);
+        for chunk in [1, 3, 64, 1000, 10_000] {
+            assert_eq!(chunked_primes(LazyEval, 5000, chunk), oracle, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn future_strategy_matches_lazy() {
+        let oracle = eratosthenes(20_000);
+        let ex = Executor::new(4);
+        assert_eq!(chunked_primes(FutureEval::new(ex), 20_000, 256), oracle);
+    }
+
+    #[test]
+    fn par1_matches() {
+        let ex = Executor::new(1);
+        assert_eq!(chunked_primes(FutureEval::new(ex), 2_000, 64), eratosthenes(2_000));
+    }
+
+    #[test]
+    fn rust_siever_survivors() {
+        let s = RustSiever;
+        let mask = s.survivors(&[10, 11, 12, 13], &[2, 3]);
+        assert_eq!(mask, vec![false, true, false, true]);
+        // No primes: everything survives.
+        assert_eq!(s.survivors(&[4, 6], &[]), vec![true, true]);
+    }
+
+    #[test]
+    fn perfect_square_boundary() {
+        // n = p^2 edge: largest seed prime must still eliminate p^2.
+        let n = 49 * 49; // 2401 = 7^4, sqrt = 49
+        assert_eq!(chunked_primes(LazyEval, n, 37), eratosthenes(n));
+        let n = 2209; // 47^2
+        assert_eq!(chunked_primes(LazyEval, n + 1, 64), eratosthenes(n + 1));
+    }
+}

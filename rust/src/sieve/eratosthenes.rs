@@ -1,0 +1,55 @@
+//! Classical sieve of Eratosthenes — the correctness oracle for every
+//! stream-sieve configuration (not part of the paper's evaluation; the
+//! paper's baseline for *timings* is the parallel-collections `list`
+//! workload, which applies to the polynomial example only).
+
+/// All primes strictly below `n`.
+pub fn eratosthenes(n: u32) -> Vec<u32> {
+    if n <= 2 {
+        return Vec::new();
+    }
+    let n = n as usize;
+    let mut composite = vec![false; n];
+    let mut out = Vec::new();
+    for p in 2..n {
+        if composite[p] {
+            continue;
+        }
+        out.push(p as u32);
+        let mut m = p * p;
+        while m < n {
+            composite[m] = true;
+            m += p;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_cases() {
+        assert!(eratosthenes(0).is_empty());
+        assert!(eratosthenes(2).is_empty());
+        assert_eq!(eratosthenes(3), vec![2]);
+        assert_eq!(eratosthenes(10), vec![2, 3, 5, 7]);
+    }
+
+    #[test]
+    fn prime_counting_checkpoints() {
+        // π(10^k) reference values.
+        assert_eq!(eratosthenes(10).len(), 4);
+        assert_eq!(eratosthenes(100).len(), 25);
+        assert_eq!(eratosthenes(1_000).len(), 168);
+        assert_eq!(eratosthenes(10_000).len(), 1_229);
+        assert_eq!(eratosthenes(100_000).len(), 9_592);
+    }
+
+    #[test]
+    fn paper_workload_sizes() {
+        assert_eq!(eratosthenes(20_000).len(), 2_262); // primes
+        assert_eq!(eratosthenes(60_000).len(), 6_057); // primes_x3
+    }
+}

@@ -1,0 +1,123 @@
+//! The paper's first example (§5): a trial-division prime sieve over the
+//! monadic stream.
+//!
+//! ```text
+//! def primes = sieve(Stream.range(2, n, 1))
+//! def sieve(s: Stream[Int]): Stream[Int] = s match {
+//!   case head#::tail =>
+//!     head#::tail.map(s => sieve(s.filter { _ % head != 0 }))
+//!   case Empty => Empty
+//! }
+//! ```
+//!
+//! The paper is explicit that this is *not* an efficient sieve ("it scans
+//! every divisor of a number up to the number itself") — it is chosen
+//! because each discovered prime adds one more pipeline stage, making it
+//! a stress test for task granularity (observation 1: it does not scale,
+//! elementary operations are too fine-grained).
+//!
+//! This module also provides the chunked variant (§7 improvement) and a
+//! classical Eratosthenes oracle used by tests and the harness to verify
+//! every configuration produces identical primes.
+
+mod chunked;
+mod eratosthenes;
+
+pub use chunked::{chunked_primes, chunked_primes_with_runtime, BlockSiever, RustSiever};
+pub use eratosthenes::eratosthenes;
+
+use crate::stream::Stream;
+use crate::susp::Eval;
+
+/// The paper's recursive sieve: peel the head (a prime), filter its
+/// multiples out of the suspended tail, recurse inside the monad.
+pub fn sieve<E: Eval>(s: Stream<u32, E>) -> Stream<u32, E> {
+    match s.uncons() {
+        None => Stream::Empty,
+        Some((head, tail, eval)) => {
+            let head = *head;
+            let sieved = eval.map(tail, move |t: Stream<u32, E>| {
+                sieve(t.filter(move |x| x % head != 0))
+            });
+            Stream::cons_cell(eval.clone(), head, sieved)
+        }
+    }
+}
+
+/// `primes` / `primes_x3`: all primes below `n`, via [`sieve`] over
+/// `Stream.range(2, n, 1)`. The strategy decides seq vs par — the same
+/// code runs both (the paper's central claim).
+pub fn primes_stream<E: Eval>(eval: E, n: u32) -> Stream<u32, E> {
+    sieve(Stream::range(eval, 2, n))
+}
+
+/// Convenience: run the sieve to completion (the paper's
+/// `primes.force`) and collect.
+pub fn primes<E: Eval>(eval: E, n: u32) -> Vec<u32> {
+    primes_stream(eval, n).to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Executor;
+    use crate::susp::{FutureEval, LazyEval, StrictEval};
+
+    const PRIMES_TO_50: &[u32] = &[2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47];
+
+    #[test]
+    fn lazy_sieve_matches_known_primes() {
+        assert_eq!(primes(LazyEval, 50), PRIMES_TO_50);
+    }
+
+    #[test]
+    fn strict_sieve_matches() {
+        assert_eq!(primes(StrictEval, 50), PRIMES_TO_50);
+    }
+
+    #[test]
+    fn future_sieve_matches_par2() {
+        let ex = Executor::new(2);
+        assert_eq!(primes(FutureEval::new(ex), 50), PRIMES_TO_50);
+    }
+
+    #[test]
+    fn future_sieve_matches_par1() {
+        // The paper's par(1): all overhead, no parallelism, same result.
+        let ex = Executor::new(1);
+        assert_eq!(primes(FutureEval::new(ex), 50), PRIMES_TO_50);
+    }
+
+    #[test]
+    fn all_strategies_agree_with_eratosthenes_1000() {
+        let oracle = eratosthenes(1000);
+        assert_eq!(primes(LazyEval, 1000), oracle);
+        let ex = Executor::new(4);
+        assert_eq!(primes(FutureEval::new(ex), 1000), oracle);
+    }
+
+    #[test]
+    fn empty_and_tiny_ranges() {
+        assert!(primes(LazyEval, 2).is_empty());
+        assert_eq!(primes(LazyEval, 3), vec![2]);
+        assert_eq!(primes(LazyEval, 4), vec![2, 3]);
+    }
+
+    #[test]
+    fn prime_count_at_20000_matches_pi() {
+        // π(20000) = 2262 — the paper's primes workload size.
+        // (Run on the Lazy strategy; the Future variant is exercised at
+        // smaller n above and at full size in the benches. Deep filter
+        // chains need a big stack — same as the CLI's driver thread.)
+        let got = crate::testkit::with_stack(512, || primes(LazyEval, 20_000));
+        assert_eq!(got.len(), 2262);
+        assert_eq!(*got.last().unwrap(), 19_997);
+    }
+
+    #[test]
+    fn sieve_stream_is_incremental_under_lazy() {
+        // Asking for the first few primes must not force the whole range.
+        let s = primes_stream(LazyEval, 1_000_000);
+        assert_eq!(s.take(5).to_vec(), vec![2, 3, 5, 7, 11]);
+    }
+}

@@ -1,0 +1,229 @@
+//! Chunked streams — the paper's §7 improvement hypothesis, made
+//! first-class.
+//!
+//! > "since the minimum size of elementary computations seems to be a key
+//! > factor, we suppose that grouping these in bigger chunks may provide
+//! > better efficiency."
+//!
+//! A [`ChunkedStream`] is a stream whose elements are `Arc<Vec<T>>`
+//! blocks. One suspension (and hence one task under the Future strategy)
+//! now covers `chunk_size` elementary operations, amortizing spawn/await
+//! overhead — and the per-block computation becomes dense enough to
+//! offload to the AOT XLA kernel (see `poly::chunked_mul` and
+//! `runtime`).
+
+use std::sync::Arc;
+
+use super::{Elem, Stream};
+use crate::susp::Eval;
+
+/// A block of elements traveling through a stream as one unit.
+pub type Chunk<T> = Arc<Vec<T>>;
+
+/// Stream of blocks with element-level helpers.
+pub struct ChunkedStream<T: Elem, E: Eval> {
+    inner: Stream<Chunk<T>, E>,
+}
+
+impl<T: Elem, E: Eval> Clone for ChunkedStream<T, E> {
+    fn clone(&self) -> Self {
+        ChunkedStream { inner: self.inner.clone() }
+    }
+}
+
+impl<T: Elem, E: Eval> From<Stream<Chunk<T>, E>> for ChunkedStream<T, E> {
+    fn from(inner: Stream<Chunk<T>, E>) -> Self {
+        ChunkedStream { inner }
+    }
+}
+
+impl<T: Elem, E: Eval> ChunkedStream<T, E> {
+    pub fn empty() -> Self {
+        ChunkedStream { inner: Stream::Empty }
+    }
+
+    /// Chunk a strict sequence into blocks of `chunk_size`.
+    pub fn from_vec(eval: E, items: Vec<T>, chunk_size: usize) -> Self {
+        assert!(chunk_size > 0, "chunk_size must be positive");
+        let blocks: Vec<Chunk<T>> = items
+            .chunks(chunk_size)
+            .map(|c| Arc::new(c.to_vec()))
+            .collect();
+        ChunkedStream { inner: Stream::from_vec(eval, blocks) }
+    }
+
+    /// Re-chunk an element stream into blocks of `chunk_size`,
+    /// suspension-preserving: each block is assembled inside one
+    /// suspension, so under `Future` one task materializes
+    /// `chunk_size` upstream cells.
+    pub fn from_stream(source: Stream<T, E>, chunk_size: usize) -> Self {
+        assert!(chunk_size > 0, "chunk_size must be positive");
+        ChunkedStream { inner: Self::rechunk(source, chunk_size) }
+    }
+
+    fn rechunk(source: Stream<T, E>, chunk_size: usize) -> Stream<Chunk<T>, E> {
+        match source.eval() {
+            None => Stream::Empty,
+            Some(eval) => {
+                let eval = eval.clone();
+                // Assemble the first block strictly (mirrors the paper's
+                // filter scan), suspend the rest.
+                let mut block = Vec::with_capacity(chunk_size);
+                let mut cur = source;
+                while block.len() < chunk_size {
+                    match cur.head() {
+                        None => break,
+                        Some(h) => {
+                            block.push(h.clone());
+                            let next = cur.tail().expect("non-empty").clone();
+                            cur = next;
+                        }
+                    }
+                }
+                if block.is_empty() {
+                    return Stream::Empty;
+                }
+                Stream::cons_with(eval, Arc::new(block), move || {
+                    Self::rechunk(cur, chunk_size)
+                })
+            }
+        }
+    }
+
+    /// The underlying stream of blocks.
+    pub fn blocks(&self) -> &Stream<Chunk<T>, E> {
+        &self.inner
+    }
+
+    pub fn into_blocks(self) -> Stream<Chunk<T>, E> {
+        self.inner
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    /// Map a function over whole blocks (one suspension per block — this
+    /// is where chunking pays off).
+    pub fn map_blocks<U, F>(&self, f: F) -> ChunkedStream<U, E>
+    where
+        U: Elem,
+        F: Fn(&[T]) -> Vec<U> + Send + Sync + Clone + 'static,
+    {
+        ChunkedStream { inner: self.inner.map_elems(move |b| Arc::new(f(b))) }
+    }
+
+    /// Map over single elements, still block-granular under the hood.
+    pub fn map_elems<U, F>(&self, f: F) -> ChunkedStream<U, E>
+    where
+        U: Elem,
+        F: Fn(&T) -> U + Send + Sync + Clone + 'static,
+    {
+        self.map_blocks(move |b| b.iter().map(&f).collect())
+    }
+
+    /// Filter elements; blocks may shrink (empty blocks are dropped at
+    /// flatten time).
+    pub fn filter<P>(&self, p: P) -> ChunkedStream<T, E>
+    where
+        P: Fn(&T) -> bool + Send + Sync + Clone + 'static,
+    {
+        self.map_blocks(move |b| b.iter().filter(|x| p(x)).cloned().collect())
+    }
+
+    /// Flatten back to element granularity (forces progressively).
+    pub fn flatten(&self) -> Vec<T> {
+        let mut out = Vec::new();
+        for block in self.inner.iter() {
+            out.extend(block.iter().cloned());
+        }
+        out
+    }
+
+    /// Total number of elements (forces everything).
+    pub fn element_count(&self) -> usize {
+        self.inner.fold(0, |n, b| n + b.len())
+    }
+
+    /// Number of blocks (forces the spine).
+    pub fn block_count(&self) -> usize {
+        self.inner.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Executor;
+    use crate::susp::{FutureEval, LazyEval};
+
+    #[test]
+    fn from_vec_blocks_correctly() {
+        let cs = ChunkedStream::from_vec(LazyEval, (0..10).collect(), 4);
+        assert_eq!(cs.block_count(), 3); // 4 + 4 + 2
+        assert_eq!(cs.element_count(), 10);
+        assert_eq!(cs.flatten(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn exact_multiple_has_no_ragged_tail() {
+        let cs = ChunkedStream::from_vec(LazyEval, (0..8).collect(), 4);
+        assert_eq!(cs.block_count(), 2);
+    }
+
+    #[test]
+    fn empty_input_gives_empty_stream() {
+        let cs: ChunkedStream<u32, LazyEval> = ChunkedStream::from_vec(LazyEval, vec![], 4);
+        assert!(cs.is_empty());
+        assert_eq!(cs.element_count(), 0);
+    }
+
+    #[test]
+    fn rechunk_stream_preserves_order() {
+        let s = Stream::range(LazyEval, 0, 11);
+        let cs = ChunkedStream::from_stream(s, 3);
+        assert_eq!(cs.flatten(), (0..11).collect::<Vec<_>>());
+        assert_eq!(cs.block_count(), 4); // 3+3+3+2
+    }
+
+    #[test]
+    fn map_blocks_and_elements_agree() {
+        let cs = ChunkedStream::from_vec(LazyEval, (1..=9).collect(), 4);
+        let via_blocks = cs.map_blocks(|b| b.iter().map(|x| x * 2).collect()).flatten();
+        let via_elems = cs.map_elems(|x| x * 2).flatten();
+        assert_eq!(via_blocks, via_elems);
+    }
+
+    #[test]
+    fn filter_shrinks_blocks() {
+        let cs = ChunkedStream::from_vec(LazyEval, (0..20).collect(), 5);
+        let odd = cs.filter(|x| x % 2 == 1);
+        assert_eq!(odd.flatten(), (0..20).filter(|x| x % 2 == 1).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunked_future_pipeline_matches_lazy() {
+        let work = |x: &u32| {
+            // Simulate a non-trivial elementary operation.
+            let mut acc = *x;
+            for _ in 0..10 {
+                acc = acc.wrapping_mul(2654435761).rotate_left(3);
+            }
+            acc
+        };
+        let lazy = ChunkedStream::from_vec(LazyEval, (0..100).collect(), 16)
+            .map_elems(work)
+            .flatten();
+        let ex = Executor::new(3);
+        let fut = ChunkedStream::from_vec(FutureEval::new(ex), (0..100).collect(), 16)
+            .map_elems(work)
+            .flatten();
+        assert_eq!(lazy, fut);
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk_size")]
+    fn zero_chunk_size_panics() {
+        let _ = ChunkedStream::from_vec(LazyEval, vec![1u32], 0);
+    }
+}

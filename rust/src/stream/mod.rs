@@ -1,0 +1,315 @@
+//! The paper's monadic Stream (§4).
+//!
+//! A `Stream<T, E>` is a cons list whose tail is suspended in the monad
+//! selected by the [`Eval`] strategy `E`:
+//!
+//! ```text
+//! case class Cons[+A](hd: A, tl: Future[Stream[A]]) extends Stream[A]
+//! ```
+//!
+//! * With [`LazyEval`](crate::susp::LazyEval) this is Scala's `Stream`
+//!   (memoizing, demand-driven, sequential).
+//! * With [`FutureEval`](crate::susp::FutureEval) every tail starts
+//!   computing asynchronously the moment its cell is constructed
+//!   (Figure 1) — the same algorithm code becomes pipeline-parallel.
+//!
+//! Following the paper, combinators never force the tail on the calling
+//! thread; they *forward* the suspension with [`Eval::map`] /
+//! [`Eval::flat_map`]. The only forcing entry points are [`Stream::tail`]
+//! (the paper's `Await.result`), the scan loop inside [`Stream::filter`]
+//! / [`Stream::dropped`] (the paper's `while (!rest.isEmpty && ...)`),
+//! and the terminal consumers (`force`, `to_vec`, `fold`, `iter`).
+
+mod chunked;
+mod ops;
+mod ops2;
+
+pub use chunked::{Chunk, ChunkedStream};
+
+use std::sync::Arc;
+
+use crate::susp::{Eval, Susp};
+
+/// Element bound: everything a head must satisfy to cross task
+/// boundaries. Blanket-implemented.
+pub trait Elem: Clone + Send + Sync + 'static {}
+impl<T: Clone + Send + Sync + 'static> Elem for T {}
+
+/// A monadic stream. Cheap to clone (empty or one `Arc`).
+pub enum Stream<T: Elem, E: Eval> {
+    Empty,
+    Cons(Arc<Cons<T, E>>),
+}
+
+/// An elementary cell: evaluated head, suspended tail, plus the strategy
+/// handle (the paper's implicit ExecutionContext travels with the cell).
+pub struct Cons<T: Elem, E: Eval> {
+    head: T,
+    /// `None` only transiently during iterative drop.
+    tail: Option<E::Cell<Stream<T, E>>>,
+    eval: E,
+}
+
+impl<T: Elem, E: Eval> Clone for Stream<T, E> {
+    fn clone(&self) -> Self {
+        match self {
+            Stream::Empty => Stream::Empty,
+            Stream::Cons(c) => Stream::Cons(Arc::clone(c)),
+        }
+    }
+}
+
+impl<T: Elem, E: Eval> Drop for Cons<T, E> {
+    /// Dismantle memoized chains iteratively. The default recursive drop
+    /// of a linked spine overflows the stack on long streams (the paper's
+    /// workloads run to tens of thousands of cells); instead, steal each
+    /// uniquely-owned, already-computed tail and unlink it in a loop.
+    /// (§Perf opt-1: the stolen tail slot is an `Option` taken in place,
+    /// so teardown allocates nothing.)
+    fn drop(&mut self) {
+        let mut cell = self.tail.take();
+        while let Some(c) = cell {
+            match c.into_ready() {
+                Some(Stream::Cons(arc)) => match Arc::try_unwrap(arc) {
+                    Ok(mut cons) => {
+                        cell = cons.tail.take();
+                        // `cons` drops here with an empty tail slot: no
+                        // recursion.
+                    }
+                    Err(_shared) => break, // another handle owns the rest
+                },
+                _ => break, // empty, pending, shared, or poisoned
+            }
+        }
+    }
+}
+
+impl<T: Elem, E: Eval> Stream<T, E> {
+    /// The empty stream.
+    pub fn empty() -> Self {
+        Stream::Empty
+    }
+
+    /// `cons(hd, tl)` with an already-suspended tail — the paper's `#::`.
+    pub fn cons_cell(eval: E, head: T, tail: E::Cell<Stream<T, E>>) -> Self {
+        Stream::Cons(Arc::new(Cons { head, tail: Some(tail), eval }))
+    }
+
+    /// `cons(hd, suspend(tl))`: suspend a tail computation. For the
+    /// Future strategy the computation is scheduled immediately.
+    pub fn cons_with(
+        eval: E,
+        head: T,
+        tail: impl FnOnce() -> Stream<T, E> + Send + 'static,
+    ) -> Self {
+        let cell = eval.suspend(tail);
+        Stream::cons_cell(eval, head, cell)
+    }
+
+    /// A single-element stream.
+    pub fn singleton(eval: E, head: T) -> Self {
+        let cell = eval.ready(Stream::Empty);
+        Stream::cons_cell(eval, head, cell)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        matches!(self, Stream::Empty)
+    }
+
+    /// Head of a non-empty stream.
+    pub fn head(&self) -> Option<&T> {
+        match self {
+            Stream::Empty => None,
+            Stream::Cons(c) => Some(&c.head),
+        }
+    }
+
+    /// The paper's *extractor*: head plus the still-suspended tail cell.
+    /// This is the non-forcing access path every combinator uses.
+    pub fn uncons(&self) -> Option<(&T, &E::Cell<Stream<T, E>>, &E)> {
+        match self {
+            Stream::Empty => None,
+            Stream::Cons(c) => {
+                Some((&c.head, c.tail.as_ref().expect("tail present outside drop"), &c.eval))
+            }
+        }
+    }
+
+    /// Force the tail — the paper's
+    /// `override def tail = Await.result(tl, Duration.Inf)`.
+    pub fn tail(&self) -> Option<&Stream<T, E>> {
+        match self {
+            Stream::Empty => None,
+            Stream::Cons(c) => Some(c.tail.as_ref().expect("tail present outside drop").force()),
+        }
+    }
+
+    /// Whether the tail has been computed (never blocks) — the paper's
+    /// `tailDefined`.
+    pub fn tail_defined(&self) -> bool {
+        match self {
+            Stream::Empty => false,
+            Stream::Cons(c) => {
+                c.tail.as_ref().expect("tail present outside drop").is_ready()
+            }
+        }
+    }
+
+    /// The strategy handle carried by this stream, if non-empty.
+    pub fn eval(&self) -> Option<&E> {
+        match self {
+            Stream::Empty => None,
+            Stream::Cons(c) => Some(&c.eval),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// constructors
+// ---------------------------------------------------------------------
+
+impl<E: Eval> Stream<u32, E> {
+    /// `Stream.range(lo, hi, 1)` — the paper's sieve input. With the
+    /// Future strategy this schedules the whole cascade of cells
+    /// immediately, one task per cell (Figure 1).
+    pub fn range(eval: E, lo: u32, hi: u32) -> Self {
+        if lo >= hi {
+            return Stream::Empty;
+        }
+        let e2 = eval.clone();
+        Stream::cons_with(eval, lo, move || Stream::range(e2, lo + 1, hi))
+    }
+}
+
+impl<T: Elem, E: Eval> Stream<T, E> {
+    /// The paper's `Stream.apply`: lift a strict sequence into the
+    /// monadic stream (each tail wrapped via `suspend`).
+    pub fn from_vec(eval: E, items: Vec<T>) -> Self {
+        Self::from_iter_inner(eval, items.into_iter())
+    }
+
+    fn from_iter_inner(eval: E, mut items: impl Iterator<Item = T> + Send + 'static) -> Self {
+        match items.next() {
+            None => Stream::Empty,
+            Some(head) => {
+                let e2 = eval.clone();
+                Stream::cons_with(eval, head, move || Self::from_iter_inner(e2, items))
+            }
+        }
+    }
+
+    /// Unfold: `seed -> Option<(elem, seed)>`.
+    pub fn unfold<S, F>(eval: E, seed: S, step: F) -> Self
+    where
+        S: Send + 'static,
+        F: FnMut(&mut S) -> Option<T> + Send + Clone + 'static,
+    {
+        let mut seed = seed;
+        let mut step0 = step.clone();
+        match step0(&mut seed) {
+            None => Stream::Empty,
+            Some(head) => {
+                let e2 = eval.clone();
+                Stream::cons_with(eval, head, move || Stream::unfold(e2, seed, step))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Executor;
+    use crate::susp::{FutureEval, LazyEval, StrictEval};
+
+    fn strategies() -> (LazyEval, StrictEval, FutureEval) {
+        (LazyEval, StrictEval, FutureEval::new(Executor::new(2)))
+    }
+
+    #[test]
+    fn empty_stream_basics() {
+        let s: Stream<u32, LazyEval> = Stream::empty();
+        assert!(s.is_empty());
+        assert!(s.head().is_none());
+        assert!(s.tail().is_none());
+        assert!(s.uncons().is_none());
+        assert!(!s.tail_defined());
+    }
+
+    #[test]
+    fn range_produces_sequence_under_all_strategies() {
+        let (lz, st, fut) = strategies();
+        assert_eq!(Stream::range(lz, 2, 7).to_vec(), vec![2, 3, 4, 5, 6]);
+        assert_eq!(Stream::range(st, 2, 7).to_vec(), vec![2, 3, 4, 5, 6]);
+        assert_eq!(Stream::range(fut, 2, 7).to_vec(), vec![2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn empty_range() {
+        let s = Stream::range(LazyEval, 5, 5);
+        assert!(s.is_empty());
+        let s = Stream::range(LazyEval, 7, 3);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn from_vec_roundtrip() {
+        let v = vec!["a".to_string(), "b".to_string(), "c".to_string()];
+        let s = Stream::from_vec(LazyEval, v.clone());
+        assert_eq!(s.to_vec(), v);
+    }
+
+    #[test]
+    fn lazy_tail_not_defined_until_forced() {
+        let s = Stream::range(LazyEval, 0, 10);
+        assert!(!s.tail_defined());
+        s.tail();
+        assert!(s.tail_defined());
+    }
+
+    #[test]
+    fn future_tail_computes_without_forcing() {
+        // Figure 1: construction alone triggers the cascade.
+        let ex = Executor::new(2);
+        let s = Stream::range(FutureEval::new(ex.clone()), 0, 50);
+        ex.wait_idle();
+        assert!(s.tail_defined());
+        // And the whole spine is complete:
+        let mut cur = s.clone();
+        let mut n = 0;
+        while let Some(t) = cur.tail() {
+            assert!(cur.tail_defined());
+            cur = t.clone();
+            n += 1;
+        }
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    fn unfold_terminates() {
+        let s = Stream::unfold(LazyEval, 0u32, |st| {
+            if *st >= 4 {
+                None
+            } else {
+                *st += 1;
+                Some(*st * 10)
+            }
+        });
+        assert_eq!(s.to_vec(), vec![10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn singleton_has_one_element() {
+        let s = Stream::singleton(LazyEval, 9);
+        assert_eq!(s.to_vec(), vec![9]);
+    }
+
+    #[test]
+    fn clone_shares_cells() {
+        let s = Stream::range(LazyEval, 0, 3);
+        let s2 = s.clone();
+        s.tail();
+        // Memoization is shared: the clone sees the forced tail.
+        assert!(s2.tail_defined());
+    }
+}

@@ -1,0 +1,328 @@
+//! Stream combinators, written in the paper's style: recursion is
+//! forwarded through the suspension monad (`eval.map(tail, ...)`), never
+//! performed eagerly, so the same code is demand-driven under `Lazy` and
+//! pipeline-parallel under `Future`.
+
+use super::{Elem, Stream};
+use crate::susp::{Eval, Susp};
+
+impl<T: Elem, E: Eval> Stream<T, E> {
+    /// The paper's §3 example:
+    ///
+    /// ```text
+    /// rest match {
+    ///   case head#::tail => head#::tail.map(_ filter p)
+    ///   case Empty       => Empty
+    /// }
+    /// ```
+    ///
+    /// The scan for the next matching head forces tails (as in the
+    /// paper); the recursion after a match is forwarded through the
+    /// monad.
+    pub fn filter<P>(&self, p: P) -> Stream<T, E>
+    where
+        P: Fn(&T) -> bool + Send + Sync + Clone + 'static,
+    {
+        let mut rest = self.clone();
+        loop {
+            match rest.uncons() {
+                None => return Stream::Empty,
+                Some((head, tail, eval)) => {
+                    if p(head) {
+                        let p2 = p.clone();
+                        let filtered = eval.map(tail, move |s: Stream<T, E>| s.filter(p2));
+                        return Stream::cons_cell(eval.clone(), head.clone(), filtered);
+                    }
+                    let next = tail.force().clone();
+                    rest = next;
+                }
+            }
+        }
+    }
+
+    /// Map every element (named `map_elems` because `map` on the cell is
+    /// the monadic transform).
+    pub fn map_elems<U, F>(&self, f: F) -> Stream<U, E>
+    where
+        U: Elem,
+        F: Fn(&T) -> U + Send + Sync + Clone + 'static,
+    {
+        match self.uncons() {
+            None => Stream::Empty,
+            Some((head, tail, eval)) => {
+                let f2 = f.clone();
+                let mapped = eval.map(tail, move |s: Stream<T, E>| s.map_elems(f2));
+                Stream::cons_cell(eval.clone(), f(head), mapped)
+            }
+        }
+    }
+
+    /// First `n` elements, suspension-preserving.
+    pub fn take(&self, n: usize) -> Stream<T, E> {
+        if n == 0 {
+            return Stream::Empty;
+        }
+        match self.uncons() {
+            None => Stream::Empty,
+            Some((head, tail, eval)) => {
+                let taken = eval.map(tail, move |s: Stream<T, E>| s.take(n - 1));
+                Stream::cons_cell(eval.clone(), head.clone(), taken)
+            }
+        }
+    }
+
+    /// Drop the first `n` elements (forces them, like Scala's `drop`).
+    pub fn dropped(&self, n: usize) -> Stream<T, E> {
+        let mut rest = self.clone();
+        for _ in 0..n {
+            match rest.tail() {
+                None => return Stream::Empty,
+                Some(t) => {
+                    let next = t.clone();
+                    rest = next;
+                }
+            }
+        }
+        rest
+    }
+
+    /// Concatenation, suspension-preserving in the left spine.
+    pub fn append(&self, other: Stream<T, E>) -> Stream<T, E> {
+        match self.uncons() {
+            None => other,
+            Some((head, tail, eval)) => {
+                let appended =
+                    eval.map(tail, move |s: Stream<T, E>| s.append(other));
+                Stream::cons_cell(eval.clone(), head.clone(), appended)
+            }
+        }
+    }
+
+    /// Pairwise zip with another stream; stops at the shorter.
+    pub fn zip_with<U, V, F>(&self, other: &Stream<U, E>, f: F) -> Stream<V, E>
+    where
+        U: Elem,
+        V: Elem,
+        F: Fn(&T, &U) -> V + Send + Sync + Clone + 'static,
+    {
+        match (self.uncons(), other.uncons()) {
+            (Some((h1, t1, eval)), Some((h2, t2, _))) => {
+                let head = f(&h1.clone(), h2);
+                let t2 = t2.clone();
+                let f2 = f.clone();
+                let zipped = eval.map(t1, move |s1: Stream<T, E>| {
+                    let s2 = t2.force().clone();
+                    s1.zip_with(&s2, f2)
+                });
+                Stream::cons_cell(eval.clone(), head, zipped)
+            }
+            _ => Stream::Empty,
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // terminal (forcing) consumers
+    // -----------------------------------------------------------------
+
+    /// Walk the whole stream, forcing every tail — the paper's `.force`
+    /// ("wait for the computation to complete"). Returns the length.
+    pub fn force_all(&self) -> usize {
+        let mut n = 0;
+        let mut cur = self.clone();
+        while let Some(t) = cur.tail() {
+            n += 1;
+            let next = t.clone();
+            cur = next;
+        }
+        n
+    }
+
+    /// Collect into a `Vec` (forces everything).
+    pub fn to_vec(&self) -> Vec<T> {
+        let mut out = Vec::new();
+        let mut cur = self.clone();
+        while let Some((head, _, _)) = cur.uncons() {
+            out.push(head.clone());
+            let next = cur.tail().expect("non-empty").clone();
+            cur = next;
+        }
+        out
+    }
+
+    /// Left fold (forces everything).
+    pub fn fold<Acc, F>(&self, init: Acc, mut f: F) -> Acc
+    where
+        F: FnMut(Acc, &T) -> Acc,
+    {
+        let mut acc = init;
+        let mut cur = self.clone();
+        while let Some((head, _, _)) = cur.uncons() {
+            acc = f(acc, head);
+            let next = cur.tail().expect("non-empty").clone();
+            cur = next;
+        }
+        acc
+    }
+
+    /// Number of elements (forces everything).
+    pub fn len(&self) -> usize {
+        self.fold(0, |n, _| n + 1)
+    }
+
+    /// Last element (forces everything).
+    pub fn last(&self) -> Option<T> {
+        self.fold(None, |_, x| Some(x.clone()))
+    }
+
+    /// Forcing iterator over elements.
+    pub fn iter(&self) -> StreamIter<T, E> {
+        StreamIter { cur: self.clone() }
+    }
+
+    /// Index access (forces a prefix).
+    pub fn get(&self, idx: usize) -> Option<T> {
+        self.dropped(idx).head().cloned()
+    }
+}
+
+/// Iterator that forces the stream as it advances.
+pub struct StreamIter<T: Elem, E: Eval> {
+    cur: Stream<T, E>,
+}
+
+impl<T: Elem, E: Eval> Iterator for StreamIter<T, E> {
+    type Item = T;
+
+    fn next(&mut self) -> Option<T> {
+        let head = self.cur.head().cloned()?;
+        let next = self.cur.tail().expect("non-empty").clone();
+        self.cur = next;
+        Some(head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Executor;
+    use crate::susp::{FutureEval, LazyEval, StrictEval};
+
+    fn lazy_range(lo: u32, hi: u32) -> Stream<u32, LazyEval> {
+        Stream::range(LazyEval, lo, hi)
+    }
+
+    #[test]
+    fn filter_keeps_matching() {
+        let evens = lazy_range(0, 10).filter(|x| x % 2 == 0);
+        assert_eq!(evens.to_vec(), vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn filter_empty_result() {
+        let none = lazy_range(0, 10).filter(|x| *x > 100);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn filter_is_lazy_past_first_match() {
+        // Only the scan up to the first match may force; the rest stays
+        // suspended under Lazy.
+        let s = lazy_range(0, 1000).filter(|x| *x >= 5);
+        assert_eq!(*s.head().unwrap(), 5);
+        assert!(!s.tail_defined());
+    }
+
+    #[test]
+    fn map_elems_applies() {
+        let sq = lazy_range(1, 5).map_elems(|x| x * x);
+        assert_eq!(sq.to_vec(), vec![1, 4, 9, 16]);
+    }
+
+    #[test]
+    fn take_limits_and_preserves_laziness() {
+        let t = lazy_range(0, 1_000_000).take(4);
+        assert_eq!(t.to_vec(), vec![0, 1, 2, 3]);
+        let t = lazy_range(0, 3).take(10);
+        assert_eq!(t.to_vec(), vec![0, 1, 2]);
+        assert!(lazy_range(0, 5).take(0).is_empty());
+    }
+
+    #[test]
+    fn dropped_skips() {
+        assert_eq!(lazy_range(0, 6).dropped(3).to_vec(), vec![3, 4, 5]);
+        assert!(lazy_range(0, 3).dropped(5).is_empty());
+    }
+
+    #[test]
+    fn append_concatenates() {
+        let a = lazy_range(0, 3);
+        let b = lazy_range(10, 13);
+        assert_eq!(a.append(b).to_vec(), vec![0, 1, 2, 10, 11, 12]);
+        let e: Stream<u32, LazyEval> = Stream::Empty;
+        assert_eq!(e.append(lazy_range(5, 7)).to_vec(), vec![5, 6]);
+    }
+
+    #[test]
+    fn zip_with_stops_at_shorter() {
+        let a = lazy_range(0, 5);
+        let b = lazy_range(0, 3).map_elems(|x| x * 10);
+        let z = a.zip_with(&b, |x, y| x + y);
+        assert_eq!(z.to_vec(), vec![0, 11, 22]);
+    }
+
+    #[test]
+    fn fold_len_last_get() {
+        let s = lazy_range(1, 6);
+        assert_eq!(s.fold(0u32, |a, b| a + b), 15);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.last(), Some(5));
+        assert_eq!(s.get(2), Some(3));
+        assert_eq!(s.get(9), None);
+    }
+
+    #[test]
+    fn iter_yields_all() {
+        let v: Vec<u32> = lazy_range(0, 5).iter().collect();
+        assert_eq!(v, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn force_all_counts() {
+        assert_eq!(lazy_range(0, 17).force_all(), 17);
+        let e: Stream<u32, LazyEval> = Stream::Empty;
+        assert_eq!(e.force_all(), 0);
+    }
+
+    #[test]
+    fn combinators_agree_across_strategies() {
+        // The paper's core claim: swapping the monad does not change
+        // results. Cross-check a composite pipeline on all strategies.
+        fn pipeline<E: Eval>(eval: E) -> Vec<u32> {
+            Stream::range(eval, 1, 60)
+                .filter(|x| x % 3 != 0)
+                .map_elems(|x| x * 2)
+                .take(10)
+                .to_vec()
+        }
+        let expected = pipeline(LazyEval);
+        assert_eq!(pipeline(StrictEval), expected);
+        let ex = Executor::new(3);
+        assert_eq!(pipeline(FutureEval::new(ex)), expected);
+        let ex1 = Executor::new(1);
+        assert_eq!(pipeline(FutureEval::new(ex1)), expected);
+    }
+
+    #[test]
+    fn deep_filter_chain_under_future() {
+        // Stacked filters mimic the sieve's pipeline shape.
+        let ex = Executor::new(2);
+        let mut s = Stream::range(FutureEval::new(ex), 2, 500);
+        for d in 2..20u32 {
+            s = s.filter(move |x| *x == d || x % d != 0);
+        }
+        let got = s.to_vec();
+        assert!(got.contains(&2));
+        assert!(got.contains(&499)); // 499 is prime
+        assert!(!got.contains(&38));
+    }
+}

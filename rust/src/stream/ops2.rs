@@ -1,0 +1,297 @@
+//! Second tier of stream combinators: scans, bounded traversals, and
+//! stream fusion helpers. Same discipline as `ops.rs` — recursion is
+//! forwarded through the suspension monad so each combinator is
+//! pipeline-parallel under `Future`.
+
+use super::{Elem, Stream};
+use crate::susp::{Eval, Susp};
+
+impl<T: Elem, E: Eval> Stream<T, E> {
+    /// Longest prefix satisfying `p` (suspension-preserving).
+    pub fn take_while<P>(&self, p: P) -> Stream<T, E>
+    where
+        P: Fn(&T) -> bool + Send + Sync + Clone + 'static,
+    {
+        match self.uncons() {
+            None => Stream::Empty,
+            Some((head, tail, eval)) => {
+                if !p(head) {
+                    return Stream::Empty;
+                }
+                let p2 = p.clone();
+                let rest = eval.map(tail, move |s: Stream<T, E>| s.take_while(p2));
+                Stream::cons_cell(eval.clone(), head.clone(), rest)
+            }
+        }
+    }
+
+    /// Drop the longest prefix satisfying `p` (forces the prefix, like
+    /// the paper's filter scan).
+    pub fn drop_while<P>(&self, p: P) -> Stream<T, E>
+    where
+        P: Fn(&T) -> bool + Send + Sync + Clone + 'static,
+    {
+        let mut cur = self.clone();
+        loop {
+            match cur.uncons() {
+                None => return Stream::Empty,
+                Some((head, _, _)) => {
+                    if !p(head) {
+                        return cur;
+                    }
+                    let next = cur.tail().expect("non-empty").clone();
+                    cur = next;
+                }
+            }
+        }
+    }
+
+    /// Running left scan: emits `f(acc, x)` for every element, starting
+    /// from `init` (the first emitted element is `f(init, x0)`).
+    pub fn scan<A, F>(&self, init: A, f: F) -> Stream<A, E>
+    where
+        A: Elem,
+        F: Fn(&A, &T) -> A + Send + Sync + Clone + 'static,
+    {
+        match self.uncons() {
+            None => Stream::Empty,
+            Some((head, tail, eval)) => {
+                let acc = f(&init, head);
+                let acc2 = acc.clone();
+                let f2 = f.clone();
+                let rest = eval.map(tail, move |s: Stream<T, E>| s.scan(acc2, f2));
+                Stream::cons_cell(eval.clone(), acc, rest)
+            }
+        }
+    }
+
+    /// Map each element to a stream and concatenate (`flatMap`).
+    pub fn flat_map_elems<U, F>(&self, f: F) -> Stream<U, E>
+    where
+        U: Elem,
+        F: Fn(&T) -> Stream<U, E> + Send + Sync + Clone + 'static,
+    {
+        match self.uncons() {
+            None => Stream::Empty,
+            Some((head, tail, _eval)) => {
+                let produced = f(head);
+                let f2 = f.clone();
+                let tail = tail.clone();
+                // Append the suspended flat-mapped rest behind the
+                // produced prefix.
+                let rest_stream = RestHolder { tail, f: f2, _u: std::marker::PhantomData };
+                rest_stream.append_behind(produced)
+            }
+        }
+    }
+
+    /// Alternate elements of two streams, starting with `self`.
+    pub fn interleave(&self, other: &Stream<T, E>) -> Stream<T, E> {
+        match self.uncons() {
+            None => other.clone(),
+            Some((head, tail, eval)) => {
+                let other = other.clone();
+                let interleaved = eval.map(tail, move |s: Stream<T, E>| other.interleave(&s));
+                Stream::cons_cell(eval.clone(), head.clone(), interleaved)
+            }
+        }
+    }
+
+    /// Drop consecutive duplicates (`uniq`-style; full dedup would need
+    /// unbounded state).
+    pub fn dedup_consecutive(&self) -> Stream<T, E>
+    where
+        T: PartialEq,
+    {
+        match self.uncons() {
+            None => Stream::Empty,
+            Some((head, tail, eval)) => {
+                let h = head.clone();
+                let h2 = h.clone();
+                let rest = eval.map(tail, move |s: Stream<T, E>| {
+                    s.drop_while(move |x| *x == h2).dedup_consecutive()
+                });
+                Stream::cons_cell(eval.clone(), h, rest)
+            }
+        }
+    }
+
+    /// Check whether any forced element satisfies `p` (short-circuits).
+    pub fn exists<P: Fn(&T) -> bool>(&self, p: P) -> bool {
+        let mut cur = self.clone();
+        while let Some((head, _, _)) = cur.uncons() {
+            if p(head) {
+                return true;
+            }
+            let next = cur.tail().expect("non-empty").clone();
+            cur = next;
+        }
+        false
+    }
+
+    /// Merge two streams already sorted under `cmp` (ascending) into one
+    /// sorted stream — the generic skeleton of the paper's `plus`
+    /// (without coefficient combination).
+    pub fn merge_sorted<F>(&self, other: &Stream<T, E>, cmp: F) -> Stream<T, E>
+    where
+        F: Fn(&T, &T) -> std::cmp::Ordering + Send + Sync + Clone + 'static,
+    {
+        match (self.uncons(), other.uncons()) {
+            (None, _) => other.clone(),
+            (_, None) => self.clone(),
+            (Some((a, tail_a, eval)), Some((b, _tail_b, _))) => {
+                if cmp(a, b) != std::cmp::Ordering::Greater {
+                    let other = other.clone();
+                    let cmp2 = cmp.clone();
+                    let rest =
+                        eval.map(tail_a, move |s: Stream<T, E>| s.merge_sorted(&other, cmp2));
+                    Stream::cons_cell(eval.clone(), a.clone(), rest)
+                } else {
+                    other.merge_sorted(self, cmp)
+                }
+            }
+        }
+    }
+}
+
+/// Helper carrying the suspended "rest" of a flat_map.
+struct RestHolder<T: Elem, U: Elem, E: Eval, F> {
+    tail: E::Cell<Stream<T, E>>,
+    f: F,
+    _u: std::marker::PhantomData<U>,
+}
+
+impl<T, U, E, F> RestHolder<T, U, E, F>
+where
+    T: Elem,
+    U: Elem,
+    E: Eval,
+    F: Fn(&T) -> Stream<U, E> + Send + Sync + Clone + 'static,
+{
+    /// `produced.append(suspended flat_map of tail)` without forcing the
+    /// tail now.
+    fn append_behind(self, produced: Stream<U, E>) -> Stream<U, E> {
+        let RestHolder { tail, f, _u } = self;
+        match produced.uncons() {
+            None => {
+                // Nothing produced here: move on to the tail (forces one
+                // step, as any flatMap over an empty prefix must).
+                let next = tail.force().clone();
+                next.flat_map_elems(f)
+            }
+            Some((head, ptail, peval)) => {
+                let ptail = ptail.clone();
+                let rest = peval.map(&ptail, move |p: Stream<U, E>| {
+                    let holder = RestHolder { tail, f, _u: std::marker::PhantomData };
+                    holder.append_behind(p)
+                });
+                Stream::cons_cell(peval.clone(), head.clone(), rest)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Executor;
+    use crate::susp::{FutureEval, LazyEval};
+
+    fn r(lo: u32, hi: u32) -> Stream<u32, LazyEval> {
+        Stream::range(LazyEval, lo, hi)
+    }
+
+    #[test]
+    fn take_while_stops_at_first_failure() {
+        assert_eq!(r(0, 100).take_while(|x| *x < 4).to_vec(), vec![0, 1, 2, 3]);
+        assert!(r(5, 10).take_while(|x| *x < 5).is_empty());
+        assert_eq!(r(0, 3).take_while(|_| true).to_vec(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn drop_while_drops_prefix_only() {
+        assert_eq!(r(0, 8).drop_while(|x| *x < 5).to_vec(), vec![5, 6, 7]);
+        assert!(r(0, 4).drop_while(|_| true).is_empty());
+        assert_eq!(r(3, 6).drop_while(|_| false).to_vec(), vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn scan_running_sum() {
+        assert_eq!(r(1, 6).scan(0u32, |a, x| a + x).to_vec(), vec![1, 3, 6, 10, 15]);
+        let empty: Stream<u32, LazyEval> = Stream::Empty;
+        assert!(empty.scan(0u32, |a, x| a + x).is_empty());
+    }
+
+    #[test]
+    fn flat_map_concatenates() {
+        let s = r(1, 4).flat_map_elems(|&x| Stream::range(LazyEval, 0, x));
+        assert_eq!(s.to_vec(), vec![0, 0, 1, 0, 1, 2]);
+    }
+
+    #[test]
+    fn flat_map_skips_empty_productions() {
+        let s = r(0, 6).flat_map_elems(|&x| {
+            if x % 2 == 0 {
+                Stream::Empty
+            } else {
+                Stream::singleton(LazyEval, x * 10)
+            }
+        });
+        assert_eq!(s.to_vec(), vec![10, 30, 50]);
+    }
+
+    #[test]
+    fn interleave_alternates() {
+        let a = r(0, 3);
+        let b = r(10, 15);
+        assert_eq!(a.interleave(&b).to_vec(), vec![0, 10, 1, 11, 2, 12, 13, 14]);
+    }
+
+    #[test]
+    fn dedup_consecutive_collapses_runs() {
+        let s = Stream::from_vec(LazyEval, vec![1, 1, 2, 2, 2, 3, 1, 1]);
+        assert_eq!(s.dedup_consecutive().to_vec(), vec![1, 2, 3, 1]);
+    }
+
+    #[test]
+    fn exists_short_circuits() {
+        // A stream long enough that full forcing would be noticeable.
+        assert!(r(0, 10_000_000).exists(|x| *x == 3));
+        assert!(!r(0, 10).exists(|x| *x == 99));
+    }
+
+    #[test]
+    fn merge_sorted_merges() {
+        let a = Stream::from_vec(LazyEval, vec![1, 4, 6]);
+        let b = Stream::from_vec(LazyEval, vec![2, 3, 5, 7]);
+        let m = a.merge_sorted(&b, |x, y| x.cmp(y));
+        assert_eq!(m.to_vec(), vec![1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn combinators_agree_under_future() {
+        let check = |mk: &dyn Fn() -> Vec<u32>, want: &[u32]| assert_eq!(mk(), want);
+        let ex = Executor::new(2);
+        let eval = FutureEval::new(ex);
+        let e2 = eval.clone();
+        check(
+            &move || {
+                Stream::range(e2.clone(), 1, 20)
+                    .scan(0u32, |a, x| a + x)
+                    .take_while(|x| *x < 30)
+                    .to_vec()
+            },
+            &[1, 3, 6, 10, 15, 21, 28],
+        );
+        let e3 = eval.clone();
+        check(
+            &move || {
+                let inner = e3.clone();
+                Stream::range(e3.clone(), 1, 4)
+                    .flat_map_elems(move |&x| Stream::singleton(inner.clone(), x * x))
+                    .to_vec()
+            },
+            &[1, 4, 9],
+        );
+    }
+}

@@ -1,0 +1,393 @@
+//! The Future monad: a value computed asynchronously from the moment of
+//! construction (§1, Figure 1 of the paper).
+//!
+//! Scala's `Future` is completion-callback based; `Await.result` blocks
+//! with `scala.concurrent.blocking` so the pool compensates. [`Fut`]
+//! mirrors that:
+//!
+//! * `Fut::spawn(exec, f)` schedules `f` immediately.
+//! * `map`/`and_then` attach continuations — executed inline if already
+//!   complete, otherwise registered; **no worker thread ever parks to
+//!   implement `map`**, which is what lets `par(1)` run arbitrarily deep
+//!   pipelines.
+//! * `force` parks the caller (condvar) under managed blocking — the
+//!   paper's `Await.result(tl, Duration.Inf)`.
+//!
+//! The completed value lives in a write-once [`OnceLock`] *outside* the
+//! callback mutex, so `force` hands out plain shared references with no
+//! aliasing hazards and readers never contend once complete.
+
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use super::{Eval, Susp};
+use crate::exec::Executor;
+
+/// Turn a panic payload into a printable message.
+pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+type Callback<T> = Box<dyn FnOnce(&Result<T, String>) + Send + 'static>;
+
+struct Inner<T> {
+    /// Write-once result; `Err` carries the producing task's panic message.
+    value: OnceLock<Result<T, String>>,
+    /// Callbacks registered before completion. `None` after completion.
+    pending: Mutex<Option<Vec<Callback<T>>>>,
+    done: Condvar,
+    exec: Executor,
+}
+
+/// A value being computed asynchronously on an [`Executor`].
+pub struct Fut<T>(Arc<Inner<T>>);
+
+impl<T> Clone for Fut<T> {
+    fn clone(&self) -> Self {
+        Fut(Arc::clone(&self.0))
+    }
+}
+
+impl<T: Send + Sync + 'static> Fut<T> {
+    /// Schedule `f` on `exec` immediately; the returned future completes
+    /// when it finishes.
+    pub fn spawn<F: FnOnce() -> T + Send + 'static>(exec: &Executor, f: F) -> Self {
+        let fut = Fut::incomplete(exec.clone());
+        let completer = fut.clone();
+        exec.spawn(move || {
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+                .map_err(|p| panic_message(&*p));
+            completer.complete(res);
+        });
+        fut
+    }
+
+    /// An already-completed future (`Future.successful`).
+    pub fn ready(exec: &Executor, value: T) -> Self {
+        let fut = Fut::incomplete(exec.clone());
+        fut.complete(Ok(value));
+        fut
+    }
+
+    fn incomplete(exec: Executor) -> Self {
+        Fut(Arc::new(Inner {
+            value: OnceLock::new(),
+            pending: Mutex::new(Some(Vec::new())),
+            done: Condvar::new(),
+            exec,
+        }))
+    }
+
+    /// Complete with `res`; runs registered callbacks on the calling
+    /// thread (which is a pool worker for spawned futures, matching
+    /// Scala's run-on-the-EC behaviour).
+    fn complete(&self, res: Result<T, String>) {
+        self.0.value.set(res).ok().expect("future completed twice");
+        let callbacks = {
+            let mut pending = self.0.pending.lock().unwrap();
+            pending.take().expect("future completed twice")
+        };
+        self.0.done.notify_all();
+        let res = self.0.value.get().expect("just set");
+        for cb in callbacks {
+            cb(res);
+        }
+    }
+
+    /// Register `cb` to run with the result; runs inline when already
+    /// complete.
+    pub fn on_complete<F: FnOnce(&Result<T, String>) + Send + 'static>(&self, cb: F) {
+        {
+            let mut pending = self.0.pending.lock().unwrap();
+            if let Some(cbs) = pending.as_mut() {
+                cbs.push(Box::new(cb));
+                return;
+            }
+        }
+        cb(self.0.value.get().expect("no pending list implies completed"));
+    }
+
+    /// Pipeline a transformation: the returned future completes with
+    /// `f(value)` once `self` completes. No thread parks; the continuation
+    /// runs as its own pool task (the paper's `map` creates a *new*
+    /// parallel stage — running it inline on the completer would
+    /// serialize the pipeline).
+    pub fn and_then<U, F>(&self, f: F) -> Fut<U>
+    where
+        U: Send + Sync + 'static,
+        F: FnOnce(T) -> U + Send + 'static,
+        T: Clone,
+    {
+        let out = Fut::incomplete(self.0.exec.clone());
+        let completer = out.clone();
+        self.on_complete(move |res| match res {
+            Ok(v) => {
+                let v = v.clone();
+                let exec = completer.0.exec.clone();
+                let completer2 = completer.clone();
+                exec.spawn(move || {
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || f(v)))
+                        .map_err(|p| panic_message(&*p));
+                    completer2.complete(r);
+                });
+            }
+            Err(e) => completer.complete(Err(e.clone())),
+        });
+        out
+    }
+
+    /// Monadic bind over futures (callback-chained, non-blocking). Used by
+    /// the paper's `plus` for `for (sx <- tailx; sy <- taily) yield ...`.
+    pub fn bind<U, F>(&self, f: F) -> Fut<U>
+    where
+        U: Clone + Send + Sync + 'static,
+        F: FnOnce(T) -> Fut<U> + Send + 'static,
+        T: Clone,
+    {
+        let out = Fut::incomplete(self.0.exec.clone());
+        let completer = out.clone();
+        self.on_complete(move |res| match res {
+            Ok(v) => {
+                let v = v.clone();
+                let exec = completer.0.exec.clone();
+                let completer2 = completer.clone();
+                exec.spawn(move || {
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || f(v))) {
+                        Ok(mid) => {
+                            let completer3 = completer2.clone();
+                            mid.on_complete(move |r| completer3.complete(r.clone()));
+                        }
+                        Err(p) => completer2.complete(Err(panic_message(&*p))),
+                    }
+                });
+            }
+            Err(e) => completer.complete(Err(e.clone())),
+        });
+        out
+    }
+
+    /// The executor this future's continuations run on.
+    pub fn executor(&self) -> &Executor {
+        &self.0.exec
+    }
+}
+
+impl<T: Send + Sync + 'static> Susp<T> for Fut<T> {
+    /// `Await.result(self, Duration.Inf)` — parks under managed blocking,
+    /// so calling it from a worker cannot starve the pool (§6: "this is
+    /// not considered good in a regular use of Futures, but we have not
+    /// been able to avoid it").
+    fn force(&self) -> &T {
+        if self.0.value.get().is_none() {
+            Executor::blocking(|| {
+                let mut pending = self.0.pending.lock().unwrap();
+                while pending.is_some() {
+                    pending = self.0.done.wait(pending).unwrap();
+                }
+            });
+        }
+        match self.0.value.get().expect("woken implies completed") {
+            Ok(v) => v,
+            Err(msg) => panic!("forced a failed Future: {msg}"),
+        }
+    }
+
+    fn is_ready(&self) -> bool {
+        self.0.value.get().is_some()
+    }
+
+    fn into_ready(self) -> Option<T> {
+        let inner = Arc::try_unwrap(self.0).ok()?;
+        match inner.value.into_inner()? {
+            Ok(v) => Some(v),
+            Err(_) => None,
+        }
+    }
+}
+
+/// Strategy selecting [`Fut`] suspensions — the paper's parallel mode
+/// (`par(n)` columns of Table 1). Carries the executor the way Scala code
+/// carries an implicit `ExecutionContext`.
+#[derive(Clone, Debug)]
+pub struct FutureEval {
+    exec: Executor,
+}
+
+impl FutureEval {
+    pub fn new(exec: Executor) -> Self {
+        FutureEval { exec }
+    }
+}
+
+impl Eval for FutureEval {
+    type Cell<T: Send + Sync + 'static> = Fut<T>;
+
+    fn suspend<T, F>(&self, f: F) -> Fut<T>
+    where
+        T: Send + Sync + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        Fut::spawn(&self.exec, f)
+    }
+
+    fn ready<T>(&self, value: T) -> Fut<T>
+    where
+        T: Send + Sync + 'static,
+    {
+        Fut::ready(&self.exec, value)
+    }
+
+    fn map<T, U, F>(&self, cell: &Fut<T>, f: F) -> Fut<U>
+    where
+        T: Clone + Send + Sync + 'static,
+        U: Send + Sync + 'static,
+        F: FnOnce(T) -> U + Send + 'static,
+    {
+        cell.and_then(f)
+    }
+
+    fn flat_map<T, U, F>(&self, cell: &Fut<T>, f: F) -> Fut<U>
+    where
+        T: Clone + Send + Sync + 'static,
+        U: Clone + Send + Sync + 'static,
+        F: FnOnce(T) -> Fut<U> + Send + 'static,
+    {
+        cell.bind(f)
+    }
+
+    fn executor(&self) -> Option<&Executor> {
+        Some(&self.exec)
+    }
+
+    fn label(&self) -> String {
+        format!("par({})", self.exec.parallelism())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn force_blocks_until_complete() {
+        let ex = Executor::new(2);
+        let fut = Fut::spawn(&ex, || {
+            std::thread::sleep(Duration::from_millis(30));
+            99
+        });
+        assert_eq!(*fut.force(), 99);
+    }
+
+    #[test]
+    fn map_chain_completes_without_forcing() {
+        let ex = Executor::new(2);
+        let base = Fut::spawn(&ex, || 1u64);
+        let mut cur = base;
+        for _ in 0..100 {
+            cur = cur.and_then(|x| x + 1);
+        }
+        assert_eq!(*cur.force(), 101);
+    }
+
+    #[test]
+    fn deep_pipeline_on_one_worker() {
+        // Callback chaining means par(1) can run a deep dependency chain:
+        // nothing parks a worker except explicit force.
+        let ex = Executor::new(1);
+        let mut cur = Fut::spawn(&ex, || 0u64);
+        for _ in 0..2_000 {
+            cur = cur.and_then(|x| x + 1);
+        }
+        assert_eq!(*cur.force(), 2_000);
+    }
+
+    #[test]
+    fn bind_sequences_futures() {
+        let ex = Executor::new(2);
+        let ex2 = ex.clone();
+        let fut = Fut::spawn(&ex, || 6).bind(move |x| Fut::spawn(&ex2, move || x * 7));
+        assert_eq!(*fut.force(), 42);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed Future")]
+    fn failed_future_panics_at_force() {
+        let ex = Executor::new(1);
+        let fut: Fut<u32> = Fut::spawn(&ex, || panic!("task died"));
+        fut.force();
+    }
+
+    #[test]
+    fn failure_propagates_through_map() {
+        let ex = Executor::new(1);
+        let fut: Fut<u32> = Fut::spawn(&ex, || panic!("root cause"));
+        let mapped = fut.and_then(|x| x + 1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| *mapped.force()));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn on_complete_runs_inline_when_done() {
+        let ex = Executor::new(1);
+        let fut = Fut::ready(&ex, 5);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        fut.on_complete(move |r| {
+            assert_eq!(*r.as_ref().unwrap(), 5);
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn many_concurrent_futures() {
+        let ex = Executor::new(4);
+        let futs: Vec<Fut<usize>> =
+            (0..500).map(|i| Fut::spawn(&ex, move || i * i)).collect();
+        for (i, f) in futs.iter().enumerate() {
+            assert_eq!(*f.force(), i * i);
+        }
+    }
+
+    #[test]
+    fn force_from_worker_uses_managed_blocking() {
+        // A worker forcing a future produced by a queued task: par(1)
+        // would deadlock without compensation.
+        let ex = Executor::new(1);
+        let eval = FutureEval::new(ex.clone());
+        let inner = eval.suspend(|| 11);
+        let outer = eval.suspend(move || *inner.force() * 2);
+        assert_eq!(*outer.force(), 22);
+    }
+
+    #[test]
+    fn callbacks_registered_concurrently_all_fire() {
+        let ex = Executor::new(4);
+        let fut = Fut::spawn(&ex, || {
+            std::thread::sleep(Duration::from_millis(10));
+            1u32
+        });
+        let hits = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..16 {
+                let fut = fut.clone();
+                let hits = hits.clone();
+                s.spawn(move || {
+                    fut.on_complete(move |_| {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    });
+                });
+            }
+        });
+        fut.force();
+        ex.wait_idle();
+        assert_eq!(hits.load(Ordering::SeqCst), 16);
+    }
+}

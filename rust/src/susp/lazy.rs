@@ -1,0 +1,169 @@
+//! The Lazy monad (§3 of the paper): a memoized thunk.
+//!
+//! ```text
+//! object Future {                          // the paper names it Future
+//!   def apply[A](value: => A) = new Future[A] { lazy val apply = value }
+//! }
+//! ```
+//!
+//! `Lazy<T>` is exactly `lazy val`: the closure runs on first `force`, on
+//! the forcing thread, and the result is memoized. Panics are memoized
+//! too (a poisoned `lazy val` in Scala rethrows).
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::{Eval, Susp};
+
+type Thunk<T> = Box<dyn FnOnce() -> T + Send + 'static>;
+
+struct Inner<T> {
+    thunk: Mutex<Option<Thunk<T>>>,
+    value: OnceLock<Result<T, String>>,
+}
+
+/// A memoized, thread-safe suspended value.
+pub struct Lazy<T>(Arc<Inner<T>>);
+
+impl<T> Clone for Lazy<T> {
+    fn clone(&self) -> Self {
+        Lazy(Arc::clone(&self.0))
+    }
+}
+
+impl<T: Send + Sync + 'static> Lazy<T> {
+    /// Suspend `f`; it will run at most once, on the first forcing thread.
+    pub fn new<F: FnOnce() -> T + Send + 'static>(f: F) -> Self {
+        Lazy(Arc::new(Inner {
+            thunk: Mutex::new(Some(Box::new(f))),
+            value: OnceLock::new(),
+        }))
+    }
+
+    /// An already-evaluated value.
+    pub fn ready(value: T) -> Self {
+        let cell = Lazy(Arc::new(Inner { thunk: Mutex::new(None), value: OnceLock::new() }));
+        cell.0.value.set(Ok(value)).ok().expect("fresh OnceLock");
+        cell
+    }
+}
+
+impl<T: Send + Sync + 'static> Susp<T> for Lazy<T> {
+    fn force(&self) -> &T {
+        let result = self.0.value.get_or_init(|| {
+            let thunk = self
+                .0
+                .thunk
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .take()
+                .expect("lazy thunk already taken without value set");
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(thunk)) {
+                Ok(v) => Ok(v),
+                Err(p) => Err(crate::susp::future::panic_message(&p)),
+            }
+        });
+        match result {
+            Ok(v) => v,
+            Err(msg) => panic!("forced a poisoned Lazy: {msg}"),
+        }
+    }
+
+    fn is_ready(&self) -> bool {
+        self.0.value.get().is_some()
+    }
+
+    fn into_ready(self) -> Option<T> {
+        let inner = Arc::try_unwrap(self.0).ok()?;
+        match inner.value.into_inner()? {
+            Ok(v) => Some(v),
+            Err(_) => None,
+        }
+    }
+}
+
+/// Strategy selecting [`Lazy`] suspensions — the paper's sequential mode
+/// (`seq` column of Table 1).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LazyEval;
+
+impl Eval for LazyEval {
+    type Cell<T: Send + Sync + 'static> = Lazy<T>;
+
+    fn suspend<T, F>(&self, f: F) -> Lazy<T>
+    where
+        T: Send + Sync + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        Lazy::new(f)
+    }
+
+    fn ready<T>(&self, value: T) -> Lazy<T>
+    where
+        T: Send + Sync + 'static,
+    {
+        Lazy::ready(value)
+    }
+
+    fn label(&self) -> String {
+        "seq".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn concurrent_force_runs_thunk_once() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        let cell = Lazy::new(move || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            c.fetch_add(1, Ordering::SeqCst)
+        });
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let cell = cell.clone();
+                s.spawn(move || {
+                    cell.force();
+                });
+            }
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "poisoned Lazy")]
+    fn poisoned_lazy_rethrows() {
+        let cell: Lazy<u32> = Lazy::new(|| panic!("inner"));
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| cell.force()));
+        // Second force observes the poison, not a double-run.
+        cell.force();
+    }
+
+    #[test]
+    fn ready_is_ready() {
+        let cell = Lazy::ready(3);
+        assert!(cell.is_ready());
+        assert_eq!(*cell.force(), 3);
+    }
+
+    #[test]
+    fn deep_map_chain_does_not_overflow() {
+        // Chained maps force iteratively enough for the sieve's depth.
+        let mut cell = Lazy::ready(0u64);
+        for _ in 0..10_000 {
+            let prev = cell.clone();
+            cell = Lazy::new(move || prev.force() + 1);
+        }
+        // Force on a big-stack thread, as stream consumers do.
+        let v = std::thread::Builder::new()
+            .stack_size(512 << 20)
+            .spawn(move || *cell.force())
+            .unwrap()
+            .join()
+            .unwrap();
+        assert_eq!(v, 10_000);
+    }
+}

@@ -1,0 +1,211 @@
+//! Suspension monads — the paper's §3.
+//!
+//! The paper observes that Scala's `Stream` hides a *suspension* in every
+//! cons cell (`tl: => Stream[A]`) and that the by-name parameter behaves
+//! like a `Lazy` monad. Abstracting the cell over the monad, and then
+//! substituting `Future` for `Lazy`, turns every algorithm written against
+//! the monadic interface into a pipeline-parallel one.
+//!
+//! This module is the Rust rendition:
+//!
+//! * [`Lazy<T>`] — a memoized thunk; `map` composes thunks. Semantically
+//!   the paper's `Lazy` monad (`lazy val apply = value`).
+//! * [`Fut<T>`] — a value being computed on an [`Executor`] *starting at
+//!   construction time*; `map` chains a continuation (no worker blocks),
+//!   [`Fut::force`] is the paper's `Await.result(tl, Duration.Inf)` and
+//!   uses managed blocking when called from a worker.
+//! * [`Strict<T>`] — evaluate immediately on the calling thread; useful as
+//!   a degenerate control in tests and overhead benches.
+//!
+//! The strategy is selected by an [`Eval`] implementation ([`LazyEval`],
+//! [`FutureEval`], [`StrictEval`]); stream code is generic over it, which
+//! is the Rust spelling of the paper's "substitute Future for Lazy".
+
+mod future;
+mod lazy;
+mod strict;
+
+pub use future::{Fut, FutureEval};
+pub use lazy::{Lazy, LazyEval};
+pub use strict::{Strict, StrictEval};
+
+/// Render a panic payload as text (re-exported for driver threads that
+/// join panicking workloads).
+pub fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+    future::panic_message(p)
+}
+
+use crate::exec::Executor;
+
+/// A forceable suspended value. `force` blocks (for [`Fut`]) or evaluates
+/// (for [`Lazy`]) and always memoizes: the closure runs at most once.
+///
+/// A suspension whose closure panicked re-raises the panic at every
+/// `force` site (the paper's failed Future).
+pub trait Susp<T>: Clone + Send + Sync + 'static {
+    /// Force and return a shared reference to the value.
+    fn force(&self) -> &T;
+
+    /// Whether the value has been computed (never blocks).
+    fn is_ready(&self) -> bool;
+
+    /// Consume this handle and return the value if it is both computed
+    /// and uniquely owned; `None` otherwise (pending, shared, or
+    /// poisoned). Used by `Stream`'s iterative `Drop` to dismantle long
+    /// cons chains without recursion — never blocks.
+    fn into_ready(self) -> Option<T>;
+}
+
+/// An evaluation strategy: how to suspend a computation, and how to
+/// transform a suspended value without forcing it on the current thread.
+/// This is the paper's monad, reified as a strategy object so that
+/// [`FutureEval`] can carry its `Executor` (Scala's implicit
+/// `ExecutionContext`).
+pub trait Eval: Clone + Send + Sync + 'static {
+    type Cell<T: Send + Sync + 'static>: Susp<T>;
+
+    /// `Future { value }` / `Lazy { value }`: wrap a computation. For
+    /// [`FutureEval`] the computation is scheduled immediately.
+    fn suspend<T, F>(&self, f: F) -> Self::Cell<T>
+    where
+        T: Send + Sync + 'static,
+        F: FnOnce() -> T + Send + 'static;
+
+    /// An already-available value (`Future.successful`).
+    fn ready<T>(&self, value: T) -> Self::Cell<T>
+    where
+        T: Send + Sync + 'static;
+
+    /// The monadic `map`: transform the suspended value, preserving
+    /// laziness/asynchrony (the consumer of the result must not force the
+    /// input on the calling thread). Default goes through [`Eval::suspend`];
+    /// [`FutureEval`] overrides it with callback chaining so no worker
+    /// thread parks.
+    fn map<T, U, F>(&self, cell: &Self::Cell<T>, f: F) -> Self::Cell<U>
+    where
+        T: Clone + Send + Sync + 'static,
+        U: Send + Sync + 'static,
+        F: FnOnce(T) -> U + Send + 'static,
+    {
+        let cell = cell.clone();
+        self.suspend(move || f(cell.force().clone()))
+    }
+
+    /// The monadic `flatMap` (used by the paper's `plus` for the
+    /// `for (sx <- tailx; sy <- taily) yield ...` comprehension).
+    fn flat_map<T, U, F>(&self, cell: &Self::Cell<T>, f: F) -> Self::Cell<U>
+    where
+        T: Clone + Send + Sync + 'static,
+        U: Clone + Send + Sync + 'static,
+        F: FnOnce(T) -> Self::Cell<U> + Send + 'static,
+    {
+        let cell = cell.clone();
+        self.suspend(move || f(cell.force().clone()).force().clone())
+    }
+
+    /// The executor backing this strategy, if any. Sequential strategies
+    /// return `None`.
+    fn executor(&self) -> Option<&Executor> {
+        None
+    }
+
+    /// Human-readable name used in reports ("seq", "par(2)", ...).
+    fn label(&self) -> String;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn exercise_strategy<E: Eval>(eval: E) {
+        // suspend + force
+        let cell = eval.suspend(|| 20 + 1);
+        assert_eq!(*cell.force(), 21);
+        // memoization: closure runs once
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = count.clone();
+        let cell = eval.suspend(move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+            7
+        });
+        assert_eq!(*cell.force(), 7);
+        assert_eq!(*cell.force(), 7);
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+        // ready
+        let r = eval.ready(5);
+        assert_eq!(*r.force(), 5);
+        assert!(r.is_ready());
+        // map preserves value
+        let m = eval.map(&r, |x| x * 3);
+        assert_eq!(*m.force(), 15);
+        // map chains
+        let m2 = eval.map(&m, |x| x + 1);
+        assert_eq!(*m2.force(), 16);
+        // flat_map
+        let eval2 = eval.clone();
+        let fm = eval.flat_map(&r, move |x| eval2.ready(x + 100));
+        assert_eq!(*fm.force(), 105);
+    }
+
+    #[test]
+    fn lazy_obeys_susp_contract() {
+        exercise_strategy(LazyEval);
+    }
+
+    #[test]
+    fn strict_obeys_susp_contract() {
+        exercise_strategy(StrictEval);
+    }
+
+    #[test]
+    fn future_obeys_susp_contract() {
+        let ex = Executor::new(2);
+        exercise_strategy(FutureEval::new(ex));
+    }
+
+    #[test]
+    fn future_par1_obeys_susp_contract() {
+        // par(1): the paper's overhead-isolation configuration. Must not
+        // deadlock even though map chains depend on one worker.
+        let ex = Executor::new(1);
+        exercise_strategy(FutureEval::new(ex));
+    }
+
+    #[test]
+    fn lazy_is_actually_lazy() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = count.clone();
+        let cell = LazyEval.suspend(move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(count.load(Ordering::SeqCst), 0, "lazy must not run before force");
+        cell.force();
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn future_starts_eagerly() {
+        // The defining difference from Lazy: computation begins at
+        // construction (Figure 1 of the paper).
+        let ex = Executor::new(2);
+        let eval = FutureEval::new(ex.clone());
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = count.clone();
+        let _cell = eval.suspend(move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        ex.wait_idle();
+        assert_eq!(count.load(Ordering::SeqCst), 1, "future must run without force");
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(LazyEval.label(), "seq");
+        assert_eq!(StrictEval.label(), "strict");
+        let ex = Executor::new(3);
+        assert_eq!(FutureEval::new(ex).label(), "par(3)");
+    }
+}

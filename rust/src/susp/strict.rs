@@ -1,0 +1,82 @@
+//! Strict (call-by-value) suspensions: evaluate immediately on the
+//! calling thread. Degenerate member of the monad family — useful as a
+//! control in tests and in the overhead ablation (`benches/
+//! ablation_overhead.rs`): it measures what the algorithms cost with the
+//! monadic plumbing but *zero* deferral.
+
+use std::sync::Arc;
+
+use super::{Eval, Susp};
+
+/// An already-evaluated value behind an `Arc`.
+pub struct Strict<T>(Arc<T>);
+
+impl<T> Clone for Strict<T> {
+    fn clone(&self) -> Self {
+        Strict(Arc::clone(&self.0))
+    }
+}
+
+impl<T: Send + Sync + 'static> Susp<T> for Strict<T> {
+    fn force(&self) -> &T {
+        &self.0
+    }
+
+    fn is_ready(&self) -> bool {
+        true
+    }
+
+    fn into_ready(self) -> Option<T> {
+        Arc::try_unwrap(self.0).ok()
+    }
+}
+
+/// Strategy that evaluates suspensions immediately (call-by-value).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StrictEval;
+
+impl Eval for StrictEval {
+    type Cell<T: Send + Sync + 'static> = Strict<T>;
+
+    fn suspend<T, F>(&self, f: F) -> Strict<T>
+    where
+        T: Send + Sync + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        Strict(Arc::new(f()))
+    }
+
+    fn ready<T>(&self, value: T) -> Strict<T>
+    where
+        T: Send + Sync + 'static,
+    {
+        Strict(Arc::new(value))
+    }
+
+    fn label(&self) -> String {
+        "strict".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::susp::Eval;
+
+    #[test]
+    fn strict_evaluates_immediately() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let hit = std::sync::Arc::new(AtomicBool::new(false));
+        let h = hit.clone();
+        let cell = StrictEval.suspend(move || h.store(true, Ordering::SeqCst));
+        assert!(hit.load(Ordering::SeqCst), "strict must run before suspend returns");
+        cell.force();
+    }
+
+    #[test]
+    fn map_applies() {
+        let c = StrictEval.ready(2);
+        let m = StrictEval.map(&c, |x| x * 21);
+        assert_eq!(*m.force(), 42);
+    }
+}

@@ -1,0 +1,64 @@
+//! In-repo test utilities.
+//!
+//! `proptest`/`quickcheck` are not available offline, so [`prop`] provides
+//! a deterministic property-testing harness: a splittable xorshift
+//! generator, size-aware combinators, and a runner that reports the
+//! failing seed so any counterexample is reproducible with
+//! `SFUT_PROP_SEED=<seed>`.
+
+pub mod prop;
+
+/// Run `f` on a thread with a `stack_mb`-megabyte stack and propagate
+/// its result (and panics). Deep-recursion paths (long Lazy filter
+/// chains) need more than the 2 MB default of libtest threads; the CLI
+/// and benches use `Config::stack_size` the same way.
+pub fn with_stack<R: Send + 'static>(
+    stack_mb: usize,
+    f: impl FnOnce() -> R + Send + 'static,
+) -> R {
+    std::thread::Builder::new()
+        .stack_size(stack_mb << 20)
+        .spawn(f)
+        .expect("spawn big-stack thread")
+        .join()
+        .unwrap_or_else(|p| std::panic::resume_unwind(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::prop::{runner, Gen};
+
+    #[test]
+    fn runner_is_deterministic_given_seed() {
+        let collect = |seed: u64| {
+            let mut out = Vec::new();
+            let mut g = Gen::from_seed(seed);
+            for _ in 0..10 {
+                out.push(g.u64_any());
+            }
+            out
+        };
+        assert_eq!(collect(42), collect(42));
+        assert_ne!(collect(42), collect(43));
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut r = runner(500);
+        r.run(|g: &mut Gen| {
+            let v = g.usize_in(3..10);
+            assert!((3..10).contains(&v), "{v}");
+            let w = g.i64_in(-5..=5);
+            assert!((-5..=5).contains(&w), "{w}");
+        });
+    }
+
+    #[test]
+    fn vec_gen_respects_len() {
+        let mut r = runner(100);
+        r.run(|g: &mut Gen| {
+            let v = g.vec(0..8, |g| g.u32_any());
+            assert!(v.len() < 8);
+        });
+    }
+}

@@ -1,0 +1,131 @@
+//! Deterministic property-testing harness (offline `proptest` stand-in).
+//!
+//! Usage:
+//! ```
+//! use stream_future::testkit::prop::{runner, Gen};
+//! let mut r = runner(200);
+//! r.run(|g: &mut Gen| {
+//!     let x = g.i64_in(-100..=100);
+//!     assert_eq!(x + 0, x);
+//! });
+//! ```
+//!
+//! Failures print the case seed; re-run a single counterexample with
+//! `SFUT_PROP_SEED=<seed> cargo test <name>`.
+
+use std::ops::{Range, RangeInclusive};
+
+/// SplitMix64-seeded xoshiro-style generator. Plenty for test data; not
+/// for cryptography.
+pub struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    pub fn from_seed(seed: u64) -> Self {
+        // SplitMix64 scramble so consecutive seeds decorrelate.
+        let mut z = seed.wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        Gen { state: (z ^ (z >> 31)) | 1 }
+    }
+
+    pub fn u64_any(&mut self) -> u64 {
+        // xorshift64*
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    pub fn u32_any(&mut self) -> u32 {
+        (self.u64_any() >> 32) as u32
+    }
+
+    pub fn i64_any(&mut self) -> i64 {
+        self.u64_any() as i64
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u64_any() & 1 == 1
+    }
+
+    /// Uniform in `[0, n)`; `n > 0`.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        // Multiply-shift; bias negligible for test purposes.
+        ((self.u64_any() as u128 * n as u128) >> 64) as u64
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(!r.is_empty());
+        r.start + self.below((r.end - r.start) as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, r: RangeInclusive<i64>) -> i64 {
+        let (lo, hi) = (*r.start(), *r.end());
+        assert!(lo <= hi);
+        let span = (hi as i128 - lo as i128 + 1) as u128;
+        let off = (self.u64_any() as u128 * span) >> 64;
+        (lo as i128 + off as i128) as i64
+    }
+
+    pub fn u32_in(&mut self, r: Range<u32>) -> u32 {
+        assert!(!r.is_empty());
+        r.start + self.below((r.end - r.start) as u64) as u32
+    }
+
+    /// A vector whose length is drawn from `len` and whose elements come
+    /// from `f`.
+    pub fn vec<T>(&mut self, len: Range<usize>, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element of a non-empty slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0..xs.len())]
+    }
+}
+
+/// Property runner: executes the property for `cases` independent seeds.
+pub struct Runner {
+    cases: u64,
+    base_seed: u64,
+}
+
+/// Construct a [`Runner`]. Honors `SFUT_PROP_SEED` (run exactly that one
+/// case) and `SFUT_PROP_CASES` (override the case count).
+pub fn runner(cases: u64) -> Runner {
+    let cases = std::env::var("SFUT_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cases);
+    Runner { cases, base_seed: 0xC0FFEE }
+}
+
+impl Runner {
+    pub fn run<F: FnMut(&mut Gen)>(&mut self, mut property: F) {
+        if let Ok(seed) = std::env::var("SFUT_PROP_SEED") {
+            let seed: u64 = seed.parse().expect("SFUT_PROP_SEED must be a u64");
+            let mut g = Gen::from_seed(seed);
+            property(&mut g);
+            return;
+        }
+        for case in 0..self.cases {
+            let seed = self.base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+            let mut g = Gen::from_seed(seed);
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                property(&mut g);
+            }));
+            if let Err(p) = outcome {
+                eprintln!(
+                    "property failed at case {case} (re-run with SFUT_PROP_SEED={seed})"
+                );
+                std::panic::resume_unwind(p);
+            }
+        }
+    }
+}

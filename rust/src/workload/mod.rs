@@ -1,0 +1,137 @@
+//! Workload generators for the paper's evaluation (§7) and our
+//! extensions.
+//!
+//! The polynomial test case is Fateman's sparse-multiplication benchmark
+//! [2]: take `p = (1 + x + y + z + t)^k`, compute `p · (p + 1)`. The
+//! `_big` variants scale every coefficient by 100000000001 "in order to
+//! increase the footprint of elementary operations".
+
+use crate::bigint::BigInt;
+use crate::config::Config;
+use crate::poly::Polynomial;
+
+/// The Fateman pair `(p, p+1)` over `vars` variables at degree `k`,
+/// with `i64` coefficients.
+pub fn fateman_pair(vars: usize, k: u32) -> (Polynomial<i64>, Polynomial<i64>) {
+    let mut base = Polynomial::one(vars);
+    for i in 0..vars {
+        base = base.add(&Polynomial::var(vars, i));
+    }
+    let p = base.pow(k);
+    let q = p.add(&Polynomial::one(vars));
+    (p, q)
+}
+
+/// The `_big` variant: coefficients lifted to [`BigInt`] and scaled by
+/// `factor` (the paper's 100000000001).
+pub fn fateman_pair_big(
+    vars: usize,
+    k: u32,
+    factor: i64,
+) -> (Polynomial<BigInt>, Polynomial<BigInt>) {
+    let (p, q) = fateman_pair(vars, k);
+    let f = BigInt::from(factor);
+    (
+        p.map_coeffs(|c| &BigInt::from(*c) * &f),
+        q.map_coeffs(|c| &BigInt::from(*c) * &f),
+    )
+}
+
+/// Workload sizes derived from a [`Config`] (applies `scale`).
+pub struct Sizes {
+    pub primes_n: u32,
+    pub primes_x3_n: u32,
+    pub fateman_vars: usize,
+    pub fateman_degree: u32,
+    pub big_factor: i64,
+    pub chunk_size: usize,
+}
+
+impl Sizes {
+    pub fn from_config(cfg: &Config) -> Sizes {
+        let n = cfg.scaled_primes_n();
+        Sizes {
+            primes_n: n,
+            primes_x3_n: n.saturating_mul(3),
+            fateman_vars: cfg.fateman_vars,
+            fateman_degree: cfg.scaled_fateman_degree(),
+            big_factor: cfg.big_factor,
+            chunk_size: cfg.chunk_size,
+        }
+    }
+}
+
+/// Expected number of terms of `(1 + Σ xᵢ)^k` over `v` variables:
+/// `C(k + v, v)`.
+pub fn fateman_terms(vars: usize, k: u32) -> u64 {
+    let v = vars as u64;
+    let k = k as u64;
+    // C(k+v, v) with small v: multiply carefully.
+    let mut num = 1u64;
+    for i in 1..=v {
+        num = num * (k + i) / i;
+    }
+    num
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fateman_term_counts() {
+        // (1+x+y+z)^2 = C(5,3) = 10 terms.
+        let (p, _) = fateman_pair(3, 2);
+        assert_eq!(p.num_terms() as u64, fateman_terms(3, 2));
+        // Paper-adjacent scale: 4 vars, degree 12 → C(16,4) = 1820.
+        assert_eq!(fateman_terms(4, 12), 1820);
+        // Fateman's original: 3 vars, degree 20 → C(23,3) = 1771.
+        assert_eq!(fateman_terms(3, 20), 1771);
+    }
+
+    #[test]
+    fn fateman_pair_properties() {
+        let (p, q) = fateman_pair(4, 3);
+        assert_eq!(p.num_terms() as u64, fateman_terms(4, 3));
+        // q = p + 1: constant coefficient differs by one.
+        assert_eq!(q.sub(&p), Polynomial::one(4));
+        // Leading coefficient of (1+Σx)^k is 1 (pure power term).
+        assert_eq!(p.leading().unwrap().1, 1);
+    }
+
+    #[test]
+    fn big_variant_scales_coefficients() {
+        let (p, _) = fateman_pair(3, 2);
+        let (pb, qb) = fateman_pair_big(3, 2, 100_000_000_001);
+        assert_eq!(pb.num_terms(), p.num_terms());
+        let f = BigInt::from(100_000_000_001i64);
+        // Constant term of p is 1 → becomes the factor itself.
+        let konst = pb
+            .terms()
+            .iter()
+            .find(|(m, _)| m.is_one())
+            .map(|(_, c)| c.clone())
+            .unwrap();
+        assert_eq!(konst, f);
+        assert!(!qb.is_zero());
+    }
+
+    #[test]
+    fn product_term_count_matches_formula() {
+        // p·(p+1) has the terms of p^2 plus those of p: same support as
+        // (1+Σx)^(2k) since supp(p) ⊂ supp(p²).
+        let (p, q) = fateman_pair(3, 3);
+        let prod = p.mul(&q);
+        assert_eq!(prod.num_terms() as u64, fateman_terms(3, 6));
+    }
+
+    #[test]
+    fn sizes_apply_scale() {
+        let mut cfg = Config::default();
+        cfg.scale = 0.25;
+        let s = Sizes::from_config(&cfg);
+        assert_eq!(s.primes_n, 5000);
+        assert_eq!(s.primes_x3_n, 15000);
+        assert!(s.fateman_degree < cfg.fateman_degree);
+    }
+}

@@ -1,0 +1,95 @@
+//! Integration: the Gröbner application over the exact-rational
+//! substrate, cross-checked between execution modes and against
+//! ideal-membership facts.
+
+use stream_future::exec::Executor;
+use stream_future::poly::groebner::{buchberger_par, buchberger_seq, is_groebner};
+use stream_future::poly::{parse_polynomial, Coeff, Polynomial};
+use stream_future::rational::Rational;
+use stream_future::testkit::prop::{runner, Gen};
+
+fn p3(s: &str) -> Polynomial<Rational> {
+    parse_polynomial(s, &["x", "y", "z"]).unwrap()
+}
+
+#[test]
+fn cyclic3_known_basis_shape() {
+    let gens = [p3("x + y + z"), p3("x*y + y*z + z*x"), p3("x*y*z - 1")];
+    let basis = buchberger_seq(&gens);
+    assert!(is_groebner(&basis));
+    // Reduced grlex basis of cyclic-3 has 3 elements with leading
+    // monomials x, y^2 (after x-elimination), z^3.
+    assert_eq!(basis.len(), 3);
+    let leads: Vec<String> =
+        basis.iter().map(|b| b.leading().unwrap().0.to_string()).collect();
+    assert!(leads.contains(&"x".to_string()), "{leads:?}");
+    assert!(leads.contains(&"z^3".to_string()), "{leads:?}");
+}
+
+#[test]
+fn parallel_equals_sequential_on_random_ideals() {
+    // Buchberger's running time is wildly input-sensitive; keep the
+    // random generators tiny (2 vars, degree <= 2, 2 gens max) so the
+    // worst sampled ideal still terminates in milliseconds. Pathological
+    // cases belong in the (curated) unit tests, not a property sweep.
+    let ex = Executor::new(3);
+    let mut r = runner(8);
+    r.run(move |g: &mut Gen| {
+        let gens: Vec<Polynomial<Rational>> = (0..g.usize_in(1..3))
+            .map(|_| random_poly(g))
+            .filter(|p| !p.is_zero())
+            .collect();
+        if gens.is_empty() {
+            return;
+        }
+        let seq = buchberger_seq(&gens);
+        let par = buchberger_par(&ex, &gens);
+        assert_eq!(seq, par, "gens={gens:?}");
+        assert!(is_groebner(&seq));
+    });
+}
+
+#[test]
+fn ideal_membership_is_mode_independent() {
+    let gens = [p3("x^2 - y*z"), p3("y^2 - x*z")];
+    let ex = Executor::new(2);
+    let basis = buchberger_par(&ex, &gens);
+    // Products of generators are members.
+    let member = gens[0].mul(&gens[1]);
+    assert!(member.normal_form(&basis).is_zero());
+    // S-polynomial of the generators is a member too.
+    let s = stream_future::poly::groebner::s_polynomial(&gens[0], &gens[1]);
+    assert!(s.normal_form(&basis).is_zero());
+}
+
+#[test]
+fn rational_coefficients_stay_exact_through_buchberger() {
+    // A system whose reductions produce non-dyadic fractions (thirds),
+    // the exact case f64 gets wrong.
+    let gens = [
+        p3("3*x^2 + y - 1"),
+        p3("x + 3*y^2 - 1"),
+    ];
+    let basis = buchberger_seq(&gens);
+    assert!(is_groebner(&basis));
+    // Every coefficient is a normalized exact rational (denominator > 0,
+    // reduced); spot-check by re-parsing the display form round-trips
+    // denominators like 1/3.
+    let has_fraction = basis.iter().any(|b| {
+        b.terms().iter().any(|(_, c)| !c.is_zero() && c.to_exact_f64().is_none())
+    });
+    assert!(has_fraction, "expected non-integer rationals in {basis:?}");
+}
+
+fn random_poly(g: &mut Gen) -> Polynomial<Rational> {
+    let terms = g.vec(1..4, |g| {
+        // 2 effective variables, total degree <= 2 per monomial.
+        let e0 = g.u32_in(0..3) as u16;
+        let e1 = g.u32_in(0..(3 - e0.min(2) as u32)) as u16;
+        (
+            stream_future::poly::Monomial::from_exps(vec![e0, e1, 0]),
+            Rational::from(g.i64_in(-4..=4)),
+        )
+    });
+    Polynomial::from_terms(3, terms)
+}

@@ -1,0 +1,130 @@
+//! Integration: the full three-layer pipeline — coordinator routing,
+//! stream/future algorithms, and the PJRT kernel path — against the
+//! independent oracles.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use stream_future::config::{Config, Mode, Workload};
+use stream_future::coordinator::{serve, JobRequest, Pipeline};
+use stream_future::poly::{chunked_times, RustMultiplier};
+use stream_future::prelude::*;
+use stream_future::runtime::{KernelMultiplier, KernelSiever, XlaEngine};
+use stream_future::sieve;
+use stream_future::workload::fateman_pair;
+
+fn test_config() -> Config {
+    let mut cfg = Config::default();
+    cfg.primes_n = 1_000;
+    cfg.fateman_degree = 4;
+    cfg.chunk_size = 32;
+    cfg.artifacts_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    cfg
+}
+
+fn have_artifacts() -> bool {
+    test_config().artifacts_dir.join("manifest.toml").exists()
+}
+
+#[test]
+fn pipeline_with_kernel_runs_chunked_workloads() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let pipeline = Pipeline::new(test_config()).unwrap();
+    assert!(pipeline.engine().is_some(), "engine must start when artifacts exist");
+    for mode in [Mode::Seq, Mode::Par(2)] {
+        let res = pipeline
+            .run(&JobRequest { workload: Workload::Chunked, mode })
+            .unwrap();
+        assert!(res.verified, "chunked {mode:?} failed verification");
+        assert_eq!(res.backend, "pjrt-kernel");
+    }
+    // The big variant is f64-inexact → generic path, still through the
+    // same chunked code, still verified.
+    let res = pipeline
+        .run(&JobRequest { workload: Workload::ChunkedBig, mode: Mode::Par(2) })
+        .unwrap();
+    assert!(res.verified);
+    let stats = pipeline.engine().unwrap().stats();
+    assert!(stats.poly_calls > 0, "kernel must actually be invoked");
+}
+
+#[test]
+fn kernel_and_rust_multipliers_agree_on_fateman() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Arc::new(XlaEngine::start(&test_config().artifacts_dir).unwrap());
+    let (p, q) = fateman_pair(4, 5);
+    let want = p.mul(&q);
+    for chunk in [7, 32, 128] {
+        let via_kernel = chunked_times(
+            &LazyEval,
+            &p,
+            &q,
+            chunk,
+            Arc::new(KernelMultiplier::new(Arc::clone(&engine))),
+        );
+        assert_eq!(via_kernel, want, "kernel path, chunk={chunk}");
+        let via_rust = chunked_times(&LazyEval, &p, &q, chunk, Arc::new(RustMultiplier));
+        assert_eq!(via_rust, want, "rust path, chunk={chunk}");
+    }
+}
+
+#[test]
+fn kernel_siever_full_sieve_matches_oracle() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Arc::new(XlaEngine::start(&test_config().artifacts_dir).unwrap());
+    let siever = Arc::new(KernelSiever::new(engine));
+    let oracle = sieve::eratosthenes(20_000);
+    let got = sieve::chunked_primes_with_runtime(LazyEval, 20_000, 512, siever.clone());
+    assert_eq!(got, oracle);
+    // Parallel: blocks fan out as future tasks, all hitting the engine.
+    let ex = Executor::new(3);
+    let got = sieve::chunked_primes_with_runtime(FutureEval::new(ex), 20_000, 512, siever);
+    assert_eq!(got, oracle);
+}
+
+#[test]
+fn serve_session_over_kernel_pipeline() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let pipeline = Pipeline::new(test_config()).unwrap();
+    let script = "run chunked par(2)\nrun primes seq\nmetrics\nquit\n";
+    let mut out = Vec::new();
+    let jobs = serve(&pipeline, script.as_bytes(), &mut out).unwrap();
+    let out = String::from_utf8(out).unwrap();
+    assert_eq!(jobs, 2);
+    assert!(out.contains("ok workload=chunked mode=par(2)"));
+    assert!(out.contains("backend=pjrt-kernel"));
+    assert!(out.contains("jobs.completed"));
+}
+
+#[test]
+fn pipeline_without_kernel_falls_back() {
+    let mut cfg = test_config();
+    cfg.use_kernel = false;
+    let pipeline = Pipeline::new(cfg).unwrap();
+    assert!(pipeline.engine().is_none());
+    let res = pipeline
+        .run(&JobRequest { workload: Workload::Chunked, mode: Mode::Seq })
+        .unwrap();
+    assert!(res.verified);
+    assert_eq!(res.backend, "rust-scalar");
+}
+
+#[test]
+fn missing_artifacts_dir_falls_back_silently() {
+    let mut cfg = test_config();
+    cfg.artifacts_dir = "/definitely/not/here".into();
+    let pipeline = Pipeline::new(cfg).unwrap();
+    assert!(pipeline.engine().is_none());
+}

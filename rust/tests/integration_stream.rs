@@ -1,0 +1,138 @@
+//! Integration: cross-strategy equivalence at realistic sizes, failure
+//! injection, and executor behaviour under the paper's workload shapes.
+
+use stream_future::exec::{Executor, ExecutorConfig};
+use stream_future::poly::{parse_polynomial, stream_times, Polynomial};
+use stream_future::prelude::*;
+use stream_future::sieve;
+use stream_future::testkit::with_stack;
+use stream_future::workload::{fateman_pair, fateman_pair_big};
+
+#[test]
+fn sieve_agrees_across_strategies_at_5000() {
+    let oracle = sieve::eratosthenes(5_000);
+    let lazy = with_stack(512, || sieve::primes(LazyEval, 5_000));
+    assert_eq!(lazy, oracle);
+    for workers in [1, 2, 4] {
+        let eval = FutureEval::new(Executor::new(workers));
+        let got = with_stack(512, move || sieve::primes(eval, 5_000));
+        assert_eq!(got, oracle, "par({workers})");
+    }
+}
+
+#[test]
+fn fateman_product_agrees_across_strategies() {
+    let (p, q) = fateman_pair(4, 6);
+    let want = p.mul(&q);
+    {
+        let (p, q) = (p.clone(), q.clone());
+        let got = with_stack(512, move || stream_times(&LazyEval, &p, &q));
+        assert_eq!(got, want);
+    }
+    for workers in [1, 3] {
+        let (p, q) = (p.clone(), q.clone());
+        let eval = FutureEval::new(Executor::new(workers));
+        let got = with_stack(512, move || stream_times(&eval, &p, &q));
+        assert_eq!(got, want, "par({workers})");
+    }
+}
+
+#[test]
+fn big_coefficients_survive_the_pipeline() {
+    let (p, q) = fateman_pair_big(3, 5, 100_000_000_001);
+    let want = p.mul(&q);
+    let eval = FutureEval::new(Executor::new(2));
+    let got = with_stack(512, move || stream_times(&eval, &p, &q));
+    assert_eq!(got, want);
+    // The leading coefficient carries the squared factor.
+    let (_, c) = want.leading().unwrap();
+    assert_eq!(c.to_string(), "10000000000200000000001"); // (10^11+1)^2
+}
+
+#[test]
+fn panic_deep_in_future_stream_propagates_to_consumer() {
+    let eval = FutureEval::new(Executor::new(2));
+    let s = Stream::range(eval, 0, 100).map_elems(|&x| {
+        if x == 57 {
+            panic!("injected failure at 57");
+        }
+        x
+    });
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| s.to_vec()));
+    assert!(res.is_err(), "failure must reach the forcing thread");
+}
+
+#[test]
+fn executor_survives_poisoned_workload_and_serves_again() {
+    let ex = Executor::new(2);
+    let eval = FutureEval::new(ex.clone());
+    let s = Stream::range(eval.clone(), 0, 20)
+        .map_elems(|&x| if x == 5 { panic!("boom") } else { x });
+    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| s.to_vec()));
+    // Same pool keeps working.
+    let ok = Stream::range(eval, 100, 110).to_vec();
+    assert_eq!(ok, (100..110).collect::<Vec<_>>());
+}
+
+#[test]
+fn par1_never_deadlocks_on_nested_dependencies() {
+    // The killer case for naive pools: a stream whose map stages force
+    // other suspensions, on a single worker. Managed blocking must keep
+    // it live. (The paper's plus() does exactly this.)
+    let a = parse_polynomial::<i64>("x^3 + x^2 + x + 1", &["x"]).unwrap();
+    let b = parse_polynomial::<i64>("x^3 - x^2 + x - 1", &["x"]).unwrap();
+    let eval = FutureEval::new(Executor::new(1));
+    let got = with_stack(64, move || stream_times(&eval, &a, &b));
+    let a2 = parse_polynomial::<i64>("x^3 + x^2 + x + 1", &["x"]).unwrap();
+    let b2 = parse_polynomial::<i64>("x^3 - x^2 + x - 1", &["x"]).unwrap();
+    assert_eq!(got, a2.mul(&b2));
+}
+
+#[test]
+fn cancellation_heavy_merge_under_future() {
+    // p + (-p) exercises the paper's "unavoidable Await.result" branch on
+    // every single term.
+    let (p, _) = fateman_pair(3, 4);
+    let neg = p.neg();
+    let eval = FutureEval::new(Executor::new(2));
+    let sum = with_stack(512, move || {
+        use stream_future::poly::{plus, PolyStream};
+        let a: PolyStream<i64, _> = Stream::from_vec(eval.clone(), p.terms().to_vec());
+        let b: PolyStream<i64, _> = Stream::from_vec(eval.clone(), neg.terms().to_vec());
+        plus(&a, &b).to_vec()
+    });
+    assert!(sum.is_empty(), "total cancellation must produce the empty stream");
+}
+
+#[test]
+fn custom_executor_config_is_respected() {
+    let mut cfg = ExecutorConfig::with_parallelism(3);
+    cfg.name = "itest".into();
+    let ex = Executor::with_config(cfg);
+    assert_eq!(ex.parallelism(), 3);
+    let eval = FutureEval::new(ex.clone());
+    let v = Stream::range(eval, 0, 1000).map_elems(|x| x + 1).to_vec();
+    assert_eq!(v.len(), 1000);
+    let stats = ex.stats();
+    assert!(stats.tasks_executed >= 1000);
+}
+
+#[test]
+fn chunked_sieve_large_scale_cross_strategy() {
+    let oracle = sieve::eratosthenes(60_000); // the paper's primes_x3 size
+    assert_eq!(oracle.len(), 6_057);
+    let got = sieve::chunked_primes(LazyEval, 60_000, 1024);
+    assert_eq!(got, oracle);
+    let eval = FutureEval::new(Executor::new(4));
+    let got = sieve::chunked_primes(eval, 60_000, 1024);
+    assert_eq!(got, oracle);
+}
+
+#[test]
+fn polynomial_display_roundtrip_through_parser() {
+    let p: Polynomial<i64> =
+        parse_polynomial("3*x^2*y - 4*z + 7", &["x", "y", "z"]).unwrap();
+    let q: Polynomial<i64> =
+        parse_polynomial(&p.to_string().replace("+ -", "- "), &["x", "y", "z"]).unwrap();
+    assert_eq!(p, q);
+}
