@@ -10,7 +10,10 @@
 //! 4. the elementary-operation footprint knob: one term-product
 //!    multiply-add at growing coefficient sizes (i64 → BigInt at
 //!    100000000001^k), i.e. *why* `stream_big` recovers;
-//! 5. executor queue throughput under producer contention.
+//! 5. executor queue throughput under producer contention;
+//! 6. scheduler A/B — the Mutex-queue baseline vs the work-stealing
+//!    executor on identical fan-out and spawn+force workloads, recorded
+//!    to `BENCH_executor.json` for the perf trajectory.
 //!
 //! Run: `cargo bench --bench ablation_overhead`.
 
@@ -18,6 +21,7 @@ mod common;
 
 use std::time::Instant;
 
+use stream_future::bench_harness::executor_bench;
 use stream_future::bigint::BigInt;
 use stream_future::exec::Executor;
 use stream_future::poly::Coeff;
@@ -134,6 +138,40 @@ fn main() {
                 });
                 ex.wait_idle();
             });
+        }
+    }
+
+    // 6. Scheduler A/B: baseline global queue vs work-stealing, full
+    //    size, written to BENCH_executor.json (release numbers overwrite
+    //    any test-seeded file; the JSON's `profile` field records which
+    //    build produced it).
+    {
+        let par = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(8);
+        let tasks = n.max(100_000);
+        let opts = stream_future::bench_harness::BenchOptions {
+            warmup: cfg.warmup.max(1),
+            samples: cfg.samples.max(3),
+            verbose: false,
+        };
+        let b = executor_bench::run(tasks, par, &opts);
+        println!(
+            "\nscheduler A/B ({tasks} tasks, par({par})):\n\
+             \x20 spawn wave   baseline {:>10.1} tasks/s | work-stealing {:>10.1} tasks/s | speedup {:.2}x\n\
+             \x20 fut force    baseline {:>10.1} tasks/s | work-stealing {:>10.1} tasks/s | speedup {:.2}x\n\
+             \x20 steals (work-stealing): {}   queue-depth p99: {} jobs",
+            b.baseline.spawn_wave_tasks_per_sec,
+            b.work_stealing.spawn_wave_tasks_per_sec,
+            b.speedup_spawn_wave,
+            b.baseline.fut_force_tasks_per_sec,
+            b.work_stealing.fut_force_tasks_per_sec,
+            b.speedup_fut_force,
+            b.work_stealing.tasks_stolen,
+            b.work_stealing.queue_depth.p99,
+        );
+        let out = executor_bench::default_output_path();
+        match executor_bench::write_json(&b, &out) {
+            Ok(()) => println!("  wrote {}", out.display()),
+            Err(e) => eprintln!("  could not write {}: {e}", out.display()),
         }
     }
 

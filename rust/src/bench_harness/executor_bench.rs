@@ -1,0 +1,316 @@
+//! Executor overhead benchmark with a machine-readable trajectory.
+//!
+//! Runs the same two workloads on the Mutex-queue baseline
+//! ([`Scheduler::GlobalQueue`]) and the work-stealing scheduler
+//! ([`Scheduler::WorkStealing`]), on the same machine in the same
+//! process, through the harness's robust sampler ([`measure`]: warmup
+//! runs absorb allocator/thread settling, the reported statistic is the
+//! median over samples):
+//!
+//! 1. **spawn wave** — a recursive binary fan-out of trivial tasks (each
+//!    task spawns two more until a budget runs out). This is the shape
+//!    of a Future-stream spine: spawns originate *inside* workers, which
+//!    is exactly where per-worker deques beat a global lock.
+//! 2. **fut spawn+force** — one worker spawns N trivial `Fut`s; the
+//!    driver forces every one. Covers the acceptance gate "spawn+force
+//!    of 100k trivial tasks".
+//!
+//! A sampler thread records instantaneous queue depth into a
+//! [`Histogram`] throughout. Results serialize to `BENCH_executor.json`
+//! (rebar-style: every perf PR appends a data point to the repo's
+//! trajectory — see SNIPPETS.md). The JSON records the build profile;
+//! only `cargo bench` (release) numbers are comparable across PRs, so
+//! the `cargo test` smoke run never overwrites an existing file.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::{measure, BenchOptions};
+use crate::exec::{Executor, ExecutorConfig, Scheduler};
+use crate::metrics::Histogram;
+use crate::susp::{Fut, Susp};
+
+/// Queue-depth distribution over one scheduler run (sampled, in jobs).
+#[derive(Debug, Clone)]
+pub struct QueueDepthStats {
+    pub samples: u64,
+    pub mean: f64,
+    pub p50: u64,
+    pub p99: u64,
+    pub max: u64,
+}
+
+/// One scheduler's measurements. Timings are medians over
+/// `opts.samples` runs after `opts.warmup` warmup runs.
+#[derive(Debug, Clone)]
+pub struct SchedulerRun {
+    pub scheduler: &'static str,
+    pub spawn_wave_secs: f64,
+    pub spawn_wave_tasks_per_sec: f64,
+    pub fut_force_secs: f64,
+    pub fut_force_tasks_per_sec: f64,
+    /// Cumulative over warmup + samples.
+    pub tasks_executed: u64,
+    pub tasks_stolen: u64,
+    pub queue_depth: QueueDepthStats,
+}
+
+/// The full A/B result.
+#[derive(Debug, Clone)]
+pub struct ExecutorBench {
+    pub tasks: u64,
+    pub parallelism: usize,
+    pub warmup: usize,
+    pub samples: usize,
+    /// "release" or "debug" — only release points belong on the
+    /// cross-PR trajectory.
+    pub profile: &'static str,
+    pub baseline: SchedulerRun,
+    pub work_stealing: SchedulerRun,
+    /// baseline median / work-stealing median (>1 means work-stealing wins).
+    pub speedup_spawn_wave: f64,
+    pub speedup_fut_force: f64,
+}
+
+fn build_profile() -> &'static str {
+    if cfg!(debug_assertions) {
+        "debug"
+    } else {
+        "release"
+    }
+}
+
+/// Each task spawns two successors until the shared budget is spent —
+/// worker-originated spawns, the work-stealing scheduler's home turf.
+fn spawn_tree(ex: &Executor, budget: &Arc<AtomicI64>) {
+    for _ in 0..2 {
+        if budget.fetch_sub(1, Ordering::Relaxed) > 0 {
+            let ex2 = ex.clone();
+            let b2 = Arc::clone(budget);
+            ex.spawn(move || spawn_tree(&ex2, &b2));
+        } else {
+            break;
+        }
+    }
+}
+
+fn run_one(
+    scheduler: Scheduler,
+    tasks: u64,
+    parallelism: usize,
+    opts: &BenchOptions,
+) -> SchedulerRun {
+    let mut cfg = ExecutorConfig::with_parallelism(parallelism);
+    cfg.scheduler = scheduler;
+    let ex = Executor::with_config(cfg);
+
+    // Depth sampler: poll until told to stop.
+    let hist = Arc::new(Histogram::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let sampler = {
+        let ex = ex.clone();
+        let hist = Arc::clone(&hist);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                let depth = ex.stats().queue_depth as u64;
+                // The histogram buckets nanosecond durations; reuse it
+                // for dimensionless depths (1 "nano" = 1 queued job).
+                hist.record(Duration::from_nanos(depth));
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        })
+    };
+
+    // 1. Spawn wave (fresh budget per sample; warmup absorbs thread and
+    //    allocator settling so the first-measured scheduler is not
+    //    penalized for one-time process costs).
+    let wave = measure("spawn_wave", opts, || {
+        let budget = Arc::new(AtomicI64::new(tasks as i64));
+        let ex2 = ex.clone();
+        let b2 = Arc::clone(&budget);
+        ex.spawn(move || spawn_tree(&ex2, &b2));
+        ex.wait_idle();
+    });
+
+    // 2. Fut spawn+force: one worker produces, the driver consumes.
+    let fut = measure("fut_force", opts, || {
+        let exv = ex.clone();
+        let n = tasks;
+        let produced = Fut::spawn(&ex, move || {
+            (0..n).map(|i| Fut::spawn(&exv, move || i)).collect::<Vec<_>>()
+        });
+        let mut checksum = 0u64;
+        for f in produced.force() {
+            checksum = checksum.wrapping_add(*f.force());
+        }
+        std::hint::black_box(checksum);
+    });
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = sampler.join();
+
+    let stats = ex.stats();
+    let wave_secs = wave.median_secs();
+    let fut_secs = fut.median_secs();
+    SchedulerRun {
+        scheduler: match scheduler {
+            Scheduler::GlobalQueue => "global-queue",
+            Scheduler::WorkStealing => "work-stealing",
+        },
+        spawn_wave_secs: wave_secs,
+        spawn_wave_tasks_per_sec: tasks as f64 / wave_secs.max(1e-9),
+        fut_force_secs: fut_secs,
+        fut_force_tasks_per_sec: tasks as f64 / fut_secs.max(1e-9),
+        tasks_executed: stats.tasks_executed,
+        tasks_stolen: stats.tasks_stolen,
+        queue_depth: QueueDepthStats {
+            samples: hist.count(),
+            mean: hist.mean().as_nanos() as f64,
+            p50: hist.quantile(0.5).as_nanos() as u64,
+            p99: hist.quantile(0.99).as_nanos() as u64,
+            max: hist.max().as_nanos() as u64,
+        },
+    }
+}
+
+/// Run the full A/B comparison: baseline first, then work-stealing,
+/// each with its own warmup so ordering does not bias the medians.
+pub fn run(tasks: u64, parallelism: usize, opts: &BenchOptions) -> ExecutorBench {
+    let baseline = run_one(Scheduler::GlobalQueue, tasks, parallelism, opts);
+    let work_stealing = run_one(Scheduler::WorkStealing, tasks, parallelism, opts);
+    ExecutorBench {
+        tasks,
+        parallelism,
+        warmup: opts.warmup,
+        samples: opts.samples,
+        profile: build_profile(),
+        speedup_spawn_wave: baseline.spawn_wave_secs / work_stealing.spawn_wave_secs.max(1e-9),
+        speedup_fut_force: baseline.fut_force_secs / work_stealing.fut_force_secs.max(1e-9),
+        baseline,
+        work_stealing,
+    }
+}
+
+fn json_run(r: &SchedulerRun, indent: &str) -> String {
+    format!(
+        "{{\n\
+         {indent}  \"scheduler\": \"{}\",\n\
+         {indent}  \"spawn_wave_secs\": {:.6},\n\
+         {indent}  \"spawn_wave_tasks_per_sec\": {:.1},\n\
+         {indent}  \"fut_force_secs\": {:.6},\n\
+         {indent}  \"fut_force_tasks_per_sec\": {:.1},\n\
+         {indent}  \"tasks_executed\": {},\n\
+         {indent}  \"tasks_stolen\": {},\n\
+         {indent}  \"queue_depth\": {{\"samples\": {}, \"mean\": {:.1}, \"p50\": {}, \"p99\": {}, \"max\": {}}}\n\
+         {indent}}}",
+        r.scheduler,
+        r.spawn_wave_secs,
+        r.spawn_wave_tasks_per_sec,
+        r.fut_force_secs,
+        r.fut_force_tasks_per_sec,
+        r.tasks_executed,
+        r.tasks_stolen,
+        r.queue_depth.samples,
+        r.queue_depth.mean,
+        r.queue_depth.p50,
+        r.queue_depth.p99,
+        r.queue_depth.max,
+    )
+}
+
+/// Serialize to the `BENCH_executor.json` schema (hand-rolled; no serde
+/// offline).
+pub fn to_json(b: &ExecutorBench) -> String {
+    format!(
+        "{{\n\
+         \x20 \"bench\": \"executor_overhead\",\n\
+         \x20 \"profile\": \"{}\",\n\
+         \x20 \"tasks\": {},\n\
+         \x20 \"parallelism\": {},\n\
+         \x20 \"warmup\": {},\n\
+         \x20 \"samples\": {},\n\
+         \x20 \"baseline\": {},\n\
+         \x20 \"work_stealing\": {},\n\
+         \x20 \"speedup_spawn_wave\": {:.3},\n\
+         \x20 \"speedup_fut_force\": {:.3}\n\
+         }}\n",
+        b.profile,
+        b.tasks,
+        b.parallelism,
+        b.warmup,
+        b.samples,
+        json_run(&b.baseline, "  "),
+        json_run(&b.work_stealing, "  "),
+        b.speedup_spawn_wave,
+        b.speedup_fut_force,
+    )
+}
+
+pub fn write_json(b: &ExecutorBench, path: &Path) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(to_json(b).as_bytes())
+}
+
+/// Default artifact location: the repository root.
+pub fn default_output_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_executor.json")
+}
+
+/// Seed the trajectory file only when none exists yet, so a debug-build
+/// `cargo test` smoke run never clobbers a full-scale release data
+/// point (the `profile` field in the JSON disambiguates what's there).
+pub fn write_json_if_absent(b: &ExecutorBench) -> std::io::Result<bool> {
+    let path = default_output_path();
+    if path.exists() {
+        return Ok(false);
+    }
+    write_json(b, &path).map(|()| true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ab_comparison_runs_and_emits_json() {
+        // Small-scale smoke: correctness of the A/B plumbing, not a perf
+        // claim. Seeds BENCH_executor.json only if no trajectory file
+        // exists; the full-size release run lives in
+        // `cargo bench --bench ablation_overhead`.
+        let opts = BenchOptions { warmup: 1, samples: 2, verbose: false };
+        let b = run(10_000, 2, &opts);
+        assert!(b.baseline.tasks_executed >= 10_000);
+        assert!(b.work_stealing.tasks_executed >= 10_000);
+        assert!(b.baseline.spawn_wave_tasks_per_sec > 0.0);
+        assert!(b.work_stealing.fut_force_tasks_per_sec > 0.0);
+        assert_eq!(b.baseline.tasks_stolen, 0, "global queue has nothing to steal");
+        let json = to_json(&b);
+        assert!(json.contains("\"bench\": \"executor_overhead\""));
+        assert!(json.contains("work-stealing"));
+        assert!(json.contains("\"profile\""));
+        // Serialization to disk, via a scratch path (never the trajectory).
+        let tmp = std::env::temp_dir().join("sfut_bench_executor_smoke.json");
+        write_json(&b, &tmp).expect("write smoke json");
+        assert!(tmp.exists());
+        let _ = std::fs::remove_file(&tmp);
+        // Seed the real file only when absent.
+        let _ = write_json_if_absent(&b);
+        assert!(default_output_path().exists());
+    }
+
+    #[test]
+    fn spawn_tree_spends_budget() {
+        let ex = Executor::new(2);
+        let budget = Arc::new(AtomicI64::new(500));
+        let ex2 = ex.clone();
+        let b2 = Arc::clone(&budget);
+        ex.spawn(move || spawn_tree(&ex2, &b2));
+        ex.wait_idle();
+        assert!(budget.load(Ordering::Relaxed) <= 0);
+        assert!(ex.stats().tasks_executed >= 500);
+    }
+}

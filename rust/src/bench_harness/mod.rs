@@ -8,11 +8,13 @@
 //! ASCII bar charts mirroring the paper's figures.
 
 mod chart;
+pub mod executor_bench;
 pub mod paper;
 mod sampler;
 mod table;
 
 pub use chart::ascii_bar_chart;
+pub use executor_bench::{ExecutorBench, QueueDepthStats, SchedulerRun};
 pub use sampler::{measure, BenchOptions, Measurement};
 pub use table::{render_csv, render_table, Cell, ReportTable};
 

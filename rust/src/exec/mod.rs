@@ -6,22 +6,34 @@
 //! available offline, and the Future machinery is the paper's subject, so
 //! this module builds it from scratch:
 //!
-//! * [`Executor`] — a fixed-parallelism worker pool with an injector queue.
+//! * [`Executor`] — a fixed-parallelism worker pool. Scheduling is
+//!   **work-stealing** by default ([`Scheduler::WorkStealing`]): each
+//!   worker owns a [`WorkerDeque`] with LIFO local push/pop and FIFO
+//!   stealing, external submissions land in a global injector
+//!   ([`JobQueue`]), and idle workers park on a pool-wide condvar until a
+//!   producer unparks them. The old single-lock injector survives as
+//!   [`Scheduler::GlobalQueue`], kept as the measured baseline for
+//!   `benches/ablation_overhead.rs` / `BENCH_executor.json`.
 //! * Managed blocking ([`Executor::blocking`]) — when a worker is about to
 //!   block (the paper's `Await.result` inside `plus`), a compensation
 //!   worker is spun up so the configured parallelism is preserved and
-//!   `par(1)` cannot deadlock on a dependency chain.
+//!   `par(1)` cannot deadlock on a dependency chain. Compensation workers
+//!   register their own deques and steal like any other worker.
 //! * Panic propagation — a panicking task poisons its future; the panic
 //!   payload resurfaces at the `force` site, not in a dead worker log.
+//!   This holds for stolen tasks too (the catch sits in the job body, so
+//!   it travels with the job wherever it runs).
 //!
 //! The pool size is the experimental variable of the paper's evaluation:
 //! `par(1)` and `par(2)` in Table 1 are literally `Executor::new(1)` and
 //! `Executor::new(2)`.
 
+mod deque;
 mod pool;
 mod queue;
 
-pub use pool::{Executor, ExecutorConfig, ExecutorStats};
+pub use deque::WorkerDeque;
+pub use pool::{Executor, ExecutorConfig, ExecutorStats, Scheduler};
 pub use queue::JobQueue;
 
 use std::sync::Arc;
@@ -29,21 +41,37 @@ use std::sync::Arc;
 /// A unit of work submitted to the executor.
 pub type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// What a worker thread knows about itself: its pool, and (under the
+/// work-stealing scheduler) its own deque for LIFO local pushes.
+#[derive(Clone)]
+pub(crate) struct WorkerCtx {
+    pub(crate) inner: Arc<pool::Inner>,
+    pub(crate) deque: Option<Arc<deque::WorkerDeque>>,
+}
+
 thread_local! {
     /// Set while a worker thread is running jobs, so [`current_worker`]
-    /// can detect "am I on the pool?" (needed for managed blocking).
-    static CURRENT: std::cell::RefCell<Option<Arc<pool::Inner>>> =
+    /// can detect "am I on the pool?" (needed for managed blocking and
+    /// the local-spawn fast path).
+    static CURRENT: std::cell::RefCell<Option<WorkerCtx>> =
         const { std::cell::RefCell::new(None) };
 }
 
-/// Returns a handle to the executor the current thread is a worker of,
-/// or `None` when called from an external (driver) thread.
-pub(crate) fn current_worker() -> Option<Arc<pool::Inner>> {
+/// Returns the worker context of the current thread, or `None` when
+/// called from an external (driver) thread.
+pub(crate) fn current_worker() -> Option<WorkerCtx> {
     CURRENT.with(|c| c.borrow().clone())
 }
 
-pub(crate) fn set_current_worker(inner: Option<Arc<pool::Inner>>) {
-    CURRENT.with(|c| *c.borrow_mut() = inner);
+/// Run `f` with a borrow of the current worker context — the
+/// allocation-free variant of [`current_worker`] for the spawn hot path
+/// (no `Arc` refcount traffic).
+pub(crate) fn with_current_worker<R>(f: impl FnOnce(Option<&WorkerCtx>) -> R) -> R {
+    CURRENT.with(|c| f(c.borrow().as_ref()))
+}
+
+pub(crate) fn set_current_worker(ctx: Option<WorkerCtx>) {
+    CURRENT.with(|c| *c.borrow_mut() = ctx);
 }
 
 #[cfg(test)]
@@ -70,7 +98,9 @@ mod tests {
     #[test]
     fn parallelism_one_still_progresses_with_blocking() {
         // A task that blocks waiting for a later task must not deadlock a
-        // 1-worker pool: managed blocking spawns a compensation worker.
+        // 1-worker pool: managed blocking spawns a compensation worker,
+        // which steals the producer task out of the blocked worker's
+        // deque.
         let ex = Executor::new(1);
         let (tx, rx) = std::sync::mpsc::channel::<u32>();
         let ex2 = ex.clone();
@@ -179,5 +209,51 @@ mod tests {
         let mut v = out.lock().unwrap().clone();
         v.sort_unstable();
         assert_eq!(v, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn global_queue_baseline_still_works() {
+        // The measured baseline configuration must stay functional: it is
+        // the denominator of BENCH_executor.json.
+        let mut cfg = ExecutorConfig::with_parallelism(2);
+        cfg.scheduler = Scheduler::GlobalQueue;
+        let ex = Executor::with_config(cfg);
+        let n = Arc::new(AtomicUsize::new(0));
+        let ex2 = ex.clone();
+        let n2 = n.clone();
+        ex.spawn(move || {
+            n2.fetch_add(1, Ordering::SeqCst);
+            for _ in 0..50 {
+                let n3 = n2.clone();
+                ex2.spawn(move || {
+                    n3.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        ex.wait_idle();
+        assert_eq!(n.load(Ordering::SeqCst), 51);
+        assert_eq!(ex.stats().tasks_stolen, 0, "no deques to steal from");
+    }
+
+    #[test]
+    fn worker_local_spawns_are_stealable() {
+        // One worker floods its own deque then sleeps; the only way the
+        // children can run while it sleeps is theft by the other workers.
+        let ex = Executor::new(4);
+        let n = Arc::new(AtomicUsize::new(0));
+        let ex2 = ex.clone();
+        let n2 = n.clone();
+        ex.spawn(move || {
+            for _ in 0..500 {
+                let n3 = n2.clone();
+                ex2.spawn(move || {
+                    n3.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        });
+        ex.wait_idle();
+        assert_eq!(n.load(Ordering::SeqCst), 500);
+        assert!(ex.stats().tasks_stolen > 0, "expected nonzero steals");
     }
 }

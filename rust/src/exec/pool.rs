@@ -1,11 +1,49 @@
-//! Worker pool with managed blocking (a miniature ForkJoinPool).
+//! Worker pool with work-stealing scheduling and managed blocking (a
+//! miniature ForkJoinPool).
+//!
+//! Scheduling layout under [`Scheduler::WorkStealing`] (the default):
+//!
+//! * Every worker owns a [`WorkerDeque`]: local spawns push LIFO onto it
+//!   (cache-warm continuation runs next), thieves steal FIFO from the
+//!   far end (oldest = biggest remaining subtree).
+//! * External submissions (driver threads) land in the global injector.
+//! * A worker looks for work in order: own deque → injector → steal from
+//!   a rotating start index across the other deques.
+//! * Finding nothing, it parks on a pool-wide condvar. Producers only
+//!   touch that condvar when `idle_workers > 0`, so the saturated hot
+//!   path (everyone busy) does no notify work at all.
+//!
+//! [`Scheduler::GlobalQueue`] keeps every spawn/pop on the single
+//! injector: the pre-work-stealing design, preserved as the measured
+//! baseline (`BENCH_executor.json` compares the two on the same
+//! machine).
+//!
+//! Idle protocol (lost-wakeup-free): a parking worker *first* increments
+//! `idle_workers` (SeqCst), then re-checks for work while holding
+//! `park_lock`, and only then waits. A producer pushes its job first and
+//! *then* reads `idle_workers`; if it reads 0, the parking worker's
+//! increment — and therefore its subsequent work re-check — is ordered
+//! after the push, so the worker sees the job instead of sleeping. If it
+//! reads > 0 it notifies under `park_lock`, which a mid-transition
+//! parker cannot miss.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Duration;
 
-use super::queue::{JobQueue, Popped};
-use super::{current_worker, set_current_worker, Job};
+use super::deque::WorkerDeque;
+use super::queue::JobQueue;
+use super::{current_worker, set_current_worker, with_current_worker, Job, WorkerCtx};
+
+/// Which scheduling core an [`Executor`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheduler {
+    /// One shared `Mutex<VecDeque>` for everything — the baseline the
+    /// paper-reproduction started from, kept for overhead ablations.
+    GlobalQueue,
+    /// Per-worker stealable deques + injector + park/unpark (default).
+    WorkStealing,
+}
 
 /// Tuning knobs for an [`Executor`].
 #[derive(Debug, Clone)]
@@ -24,6 +62,9 @@ pub struct ExecutorConfig {
     pub max_threads: usize,
     /// Thread-name prefix, for debuggability.
     pub name: String,
+    /// Scheduling core. [`Scheduler::WorkStealing`] unless you are
+    /// benchmarking against the baseline.
+    pub scheduler: Scheduler,
 }
 
 impl ExecutorConfig {
@@ -34,6 +75,7 @@ impl ExecutorConfig {
             keepalive: Duration::from_millis(200),
             max_threads: 512,
             name: "sfut-worker".to_string(),
+            scheduler: Scheduler::WorkStealing,
         }
     }
 }
@@ -52,17 +94,34 @@ pub struct ExecutorStats {
     pub tasks_spawned: u64,
     pub tasks_executed: u64,
     pub tasks_panicked: u64,
+    /// Jobs taken FIFO out of another worker's deque. Zero under
+    /// [`Scheduler::GlobalQueue`]; nonzero whenever work-stealing
+    /// actually balanced load.
+    pub tasks_stolen: u64,
     pub compensation_threads: u64,
     pub blocking_sections: u64,
+    /// Injector depth plus the sum of all worker-deque depths.
     pub queue_depth: usize,
     pub live_threads: usize,
 }
 
 pub(crate) struct Inner {
-    pub(crate) queue: JobQueue,
+    /// Global injector: external submissions, and everything under
+    /// [`Scheduler::GlobalQueue`].
+    injector: JobQueue,
+    /// Registered worker deques (work-stealing mode only). Read-locked
+    /// by steal scans, write-locked on worker birth/retirement.
+    deques: RwLock<Vec<Arc<WorkerDeque>>>,
     cfg: ExecutorConfig,
     sync: Mutex<PoolState>,
     idle: Condvar,
+    /// Parking for idle workers. Producers take this lock only when
+    /// `idle_workers > 0`.
+    park_lock: Mutex<()>,
+    park_cond: Condvar,
+    /// Workers currently inside [`Inner::park`] (SeqCst; see the idle
+    /// protocol in the module docs).
+    idle_workers: AtomicUsize,
     /// Jobs spawned and not yet finished (queued or running).
     /// Atomic so the per-task hot path never takes `sync` (§Perf opt-2);
     /// `sync` + `idle` are only touched on the 0-transition.
@@ -71,8 +130,11 @@ pub(crate) struct Inner {
     tasks_spawned: AtomicU64,
     tasks_executed: AtomicU64,
     tasks_panicked: AtomicU64,
+    tasks_stolen: AtomicU64,
     compensation_threads: AtomicU64,
     blocking_sections: AtomicU64,
+    /// Rotates the steal scan's start index so thieves spread out.
+    steal_seed: AtomicUsize,
     next_worker_id: AtomicUsize,
 }
 
@@ -82,6 +144,15 @@ struct PoolState {
     live: usize,
     /// Workers currently inside a managed-blocking section.
     blocked: usize,
+}
+
+enum ParkOutcome {
+    /// Woken (or found work while double-checking): go look again.
+    Notified,
+    /// Pool shut down and drained: exit.
+    Shutdown,
+    /// Transient worker idled past its keepalive: exit.
+    Retire,
 }
 
 /// Handle to a worker pool. Cloning is cheap; the pool shuts down (after
@@ -98,7 +169,7 @@ struct Handle {
 
 impl Drop for Handle {
     fn drop(&mut self) {
-        self.inner.queue.shutdown();
+        self.inner.shutdown();
     }
 }
 
@@ -115,16 +186,22 @@ impl Executor {
 
     pub fn with_config(cfg: ExecutorConfig) -> Self {
         let inner = Arc::new(Inner {
-            queue: JobQueue::new(),
+            injector: JobQueue::new(),
+            deques: RwLock::new(Vec::new()),
             cfg,
             sync: Mutex::new(PoolState::default()),
             idle: Condvar::new(),
+            park_lock: Mutex::new(()),
+            park_cond: Condvar::new(),
+            idle_workers: AtomicUsize::new(0),
             pending: AtomicUsize::new(0),
             tasks_spawned: AtomicU64::new(0),
             tasks_executed: AtomicU64::new(0),
             tasks_panicked: AtomicU64::new(0),
+            tasks_stolen: AtomicU64::new(0),
             compensation_threads: AtomicU64::new(0),
             blocking_sections: AtomicU64::new(0),
+            steal_seed: AtomicUsize::new(0),
             next_worker_id: AtomicUsize::new(0),
         });
         for _ in 0..inner.cfg.parallelism {
@@ -138,7 +215,15 @@ impl Executor {
         self.handle.inner.cfg.parallelism
     }
 
+    /// The scheduling core this pool runs.
+    pub fn scheduler(&self) -> Scheduler {
+        self.handle.inner.cfg.scheduler
+    }
+
     /// Submit a job. Jobs submitted after shutdown are silently dropped.
+    /// When the caller is a worker of this pool (and the scheduler is
+    /// work-stealing), the job goes LIFO onto the worker's own deque;
+    /// otherwise it lands in the global injector.
     pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.handle.inner.spawn_job(Box::new(f));
     }
@@ -152,7 +237,7 @@ impl Executor {
     /// `scala.concurrent.blocking { ... }` that backs `Await.result`.
     pub fn blocking<R>(f: impl FnOnce() -> R) -> R {
         match current_worker() {
-            Some(inner) => inner.managed_blocking(f),
+            Some(ctx) => ctx.inner.managed_blocking(f),
             None => f(),
         }
     }
@@ -170,19 +255,22 @@ impl Executor {
 
     /// Eagerly shut down; queued jobs drain, workers then exit.
     pub fn shutdown(&self) {
-        self.handle.inner.queue.shutdown();
+        self.handle.inner.shutdown();
     }
 
     pub fn stats(&self) -> ExecutorStats {
         let inner = &self.handle.inner;
         let st = inner.sync.lock().unwrap();
+        let deque_depth: usize =
+            inner.deques.read().unwrap().iter().map(|d| d.len()).sum();
         ExecutorStats {
             tasks_spawned: inner.tasks_spawned.load(Ordering::Relaxed),
             tasks_executed: inner.tasks_executed.load(Ordering::Relaxed),
             tasks_panicked: inner.tasks_panicked.load(Ordering::Relaxed),
+            tasks_stolen: inner.tasks_stolen.load(Ordering::Relaxed),
             compensation_threads: inner.compensation_threads.load(Ordering::Relaxed),
             blocking_sections: inner.blocking_sections.load(Ordering::Relaxed),
-            queue_depth: inner.queue.len(),
+            queue_depth: inner.injector.len() + deque_depth,
             live_threads: st.live,
         }
     }
@@ -192,6 +280,7 @@ impl std::fmt::Debug for Executor {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Executor")
             .field("parallelism", &self.handle.inner.cfg.parallelism)
+            .field("scheduler", &self.handle.inner.cfg.scheduler)
             .finish()
     }
 }
@@ -200,10 +289,74 @@ impl Inner {
     fn spawn_job(self: &Arc<Self>, job: Job) {
         self.tasks_spawned.fetch_add(1, Ordering::Relaxed);
         self.pending.fetch_add(1, Ordering::AcqRel);
-        if !self.queue.push(job) {
+        if self.injector.is_shutdown() {
             // Shut down: account the drop so wait_idle terminates.
             self.finish_job_accounting();
+            return;
         }
+        // Local fast path: a worker of THIS pool pushes LIFO onto its own
+        // deque — uncontended in the common case, and no global lock.
+        enum LocalPush {
+            Pushed,
+            /// Shutdown raced the push; the job was retracted and dropped.
+            Dropped,
+            NotLocal,
+        }
+        let mut job = Some(job);
+        let pushed_local = with_current_worker(|ctx| match ctx {
+            Some(ctx) if Arc::ptr_eq(&ctx.inner, self) => match &ctx.deque {
+                Some(d) => {
+                    d.push(job.take().expect("job not yet consumed"));
+                    // Close the spawn/shutdown race (the old global queue
+                    // checked the flag under its lock): if shutdown landed
+                    // between the check above and the push, retract the
+                    // job — it is the newest entry at the back of our own
+                    // deque, so `pop` returns exactly it unless a thief
+                    // already claimed it (in which case it is in flight,
+                    // same as a pre-shutdown submission).
+                    if self.injector.is_shutdown() && d.pop().is_some() {
+                        LocalPush::Dropped
+                    } else {
+                        LocalPush::Pushed
+                    }
+                }
+                None => LocalPush::NotLocal,
+            },
+            _ => LocalPush::NotLocal,
+        });
+        match pushed_local {
+            LocalPush::Pushed => {
+                self.notify_parked();
+                return;
+            }
+            LocalPush::Dropped => {
+                self.finish_job_accounting();
+                return;
+            }
+            LocalPush::NotLocal => {}
+        }
+        let job = job.take().expect("job not yet consumed");
+        if !self.injector.push(job) {
+            // Shut down between the check and the push.
+            self.finish_job_accounting();
+            return;
+        }
+        self.notify_parked();
+    }
+
+    /// Wake one parked worker if any exist. Producers read `idle_workers`
+    /// first so the saturated fast path never touches `park_lock`.
+    fn notify_parked(&self) {
+        if self.idle_workers.load(Ordering::SeqCst) > 0 {
+            let _guard = self.park_lock.lock().unwrap();
+            self.park_cond.notify_one();
+        }
+    }
+
+    fn shutdown(&self) {
+        self.injector.shutdown();
+        let _guard = self.park_lock.lock().unwrap();
+        self.park_cond.notify_all();
     }
 
     /// Decrement `pending`; on the 0-transition, wake idle waiters. The
@@ -241,18 +394,137 @@ impl Inner {
     }
 
     fn worker_loop(self: Arc<Self>, transient: bool) {
-        set_current_worker(Some(Arc::clone(&self)));
-        let timeout = if transient { Some(self.cfg.keepalive) } else { None };
+        let deque = match self.cfg.scheduler {
+            Scheduler::WorkStealing => Some(Arc::new(WorkerDeque::new())),
+            Scheduler::GlobalQueue => None,
+        };
+        if let Some(d) = &deque {
+            self.deques.write().unwrap().push(Arc::clone(d));
+        }
+        set_current_worker(Some(WorkerCtx {
+            inner: Arc::clone(&self),
+            deque: deque.clone(),
+        }));
+        let keepalive = if transient { Some(self.cfg.keepalive) } else { None };
         loop {
-            match self.queue.pop(timeout) {
-                Popped::Job(job) => self.run_job(job),
-                Popped::Shutdown => break,
-                Popped::TimedOut => break, // transient worker retires
+            if let Some(job) = self.find_job(deque.as_deref()) {
+                self.run_job(job);
+                continue;
+            }
+            match self.park(keepalive) {
+                ParkOutcome::Notified => continue,
+                ParkOutcome::Shutdown | ParkOutcome::Retire => {
+                    // Commit the exit under `sync`, with a final work
+                    // re-check. managed_blocking reads `live` under the
+                    // same lock to size compensation, so without this a
+                    // job pushed + blocked-on in the window between our
+                    // park timeout and the decrement would see a worker
+                    // that is about to vanish, skip compensation, and
+                    // deadlock par(1). Ordering both ways is now safe:
+                    // either the blocker sees the reduced count and
+                    // compensates, or we see its job here and un-retire.
+                    let mut st = self.sync.lock().unwrap();
+                    if self.has_work() {
+                        drop(st);
+                        continue;
+                    }
+                    st.live -= 1;
+                    break;
+                }
             }
         }
         set_current_worker(None);
-        let mut st = self.sync.lock().unwrap();
-        st.live -= 1;
+        if let Some(d) = &deque {
+            self.deques.write().unwrap().retain(|q| !Arc::ptr_eq(q, d));
+            // Exit paths imply the deque is empty; if a job is ever left
+            // behind, hand it back and wake a worker for it rather than
+            // stranding it (and a wait_idle caller) until the next spawn.
+            for job in d.drain() {
+                if self.injector.push(job) {
+                    self.notify_parked();
+                } else {
+                    self.finish_job_accounting();
+                }
+            }
+        }
+    }
+
+    /// Work-discovery order: own deque (LIFO) → injector → steal (FIFO).
+    fn find_job(&self, own: Option<&WorkerDeque>) -> Option<Job> {
+        if let Some(d) = own {
+            if let Some(job) = d.pop() {
+                return Some(job);
+            }
+        }
+        if let Some(job) = self.injector.try_pop() {
+            return Some(job);
+        }
+        self.try_steal(own)
+    }
+
+    fn try_steal(&self, own: Option<&WorkerDeque>) -> Option<Job> {
+        let deques = self.deques.read().unwrap();
+        let n = deques.len();
+        if n == 0 {
+            return None;
+        }
+        let start = self.steal_seed.fetch_add(1, Ordering::Relaxed) % n;
+        for k in 0..n {
+            let q = &deques[(start + k) % n];
+            if let Some(own) = own {
+                if std::ptr::eq(Arc::as_ptr(q), own) {
+                    continue;
+                }
+            }
+            if let Some(job) = q.steal() {
+                self.tasks_stolen.fetch_add(1, Ordering::Relaxed);
+                return Some(job);
+            }
+        }
+        None
+    }
+
+    /// True when any queue in the pool holds a job.
+    fn has_work(&self) -> bool {
+        if !self.injector.is_empty() {
+            return true;
+        }
+        self.deques.read().unwrap().iter().any(|d| !d.is_empty())
+    }
+
+    /// Park until notified, shutdown, or (transient workers) keepalive
+    /// expiry. See the module docs for why the idle-registration order
+    /// makes this lost-wakeup-free.
+    fn park(&self, keepalive: Option<Duration>) -> ParkOutcome {
+        self.idle_workers.fetch_add(1, Ordering::SeqCst);
+        let mut guard = self.park_lock.lock().unwrap();
+        let outcome = loop {
+            if self.has_work() {
+                break ParkOutcome::Notified;
+            }
+            if self.injector.is_shutdown() {
+                break ParkOutcome::Shutdown;
+            }
+            match keepalive {
+                Some(t) => {
+                    let (g, res) = self.park_cond.wait_timeout(guard, t).unwrap();
+                    guard = g;
+                    if res.timed_out() {
+                        break if self.has_work() {
+                            ParkOutcome::Notified
+                        } else {
+                            ParkOutcome::Retire
+                        };
+                    }
+                }
+                None => {
+                    guard = self.park_cond.wait(guard).unwrap();
+                }
+            }
+        };
+        drop(guard);
+        self.idle_workers.fetch_sub(1, Ordering::SeqCst);
+        outcome
     }
 
     fn run_job(self: &Arc<Self>, job: Job) {

@@ -1,13 +1,20 @@
 //! The injector queue shared by all workers.
 //!
 //! A `Mutex<VecDeque>` + `Condvar` is deliberately the *baseline*
-//! implementation; the §Perf pass measures it against a sharded variant
-//! (see `benches/ablation_overhead.rs`). At the paper's task granularity
-//! (hundreds of microseconds and up for `stream_big`) the single lock is
-//! nowhere near the bottleneck; at `primes` granularity it is part of the
-//! overhead the paper itself observes (observation 1 in §7).
+//! implementation; `benches/ablation_overhead.rs` (section 6) measures it
+//! against the per-worker stealable deques and records the gap in
+//! `BENCH_executor.json`. At the paper's task granularity (hundreds of
+//! microseconds and up for `stream_big`) the single lock is nowhere near
+//! the bottleneck; at `primes` granularity it is part of the overhead the
+//! paper itself observes (observation 1 in §7).
+//!
+//! Note: the worker pool now parks on its own condvar and only calls
+//! `push`/`try_pop`; the blocking [`JobQueue::pop`] (and its internal
+//! `Condvar`) is retained as standalone blocking-queue API, exercised by
+//! this module's tests.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
@@ -17,6 +24,9 @@ use super::Job;
 pub struct JobQueue {
     inner: Mutex<QueueState>,
     available: Condvar,
+    /// Mirror of `QueueState::shutdown`, readable without the lock — the
+    /// work-stealing spawn fast path polls it on every local push.
+    shutdown: AtomicBool,
 }
 
 struct QueueState {
@@ -39,6 +49,7 @@ impl JobQueue {
         JobQueue {
             inner: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
             available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
         }
     }
 
@@ -97,12 +108,19 @@ impl JobQueue {
     /// Mark the queue shut down; wakes all waiting workers. Queued jobs
     /// still drain (workers exit once empty + shutdown).
     pub fn shutdown(&self) {
-        self.inner.lock().unwrap().shutdown = true;
+        {
+            let mut st = self.inner.lock().unwrap();
+            st.shutdown = true;
+            // Set the mirror while holding the lock so the lock-free view
+            // can never lag a locked observation.
+            self.shutdown.store(true, Ordering::SeqCst);
+        }
         self.available.notify_all();
     }
 
+    /// Lock-free shutdown check (hot path: every spawn).
     pub fn is_shutdown(&self) -> bool {
-        self.inner.lock().unwrap().shutdown
+        self.shutdown.load(Ordering::SeqCst)
     }
 }
 

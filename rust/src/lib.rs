@@ -20,7 +20,34 @@
 //!
 //! The [`runtime`] module loads the AOT artifacts via PJRT so the Rust
 //! hot path can offload chunk products; Python never runs at request
-//! time.
+//! time (the PJRT engine is behind the `xla` cargo feature; the default
+//! build uses a stub and the pure-Rust block kernels).
+//!
+//! ## The fast path (scheduling and suspension internals)
+//!
+//! Everything the paper measures reduces to the cost of one suspension,
+//! so the two hot layers are engineered accordingly:
+//!
+//! * **Work-stealing executor** ([`exec`]) — per-worker deques with LIFO
+//!   local push/pop and FIFO stealing, a global injector for external
+//!   submissions, and park/unpark idle management. Managed blocking
+//!   (compensation threads) is preserved, so `Fut::force` stays
+//!   deadlock-free even at par(1). The old single-`Mutex` queue survives
+//!   as `Scheduler::GlobalQueue`, the measured baseline; `cargo bench
+//!   --bench ablation_overhead` A/Bs the two and records the trajectory
+//!   in `BENCH_executor.json` (`ExecutorStats::tasks_stolen` shows the
+//!   balancer working).
+//! * **Lock-free future cells** ([`susp`]) — `Fut<T>` is an atomic state
+//!   machine (EMPTY → RUNNING → READY/PANICKED): `is_ready`, `force`,
+//!   and callback registration on a completed cell are single Acquire
+//!   loads; the callback mutex is only touched while still pending.
+//!   `map`/`flat_map` over an already-complete cell run inline on the
+//!   caller (depth-bounded, trampolining onto worker stacks every 8
+//!   frames so heavy chunk chains still fan out across workers).
+//! * **Adaptive chunking** ([`stream::ChunkSizer`]) — §7's chunk size is
+//!   picked from a *measured* per-element cost and the executor's
+//!   parallelism (`poly::chunked_times_adaptive`,
+//!   `sieve::chunked_primes_adaptive`) instead of a fixed constant.
 
 pub mod bench_harness;
 pub mod bigint;

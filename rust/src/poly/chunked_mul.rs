@@ -19,7 +19,7 @@
 use std::sync::Arc;
 
 use super::{Coeff, Monomial, Polynomial, Term};
-use crate::stream::Stream;
+use crate::stream::{ChunkSizer, Stream};
 use crate::susp::Eval;
 
 /// A dense block of terms in struct-of-arrays layout, matching the AOT
@@ -170,6 +170,70 @@ pub fn chunked_times<C: Coeff, E: Eval>(
     partials.fold(Polynomial::zero(nvars), |acc, p| acc.add(p))
 }
 
+/// Pick a block edge for [`chunked_times`] adaptively: probe the real
+/// per-term-pair cost through [`block_pair_product`], then size blocks so
+/// one task (≈ `chunk²` pairs) costs about `sizer.target_task`, halving
+/// as needed until at least `oversubscription × parallelism` block pairs
+/// exist. The result respects `multiplier.max_block()`.
+pub fn adaptive_poly_chunk<C: Coeff>(
+    x: &Polynomial<C>,
+    y: &Polynomial<C>,
+    parallelism: usize,
+    sizer: &ChunkSizer,
+    multiplier: &dyn BlockMultiplier,
+) -> usize {
+    let (nx, ny) = (x.terms().len(), y.terms().len());
+    let hi = sizer
+        .max_chunk
+        .min(multiplier.max_block())
+        .max(sizer.min_chunk.max(1));
+    if nx == 0 || ny == 0 {
+        return sizer.min_chunk.max(1);
+    }
+
+    // Probe a small sample block pair through the real code path.
+    let nvars = x.nvars();
+    let sx = Arc::new(x.terms()[..nx.min(8)].to_vec());
+    let sy = Arc::new(y.terms()[..ny.min(8)].to_vec());
+    let pairs = sx.len() * sy.len();
+    let per_pair = ChunkSizer::probe_cost(pairs, || {
+        std::hint::black_box(block_pair_product(nvars, &sx, &sy, multiplier));
+    });
+
+    // One task covers chunk² pairs: chunk = sqrt(target / per_pair).
+    let per = per_pair.as_nanos().max(1) as f64;
+    let target = sizer.target_task.as_nanos().max(1) as f64;
+    let mut chunk = ((target / per).sqrt() as usize).max(1);
+
+    // Coverage: keep halving until enough block pairs exist to feed (and
+    // let thieves balance) every worker.
+    let want_pairs = parallelism.max(1) * sizer.oversubscription.max(1);
+    loop {
+        let bx = nx.div_ceil(chunk);
+        let by = ny.div_ceil(chunk);
+        if bx * by >= want_pairs || chunk == 1 {
+            break;
+        }
+        chunk = (chunk / 2).max(1);
+    }
+    chunk.clamp(sizer.min_chunk.max(1), hi)
+}
+
+/// [`chunked_times`] with the block edge picked by
+/// [`adaptive_poly_chunk`] from measured cost and the strategy's
+/// parallelism, instead of a caller-supplied constant.
+pub fn chunked_times_adaptive<C: Coeff, E: Eval>(
+    eval: &E,
+    x: &Polynomial<C>,
+    y: &Polynomial<C>,
+    multiplier: Arc<dyn BlockMultiplier>,
+) -> Polynomial<C> {
+    let parallelism = eval.executor().map(|e| e.parallelism()).unwrap_or(1);
+    let chunk =
+        adaptive_poly_chunk(x, y, parallelism, &ChunkSizer::default(), &*multiplier);
+    chunked_times(eval, x, y, chunk, multiplier)
+}
+
 fn block_pair_product<C: Coeff>(
     nvars: usize,
     bx: &Arc<Vec<Term<C>>>,
@@ -279,6 +343,33 @@ mod tests {
         let z = Polynomial::<i64>::zero(3);
         assert!(chunked_times(&LazyEval, &a, &z, 8, Arc::new(RustMultiplier)).is_zero());
         assert!(chunked_times(&LazyEval, &z, &a, 8, Arc::new(RustMultiplier)).is_zero());
+    }
+
+    #[test]
+    fn adaptive_chunk_is_sane() {
+        let a = p("1 + x + y + z").pow(4);
+        let chunk =
+            adaptive_poly_chunk(&a, &a, 4, &crate::stream::ChunkSizer::default(), &RustMultiplier);
+        assert!(chunk >= 1);
+        assert!(chunk <= 1 << 16);
+        // Zero polynomial degenerates safely.
+        let z = Polynomial::<i64>::zero(3);
+        let chunk =
+            adaptive_poly_chunk(&a, &z, 4, &crate::stream::ChunkSizer::default(), &RustMultiplier);
+        assert_eq!(chunk, 1);
+    }
+
+    #[test]
+    fn adaptive_matches_classical() {
+        let a = p("1 + x + y + z").pow(4);
+        let b = a.add(&Polynomial::one(3));
+        let want = a.mul(&b);
+        let got = chunked_times_adaptive(&LazyEval, &a, &b, Arc::new(RustMultiplier));
+        assert_eq!(got, want);
+        let ex = Executor::new(3);
+        let eval = FutureEval::new(ex);
+        let got = chunked_times_adaptive(&eval, &a, &b, Arc::new(RustMultiplier));
+        assert_eq!(got, want);
     }
 
     #[test]

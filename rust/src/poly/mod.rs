@@ -30,7 +30,10 @@ mod polynomial;
 mod ring;
 pub mod stream_mul;
 
-pub use chunked_mul::{chunked_times, BlockMultiplier, RustMultiplier, TermBlock};
+pub use chunked_mul::{
+    adaptive_poly_chunk, chunked_times, chunked_times_adaptive, BlockMultiplier, RustMultiplier,
+    TermBlock,
+};
 pub use division::FieldCoeff;
 pub use list_mul::{list_times_par, list_times_seq};
 pub use monomial::Monomial;

@@ -17,6 +17,110 @@ use log::{debug, info};
 use super::artifacts::{load_manifest, ArtifactKind, ArtifactSpec};
 use crate::exec::Executor;
 
+#[cfg(not(feature = "xla"))]
+use self::xla_stub as xla;
+
+/// Offline stand-in for the `xla` crate, used when the `xla` feature is
+/// off (the default — the real crate is not vendored). Only
+/// `PjRtClient::cpu` is ever reached: it fails with a clean error, the
+/// engine thread reports startup failure, and every caller falls back to
+/// the pure-Rust block implementations. The remaining types exist so the
+/// engine code typechecks; their bodies are unreachable (the client is
+/// uninhabited, so no executable or literal can ever be constructed).
+#[cfg(not(feature = "xla"))]
+#[allow(dead_code)]
+mod xla_stub {
+    use std::fmt;
+    use std::path::Path;
+
+    /// Uninhabited: proves the unreachable method bodies sound.
+    enum Never {}
+
+    #[derive(Debug)]
+    pub struct Unavailable;
+
+    impl fmt::Display for Unavailable {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str(
+                "PJRT support not compiled in (enable the `xla` cargo feature \
+                 and add the xla crate); falling back to pure-Rust kernels",
+            )
+        }
+    }
+
+    pub struct PjRtClient(Never);
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<PjRtClient, Unavailable> {
+            Err(Unavailable)
+        }
+
+        pub fn platform_name(&self) -> String {
+            match self.0 {}
+        }
+
+        pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable, Unavailable> {
+            match self.0 {}
+        }
+    }
+
+    pub struct HloModuleProto;
+
+    impl HloModuleProto {
+        pub fn from_text_file(_path: &Path) -> Result<HloModuleProto, Unavailable> {
+            Err(Unavailable)
+        }
+    }
+
+    pub struct XlaComputation;
+
+    impl XlaComputation {
+        pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+            XlaComputation
+        }
+    }
+
+    pub struct PjRtLoadedExecutable(Never);
+
+    impl PjRtLoadedExecutable {
+        pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Unavailable> {
+            match self.0 {}
+        }
+    }
+
+    pub struct PjRtBuffer(Never);
+
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal, Unavailable> {
+            match self.0 {}
+        }
+    }
+
+    pub struct Literal(Never);
+
+    impl Literal {
+        pub fn vec1<T>(_values: &[T]) -> Literal {
+            unreachable!("xla stub: no Literal can exist without a client")
+        }
+
+        pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Unavailable> {
+            match self.0 {}
+        }
+
+        pub fn to_tuple1(self) -> Result<Literal, Unavailable> {
+            match self.0 {}
+        }
+
+        pub fn to_tuple2(self) -> Result<(Literal, Literal), Unavailable> {
+            match self.0 {}
+        }
+
+        pub fn to_vec<T>(&self) -> Result<Vec<T>, Unavailable> {
+            match self.0 {}
+        }
+    }
+}
+
 /// Request/response protocol between callers and the engine thread.
 enum Request {
     PolyOuter {

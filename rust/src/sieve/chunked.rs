@@ -22,7 +22,7 @@
 
 use std::sync::Arc;
 
-use crate::stream::{Chunk, Stream};
+use crate::stream::{Chunk, ChunkSizer, Stream};
 use crate::susp::Eval;
 
 /// Strategy for the dense per-block divisibility test.
@@ -67,21 +67,24 @@ pub fn chunked_primes_with_runtime<E: Eval>(
     }
 
     // Phase 1: sequential seed sieve up to ceil(sqrt(n)) (inclusive).
-    let mut seed_hi = (n as f64).sqrt() as u32 + 1;
-    seed_hi = seed_hi.min(n);
-    let mut seed: Vec<u32> = Vec::new();
-    for c in 2..seed_hi {
-        if seed.iter().take_while(|&&p| p * p <= c).all(|&p| c % p != 0) {
-            seed.push(c);
-        }
-    }
+    let (seed_hi, seed) = seed_primes(n);
     if seed_hi >= n {
         return seed.into_iter().filter(|&p| p < n).collect();
     }
-    let seed = Arc::new(seed);
+    fan_out_blocks(eval, n, chunk_size, seed_hi, Arc::new(seed), siever)
+}
 
-    // Phase 2: independent blocks over [seed_hi, n) as a future/lazy
-    // stream of chunks — one suspension per block.
+/// Phase 2: independent blocks over `[seed_hi, n)` as a future/lazy
+/// stream of chunks — one suspension per block. Returns seed + block
+/// survivors in order.
+fn fan_out_blocks<E: Eval>(
+    eval: E,
+    n: u32,
+    chunk_size: usize,
+    seed_hi: u32,
+    seed: Arc<Vec<u32>>,
+    siever: Arc<dyn BlockSiever>,
+) -> Vec<u32> {
     let blocks: Vec<(u32, u32)> = {
         let mut v = Vec::new();
         let mut lo = seed_hi;
@@ -114,6 +117,81 @@ pub fn chunked_primes_with_runtime<E: Eval>(
         out.extend(block.iter().copied());
     }
     out
+}
+
+/// Seed phase shared by the fixed and adaptive variants: primes below
+/// `ceil(sqrt(n)) + 1` by incremental trial division.
+fn seed_primes(n: u32) -> (u32, Vec<u32>) {
+    let mut seed_hi = (n as f64).sqrt() as u32 + 1;
+    seed_hi = seed_hi.min(n);
+    let mut seed: Vec<u32> = Vec::new();
+    for c in 2..seed_hi {
+        if seed.iter().take_while(|&&p| p * p <= c).all(|&p| c % p != 0) {
+            seed.push(c);
+        }
+    }
+    (seed_hi, seed)
+}
+
+/// Chunk pick given an already-computed seed: probe the per-candidate
+/// cost on a sample block, then let [`ChunkSizer`] balance task grain
+/// against worker coverage. Caller guarantees `seed_hi < n`.
+fn pick_sieve_chunk(
+    n: u32,
+    seed_hi: u32,
+    seed: &[u32],
+    parallelism: usize,
+    sizer: &ChunkSizer,
+    siever: &dyn BlockSiever,
+) -> usize {
+    let span = (n - seed_hi) as usize;
+    let sample_len = span.min(256).max(1);
+    let candidates: Vec<u32> = (seed_hi..seed_hi + sample_len as u32).collect();
+    let per_candidate = ChunkSizer::probe_cost(sample_len, || {
+        std::hint::black_box(siever.survivors(&candidates, seed));
+    });
+    sizer.pick(per_candidate, span, parallelism)
+}
+
+/// Pick the fan-out block size adaptively: probe the per-candidate cost
+/// of the seed-prime divisibility test through the *actual* siever (its
+/// cost scales with `π(√n)`, so no constant is right for every `n`), then
+/// let [`ChunkSizer`] balance task grain against worker coverage.
+pub fn adaptive_sieve_chunk(
+    n: u32,
+    parallelism: usize,
+    sizer: &ChunkSizer,
+    siever: &dyn BlockSiever,
+) -> usize {
+    if n <= 2 {
+        return sizer.min_chunk.max(1);
+    }
+    let (seed_hi, seed) = seed_primes(n);
+    if seed_hi >= n {
+        return sizer.min_chunk.max(1);
+    }
+    pick_sieve_chunk(n, seed_hi, &seed, parallelism, sizer, siever)
+}
+
+/// Adaptive chunked sieve: one seed sieve, one probe, one fan-out. (The
+/// seed — the Amdahl-bound sequential phase — is computed once and
+/// shared between the probe and the fan-out, not recomputed per stage.)
+pub fn chunked_primes_adaptive<E: Eval>(
+    eval: E,
+    n: u32,
+    siever: Arc<dyn BlockSiever>,
+) -> Vec<u32> {
+    if n <= 2 {
+        return Vec::new();
+    }
+    let (seed_hi, seed) = seed_primes(n);
+    if seed_hi >= n {
+        return seed.into_iter().filter(|&p| p < n).collect();
+    }
+    let parallelism = eval.executor().map(|e| e.parallelism()).unwrap_or(1);
+    let chunk =
+        pick_sieve_chunk(n, seed_hi, &seed, parallelism, &ChunkSizer::default(), &*siever);
+    fan_out_blocks(eval, n, chunk, seed_hi, Arc::new(seed), siever)
 }
 
 /// [`chunked_primes_with_runtime`] with the portable scalar siever.
@@ -163,6 +241,30 @@ mod tests {
         assert_eq!(mask, vec![false, true, false, true]);
         // No primes: everything survives.
         assert_eq!(s.survivors(&[4, 6], &[]), vec![true, true]);
+    }
+
+    #[test]
+    fn adaptive_matches_oracle() {
+        let oracle = eratosthenes(20_000);
+        let got = chunked_primes_adaptive(LazyEval, 20_000, Arc::new(RustSiever));
+        assert_eq!(got, oracle);
+        let ex = Executor::new(4);
+        let got = chunked_primes_adaptive(FutureEval::new(ex), 20_000, Arc::new(RustSiever));
+        assert_eq!(got, oracle);
+        // Degenerate inputs.
+        assert!(chunked_primes_adaptive(LazyEval, 0, Arc::new(RustSiever)).is_empty());
+        assert_eq!(chunked_primes_adaptive(LazyEval, 4, Arc::new(RustSiever)), vec![2, 3]);
+    }
+
+    #[test]
+    fn adaptive_chunk_is_positive_and_covered() {
+        let sizer = crate::stream::ChunkSizer::default();
+        let c = adaptive_sieve_chunk(100_000, 4, &sizer, &RustSiever);
+        assert!(c >= 1);
+        // Coverage ceiling: no more than span / (par × oversub).
+        let span = 100_000 - ((100_000f64).sqrt() as u32 + 1);
+        assert!(c <= (span as usize / 16).max(1), "c={c}");
+        assert_eq!(adaptive_sieve_chunk(2, 4, &sizer, &RustSiever), 1);
     }
 
     #[test]

@@ -23,7 +23,10 @@
 mod chunked;
 mod eratosthenes;
 
-pub use chunked::{chunked_primes, chunked_primes_with_runtime, BlockSiever, RustSiever};
+pub use chunked::{
+    adaptive_sieve_chunk, chunked_primes, chunked_primes_adaptive, chunked_primes_with_runtime,
+    BlockSiever, RustSiever,
+};
 pub use eratosthenes::eratosthenes;
 
 use crate::stream::Stream;

@@ -13,12 +13,79 @@
 //! `runtime`).
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use super::{Elem, Stream};
 use crate::susp::Eval;
 
 /// A block of elements traveling through a stream as one unit.
 pub type Chunk<T> = Arc<Vec<T>>;
+
+/// Adaptive chunk-size policy.
+///
+/// The paper's §7 leaves chunk size as a free constant; the right value
+/// is a function of the machine, not the workload author: one task
+/// should cost enough that spawn/steal/complete overhead (~1 µs on the
+/// work-stealing executor) disappears into it, while the input still
+/// splits into enough chunks to keep every worker fed. [`ChunkSizer`]
+/// encodes both constraints:
+///
+/// * **cost floor** — `chunk ≥ target_task / per_elem_cost`, with the
+///   per-element cost *measured* ([`ChunkSizer::probe_cost`]) rather
+///   than guessed;
+/// * **coverage ceiling** — at least `oversubscription × parallelism`
+///   chunks overall, so stealing has something to balance.
+///
+/// Used by `poly::chunked_times_adaptive` and
+/// `sieve::chunked_primes_adaptive`.
+#[derive(Debug, Clone)]
+pub struct ChunkSizer {
+    /// Aim for one suspension (task) of about this much work.
+    pub target_task: Duration,
+    /// Never go below this chunk size.
+    pub min_chunk: usize,
+    /// Never go above this chunk size.
+    pub max_chunk: usize,
+    /// Minimum chunks per worker; keeps the tail of the run balanced.
+    pub oversubscription: usize,
+}
+
+impl Default for ChunkSizer {
+    fn default() -> Self {
+        ChunkSizer {
+            target_task: Duration::from_micros(200),
+            min_chunk: 1,
+            max_chunk: 1 << 16,
+            // High enough that, combined with the future cells'
+            // MAX_INLINE_DEPTH=8 trampoline segmentation, a fully
+            // materialized chunk spine still unwinds with ≥ parallelism
+            // concurrent segments (chunk count ≥ 8 × parallelism needs
+            // oversubscription ≥ 8; 32 leaves steal-balancing headroom).
+            oversubscription: 32,
+        }
+    }
+}
+
+impl ChunkSizer {
+    /// Chunk size for `total_elems` elements of measured cost `per_elem`
+    /// on `parallelism` workers.
+    pub fn pick(&self, per_elem: Duration, total_elems: usize, parallelism: usize) -> usize {
+        let per = per_elem.as_nanos().max(1);
+        let by_cost = (self.target_task.as_nanos() / per).max(1) as usize;
+        let min_chunks = parallelism.max(1) * self.oversubscription.max(1);
+        let by_coverage = (total_elems / min_chunks).max(1);
+        let hi = self.max_chunk.max(self.min_chunk.max(1));
+        by_cost.min(by_coverage).clamp(self.min_chunk.max(1), hi)
+    }
+
+    /// Measure per-element cost: run `probe` (which should process
+    /// `elems` elements through the real code path) once and divide.
+    pub fn probe_cost(elems: usize, probe: impl FnOnce()) -> Duration {
+        let t = Instant::now();
+        probe();
+        t.elapsed() / (elems.max(1) as u32)
+    }
+}
 
 /// Stream of blocks with element-level helpers.
 pub struct ChunkedStream<T: Elem, E: Eval> {
@@ -225,5 +292,54 @@ mod tests {
     #[should_panic(expected = "chunk_size")]
     fn zero_chunk_size_panics() {
         let _ = ChunkedStream::from_vec(LazyEval, vec![1u32], 0);
+    }
+
+    #[test]
+    fn sizer_respects_cost_floor() {
+        let sizer = ChunkSizer::default(); // 200µs target
+        // 1µs elements → ~200 per chunk (coverage cap not binding).
+        let c = sizer.pick(std::time::Duration::from_micros(1), 1_000_000, 4);
+        assert_eq!(c, 200);
+        // 1ms elements → chunk of 1.
+        let c = sizer.pick(std::time::Duration::from_millis(1), 1_000_000, 4);
+        assert_eq!(c, 1);
+    }
+
+    #[test]
+    fn sizer_respects_coverage_ceiling() {
+        let sizer = ChunkSizer::default();
+        // Nearly-free elements, small input: coverage (4 workers × 32
+        // oversubscription = 128 chunks) binds before cost does.
+        let c = sizer.pick(std::time::Duration::from_nanos(1), 12_800, 4);
+        assert_eq!(c, 100);
+        // Tiny input never yields chunk 0.
+        let c = sizer.pick(std::time::Duration::from_nanos(1), 3, 8);
+        assert_eq!(c, 1);
+    }
+
+    #[test]
+    fn sizer_clamps_to_bounds() {
+        let sizer = ChunkSizer {
+            min_chunk: 8,
+            max_chunk: 64,
+            ..ChunkSizer::default()
+        };
+        let c = sizer.pick(std::time::Duration::from_nanos(1), usize::MAX, 1);
+        assert_eq!(c, 64);
+        let c = sizer.pick(std::time::Duration::from_secs(1), usize::MAX, 1);
+        assert_eq!(c, 8);
+    }
+
+    #[test]
+    fn probe_cost_measures_something() {
+        let per = ChunkSizer::probe_cost(1000, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i).wrapping_mul(31));
+            }
+            std::hint::black_box(acc);
+        });
+        // Sane bounds: sub-second per element, not zero-cost overall.
+        assert!(per < std::time::Duration::from_secs(1));
     }
 }

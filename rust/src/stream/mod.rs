@@ -24,7 +24,7 @@ mod chunked;
 mod ops;
 mod ops2;
 
-pub use chunked::{Chunk, ChunkedStream};
+pub use chunked::{Chunk, ChunkSizer, ChunkedStream};
 
 use std::sync::Arc;
 

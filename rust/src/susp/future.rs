@@ -13,10 +13,24 @@
 //! * `force` parks the caller (condvar) under managed blocking — the
 //!   paper's `Await.result(tl, Duration.Inf)`.
 //!
-//! The completed value lives in a write-once [`OnceLock`] *outside* the
-//! callback mutex, so `force` hands out plain shared references with no
-//! aliasing hazards and readers never contend once complete.
+//! The cell is an atomic state machine:
+//!
+//! ```text
+//! EMPTY ──(worker picks task up)──▶ RUNNING ──▶ READY
+//!   │                                  └──────▶ PANICKED
+//!   └──(completed inline / ready())──────────▶ READY | PANICKED
+//! ```
+//!
+//! `state` is a single `AtomicU8` published with Release ordering *after*
+//! the value is written to its `OnceLock`, so `is_ready`, `try_result`,
+//! the `force` fast path, and the inline branch of `on_complete` are all
+//! lock-free loads. The callback `Mutex` is only touched on the slow
+//! (still-pending) path: registering a callback before completion, or
+//! parking a forcing thread. Already-complete cells built by
+//! [`Fut::ready`] / the inline `and_then` fast path never allocate a
+//! callback list at all.
 
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use super::{Eval, Susp};
@@ -33,12 +47,79 @@ pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// Observable lifecycle of a [`Fut`] cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FutState {
+    /// Spawned but not yet picked up by a worker.
+    Empty,
+    /// A worker is executing the producing closure.
+    Running,
+    /// Completed with a value.
+    Ready,
+    /// The producing closure panicked; forcing re-raises.
+    Panicked,
+}
+
+const EMPTY: u8 = 0;
+const RUNNING: u8 = 1;
+const READY: u8 = 2;
+const PANICKED: u8 = 3;
+
 type Callback<T> = Box<dyn FnOnce(&Result<T, String>) + Send + 'static>;
 
+thread_local! {
+    /// Depth of nested inline completions on this thread. Stream
+    /// combinators recurse through `Eval::map` (`map_elems` builds the
+    /// next cell inside the mapped closure); over an already-complete
+    /// spine the inline fast path would turn that into caller-stack
+    /// recursion as deep as the stream. Past [`MAX_INLINE_DEPTH`] the
+    /// fast path defers to the task-spawn slow path, which unwinds the
+    /// stack and continues on a fresh worker frame (a trampoline).
+    static INLINE_DEPTH: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Inline completions nest at most this deep before trampolining.
+///
+/// The bound trades spawn amortization against parallelism over
+/// already-complete spines: a `map_elems` chain over a ready spine dives
+/// through `Eval::map` *before* computing each (possibly heavy) head, so
+/// one dive serializes up to `MAX_INLINE_DEPTH` heads onto the current
+/// thread, while each trampoline point spawns the next segment's task
+/// before this segment unwinds — segments run concurrently. A small
+/// bound keeps heavy chunked workloads (few, ~200µs blocks from the
+/// adaptive sizer) spread across workers at ~`N/MAX_INLINE_DEPTH`-way
+/// concurrency, while cheap post-hoc walks still save 8× on task spawns.
+const MAX_INLINE_DEPTH: usize = 8;
+
+struct InlineGuard;
+
+impl InlineGuard {
+    fn try_enter() -> Option<InlineGuard> {
+        INLINE_DEPTH.with(|d| {
+            if d.get() >= MAX_INLINE_DEPTH {
+                None
+            } else {
+                d.set(d.get() + 1);
+                Some(InlineGuard)
+            }
+        })
+    }
+}
+
+impl Drop for InlineGuard {
+    fn drop(&mut self) {
+        INLINE_DEPTH.with(|d| d.set(d.get() - 1));
+    }
+}
+
 struct Inner<T> {
+    /// EMPTY → RUNNING → READY/PANICKED. Stored Release after `value` is
+    /// set; loaded Acquire on every fast path.
+    state: AtomicU8,
     /// Write-once result; `Err` carries the producing task's panic message.
     value: OnceLock<Result<T, String>>,
-    /// Callbacks registered before completion. `None` after completion.
+    /// Callbacks registered before completion. `None` after completion
+    /// (and from birth for cells born complete).
     pending: Mutex<Option<Vec<Callback<T>>>>,
     done: Condvar,
     exec: Executor,
@@ -60,6 +141,7 @@ impl<T: Send + Sync + 'static> Fut<T> {
         let fut = Fut::incomplete(exec.clone());
         let completer = fut.clone();
         exec.spawn(move || {
+            completer.mark_running();
             let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
                 .map_err(|p| panic_message(&*p));
             completer.complete(res);
@@ -67,15 +149,15 @@ impl<T: Send + Sync + 'static> Fut<T> {
         fut
     }
 
-    /// An already-completed future (`Future.successful`).
+    /// An already-completed future (`Future.successful`). Never touches
+    /// the executor and never allocates a callback list.
     pub fn ready(exec: &Executor, value: T) -> Self {
-        let fut = Fut::incomplete(exec.clone());
-        fut.complete(Ok(value));
-        fut
+        Fut::completed(exec.clone(), Ok(value))
     }
 
     fn incomplete(exec: Executor) -> Self {
         Fut(Arc::new(Inner {
+            state: AtomicU8::new(EMPTY),
             value: OnceLock::new(),
             pending: Mutex::new(Some(Vec::new())),
             done: Condvar::new(),
@@ -83,11 +165,62 @@ impl<T: Send + Sync + 'static> Fut<T> {
         }))
     }
 
+    /// A cell born complete (fast paths; nothing to synchronize — the
+    /// `Arc` publication orders the plain stores for any later reader).
+    fn completed(exec: Executor, res: Result<T, String>) -> Self {
+        let state = if res.is_ok() { READY } else { PANICKED };
+        let inner = Inner {
+            state: AtomicU8::new(state),
+            value: OnceLock::new(),
+            pending: Mutex::new(None),
+            done: Condvar::new(),
+            exec,
+        };
+        inner.value.set(res).ok().expect("fresh OnceLock accepts one set");
+        Fut(Arc::new(inner))
+    }
+
+    fn mark_running(&self) {
+        // Only meaningful from EMPTY; completion may already have been
+        // observed by nobody else, so a failed CAS is fine (and
+        // impossible in practice: the worker owns the transition).
+        let _ = self.0.state.compare_exchange(
+            EMPTY,
+            RUNNING,
+            Ordering::AcqRel,
+            Ordering::Relaxed,
+        );
+    }
+
+    /// Current lifecycle state (lock-free).
+    pub fn state(&self) -> FutState {
+        match self.0.state.load(Ordering::Acquire) {
+            EMPTY => FutState::Empty,
+            RUNNING => FutState::Running,
+            READY => FutState::Ready,
+            _ => FutState::Panicked,
+        }
+    }
+
+    /// Lock-free peek: `Some` once complete, `None` while pending. Never
+    /// blocks, never takes the callback lock.
+    pub fn try_result(&self) -> Option<&Result<T, String>> {
+        if self.0.state.load(Ordering::Acquire) >= READY {
+            Some(self.0.value.get().expect("state READY/PANICKED implies value set"))
+        } else {
+            None
+        }
+    }
+
     /// Complete with `res`; runs registered callbacks on the calling
     /// thread (which is a pool worker for spawned futures, matching
     /// Scala's run-on-the-EC behaviour).
     fn complete(&self, res: Result<T, String>) {
+        let state = if res.is_ok() { READY } else { PANICKED };
         self.0.value.set(res).ok().expect("future completed twice");
+        // Publish the value before taking the callback list: a registrant
+        // that misses the pending list must find the value ready.
+        self.0.state.store(state, Ordering::Release);
         let callbacks = {
             let mut pending = self.0.pending.lock().unwrap();
             pending.take().expect("future completed twice")
@@ -100,8 +233,12 @@ impl<T: Send + Sync + 'static> Fut<T> {
     }
 
     /// Register `cb` to run with the result; runs inline when already
-    /// complete.
+    /// complete (without touching the callback lock).
     pub fn on_complete<F: FnOnce(&Result<T, String>) + Send + 'static>(&self, cb: F) {
+        if let Some(res) = self.try_result() {
+            cb(res);
+            return;
+        }
         {
             let mut pending = self.0.pending.lock().unwrap();
             if let Some(cbs) = pending.as_mut() {
@@ -113,16 +250,40 @@ impl<T: Send + Sync + 'static> Fut<T> {
     }
 
     /// Pipeline a transformation: the returned future completes with
-    /// `f(value)` once `self` completes. No thread parks; the continuation
-    /// runs as its own pool task (the paper's `map` creates a *new*
-    /// parallel stage — running it inline on the completer would
-    /// serialize the pipeline).
+    /// `f(value)` once `self` completes.
+    ///
+    /// * **Source still pending** (the pipeline-parallel case): no thread
+    ///   parks; the continuation runs as its own pool task (the paper's
+    ///   `map` creates a *new* parallel stage — running it inline on the
+    ///   completer would serialize the pipeline).
+    /// * **Source already complete**: there is no pipeline left to
+    ///   overlap with, so `f` runs inline on the caller and the result
+    ///   cell is born complete — no task spawn, no callback list, no
+    ///   condvar. This is the inline-completion fast path `FutureEval::
+    ///   map` relies on to make post-hoc walks over finished streams
+    ///   cheap.
     pub fn and_then<U, F>(&self, f: F) -> Fut<U>
     where
         U: Send + Sync + 'static,
         F: FnOnce(T) -> U + Send + 'static,
         T: Clone,
     {
+        if let Some(res) = self.try_result() {
+            match res {
+                Ok(v) => {
+                    // Bounded: past MAX_INLINE_DEPTH fall through to the
+                    // spawn path, which trampolines onto a worker stack.
+                    if let Some(_guard) = InlineGuard::try_enter() {
+                        let v = v.clone();
+                        let out =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || f(v)))
+                                .map_err(|p| panic_message(&*p));
+                        return Fut::completed(self.0.exec.clone(), out);
+                    }
+                }
+                Err(e) => return Fut::completed(self.0.exec.clone(), Err(e.clone())),
+            }
+        }
         let out = Fut::incomplete(self.0.exec.clone());
         let completer = out.clone();
         self.on_complete(move |res| match res {
@@ -131,6 +292,7 @@ impl<T: Send + Sync + 'static> Fut<T> {
                 let exec = completer.0.exec.clone();
                 let completer2 = completer.clone();
                 exec.spawn(move || {
+                    completer2.mark_running();
                     let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || f(v)))
                         .map_err(|p| panic_message(&*p));
                     completer2.complete(r);
@@ -143,12 +305,33 @@ impl<T: Send + Sync + 'static> Fut<T> {
 
     /// Monadic bind over futures (callback-chained, non-blocking). Used by
     /// the paper's `plus` for `for (sx <- tailx; sy <- taily) yield ...`.
+    /// Same inline fast path as [`Fut::and_then`]: a complete source runs
+    /// `f` on the caller and returns the inner future directly (zero new
+    /// cells on success).
     pub fn bind<U, F>(&self, f: F) -> Fut<U>
     where
         U: Clone + Send + Sync + 'static,
         F: FnOnce(T) -> Fut<U> + Send + 'static,
         T: Clone,
     {
+        if let Some(res) = self.try_result() {
+            match res {
+                Ok(v) => {
+                    if let Some(_guard) = InlineGuard::try_enter() {
+                        let v = v.clone();
+                        return match std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            move || f(v),
+                        )) {
+                            Ok(mid) => mid,
+                            Err(p) => {
+                                Fut::completed(self.0.exec.clone(), Err(panic_message(&*p)))
+                            }
+                        };
+                    }
+                }
+                Err(e) => return Fut::completed(self.0.exec.clone(), Err(e.clone())),
+            }
+        }
         let out = Fut::incomplete(self.0.exec.clone());
         let completer = out.clone();
         self.on_complete(move |res| match res {
@@ -157,6 +340,7 @@ impl<T: Send + Sync + 'static> Fut<T> {
                 let exec = completer.0.exec.clone();
                 let completer2 = completer.clone();
                 exec.spawn(move || {
+                    completer2.mark_running();
                     match std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || f(v))) {
                         Ok(mid) => {
                             let completer3 = completer2.clone();
@@ -181,9 +365,9 @@ impl<T: Send + Sync + 'static> Susp<T> for Fut<T> {
     /// `Await.result(self, Duration.Inf)` — parks under managed blocking,
     /// so calling it from a worker cannot starve the pool (§6: "this is
     /// not considered good in a regular use of Futures, but we have not
-    /// been able to avoid it").
+    /// been able to avoid it"). The ready case is a single Acquire load.
     fn force(&self) -> &T {
-        if self.0.value.get().is_none() {
+        if self.0.state.load(Ordering::Acquire) < READY {
             Executor::blocking(|| {
                 let mut pending = self.0.pending.lock().unwrap();
                 while pending.is_some() {
@@ -198,7 +382,7 @@ impl<T: Send + Sync + 'static> Susp<T> for Fut<T> {
     }
 
     fn is_ready(&self) -> bool {
-        self.0.value.get().is_some()
+        self.0.state.load(Ordering::Acquire) >= READY
     }
 
     fn into_ready(self) -> Option<T> {
@@ -242,6 +426,8 @@ impl Eval for FutureEval {
         Fut::ready(&self.exec, value)
     }
 
+    /// Callback chaining; inline completion when the source is already
+    /// ready (see [`Fut::and_then`]).
     fn map<T, U, F>(&self, cell: &Fut<T>, f: F) -> Fut<U>
     where
         T: Clone + Send + Sync + 'static,
@@ -283,6 +469,7 @@ mod tests {
             99
         });
         assert_eq!(*fut.force(), 99);
+        assert_eq!(fut.state(), FutState::Ready);
     }
 
     #[test]
@@ -331,6 +518,77 @@ mod tests {
         let mapped = fut.and_then(|x| x + 1);
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| *mapped.force()));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn failure_propagates_through_inline_map() {
+        // Same, but the map is attached after the failure is complete, so
+        // it takes the inline fast path.
+        let ex = Executor::new(1);
+        let fut: Fut<u32> = Fut::spawn(&ex, || panic!("root cause"));
+        ex.wait_idle();
+        assert_eq!(fut.state(), FutState::Panicked);
+        let mapped = fut.and_then(|x| x + 1);
+        assert_eq!(mapped.state(), FutState::Panicked);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| *mapped.force()));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn ready_source_maps_inline_on_caller() {
+        let ex = Executor::new(2);
+        let fut = Fut::ready(&ex, 5u32);
+        let caller = std::thread::current().id();
+        let ran_on = Arc::new(Mutex::new(None));
+        let ran_on2 = ran_on.clone();
+        let mapped = fut.and_then(move |x| {
+            *ran_on2.lock().unwrap() = Some(std::thread::current().id());
+            x * 2
+        });
+        // Born complete: no task was spawned, f already ran, on the caller.
+        assert!(mapped.is_ready());
+        assert_eq!(*mapped.force(), 10);
+        assert_eq!(ran_on.lock().unwrap().unwrap(), caller);
+    }
+
+    #[test]
+    fn inline_map_panic_is_contained() {
+        let ex = Executor::new(1);
+        let fut = Fut::ready(&ex, 1u32);
+        let mapped: Fut<u32> = fut.and_then(|_| panic!("inline boom"));
+        assert_eq!(mapped.state(), FutState::Panicked);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| *mapped.force()));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bind_on_ready_source_returns_inner_directly() {
+        let ex = Executor::new(2);
+        let ex2 = ex.clone();
+        let fut = Fut::ready(&ex, 6u32);
+        let out = fut.bind(move |x| Fut::ready(&ex2, x * 7));
+        assert_eq!(*out.force(), 42);
+    }
+
+    #[test]
+    fn state_machine_transitions() {
+        let ex = Executor::new(1);
+        let fut = Fut::ready(&ex, 1u32);
+        assert_eq!(fut.state(), FutState::Ready);
+        assert!(fut.try_result().is_some());
+        // Gate the producer on a channel so the pending observation
+        // cannot race the worker (no sleep-based timing).
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let slow = Fut::spawn(&ex, move || {
+            rx.recv().unwrap();
+            2u32
+        });
+        // Pending from the outside: Empty or Running, never Ready.
+        assert!(matches!(slow.state(), FutState::Empty | FutState::Running));
+        assert!(slow.try_result().is_none());
+        tx.send(()).unwrap();
+        slow.force();
+        assert_eq!(slow.state(), FutState::Ready);
     }
 
     #[test]

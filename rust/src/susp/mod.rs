@@ -25,7 +25,7 @@ mod future;
 mod lazy;
 mod strict;
 
-pub use future::{Fut, FutureEval};
+pub use future::{Fut, FutState, FutureEval};
 pub use lazy::{Lazy, LazyEval};
 pub use strict::{Strict, StrictEval};
 
@@ -93,14 +93,23 @@ pub trait Eval: Clone + Send + Sync + 'static {
 
     /// The monadic `flatMap` (used by the paper's `plus` for the
     /// `for (sx <- tailx; sy <- taily) yield ...` comprehension).
+    ///
+    /// Default = `map` then join-via-`map`: stage 1 runs `f` inside the
+    /// strategy's own `map` (yielding the inner cell without touching it
+    /// on the calling thread), stage 2 chains through `map` of that
+    /// stage to extract the value with exactly one force + clone. The
+    /// old default did both forces inside a single fresh suspension on
+    /// the calling worker, bypassing whatever cheap `map` the strategy
+    /// provides. [`FutureEval`] still overrides this with true callback
+    /// chaining ([`Fut::bind`]).
     fn flat_map<T, U, F>(&self, cell: &Self::Cell<T>, f: F) -> Self::Cell<U>
     where
         T: Clone + Send + Sync + 'static,
         U: Clone + Send + Sync + 'static,
         F: FnOnce(T) -> Self::Cell<U> + Send + 'static,
     {
-        let cell = cell.clone();
-        self.suspend(move || f(cell.force().clone()).force().clone())
+        let mid: Self::Cell<Self::Cell<U>> = self.map(cell, f);
+        self.map(&mid, |inner| inner.force().clone())
     }
 
     /// The executor backing this strategy, if any. Sequential strategies

@@ -1,0 +1,140 @@
+//! Scheduler stress coverage for the work-stealing executor:
+//! producer/stealer storms, the par(1) deep-pipeline no-deadlock
+//! regression, and panic propagation through stolen tasks.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use stream_future::exec::Executor;
+use stream_future::prelude::*;
+use stream_future::susp::Fut;
+
+#[test]
+fn producers_and_stealers_storm() {
+    // 4 external producer threads × 500 tasks, each spawning 3 children
+    // from inside the pool (children land in worker deques, where only
+    // theft balances them). One extra task floods its own deque and then
+    // sleeps, so at par ≥ 2 a nonzero steal count is guaranteed, not
+    // merely probable.
+    let ex = Executor::new(4);
+    let total = Arc::new(AtomicUsize::new(0));
+
+    {
+        let ex2 = ex.clone();
+        let t = total.clone();
+        ex.spawn(move || {
+            for _ in 0..200 {
+                let t2 = t.clone();
+                ex2.spawn(move || {
+                    t2.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Hold this worker: its 200 children can only run via theft.
+            std::thread::sleep(Duration::from_millis(30));
+        });
+    }
+
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let ex = ex.clone();
+            let total = total.clone();
+            s.spawn(move || {
+                for _ in 0..500 {
+                    let ex2 = ex.clone();
+                    let t2 = total.clone();
+                    ex.spawn(move || {
+                        t2.fetch_add(1, Ordering::SeqCst);
+                        for _ in 0..3 {
+                            let t3 = t2.clone();
+                            ex2.spawn(move || {
+                                t3.fetch_add(1, Ordering::SeqCst);
+                            });
+                        }
+                    });
+                }
+            });
+        }
+    });
+    ex.wait_idle();
+
+    let stats = ex.stats();
+    assert_eq!(total.load(Ordering::SeqCst), 200 + 4 * 500 * 4);
+    assert!(stats.tasks_stolen > 0, "work stealing must actually steal: {stats:?}");
+    assert_eq!(stats.tasks_panicked, 0);
+    assert_eq!(stats.queue_depth, 0, "idle pool holds no queued jobs");
+}
+
+#[test]
+fn par1_forces_10k_deep_stream_without_deadlock() {
+    // The killer configuration: a single worker, a spine of 10k dependent
+    // suspensions, and a driver forcing through it. Managed blocking plus
+    // stealable deques must keep it live end to end.
+    let ex = Executor::new(1);
+    let eval = FutureEval::new(ex.clone());
+    let s = Stream::range(eval, 0, 10_000);
+    assert_eq!(s.force_all(), 10_000);
+    // And again with a transformation stage on the same exhausted pool.
+    let eval = FutureEval::new(ex);
+    let mapped = Stream::range(eval, 0, 10_000).map_elems(|x| x + 1);
+    assert_eq!(mapped.len(), 10_000);
+}
+
+#[test]
+fn panic_propagates_through_stolen_task() {
+    // Worker A spawns the panicking future locally, then sleeps holding
+    // its worker; the only way the future completes while A sleeps is
+    // that worker B stole it. The panic must still surface at the
+    // forcing site, with its message intact.
+    let ex = Executor::new(2);
+    let ex2 = ex.clone();
+    let outer: Fut<Fut<u32>> = Fut::spawn(&ex, move || {
+        let inner: Fut<u32> = Fut::spawn(&ex2, || panic!("stolen boom"));
+        std::thread::sleep(Duration::from_millis(50));
+        inner
+    });
+    let inner = outer.force().clone();
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        inner.force();
+    }));
+    let payload = res.expect_err("forcing a poisoned future must panic");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_else(|| "non-string payload".to_string());
+    assert!(msg.contains("stolen boom"), "payload: {msg}");
+    ex.wait_idle();
+    assert!(ex.stats().tasks_stolen >= 1, "inner future should have been stolen");
+}
+
+#[test]
+fn mapping_a_completed_spine_trampolines() {
+    // Regression for the inline-completion fast path: mapping over an
+    // already-finished 50k-cell Future stream must not recurse the
+    // caller's stack into the ground (the inline depth guard trampolines
+    // onto worker stacks every MAX_INLINE_DEPTH cells).
+    let ex = Executor::new(2);
+    let eval = FutureEval::new(ex.clone());
+    let s = Stream::range(eval, 0, 50_000);
+    assert_eq!(s.force_all(), 50_000);
+    ex.wait_idle(); // the whole spine is complete before we map
+    let mapped = s.map_elems(|x| x.wrapping_mul(3));
+    assert_eq!(mapped.len(), 50_000);
+    assert_eq!(mapped.get(49_999), Some(49_999u32.wrapping_mul(3)));
+}
+
+#[test]
+fn steals_zero_on_single_worker() {
+    // par(1) has nobody to steal from; the counter must stay exact.
+    let ex = Executor::new(1);
+    let n = Arc::new(AtomicUsize::new(0));
+    for _ in 0..1_000 {
+        let n2 = n.clone();
+        ex.spawn(move || {
+            n2.fetch_add(1, Ordering::SeqCst);
+        });
+    }
+    ex.wait_idle();
+    assert_eq!(n.load(Ordering::SeqCst), 1_000);
+    assert_eq!(ex.stats().tasks_stolen, 0);
+}
