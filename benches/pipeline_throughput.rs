@@ -1,0 +1,73 @@
+//! Pipeline throughput across shard counts → `BENCH_pipeline.json`.
+//!
+//! Drives concurrent clients through the sharded coordinator at shards
+//! ∈ {1, 2, N} for each trajectory workload, recording jobs/sec and
+//! p50/p95 latency per cell (see `bench_harness::pipeline_bench` for
+//! the measurement discipline). Release numbers overwrite any
+//! test-seeded trajectory file; the JSON's `profile` field records
+//! which build produced it, and the CI bench gate
+//! (`ci/check_bench.sh`) only compares like-for-like runs.
+//!
+//! Environment knobs (on top of `benches/common`'s `SFUT_SCALE`,
+//! `SFUT_BENCH_SAMPLES`, `SFUT_BENCH_WARMUP`, `SFUT_NO_KERNEL`):
+//! * `SFUT_PIPELINE_CLIENTS` — concurrent client threads (default 4)
+//! * `SFUT_PIPELINE_JOBS`    — jobs per client per sample (default 4)
+//!
+//! Run: `cargo bench --bench pipeline_throughput`.
+
+mod common;
+
+use stream_future::bench_harness::{pipeline_bench, BenchOptions};
+use stream_future::config::{Mode, Workload};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default).max(1)
+}
+
+fn main() {
+    let cfg = common::bench_config();
+    common::banner("pipeline_throughput", &cfg);
+
+    let params = pipeline_bench::PipelineBenchParams {
+        clients: env_usize("SFUT_PIPELINE_CLIENTS", 4),
+        jobs_per_client: env_usize("SFUT_PIPELINE_JOBS", 4),
+        shard_counts: pipeline_bench::default_shard_counts(cfg.shard_parallelism),
+        mode: Mode::Par(2),
+        workloads: vec![Workload::Primes, Workload::PrimesChunked, Workload::Chunked],
+    };
+    let opts = BenchOptions {
+        warmup: cfg.warmup.max(1),
+        samples: cfg.samples.max(3),
+        verbose: false,
+    };
+    eprintln!(
+        "clients={} jobs/client={} shard sweep={:?}",
+        params.clients, params.jobs_per_client, params.shard_counts
+    );
+
+    let bench = pipeline_bench::run(&cfg, &params, &opts).expect("pipeline bench failed");
+    println!(
+        "\npipeline throughput ({} profile, {} clients × {} jobs):",
+        bench.profile, bench.clients, bench.jobs_per_client
+    );
+    for p in &bench.points {
+        println!(
+            "  {:<16} shards={:<2} {:>10.1} jobs/s   p50={:>8.2}ms p95={:>8.2}ms \
+             steals={:<6} verified={}",
+            p.workload, p.shards, p.jobs_per_sec, p.p50_ms, p.p95_ms, p.tasks_stolen, p.verified
+        );
+    }
+
+    let out = pipeline_bench::default_output_path();
+    match pipeline_bench::write_json(&bench, &out) {
+        Ok(()) => println!("\nwrote {}", out.display()),
+        Err(e) => {
+            // Exiting nonzero matters: if the trajectory file silently
+            // kept its old contents, the CI gate would compare the
+            // committed baseline against itself and always pass.
+            eprintln!("\ncould not write {}: {e}", out.display());
+            std::process::exit(1);
+        }
+    }
+    println!("pipeline_throughput done");
+}

@@ -10,11 +10,14 @@
 mod chart;
 pub mod executor_bench;
 pub mod paper;
+pub mod pipeline_bench;
 mod sampler;
 mod table;
+pub mod tiny_json;
 
 pub use chart::ascii_bar_chart;
 pub use executor_bench::{ExecutorBench, QueueDepthStats, SchedulerRun};
+pub use pipeline_bench::{GateOutcome, PipelineBench, PipelineBenchParams, WorkloadPoint};
 pub use sampler::{measure, BenchOptions, Measurement};
 pub use table::{render_csv, render_table, Cell, ReportTable};
 

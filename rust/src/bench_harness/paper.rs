@@ -11,7 +11,7 @@
 use anyhow::Result;
 
 use super::{ascii_bar_chart, render_csv, render_table, Cell, ReportTable};
-use crate::config::{Config, Mode, Workload};
+use crate::config::{ChunkPolicy, Config, Mode, Workload};
 use crate::coordinator::{JobRequest, Pipeline};
 
 /// The paper's three measurement columns.
@@ -260,6 +260,9 @@ pub fn ablation_chunk(cfg: &Config, chunk_sizes: &[usize]) -> Result<String> {
     for &chunk in chunk_sizes {
         let mut c = cfg.clone();
         c.chunk_size = chunk;
+        // The sweep varies the block edge, so the adaptive sizer (which
+        // would override it) is pinned off for this ablation.
+        c.chunk_policy = ChunkPolicy::Fixed;
         let pipeline = Pipeline::new(c.clone())?;
         for &m in &modes {
             let req = JobRequest { workload: Workload::ChunkedBig, mode: m };

@@ -1,0 +1,479 @@
+//! Pipeline-level throughput benchmark with a machine-readable
+//! trajectory (`BENCH_pipeline.json`).
+//!
+//! `BENCH_executor.json` (PR 1) tracks the executor substrate;
+//! this harness measures the layer the paper's construct actually
+//! serves traffic through: concurrent clients driving [`Pipeline`]
+//! jobs end-to-end — routing, shard lease, driver thread, adaptive
+//! chunking, verification-off steady state — at shard counts
+//! ∈ {1, 2, N} (N = the machine's auto count). Reported per
+//! (workload, shard count) cell:
+//!
+//! * **jobs/sec** — batch size / median batch wall-clock, with the same
+//!   warmup + median-of-samples discipline as the executor bench
+//!   ([`measure`]);
+//! * **p50/p95 latency** — per-job, across every post-warmup sample;
+//! * **steal counter** — the shard pools' cumulative `tasks_stolen`.
+//!
+//! Seeding discipline matches the executor trajectory: `cargo test`
+//! seeds the file only when absent (debug profile, smoke scale);
+//! `cargo bench --bench pipeline_throughput` overwrites it with
+//! release numbers. The committed file is the CI bench gate's baseline
+//! (`ci/check_bench.sh` → [`gate`] → `sfut check-bench`): a fresh run
+//! whose jobs/sec drops more than the threshold below a *comparable*
+//! baseline (same profile and run parameters) fails the gate.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::tiny_json::{self, Json};
+use super::{measure, BenchOptions};
+use crate::config::{Config, Mode, Workload};
+use crate::coordinator::{JobRequest, Pipeline, ShardSet};
+
+/// Shape of one bench run: who drives how many jobs, where.
+#[derive(Debug, Clone)]
+pub struct PipelineBenchParams {
+    /// Concurrent client threads per sample.
+    pub clients: usize,
+    /// Jobs each client runs per sample.
+    pub jobs_per_client: usize,
+    /// Shard counts to sweep (deduplicated by the caller; see
+    /// [`default_shard_counts`]).
+    pub shard_counts: Vec<usize>,
+    /// Evaluation mode for every job (par(2) = the paper's column).
+    pub mode: Mode,
+    pub workloads: Vec<Workload>,
+}
+
+impl Default for PipelineBenchParams {
+    fn default() -> Self {
+        PipelineBenchParams {
+            clients: 4,
+            jobs_per_client: 4,
+            shard_counts: default_shard_counts(2),
+            mode: Mode::Par(2),
+            workloads: vec![Workload::Primes, Workload::PrimesChunked, Workload::Chunked],
+        }
+    }
+}
+
+/// The issue's sweep: shards ∈ {1, 2, N}, N = auto count for
+/// `shard_parallelism`, deduplicated and ascending.
+pub fn default_shard_counts(shard_parallelism: usize) -> Vec<usize> {
+    let mut counts = vec![1, 2, ShardSet::auto_count(shard_parallelism)];
+    counts.sort_unstable();
+    counts.dedup();
+    counts
+}
+
+/// One (workload, shard count) cell.
+#[derive(Debug, Clone)]
+pub struct WorkloadPoint {
+    pub workload: &'static str,
+    pub shards: usize,
+    /// Jobs per timed sample (clients × jobs_per_client).
+    pub jobs_per_sample: u64,
+    pub jobs_per_sec: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    /// Cumulative steals across the pipeline's shard pools during this
+    /// cell (warmup included).
+    pub tasks_stolen: u64,
+    /// The cell's pre-flight job passed oracle verification.
+    pub verified: bool,
+}
+
+/// The full sweep.
+#[derive(Debug, Clone)]
+pub struct PipelineBench {
+    /// "release" or "debug" — only release points belong on the
+    /// cross-PR trajectory; the gate refuses to compare across profiles.
+    pub profile: &'static str,
+    pub scale: f64,
+    pub clients: usize,
+    pub jobs_per_client: usize,
+    pub mode: String,
+    pub warmup: usize,
+    pub samples: usize,
+    pub shard_counts: Vec<usize>,
+    pub points: Vec<WorkloadPoint>,
+}
+
+fn build_profile() -> &'static str {
+    if cfg!(debug_assertions) {
+        "debug"
+    } else {
+        "release"
+    }
+}
+
+fn total_steals(pipeline: &Pipeline) -> u64 {
+    pipeline.shards().stats().iter().map(|(_, s)| s.tasks_stolen).sum()
+}
+
+fn percentile_ms(sorted: &[Duration], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    super::sampler::percentile_sorted(sorted, q).as_secs_f64() * 1e3
+}
+
+/// Run the sweep: for each shard count, a fresh [`Pipeline`]; for each
+/// workload, one verified pre-flight job, then `warmup + samples`
+/// batches of `clients × jobs_per_client` concurrent jobs.
+pub fn run(
+    base: &Config,
+    params: &PipelineBenchParams,
+    opts: &BenchOptions,
+) -> Result<PipelineBench> {
+    let batch = params.clients * params.jobs_per_client;
+    let mut points = Vec::new();
+    for &shard_count in &params.shard_counts {
+        let mut cfg = base.clone();
+        cfg.shards = shard_count.max(1);
+        let pipeline = Pipeline::new(cfg)?;
+        let actual_shards = pipeline.shards().len();
+        for &workload in &params.workloads {
+            let req = JobRequest { workload, mode: params.mode };
+            // Pre-flight: verify once against the oracle; the timed
+            // jobs skip it (same discipline as paper::time_cell).
+            let first = pipeline.run(&req)?;
+            let steals_before = total_steals(&pipeline);
+            let latencies = Mutex::new(Vec::<Duration>::new());
+            let label = format!("pipeline.{}.shards{}", workload.name(), actual_shards);
+            let timing = measure(&label, opts, || {
+                std::thread::scope(|s| {
+                    for _ in 0..params.clients {
+                        s.spawn(|| {
+                            for _ in 0..params.jobs_per_client {
+                                let t = Instant::now();
+                                let res =
+                                    pipeline.run_opts(&req, false).expect("bench job failed");
+                                latencies.lock().unwrap().push(t.elapsed());
+                                std::hint::black_box(res.seconds);
+                            }
+                        });
+                    }
+                });
+            });
+            // measure() ran `opts.warmup` batches before sampling; drop
+            // their latencies so the percentiles cover samples only.
+            let mut lat = latencies.into_inner().unwrap();
+            let keep_from = (opts.warmup * batch).min(lat.len());
+            let mut lat = lat.split_off(keep_from);
+            lat.sort_unstable();
+            points.push(WorkloadPoint {
+                workload: workload.name(),
+                shards: actual_shards,
+                jobs_per_sample: batch as u64,
+                jobs_per_sec: batch as f64 / timing.median_secs().max(1e-9),
+                p50_ms: percentile_ms(&lat, 0.5),
+                p95_ms: percentile_ms(&lat, 0.95),
+                tasks_stolen: total_steals(&pipeline).saturating_sub(steals_before),
+                verified: first.verified,
+            });
+        }
+    }
+    Ok(PipelineBench {
+        profile: build_profile(),
+        scale: base.scale,
+        clients: params.clients,
+        jobs_per_client: params.jobs_per_client,
+        mode: params.mode.label(),
+        warmup: opts.warmup,
+        samples: opts.samples,
+        shard_counts: params.shard_counts.clone(),
+        points,
+    })
+}
+
+fn json_point(p: &WorkloadPoint) -> String {
+    format!(
+        "    {{\"workload\": \"{}\", \"shards\": {}, \"jobs_per_sample\": {}, \
+         \"jobs_per_sec\": {:.2}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
+         \"tasks_stolen\": {}, \"verified\": {}}}",
+        p.workload,
+        p.shards,
+        p.jobs_per_sample,
+        p.jobs_per_sec,
+        p.p50_ms,
+        p.p95_ms,
+        p.tasks_stolen,
+        p.verified,
+    )
+}
+
+/// Serialize to the `BENCH_pipeline.json` schema (hand-rolled; no serde
+/// offline). Readable back via [`tiny_json`] / [`gate`].
+pub fn to_json(b: &PipelineBench) -> String {
+    let shard_counts =
+        b.shard_counts.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(", ");
+    let points = b.points.iter().map(json_point).collect::<Vec<_>>().join(",\n");
+    format!(
+        "{{\n\
+         \x20 \"bench\": \"pipeline_throughput\",\n\
+         \x20 \"profile\": \"{}\",\n\
+         \x20 \"scale\": {:.4},\n\
+         \x20 \"clients\": {},\n\
+         \x20 \"jobs_per_client\": {},\n\
+         \x20 \"mode\": \"{}\",\n\
+         \x20 \"warmup\": {},\n\
+         \x20 \"samples\": {},\n\
+         \x20 \"shard_counts\": [{}],\n\
+         \x20 \"points\": [\n{}\n  ]\n\
+         }}\n",
+        b.profile,
+        b.scale,
+        b.clients,
+        b.jobs_per_client,
+        b.mode,
+        b.warmup,
+        b.samples,
+        shard_counts,
+        points,
+    )
+}
+
+pub fn write_json(b: &PipelineBench, path: &Path) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(to_json(b).as_bytes())
+}
+
+/// Default artifact location: the repository root.
+pub fn default_output_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_pipeline.json")
+}
+
+/// Seed the trajectory file only when none exists yet, so a debug-build
+/// `cargo test` smoke run never clobbers a full-scale release data
+/// point (the `profile` field in the JSON disambiguates what's there).
+pub fn write_json_if_absent(b: &PipelineBench) -> std::io::Result<bool> {
+    let path = default_output_path();
+    if path.exists() {
+        return Ok(false);
+    }
+    write_json(b, &path).map(|()| true)
+}
+
+/// Outcome of comparing a fresh run against the committed baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GateOutcome {
+    /// Every comparable cell is within the threshold.
+    Passed { cells: usize },
+    /// The files are not comparable (different profile/scale/run
+    /// parameters, or no overlapping cells): not a pass, not a failure —
+    /// the baseline needs refreshing.
+    Skipped { reason: String },
+    /// At least one cell regressed beyond the threshold.
+    Failed { regressions: Vec<String> },
+}
+
+/// Compare two `BENCH_pipeline.json` documents: `current` fails when any
+/// (workload, shards) cell's jobs/sec drops below
+/// `(1 - threshold) × baseline`. Files are only comparable when profile
+/// and run parameters match — debug-vs-release or different-scale
+/// comparisons are meaningless and yield [`GateOutcome::Skipped`].
+pub fn gate(baseline: &str, current: &str, threshold: f64) -> Result<GateOutcome, String> {
+    let b = tiny_json::parse(baseline).map_err(|e| format!("baseline: {e}"))?;
+    let c = tiny_json::parse(current).map_err(|e| format!("current: {e}"))?;
+    for doc in [&b, &c] {
+        if doc.get("bench").and_then(Json::as_str) != Some("pipeline_throughput") {
+            return Err("not a pipeline_throughput trajectory file".to_string());
+        }
+    }
+    for key in ["profile", "scale", "clients", "jobs_per_client", "mode", "warmup", "samples"] {
+        let (bv, cv) = (b.get(key), c.get(key));
+        if bv != cv {
+            return Ok(GateOutcome::Skipped {
+                reason: format!(
+                    "{key} differs (baseline {bv:?}, current {cv:?}); runs are not \
+                     comparable — refresh the committed baseline"
+                ),
+            });
+        }
+    }
+
+    let cell = |doc: &Json| -> Vec<(String, u64, f64)> {
+        doc.get("points")
+            .and_then(Json::as_array)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|p| {
+                Some((
+                    p.get("workload")?.as_str()?.to_string(),
+                    p.get("shards")?.as_f64()? as u64,
+                    p.get("jobs_per_sec")?.as_f64()?,
+                ))
+            })
+            .collect()
+    };
+    let base_cells = cell(&b);
+    let cur_cells = cell(&c);
+    let mut compared = 0usize;
+    let mut regressions = Vec::new();
+    for (workload, shards, cur_jps) in &cur_cells {
+        let Some((_, _, base_jps)) =
+            base_cells.iter().find(|(w, s, _)| w == workload && s == shards)
+        else {
+            continue;
+        };
+        compared += 1;
+        if *cur_jps < (1.0 - threshold) * base_jps {
+            let drop_pct = (1.0 - cur_jps / base_jps.max(1e-9)) * 100.0;
+            regressions.push(format!(
+                "{workload} @ {shards} shard(s): {cur_jps:.1} jobs/s vs baseline \
+                 {base_jps:.1} (-{drop_pct:.0}%)"
+            ));
+        }
+    }
+    // A workload that disappears entirely is a silent 100% regression,
+    // not a pass. (Individual shard-count cells are allowed to differ —
+    // the N in {1, 2, N} is machine-dependent — but the workload list is
+    // config-driven, so losing a whole workload means the bench stopped
+    // covering it.)
+    for (workload, _, _) in &base_cells {
+        if !cur_cells.iter().any(|(w, _, _)| w == workload)
+            && !regressions.iter().any(|r| r.starts_with(&format!("{workload} vanished")))
+        {
+            regressions.push(format!(
+                "{workload} vanished: baseline has cells for it, current run has none"
+            ));
+        }
+    }
+    if compared == 0 && regressions.is_empty() {
+        return Ok(GateOutcome::Skipped {
+            reason: "no overlapping (workload, shards) cells".to_string(),
+        });
+    }
+    if regressions.is_empty() {
+        Ok(GateOutcome::Passed { cells: compared })
+    } else {
+        Ok(GateOutcome::Failed { regressions })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_config() -> Config {
+        let mut cfg = Config::default();
+        cfg.primes_n = 400;
+        cfg.fateman_degree = 2;
+        cfg.chunk_size = 16;
+        cfg.use_kernel = false;
+        cfg.shard_parallelism = 1;
+        cfg
+    }
+
+    #[test]
+    fn pipeline_bench_runs_and_seeds_trajectory() {
+        // Small-scale smoke: correctness of the sweep plumbing, not a
+        // perf claim. Seeds BENCH_pipeline.json only if absent; the
+        // full-size release run lives in
+        // `cargo bench --bench pipeline_throughput`.
+        let params = PipelineBenchParams {
+            clients: 2,
+            jobs_per_client: 2,
+            shard_counts: vec![1, 2],
+            mode: Mode::Par(2),
+            workloads: vec![Workload::Primes, Workload::PrimesChunked, Workload::Chunked],
+        };
+        let opts = BenchOptions { warmup: 1, samples: 2, verbose: false };
+        let b = run(&smoke_config(), &params, &opts).unwrap();
+        assert_eq!(b.points.len(), 6, "3 workloads × 2 shard counts");
+        assert!(b.points.iter().all(|p| p.jobs_per_sec > 0.0));
+        assert!(b.points.iter().all(|p| p.verified));
+        assert!(b.points.iter().all(|p| p.p95_ms >= p.p50_ms));
+        assert!(b.points.iter().all(|p| p.jobs_per_sample == 4));
+        assert_eq!(b.points.iter().filter(|p| p.shards == 2).count(), 3);
+
+        let json = to_json(&b);
+        assert!(json.contains("\"bench\": \"pipeline_throughput\""));
+        let parsed = tiny_json::parse(&json).expect("self-readable JSON");
+        assert_eq!(parsed.get("clients").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(
+            parsed.get("points").and_then(Json::as_array).map(<[Json]>::len),
+            Some(6)
+        );
+        // A run gates cleanly against itself at any threshold.
+        match gate(&json, &json, 0.25).unwrap() {
+            GateOutcome::Passed { cells } => assert_eq!(cells, 6),
+            other => panic!("expected pass, got {other:?}"),
+        }
+
+        // Serialization to disk via a scratch path (never the trajectory).
+        let tmp = std::env::temp_dir().join("sfut_bench_pipeline_smoke.json");
+        write_json(&b, &tmp).expect("write smoke json");
+        assert!(tmp.exists());
+        let _ = std::fs::remove_file(&tmp);
+        // Seed the real file only when absent.
+        let _ = write_json_if_absent(&b);
+        assert!(default_output_path().exists());
+    }
+
+    fn doc(profile: &str, jps_primes: f64, jps_chunked: f64) -> String {
+        format!(
+            "{{\"bench\": \"pipeline_throughput\", \"profile\": \"{profile}\", \
+             \"scale\": 1.0, \"clients\": 2, \"jobs_per_client\": 2, \"mode\": \"par(2)\", \
+             \"points\": [\
+             {{\"workload\": \"primes\", \"shards\": 1, \"jobs_per_sec\": {jps_primes}}}, \
+             {{\"workload\": \"chunked\", \"shards\": 2, \"jobs_per_sec\": {jps_chunked}}}]}}"
+        )
+    }
+
+    #[test]
+    fn gate_passes_within_threshold_and_fails_beyond() {
+        let base = doc("release", 100.0, 50.0);
+        // 20% down on one cell: inside a 25% threshold.
+        let ok = doc("release", 80.0, 50.0);
+        assert_eq!(gate(&base, &ok, 0.25).unwrap(), GateOutcome::Passed { cells: 2 });
+        // 40% down: out.
+        let bad = doc("release", 60.0, 50.0);
+        match gate(&base, &bad, 0.25).unwrap() {
+            GateOutcome::Failed { regressions } => {
+                assert_eq!(regressions.len(), 1);
+                assert!(regressions[0].contains("primes"), "{regressions:?}");
+            }
+            other => panic!("expected failure, got {other:?}"),
+        }
+        // Improvements never fail.
+        let faster = doc("release", 200.0, 90.0);
+        assert_eq!(gate(&base, &faster, 0.25).unwrap(), GateOutcome::Passed { cells: 2 });
+    }
+
+    #[test]
+    fn gate_fails_when_a_workload_vanishes() {
+        let base = doc("release", 100.0, 50.0);
+        // Current run covers chunked but lost primes entirely.
+        let cur = "{\"bench\": \"pipeline_throughput\", \"profile\": \"release\", \
+             \"scale\": 1.0, \"clients\": 2, \"jobs_per_client\": 2, \"mode\": \"par(2)\", \
+             \"points\": [\
+             {\"workload\": \"chunked\", \"shards\": 2, \"jobs_per_sec\": 55.0}]}"
+            .to_string();
+        match gate(&base, &cur, 0.25).unwrap() {
+            GateOutcome::Failed { regressions } => {
+                assert!(regressions.iter().any(|r| r.contains("primes vanished")), "{regressions:?}");
+            }
+            other => panic!("expected failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gate_skips_incomparable_runs() {
+        let base = doc("release", 100.0, 50.0);
+        let debug = doc("debug", 10.0, 5.0);
+        assert!(matches!(
+            gate(&base, &debug, 0.25).unwrap(),
+            GateOutcome::Skipped { .. }
+        ));
+        // Garbage input is an error, not a skip.
+        assert!(gate("{]", &base, 0.25).is_err());
+        assert!(gate("{\"bench\": \"executor_overhead\"}", &base, 0.25).is_err());
+    }
+}

@@ -84,7 +84,10 @@ fn summarize(name: &str, samples: Vec<Duration>) -> Measurement {
     }
 }
 
-fn percentile_sorted(sorted: &[Duration], q: f64) -> Duration {
+/// Nearest-rank percentile of an ascending-sorted sample set. Shared by
+/// the measurement summary here and the pipeline bench's latency
+/// percentiles, so every trajectory uses one definition.
+pub(crate) fn percentile_sorted(sorted: &[Duration], q: f64) -> Duration {
     debug_assert!(!sorted.is_empty());
     let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
     sorted[idx]

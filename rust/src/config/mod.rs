@@ -61,6 +61,41 @@ impl Mode {
     }
 }
 
+/// How the chunked workloads pick their block edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkPolicy {
+    /// Measure the per-element cost and size blocks from it
+    /// ([`crate::stream::ChunkSizer`]); the measured cost is cached per
+    /// workload inside the owning coordinator shard. The default.
+    Adaptive,
+    /// Use `chunk_size` verbatim — the pre-sharding behaviour, kept for
+    /// A/B runs (the A1 chunk-sweep ablation pins this).
+    Fixed,
+}
+
+impl ChunkPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ChunkPolicy::Adaptive => "adaptive",
+            ChunkPolicy::Fixed => "fixed",
+        }
+    }
+}
+
+impl std::str::FromStr for ChunkPolicy {
+    type Err = ConfigError;
+
+    fn from_str(s: &str) -> Result<ChunkPolicy, ConfigError> {
+        match s.trim() {
+            "adaptive" => Ok(ChunkPolicy::Adaptive),
+            "fixed" => Ok(ChunkPolicy::Fixed),
+            other => Err(ConfigError::new(format!(
+                "unknown chunk policy: {other} (want adaptive | fixed)"
+            ))),
+        }
+    }
+}
+
 /// Workload selector matching the rows of Table 1 plus our extensions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Workload {
@@ -68,6 +103,9 @@ pub enum Workload {
     Primes,
     /// primes_x3 (n = 3 × `primes_n`).
     PrimesX3,
+    /// primes_chunked — §7's block-granular sieve (our extension; the
+    /// plain `primes` rows stay the paper's deliberately naive sieve).
+    PrimesChunked,
     /// stream — Fateman product via stream algorithm, small coefficients.
     Stream,
     /// stream_big — big coefficients (× `big_factor`^1).
@@ -83,9 +121,10 @@ pub enum Workload {
 }
 
 impl Workload {
-    pub const ALL: [Workload; 8] = [
+    pub const ALL: [Workload; 9] = [
         Workload::Primes,
         Workload::PrimesX3,
+        Workload::PrimesChunked,
         Workload::Stream,
         Workload::StreamBig,
         Workload::List,
@@ -98,6 +137,7 @@ impl Workload {
         match self {
             Workload::Primes => "primes",
             Workload::PrimesX3 => "primes_x3",
+            Workload::PrimesChunked => "primes_chunked",
             Workload::Stream => "stream",
             Workload::StreamBig => "stream_big",
             Workload::List => "list",
@@ -128,8 +168,17 @@ pub struct Config {
     pub fateman_degree: u32,
     /// Big-coefficient factor (paper: 100000000001).
     pub big_factor: i64,
-    /// Block size for the chunked variants (§7 improvement).
+    /// Block size for the chunked variants (§7 improvement). Only
+    /// binding under [`ChunkPolicy::Fixed`]; the adaptive policy derives
+    /// the edge from a measured per-element cost.
     pub chunk_size: usize,
+    /// How chunked workloads pick their block edge.
+    pub chunk_policy: ChunkPolicy,
+    /// Coordinator shards (independent executor-pool groups). 0 = auto:
+    /// physical cores / `shard_parallelism`, at least 1.
+    pub shards: usize,
+    /// Nominal per-shard parallelism; sizes the auto shard count.
+    pub shard_parallelism: usize,
     /// Directory holding AOT artifacts (*.hlo.txt).
     pub artifacts_dir: PathBuf,
     /// Use the PJRT kernel for chunked block products when artifacts are
@@ -153,6 +202,9 @@ impl Default for Config {
             fateman_degree: 12,
             big_factor: 100_000_000_001,
             chunk_size: 64,
+            chunk_policy: ChunkPolicy::Adaptive,
+            shards: 0,
+            shard_parallelism: 2,
             artifacts_dir: PathBuf::from("artifacts"),
             use_kernel: true,
             stack_size: 256 << 20,
@@ -230,6 +282,11 @@ impl Config {
             "fateman_degree" | "fateman.degree" => self.fateman_degree = p(key, value)?,
             "big_factor" | "fateman.big_factor" => self.big_factor = p(key, value)?,
             "chunk_size" | "chunked.size" => self.chunk_size = p(key, value)?,
+            "chunk_policy" | "chunked.policy" => self.chunk_policy = p(key, value)?,
+            "shards" | "coordinator.shards" => self.shards = p(key, value)?,
+            "shard_parallelism" | "coordinator.shard_parallelism" => {
+                self.shard_parallelism = p(key, value)?;
+            }
             "artifacts_dir" | "runtime.artifacts_dir" => {
                 self.artifacts_dir = PathBuf::from(value.trim().trim_matches('"'));
             }
@@ -255,6 +312,12 @@ impl Config {
         }
         if self.chunk_size == 0 {
             return Err(ConfigError::new("chunk_size must be >= 1"));
+        }
+        if self.shards > 256 {
+            return Err(ConfigError::new("shards must be <= 256 (0 = auto)"));
+        }
+        if self.shard_parallelism == 0 {
+            return Err(ConfigError::new("shard_parallelism must be >= 1"));
         }
         if self.samples == 0 {
             return Err(ConfigError::new("samples must be >= 1"));
@@ -341,6 +404,28 @@ mod tests {
         let mut c = Config::default();
         c.scale = 0.0;
         assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.shard_parallelism = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.shards = 1000;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sharding_and_chunk_policy_keys_parse() {
+        let mut c = Config::default();
+        c.set("shards", "4").unwrap();
+        c.set("coordinator.shard_parallelism", "3").unwrap();
+        c.set("chunk_policy", "fixed").unwrap();
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.shard_parallelism, 3);
+        assert_eq!(c.chunk_policy, ChunkPolicy::Fixed);
+        c.set("chunked.policy", "adaptive").unwrap();
+        assert_eq!(c.chunk_policy, ChunkPolicy::Adaptive);
+        assert!(c.set("chunk_policy", "random").is_err());
+        assert_eq!(ChunkPolicy::Adaptive.label(), "adaptive");
+        assert_eq!("fixed".parse::<ChunkPolicy>().unwrap(), ChunkPolicy::Fixed);
     }
 
     #[test]

@@ -57,6 +57,12 @@ pub struct JobResult {
     /// Which block backend served chunked workloads ("rust-scalar",
     /// "pjrt-kernel", or "-" for non-chunked).
     pub backend: String,
+    /// Coordinator shard the job was routed to.
+    pub shard: usize,
+    /// Tasks stolen across the shard's pools while this job was in
+    /// flight (work-stealing balance indicator; attribution is
+    /// shard-level, so concurrent jobs on one shard share it).
+    pub steals: u64,
 }
 
 impl JobResult {
@@ -71,12 +77,14 @@ impl JobResult {
             }
         };
         format!(
-            "ok workload={} mode={} seconds={:.3} verified={} backend={} {detail}",
+            "ok workload={} mode={} seconds={:.3} verified={} backend={} shard={} steals={} {detail}",
             self.request.workload.name(),
             self.request.mode.label(),
             self.seconds,
             self.verified,
             self.backend,
+            self.shard,
+            self.steals,
         )
     }
 }
@@ -111,11 +119,15 @@ mod tests {
             detail: ResultDetail::Primes { count: 25, largest: 97 },
             verified: true,
             backend: "-".into(),
+            shard: 3,
+            steals: 12,
         };
         let line = r.render_line();
         assert!(line.contains("workload=primes"));
         assert!(line.contains("seconds=1.500"));
         assert!(line.contains("primes=25"));
         assert!(line.contains("verified=true"));
+        assert!(line.contains("shard=3"));
+        assert!(line.contains("steals=12"));
     }
 }

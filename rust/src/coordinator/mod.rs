@@ -1,25 +1,39 @@
-//! The coordinator: L3's service layer.
+//! The coordinator: L3's service layer, sharded for concurrent traffic.
 //!
 //! The paper's contribution is the stream/future construct itself, so the
 //! coordinator is the thin-but-real system around it: a [`Pipeline`] that
-//! owns the configuration, the optional PJRT engine, and the metrics
-//! registry; a router ([`Pipeline::run`]) that maps `(workload, mode)`
-//! requests onto the algorithm implementations with the right evaluation
-//! strategy; and a [`serve`] line-protocol request loop (the `sfut serve`
-//! subcommand) so workloads can be driven externally.
+//! owns the configuration, the optional PJRT engine, the metrics
+//! registry, and a [`ShardSet`] of executor-pool groups; a router
+//! ([`Pipeline::run`]) that maps `(workload, mode)` requests onto the
+//! algorithm implementations with the right evaluation strategy; and a
+//! [`serve`] line-protocol request loop (the `sfut serve` subcommand,
+//! stdio or TCP via [`TcpServer`]) so workloads can be driven externally.
 //!
-//! Every run executes on a dedicated driver thread with the configured
-//! stack size (deep Lazy filter chains need it), with per-stage timing
-//! published to the metrics registry.
+//! Request flow:
+//!
+//! 1. **Route** — [`ShardSet::route`] picks a shard by workload-affinity
+//!    hash with least-loaded fallback (see [`shard`]'s docs). The lease
+//!    holds the shard's load slot for the job's duration.
+//! 2. **Execute** — the workload body runs on a dedicated driver thread
+//!    with the configured stack size (deep Lazy filter chains need it);
+//!    `par(k)` jobs draw a warm, reusable `k`-worker pool from the shard
+//!    instead of spinning one up per job. Chunked workloads size their
+//!    blocks adaptively by default ([`crate::config::ChunkPolicy`]),
+//!    with the probe cost memoized per (shard, workload).
+//! 3. **Report** — per-stage timing, `shard.<id>.*` executor gauges, and
+//!    the job's shard + steal counters land in the metrics registry and
+//!    the [`JobResult`] line (`shard=… steals=…`).
 
 mod job;
 mod router;
 mod server;
+pub mod shard;
 mod tcp;
 
 pub use job::{JobRequest, JobResult, ResultDetail};
 pub use router::Pipeline;
 pub use server::serve;
+pub use shard::{Shard, ShardLease, ShardSet};
 pub use tcp::TcpServer;
 
 #[cfg(test)]
@@ -96,6 +110,39 @@ mod tests {
         let snap = pipeline.metrics().snapshot();
         assert_eq!(snap.counters["jobs.completed"], 2);
         assert!(snap.timers.contains_key("job.primes.seq"));
+        // Per-shard executor stats are published after every job.
+        assert!(snap.gauges.contains_key("shard.0.tasks_executed"));
+        assert!(snap.gauges.contains_key("shard.0.jobs_routed"));
+    }
+
+    #[test]
+    fn jobs_report_their_shard_and_respect_affinity() {
+        let mut cfg = small_config();
+        cfg.shards = 2;
+        let pipeline = Pipeline::new(cfg).unwrap();
+        let home = pipeline.shards().home_index(Workload::Primes);
+        let req = JobRequest { workload: Workload::Primes, mode: Mode::Par(2) };
+        for _ in 0..3 {
+            let res = pipeline.run(&req).unwrap();
+            assert!(res.verified);
+            assert_eq!(res.shard, home, "sequential jobs must stick to the home shard");
+        }
+        assert_eq!(pipeline.shards().shard(home).jobs_routed(), 3);
+        // The shard's pool was reused, not respawned: one pool executed
+        // every task of all three jobs.
+        let stats = pipeline.shards().shard(home).stats();
+        assert!(stats.tasks_executed > 0);
+    }
+
+    #[test]
+    fn fixed_chunk_policy_still_verifies() {
+        let mut cfg = small_config();
+        cfg.chunk_policy = crate::config::ChunkPolicy::Fixed;
+        let pipeline = Pipeline::new(cfg).unwrap();
+        for w in [Workload::Chunked, Workload::PrimesChunked] {
+            let res = pipeline.run(&JobRequest { workload: w, mode: Mode::Par(2) }).unwrap();
+            assert!(res.verified, "{} failed under fixed chunking", w.name());
+        }
     }
 
     #[test]

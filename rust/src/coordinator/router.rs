@@ -1,35 +1,44 @@
-//! The pipeline router: `(workload, mode)` → algorithm × strategy.
+//! The pipeline router: `(workload, mode)` → algorithm × strategy ×
+//! shard.
 //!
 //! Monomorphization meets runtime dispatch here: the algorithms are
-//! generic over [`Eval`], the request is a runtime value, so the router
-//! holds the `match` that instantiates the right combination — exactly
-//! the substitution the paper performs by editing one import.
+//! generic over [`Eval`](crate::susp::Eval), the request is a runtime
+//! value, so the router holds the `match` that instantiates the right
+//! combination — exactly the substitution the paper performs by editing
+//! one import.
+//!
+//! Since the coordinator went multi-shard, the router also decides
+//! *where*: every request is leased to a [`Shard`] (affinity hash +
+//! least-loaded fallback), draws its `par(k)` pool from that shard, and
+//! reports the shard id and steal delta in its [`JobResult`].
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
-use log::{debug, info};
+use log::{debug, info, warn};
 
 use super::job::{JobRequest, JobResult, ResultDetail};
-use crate::config::{Config, Mode, Workload};
-use crate::exec::{Executor, ExecutorConfig};
+use super::shard::{Shard, ShardSet};
+use crate::config::{ChunkPolicy, Config, Mode, Workload};
 use crate::metrics::MetricsRegistry;
 use crate::poly::{
-    chunked_times, list_times_par, list_times_seq, stream_times, BlockMultiplier, Coeff,
-    Polynomial, RustMultiplier,
+    chunked_times, chunked_times_adaptive_cached, list_times_par, list_times_seq, stream_times,
+    BlockMultiplier, Coeff, Polynomial, RustMultiplier,
 };
-use crate::runtime::{KernelMultiplier, XlaEngine};
-use crate::sieve;
+use crate::runtime::{KernelMultiplier, KernelSiever, XlaEngine};
+use crate::sieve::{self, BlockSiever, RustSiever};
 use crate::susp::{FutureEval, LazyEval, StrictEval};
 use crate::workload::{fateman_pair, fateman_pair_big, Sizes};
 
-/// Long-lived coordinator state: config, optional PJRT engine, metrics.
+/// Long-lived coordinator state: config, optional PJRT engine, metrics,
+/// and the shard group.
 pub struct Pipeline {
     cfg: Config,
     sizes: Sizes,
     engine: Option<Arc<XlaEngine>>,
     metrics: MetricsRegistry,
+    shards: ShardSet,
 }
 
 impl Pipeline {
@@ -48,8 +57,23 @@ impl Pipeline {
                   cfg.use_kernel, cfg.artifacts_dir);
             None
         };
+        if cfg.chunk_policy == ChunkPolicy::Adaptive
+            && cfg.chunk_size != Config::default().chunk_size
+        {
+            warn!(
+                "chunk_size={} is ignored under chunk_policy=adaptive (the sizer probes \
+                 its own edge); set chunk_policy=fixed to pin it",
+                cfg.chunk_size
+            );
+        }
         let sizes = Sizes::from_config(&cfg);
-        Ok(Pipeline { cfg, sizes, engine, metrics: MetricsRegistry::new() })
+        let shards = ShardSet::new(&cfg);
+        info!("coordinator sharded {} way(s)", shards.len());
+        let metrics = MetricsRegistry::new();
+        // Register every shard's gauges up front; per-job publishing
+        // only refreshes the routed shard.
+        shards.publish(&metrics);
+        Ok(Pipeline { cfg, sizes, engine, metrics, shards })
     }
 
     pub fn config(&self) -> &Config {
@@ -64,11 +88,24 @@ impl Pipeline {
         self.engine.as_ref()
     }
 
+    /// The coordinator's shard group.
+    pub fn shards(&self) -> &ShardSet {
+        &self.shards
+    }
+
     /// The block multiplier chunked workloads will use.
     pub fn multiplier(&self) -> Arc<dyn BlockMultiplier> {
         match &self.engine {
             Some(engine) => Arc::new(KernelMultiplier::new(Arc::clone(engine))),
             None => Arc::new(RustMultiplier),
+        }
+    }
+
+    /// The block siever the chunked sieve will use.
+    pub fn siever(&self) -> Arc<dyn BlockSiever> {
+        match &self.engine {
+            Some(engine) => Arc::new(KernelSiever::new(Arc::clone(engine))),
+            None => Arc::new(RustSiever),
         }
     }
 
@@ -88,19 +125,32 @@ impl Pipeline {
         let label = req.label();
         let timer = self.metrics.timer(&format!("job.{label}"));
 
+        let lease = self.shards.route(req.workload);
+        let shard = Arc::clone(lease.shard());
+        let steals_before = shard.stats().tasks_stolen;
+
         let started = Instant::now();
-        let detail = self.run_on_driver(req)?;
+        let detail = self.run_on_driver(req, &shard)?;
         let took = started.elapsed();
+        drop(lease);
 
         timer.record(took);
-        debug!("job {label} finished in {:.3}s", took.as_secs_f64());
+        debug!(
+            "job {label} finished in {:.3}s on shard {}",
+            took.as_secs_f64(),
+            shard.id()
+        );
         self.metrics.counter("jobs.completed").inc();
+        let stats_after = shard.stats();
+        let steals = stats_after.tasks_stolen.saturating_sub(steals_before);
+        shard.publish_stats(&self.metrics, &stats_after);
         let verified = !verify || self.verify(req.workload, &detail);
         if !verified {
             self.metrics.counter("jobs.verification_failed").inc();
         }
         let backend = match req.workload {
             Workload::Chunked | Workload::ChunkedBig => self.multiplier().name().to_string(),
+            Workload::PrimesChunked => self.siever().name().to_string(),
             _ => "-".to_string(),
         };
         Ok(JobResult {
@@ -109,17 +159,19 @@ impl Pipeline {
             detail,
             verified,
             backend,
+            shard: shard.id(),
+            steals,
         })
     }
 
     /// Execute the workload body on a thread with the configured stack.
-    fn run_on_driver(&self, req: JobRequest) -> Result<ResultDetail> {
+    fn run_on_driver(&self, req: JobRequest, shard: &Arc<Shard>) -> Result<ResultDetail> {
         let stack = self.cfg.stack_size;
         std::thread::scope(|s| {
             std::thread::Builder::new()
                 .name(format!("sfut-driver-{}", req.label()))
                 .stack_size(stack)
-                .spawn_scoped(s, || self.workload_body(req))
+                .spawn_scoped(s, || self.workload_body(req, shard.as_ref()))
                 .context("spawning driver thread")?
                 .join()
                 .map_err(|p| {
@@ -131,20 +183,17 @@ impl Pipeline {
         })
     }
 
-    fn executor(&self, n: usize) -> Executor {
-        let mut cfg = ExecutorConfig::with_parallelism(n);
-        cfg.stack_size = self.cfg.stack_size;
-        Executor::with_config(cfg)
-    }
-
-    fn workload_body(&self, req: JobRequest) -> Result<ResultDetail> {
+    fn workload_body(&self, req: JobRequest, shard: &Shard) -> Result<ResultDetail> {
         let sizes = &self.sizes;
         match req.workload {
-            Workload::Primes => Ok(self.run_sieve(req.mode, sizes.primes_n)),
-            Workload::PrimesX3 => Ok(self.run_sieve(req.mode, sizes.primes_x3_n)),
+            Workload::Primes => Ok(self.run_sieve(shard, req.mode, sizes.primes_n)),
+            Workload::PrimesX3 => Ok(self.run_sieve(shard, req.mode, sizes.primes_x3_n)),
+            Workload::PrimesChunked => {
+                Ok(self.run_sieve_chunked(shard, req.mode, sizes.primes_n))
+            }
             Workload::Stream => {
                 let (p, q) = fateman_pair(sizes.fateman_vars, sizes.fateman_degree);
-                let prod = self.run_stream_times(req.mode, &p, &q);
+                let prod = self.run_stream_times(shard, req.mode, &p, &q);
                 Ok(poly_detail(&prod))
             }
             Workload::StreamBig => {
@@ -153,12 +202,12 @@ impl Pipeline {
                     sizes.fateman_degree,
                     sizes.big_factor,
                 );
-                let prod = self.run_stream_times(req.mode, &p, &q);
+                let prod = self.run_stream_times(shard, req.mode, &p, &q);
                 Ok(poly_detail(&prod))
             }
             Workload::List => {
                 let (p, q) = fateman_pair(sizes.fateman_vars, sizes.fateman_degree);
-                let prod = self.run_list_times(req.mode, &p, &q);
+                let prod = self.run_list_times(shard, req.mode, &p, &q);
                 Ok(poly_detail(&prod))
             }
             Workload::ListBig => {
@@ -167,12 +216,12 @@ impl Pipeline {
                     sizes.fateman_degree,
                     sizes.big_factor,
                 );
-                let prod = self.run_list_times(req.mode, &p, &q);
+                let prod = self.run_list_times(shard, req.mode, &p, &q);
                 Ok(poly_detail(&prod))
             }
             Workload::Chunked => {
                 let (p, q) = fateman_pair(sizes.fateman_vars, sizes.fateman_degree);
-                let prod = self.run_chunked_times(req.mode, &p, &q);
+                let prod = self.run_chunked_times(shard, req.workload, req.mode, &p, &q);
                 Ok(poly_detail(&prod))
             }
             Workload::ChunkedBig => {
@@ -181,17 +230,62 @@ impl Pipeline {
                     sizes.fateman_degree,
                     sizes.big_factor,
                 );
-                let prod = self.run_chunked_times(req.mode, &p, &q);
+                let prod = self.run_chunked_times(shard, req.workload, req.mode, &p, &q);
                 Ok(poly_detail(&prod))
             }
         }
     }
 
-    fn run_sieve(&self, mode: Mode, n: u32) -> ResultDetail {
+    fn run_sieve(&self, shard: &Shard, mode: Mode, n: u32) -> ResultDetail {
         let primes = match mode {
             Mode::Seq => sieve::primes(LazyEval, n),
             Mode::Strict => sieve::primes(StrictEval, n),
-            Mode::Par(k) => sieve::primes(FutureEval::new(self.executor(k)), n),
+            Mode::Par(k) => sieve::primes(FutureEval::new(shard.executor(k)), n),
+        };
+        ResultDetail::Primes {
+            count: primes.len(),
+            largest: primes.last().copied().unwrap_or(0),
+        }
+    }
+
+    /// The §7 block-granular sieve. Adaptive chunking by default, with
+    /// the probe cost cached on the shard; `ChunkPolicy::Fixed` keeps
+    /// the constant `chunk_size` for A/B runs.
+    fn run_sieve_chunked(&self, shard: &Shard, mode: Mode, n: u32) -> ResultDetail {
+        let siever = self.siever();
+        let primes = match self.cfg.chunk_policy {
+            ChunkPolicy::Fixed => {
+                let chunk = self.sizes.chunk_size;
+                match mode {
+                    Mode::Seq => sieve::chunked_primes_with_runtime(LazyEval, n, chunk, siever),
+                    Mode::Strict => {
+                        sieve::chunked_primes_with_runtime(StrictEval, n, chunk, siever)
+                    }
+                    Mode::Par(k) => sieve::chunked_primes_with_runtime(
+                        FutureEval::new(shard.executor(k)),
+                        n,
+                        chunk,
+                        siever,
+                    ),
+                }
+            }
+            ChunkPolicy::Adaptive => {
+                let cost = shard.cost_cache(Workload::PrimesChunked.name());
+                match mode {
+                    Mode::Seq => {
+                        sieve::chunked_primes_adaptive_cached(LazyEval, n, siever, &cost)
+                    }
+                    Mode::Strict => {
+                        sieve::chunked_primes_adaptive_cached(StrictEval, n, siever, &cost)
+                    }
+                    Mode::Par(k) => sieve::chunked_primes_adaptive_cached(
+                        FutureEval::new(shard.executor(k)),
+                        n,
+                        siever,
+                        &cost,
+                    ),
+                }
+            }
         };
         ResultDetail::Primes {
             count: primes.len(),
@@ -201,6 +295,7 @@ impl Pipeline {
 
     fn run_stream_times<C: Coeff>(
         &self,
+        shard: &Shard,
         mode: Mode,
         p: &Polynomial<C>,
         q: &Polynomial<C>,
@@ -208,35 +303,62 @@ impl Pipeline {
         match mode {
             Mode::Seq => stream_times(&LazyEval, p, q),
             Mode::Strict => stream_times(&StrictEval, p, q),
-            Mode::Par(k) => stream_times(&FutureEval::new(self.executor(k)), p, q),
+            Mode::Par(k) => stream_times(&FutureEval::new(shard.executor(k)), p, q),
         }
     }
 
     fn run_list_times<C: Coeff>(
         &self,
+        shard: &Shard,
         mode: Mode,
         p: &Polynomial<C>,
         q: &Polynomial<C>,
     ) -> Polynomial<C> {
         match mode {
             Mode::Seq | Mode::Strict => list_times_seq(p, q),
-            Mode::Par(k) => list_times_par(&self.executor(k), p, q),
+            Mode::Par(k) => list_times_par(&shard.executor(k), p, q),
         }
     }
 
+    /// Chunked multiply. Adaptive block edges by default (probe cost
+    /// cached per (shard, workload)); `ChunkPolicy::Fixed` pins
+    /// `chunk_size` — the pre-sharding behaviour, kept for A/B (the A1
+    /// chunk-sweep ablation sets it explicitly).
     fn run_chunked_times<C: Coeff>(
         &self,
+        shard: &Shard,
+        workload: Workload,
         mode: Mode,
         p: &Polynomial<C>,
         q: &Polynomial<C>,
     ) -> Polynomial<C> {
         let mult = self.multiplier();
-        let chunk = self.sizes.chunk_size;
-        match mode {
-            Mode::Seq => chunked_times(&LazyEval, p, q, chunk, mult),
-            Mode::Strict => chunked_times(&StrictEval, p, q, chunk, mult),
-            Mode::Par(k) => {
-                chunked_times(&FutureEval::new(self.executor(k)), p, q, chunk, mult)
+        match self.cfg.chunk_policy {
+            ChunkPolicy::Fixed => {
+                let chunk = self.sizes.chunk_size;
+                match mode {
+                    Mode::Seq => chunked_times(&LazyEval, p, q, chunk, mult),
+                    Mode::Strict => chunked_times(&StrictEval, p, q, chunk, mult),
+                    Mode::Par(k) => {
+                        chunked_times(&FutureEval::new(shard.executor(k)), p, q, chunk, mult)
+                    }
+                }
+            }
+            ChunkPolicy::Adaptive => {
+                let cost = shard.cost_cache(workload.name());
+                match mode {
+                    Mode::Seq => chunked_times_adaptive_cached(&LazyEval, p, q, mult, &cost),
+                    Mode::Strict => {
+                        chunked_times_adaptive_cached(&StrictEval, p, q, mult, &cost)
+                    }
+                    Mode::Par(k) => chunked_times_adaptive_cached(
+                        &FutureEval::new(shard.executor(k)),
+                        p,
+                        q,
+                        mult,
+                        &cost,
+                    ),
+                }
             }
         }
     }
@@ -246,7 +368,10 @@ impl Pipeline {
     fn verify(&self, workload: Workload, detail: &ResultDetail) -> bool {
         let sizes = &self.sizes;
         match (workload, detail) {
-            (Workload::Primes, ResultDetail::Primes { count, largest }) => {
+            (
+                Workload::Primes | Workload::PrimesChunked,
+                ResultDetail::Primes { count, largest },
+            ) => {
                 let oracle = sieve::eratosthenes(sizes.primes_n);
                 oracle.len() == *count && oracle.last().copied().unwrap_or(0) == *largest
             }

@@ -96,6 +96,7 @@ mod tests {
         assert!(out.contains("ok workload=primes mode=seq"));
         assert!(out.contains("ok workload=stream mode=par(2)"));
         assert!(out.contains("verified=true"));
+        assert!(out.contains("shard="), "results must report their shard");
     }
 
     #[test]

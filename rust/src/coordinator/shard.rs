@@ -1,0 +1,484 @@
+//! Coordinator sharding: N independent executor-pool groups behind one
+//! [`Pipeline`](super::Pipeline).
+//!
+//! PR 1 made a *single* executor fast; under concurrent traffic one pool
+//! still serializes every job through one injector and one park condvar.
+//! A [`ShardSet`] splits the coordinator into [`Shard`]s, each owning:
+//!
+//! * its **executor pools**, keyed by requested parallelism and created
+//!   lazily on first use — repeated jobs reuse warm pools instead of
+//!   paying thread spin-up per job (the pre-shard `Pipeline` built a
+//!   fresh `Executor` for every `par(k)` request);
+//! * its **probe-cost caches** ([`CostCache`]), one per workload, so the
+//!   adaptive chunk sizer measures per-element cost once per
+//!   (shard, workload) instead of once per job;
+//! * its **load/routing counters** (`inflight`, `jobs_routed`,
+//!   `affinity_hits`).
+//!
+//! Routing is **workload-affinity first, least-loaded fallback**: a
+//! request's home shard is `fnv1a(workload name) % N`, which keeps a
+//! workload's warm pools and cost caches hot; when the home shard is
+//! busier than the least-loaded shard the request spills there instead.
+//! Ties favor the home shard, so routing is stable on an idle set.
+//!
+//! Per-shard [`ExecutorStats`] aggregates are published into the
+//! metrics registry (`shard.<id>.*` gauges) after every job.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::{Config, Workload};
+use crate::exec::{Executor, ExecutorConfig, ExecutorStats};
+use crate::metrics::MetricsRegistry;
+use crate::stream::CostCache;
+
+/// Most distinct `par(k)` pools a shard keeps warm. Requests name
+/// arbitrary parallelism (the serve protocol accepts any `par(N)`), so
+/// without a bound a client cycling N values would strand unbounded
+/// worker threads; past the cap the least-recently-used pool is evicted
+/// (it drains and shuts down once its in-flight jobs drop their
+/// handles).
+const MAX_POOLS_PER_SHARD: usize = 8;
+
+struct PoolEntry {
+    executor: Executor,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Pools {
+    map: BTreeMap<usize, PoolEntry>,
+    /// Monotonic use tick for LRU eviction.
+    tick: u64,
+    /// Final monotonic counters of evicted pools, folded into
+    /// [`Shard::stats`] so aggregates (and the gauges/steal deltas built
+    /// on them) never go backwards when a pool is evicted. Instantaneous
+    /// fields (`queue_depth`, `live_threads`) stay zero here.
+    retired: ExecutorStats,
+}
+
+/// Add `s`'s monotonic counters into `agg` (instantaneous fields are the
+/// caller's business).
+fn add_monotonic(agg: &mut ExecutorStats, s: &ExecutorStats) {
+    agg.tasks_spawned += s.tasks_spawned;
+    agg.tasks_executed += s.tasks_executed;
+    agg.tasks_panicked += s.tasks_panicked;
+    agg.tasks_stolen += s.tasks_stolen;
+    agg.compensation_threads += s.compensation_threads;
+    agg.blocking_sections += s.blocking_sections;
+}
+
+/// One coordinator shard: executor pools + cost caches + load counters.
+pub struct Shard {
+    id: usize,
+    stack_size: usize,
+    /// Requested parallelism → long-lived pool. Lazily populated (a
+    /// shard that never sees `par(k)` never spawns k workers) and
+    /// LRU-bounded at [`MAX_POOLS_PER_SHARD`].
+    pools: Mutex<Pools>,
+    /// Jobs currently leased to this shard (routing load signal).
+    inflight: AtomicUsize,
+    jobs_routed: AtomicU64,
+    affinity_hits: AtomicU64,
+    /// Workload name → memoized adaptive-chunking probe cost.
+    costs: Mutex<BTreeMap<String, CostCache>>,
+}
+
+impl Shard {
+    fn new(id: usize, stack_size: usize) -> Shard {
+        Shard {
+            id,
+            stack_size,
+            pools: Mutex::new(Pools::default()),
+            inflight: AtomicUsize::new(0),
+            jobs_routed: AtomicU64::new(0),
+            affinity_hits: AtomicU64::new(0),
+            costs: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// The shard's pool for `parallelism` workers, created on first use
+    /// and reused for every later job (same counters, warm threads).
+    /// Keeps at most [`MAX_POOLS_PER_SHARD`] distinct pools, evicting
+    /// the least recently used — an evicted pool finishes its in-flight
+    /// jobs (they hold their own handles) and then shuts down.
+    pub fn executor(&self, parallelism: usize) -> Executor {
+        let parallelism = parallelism.max(1);
+        let mut pools = self.pools.lock().unwrap();
+        pools.tick += 1;
+        let tick = pools.tick;
+        if let Some(entry) = pools.map.get_mut(&parallelism) {
+            entry.last_used = tick;
+            return entry.executor.clone();
+        }
+        if pools.map.len() >= MAX_POOLS_PER_SHARD {
+            let evict = pools
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&k, _)| k);
+            if let Some(k) = evict {
+                if let Some(entry) = pools.map.remove(&k) {
+                    // Fold the evicted pool's counters into the retired
+                    // tally so shard aggregates stay monotonic. (Work it
+                    // finishes after eviction — its in-flight jobs hold
+                    // their own handles — is undercounted, never
+                    // negative.)
+                    let last = entry.executor.stats();
+                    add_monotonic(&mut pools.retired, &last);
+                }
+            }
+        }
+        let mut cfg = ExecutorConfig::with_parallelism(parallelism);
+        cfg.stack_size = self.stack_size;
+        cfg.name = format!("sfut-s{}w", self.id);
+        let executor = Executor::with_config(cfg);
+        pools
+            .map
+            .insert(parallelism, PoolEntry { executor: executor.clone(), last_used: tick });
+        executor
+    }
+
+    /// Distinct pools currently kept warm (≤ [`MAX_POOLS_PER_SHARD`]).
+    pub fn pool_count(&self) -> usize {
+        self.pools.lock().unwrap().map.len()
+    }
+
+    /// The shard's memoized probe cost for `workload` (created empty on
+    /// first request; see [`CostCache`]).
+    pub fn cost_cache(&self, workload: &str) -> CostCache {
+        self.costs
+            .lock()
+            .unwrap()
+            .entry(workload.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Jobs currently leased to this shard.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Total jobs ever routed here.
+    pub fn jobs_routed(&self) -> u64 {
+        self.jobs_routed.load(Ordering::Relaxed)
+    }
+
+    /// Jobs that landed here because this was their affinity home (the
+    /// rest spilled in via least-loaded fallback).
+    pub fn affinity_hits(&self) -> u64 {
+        self.affinity_hits.load(Ordering::Relaxed)
+    }
+
+    /// Publish this shard's aggregates as `shard.<id>.*` gauges. Called
+    /// per job for the routed shard only (O(1) in shard count — a full
+    /// [`ShardSet::publish`] per job would bill every shard's stats
+    /// lock to the job being timed).
+    pub fn publish(&self, metrics: &MetricsRegistry) {
+        let st = self.stats();
+        self.publish_stats(metrics, &st);
+    }
+
+    /// [`Shard::publish`] with an already-aggregated snapshot, so a
+    /// caller that just computed [`Shard::stats`] (e.g. for a steal
+    /// delta) doesn't pay the pool locks twice.
+    pub fn publish_stats(&self, metrics: &MetricsRegistry, st: &ExecutorStats) {
+        let id = self.id;
+        metrics.gauge(&format!("shard.{id}.tasks_executed")).set(st.tasks_executed);
+        metrics.gauge(&format!("shard.{id}.tasks_stolen")).set(st.tasks_stolen);
+        metrics.gauge(&format!("shard.{id}.queue_depth")).set(st.queue_depth as u64);
+        metrics.gauge(&format!("shard.{id}.live_threads")).set(st.live_threads as u64);
+        metrics.gauge(&format!("shard.{id}.inflight")).set(self.inflight() as u64);
+        metrics.gauge(&format!("shard.{id}.jobs_routed")).set(self.jobs_routed());
+        metrics.gauge(&format!("shard.{id}.affinity_hits")).set(self.affinity_hits());
+    }
+
+    /// Aggregate [`ExecutorStats`] over every pool this shard owns,
+    /// plus the retired tallies of evicted pools (monotonic counters
+    /// never go backwards across evictions).
+    pub fn stats(&self) -> ExecutorStats {
+        let pools = self.pools.lock().unwrap();
+        let mut agg = pools.retired.clone();
+        for entry in pools.map.values() {
+            let s = entry.executor.stats();
+            add_monotonic(&mut agg, &s);
+            agg.queue_depth += s.queue_depth;
+            agg.live_threads += s.live_threads;
+        }
+        agg
+    }
+}
+
+/// RAII routing lease: holds the shard's `inflight` slot for the
+/// duration of one job so concurrent routing sees true load.
+pub struct ShardLease {
+    shard: Arc<Shard>,
+}
+
+impl ShardLease {
+    pub fn shard(&self) -> &Arc<Shard> {
+        &self.shard
+    }
+
+    pub fn id(&self) -> usize {
+        self.shard.id
+    }
+}
+
+impl Drop for ShardLease {
+    fn drop(&mut self) {
+        self.shard.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// The coordinator's shard group.
+pub struct ShardSet {
+    shards: Vec<Arc<Shard>>,
+}
+
+impl ShardSet {
+    /// The auto shard count: physical cores / `shard_parallelism`, at
+    /// least 1 (a 1-core box still gets one full shard).
+    pub fn auto_count(shard_parallelism: usize) -> usize {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        (cores / shard_parallelism.max(1)).max(1)
+    }
+
+    /// Build from config: `cfg.shards` shards (0 = [`Self::auto_count`]).
+    pub fn new(cfg: &Config) -> ShardSet {
+        let n = if cfg.shards == 0 {
+            Self::auto_count(cfg.shard_parallelism)
+        } else {
+            cfg.shards
+        };
+        ShardSet {
+            shards: (0..n).map(|id| Arc::new(Shard::new(id, cfg.stack_size))).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    pub fn shard(&self, index: usize) -> &Arc<Shard> {
+        &self.shards[index]
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, Arc<Shard>> {
+        self.shards.iter()
+    }
+
+    /// A workload's affinity home: stable across runs and processes
+    /// (FNV-1a of the workload name), so repeated jobs land where their
+    /// pools and cost caches are warm.
+    pub fn home_index(&self, workload: Workload) -> usize {
+        (fnv1a(workload.name().as_bytes()) % self.shards.len() as u64) as usize
+    }
+
+    /// Route a request: home shard unless a strictly less-loaded shard
+    /// exists (ties keep affinity). Returns the lease that both names
+    /// the shard and holds its load slot.
+    pub fn route(&self, workload: Workload) -> ShardLease {
+        let home = self.home_index(workload);
+        let mut best = home;
+        let mut best_load = self.shards[home].inflight.load(Ordering::Relaxed);
+        for (i, shard) in self.shards.iter().enumerate() {
+            let load = shard.inflight.load(Ordering::Relaxed);
+            if load < best_load {
+                best = i;
+                best_load = load;
+            }
+        }
+        let shard = Arc::clone(&self.shards[best]);
+        shard.inflight.fetch_add(1, Ordering::Relaxed);
+        shard.jobs_routed.fetch_add(1, Ordering::Relaxed);
+        if best == home {
+            shard.affinity_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        ShardLease { shard }
+    }
+
+    /// Per-shard aggregate executor stats, by shard id.
+    pub fn stats(&self) -> Vec<(usize, ExecutorStats)> {
+        self.shards.iter().map(|s| (s.id, s.stats())).collect()
+    }
+
+    /// Publish every shard's aggregates as `shard.<id>.*` gauges
+    /// (startup and snapshot use; the per-job hot path publishes only
+    /// the routed shard via [`Shard::publish`]).
+    pub fn publish(&self, metrics: &MetricsRegistry) {
+        for shard in &self.shards {
+            shard.publish(metrics);
+        }
+    }
+}
+
+/// FNV-1a, 64-bit: tiny, deterministic, good spread on short names.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    hash
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn set_of(n: usize) -> ShardSet {
+        let mut cfg = Config::default();
+        cfg.shards = n;
+        ShardSet::new(&cfg)
+    }
+
+    #[test]
+    fn affinity_is_stable_when_idle() {
+        let set = set_of(4);
+        let home = set.home_index(Workload::Primes);
+        for _ in 0..10 {
+            let lease = set.route(Workload::Primes);
+            assert_eq!(lease.id(), home, "idle routing must stick to the home shard");
+        }
+        // Different workloads may map anywhere, but always in range.
+        for w in Workload::ALL {
+            assert!(set.home_index(w) < 4);
+        }
+    }
+
+    #[test]
+    fn least_loaded_fallback_spills_then_returns() {
+        let set = set_of(2);
+        let home = set.home_index(Workload::Primes);
+        let other = 1 - home;
+        // Home busy, other idle: spill.
+        let lease_home = set.route(Workload::Primes);
+        assert_eq!(lease_home.id(), home);
+        let lease_spill = set.route(Workload::Primes);
+        assert_eq!(lease_spill.id(), other, "busy home must spill to the idle shard");
+        // Both equally busy: tie goes back to home.
+        let lease_tie = set.route(Workload::Primes);
+        assert_eq!(lease_tie.id(), home, "ties must keep affinity");
+        // Dropping leases releases load; routing returns home.
+        drop(lease_home);
+        drop(lease_spill);
+        drop(lease_tie);
+        assert_eq!(set.shard(home).inflight(), 0);
+        assert_eq!(set.shard(other).inflight(), 0);
+        let lease = set.route(Workload::Primes);
+        assert_eq!(lease.id(), home);
+        assert_eq!(set.shard(other).jobs_routed(), 1);
+        assert_eq!(set.shard(other).affinity_hits(), 0, "spill is not an affinity hit");
+    }
+
+    #[test]
+    fn executor_pools_are_reused_across_calls() {
+        let set = set_of(1);
+        let shard = set.shard(0);
+        let a = shard.executor(2);
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let hits = Arc::clone(&hits);
+            a.spawn(move || {
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        a.wait_idle();
+        assert_eq!(hits.load(Ordering::SeqCst), 10);
+        // A second checkout of the same parallelism is the same pool:
+        // its counters already include the work above.
+        let b = shard.executor(2);
+        assert_eq!(b.stats().tasks_executed, 10);
+        // A different parallelism is a different pool.
+        let c = shard.executor(1);
+        assert_eq!(c.stats().tasks_executed, 0);
+    }
+
+    #[test]
+    fn pool_map_is_lru_bounded() {
+        let set = set_of(1);
+        let shard = set.shard(0);
+        // Distinct parallelism values beyond the cap must evict, not
+        // accumulate (the serve protocol accepts arbitrary par(N)).
+        for k in 1..=MAX_POOLS_PER_SHARD + 3 {
+            let ex = shard.executor(k);
+            ex.spawn(|| {});
+            ex.wait_idle();
+        }
+        assert_eq!(shard.pool_count(), MAX_POOLS_PER_SHARD);
+        // Evicted pools' counters fold into the retired tally: the
+        // shard aggregate stays monotonic and still counts all jobs.
+        assert_eq!(shard.stats().tasks_executed, (MAX_POOLS_PER_SHARD + 3) as u64);
+        // The most recent requests survived; re-requesting the evicted
+        // oldest builds a fresh pool (counters start over).
+        let newest = shard.executor(MAX_POOLS_PER_SHARD + 3);
+        assert_eq!(newest.stats().tasks_executed, 1, "recent pool kept warm");
+        let oldest = shard.executor(1);
+        assert_eq!(oldest.stats().tasks_executed, 0, "evicted pool was rebuilt");
+    }
+
+    #[test]
+    fn stats_aggregate_across_pools_and_publish() {
+        let set = set_of(2);
+        let shard = set.shard(0);
+        let p1 = shard.executor(1);
+        for _ in 0..3 {
+            p1.spawn(|| {});
+        }
+        p1.wait_idle();
+        let p2 = shard.executor(2);
+        for _ in 0..4 {
+            p2.spawn(|| {});
+        }
+        p2.wait_idle();
+        let agg = shard.stats();
+        assert_eq!(agg.tasks_executed, 7, "aggregate must span both pools");
+        assert!(agg.live_threads >= 1);
+
+        let metrics = MetricsRegistry::new();
+        set.publish(&metrics);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.gauges["shard.0.tasks_executed"], 7);
+        assert_eq!(snap.gauges["shard.1.tasks_executed"], 0);
+        assert!(snap.gauges.contains_key("shard.0.tasks_stolen"));
+        assert!(snap.gauges.contains_key("shard.1.jobs_routed"));
+    }
+
+    #[test]
+    fn cost_caches_are_per_workload() {
+        let set = set_of(1);
+        let shard = set.shard(0);
+        let a = shard.cost_cache("chunked");
+        a.get_or_measure(|| std::time::Duration::from_micros(3));
+        // Same workload: shared slot.
+        assert_eq!(
+            shard.cost_cache("chunked").get(),
+            Some(std::time::Duration::from_micros(3))
+        );
+        // Different workload: independent slot.
+        assert_eq!(shard.cost_cache("chunked_big").get(), None);
+    }
+
+    #[test]
+    fn auto_count_is_positive_and_config_driven() {
+        assert!(ShardSet::auto_count(1) >= 1);
+        assert!(ShardSet::auto_count(usize::MAX) == 1);
+        let mut cfg = Config::default();
+        cfg.shards = 0;
+        assert!(ShardSet::new(&cfg).len() >= 1);
+        cfg.shards = 3;
+        assert_eq!(ShardSet::new(&cfg).len(), 3);
+    }
+}

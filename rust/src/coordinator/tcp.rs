@@ -158,6 +158,54 @@ mod tests {
     }
 
     #[test]
+    fn tcp_eight_sessions_across_two_shards() {
+        let mut cfg = Config::default();
+        cfg.primes_n = 300;
+        cfg.fateman_degree = 2;
+        cfg.use_kernel = false;
+        cfg.shards = 2;
+        let p = Arc::new(Pipeline::new(cfg).unwrap());
+        // FNV-1a affinity is deterministic: with two shards, `primes`
+        // and `primes_chunked` have different home shards, so this mix
+        // is guaranteed to exercise both.
+        let home_a = p.shards().home_index(crate::config::Workload::Primes);
+        let home_b = p.shards().home_index(crate::config::Workload::PrimesChunked);
+        assert_ne!(home_a, home_b, "test premise: distinct home shards");
+
+        let server = TcpServer::start(Arc::clone(&p), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        std::thread::scope(|s| {
+            for i in 0..8 {
+                s.spawn(move || {
+                    let script = if i % 2 == 0 {
+                        "run primes par(2)\nrun primes seq\n"
+                    } else {
+                        "run primes_chunked par(2)\nrun primes_chunked seq\n"
+                    };
+                    let lines = session(addr, script);
+                    let oks: Vec<_> = lines.iter().filter(|l| l.starts_with("ok")).collect();
+                    assert_eq!(oks.len(), 2, "{lines:?}");
+                    for l in oks {
+                        assert!(l.contains("verified=true"), "{l}");
+                        assert!(l.contains("shard="), "{l}");
+                    }
+                });
+            }
+        });
+        assert_eq!(p.metrics().snapshot().counters["jobs.completed"], 16);
+        assert!(server.sessions() >= 8);
+        // Both shards actually served traffic (affinity guarantees it
+        // even without fallback spill).
+        let routed: Vec<u64> = p.shards().iter().map(|s| s.jobs_routed()).collect();
+        assert!(
+            routed.iter().filter(|&&r| r > 0).count() >= 2,
+            "expected ≥2 active shards, got {routed:?}"
+        );
+        // All leases returned.
+        assert!(p.shards().iter().all(|s| s.inflight() == 0));
+    }
+
+    #[test]
     fn tcp_shutdown_stops_accepting() {
         let mut server = TcpServer::start(pipeline(), "127.0.0.1:0").unwrap();
         let addr = server.local_addr();

@@ -47,7 +47,20 @@
 //! * **Adaptive chunking** ([`stream::ChunkSizer`]) — §7's chunk size is
 //!   picked from a *measured* per-element cost and the executor's
 //!   parallelism (`poly::chunked_times_adaptive`,
-//!   `sieve::chunked_primes_adaptive`) instead of a fixed constant.
+//!   `sieve::chunked_primes_adaptive`) instead of a fixed constant. It
+//!   is the coordinator default ([`config::ChunkPolicy`]); the probe
+//!   cost is memoized per (shard, workload) in a [`stream::CostCache`]
+//!   so repeated jobs skip it.
+//! * **Sharded coordinator** ([`coordinator::ShardSet`]) — concurrent
+//!   traffic fans out over N executor-pool shards (workload-affinity
+//!   hash, least-loaded fallback, warm pool reuse instead of
+//!   pool-per-job). Per-shard `ExecutorStats` surface as
+//!   `shard.<id>.*` gauges, and every `JobResult` reports its shard and
+//!   steal counters. `cargo bench --bench pipeline_throughput` records
+//!   jobs/sec + p50/p95 latency at shards ∈ {1, 2, N} into
+//!   `BENCH_pipeline.json`, which CI's `bench-gate` job enforces
+//!   against (>25% throughput regressions fail; see
+//!   `ci/check_bench.sh` and `sfut check-bench`).
 
 pub mod bench_harness;
 pub mod bigint;

@@ -7,6 +7,7 @@
 //! sfut fig4 [options]                      regenerate Figure 4
 //! sfut serve [options]                     line-protocol request loop on stdio
 //! sfut info [options]                      platform / artifact / config report
+//! sfut check-bench <baseline> <current>    perf-regression gate on BENCH_pipeline.json
 //!
 //! options:
 //!   --config <file>      TOML-subset config file
@@ -14,6 +15,7 @@
 //!   --scale <f>          shorthand for --set scale=<f>
 //!   --no-kernel          shorthand for --set use_kernel=false
 //!   --samples <n>        bench samples per cell
+//!   --threshold <f>      check-bench regression tolerance (default 0.25)
 //! ```
 //!
 //! (clap is unavailable offline; parsing is hand-rolled and strict —
@@ -33,6 +35,7 @@ struct Cli {
     positional: Vec<String>,
     config_file: Option<PathBuf>,
     overrides: Vec<(String, String)>,
+    threshold: Option<f64>,
 }
 
 fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
@@ -42,6 +45,7 @@ fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
         positional: Vec::new(),
         config_file: None,
         overrides: Vec::new(),
+        threshold: None,
     };
     while let Some(arg) = args.next() {
         match arg.as_str() {
@@ -65,9 +69,22 @@ fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
             "--no-kernel" => {
                 cli.overrides.push(("use_kernel".to_string(), "false".to_string()));
             }
+            "--threshold" => {
+                let v = args.next().context("--threshold needs a number in (0, 1)")?;
+                let t: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad --threshold value: {v}"))?;
+                if !(t > 0.0 && t < 1.0) {
+                    bail!("--threshold must be in (0, 1), got {v}");
+                }
+                cli.threshold = Some(t);
+            }
             other if other.starts_with("--") => bail!("unknown flag: {other}"),
             other => cli.positional.push(other.to_string()),
         }
+    }
+    if cli.threshold.is_some() && cli.command != "check-bench" {
+        bail!("--threshold only applies to check-bench");
     }
     Ok(cli)
 }
@@ -142,6 +159,40 @@ fn real_main() -> Result<()> {
             eprintln!("served {jobs} jobs");
             Ok(())
         }
+        "check-bench" => {
+            if cli.positional.len() != 2 {
+                bail!("usage: sfut check-bench <baseline.json> <current.json> [--threshold 0.25]");
+            }
+            let threshold = cli.threshold.unwrap_or(0.25);
+            let baseline = std::fs::read_to_string(&cli.positional[0])
+                .with_context(|| format!("reading baseline {}", cli.positional[0]))?;
+            let current = std::fs::read_to_string(&cli.positional[1])
+                .with_context(|| format!("reading current {}", cli.positional[1]))?;
+            use stream_future::bench_harness::pipeline_bench::{gate, GateOutcome};
+            match gate(&baseline, &current, threshold).map_err(|e| anyhow::anyhow!("{e}"))? {
+                GateOutcome::Passed { cells } => {
+                    println!(
+                        "bench gate PASSED: {cells} cell(s) within {:.0}% of baseline",
+                        threshold * 100.0
+                    );
+                    Ok(())
+                }
+                GateOutcome::Skipped { reason } => {
+                    println!("bench gate SKIPPED: {reason}");
+                    Ok(())
+                }
+                GateOutcome::Failed { regressions } => {
+                    for r in &regressions {
+                        eprintln!("REGRESSION: {r}");
+                    }
+                    bail!(
+                        "bench gate FAILED: {} cell(s) regressed beyond {:.0}%",
+                        regressions.len(),
+                        threshold * 100.0
+                    );
+                }
+            }
+        }
         "info" => {
             let cfg = load_config(&cli)?;
             println!("config: {cfg:#?}");
@@ -173,9 +224,12 @@ fn real_main() -> Result<()> {
                  \x20 fig4                    regenerate Figure 4 (polynomial chart)\n\
                  \x20 serve                   request loop on stdin/stdout\n\
                  \x20 info                    platform / artifact / config report\n\
+                 \x20 check-bench <a> <b>     compare BENCH_pipeline.json runs (CI perf gate)\n\
                  \n\
-                 options: --config <file> | --set k=v | --scale <f> | --samples <n> | --no-kernel\n\
-                 workloads: primes primes_x3 stream stream_big list list_big chunked chunked_big\n\
+                 options: --config <file> | --set k=v | --scale <f> | --samples <n> | \
+                 --no-kernel | --threshold <f>\n\
+                 workloads: primes primes_x3 primes_chunked stream stream_big list list_big \
+                 chunked chunked_big\n\
                  modes: seq strict par(N)"
             );
             Ok(())
@@ -205,6 +259,20 @@ mod tests {
     fn rejects_unknown_flags() {
         assert!(parse_args(args("run --frobnicate")).is_err());
         assert!(parse_args(args("table1 --set novalue")).is_err());
+    }
+
+    #[test]
+    fn parses_check_bench_command() {
+        let cli = parse_args(args("check-bench a.json b.json --threshold 0.4")).unwrap();
+        assert_eq!(cli.command, "check-bench");
+        assert_eq!(cli.positional, vec!["a.json", "b.json"]);
+        assert_eq!(cli.threshold, Some(0.4));
+        assert!(parse_args(args("check-bench a b --threshold 1.5")).is_err());
+        assert!(parse_args(args("check-bench a b --threshold soon")).is_err());
+        assert!(
+            parse_args(args("run primes seq --threshold 0.1")).is_err(),
+            "--threshold must be rejected outside check-bench"
+        );
     }
 
     #[test]

@@ -19,7 +19,7 @@
 use std::sync::Arc;
 
 use super::{Coeff, Monomial, Polynomial, Term};
-use crate::stream::{ChunkSizer, Stream};
+use crate::stream::{ChunkSizer, CostCache, Stream};
 use crate::susp::Eval;
 
 /// A dense block of terms in struct-of-arrays layout, matching the AOT
@@ -182,6 +182,21 @@ pub fn adaptive_poly_chunk<C: Coeff>(
     sizer: &ChunkSizer,
     multiplier: &dyn BlockMultiplier,
 ) -> usize {
+    adaptive_poly_chunk_cached(x, y, parallelism, sizer, multiplier, &CostCache::new())
+}
+
+/// [`adaptive_poly_chunk`] with the per-pair probe memoized in `cost`:
+/// the first call through a given cache measures through the real
+/// multiplier, repeated jobs (each coordinator shard keeps one cache per
+/// workload) reuse the measurement and skip the probe entirely.
+pub fn adaptive_poly_chunk_cached<C: Coeff>(
+    x: &Polynomial<C>,
+    y: &Polynomial<C>,
+    parallelism: usize,
+    sizer: &ChunkSizer,
+    multiplier: &dyn BlockMultiplier,
+    cost: &CostCache,
+) -> usize {
     let (nx, ny) = (x.terms().len(), y.terms().len());
     let hi = sizer
         .max_chunk
@@ -193,11 +208,13 @@ pub fn adaptive_poly_chunk<C: Coeff>(
 
     // Probe a small sample block pair through the real code path.
     let nvars = x.nvars();
-    let sx = Arc::new(x.terms()[..nx.min(8)].to_vec());
-    let sy = Arc::new(y.terms()[..ny.min(8)].to_vec());
-    let pairs = sx.len() * sy.len();
-    let per_pair = ChunkSizer::probe_cost(pairs, || {
-        std::hint::black_box(block_pair_product(nvars, &sx, &sy, multiplier));
+    let per_pair = cost.get_or_measure(|| {
+        let sx = Arc::new(x.terms()[..nx.min(8)].to_vec());
+        let sy = Arc::new(y.terms()[..ny.min(8)].to_vec());
+        let pairs = sx.len() * sy.len();
+        ChunkSizer::probe_cost(pairs, || {
+            std::hint::black_box(block_pair_product(nvars, &sx, &sy, multiplier));
+        })
     });
 
     // One task covers chunk² pairs: chunk = sqrt(target / per_pair).
@@ -228,9 +245,27 @@ pub fn chunked_times_adaptive<C: Coeff, E: Eval>(
     y: &Polynomial<C>,
     multiplier: Arc<dyn BlockMultiplier>,
 ) -> Polynomial<C> {
+    chunked_times_adaptive_cached(eval, x, y, multiplier, &CostCache::new())
+}
+
+/// [`chunked_times_adaptive`] with the probe memoized in `cost` — the
+/// coordinator's entry point for repeated jobs on a shard.
+pub fn chunked_times_adaptive_cached<C: Coeff, E: Eval>(
+    eval: &E,
+    x: &Polynomial<C>,
+    y: &Polynomial<C>,
+    multiplier: Arc<dyn BlockMultiplier>,
+    cost: &CostCache,
+) -> Polynomial<C> {
     let parallelism = eval.executor().map(|e| e.parallelism()).unwrap_or(1);
-    let chunk =
-        adaptive_poly_chunk(x, y, parallelism, &ChunkSizer::default(), &*multiplier);
+    let chunk = adaptive_poly_chunk_cached(
+        x,
+        y,
+        parallelism,
+        &ChunkSizer::default(),
+        &*multiplier,
+        cost,
+    );
     chunked_times(eval, x, y, chunk, multiplier)
 }
 
@@ -370,6 +405,33 @@ mod tests {
         let eval = FutureEval::new(ex);
         let got = chunked_times_adaptive(&eval, &a, &b, Arc::new(RustMultiplier));
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn cached_adaptive_reuses_probe_cost() {
+        let a = p("1 + x + y + z").pow(4);
+        let b = a.add(&Polynomial::one(3));
+        let want = a.mul(&b);
+        let cache = crate::stream::CostCache::new();
+        let got = chunked_times_adaptive_cached(&LazyEval, &a, &b, Arc::new(RustMultiplier), &cache);
+        assert_eq!(got, want);
+        let first_cost = cache.get().expect("first job seeds the cache");
+        let got = chunked_times_adaptive_cached(&LazyEval, &a, &b, Arc::new(RustMultiplier), &cache);
+        assert_eq!(got, want);
+        assert_eq!(cache.get(), Some(first_cost), "repeat jobs must not re-probe");
+        // A pre-seeded cache bypasses the probe entirely and still picks
+        // a sane chunk.
+        let seeded = crate::stream::CostCache::new();
+        let _ = seeded.get_or_measure(|| std::time::Duration::from_micros(1));
+        let chunk = adaptive_poly_chunk_cached(
+            &a,
+            &b,
+            2,
+            &crate::stream::ChunkSizer::default(),
+            &RustMultiplier,
+            &seeded,
+        );
+        assert!(chunk >= 1);
     }
 
     #[test]

@@ -31,8 +31,8 @@ mod ring;
 pub mod stream_mul;
 
 pub use chunked_mul::{
-    adaptive_poly_chunk, chunked_times, chunked_times_adaptive, BlockMultiplier, RustMultiplier,
-    TermBlock,
+    adaptive_poly_chunk, adaptive_poly_chunk_cached, chunked_times, chunked_times_adaptive,
+    chunked_times_adaptive_cached, BlockMultiplier, RustMultiplier, TermBlock,
 };
 pub use division::FieldCoeff;
 pub use list_mul::{list_times_par, list_times_seq};

@@ -22,7 +22,7 @@
 
 use std::sync::Arc;
 
-use crate::stream::{Chunk, ChunkSizer, Stream};
+use crate::stream::{Chunk, ChunkSizer, CostCache, Stream};
 use crate::susp::Eval;
 
 /// Strategy for the dense per-block divisibility test.
@@ -134,8 +134,10 @@ fn seed_primes(n: u32) -> (u32, Vec<u32>) {
 }
 
 /// Chunk pick given an already-computed seed: probe the per-candidate
-/// cost on a sample block, then let [`ChunkSizer`] balance task grain
-/// against worker coverage. Caller guarantees `seed_hi < n`.
+/// cost on a sample block (memoized in `cost` — pass a fresh
+/// [`CostCache`] to force a measurement), then let [`ChunkSizer`]
+/// balance task grain against worker coverage. Caller guarantees
+/// `seed_hi < n`.
 fn pick_sieve_chunk(
     n: u32,
     seed_hi: u32,
@@ -143,12 +145,15 @@ fn pick_sieve_chunk(
     parallelism: usize,
     sizer: &ChunkSizer,
     siever: &dyn BlockSiever,
+    cost: &CostCache,
 ) -> usize {
     let span = (n - seed_hi) as usize;
-    let sample_len = span.min(256).max(1);
-    let candidates: Vec<u32> = (seed_hi..seed_hi + sample_len as u32).collect();
-    let per_candidate = ChunkSizer::probe_cost(sample_len, || {
-        std::hint::black_box(siever.survivors(&candidates, seed));
+    let per_candidate = cost.get_or_measure(|| {
+        let sample_len = span.min(256).max(1);
+        let candidates: Vec<u32> = (seed_hi..seed_hi + sample_len as u32).collect();
+        ChunkSizer::probe_cost(sample_len, || {
+            std::hint::black_box(siever.survivors(&candidates, seed));
+        })
     });
     sizer.pick(per_candidate, span, parallelism)
 }
@@ -170,7 +175,7 @@ pub fn adaptive_sieve_chunk(
     if seed_hi >= n {
         return sizer.min_chunk.max(1);
     }
-    pick_sieve_chunk(n, seed_hi, &seed, parallelism, sizer, siever)
+    pick_sieve_chunk(n, seed_hi, &seed, parallelism, sizer, siever, &CostCache::new())
 }
 
 /// Adaptive chunked sieve: one seed sieve, one probe, one fan-out. (The
@@ -181,6 +186,20 @@ pub fn chunked_primes_adaptive<E: Eval>(
     n: u32,
     siever: Arc<dyn BlockSiever>,
 ) -> Vec<u32> {
+    chunked_primes_adaptive_cached(eval, n, siever, &CostCache::new())
+}
+
+/// [`chunked_primes_adaptive`] with the per-candidate probe memoized in
+/// `cost`: the first call through a given cache measures through the
+/// real siever, repeated jobs (the coordinator's steady state — each
+/// shard keeps one cache per workload) reuse the measurement and skip
+/// straight to the fan-out.
+pub fn chunked_primes_adaptive_cached<E: Eval>(
+    eval: E,
+    n: u32,
+    siever: Arc<dyn BlockSiever>,
+    cost: &CostCache,
+) -> Vec<u32> {
     if n <= 2 {
         return Vec::new();
     }
@@ -189,8 +208,15 @@ pub fn chunked_primes_adaptive<E: Eval>(
         return seed.into_iter().filter(|&p| p < n).collect();
     }
     let parallelism = eval.executor().map(|e| e.parallelism()).unwrap_or(1);
-    let chunk =
-        pick_sieve_chunk(n, seed_hi, &seed, parallelism, &ChunkSizer::default(), &*siever);
+    let chunk = pick_sieve_chunk(
+        n,
+        seed_hi,
+        &seed,
+        parallelism,
+        &ChunkSizer::default(),
+        &*siever,
+        cost,
+    );
     fan_out_blocks(eval, n, chunk, seed_hi, Arc::new(seed), siever)
 }
 
@@ -254,6 +280,37 @@ mod tests {
         // Degenerate inputs.
         assert!(chunked_primes_adaptive(LazyEval, 0, Arc::new(RustSiever)).is_empty());
         assert_eq!(chunked_primes_adaptive(LazyEval, 4, Arc::new(RustSiever)), vec![2, 3]);
+    }
+
+    #[test]
+    fn cached_adaptive_probes_once_and_matches_oracle() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        // Counts survivor calls: job one pays fan-out + 1 probe call,
+        // a cached job must pay fan-out only.
+        struct CountingSiever(AtomicUsize);
+        impl BlockSiever for CountingSiever {
+            fn survivors(&self, candidates: &[u32], primes: &[u32]) -> Vec<bool> {
+                self.0.fetch_add(1, Ordering::SeqCst);
+                RustSiever.survivors(candidates, primes)
+            }
+            fn name(&self) -> &'static str {
+                "counting"
+            }
+        }
+
+        let oracle = eratosthenes(10_000);
+        let cache = crate::stream::CostCache::new();
+        let siever = Arc::new(CountingSiever(AtomicUsize::new(0)));
+        let got = chunked_primes_adaptive_cached(LazyEval, 10_000, siever.clone(), &cache);
+        assert_eq!(got, oracle);
+        assert!(cache.get().is_some(), "first job must seed the cache");
+        let calls_after_first = siever.0.load(Ordering::SeqCst);
+        let got = chunked_primes_adaptive_cached(LazyEval, 10_000, siever.clone(), &cache);
+        assert_eq!(got, oracle);
+        let calls_second = siever.0.load(Ordering::SeqCst) - calls_after_first;
+        // The first job paid fan-out + 1 probe; the second only fan-out.
+        assert_eq!(calls_second, calls_after_first - 1, "probe must be cached");
     }
 
     #[test]

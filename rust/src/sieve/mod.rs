@@ -24,8 +24,8 @@ mod chunked;
 mod eratosthenes;
 
 pub use chunked::{
-    adaptive_sieve_chunk, chunked_primes, chunked_primes_adaptive, chunked_primes_with_runtime,
-    BlockSiever, RustSiever,
+    adaptive_sieve_chunk, chunked_primes, chunked_primes_adaptive,
+    chunked_primes_adaptive_cached, chunked_primes_with_runtime, BlockSiever, RustSiever,
 };
 pub use eratosthenes::eratosthenes;
 

@@ -87,6 +87,45 @@ impl ChunkSizer {
     }
 }
 
+/// Shareable memo for one [`ChunkSizer::probe_cost`] measurement.
+///
+/// The probe runs real workload code, so in a long-lived coordinator it
+/// must not be re-paid on every job: each shard keeps one `CostCache`
+/// per workload and the adaptive entry points
+/// (`poly::chunked_times_adaptive_cached`,
+/// `sieve::chunked_primes_adaptive_cached`) probe only on the first job
+/// routed there. Cloning shares the underlying slot.
+#[derive(Debug, Clone, Default)]
+pub struct CostCache {
+    inner: Arc<std::sync::Mutex<Option<Duration>>>,
+}
+
+impl CostCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The cached per-element cost, if one has been measured.
+    pub fn get(&self) -> Option<Duration> {
+        *self.inner.lock().unwrap()
+    }
+
+    /// Return the cached cost, or run `measure` once and cache its
+    /// result. The lock is held across the probe so concurrent first
+    /// jobs do not all pay for it.
+    pub fn get_or_measure(&self, measure: impl FnOnce() -> Duration) -> Duration {
+        let mut slot = self.inner.lock().unwrap();
+        match *slot {
+            Some(cost) => cost,
+            None => {
+                let cost = measure();
+                *slot = Some(cost);
+                cost
+            }
+        }
+    }
+}
+
 /// Stream of blocks with element-level helpers.
 pub struct ChunkedStream<T: Elem, E: Eval> {
     inner: Stream<Chunk<T>, E>,
@@ -328,6 +367,28 @@ mod tests {
         assert_eq!(c, 64);
         let c = sizer.pick(std::time::Duration::from_secs(1), usize::MAX, 1);
         assert_eq!(c, 8);
+    }
+
+    #[test]
+    fn cost_cache_measures_once_and_shares() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let cache = CostCache::new();
+        assert_eq!(cache.get(), None);
+        let probes = AtomicUsize::new(0);
+        let measured = std::time::Duration::from_micros(7);
+        let a = cache.get_or_measure(|| {
+            probes.fetch_add(1, Ordering::SeqCst);
+            measured
+        });
+        // Clones share the slot: no second probe.
+        let b = cache.clone().get_or_measure(|| {
+            probes.fetch_add(1, Ordering::SeqCst);
+            std::time::Duration::from_secs(9)
+        });
+        assert_eq!(a, measured);
+        assert_eq!(b, measured);
+        assert_eq!(probes.load(Ordering::SeqCst), 1);
+        assert_eq!(cache.get(), Some(measured));
     }
 
     #[test]

@@ -24,7 +24,7 @@ mod chunked;
 mod ops;
 mod ops2;
 
-pub use chunked::{Chunk, ChunkSizer, ChunkedStream};
+pub use chunked::{Chunk, ChunkSizer, ChunkedStream, CostCache};
 
 use std::sync::Arc;
 
