@@ -156,8 +156,10 @@ fn main() {
         let b = executor_bench::run(tasks, par, &opts);
         println!(
             "\nscheduler A/B ({tasks} tasks, par({par})):\n\
-             \x20 spawn wave   baseline {:>10.1} tasks/s | work-stealing {:>10.1} tasks/s | speedup {:.2}x\n\
-             \x20 fut force    baseline {:>10.1} tasks/s | work-stealing {:>10.1} tasks/s | speedup {:.2}x\n\
+             \x20 spawn wave   baseline {:>10.1} tasks/s | work-stealing {:>10.1} tasks/s \
+             | speedup {:.2}x\n\
+             \x20 fut force    baseline {:>10.1} tasks/s | work-stealing {:>10.1} tasks/s \
+             | speedup {:.2}x\n\
              \x20 steals (work-stealing): {}   queue-depth p99: {} jobs",
             b.baseline.spawn_wave_tasks_per_sec,
             b.work_stealing.spawn_wave_tasks_per_sec,

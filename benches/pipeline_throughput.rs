@@ -53,8 +53,17 @@ fn main() {
     for p in &bench.points {
         println!(
             "  {:<16} shards={:<2} {:>10.1} jobs/s   p50={:>8.2}ms p95={:>8.2}ms \
-             steals={:<6} verified={}",
-            p.workload, p.shards, p.jobs_per_sec, p.p50_ms, p.p95_ms, p.tasks_stolen, p.verified
+             qwait p50={:>7.2}ms p95={:>7.2}ms shed={:>5.1}% steals={:<6} verified={}",
+            p.workload,
+            p.shards,
+            p.jobs_per_sec,
+            p.p50_ms,
+            p.p95_ms,
+            p.queue_wait_p50_ms,
+            p.queue_wait_p95_ms,
+            p.shed_rate * 100.0,
+            p.tasks_stolen,
+            p.verified
         );
     }
 

@@ -205,7 +205,8 @@ fn json_run(r: &SchedulerRun, indent: &str) -> String {
          {indent}  \"fut_force_tasks_per_sec\": {:.1},\n\
          {indent}  \"tasks_executed\": {},\n\
          {indent}  \"tasks_stolen\": {},\n\
-         {indent}  \"queue_depth\": {{\"samples\": {}, \"mean\": {:.1}, \"p50\": {}, \"p99\": {}, \"max\": {}}}\n\
+         {indent}  \"queue_depth\": {{\"samples\": {}, \"mean\": {:.1}, \
+         \"p50\": {}, \"p99\": {}, \"max\": {}}}\n\
          {indent}}}",
         r.scheduler,
         r.spawn_wave_secs,

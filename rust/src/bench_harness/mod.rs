@@ -17,7 +17,10 @@ pub mod tiny_json;
 
 pub use chart::ascii_bar_chart;
 pub use executor_bench::{ExecutorBench, QueueDepthStats, SchedulerRun};
-pub use pipeline_bench::{GateOutcome, PipelineBench, PipelineBenchParams, WorkloadPoint};
+pub use pipeline_bench::{
+    GateOutcome, GateReport, PipelineBench, PipelineBenchParams, WorkloadPoint,
+    DEFAULT_LATENCY_THRESHOLD,
+};
 pub use sampler::{measure, BenchOptions, Measurement};
 pub use table::{render_csv, render_table, Cell, ReportTable};
 

@@ -13,6 +13,13 @@
 //!   warmup + median-of-samples discipline as the executor bench
 //!   ([`measure`]);
 //! * **p50/p95 latency** — per-job, across every post-warmup sample;
+//! * **queue-wait p50/p95** — time each job spent admitted-but-waiting
+//!   (admission queue + shard run queue) before a runner picked it up,
+//!   from the `JobResult::queue_wait` field — the saturation signal the
+//!   ingress rework added;
+//! * **shed rate** — ingress submissions rejected ÷ submissions over the
+//!   cell (0 under the default `block` policy; nonzero when a `shed` or
+//!   `timeout` admission config is being benched);
 //! * **steal counter** — the shard pools' cumulative `tasks_stolen`.
 //!
 //! Seeding discipline matches the executor trajectory: `cargo test`
@@ -81,6 +88,13 @@ pub struct WorkloadPoint {
     pub jobs_per_sec: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
+    /// Queue-wait percentiles across post-warmup jobs (admission +
+    /// run-queue time before execution started).
+    pub queue_wait_p50_ms: f64,
+    pub queue_wait_p95_ms: f64,
+    /// Ingress shed fraction over the whole cell (sheds ÷ submissions,
+    /// warmup included; 0 under `admission = block`).
+    pub shed_rate: f64,
     /// Cumulative steals across the pipeline's shard pools during this
     /// cell (warmup included).
     pub tasks_stolen: u64,
@@ -116,6 +130,10 @@ fn total_steals(pipeline: &Pipeline) -> u64 {
     pipeline.shards().stats().iter().map(|(_, s)| s.tasks_stolen).sum()
 }
 
+fn counter(pipeline: &Pipeline, name: &str) -> u64 {
+    pipeline.metrics().snapshot().counters.get(name).copied().unwrap_or(0)
+}
+
 fn percentile_ms(sorted: &[Duration], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
@@ -144,7 +162,12 @@ pub fn run(
             // jobs skip it (same discipline as paper::time_cell).
             let first = pipeline.run(&req)?;
             let steals_before = total_steals(&pipeline);
-            let latencies = Mutex::new(Vec::<Duration>::new());
+            let submitted_before = counter(&pipeline, "ingress.submitted");
+            let shed_before =
+                counter(&pipeline, "ingress.shed") + counter(&pipeline, "ingress.timed_out");
+            // (latency, queue wait) pushed together so the warmup trim
+            // below stays aligned.
+            let samples = Mutex::new(Vec::<(Duration, Duration)>::new());
             let label = format!("pipeline.{}.shards{}", workload.name(), actual_shards);
             let timing = measure(&label, opts, || {
                 std::thread::scope(|s| {
@@ -154,7 +177,8 @@ pub fn run(
                                 let t = Instant::now();
                                 let res =
                                     pipeline.run_opts(&req, false).expect("bench job failed");
-                                latencies.lock().unwrap().push(t.elapsed());
+                                let wait = Duration::from_secs_f64(res.queue_wait.max(0.0));
+                                samples.lock().unwrap().push((t.elapsed(), wait));
                                 std::hint::black_box(res.seconds);
                             }
                         });
@@ -162,11 +186,18 @@ pub fn run(
                 });
             });
             // measure() ran `opts.warmup` batches before sampling; drop
-            // their latencies so the percentiles cover samples only.
-            let mut lat = latencies.into_inner().unwrap();
-            let keep_from = (opts.warmup * batch).min(lat.len());
-            let mut lat = lat.split_off(keep_from);
+            // their samples so the percentiles cover samples only.
+            let mut all = samples.into_inner().unwrap();
+            let keep_from = (opts.warmup * batch).min(all.len());
+            let kept = all.split_off(keep_from);
+            let mut lat: Vec<Duration> = kept.iter().map(|&(l, _)| l).collect();
+            let mut waits: Vec<Duration> = kept.iter().map(|&(_, w)| w).collect();
             lat.sort_unstable();
+            waits.sort_unstable();
+            let submitted = counter(&pipeline, "ingress.submitted") - submitted_before;
+            let shed = counter(&pipeline, "ingress.shed")
+                + counter(&pipeline, "ingress.timed_out")
+                - shed_before;
             points.push(WorkloadPoint {
                 workload: workload.name(),
                 shards: actual_shards,
@@ -174,6 +205,9 @@ pub fn run(
                 jobs_per_sec: batch as f64 / timing.median_secs().max(1e-9),
                 p50_ms: percentile_ms(&lat, 0.5),
                 p95_ms: percentile_ms(&lat, 0.95),
+                queue_wait_p50_ms: percentile_ms(&waits, 0.5),
+                queue_wait_p95_ms: percentile_ms(&waits, 0.95),
+                shed_rate: if submitted == 0 { 0.0 } else { shed as f64 / submitted as f64 },
                 tasks_stolen: total_steals(&pipeline).saturating_sub(steals_before),
                 verified: first.verified,
             });
@@ -196,13 +230,17 @@ fn json_point(p: &WorkloadPoint) -> String {
     format!(
         "    {{\"workload\": \"{}\", \"shards\": {}, \"jobs_per_sample\": {}, \
          \"jobs_per_sec\": {:.2}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
-         \"tasks_stolen\": {}, \"verified\": {}}}",
+         \"queue_wait_p50_ms\": {:.3}, \"queue_wait_p95_ms\": {:.3}, \
+         \"shed_rate\": {:.4}, \"tasks_stolen\": {}, \"verified\": {}}}",
         p.workload,
         p.shards,
         p.jobs_per_sample,
         p.jobs_per_sec,
         p.p50_ms,
         p.p95_ms,
+        p.queue_wait_p50_ms,
+        p.queue_wait_p95_ms,
+        p.shed_rate,
         p.tasks_stolen,
         p.verified,
     )
@@ -273,12 +311,40 @@ pub enum GateOutcome {
     Failed { regressions: Vec<String> },
 }
 
+/// A gate verdict plus its warn-only findings. Latency regressions (p95
+/// job latency and p95 queue wait) never fail the gate — yet — but they
+/// are reported so the queue-wait numbers the ingress rework added have
+/// teeth from day one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateReport {
+    pub outcome: GateOutcome,
+    /// `… p95 regressed …` lines; empty when latency held.
+    pub warnings: Vec<String>,
+}
+
+/// Default p95 latency growth tolerated before a warn-only finding
+/// (`sfut check-bench --latency-threshold` overrides).
+pub const DEFAULT_LATENCY_THRESHOLD: f64 = 0.25;
+
+/// Ignore latency growth below this absolute floor — micro-benchmark
+/// cells jitter by fractions of a millisecond and a ratio alone would
+/// cry wolf on them.
+const LATENCY_WARN_FLOOR_MS: f64 = 1.0;
+
 /// Compare two `BENCH_pipeline.json` documents: `current` fails when any
 /// (workload, shards) cell's jobs/sec drops below
-/// `(1 - threshold) × baseline`. Files are only comparable when profile
-/// and run parameters match — debug-vs-release or different-scale
-/// comparisons are meaningless and yield [`GateOutcome::Skipped`].
-pub fn gate(baseline: &str, current: &str, threshold: f64) -> Result<GateOutcome, String> {
+/// `(1 - threshold) × baseline`, and *warns* when a cell's p95 latency or
+/// p95 queue wait grows beyond `(1 + latency_threshold) × baseline`
+/// (and by more than an absolute 1 ms floor). Files are only comparable
+/// when profile and run parameters match — debug-vs-release or
+/// different-scale comparisons are meaningless and yield
+/// [`GateOutcome::Skipped`].
+pub fn gate(
+    baseline: &str,
+    current: &str,
+    threshold: f64,
+    latency_threshold: f64,
+) -> Result<GateReport, String> {
     let b = tiny_json::parse(baseline).map_err(|e| format!("baseline: {e}"))?;
     let c = tiny_json::parse(current).map_err(|e| format!("current: {e}"))?;
     for doc in [&b, &c] {
@@ -289,26 +355,39 @@ pub fn gate(baseline: &str, current: &str, threshold: f64) -> Result<GateOutcome
     for key in ["profile", "scale", "clients", "jobs_per_client", "mode", "warmup", "samples"] {
         let (bv, cv) = (b.get(key), c.get(key));
         if bv != cv {
-            return Ok(GateOutcome::Skipped {
-                reason: format!(
-                    "{key} differs (baseline {bv:?}, current {cv:?}); runs are not \
-                     comparable — refresh the committed baseline"
-                ),
+            return Ok(GateReport {
+                outcome: GateOutcome::Skipped {
+                    reason: format!(
+                        "{key} differs (baseline {bv:?}, current {cv:?}); runs are not \
+                         comparable — refresh the committed baseline"
+                    ),
+                },
+                warnings: Vec::new(),
             });
         }
     }
 
-    let cell = |doc: &Json| -> Vec<(String, u64, f64)> {
+    struct CellStats {
+        workload: String,
+        shards: u64,
+        jobs_per_sec: f64,
+        /// Optional: pre-ingress baselines lack the latency fields.
+        p95_ms: Option<f64>,
+        queue_wait_p95_ms: Option<f64>,
+    }
+    let cell = |doc: &Json| -> Vec<CellStats> {
         doc.get("points")
             .and_then(Json::as_array)
             .unwrap_or(&[])
             .iter()
             .filter_map(|p| {
-                Some((
-                    p.get("workload")?.as_str()?.to_string(),
-                    p.get("shards")?.as_f64()? as u64,
-                    p.get("jobs_per_sec")?.as_f64()?,
-                ))
+                Some(CellStats {
+                    workload: p.get("workload")?.as_str()?.to_string(),
+                    shards: p.get("shards")?.as_f64()? as u64,
+                    jobs_per_sec: p.get("jobs_per_sec")?.as_f64()?,
+                    p95_ms: p.get("p95_ms").and_then(Json::as_f64),
+                    queue_wait_p95_ms: p.get("queue_wait_p95_ms").and_then(Json::as_f64),
+                })
             })
             .collect()
     };
@@ -316,19 +395,43 @@ pub fn gate(baseline: &str, current: &str, threshold: f64) -> Result<GateOutcome
     let cur_cells = cell(&c);
     let mut compared = 0usize;
     let mut regressions = Vec::new();
-    for (workload, shards, cur_jps) in &cur_cells {
-        let Some((_, _, base_jps)) =
-            base_cells.iter().find(|(w, s, _)| w == workload && s == shards)
+    let mut warnings = Vec::new();
+    let mut warn_latency = |workload: &str, shards: u64, what: &str, base: f64, cur: f64| {
+        if cur > (1.0 + latency_threshold) * base && cur - base > LATENCY_WARN_FLOOR_MS {
+            // Near-zero baselines (an idle queue rounds to 0.000 ms)
+            // make a percentage absurd; report absolute growth instead.
+            let growth = if base > 0.01 {
+                format!("+{:.0}%", (cur / base - 1.0) * 100.0)
+            } else {
+                format!("+{:.2}ms", cur - base)
+            };
+            warnings.push(format!(
+                "{workload} @ {shards} shard(s): {what} {cur:.2}ms vs baseline \
+                 {base:.2}ms ({growth})"
+            ));
+        }
+    };
+    for cur in &cur_cells {
+        let Some(base) = base_cells
+            .iter()
+            .find(|b| b.workload == cur.workload && b.shards == cur.shards)
         else {
             continue;
         };
         compared += 1;
-        if *cur_jps < (1.0 - threshold) * base_jps {
-            let drop_pct = (1.0 - cur_jps / base_jps.max(1e-9)) * 100.0;
+        if cur.jobs_per_sec < (1.0 - threshold) * base.jobs_per_sec {
+            let drop_pct = (1.0 - cur.jobs_per_sec / base.jobs_per_sec.max(1e-9)) * 100.0;
             regressions.push(format!(
-                "{workload} @ {shards} shard(s): {cur_jps:.1} jobs/s vs baseline \
-                 {base_jps:.1} (-{drop_pct:.0}%)"
+                "{} @ {} shard(s): {:.1} jobs/s vs baseline {:.1} (-{drop_pct:.0}%)",
+                cur.workload, cur.shards, cur.jobs_per_sec, base.jobs_per_sec
             ));
+        }
+        // Warn-only latency checks: only when both runs carry the field.
+        if let (Some(b95), Some(c95)) = (base.p95_ms, cur.p95_ms) {
+            warn_latency(&cur.workload, cur.shards, "p95 latency", b95, c95);
+        }
+        if let (Some(bq), Some(cq)) = (base.queue_wait_p95_ms, cur.queue_wait_p95_ms) {
+            warn_latency(&cur.workload, cur.shards, "p95 queue wait", bq, cq);
         }
     }
     // A workload that disappears entirely is a silent 100% regression,
@@ -336,8 +439,9 @@ pub fn gate(baseline: &str, current: &str, threshold: f64) -> Result<GateOutcome
     // the N in {1, 2, N} is machine-dependent — but the workload list is
     // config-driven, so losing a whole workload means the bench stopped
     // covering it.)
-    for (workload, _, _) in &base_cells {
-        if !cur_cells.iter().any(|(w, _, _)| w == workload)
+    for base in &base_cells {
+        let workload = &base.workload;
+        if !cur_cells.iter().any(|c| c.workload == *workload)
             && !regressions.iter().any(|r| r.starts_with(&format!("{workload} vanished")))
         {
             regressions.push(format!(
@@ -346,15 +450,19 @@ pub fn gate(baseline: &str, current: &str, threshold: f64) -> Result<GateOutcome
         }
     }
     if compared == 0 && regressions.is_empty() {
-        return Ok(GateOutcome::Skipped {
-            reason: "no overlapping (workload, shards) cells".to_string(),
+        return Ok(GateReport {
+            outcome: GateOutcome::Skipped {
+                reason: "no overlapping (workload, shards) cells".to_string(),
+            },
+            warnings,
         });
     }
-    if regressions.is_empty() {
-        Ok(GateOutcome::Passed { cells: compared })
+    let outcome = if regressions.is_empty() {
+        GateOutcome::Passed { cells: compared }
     } else {
-        Ok(GateOutcome::Failed { regressions })
-    }
+        GateOutcome::Failed { regressions }
+    };
+    Ok(GateReport { outcome, warnings })
 }
 
 #[cfg(test)]
@@ -390,22 +498,30 @@ mod tests {
         assert!(b.points.iter().all(|p| p.jobs_per_sec > 0.0));
         assert!(b.points.iter().all(|p| p.verified));
         assert!(b.points.iter().all(|p| p.p95_ms >= p.p50_ms));
+        assert!(b.points.iter().all(|p| p.queue_wait_p95_ms >= p.queue_wait_p50_ms));
+        // Default admission is block: nothing sheds during the sweep.
+        assert!(b.points.iter().all(|p| p.shed_rate == 0.0));
         assert!(b.points.iter().all(|p| p.jobs_per_sample == 4));
         assert_eq!(b.points.iter().filter(|p| p.shards == 2).count(), 3);
 
         let json = to_json(&b);
         assert!(json.contains("\"bench\": \"pipeline_throughput\""));
+        assert!(json.contains("queue_wait_p95_ms"));
+        assert!(json.contains("shed_rate"));
         let parsed = tiny_json::parse(&json).expect("self-readable JSON");
         assert_eq!(parsed.get("clients").and_then(Json::as_f64), Some(2.0));
         assert_eq!(
             parsed.get("points").and_then(Json::as_array).map(<[Json]>::len),
             Some(6)
         );
-        // A run gates cleanly against itself at any threshold.
-        match gate(&json, &json, 0.25).unwrap() {
+        // A run gates cleanly against itself at any threshold, with no
+        // latency warnings (identical numbers).
+        let report = gate(&json, &json, 0.25, DEFAULT_LATENCY_THRESHOLD).unwrap();
+        match report.outcome {
             GateOutcome::Passed { cells } => assert_eq!(cells, 6),
             other => panic!("expected pass, got {other:?}"),
         }
+        assert!(report.warnings.is_empty(), "{:?}", report.warnings);
 
         // Serialization to disk via a scratch path (never the trajectory).
         let tmp = std::env::temp_dir().join("sfut_bench_pipeline_smoke.json");
@@ -418,24 +534,40 @@ mod tests {
     }
 
     fn doc(profile: &str, jps_primes: f64, jps_chunked: f64) -> String {
+        doc_with_latency(profile, jps_primes, jps_chunked, 10.0, 2.0)
+    }
+
+    fn doc_with_latency(
+        profile: &str,
+        jps_primes: f64,
+        jps_chunked: f64,
+        p95: f64,
+        queue_p95: f64,
+    ) -> String {
         format!(
             "{{\"bench\": \"pipeline_throughput\", \"profile\": \"{profile}\", \
              \"scale\": 1.0, \"clients\": 2, \"jobs_per_client\": 2, \"mode\": \"par(2)\", \
              \"points\": [\
-             {{\"workload\": \"primes\", \"shards\": 1, \"jobs_per_sec\": {jps_primes}}}, \
+             {{\"workload\": \"primes\", \"shards\": 1, \"jobs_per_sec\": {jps_primes}, \
+               \"p95_ms\": {p95}, \"queue_wait_p95_ms\": {queue_p95}}}, \
              {{\"workload\": \"chunked\", \"shards\": 2, \"jobs_per_sec\": {jps_chunked}}}]}}"
         )
     }
+
+    const LT: f64 = DEFAULT_LATENCY_THRESHOLD;
 
     #[test]
     fn gate_passes_within_threshold_and_fails_beyond() {
         let base = doc("release", 100.0, 50.0);
         // 20% down on one cell: inside a 25% threshold.
         let ok = doc("release", 80.0, 50.0);
-        assert_eq!(gate(&base, &ok, 0.25).unwrap(), GateOutcome::Passed { cells: 2 });
+        assert_eq!(
+            gate(&base, &ok, 0.25, LT).unwrap().outcome,
+            GateOutcome::Passed { cells: 2 }
+        );
         // 40% down: out.
         let bad = doc("release", 60.0, 50.0);
-        match gate(&base, &bad, 0.25).unwrap() {
+        match gate(&base, &bad, 0.25, LT).unwrap().outcome {
             GateOutcome::Failed { regressions } => {
                 assert_eq!(regressions.len(), 1);
                 assert!(regressions[0].contains("primes"), "{regressions:?}");
@@ -444,7 +576,51 @@ mod tests {
         }
         // Improvements never fail.
         let faster = doc("release", 200.0, 90.0);
-        assert_eq!(gate(&base, &faster, 0.25).unwrap(), GateOutcome::Passed { cells: 2 });
+        assert_eq!(
+            gate(&base, &faster, 0.25, LT).unwrap().outcome,
+            GateOutcome::Passed { cells: 2 }
+        );
+    }
+
+    #[test]
+    fn gate_warns_on_latency_regressions_without_failing() {
+        let base = doc_with_latency("release", 100.0, 50.0, 10.0, 2.0);
+        // Throughput fine, p95 latency doubled and queue wait tripled:
+        // pass + two warnings.
+        let slow = doc_with_latency("release", 100.0, 50.0, 20.0, 6.0);
+        let report = gate(&base, &slow, 0.25, LT).unwrap();
+        assert_eq!(report.outcome, GateOutcome::Passed { cells: 2 });
+        assert_eq!(report.warnings.len(), 2, "{:?}", report.warnings);
+        assert!(report.warnings.iter().any(|w| w.contains("p95 latency")));
+        assert!(report.warnings.iter().any(|w| w.contains("p95 queue wait")));
+        // Growth inside the tolerance (or under the 1 ms floor) stays
+        // quiet.
+        let close = doc_with_latency("release", 100.0, 50.0, 10.9, 2.9);
+        assert!(gate(&base, &close, 0.25, LT).unwrap().warnings.is_empty());
+        // A permissive flag silences the doubled p95 too.
+        let report = gate(&base, &slow, 0.25, 3.0).unwrap();
+        assert!(report.warnings.is_empty(), "{:?}", report.warnings);
+        // A ~0 baseline (idle queue) reports absolute growth, not a
+        // nonsense percentage.
+        let idle_base = doc_with_latency("release", 100.0, 50.0, 10.0, 0.0);
+        let busy = doc_with_latency("release", 100.0, 50.0, 10.0, 3.0);
+        let report = gate(&idle_base, &busy, 0.25, LT).unwrap();
+        assert_eq!(report.warnings.len(), 1, "{:?}", report.warnings);
+        assert!(report.warnings[0].contains("+3.00ms"), "{:?}", report.warnings);
+        assert!(!report.warnings[0].contains('%'), "{:?}", report.warnings);
+    }
+
+    #[test]
+    fn gate_tolerates_baselines_without_latency_fields() {
+        // Pre-ingress baseline: no p95/queue-wait fields anywhere.
+        let base = "{\"bench\": \"pipeline_throughput\", \"profile\": \"release\", \
+             \"scale\": 1.0, \"clients\": 2, \"jobs_per_client\": 2, \"mode\": \"par(2)\", \
+             \"points\": [\
+             {\"workload\": \"primes\", \"shards\": 1, \"jobs_per_sec\": 100.0}]}";
+        let cur = doc_with_latency("release", 95.0, 50.0, 400.0, 300.0);
+        let report = gate(base, &cur, 0.25, LT).unwrap();
+        assert_eq!(report.outcome, GateOutcome::Passed { cells: 1 });
+        assert!(report.warnings.is_empty(), "no baseline latency → no warnings");
     }
 
     #[test]
@@ -456,9 +632,12 @@ mod tests {
              \"points\": [\
              {\"workload\": \"chunked\", \"shards\": 2, \"jobs_per_sec\": 55.0}]}"
             .to_string();
-        match gate(&base, &cur, 0.25).unwrap() {
+        match gate(&base, &cur, 0.25, LT).unwrap().outcome {
             GateOutcome::Failed { regressions } => {
-                assert!(regressions.iter().any(|r| r.contains("primes vanished")), "{regressions:?}");
+                assert!(
+                    regressions.iter().any(|r| r.contains("primes vanished")),
+                    "{regressions:?}"
+                );
             }
             other => panic!("expected failure, got {other:?}"),
         }
@@ -469,11 +648,11 @@ mod tests {
         let base = doc("release", 100.0, 50.0);
         let debug = doc("debug", 10.0, 5.0);
         assert!(matches!(
-            gate(&base, &debug, 0.25).unwrap(),
+            gate(&base, &debug, 0.25, LT).unwrap().outcome,
             GateOutcome::Skipped { .. }
         ));
         // Garbage input is an error, not a skip.
-        assert!(gate("{]", &base, 0.25).is_err());
-        assert!(gate("{\"bench\": \"executor_overhead\"}", &base, 0.25).is_err());
+        assert!(gate("{]", &base, 0.25, LT).is_err());
+        assert!(gate("{\"bench\": \"executor_overhead\"}", &base, 0.25, LT).is_err());
     }
 }

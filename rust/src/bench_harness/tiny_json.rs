@@ -291,7 +291,8 @@ mod tests {
         let doc = "{\n  \"bench\": \"executor_overhead\",\n  \"profile\": \"release\",\n  \
                    \"baseline\": {\n    \"scheduler\": \"global-queue\",\n    \
                    \"spawn_wave_secs\": 0.123456,\n    \
-                   \"queue_depth\": {\"samples\": 10, \"mean\": 1.5, \"p50\": 1, \"p99\": 3, \"max\": 4}\n  },\n  \
+                   \"queue_depth\": {\"samples\": 10, \"mean\": 1.5, \
+                   \"p50\": 1, \"p99\": 3, \"max\": 4}\n  },\n  \
                    \"speedup_fut_force\": 1.250\n}\n";
         let v = parse(doc).unwrap();
         assert_eq!(v.get("bench").and_then(Json::as_str), Some("executor_overhead"));

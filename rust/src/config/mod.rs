@@ -96,6 +96,58 @@ impl std::str::FromStr for ChunkPolicy {
     }
 }
 
+/// What `Pipeline::submit` does when the bounded admission queue is full
+/// (the ingress backpressure policy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Block the submitter until a slot frees (synchronous callers keep
+    /// their pre-ingress semantics). The default.
+    Block,
+    /// Reject immediately with a shed error — load-shedding front doors
+    /// that prefer fast failure over queueing.
+    Shed,
+    /// Wait up to the given number of milliseconds for a slot, then shed.
+    /// A timed-out submission leaves no residue: the slot it waited for
+    /// stays with the queue.
+    Timeout(u64),
+}
+
+impl AdmissionPolicy {
+    pub fn label(&self) -> String {
+        match self {
+            AdmissionPolicy::Block => "block".to_string(),
+            AdmissionPolicy::Shed => "shed".to_string(),
+            AdmissionPolicy::Timeout(ms) => format!("timeout({ms})"),
+        }
+    }
+}
+
+impl std::str::FromStr for AdmissionPolicy {
+    type Err = ConfigError;
+
+    fn from_str(s: &str) -> Result<AdmissionPolicy, ConfigError> {
+        let s = s.trim();
+        match s {
+            "block" => return Ok(AdmissionPolicy::Block),
+            "shed" => return Ok(AdmissionPolicy::Shed),
+            _ => {}
+        }
+        if let Some(inner) = s.strip_prefix("timeout(").and_then(|r| r.strip_suffix(')')) {
+            let inner = inner.trim().trim_end_matches("ms").trim();
+            let ms: u64 = inner.parse().map_err(|_| {
+                ConfigError::new(format!("bad timeout in admission policy: {s}"))
+            })?;
+            if ms == 0 {
+                return Err(ConfigError::new("timeout(0) is not an admission policy"));
+            }
+            return Ok(AdmissionPolicy::Timeout(ms));
+        }
+        Err(ConfigError::new(format!(
+            "unknown admission policy: {s} (want block | shed | timeout(MS))"
+        )))
+    }
+}
+
 /// Workload selector matching the rows of Table 1 plus our extensions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Workload {
@@ -177,8 +229,21 @@ pub struct Config {
     /// Coordinator shards (independent executor-pool groups). 0 = auto:
     /// physical cores / `shard_parallelism`, at least 1.
     pub shards: usize,
-    /// Nominal per-shard parallelism; sizes the auto shard count.
+    /// Nominal per-shard parallelism; sizes the auto shard count and the
+    /// ingress runner count per shard (concurrent jobs a shard executes).
     pub shard_parallelism: usize,
+    /// Bound on jobs admitted but not yet executing (the ingress
+    /// admission queue plus the per-shard run queues). The backpressure
+    /// knob: when this many jobs are waiting, `admission` decides.
+    pub queue_depth: usize,
+    /// What `Pipeline::submit` does when `queue_depth` is reached.
+    pub admission: AdmissionPolicy,
+    /// Ingress dispatcher threads (admission queue → shard run queues).
+    pub dispatchers: usize,
+    /// A backed-up shard's run-queue depth must *exceed* this before
+    /// idle shards steal whole queued jobs from it (cross-shard
+    /// migration; 1 = steal once two or more jobs are waiting).
+    pub migrate_threshold: usize,
     /// Directory holding AOT artifacts (*.hlo.txt).
     pub artifacts_dir: PathBuf,
     /// Use the PJRT kernel for chunked block products when artifacts are
@@ -205,6 +270,10 @@ impl Default for Config {
             chunk_policy: ChunkPolicy::Adaptive,
             shards: 0,
             shard_parallelism: 2,
+            queue_depth: 64,
+            admission: AdmissionPolicy::Block,
+            dispatchers: 2,
+            migrate_threshold: 1,
             artifacts_dir: PathBuf::from("artifacts"),
             use_kernel: true,
             stack_size: 256 << 20,
@@ -287,6 +356,12 @@ impl Config {
             "shard_parallelism" | "coordinator.shard_parallelism" => {
                 self.shard_parallelism = p(key, value)?;
             }
+            "queue_depth" | "ingress.queue_depth" => self.queue_depth = p(key, value)?,
+            "admission" | "ingress.admission" => self.admission = p(key, value)?,
+            "dispatchers" | "ingress.dispatchers" => self.dispatchers = p(key, value)?,
+            "migrate_threshold" | "ingress.migrate_threshold" => {
+                self.migrate_threshold = p(key, value)?;
+            }
             "artifacts_dir" | "runtime.artifacts_dir" => {
                 self.artifacts_dir = PathBuf::from(value.trim().trim_matches('"'));
             }
@@ -318,6 +393,15 @@ impl Config {
         }
         if self.shard_parallelism == 0 {
             return Err(ConfigError::new("shard_parallelism must be >= 1"));
+        }
+        if self.queue_depth == 0 {
+            return Err(ConfigError::new("queue_depth must be >= 1"));
+        }
+        if self.dispatchers == 0 || self.dispatchers > 64 {
+            return Err(ConfigError::new("dispatchers must be in 1..=64"));
+        }
+        if self.migrate_threshold == 0 {
+            return Err(ConfigError::new("migrate_threshold must be >= 1"));
         }
         if self.samples == 0 {
             return Err(ConfigError::new("samples must be >= 1"));
@@ -426,6 +510,48 @@ mod tests {
         assert!(c.set("chunk_policy", "random").is_err());
         assert_eq!(ChunkPolicy::Adaptive.label(), "adaptive");
         assert_eq!("fixed".parse::<ChunkPolicy>().unwrap(), ChunkPolicy::Fixed);
+    }
+
+    #[test]
+    fn admission_policy_parses_and_labels() {
+        assert_eq!("block".parse::<AdmissionPolicy>().unwrap(), AdmissionPolicy::Block);
+        assert_eq!("shed".parse::<AdmissionPolicy>().unwrap(), AdmissionPolicy::Shed);
+        assert_eq!(
+            "timeout(250)".parse::<AdmissionPolicy>().unwrap(),
+            AdmissionPolicy::Timeout(250)
+        );
+        assert_eq!(
+            "timeout(250ms)".parse::<AdmissionPolicy>().unwrap(),
+            AdmissionPolicy::Timeout(250)
+        );
+        assert!("timeout(0)".parse::<AdmissionPolicy>().is_err());
+        assert!("drop".parse::<AdmissionPolicy>().is_err());
+        assert_eq!(AdmissionPolicy::Timeout(50).label(), "timeout(50)");
+        assert_eq!(AdmissionPolicy::Block.label(), "block");
+    }
+
+    #[test]
+    fn ingress_keys_parse_and_validate() {
+        let mut c = Config::default();
+        c.set("queue_depth", "8").unwrap();
+        c.set("ingress.admission", "timeout(100)").unwrap();
+        c.set("dispatchers", "3").unwrap();
+        c.set("ingress.migrate_threshold", "2").unwrap();
+        assert_eq!(c.queue_depth, 8);
+        assert_eq!(c.admission, AdmissionPolicy::Timeout(100));
+        assert_eq!(c.dispatchers, 3);
+        assert_eq!(c.migrate_threshold, 2);
+        c.validate().unwrap();
+        assert!(c.set("admission", "random").is_err());
+        let mut c = Config::default();
+        c.queue_depth = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.dispatchers = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.migrate_threshold = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,765 @@
+//! The staged ingress: how every job enters, waits, runs, and reports.
+//!
+//! Before this module, `sfut serve` was thread-per-session calling
+//! [`Pipeline::run`](super::Pipeline::run) inline: no admission control,
+//! no backpressure, and no way for an idle shard to help a backed-up one.
+//! The ingress replaces that with a four-stage path:
+//!
+//! 1. **Admit** — [`Pipeline::submit`](super::Pipeline::submit) places
+//!    the request in a bounded MPMC admission queue and returns a
+//!    [`JobTicket`] immediately. The bound (`Config::queue_depth`)
+//!    covers every job admitted but not yet executing; at the bound the
+//!    configured [`AdmissionPolicy`] decides: `block` the submitter,
+//!    `shed` ([`SubmitError::Shed`]), or wait up to a deadline
+//!    ([`SubmitError::Timeout`] — the timed-out submission leaves no
+//!    residue in the queue).
+//! 2. **Route** — a small dispatcher pool (`Config::dispatchers`) pops
+//!    admitted jobs and routes them through the existing
+//!    [`ShardSet`](super::ShardSet) affinity/least-loaded logic onto the
+//!    chosen shard's run queue, lease in hand.
+//! 3. **Execute** — each shard owns `Config::shard_parallelism` runner
+//!    threads (spawned with the big workload stack). A runner drains its
+//!    own queue first; when idle it steals the *oldest whole queued job*
+//!    from the deepest shard whose run-queue depth exceeds
+//!    `Config::migrate_threshold` — cross-shard migration, the
+//!    queue-level complement of the executor's task stealing. Migration
+//!    re-leases the job onto the thief shard and shows up in the
+//!    `shard.<id>.migrated_in`/`migrated_out` counters and the result's
+//!    `migrated=` field.
+//! 4. **Report** — the runner executes via
+//!    [`PipelineCore::execute_routed`](super::router::PipelineCore) and
+//!    fulfills the ticket's [`Fut`] cell, running any registered
+//!    continuations — the service layer rides the same lock-free future
+//!    state machine as the paper's stream cells.
+//!
+//! Shutdown is graceful: dropping the last `Pipeline` handle closes
+//! admission, lets the dispatchers drain the admission queue, then the
+//! runners drain every run queue (ignoring holds and the migration
+//! threshold) before joining — in-flight tickets always resolve.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::job::{JobRequest, JobResult};
+use super::router::PipelineCore;
+use super::shard::ShardLease;
+use crate::config::AdmissionPolicy;
+use crate::exec::{Executor, ExecutorConfig};
+use crate::susp::{Fut, FutPromise, FutState, Susp};
+
+/// What a resolved [`JobTicket`] carries: the job's result, or the
+/// error/panic message it failed with.
+pub type TicketValue = Result<JobResult, String>;
+
+/// A handle to a submitted job, returned by
+/// [`Pipeline::submit`](super::Pipeline::submit) before the job runs.
+///
+/// Built directly on [`Fut`] — the same lock-free cell the paper's
+/// stream tails suspend in — so it composes the same way:
+/// [`JobTicket::and_then`]/[`JobTicket::bind`] chain continuations that
+/// fire on completion, [`JobTicket::wait`] parks for the synchronous
+/// result, and [`JobTicket::state`] is a lock-free peek.
+#[derive(Clone)]
+pub struct JobTicket {
+    fut: Fut<TicketValue>,
+}
+
+impl JobTicket {
+    /// The underlying future cell, for callers that want the full
+    /// [`Fut`] combinator surface.
+    pub fn fut(&self) -> &Fut<TicketValue> {
+        &self.fut
+    }
+
+    /// Lock-free lifecycle peek (Empty until a runner picks the job up).
+    pub fn state(&self) -> FutState {
+        self.fut.state()
+    }
+
+    /// Whether the job has finished (never blocks).
+    pub fn is_ready(&self) -> bool {
+        self.fut.is_ready()
+    }
+
+    /// The outcome, if finished (never blocks).
+    pub fn try_result(&self) -> Option<TicketValue> {
+        self.fut.try_result().map(|r| match r {
+            Ok(v) => v.clone(),
+            Err(msg) => Err(msg.clone()),
+        })
+    }
+
+    /// Park until the job finishes and return its result. Safe against
+    /// abandoned cells (a dropped producer surfaces as an error).
+    pub fn wait(&self) -> Result<JobResult> {
+        match self.fut.wait_result() {
+            Ok(Ok(res)) => Ok(res.clone()),
+            Ok(Err(msg)) => Err(anyhow!("{msg}")),
+            Err(msg) => Err(anyhow!("job ticket abandoned: {msg}")),
+        }
+    }
+
+    /// Chain a transformation on the outcome, exactly like mapping a
+    /// stream cell: runs when the job completes (inline if it already
+    /// has).
+    pub fn and_then<U, F>(&self, f: F) -> Fut<U>
+    where
+        U: Send + Sync + 'static,
+        F: FnOnce(TicketValue) -> U + Send + 'static,
+    {
+        self.fut.and_then(f)
+    }
+
+    /// Monadic bind on the outcome (continuation returns another future).
+    pub fn bind<U, F>(&self, f: F) -> Fut<U>
+    where
+        U: Clone + Send + Sync + 'static,
+        F: FnOnce(TicketValue) -> Fut<U> + Send + 'static,
+    {
+        self.fut.bind(f)
+    }
+}
+
+/// Why [`Pipeline::submit`](super::Pipeline::submit) rejected a request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Bounded queue full under `admission = shed`.
+    Shed { queue_depth: usize },
+    /// Queue stayed full for the whole `admission = timeout(ms)` window.
+    /// The submission leaves no residue: its would-be slot stays with
+    /// the queue.
+    Timeout { waited_ms: u64, queue_depth: usize },
+    /// The pipeline is shutting down.
+    Closed,
+}
+
+impl SubmitError {
+    /// Serve-protocol rendering: a well-formed `err admission=…` line.
+    pub fn render_line(&self, req: &JobRequest) -> String {
+        let w = req.workload.name();
+        let m = req.mode.label();
+        match self {
+            SubmitError::Shed { queue_depth } => {
+                format!("err admission=shed workload={w} mode={m} queue_depth={queue_depth}")
+            }
+            SubmitError::Timeout { waited_ms, queue_depth } => format!(
+                "err admission=timeout workload={w} mode={m} waited_ms={waited_ms} \
+                 queue_depth={queue_depth}"
+            ),
+            SubmitError::Closed => format!("err admission=closed workload={w} mode={m}"),
+        }
+    }
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Shed { queue_depth } => {
+                write!(f, "admission=shed: ingress queue full (queue_depth={queue_depth})")
+            }
+            SubmitError::Timeout { waited_ms, queue_depth } => write!(
+                f,
+                "admission=timeout: no queue slot within {waited_ms}ms \
+                 (queue_depth={queue_depth})"
+            ),
+            SubmitError::Closed => write!(f, "admission=closed: pipeline is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A job admitted but not yet routed.
+struct Pending {
+    req: JobRequest,
+    verify: bool,
+    promise: FutPromise<TicketValue>,
+    submitted: Instant,
+}
+
+/// A job routed to a shard's run queue, lease in hand.
+struct Routed {
+    pending: Pending,
+    lease: ShardLease,
+}
+
+/// Stage-1 state: the bounded admission queue.
+struct Admission {
+    queue: VecDeque<Pending>,
+    /// Jobs admitted but not yet picked up by a runner — this (not the
+    /// `queue` length) is what `queue_depth` bounds, so the run queues
+    /// cannot become an unbounded overflow behind a "bounded" front
+    /// door.
+    pending: usize,
+    closed: bool,
+}
+
+/// Stage-2/3 state: one FIFO run queue per shard.
+struct RunQueues {
+    queues: Vec<VecDeque<Routed>>,
+    /// Per-shard runner gate: a held shard's runners neither execute nor
+    /// steal. Drain/maintenance control, and what the migration tests
+    /// use to build deterministic backlogs.
+    held: Vec<bool>,
+    closed: bool,
+}
+
+struct IngressShared {
+    core: Arc<PipelineCore>,
+    queue_depth: usize,
+    policy: AdmissionPolicy,
+    migrate_threshold: usize,
+    admission: Mutex<Admission>,
+    /// Signalled when a runner frees an admission slot.
+    not_full: Condvar,
+    /// Signalled when a submission lands in the admission queue.
+    not_empty: Condvar,
+    run: Mutex<RunQueues>,
+    /// Signalled when a job lands in any run queue (or on shutdown).
+    work: Condvar,
+}
+
+/// The staged ingress: admission queue, dispatcher pool, and per-shard
+/// runner threads. Owned by [`Pipeline`](super::Pipeline) (reachable via
+/// [`Pipeline::ingress`](super::Pipeline::ingress) for introspection and
+/// drain control); dropping the owning pipeline drains and joins
+/// everything.
+pub struct Ingress {
+    shared: Arc<IngressShared>,
+    /// Executor backing ticket cells: continuations registered before
+    /// completion run here (completed-cell continuations run inline,
+    /// like any [`Fut`]).
+    ticket_exec: Executor,
+    dispatchers: Mutex<Vec<JoinHandle<()>>>,
+    runners: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Ingress {
+    /// Spawn the dispatcher pool and the per-shard runners.
+    pub(super) fn start(core: Arc<PipelineCore>) -> Result<Ingress> {
+        let cfg = core.config();
+        let queue_depth = cfg.queue_depth;
+        let policy = cfg.admission;
+        let migrate_threshold = cfg.migrate_threshold;
+        let dispatcher_count = cfg.dispatchers;
+        let runners_per_shard = cfg.shard_parallelism;
+        let stack = cfg.stack_size;
+        let shard_count = core.shards().len();
+        let shared = Arc::new(IngressShared {
+            queue_depth,
+            policy,
+            migrate_threshold,
+            admission: Mutex::new(Admission {
+                queue: VecDeque::new(),
+                pending: 0,
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            run: Mutex::new(RunQueues {
+                queues: (0..shard_count).map(|_| VecDeque::new()).collect(),
+                held: vec![false; shard_count],
+                closed: false,
+            }),
+            work: Condvar::new(),
+            core,
+        });
+
+        let mut ticket_cfg = ExecutorConfig::with_parallelism(2);
+        ticket_cfg.name = "sfut-ticket".to_string();
+        let ticket_exec = Executor::with_config(ticket_cfg);
+
+        // Built before any thread spawns so an error below (`?`) drops
+        // the Ingress, whose shutdown joins whatever was already spawned
+        // — a failed partial start must not leak parked threads.
+        let ingress = Ingress {
+            shared: Arc::clone(&shared),
+            ticket_exec,
+            dispatchers: Mutex::new(Vec::with_capacity(dispatcher_count)),
+            runners: Mutex::new(Vec::with_capacity(shard_count * runners_per_shard)),
+        };
+        for i in 0..dispatcher_count {
+            let shared = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("sfut-dispatch-{i}"))
+                .spawn(move || dispatcher_loop(&shared))
+                .context("spawning ingress dispatcher")?;
+            ingress.dispatchers.lock().unwrap().push(handle);
+        }
+        for sid in 0..shard_count {
+            for i in 0..runners_per_shard {
+                let shared = Arc::clone(&shared);
+                let handle = std::thread::Builder::new()
+                    .name(format!("sfut-runner-s{sid}-{i}"))
+                    // Runners execute workload bodies directly (deep Lazy
+                    // chains need the big stack the per-job driver
+                    // threads used to provide).
+                    .stack_size(stack)
+                    .spawn(move || runner_loop(&shared, sid))
+                    .context("spawning shard runner")?;
+                ingress.runners.lock().unwrap().push(handle);
+            }
+        }
+        Ok(ingress)
+    }
+
+    /// Stage 1: admit under the configured policy. Returns the ticket
+    /// immediately (the job may not even be routed yet).
+    pub(super) fn submit(&self, req: JobRequest, verify: bool) -> Result<JobTicket, SubmitError> {
+        let metrics = self.shared.core.metrics();
+        metrics.counter("ingress.submitted").inc();
+        let depth = self.shared.queue_depth;
+        let mut adm = self.shared.admission.lock().unwrap();
+        if adm.closed {
+            return Err(SubmitError::Closed);
+        }
+        if adm.pending >= depth {
+            match self.shared.policy {
+                AdmissionPolicy::Shed => {
+                    metrics.counter("ingress.shed").inc();
+                    return Err(SubmitError::Shed { queue_depth: depth });
+                }
+                AdmissionPolicy::Block => {
+                    while adm.pending >= depth && !adm.closed {
+                        adm = self.shared.not_full.wait(adm).unwrap();
+                    }
+                }
+                AdmissionPolicy::Timeout(ms) => {
+                    let deadline = Instant::now() + Duration::from_millis(ms);
+                    while adm.pending >= depth && !adm.closed {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            metrics.counter("ingress.timed_out").inc();
+                            return Err(SubmitError::Timeout {
+                                waited_ms: ms,
+                                queue_depth: depth,
+                            });
+                        }
+                        let (guard, _timeout) =
+                            self.shared.not_full.wait_timeout(adm, deadline - now).unwrap();
+                        adm = guard;
+                    }
+                }
+            }
+            if adm.closed {
+                return Err(SubmitError::Closed);
+            }
+        }
+        let (fut, promise) = Fut::promise(&self.ticket_exec);
+        adm.pending += 1;
+        adm.queue.push_back(Pending { req, verify, promise, submitted: Instant::now() });
+        metrics.counter("ingress.admitted").inc();
+        metrics.gauge("ingress.queue_depth").set(adm.pending as u64);
+        drop(adm);
+        self.shared.not_empty.notify_one();
+        Ok(JobTicket { fut })
+    }
+
+    /// Jobs admitted but not yet executing (the quantity `queue_depth`
+    /// bounds).
+    pub fn pending(&self) -> usize {
+        self.shared.admission.lock().unwrap().pending
+    }
+
+    /// Depth of one shard's run queue.
+    pub fn run_queue_depth(&self, shard: usize) -> usize {
+        self.shared.run.lock().unwrap().queues[shard].len()
+    }
+
+    /// Gate a shard's runners: a held shard neither executes its own
+    /// queue nor steals. Maintenance/drain control — hold a shard and
+    /// its backlog migrates to its peers once it exceeds the threshold;
+    /// the migration tests use it to build deterministic backlogs.
+    /// Holds are cleared automatically on shutdown.
+    pub fn set_runner_hold(&self, shard: usize, hold: bool) {
+        {
+            let mut run = self.shared.run.lock().unwrap();
+            run.held[shard] = hold;
+        }
+        self.shared.work.notify_all();
+    }
+
+    /// Close admission, drain both stages, and join every thread.
+    /// Queued jobs are *executed*, not dropped — every outstanding
+    /// ticket resolves before this returns. Idempotent.
+    fn shutdown(&self) {
+        {
+            let mut adm = self.shared.admission.lock().unwrap();
+            adm.closed = true;
+        }
+        self.shared.not_full.notify_all();
+        self.shared.not_empty.notify_all();
+        for handle in self.dispatchers.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+        {
+            let mut run = self.shared.run.lock().unwrap();
+            run.closed = true;
+            for hold in run.held.iter_mut() {
+                *hold = false;
+            }
+        }
+        self.shared.work.notify_all();
+        for handle in self.runners.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Ingress {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Stage 2: pop admitted jobs, route via the shard set, hand to the
+/// chosen shard's run queue. Drains the admission queue fully before
+/// exiting on shutdown.
+fn dispatcher_loop(shared: &IngressShared) {
+    loop {
+        let pending = {
+            let mut adm = shared.admission.lock().unwrap();
+            loop {
+                if let Some(p) = adm.queue.pop_front() {
+                    break p;
+                }
+                if adm.closed {
+                    return;
+                }
+                adm = shared.not_empty.wait(adm).unwrap();
+            }
+        };
+        let lease = shared.core.shards().route(pending.req.workload);
+        let sid = lease.id();
+        let depth = {
+            let mut run = shared.run.lock().unwrap();
+            // Shutdown invariant: run queues close only *after* every
+            // dispatcher has been joined (see Ingress::shutdown), so a
+            // live dispatcher can never observe a closed run stage. The
+            // assert keeps that ordering honest if shutdown ever changes.
+            debug_assert!(!run.closed, "run queues closed while a dispatcher is live");
+            run.queues[sid].push_back(Routed { pending, lease });
+            run.queues[sid].len()
+        };
+        let metrics = shared.core.metrics();
+        metrics.gauge(&format!("shard.{sid}.run_queue_depth")).set(depth as u64);
+        shared.work.notify_all();
+    }
+}
+
+/// Pick the deepest run queue (≠ `sid`) whose depth exceeds the
+/// migration threshold.
+fn steal_victim(run: &RunQueues, sid: usize, threshold: usize) -> Option<usize> {
+    run.queues
+        .iter()
+        .enumerate()
+        .filter(|&(v, q)| v != sid && q.len() > threshold)
+        .max_by_key(|&(_, q)| q.len())
+        .map(|(v, _)| v)
+}
+
+/// Stage 3 (+4): execute jobs from this shard's run queue; steal whole
+/// queued jobs from backed-up shards when idle; fulfill tickets.
+fn runner_loop(shared: &IngressShared, sid: usize) {
+    loop {
+        // (job, migrated, gauge update) — the gauge write (a format! and
+        // a registry lock) happens after the run lock is released; every
+        // dequeue would otherwise lengthen the one critical section the
+        // whole ingress contends on.
+        let next = {
+            let mut run = shared.run.lock().unwrap();
+            loop {
+                if run.closed {
+                    // Drain mode: own queue first, then anything left
+                    // anywhere (threshold and holds no longer apply).
+                    // Cross-queue pops here are NOT migration — the job
+                    // keeps its routed lease and shard attribution; the
+                    // runner is just the thread that happens to drain it.
+                    let victim = if !run.queues[sid].is_empty() {
+                        Some(sid)
+                    } else {
+                        (0..run.queues.len()).find(|&v| !run.queues[v].is_empty())
+                    };
+                    // Wake peers: either there is more to drain, or all
+                    // queues are empty and they should exit too.
+                    shared.work.notify_all();
+                    break victim.map(|v| {
+                        let job = run.queues[v].pop_front().expect("checked non-empty");
+                        (job, false, None)
+                    });
+                }
+                if !run.held[sid] {
+                    if let Some(job) = run.queues[sid].pop_front() {
+                        let depth = run.queues[sid].len();
+                        break Some((job, false, Some((sid, depth))));
+                    }
+                    if let Some(v) = steal_victim(&run, sid, shared.migrate_threshold) {
+                        let job = run.queues[v].pop_front().expect("victim non-empty");
+                        let depth = run.queues[v].len();
+                        break Some((job, true, Some((v, depth))));
+                    }
+                }
+                run = shared.work.wait(run).unwrap();
+            }
+        };
+        let Some((routed, migrated, gauge)) = next else {
+            return;
+        };
+        if let Some((shard_id, depth)) = gauge {
+            shared
+                .core
+                .metrics()
+                .gauge(&format!("shard.{shard_id}.run_queue_depth"))
+                .set(depth as u64);
+        }
+        execute_one(shared, sid, routed, migrated);
+    }
+}
+
+/// Stage 3 body: adopt the job (re-leasing on migration), release its
+/// admission slot, execute, and fulfill the ticket.
+fn execute_one(shared: &IngressShared, sid: usize, routed: Routed, migrated: bool) {
+    let Routed { pending, lease } = routed;
+    let metrics = shared.core.metrics();
+    let lease = if migrated {
+        let from = lease.id();
+        drop(lease);
+        let shards = shared.core.shards();
+        shards.shard(from).note_migrated_out();
+        let adopted = shards.lease_on(sid);
+        shards.shard(sid).note_migrated_in();
+        metrics.counter("ingress.migrated").inc();
+        adopted
+    } else {
+        lease
+    };
+    // The job is starting: free its admission slot so blocked submitters
+    // refill the queue while it runs.
+    {
+        let mut adm = shared.admission.lock().unwrap();
+        adm.pending -= 1;
+        metrics.gauge("ingress.queue_depth").set(adm.pending as u64);
+    }
+    shared.not_full.notify_one();
+    // Flip the ticket to Running so pollers can tell executing from
+    // queued (`serve`'s `poll` command surfaces this state).
+    pending.promise.start();
+    let queue_wait = pending.submitted.elapsed();
+    let shard = Arc::clone(lease.shard());
+    let outcome =
+        shared.core.execute_routed(pending.req, &shard, pending.verify, queue_wait, migrated);
+    drop(lease);
+    match outcome {
+        Ok(result) => pending.promise.fulfill(Ok(result)),
+        Err(e) => {
+            metrics.counter("jobs.failed").inc();
+            pending.promise.fulfill(Err(format!("{e:#}")));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, Mode, Workload};
+    use crate::coordinator::Pipeline;
+
+    fn base_config() -> Config {
+        let mut cfg = Config::default();
+        cfg.primes_n = 500;
+        cfg.fateman_degree = 3;
+        cfg.chunk_size = 16;
+        cfg.use_kernel = false;
+        cfg.shards = 1;
+        cfg.shard_parallelism = 1;
+        cfg.dispatchers = 1;
+        cfg
+    }
+
+    fn primes_req() -> JobRequest {
+        JobRequest { workload: Workload::Primes, mode: Mode::Par(2) }
+    }
+
+    fn wait_until(what: &str, mut ok: impl FnMut() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !ok() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn ticket_resolves_and_chains_like_a_stream_cell() {
+        let pipeline = Pipeline::new(base_config()).unwrap();
+        let ticket = pipeline.submit(&primes_req()).unwrap();
+        // Dogfooding: chain a continuation on the ticket's Fut cell.
+        let count = ticket.and_then(|outcome| {
+            let res = outcome.expect("job failed");
+            match res.detail {
+                crate::coordinator::ResultDetail::Primes { count, .. } => count,
+                _ => 0,
+            }
+        });
+        let res = ticket.wait().unwrap();
+        assert!(res.verified);
+        assert!(!res.migrated);
+        assert!(res.queue_wait >= 0.0);
+        assert_eq!(*crate::susp::Susp::force(&count), 95); // π(500)
+        assert_eq!(
+            pipeline.metrics().snapshot().counters["ingress.admitted"],
+            1
+        );
+    }
+
+    #[test]
+    fn shed_policy_rejects_at_the_bound() {
+        let mut cfg = base_config();
+        cfg.queue_depth = 2;
+        cfg.admission = AdmissionPolicy::Shed;
+        let pipeline = Pipeline::new(cfg).unwrap();
+        pipeline.ingress().set_runner_hold(0, true);
+        let t1 = pipeline.submit(&primes_req()).unwrap();
+        let t2 = pipeline.submit(&primes_req()).unwrap();
+        // Both slots occupied and nothing executing: the third submission
+        // sheds, deterministically.
+        match pipeline.submit(&primes_req()) {
+            Err(SubmitError::Shed { queue_depth }) => assert_eq!(queue_depth, 2),
+            other => panic!("expected shed, got {other:?}"),
+        }
+        let snap = pipeline.metrics().snapshot();
+        assert_eq!(snap.counters["ingress.shed"], 1);
+        assert_eq!(snap.counters["ingress.admitted"], 2);
+        pipeline.ingress().set_runner_hold(0, false);
+        assert!(t1.wait().unwrap().verified);
+        assert!(t2.wait().unwrap().verified);
+        // Capacity fully recovered after the shed.
+        let t4 = pipeline.submit(&primes_req()).unwrap();
+        assert!(t4.wait().unwrap().verified);
+    }
+
+    #[test]
+    fn timeout_policy_sheds_late_and_releases_the_slot() {
+        let mut cfg = base_config();
+        cfg.queue_depth = 1;
+        cfg.admission = AdmissionPolicy::Timeout(50);
+        let pipeline = Pipeline::new(cfg).unwrap();
+        pipeline.ingress().set_runner_hold(0, true);
+        let t1 = pipeline.submit(&primes_req()).unwrap();
+        let started = Instant::now();
+        match pipeline.submit(&primes_req()) {
+            Err(SubmitError::Timeout { waited_ms, queue_depth }) => {
+                assert_eq!(waited_ms, 50);
+                assert_eq!(queue_depth, 1);
+            }
+            other => panic!("expected timeout, got {other:?}"),
+        }
+        assert!(started.elapsed() >= Duration::from_millis(45), "timed out too early");
+        assert_eq!(pipeline.metrics().snapshot().counters["ingress.timed_out"], 1);
+        // The timed-out submission left no residue: once the held job
+        // drains, the slot admits again.
+        pipeline.ingress().set_runner_hold(0, false);
+        assert!(t1.wait().unwrap().verified);
+        let t3 = pipeline.submit(&primes_req()).unwrap();
+        assert!(t3.wait().unwrap().verified);
+        assert_eq!(pipeline.ingress().pending(), 0);
+    }
+
+    #[test]
+    fn block_policy_waits_for_a_slot() {
+        let mut cfg = base_config();
+        cfg.queue_depth = 1;
+        let pipeline = Pipeline::new(cfg).unwrap();
+        pipeline.ingress().set_runner_hold(0, true);
+        let t1 = pipeline.submit(&primes_req()).unwrap();
+        let blocked = {
+            let pipeline = pipeline.clone();
+            std::thread::spawn(move || pipeline.submit(&primes_req()).unwrap().wait())
+        };
+        // Give the blocked submitter time to park, then open the gate:
+        // both jobs must complete.
+        std::thread::sleep(Duration::from_millis(30));
+        pipeline.ingress().set_runner_hold(0, false);
+        assert!(t1.wait().unwrap().verified);
+        assert!(blocked.join().unwrap().unwrap().verified);
+    }
+
+    #[test]
+    fn backed_up_shard_migrates_queued_jobs_to_idle_shard() {
+        let mut cfg = base_config();
+        cfg.shards = 2;
+        cfg.queue_depth = 16;
+        let pipeline = Pipeline::new(cfg).unwrap();
+        let ingress = pipeline.ingress();
+        let home = pipeline.shards().home_index(Workload::Primes);
+        let other = 1 - home;
+        // Gate both shards so the 8 submissions build a deterministic
+        // 4/4 backlog (single dispatcher routes in submit order;
+        // affinity + least-loaded alternates H,O,H,O…).
+        ingress.set_runner_hold(home, true);
+        ingress.set_runner_hold(other, true);
+        let tickets: Vec<JobTicket> =
+            (0..8).map(|_| pipeline.submit(&primes_req()).unwrap()).collect();
+        wait_until("4/4 routed backlog", || {
+            ingress.run_queue_depth(home) == 4 && ingress.run_queue_depth(other) == 4
+        });
+        // Open only the idle shard: it drains its own 4 jobs, then
+        // steals from the backed-up one while its depth exceeds the
+        // migration threshold (1) — exactly 3 whole jobs, oldest first.
+        ingress.set_runner_hold(other, false);
+        for i in [1, 3, 5, 7] {
+            let res = tickets[i].wait().unwrap();
+            assert_eq!(res.shard, other, "ticket {i} belongs to the idle shard");
+            assert!(!res.migrated);
+            assert!(res.verified);
+        }
+        for i in [0, 2, 4] {
+            let res = tickets[i].wait().unwrap();
+            assert!(res.migrated, "ticket {i} must have been stolen");
+            assert_eq!(res.shard, other, "migrated jobs execute on the thief shard");
+            assert!(res.verified, "migration must preserve verification");
+        }
+        assert_eq!(pipeline.shards().shard(home).migrated_out(), 3);
+        assert_eq!(pipeline.shards().shard(other).migrated_in(), 3);
+        // The job below the threshold stayed home.
+        assert!(!tickets[6].is_ready());
+        ingress.set_runner_hold(home, false);
+        let last = tickets[6].wait().unwrap();
+        assert_eq!(last.shard, home);
+        assert!(!last.migrated);
+        assert!(last.verified);
+        // Identical results regardless of where a job ran.
+        let want = tickets[6].try_result().unwrap().unwrap().detail;
+        for t in &tickets {
+            assert_eq!(t.try_result().unwrap().unwrap().detail, want);
+        }
+        let snap = pipeline.metrics().snapshot();
+        assert_eq!(snap.gauges[&format!("shard.{home}.migrated_out")], 3);
+        assert_eq!(snap.gauges[&format!("shard.{other}.migrated_in")], 3);
+        assert_eq!(snap.counters["ingress.migrated"], 3);
+        // Every lease returned.
+        assert!(pipeline.shards().iter().all(|s| s.inflight() == 0));
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs_before_returning() {
+        let mut cfg = base_config();
+        cfg.queue_depth = 8;
+        let pipeline = Pipeline::new(cfg).unwrap();
+        pipeline.ingress().set_runner_hold(0, true);
+        let tickets: Vec<JobTicket> =
+            (0..3).map(|_| pipeline.submit(&primes_req()).unwrap()).collect();
+        assert!(tickets.iter().all(|t| !t.is_ready()));
+        // Dropping the last handle shuts the ingress down; queued jobs
+        // are executed (holds cleared), not abandoned.
+        drop(pipeline);
+        for t in &tickets {
+            let res = t.wait().unwrap();
+            assert!(res.verified);
+        }
+    }
+}

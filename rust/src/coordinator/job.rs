@@ -63,6 +63,14 @@ pub struct JobResult {
     /// flight (work-stealing balance indicator; attribution is
     /// shard-level, so concurrent jobs on one shard share it).
     pub steals: u64,
+    /// Seconds between admission (`Pipeline::submit`) and execution
+    /// start — admission-queue plus run-queue time. 0 for jobs that
+    /// never waited.
+    pub queue_wait: f64,
+    /// The job was stolen off a backed-up shard's run queue by an idle
+    /// shard (cross-shard migration); `shard` is the shard that actually
+    /// executed it.
+    pub migrated: bool,
 }
 
 impl JobResult {
@@ -77,7 +85,8 @@ impl JobResult {
             }
         };
         format!(
-            "ok workload={} mode={} seconds={:.3} verified={} backend={} shard={} steals={} {detail}",
+            "ok workload={} mode={} seconds={:.3} verified={} backend={} shard={} steals={} \
+             queue_wait={:.3} migrated={} {detail}",
             self.request.workload.name(),
             self.request.mode.label(),
             self.seconds,
@@ -85,6 +94,8 @@ impl JobResult {
             self.backend,
             self.shard,
             self.steals,
+            self.queue_wait,
+            self.migrated,
         )
     }
 }
@@ -121,6 +132,8 @@ mod tests {
             backend: "-".into(),
             shard: 3,
             steals: 12,
+            queue_wait: 0.25,
+            migrated: true,
         };
         let line = r.render_line();
         assert!(line.contains("workload=primes"));
@@ -129,5 +142,7 @@ mod tests {
         assert!(line.contains("verified=true"));
         assert!(line.contains("shard=3"));
         assert!(line.contains("steals=12"));
+        assert!(line.contains("queue_wait=0.250"));
+        assert!(line.contains("migrated=true"));
     }
 }

@@ -1,35 +1,58 @@
-//! The coordinator: L3's service layer, sharded for concurrent traffic.
+//! The coordinator: L3's service layer — sharded, queued, and
+//! future-fronted for concurrent traffic.
 //!
 //! The paper's contribution is the stream/future construct itself, so the
 //! coordinator is the thin-but-real system around it: a [`Pipeline`] that
 //! owns the configuration, the optional PJRT engine, the metrics
-//! registry, and a [`ShardSet`] of executor-pool groups; a router
-//! ([`Pipeline::run`]) that maps `(workload, mode)` requests onto the
-//! algorithm implementations with the right evaluation strategy; and a
-//! [`serve`] line-protocol request loop (the `sfut serve` subcommand,
-//! stdio or TCP via [`TcpServer`]) so workloads can be driven externally.
+//! registry, a [`ShardSet`] of executor-pool groups, and the staged
+//! ingress; and a [`serve`] line-protocol request loop (the `sfut
+//! serve` subcommand, stdio or TCP via [`TcpServer`]) so workloads can be
+//! driven externally.
 //!
-//! Request flow:
+//! Request flow — four stages, every job, every entry point:
 //!
-//! 1. **Route** — [`ShardSet::route`] picks a shard by workload-affinity
-//!    hash with least-loaded fallback (see [`shard`]'s docs). The lease
-//!    holds the shard's load slot for the job's duration.
-//! 2. **Execute** — the workload body runs on a dedicated driver thread
-//!    with the configured stack size (deep Lazy filter chains need it);
-//!    `par(k)` jobs draw a warm, reusable `k`-worker pool from the shard
-//!    instead of spinning one up per job. Chunked workloads size their
-//!    blocks adaptively by default ([`crate::config::ChunkPolicy`]),
-//!    with the probe cost memoized per (shard, workload).
-//! 3. **Report** — per-stage timing, `shard.<id>.*` executor gauges, and
-//!    the job's shard + steal counters land in the metrics registry and
-//!    the [`JobResult`] line (`shard=… steals=…`).
+//! 1. **Admit** — [`Pipeline::submit`] places the request in a bounded
+//!    MPMC admission queue and returns a [`JobTicket`] *immediately*.
+//!    The bound is `Config::queue_depth` (jobs admitted but not yet
+//!    executing); at the bound the configured admission policy
+//!    (`Config::admission` = block | shed | timeout(ms)) applies —
+//!    backpressure is explicit, not an unbounded thread pile-up. The
+//!    ticket is built on the same lock-free [`Fut`](crate::susp::Fut)
+//!    state machine as the paper's stream cells: callers
+//!    `and_then`/`bind` continuations on results, or
+//!    [`JobTicket::wait`] synchronously.
+//! 2. **Route** — a small dispatcher pool hands each admitted job to a
+//!    shard via [`ShardSet::route`] (workload-affinity hash,
+//!    least-loaded fallback; see [`shard`]'s docs), lease in hand, onto
+//!    that shard's run queue.
+//! 3. **Execute** — per-shard runner threads (big workload stacks,
+//!    `Config::shard_parallelism` per shard) drain their own queue
+//!    first; idle runners steal whole queued jobs from any shard whose
+//!    queue depth exceeds `Config::migrate_threshold` — cross-shard
+//!    migration, surfacing as `shard.<id>.migrated_in/out`. `par(k)`
+//!    jobs draw a warm, reusable `k`-worker pool from their shard, and
+//!    chunked workloads size blocks adaptively by default
+//!    ([`crate::config::ChunkPolicy`]) with the probe cost memoized per
+//!    (shard, workload).
+//! 4. **Report** — per-stage timing, `shard.<id>.*` executor gauges,
+//!    ingress counters (`ingress.submitted/shed/timed_out/migrated`,
+//!    `ingress.queue_depth`), and the job's shard / steal / queue-wait /
+//!    migration fields land in the metrics registry and the
+//!    [`JobResult`] line (`shard=… steals=… queue_wait=… migrated=…`);
+//!    the runner fulfills the ticket, firing registered continuations.
+//!
+//! [`Pipeline::run`] survives as the synchronous veneer (`submit` +
+//! `wait`), so CLI one-shots and tests keep their pre-ingress semantics
+//! under the default `block` policy.
 
+mod ingress;
 mod job;
 mod router;
 mod server;
 pub mod shard;
 mod tcp;
 
+pub use ingress::{Ingress, JobTicket, SubmitError, TicketValue};
 pub use job::{JobRequest, JobResult, ResultDetail};
 pub use router::Pipeline;
 pub use server::serve;
@@ -113,6 +136,22 @@ mod tests {
         // Per-shard executor stats are published after every job.
         assert!(snap.gauges.contains_key("shard.0.tasks_executed"));
         assert!(snap.gauges.contains_key("shard.0.jobs_routed"));
+        // The synchronous path goes through the staged ingress too.
+        assert_eq!(snap.counters["ingress.submitted"], 2);
+        assert_eq!(snap.counters["ingress.admitted"], 2);
+        assert_eq!(snap.gauges["ingress.queue_depth"], 0);
+        assert!(snap.gauges.contains_key("shard.0.migrated_in"));
+    }
+
+    #[test]
+    fn run_reports_queue_wait_and_migration_fields() {
+        let pipeline = Pipeline::new(small_config()).unwrap();
+        let res = pipeline
+            .run(&JobRequest { workload: Workload::Primes, mode: Mode::Seq })
+            .unwrap();
+        assert!(res.queue_wait >= 0.0);
+        assert!(!res.migrated, "an uncontended run must not migrate");
+        assert!(res.render_line().contains("queue_wait="));
     }
 
     #[test]

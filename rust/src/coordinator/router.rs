@@ -3,21 +3,35 @@
 //!
 //! Monomorphization meets runtime dispatch here: the algorithms are
 //! generic over [`Eval`](crate::susp::Eval), the request is a runtime
-//! value, so the router holds the `match` that instantiates the right
-//! combination — exactly the substitution the paper performs by editing
-//! one import.
+//! value, so [`PipelineCore`] holds the `match` that instantiates the
+//! right combination — exactly the substitution the paper performs by
+//! editing one import.
 //!
-//! Since the coordinator went multi-shard, the router also decides
-//! *where*: every request is leased to a [`Shard`] (affinity hash +
-//! least-loaded fallback), draws its `par(k)` pool from that shard, and
-//! reports the shard id and steal delta in its [`JobResult`].
+//! Since the ingress rework, [`Pipeline`] is a cloneable handle over two
+//! halves:
+//!
+//! * [`PipelineCore`] — config, optional PJRT engine, metrics, the
+//!   [`ShardSet`], and the execute/verify/report logic
+//!   ([`PipelineCore::execute_routed`]). It knows nothing about queues.
+//! * [`Ingress`](super::ingress::Ingress) — the staged admission path
+//!   (admit → route → execute → report). [`Pipeline::submit`] enqueues a
+//!   request and returns a [`JobTicket`] immediately; dispatcher threads
+//!   route it to a shard's run queue; shard runner threads execute it
+//!   (stealing whole queued jobs across shards when one backs up) and
+//!   fulfill the ticket.
+//!
+//! The synchronous API survives as a veneer: [`Pipeline::run`] is
+//! `submit` + [`JobTicket::wait`], so every job — CLI, serve session,
+//! bench client — flows through the same admission queue and backpressure
+//! policy.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 use log::{debug, info, warn};
 
+use super::ingress::{Ingress, JobTicket, SubmitError};
 use super::job::{JobRequest, JobResult, ResultDetail};
 use super::shard::{Shard, ShardSet};
 use crate::config::{ChunkPolicy, Config, Mode, Workload};
@@ -32,8 +46,9 @@ use crate::susp::{FutureEval, LazyEval, StrictEval};
 use crate::workload::{fateman_pair, fateman_pair_big, Sizes};
 
 /// Long-lived coordinator state: config, optional PJRT engine, metrics,
-/// and the shard group.
-pub struct Pipeline {
+/// the shard group, and the execution logic. Shared (via `Arc`) between
+/// the [`Pipeline`] handle and the ingress worker threads.
+pub(super) struct PipelineCore {
     cfg: Config,
     sizes: Sizes,
     engine: Option<Arc<XlaEngine>>,
@@ -41,11 +56,20 @@ pub struct Pipeline {
     shards: ShardSet,
 }
 
+/// Handle to a running coordinator: cheap to clone, shared across serve
+/// sessions. Dropping the last handle shuts the ingress down (draining
+/// queued jobs, resolving their tickets).
+#[derive(Clone)]
+pub struct Pipeline {
+    core: Arc<PipelineCore>,
+    ingress: Arc<Ingress>,
+}
+
 impl Pipeline {
-    /// Build a pipeline. When `cfg.use_kernel` is set and the artifacts
-    /// directory exists, the PJRT engine is started (compiling every
-    /// artifact); otherwise chunked workloads run on the pure-Rust block
-    /// backend.
+    /// Build a pipeline and start its ingress (dispatcher + shard runner
+    /// threads). When `cfg.use_kernel` is set and the artifacts directory
+    /// exists, the PJRT engine is started (compiling every artifact);
+    /// otherwise chunked workloads run on the pure-Rust block backend.
     pub fn new(cfg: Config) -> Result<Pipeline> {
         cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
         let engine = if cfg.use_kernel && cfg.artifacts_dir.join("manifest.toml").exists() {
@@ -68,77 +92,146 @@ impl Pipeline {
         }
         let sizes = Sizes::from_config(&cfg);
         let shards = ShardSet::new(&cfg);
-        info!("coordinator sharded {} way(s)", shards.len());
+        info!(
+            "coordinator sharded {} way(s); ingress queue_depth={} admission={}",
+            shards.len(),
+            cfg.queue_depth,
+            cfg.admission.label()
+        );
         let metrics = MetricsRegistry::new();
         // Register every shard's gauges up front; per-job publishing
         // only refreshes the routed shard.
         shards.publish(&metrics);
-        Ok(Pipeline { cfg, sizes, engine, metrics, shards })
+        let core = Arc::new(PipelineCore { cfg, sizes, engine, metrics, shards });
+        let ingress = Arc::new(Ingress::start(Arc::clone(&core))?);
+        Ok(Pipeline { core, ingress })
     }
 
     pub fn config(&self) -> &Config {
-        &self.cfg
+        &self.core.cfg
     }
 
     pub fn metrics(&self) -> &MetricsRegistry {
-        &self.metrics
+        &self.core.metrics
     }
 
     pub fn engine(&self) -> Option<&Arc<XlaEngine>> {
-        self.engine.as_ref()
+        self.core.engine.as_ref()
     }
 
     /// The coordinator's shard group.
     pub fn shards(&self) -> &ShardSet {
-        &self.shards
+        &self.core.shards
+    }
+
+    /// The ingress stage: admission-queue introspection and per-shard
+    /// drain control (see [`Ingress`]).
+    pub fn ingress(&self) -> &Ingress {
+        &self.ingress
     }
 
     /// The block multiplier chunked workloads will use.
     pub fn multiplier(&self) -> Arc<dyn BlockMultiplier> {
+        self.core.multiplier()
+    }
+
+    /// The block siever the chunked sieve will use.
+    pub fn siever(&self) -> Arc<dyn BlockSiever> {
+        self.core.siever()
+    }
+
+    /// Stage 1 of the request path: admit the request into the bounded
+    /// ingress queue and return a [`JobTicket`] immediately. The ticket
+    /// is a [`Fut`](crate::susp::Fut) cell — callers `and_then`/`bind`
+    /// continuations on it exactly like the paper's stream cells, or
+    /// [`JobTicket::wait`] for the synchronous result.
+    ///
+    /// What happens when the queue is full is the configured
+    /// [`AdmissionPolicy`](crate::config::AdmissionPolicy): block, shed
+    /// ([`SubmitError::Shed`]), or bounded wait ([`SubmitError::Timeout`]).
+    pub fn submit(&self, req: &JobRequest) -> Result<JobTicket, SubmitError> {
+        self.submit_opts(req, true)
+    }
+
+    /// [`Pipeline::submit`] with verification made optional (the bench
+    /// harness verifies one pre-flight job per cell and skips the oracle
+    /// on the timed ones).
+    pub fn submit_opts(&self, req: &JobRequest, verify: bool) -> Result<JobTicket, SubmitError> {
+        self.ingress.submit(*req, verify)
+    }
+
+    /// Synchronous veneer over the staged path: admit, then block on the
+    /// ticket. Under the default `admission = block` policy this has the
+    /// pre-ingress semantics (never sheds, waits for capacity).
+    pub fn run(&self, req: &JobRequest) -> Result<JobResult> {
+        self.run_opts(req, true)
+    }
+
+    /// [`Pipeline::run`] with verification made optional.
+    pub fn run_opts(&self, req: &JobRequest, verify: bool) -> Result<JobResult> {
+        self.submit_opts(req, verify).map_err(|e| anyhow!("{e}"))?.wait()
+    }
+}
+
+impl PipelineCore {
+    pub(super) fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    pub(super) fn shards(&self) -> &ShardSet {
+        &self.shards
+    }
+
+    pub(super) fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    fn multiplier(&self) -> Arc<dyn BlockMultiplier> {
         match &self.engine {
             Some(engine) => Arc::new(KernelMultiplier::new(Arc::clone(engine))),
             None => Arc::new(RustMultiplier),
         }
     }
 
-    /// The block siever the chunked sieve will use.
-    pub fn siever(&self) -> Arc<dyn BlockSiever> {
+    fn siever(&self) -> Arc<dyn BlockSiever> {
         match &self.engine {
             Some(engine) => Arc::new(KernelSiever::new(Arc::clone(engine))),
             None => Arc::new(RustSiever),
         }
     }
 
-    /// Run one job on a dedicated big-stack driver thread; publishes
-    /// timing to the metrics registry and verifies the result against
-    /// the independent oracle. Only the workload itself is timed —
+    /// Stage 3 + 4 of the request path: execute one already-routed job on
+    /// the calling thread (an ingress runner, spawned with the configured
+    /// big stack) and report. Publishes timing to the metrics registry
+    /// and verifies the result against the independent oracle. Only the
+    /// workload itself is timed — queue wait arrives as an input, and
     /// verification runs after the clock stops.
-    pub fn run(&self, req: &JobRequest) -> Result<JobResult> {
-        self.run_opts(req, true)
-    }
-
-    /// [`Pipeline::run`] with verification made optional: the bench
-    /// harness verifies the first sample of a cell and skips the oracle
-    /// (a full classical multiplication) on the remaining ones.
-    pub fn run_opts(&self, req: &JobRequest, verify: bool) -> Result<JobResult> {
-        let req = *req;
+    pub(super) fn execute_routed(
+        &self,
+        req: JobRequest,
+        shard: &Arc<Shard>,
+        verify: bool,
+        queue_wait: Duration,
+        migrated: bool,
+    ) -> Result<JobResult> {
         let label = req.label();
         let timer = self.metrics.timer(&format!("job.{label}"));
-
-        let lease = self.shards.route(req.workload);
-        let shard = Arc::clone(lease.shard());
         let steals_before = shard.stats().tasks_stolen;
 
         let started = Instant::now();
-        let detail = self.run_on_driver(req, &shard)?;
+        let detail = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.workload_body(req, shard.as_ref())
+        }))
+        .map_err(|p| anyhow!("workload panicked: {}", crate::susp::panic_text(&*p)))??;
         let took = started.elapsed();
-        drop(lease);
 
         timer.record(took);
         debug!(
-            "job {label} finished in {:.3}s on shard {}",
+            "job {label} finished in {:.3}s on shard {} (queue_wait {:.3}s migrated={})",
             took.as_secs_f64(),
-            shard.id()
+            shard.id(),
+            queue_wait.as_secs_f64(),
+            migrated
         );
         self.metrics.counter("jobs.completed").inc();
         let stats_after = shard.stats();
@@ -161,25 +254,8 @@ impl Pipeline {
             backend,
             shard: shard.id(),
             steals,
-        })
-    }
-
-    /// Execute the workload body on a thread with the configured stack.
-    fn run_on_driver(&self, req: JobRequest, shard: &Arc<Shard>) -> Result<ResultDetail> {
-        let stack = self.cfg.stack_size;
-        std::thread::scope(|s| {
-            std::thread::Builder::new()
-                .name(format!("sfut-driver-{}", req.label()))
-                .stack_size(stack)
-                .spawn_scoped(s, || self.workload_body(req, shard.as_ref()))
-                .context("spawning driver thread")?
-                .join()
-                .map_err(|p| {
-                    anyhow::anyhow!(
-                        "workload panicked: {}",
-                        crate::susp::panic_text(&*p)
-                    )
-                })?
+            queue_wait: queue_wait.as_secs_f64(),
+            migrated,
         })
     }
 

@@ -3,27 +3,64 @@
 //! Protocol (one request per line):
 //!
 //! ```text
-//! run <workload> <mode>   → ok workload=... seconds=... | err <message>
-//! metrics                 → multi-line snapshot, terminated by "."
-//! config                  → one line per effective config field
-//! help                    → command summary
-//! quit                    → closes the session
+//! run <workload> <mode>      → ok workload=... seconds=... | err <message>
+//! submit <workload> <mode>   → ticket id=N               | err admission=...
+//! wait <id>                  → ok workload=... (blocks)   | err <message>
+//! poll <id>                  → ticket id=N state=<empty|running|ready|panicked>
+//! metrics                    → multi-line snapshot, terminated by "."
+//! config                     → one line per effective config field
+//! help                       → command summary
+//! quit                       → closes the session
 //! ```
+//!
+//! `run` is the synchronous veneer (admit + wait in one step); `submit`
+//! exposes the staged ingress directly — the session gets a [`JobTicket`]
+//! handle back *before* the job runs, can pipeline more submissions, and
+//! collects results with `wait`. When the bounded admission queue is full
+//! the configured policy answers: `err admission=shed …` /
+//! `err admission=timeout …` lines (well-formed, machine-parseable)
+//! instead of an ok line.
 //!
 //! Written against `BufRead`/`Write` so tests drive it with in-memory
 //! buffers; `main.rs` connects it to stdin/stdout.
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, Write};
 
 use anyhow::Result;
 
+use super::ingress::JobTicket;
 use super::job::JobRequest;
 use super::router::Pipeline;
+use crate::susp::FutState;
+
+/// Most tickets a session keeps addressable at once. A resolved ticket
+/// pins its full `JobResult` (and `Fut` cell), so an unbounded table
+/// would grow for the life of a long-running monitoring session; past
+/// the cap the oldest resolved tickets are released (waiting them again
+/// answers `err ticket released`).
+const MAX_SESSION_TICKETS: usize = 1024;
+
+fn state_label(state: FutState) -> &'static str {
+    match state {
+        FutState::Empty => "empty",
+        FutState::Running => "running",
+        FutState::Ready => "ready",
+        FutState::Panicked => "panicked",
+    }
+}
 
 /// Serve requests from `input`, writing responses to `output`, until
-/// `quit` or EOF. Returns the number of jobs executed.
+/// `quit` or EOF. Returns the number of jobs whose results were
+/// delivered (via `run` or `wait`).
 pub fn serve(pipeline: &Pipeline, input: impl BufRead, mut output: impl Write) -> Result<u64> {
     let mut jobs = 0u64;
+    // Tickets this session has submitted; ids are 1-based submission
+    // order. A waited ticket stays addressable (wait is idempotent)
+    // until the table exceeds [`MAX_SESSION_TICKETS`] and it is among
+    // the oldest resolved entries released to make room.
+    let mut tickets: BTreeMap<u64, JobTicket> = BTreeMap::new();
+    let mut next_ticket: u64 = 1;
     for line in input.lines() {
         let line = line?;
         let line = line.trim();
@@ -37,7 +74,11 @@ pub fn serve(pipeline: &Pipeline, input: impl BufRead, mut output: impl Write) -
         match cmd {
             "quit" | "exit" => break,
             "help" => {
-                writeln!(output, "commands: run <workload> <mode> | metrics | config | quit")?;
+                writeln!(
+                    output,
+                    "commands: run <workload> <mode> | submit <workload> <mode> | \
+                     wait <id> | poll <id> | metrics | config | quit"
+                )?;
                 writeln!(
                     output,
                     "workloads: {}",
@@ -53,12 +94,52 @@ pub fn serve(pipeline: &Pipeline, input: impl BufRead, mut output: impl Write) -
                 writeln!(output, ".")?;
             }
             "run" => match JobRequest::parse(rest) {
-                Ok(req) => match pipeline.run(&req) {
-                    Ok(result) => {
-                        jobs += 1;
-                        writeln!(output, "{}", result.render_line())?;
+                Ok(req) => match pipeline.submit(&req) {
+                    Ok(ticket) => match ticket.wait() {
+                        Ok(result) => {
+                            jobs += 1;
+                            writeln!(output, "{}", result.render_line())?;
+                        }
+                        Err(e) => writeln!(output, "err {e:#}")?,
+                    },
+                    Err(adm) => writeln!(output, "{}", adm.render_line(&req))?,
+                },
+                Err(e) => writeln!(output, "err {e}")?,
+            },
+            "submit" => match JobRequest::parse(rest) {
+                Ok(req) => match pipeline.submit(&req) {
+                    Ok(ticket) => {
+                        let state = state_label(ticket.state());
+                        let id = next_ticket;
+                        next_ticket += 1;
+                        tickets.insert(id, ticket);
+                        release_oldest_resolved(&mut tickets, MAX_SESSION_TICKETS);
+                        writeln!(output, "ticket id={id} state={state}")?;
                     }
-                    Err(e) => writeln!(output, "err {e:#}")?,
+                    Err(adm) => writeln!(output, "{}", adm.render_line(&req))?,
+                },
+                Err(e) => writeln!(output, "err {e}")?,
+            },
+            "wait" => match parse_ticket_id(rest, next_ticket) {
+                Ok(id) => match tickets.get(&id) {
+                    Some(ticket) => match ticket.wait() {
+                        Ok(result) => {
+                            jobs += 1;
+                            writeln!(output, "{}", result.render_line())?;
+                        }
+                        Err(e) => writeln!(output, "err {e:#}")?,
+                    },
+                    None => writeln!(output, "err ticket released: {id}")?,
+                },
+                Err(e) => writeln!(output, "err {e}")?,
+            },
+            "poll" => match parse_ticket_id(rest, next_ticket) {
+                Ok(id) => match tickets.get(&id) {
+                    Some(ticket) => {
+                        let state = state_label(ticket.state());
+                        writeln!(output, "ticket id={id} state={state}")?;
+                    }
+                    None => writeln!(output, "err ticket released: {id}")?,
                 },
                 Err(e) => writeln!(output, "err {e}")?,
             },
@@ -69,24 +150,61 @@ pub fn serve(pipeline: &Pipeline, input: impl BufRead, mut output: impl Write) -
     Ok(jobs)
 }
 
+/// Keep the session's ticket table bounded: past the cap, drop the
+/// oldest *resolved* tickets (their jobs are done and delivered; the
+/// dropped handles release their `JobResult`s). Unresolved tickets are
+/// never dropped — their count is already bounded by the admission
+/// queue and the runners.
+fn release_oldest_resolved(tickets: &mut BTreeMap<u64, JobTicket>, cap: usize) {
+    while tickets.len() > cap {
+        let Some(oldest_done) =
+            tickets.iter().find(|(_, t)| t.is_ready()).map(|(&id, _)| id)
+        else {
+            return;
+        };
+        tickets.remove(&oldest_done);
+    }
+}
+
+fn parse_ticket_id(rest: &str, next_ticket: u64) -> Result<u64, String> {
+    let id: u64 = rest
+        .trim()
+        .parse()
+        .map_err(|_| format!("bad ticket id: {rest:?} (want a number from submit)"))?;
+    if id == 0 || id >= next_ticket {
+        return Err(format!(
+            "unknown ticket: {id} ({} issued this session)",
+            next_ticket - 1
+        ));
+    }
+    Ok(id)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Config;
+    use crate::config::{AdmissionPolicy, Config};
 
-    fn pipeline() -> Pipeline {
+    fn config() -> Config {
         let mut cfg = Config::default();
         cfg.primes_n = 200;
         cfg.fateman_degree = 2;
         cfg.use_kernel = false;
-        Pipeline::new(cfg).unwrap()
+        cfg
+    }
+
+    fn pipeline() -> Pipeline {
+        Pipeline::new(config()).unwrap()
+    }
+
+    fn drive_pipeline(p: &Pipeline, input: &str) -> (u64, String) {
+        let mut out = Vec::new();
+        let jobs = serve(p, input.as_bytes(), &mut out).unwrap();
+        (jobs, String::from_utf8(out).unwrap())
     }
 
     fn drive(input: &str) -> (u64, String) {
-        let p = pipeline();
-        let mut out = Vec::new();
-        let jobs = serve(&p, input.as_bytes(), &mut out).unwrap();
-        (jobs, String::from_utf8(out).unwrap())
+        drive_pipeline(&pipeline(), input)
     }
 
     #[test]
@@ -97,6 +215,110 @@ mod tests {
         assert!(out.contains("ok workload=stream mode=par(2)"));
         assert!(out.contains("verified=true"));
         assert!(out.contains("shard="), "results must report their shard");
+        assert!(out.contains("queue_wait="), "results must report queue wait");
+    }
+
+    #[test]
+    fn submit_wait_roundtrip() {
+        let (jobs, out) = drive("submit primes seq\npoll 1\nwait 1\nwait 1\nquit\n");
+        // Waiting the same ticket twice re-delivers the result.
+        assert_eq!(jobs, 2);
+        assert!(out.contains("ticket id=1 state="), "{out}");
+        let oks: Vec<_> = out.lines().filter(|l| l.starts_with("ok ")).collect();
+        assert_eq!(oks.len(), 2, "{out}");
+        assert!(oks[0].contains("verified=true"));
+        // The poll line reports a lifecycle state.
+        assert!(
+            out.lines().any(|l| l.starts_with("ticket id=1 state=")
+                && (l.ends_with("empty")
+                    || l.ends_with("running")
+                    || l.ends_with("ready")
+                    || l.ends_with("panicked"))),
+            "{out}"
+        );
+    }
+
+    #[test]
+    fn submissions_pipeline_ahead_of_waits() {
+        let (jobs, out) =
+            drive("submit primes seq\nsubmit primes_chunked par(2)\nwait 2\nwait 1\nquit\n");
+        assert_eq!(jobs, 2);
+        assert!(out.contains("ticket id=1"));
+        assert!(out.contains("ticket id=2"));
+        let oks: Vec<_> = out.lines().filter(|l| l.starts_with("ok ")).collect();
+        assert_eq!(oks.len(), 2);
+        // wait 2 answered first: results come back in wait order, not
+        // submit order.
+        assert!(oks[0].contains("workload=primes_chunked"), "{out}");
+        assert!(oks[1].contains("workload=primes mode=seq"), "{out}");
+    }
+
+    #[test]
+    fn bad_ticket_ids_get_err_lines() {
+        let (jobs, out) = drive("wait 1\npoll 0\nsubmit primes seq\nwait two\nwait 1\nquit\n");
+        assert_eq!(jobs, 1);
+        assert_eq!(out.lines().filter(|l| l.starts_with("err")).count(), 3, "{out}");
+        assert!(out.contains("unknown ticket"));
+        assert!(out.contains("bad ticket id"));
+    }
+
+    #[test]
+    fn shed_admission_renders_err_line() {
+        let mut cfg = config();
+        cfg.shards = 1;
+        cfg.shard_parallelism = 1;
+        cfg.queue_depth = 1;
+        cfg.admission = AdmissionPolicy::Shed;
+        let p = Pipeline::new(cfg).unwrap();
+        // Gate the only shard so submissions pile up deterministically:
+        // slot taken by the first submit, second sheds.
+        p.ingress().set_runner_hold(0, true);
+        let mut out = Vec::new();
+        let jobs =
+            serve(&p, "submit primes seq\nsubmit primes seq\n".as_bytes(), &mut out).unwrap();
+        assert_eq!(jobs, 0);
+        let out = String::from_utf8(out).unwrap();
+        assert!(out.contains("ticket id=1"), "{out}");
+        assert!(
+            out.contains("err admission=shed workload=primes mode=seq queue_depth=1"),
+            "{out}"
+        );
+        p.ingress().set_runner_hold(0, false);
+    }
+
+    #[test]
+    fn ticket_table_releases_oldest_resolved_past_cap() {
+        let mut cfg = config();
+        // One shard, one runner: holding shard 0 provably parks all
+        // execution, so the pending tickets below stay unresolved.
+        cfg.shards = 1;
+        cfg.shard_parallelism = 1;
+        let p = Pipeline::new(cfg).unwrap();
+        let mut tickets: BTreeMap<u64, JobTicket> = BTreeMap::new();
+        for id in 1..=4u64 {
+            let req = JobRequest::parse("primes seq").unwrap();
+            let ticket = p.submit(&req).unwrap();
+            ticket.wait().unwrap();
+            tickets.insert(id, ticket);
+        }
+        // Cap 2: the two oldest resolved tickets are released, newest
+        // survive, ids untouched.
+        release_oldest_resolved(&mut tickets, 2);
+        assert_eq!(tickets.len(), 2);
+        assert!(tickets.contains_key(&3) && tickets.contains_key(&4));
+        // Unresolved tickets are never dropped, even over the cap.
+        p.ingress().set_runner_hold(0, true);
+        let req = JobRequest::parse("primes seq").unwrap();
+        tickets.insert(5, p.submit(&req).unwrap());
+        tickets.insert(6, p.submit(&req).unwrap());
+        tickets.insert(7, p.submit(&req).unwrap());
+        release_oldest_resolved(&mut tickets, 1);
+        assert!(
+            tickets.values().all(|t| !t.is_ready()),
+            "resolved released first, pending retained"
+        );
+        assert_eq!(tickets.len(), 3);
+        p.ingress().set_runner_hold(0, false);
     }
 
     #[test]
@@ -114,10 +336,12 @@ mod tests {
     }
 
     #[test]
-    fn help_lists_workloads() {
+    fn help_lists_workloads_and_ticket_commands() {
         let (_, out) = drive("help\n");
         assert!(out.contains("stream_big"));
         assert!(out.contains("par(N)"));
+        assert!(out.contains("submit"));
+        assert!(out.contains("wait <id>"));
     }
 
     #[test]

@@ -81,6 +81,12 @@ pub struct Shard {
     inflight: AtomicUsize,
     jobs_routed: AtomicU64,
     affinity_hits: AtomicU64,
+    /// Queued jobs another shard's idle runner stole from this one
+    /// (cross-shard migration, the backed-up side).
+    migrated_out: AtomicU64,
+    /// Queued jobs this shard's runners stole from a backed-up shard
+    /// (cross-shard migration, the idle side).
+    migrated_in: AtomicU64,
     /// Workload name → memoized adaptive-chunking probe cost.
     costs: Mutex<BTreeMap<String, CostCache>>,
 }
@@ -94,6 +100,8 @@ impl Shard {
             inflight: AtomicUsize::new(0),
             jobs_routed: AtomicU64::new(0),
             affinity_hits: AtomicU64::new(0),
+            migrated_out: AtomicU64::new(0),
+            migrated_in: AtomicU64::new(0),
             costs: Mutex::new(BTreeMap::new()),
         }
     }
@@ -176,6 +184,24 @@ impl Shard {
         self.affinity_hits.load(Ordering::Relaxed)
     }
 
+    /// Queued jobs stolen *from* this shard by idle shards.
+    pub fn migrated_out(&self) -> u64 {
+        self.migrated_out.load(Ordering::Relaxed)
+    }
+
+    /// Queued jobs this shard stole from backed-up shards.
+    pub fn migrated_in(&self) -> u64 {
+        self.migrated_in.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn note_migrated_out(&self) {
+        self.migrated_out.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_migrated_in(&self) {
+        self.migrated_in.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Publish this shard's aggregates as `shard.<id>.*` gauges. Called
     /// per job for the routed shard only (O(1) in shard count — a full
     /// [`ShardSet::publish`] per job would bill every shard's stats
@@ -197,6 +223,8 @@ impl Shard {
         metrics.gauge(&format!("shard.{id}.inflight")).set(self.inflight() as u64);
         metrics.gauge(&format!("shard.{id}.jobs_routed")).set(self.jobs_routed());
         metrics.gauge(&format!("shard.{id}.affinity_hits")).set(self.affinity_hits());
+        metrics.gauge(&format!("shard.{id}.migrated_out")).set(self.migrated_out());
+        metrics.gauge(&format!("shard.{id}.migrated_in")).set(self.migrated_in());
     }
 
     /// Aggregate [`ExecutorStats`] over every pool this shard owns,
@@ -305,6 +333,17 @@ impl ShardSet {
         if best == home {
             shard.affinity_hits.fetch_add(1, Ordering::Relaxed);
         }
+        ShardLease { shard }
+    }
+
+    /// A load lease on a *specific* shard, bypassing routing — the
+    /// cross-shard migration path (the thief shard adopts a job that was
+    /// routed elsewhere) and anything else that already knows its shard.
+    /// Counts toward `inflight` like a routed lease but not toward
+    /// `jobs_routed`/`affinity_hits`: migration is not routing.
+    pub fn lease_on(&self, index: usize) -> ShardLease {
+        let shard = Arc::clone(&self.shards[index]);
+        shard.inflight.fetch_add(1, Ordering::Relaxed);
         ShardLease { shard }
     }
 
@@ -469,6 +508,30 @@ mod tests {
         );
         // Different workload: independent slot.
         assert_eq!(shard.cost_cache("chunked_big").get(), None);
+    }
+
+    #[test]
+    fn direct_leases_and_migration_counters() {
+        let set = set_of(2);
+        // lease_on pins the named shard and counts load, but is not a
+        // routing event.
+        let lease = set.lease_on(1);
+        assert_eq!(lease.id(), 1);
+        assert_eq!(set.shard(1).inflight(), 1);
+        assert_eq!(set.shard(1).jobs_routed(), 0);
+        drop(lease);
+        assert_eq!(set.shard(1).inflight(), 0);
+
+        set.shard(0).note_migrated_out();
+        set.shard(1).note_migrated_in();
+        assert_eq!(set.shard(0).migrated_out(), 1);
+        assert_eq!(set.shard(1).migrated_in(), 1);
+        let metrics = MetricsRegistry::new();
+        set.publish(&metrics);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.gauges["shard.0.migrated_out"], 1);
+        assert_eq!(snap.gauges["shard.1.migrated_in"], 1);
+        assert_eq!(snap.gauges["shard.0.migrated_in"], 0);
     }
 
     #[test]

@@ -2,12 +2,22 @@
 //!
 //! One session thread per connection, all sharing the [`Pipeline`] (and
 //! therefore the PJRT engine, the metrics registry, and the config).
-//! The protocol is identical to the stdio server (`server.rs`).
+//! The protocol is identical to the stdio server (`server.rs`),
+//! including the ticketed `submit`/`wait` commands and the
+//! `err admission=…` shed/timeout lines.
+//!
+//! Session threads are tracked: [`TcpServer::shutdown`] stops accepting,
+//! then waits (bounded) for in-flight sessions to finish so their jobs
+//! complete before the pipeline drops; stragglers hung on a live client
+//! socket are detached with a warning rather than blocking shutdown
+//! forever.
 
 use std::io::BufReader;
 use std::net::{TcpListener, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 use log::{info, warn};
@@ -15,11 +25,16 @@ use log::{info, warn};
 use super::router::Pipeline;
 use super::server::serve;
 
+/// How long [`TcpServer::shutdown`] waits for in-flight sessions before
+/// detaching them.
+const SESSION_DRAIN_WINDOW: Duration = Duration::from_secs(5);
+
 /// Handle to a running TCP server (for tests and graceful shutdown).
 pub struct TcpServer {
     local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     sessions: Arc<AtomicU64>,
+    session_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -32,15 +47,23 @@ impl TcpServer {
         info!("sfut tcp server listening on {local_addr}");
         let stop = Arc::new(AtomicBool::new(false));
         let sessions = Arc::new(AtomicU64::new(0));
+        let session_threads = Arc::new(Mutex::new(Vec::new()));
         let stop2 = Arc::clone(&stop);
         let sessions2 = Arc::clone(&sessions);
+        let threads2 = Arc::clone(&session_threads);
         let accept_thread = std::thread::Builder::new()
             .name("sfut-tcp-accept".to_string())
             .spawn(move || {
-                accept_loop(listener, pipeline, stop2, sessions2);
+                accept_loop(listener, pipeline, stop2, sessions2, threads2);
             })
             .context("spawning accept thread")?;
-        Ok(TcpServer { local_addr, stop, sessions, accept_thread: Some(accept_thread) })
+        Ok(TcpServer {
+            local_addr,
+            stop,
+            sessions,
+            session_threads,
+            accept_thread: Some(accept_thread),
+        })
     }
 
     pub fn local_addr(&self) -> std::net::SocketAddr {
@@ -52,12 +75,46 @@ impl TcpServer {
         self.sessions.load(Ordering::Relaxed)
     }
 
-    /// Stop accepting new connections and join the accept thread.
-    /// In-flight sessions drain on their own threads.
+    /// Session threads currently tracked (unjoined). 0 after a clean
+    /// [`TcpServer::shutdown`].
+    pub fn live_sessions(&self) -> usize {
+        self.session_threads.lock().unwrap().len()
+    }
+
+    /// Stop accepting new connections, join the accept thread, then wait
+    /// (up to [`SESSION_DRAIN_WINDOW`]) for in-flight session threads so
+    /// their jobs finish before the pipeline drops. Sessions still
+    /// blocked on a live client after the window are detached with a
+    /// warning — they keep draining on their own but no longer pin
+    /// shutdown.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
+        }
+        let mut handles: Vec<JoinHandle<()>> =
+            self.session_threads.lock().unwrap().drain(..).collect();
+        let deadline = Instant::now() + SESSION_DRAIN_WINDOW;
+        while !handles.is_empty() {
+            let (done, still_running): (Vec<_>, Vec<_>) =
+                handles.into_iter().partition(|h| h.is_finished());
+            for h in done {
+                let _ = h.join();
+            }
+            handles = still_running;
+            if handles.is_empty() {
+                break;
+            }
+            if Instant::now() >= deadline {
+                warn!(
+                    "{} session(s) still running after {:?} drain window; detaching",
+                    handles.len(),
+                    SESSION_DRAIN_WINDOW
+                );
+                handles.clear();
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
         }
     }
 }
@@ -73,6 +130,7 @@ fn accept_loop(
     pipeline: Arc<Pipeline>,
     stop: Arc<AtomicBool>,
     sessions: Arc<AtomicU64>,
+    session_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
 ) {
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
@@ -94,8 +152,23 @@ fn accept_loop(
                         Err(e) => warn!("session {peer} errored: {e:#}"),
                     }
                 });
-                if let Err(e) = spawned {
-                    warn!("could not spawn session thread: {e}");
+                match spawned {
+                    Ok(handle) => {
+                        let mut threads = session_threads.lock().unwrap();
+                        // Opportunistically reap finished sessions so a
+                        // long-lived server doesn't accumulate handles.
+                        let mut kept = Vec::with_capacity(threads.len() + 1);
+                        for h in threads.drain(..) {
+                            if h.is_finished() {
+                                let _ = h.join();
+                            } else {
+                                kept.push(h);
+                            }
+                        }
+                        *threads = kept;
+                        threads.push(handle);
+                    }
+                    Err(e) => warn!("could not spawn session thread: {e}"),
                 }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -138,6 +211,18 @@ mod tests {
         let server = TcpServer::start(pipeline(), "127.0.0.1:0").unwrap();
         let lines = session(server.local_addr(), "run primes seq\nquit\n");
         assert!(lines.iter().any(|l| l.contains("ok workload=primes")), "{lines:?}");
+    }
+
+    #[test]
+    fn tcp_ticketed_submit_wait_roundtrip() {
+        let server = TcpServer::start(pipeline(), "127.0.0.1:0").unwrap();
+        let lines =
+            session(server.local_addr(), "submit primes par(2)\nwait 1\nquit\n");
+        assert!(lines.iter().any(|l| l.starts_with("ticket id=1")), "{lines:?}");
+        assert!(
+            lines.iter().any(|l| l.starts_with("ok ") && l.contains("verified=true")),
+            "{lines:?}"
+        );
     }
 
     #[test]
@@ -220,6 +305,26 @@ mod tests {
             let _ = sock.read_to_string(&mut buf);
             assert!(!buf.contains("ok workload"), "server answered after shutdown: {buf}");
         }
+    }
+
+    #[test]
+    fn tcp_shutdown_joins_finished_sessions() {
+        let p = pipeline();
+        let mut server = TcpServer::start(Arc::clone(&p), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        // Run three complete sessions (responses read back, so the jobs
+        // definitely executed), then shut down: every session thread must
+        // be joined — no detached leftovers.
+        for _ in 0..3 {
+            let lines = session(addr, "run primes seq\nquit\n");
+            assert!(lines.iter().any(|l| l.starts_with("ok")), "{lines:?}");
+        }
+        server.shutdown();
+        assert_eq!(server.live_sessions(), 0, "shutdown must join session threads");
+        assert_eq!(p.metrics().snapshot().counters["jobs.completed"], 3);
+        // Idempotent.
+        server.shutdown();
+        assert_eq!(server.live_sessions(), 0);
     }
 
     #[test]

@@ -51,16 +51,26 @@
 //!   is the coordinator default ([`config::ChunkPolicy`]); the probe
 //!   cost is memoized per (shard, workload) in a [`stream::CostCache`]
 //!   so repeated jobs skip it.
-//! * **Sharded coordinator** ([`coordinator::ShardSet`]) — concurrent
-//!   traffic fans out over N executor-pool shards (workload-affinity
-//!   hash, least-loaded fallback, warm pool reuse instead of
-//!   pool-per-job). Per-shard `ExecutorStats` surface as
-//!   `shard.<id>.*` gauges, and every `JobResult` reports its shard and
-//!   steal counters. `cargo bench --bench pipeline_throughput` records
-//!   jobs/sec + p50/p95 latency at shards ∈ {1, 2, N} into
-//!   `BENCH_pipeline.json`, which CI's `bench-gate` job enforces
-//!   against (>25% throughput regressions fail; see
-//!   `ci/check_bench.sh` and `sfut check-bench`).
+//! * **Sharded coordinator behind a staged ingress**
+//!   ([`coordinator::ShardSet`], `coordinator::ingress`) — every job
+//!   takes the same four-stage path: **admit** into a bounded MPMC
+//!   queue ([`Pipeline::submit`](coordinator::Pipeline::submit) returns
+//!   a [`JobTicket`](coordinator::JobTicket) — a [`susp::Fut`] cell, so
+//!   the service layer composes with `and_then`/`bind` exactly like the
+//!   paper's stream cells — and `queue_depth`/`admission` =
+//!   block | shed | timeout(ms) give explicit backpressure); **route**
+//!   via workload-affinity hash with least-loaded fallback onto a
+//!   shard's run queue; **execute** on per-shard runner threads drawing
+//!   warm `par(k)` pools, with idle shards stealing whole queued jobs
+//!   from backed-up ones (cross-shard migration,
+//!   `shard.<id>.migrated_in/out`); **report** timing, queue wait, and
+//!   migration into the metrics registry and the `JobResult` line.
+//!   `cargo bench --bench pipeline_throughput` records jobs/sec +
+//!   p50/p95 latency + queue-wait p50/p95 + shed rate at shards
+//!   ∈ {1, 2, N} into `BENCH_pipeline.json`, which CI's `bench-gate`
+//!   job enforces (>25% throughput regressions fail; p95 latency and
+//!   queue-wait growth warn — see `ci/check_bench.sh` and
+//!   `sfut check-bench --latency-threshold`).
 
 pub mod bench_harness;
 pub mod bigint;

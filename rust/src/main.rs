@@ -10,12 +10,17 @@
 //! sfut check-bench <baseline> <current>    perf-regression gate on BENCH_pipeline.json
 //!
 //! options:
-//!   --config <file>      TOML-subset config file
-//!   --set <key>=<value>  override one config key (repeatable)
-//!   --scale <f>          shorthand for --set scale=<f>
-//!   --no-kernel          shorthand for --set use_kernel=false
-//!   --samples <n>        bench samples per cell
-//!   --threshold <f>      check-bench regression tolerance (default 0.25)
+//!   --config <file>          TOML-subset config file
+//!   --set <key>=<value>      override one config key (repeatable)
+//!   --scale <f>              shorthand for --set scale=<f>
+//!   --no-kernel              shorthand for --set use_kernel=false
+//!   --samples <n>            bench samples per cell
+//!   --queue-depth <n>        shorthand for --set queue_depth=<n>
+//!   --admission <policy>     shorthand for --set admission=<policy>
+//!                            (block | shed | timeout(MS))
+//!   --threshold <f>          check-bench regression tolerance (default 0.25)
+//!   --latency-threshold <f>  check-bench p95 growth tolerated before a
+//!                            warn-only finding (default 0.25)
 //! ```
 //!
 //! (clap is unavailable offline; parsing is hand-rolled and strict —
@@ -36,6 +41,7 @@ struct Cli {
     config_file: Option<PathBuf>,
     overrides: Vec<(String, String)>,
     threshold: Option<f64>,
+    latency_threshold: Option<f64>,
 }
 
 fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
@@ -46,6 +52,7 @@ fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
         config_file: None,
         overrides: Vec::new(),
         threshold: None,
+        latency_threshold: None,
     };
     while let Some(arg) = args.next() {
         match arg.as_str() {
@@ -69,6 +76,26 @@ fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
             "--no-kernel" => {
                 cli.overrides.push(("use_kernel".to_string(), "false".to_string()));
             }
+            "--queue-depth" => {
+                let v = args.next().context("--queue-depth needs a number")?;
+                cli.overrides.push(("queue_depth".to_string(), v));
+            }
+            "--admission" => {
+                let v = args
+                    .next()
+                    .context("--admission needs a policy (block | shed | timeout(MS))")?;
+                cli.overrides.push(("admission".to_string(), v));
+            }
+            "--latency-threshold" => {
+                let v = args.next().context("--latency-threshold needs a number > 0")?;
+                let t: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad --latency-threshold value: {v}"))?;
+                if !(t > 0.0) {
+                    bail!("--latency-threshold must be > 0, got {v}");
+                }
+                cli.latency_threshold = Some(t);
+            }
             "--threshold" => {
                 let v = args.next().context("--threshold needs a number in (0, 1)")?;
                 let t: f64 = v
@@ -85,6 +112,9 @@ fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
     }
     if cli.threshold.is_some() && cli.command != "check-bench" {
         bail!("--threshold only applies to check-bench");
+    }
+    if cli.latency_threshold.is_some() && cli.command != "check-bench" {
+        bail!("--latency-threshold only applies to check-bench");
     }
     Ok(cli)
 }
@@ -161,19 +191,34 @@ fn real_main() -> Result<()> {
         }
         "check-bench" => {
             if cli.positional.len() != 2 {
-                bail!("usage: sfut check-bench <baseline.json> <current.json> [--threshold 0.25]");
+                bail!(
+                    "usage: sfut check-bench <baseline.json> <current.json> \
+                     [--threshold 0.25] [--latency-threshold 0.25]"
+                );
             }
             let threshold = cli.threshold.unwrap_or(0.25);
+            let latency_threshold = cli
+                .latency_threshold
+                .unwrap_or(stream_future::bench_harness::DEFAULT_LATENCY_THRESHOLD);
             let baseline = std::fs::read_to_string(&cli.positional[0])
                 .with_context(|| format!("reading baseline {}", cli.positional[0]))?;
             let current = std::fs::read_to_string(&cli.positional[1])
                 .with_context(|| format!("reading current {}", cli.positional[1]))?;
             use stream_future::bench_harness::pipeline_bench::{gate, GateOutcome};
-            match gate(&baseline, &current, threshold).map_err(|e| anyhow::anyhow!("{e}"))? {
+            let report = gate(&baseline, &current, threshold, latency_threshold)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            // Warn-only latency findings print regardless of the
+            // throughput verdict (they have no exit-code teeth yet).
+            for w in &report.warnings {
+                eprintln!("WARNING: p95 regression (warn-only): {w}");
+            }
+            match report.outcome {
                 GateOutcome::Passed { cells } => {
                     println!(
-                        "bench gate PASSED: {cells} cell(s) within {:.0}% of baseline",
-                        threshold * 100.0
+                        "bench gate PASSED: {cells} cell(s) within {:.0}% of baseline \
+                         ({} latency warning(s))",
+                        threshold * 100.0,
+                        report.warnings.len()
                     );
                     Ok(())
                 }
@@ -227,7 +272,8 @@ fn real_main() -> Result<()> {
                  \x20 check-bench <a> <b>     compare BENCH_pipeline.json runs (CI perf gate)\n\
                  \n\
                  options: --config <file> | --set k=v | --scale <f> | --samples <n> | \
-                 --no-kernel | --threshold <f>\n\
+                 --no-kernel | --queue-depth <n> | --admission <block|shed|timeout(MS)> | \
+                 --threshold <f> | --latency-threshold <f>\n\
                  workloads: primes primes_x3 primes_chunked stream stream_big list list_big \
                  chunked chunked_big\n\
                  modes: seq strict par(N)"
@@ -272,6 +318,30 @@ mod tests {
         assert!(
             parse_args(args("run primes seq --threshold 0.1")).is_err(),
             "--threshold must be rejected outside check-bench"
+        );
+    }
+
+    #[test]
+    fn parses_ingress_flags() {
+        let cli = parse_args(args("serve --queue-depth 16 --admission shed")).unwrap();
+        assert!(cli.overrides.contains(&("queue_depth".to_string(), "16".to_string())));
+        assert!(cli.overrides.contains(&("admission".to_string(), "shed".to_string())));
+        let cli = parse_args(args("run primes seq --admission timeout(250)")).unwrap();
+        assert!(cli
+            .overrides
+            .contains(&("admission".to_string(), "timeout(250)".to_string())));
+        assert!(parse_args(args("serve --queue-depth")).is_err());
+    }
+
+    #[test]
+    fn parses_latency_threshold_for_check_bench_only() {
+        let cli = parse_args(args("check-bench a.json b.json --latency-threshold 0.5")).unwrap();
+        assert_eq!(cli.latency_threshold, Some(0.5));
+        assert!(parse_args(args("check-bench a b --latency-threshold nope")).is_err());
+        assert!(parse_args(args("check-bench a b --latency-threshold 0")).is_err());
+        assert!(
+            parse_args(args("run primes seq --latency-threshold 0.5")).is_err(),
+            "--latency-threshold must be rejected outside check-bench"
         );
     }
 

@@ -413,10 +413,12 @@ mod tests {
         let b = a.add(&Polynomial::one(3));
         let want = a.mul(&b);
         let cache = crate::stream::CostCache::new();
-        let got = chunked_times_adaptive_cached(&LazyEval, &a, &b, Arc::new(RustMultiplier), &cache);
+        let got =
+            chunked_times_adaptive_cached(&LazyEval, &a, &b, Arc::new(RustMultiplier), &cache);
         assert_eq!(got, want);
         let first_cost = cache.get().expect("first job seeds the cache");
-        let got = chunked_times_adaptive_cached(&LazyEval, &a, &b, Arc::new(RustMultiplier), &cache);
+        let got =
+            chunked_times_adaptive_cached(&LazyEval, &a, &b, Arc::new(RustMultiplier), &cache);
         assert_eq!(got, want);
         assert_eq!(cache.get(), Some(first_cost), "repeat jobs must not re-probe");
         // A pre-seeded cache bypasses the probe entirely and still picks

@@ -359,14 +359,12 @@ impl<T: Send + Sync + 'static> Fut<T> {
     pub fn executor(&self) -> &Executor {
         &self.0.exec
     }
-}
 
-impl<T: Send + Sync + 'static> Susp<T> for Fut<T> {
-    /// `Await.result(self, Duration.Inf)` — parks under managed blocking,
-    /// so calling it from a worker cannot starve the pool (§6: "this is
-    /// not considered good in a regular use of Futures, but we have not
-    /// been able to avoid it"). The ready case is a single Acquire load.
-    fn force(&self) -> &T {
+    /// Block until complete and return the raw outcome — [`Susp::force`]
+    /// without the re-raise: a failed cell comes back as `Err`, not a
+    /// panic. Parks under managed blocking like `force`; the ready case
+    /// is a single Acquire load.
+    pub fn wait_result(&self) -> &Result<T, String> {
         if self.0.state.load(Ordering::Acquire) < READY {
             Executor::blocking(|| {
                 let mut pending = self.0.pending.lock().unwrap();
@@ -375,7 +373,79 @@ impl<T: Send + Sync + 'static> Susp<T> for Fut<T> {
                 }
             });
         }
-        match self.0.value.get().expect("woken implies completed") {
+        self.0.value.get().expect("woken implies completed")
+    }
+
+    /// An explicitly-completed cell: the future/promise pair. The
+    /// returned [`Fut`] behaves exactly like a spawned one (lock-free
+    /// ready paths, inline `and_then`/`bind` fast paths, managed-blocking
+    /// `force`), but nothing is scheduled — the producer completes it
+    /// through the [`FutPromise`] whenever it finishes. This is what lets
+    /// layers *above* the stream machinery (the coordinator's
+    /// [`JobTicket`](crate::coordinator::JobTicket)) hand out the same
+    /// future cells the paper's cons cells are built from.
+    pub fn promise(exec: &Executor) -> (Fut<T>, FutPromise<T>) {
+        let fut = Fut::incomplete(exec.clone());
+        (fut.clone(), FutPromise { fut, completed: false })
+    }
+}
+
+/// The producer half of [`Fut::promise`]: single-use, not cloneable, and
+/// self-failing — dropping an unfulfilled promise completes the future
+/// with an error instead of stranding its waiters forever (a runner
+/// thread that panics or a pipeline that shuts down mid-queue still
+/// resolves every ticket).
+pub struct FutPromise<T: Send + Sync + 'static> {
+    fut: Fut<T>,
+    completed: bool,
+}
+
+impl<T: Send + Sync + 'static> FutPromise<T> {
+    /// Complete the paired future with `value`; registered callbacks run
+    /// inline on this thread (the run-on-the-completer behaviour of
+    /// [`Fut::complete`]).
+    pub fn fulfill(mut self, value: T) {
+        self.completed = true;
+        self.fut.mark_running();
+        self.fut.complete(Ok(value));
+    }
+
+    /// Complete the paired future as failed; forcing it re-raises `msg`.
+    pub fn fail(mut self, msg: impl Into<String>) {
+        self.completed = true;
+        self.fut.mark_running();
+        self.fut.complete(Err(msg.into()));
+    }
+
+    /// Mark the paired future as being produced (`Empty` → `Running`),
+    /// so observers polling [`Fut::state`] can tell in-progress from
+    /// still-queued. Idempotent; completion overwrites it either way.
+    pub fn start(&self) {
+        self.fut.mark_running();
+    }
+
+    /// The paired future (for producers that also observe).
+    pub fn fut(&self) -> &Fut<T> {
+        &self.fut
+    }
+}
+
+impl<T: Send + Sync + 'static> Drop for FutPromise<T> {
+    fn drop(&mut self) {
+        if !self.completed {
+            self.fut.mark_running();
+            self.fut.complete(Err("promise dropped before completion".to_string()));
+        }
+    }
+}
+
+impl<T: Send + Sync + 'static> Susp<T> for Fut<T> {
+    /// `Await.result(self, Duration.Inf)` — parks under managed blocking,
+    /// so calling it from a worker cannot starve the pool (§6: "this is
+    /// not considered good in a regular use of Futures, but we have not
+    /// been able to avoid it"). The ready case is a single Acquire load.
+    fn force(&self) -> &T {
+        match self.wait_result() {
             Ok(v) => v,
             Err(msg) => panic!("forced a failed Future: {msg}"),
         }
@@ -623,6 +693,48 @@ mod tests {
         let inner = eval.suspend(|| 11);
         let outer = eval.suspend(move || *inner.force() * 2);
         assert_eq!(*outer.force(), 22);
+    }
+
+    #[test]
+    fn promise_fulfills_waiters_across_threads() {
+        let ex = Executor::new(2);
+        let (fut, promise) = Fut::<u32>::promise(&ex);
+        assert!(matches!(fut.state(), FutState::Empty));
+        let waiter = {
+            let fut = fut.clone();
+            std::thread::spawn(move || *fut.force())
+        };
+        std::thread::sleep(Duration::from_millis(10));
+        promise.fulfill(7);
+        assert_eq!(waiter.join().unwrap(), 7);
+        assert_eq!(fut.state(), FutState::Ready);
+    }
+
+    #[test]
+    fn promise_chains_like_any_future() {
+        // A promise-backed cell supports the same combinators as a
+        // spawned one: continuations attach before completion and fire
+        // when the producer fulfills.
+        let ex = Executor::new(2);
+        let (fut, promise) = Fut::<u32>::promise(&ex);
+        let doubled = fut.and_then(|x| x * 2);
+        assert!(!doubled.is_ready());
+        promise.fulfill(21);
+        assert_eq!(*doubled.force(), 42);
+    }
+
+    #[test]
+    fn promise_fail_and_drop_poison_the_future() {
+        let ex = Executor::new(1);
+        let (fut, promise) = Fut::<u32>::promise(&ex);
+        promise.fail("producer died");
+        assert_eq!(fut.state(), FutState::Panicked);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| *fut.force()));
+        assert!(r.is_err());
+        // Dropping an unfulfilled promise must resolve waiters too.
+        let (fut2, promise2) = Fut::<u32>::promise(&ex);
+        drop(promise2);
+        assert_eq!(fut2.state(), FutState::Panicked);
     }
 
     #[test]

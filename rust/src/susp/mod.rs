@@ -25,7 +25,7 @@ mod future;
 mod lazy;
 mod strict;
 
-pub use future::{Fut, FutState, FutureEval};
+pub use future::{Fut, FutPromise, FutState, FutureEval};
 pub use lazy::{Lazy, LazyEval};
 pub use strict::{Strict, StrictEval};
 
