@@ -11,9 +11,12 @@
 //!    multiply-add at growing coefficient sizes (i64 → BigInt at
 //!    100000000001^k), i.e. *why* `stream_big` recovers;
 //! 5. executor queue throughput under producer contention;
-//! 6. scheduler A/B — the Mutex-queue baseline vs the work-stealing
-//!    executor on identical fan-out and spawn+force workloads, recorded
-//!    to `BENCH_executor.json` for the perf trajectory.
+//! 6. scheduler/deque A/B — the Mutex-queue baseline vs the
+//!    work-stealing executor under both per-worker deque
+//!    implementations (`deque=locked` and `deque=chase_lev`) on
+//!    identical fan-out and spawn+force workloads, recorded as labeled
+//!    datapoints to `BENCH_executor.json` for the perf trajectory
+//!    (`sfut check-bench` compares like-labeled points only).
 //!
 //! Run: `cargo bench --bench ablation_overhead`.
 
@@ -141,10 +144,11 @@ fn main() {
         }
     }
 
-    // 6. Scheduler A/B: baseline global queue vs work-stealing, full
-    //    size, written to BENCH_executor.json (release numbers overwrite
-    //    any test-seeded file; the JSON's `profile` field records which
-    //    build produced it).
+    // 6. Scheduler/deque A/B: baseline global queue vs work-stealing
+    //    under the locked and Chase–Lev deques, full size, written to
+    //    BENCH_executor.json (release numbers overwrite any test-seeded
+    //    file; the JSON's `profile` field records which build produced
+    //    it, and each run carries its scheduler/deque label).
     {
         let par = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(8);
         let tasks = n.max(100_000);
@@ -154,26 +158,34 @@ fn main() {
             verbose: false,
         };
         let b = executor_bench::run(tasks, par, &opts);
-        println!(
-            "\nscheduler A/B ({tasks} tasks, par({par})):\n\
-             \x20 spawn wave   baseline {:>10.1} tasks/s | work-stealing {:>10.1} tasks/s \
-             | speedup {:.2}x\n\
-             \x20 fut force    baseline {:>10.1} tasks/s | work-stealing {:>10.1} tasks/s \
-             | speedup {:.2}x\n\
-             \x20 steals (work-stealing): {}   queue-depth p99: {} jobs",
-            b.baseline.spawn_wave_tasks_per_sec,
-            b.work_stealing.spawn_wave_tasks_per_sec,
-            b.speedup_spawn_wave,
-            b.baseline.fut_force_tasks_per_sec,
-            b.work_stealing.fut_force_tasks_per_sec,
-            b.speedup_fut_force,
-            b.work_stealing.tasks_stolen,
-            b.work_stealing.queue_depth.p99,
-        );
+        println!("\nscheduler/deque A/B ({tasks} tasks, par({par})):");
+        for r in &b.runs {
+            println!(
+                "  {:<13} deque={:<9} spawn_wave {:>10.1} t/s ({:.2}x) | \
+                 fut_force {:>10.1} t/s ({:.2}x) | stolen {} batched {} migrated {} \
+                 | depth p99 {}",
+                r.scheduler,
+                r.deque,
+                r.spawn_wave_tasks_per_sec,
+                r.speedup_spawn_wave,
+                r.fut_force_tasks_per_sec,
+                r.speedup_fut_force,
+                r.tasks_stolen,
+                r.steals_batched,
+                r.jobs_migrated,
+                r.queue_depth.p99,
+            );
+        }
         let out = executor_bench::default_output_path();
         match executor_bench::write_json(&b, &out) {
             Ok(()) => println!("  wrote {}", out.display()),
-            Err(e) => eprintln!("  could not write {}: {e}", out.display()),
+            Err(e) => {
+                // A failed write must fail the bench run: exiting 0
+                // would leave a stale trajectory file that a later
+                // check-bench compares as if it were this run.
+                eprintln!("  could not write {}: {e}", out.display());
+                std::process::exit(1);
+            }
         }
     }
 

@@ -1,11 +1,12 @@
 //! Executor overhead benchmark with a machine-readable trajectory.
 //!
-//! Runs the same two workloads on the Mutex-queue baseline
-//! ([`Scheduler::GlobalQueue`]) and the work-stealing scheduler
-//! ([`Scheduler::WorkStealing`]), on the same machine in the same
-//! process, through the harness's robust sampler ([`measure`]: warmup
-//! runs absorb allocator/thread settling, the reported statistic is the
-//! median over samples):
+//! Runs the same two workloads on every scheduler/deque variant — the
+//! Mutex-queue baseline ([`Scheduler::GlobalQueue`]) and the
+//! work-stealing scheduler under both per-worker deque implementations
+//! ([`DequeKind::Locked`] and [`DequeKind::ChaseLev`]) — on the same
+//! machine in the same process, through the harness's robust sampler
+//! ([`measure`]: warmup runs absorb allocator/thread settling, the
+//! reported statistic is the median over samples):
 //!
 //! 1. **spawn wave** — a recursive binary fan-out of trivial tasks (each
 //!    task spawns two more until a budget runs out). This is the shape
@@ -18,9 +19,17 @@
 //! A sampler thread records instantaneous queue depth into a
 //! [`Histogram`] throughout. Results serialize to `BENCH_executor.json`
 //! (rebar-style: every perf PR appends a data point to the repo's
-//! trajectory — see SNIPPETS.md). The JSON records the build profile;
-//! only `cargo bench` (release) numbers are comparable across PRs, so
-//! the `cargo test` smoke run never overwrites an existing file.
+//! trajectory — see SNIPPETS.md). Every run carries a
+//! `(scheduler, deque)` label — `deque=chase_lev` vs `deque=locked` is
+//! the A/B for the lock-free ring deque, recorded from the *same*
+//! harness invocation so the comparison is machine- and load-fair.
+//! [`gate`] (reachable via `sfut check-bench`) compares two trajectory
+//! files, matching runs **only by identical label** — a chase_lev point
+//! is never judged against a locked baseline.
+//!
+//! The JSON records the build profile; only `cargo bench` (release)
+//! numbers are comparable across PRs, so the `cargo test` smoke run
+//! never overwrites an existing file.
 
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
@@ -28,8 +37,10 @@ use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use super::pipeline_bench::{GateOutcome, GateReport, LatencyGate};
+use super::tiny_json::{self, Json};
 use super::{measure, BenchOptions};
-use crate::exec::{Executor, ExecutorConfig, Scheduler};
+use crate::exec::{DequeKind, Executor, ExecutorConfig, Scheduler};
 use crate::metrics::Histogram;
 use crate::susp::{Fut, Susp};
 
@@ -43,11 +54,15 @@ pub struct QueueDepthStats {
     pub max: u64,
 }
 
-/// One scheduler's measurements. Timings are medians over
+/// One labeled variant's measurements. Timings are medians over
 /// `opts.samples` runs after `opts.warmup` warmup runs.
 #[derive(Debug, Clone)]
 pub struct SchedulerRun {
+    /// "global-queue" | "work-stealing".
     pub scheduler: &'static str,
+    /// Deque implementation label: "locked" | "chase_lev", or "none"
+    /// for the global queue (it has no per-worker deques).
+    pub deque: &'static str,
     pub spawn_wave_secs: f64,
     pub spawn_wave_tasks_per_sec: f64,
     pub fut_force_secs: f64,
@@ -55,10 +70,25 @@ pub struct SchedulerRun {
     /// Cumulative over warmup + samples.
     pub tasks_executed: u64,
     pub tasks_stolen: u64,
+    /// Steal-half operations that moved more than one job.
+    pub steals_batched: u64,
+    /// Extra jobs batch steals landed in thieves' deques.
+    pub jobs_migrated: u64,
     pub queue_depth: QueueDepthStats,
+    /// Baseline (global-queue) median / this run's median; >1 means
+    /// this variant wins. 1.0 for the baseline itself.
+    pub speedup_spawn_wave: f64,
+    pub speedup_fut_force: f64,
 }
 
-/// The full A/B result.
+impl SchedulerRun {
+    /// The `scheduler=… deque=…` label the gate matches on.
+    pub fn label(&self) -> String {
+        format!("scheduler={} deque={}", self.scheduler, self.deque)
+    }
+}
+
+/// The full labeled A/B/C result.
 #[derive(Debug, Clone)]
 pub struct ExecutorBench {
     pub tasks: u64,
@@ -68,11 +98,21 @@ pub struct ExecutorBench {
     /// "release" or "debug" — only release points belong on the
     /// cross-PR trajectory.
     pub profile: &'static str,
-    pub baseline: SchedulerRun,
-    pub work_stealing: SchedulerRun,
-    /// baseline median / work-stealing median (>1 means work-stealing wins).
-    pub speedup_spawn_wave: f64,
-    pub speedup_fut_force: f64,
+    /// Global-queue baseline first, then the work-stealing deque
+    /// variants, all measured in this same process.
+    pub runs: Vec<SchedulerRun>,
+}
+
+impl ExecutorBench {
+    /// The global-queue baseline (always the first run).
+    pub fn baseline(&self) -> &SchedulerRun {
+        &self.runs[0]
+    }
+
+    /// Find a run by its `(scheduler, deque)` label.
+    pub fn labeled(&self, scheduler: &str, deque: &str) -> Option<&SchedulerRun> {
+        self.runs.iter().find(|r| r.scheduler == scheduler && r.deque == deque)
+    }
 }
 
 fn build_profile() -> &'static str {
@@ -99,12 +139,14 @@ fn spawn_tree(ex: &Executor, budget: &Arc<AtomicI64>) {
 
 fn run_one(
     scheduler: Scheduler,
+    deque: DequeKind,
     tasks: u64,
     parallelism: usize,
     opts: &BenchOptions,
 ) -> SchedulerRun {
     let mut cfg = ExecutorConfig::with_parallelism(parallelism);
     cfg.scheduler = scheduler;
+    cfg.deque = deque;
     let ex = Executor::with_config(cfg);
 
     // Depth sampler: poll until told to stop.
@@ -161,12 +203,18 @@ fn run_one(
             Scheduler::GlobalQueue => "global-queue",
             Scheduler::WorkStealing => "work-stealing",
         },
+        deque: match scheduler {
+            Scheduler::GlobalQueue => "none",
+            Scheduler::WorkStealing => deque.label(),
+        },
         spawn_wave_secs: wave_secs,
         spawn_wave_tasks_per_sec: tasks as f64 / wave_secs.max(1e-9),
         fut_force_secs: fut_secs,
         fut_force_tasks_per_sec: tasks as f64 / fut_secs.max(1e-9),
         tasks_executed: stats.tasks_executed,
         tasks_stolen: stats.tasks_stolen,
+        steals_batched: stats.steals_batched,
+        jobs_migrated: stats.jobs_migrated,
         queue_depth: QueueDepthStats {
             samples: hist.count(),
             mean: hist.mean().as_nanos() as f64,
@@ -174,24 +222,39 @@ fn run_one(
             p99: hist.quantile(0.99).as_nanos() as u64,
             max: hist.max().as_nanos() as u64,
         },
+        // Filled in by `run` once the baseline is known.
+        speedup_spawn_wave: 1.0,
+        speedup_fut_force: 1.0,
     }
 }
 
-/// Run the full A/B comparison: baseline first, then work-stealing,
-/// each with its own warmup so ordering does not bias the medians.
+/// Run the full labeled comparison — the global-queue baseline, then
+/// work-stealing under the locked deque, then under the Chase–Lev ring
+/// — each with its own warmup so ordering does not bias the medians.
+/// All datapoints come from this one invocation, so their labels are
+/// comparable (same machine, same process, same background load).
 pub fn run(tasks: u64, parallelism: usize, opts: &BenchOptions) -> ExecutorBench {
-    let baseline = run_one(Scheduler::GlobalQueue, tasks, parallelism, opts);
-    let work_stealing = run_one(Scheduler::WorkStealing, tasks, parallelism, opts);
+    let variants = [
+        (Scheduler::GlobalQueue, DequeKind::ChaseLev), // deque unused
+        (Scheduler::WorkStealing, DequeKind::Locked),
+        (Scheduler::WorkStealing, DequeKind::ChaseLev),
+    ];
+    let mut runs: Vec<SchedulerRun> = variants
+        .iter()
+        .map(|&(s, d)| run_one(s, d, tasks, parallelism, opts))
+        .collect();
+    let (base_wave, base_fut) = (runs[0].spawn_wave_secs, runs[0].fut_force_secs);
+    for r in &mut runs {
+        r.speedup_spawn_wave = base_wave / r.spawn_wave_secs.max(1e-9);
+        r.speedup_fut_force = base_fut / r.fut_force_secs.max(1e-9);
+    }
     ExecutorBench {
         tasks,
         parallelism,
         warmup: opts.warmup,
         samples: opts.samples,
         profile: build_profile(),
-        speedup_spawn_wave: baseline.spawn_wave_secs / work_stealing.spawn_wave_secs.max(1e-9),
-        speedup_fut_force: baseline.fut_force_secs / work_stealing.fut_force_secs.max(1e-9),
-        baseline,
-        work_stealing,
+        runs,
     }
 }
 
@@ -199,22 +262,32 @@ fn json_run(r: &SchedulerRun, indent: &str) -> String {
     format!(
         "{{\n\
          {indent}  \"scheduler\": \"{}\",\n\
+         {indent}  \"deque\": \"{}\",\n\
          {indent}  \"spawn_wave_secs\": {:.6},\n\
          {indent}  \"spawn_wave_tasks_per_sec\": {:.1},\n\
          {indent}  \"fut_force_secs\": {:.6},\n\
          {indent}  \"fut_force_tasks_per_sec\": {:.1},\n\
          {indent}  \"tasks_executed\": {},\n\
          {indent}  \"tasks_stolen\": {},\n\
+         {indent}  \"steals_batched\": {},\n\
+         {indent}  \"jobs_migrated\": {},\n\
+         {indent}  \"speedup_spawn_wave\": {:.3},\n\
+         {indent}  \"speedup_fut_force\": {:.3},\n\
          {indent}  \"queue_depth\": {{\"samples\": {}, \"mean\": {:.1}, \
          \"p50\": {}, \"p99\": {}, \"max\": {}}}\n\
          {indent}}}",
         r.scheduler,
+        r.deque,
         r.spawn_wave_secs,
         r.spawn_wave_tasks_per_sec,
         r.fut_force_secs,
         r.fut_force_tasks_per_sec,
         r.tasks_executed,
         r.tasks_stolen,
+        r.steals_batched,
+        r.jobs_migrated,
+        r.speedup_spawn_wave,
+        r.speedup_fut_force,
         r.queue_depth.samples,
         r.queue_depth.mean,
         r.queue_depth.p50,
@@ -224,8 +297,9 @@ fn json_run(r: &SchedulerRun, indent: &str) -> String {
 }
 
 /// Serialize to the `BENCH_executor.json` schema (hand-rolled; no serde
-/// offline).
+/// offline). Readable back via [`tiny_json`] / [`gate`].
 pub fn to_json(b: &ExecutorBench) -> String {
+    let runs = b.runs.iter().map(|r| format!("    {}", json_run(r, "    "))).collect::<Vec<_>>();
     format!(
         "{{\n\
          \x20 \"bench\": \"executor_overhead\",\n\
@@ -234,20 +308,14 @@ pub fn to_json(b: &ExecutorBench) -> String {
          \x20 \"parallelism\": {},\n\
          \x20 \"warmup\": {},\n\
          \x20 \"samples\": {},\n\
-         \x20 \"baseline\": {},\n\
-         \x20 \"work_stealing\": {},\n\
-         \x20 \"speedup_spawn_wave\": {:.3},\n\
-         \x20 \"speedup_fut_force\": {:.3}\n\
+         \x20 \"runs\": [\n{}\n  ]\n\
          }}\n",
         b.profile,
         b.tasks,
         b.parallelism,
         b.warmup,
         b.samples,
-        json_run(&b.baseline, "  "),
-        json_run(&b.work_stealing, "  "),
-        b.speedup_spawn_wave,
-        b.speedup_fut_force,
+        runs.join(",\n"),
     )
 }
 
@@ -272,27 +340,159 @@ pub fn write_json_if_absent(b: &ExecutorBench) -> std::io::Result<bool> {
     write_json(b, &path).map(|()| true)
 }
 
+/// Compare two `BENCH_executor.json` documents (the `sfut check-bench`
+/// path for executor trajectories). Runs are matched **only on
+/// identical `(scheduler, deque)` labels** — a chase_lev point is never
+/// compared against a locked baseline — and a matched run fails when
+/// either workload's tasks/sec drops below `(1 - threshold) ×
+/// baseline`. A label present in the baseline but missing from the
+/// current run is a failure (silent 100% regression), and a malformed
+/// current run is an error, not a skip.
+pub fn gate(baseline: &str, current: &str, threshold: f64) -> Result<GateReport, String> {
+    let b = tiny_json::parse(baseline).map_err(|e| format!("baseline: {e}"))?;
+    let c = tiny_json::parse(current).map_err(|e| format!("current: {e}"))?;
+    for doc in [&b, &c] {
+        if doc.get("bench").and_then(Json::as_str) != Some("executor_overhead") {
+            return Err("not an executor_overhead trajectory file".to_string());
+        }
+    }
+    if c.get("profile").is_none() {
+        return Err("current run is missing \"profile\" — bench writer broken".to_string());
+    }
+    match c.get("runs").and_then(Json::as_array) {
+        Some(runs) if !runs.is_empty() => {}
+        _ => return Err("current run has no runs — bench writer broken".to_string()),
+    }
+    for key in ["profile", "tasks", "parallelism", "warmup", "samples"] {
+        let (bv, cv) = (b.get(key), c.get(key));
+        if bv != cv {
+            return Ok(GateReport {
+                outcome: GateOutcome::Skipped {
+                    reason: format!(
+                        "{key} differs (baseline {bv:?}, current {cv:?}); runs are not \
+                         comparable — refresh the baseline"
+                    ),
+                },
+                warnings: Vec::new(),
+                latency_gate: LatencyGate::WarnOnly,
+            });
+        }
+    }
+
+    struct RunStats {
+        scheduler: String,
+        deque: String,
+        spawn_wave: f64,
+        fut_force: f64,
+    }
+    let read_runs = |doc: &Json| -> Vec<RunStats> {
+        doc.get("runs")
+            .and_then(Json::as_array)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|r| {
+                Some(RunStats {
+                    scheduler: r.get("scheduler")?.as_str()?.to_string(),
+                    deque: r.get("deque")?.as_str()?.to_string(),
+                    spawn_wave: r.get("spawn_wave_tasks_per_sec")?.as_f64()?,
+                    fut_force: r.get("fut_force_tasks_per_sec")?.as_f64()?,
+                })
+            })
+            .collect()
+    };
+    let base_runs = read_runs(&b);
+    let cur_runs = read_runs(&c);
+    let mut compared = 0usize;
+    let mut regressions = Vec::new();
+    for cur in &cur_runs {
+        // Like-labeled points only.
+        let Some(base) = base_runs
+            .iter()
+            .find(|b| b.scheduler == cur.scheduler && b.deque == cur.deque)
+        else {
+            continue;
+        };
+        compared += 1;
+        for (what, b_tps, c_tps) in [
+            ("spawn_wave", base.spawn_wave, cur.spawn_wave),
+            ("fut_force", base.fut_force, cur.fut_force),
+        ] {
+            if c_tps < (1.0 - threshold) * b_tps {
+                let drop_pct = (1.0 - c_tps / b_tps.max(1e-9)) * 100.0;
+                regressions.push(format!(
+                    "scheduler={} deque={}: {what} {:.1} tasks/s vs baseline {:.1} \
+                     (-{drop_pct:.0}%)",
+                    cur.scheduler, cur.deque, c_tps, b_tps
+                ));
+            }
+        }
+    }
+    for base in &base_runs {
+        if !cur_runs.iter().any(|c| c.scheduler == base.scheduler && c.deque == base.deque) {
+            regressions.push(format!(
+                "scheduler={} deque={} vanished: baseline has this labeled point, current \
+                 run does not",
+                base.scheduler, base.deque
+            ));
+        }
+    }
+    if compared == 0 && regressions.is_empty() {
+        return Ok(GateReport {
+            outcome: GateOutcome::Skipped {
+                reason: "no like-labeled (scheduler, deque) runs".to_string(),
+            },
+            warnings: Vec::new(),
+            latency_gate: LatencyGate::WarnOnly,
+        });
+    }
+    let outcome = if regressions.is_empty() {
+        GateOutcome::Passed { cells: compared }
+    } else {
+        GateOutcome::Failed { regressions }
+    };
+    Ok(GateReport { outcome, warnings: Vec::new(), latency_gate: LatencyGate::WarnOnly })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn ab_comparison_runs_and_emits_json() {
+    fn ab_comparison_runs_and_emits_labeled_json() {
         // Small-scale smoke: correctness of the A/B plumbing, not a perf
         // claim. Seeds BENCH_executor.json only if no trajectory file
         // exists; the full-size release run lives in
         // `cargo bench --bench ablation_overhead`.
         let opts = BenchOptions { warmup: 1, samples: 2, verbose: false };
         let b = run(10_000, 2, &opts);
-        assert!(b.baseline.tasks_executed >= 10_000);
-        assert!(b.work_stealing.tasks_executed >= 10_000);
-        assert!(b.baseline.spawn_wave_tasks_per_sec > 0.0);
-        assert!(b.work_stealing.fut_force_tasks_per_sec > 0.0);
-        assert_eq!(b.baseline.tasks_stolen, 0, "global queue has nothing to steal");
+        assert_eq!(b.runs.len(), 3);
+        assert_eq!(b.baseline().scheduler, "global-queue");
+        assert_eq!(b.baseline().deque, "none");
+        assert_eq!(b.baseline().tasks_stolen, 0, "global queue has nothing to steal");
+        assert_eq!(b.baseline().speedup_spawn_wave, 1.0);
+        for (scheduler, deque) in
+            [("global-queue", "none"), ("work-stealing", "locked"), ("work-stealing", "chase_lev")]
+        {
+            let r = b.labeled(scheduler, deque).expect("labeled run present");
+            assert!(r.tasks_executed >= 10_000, "{}", r.label());
+            assert!(r.spawn_wave_tasks_per_sec > 0.0);
+            assert!(r.fut_force_tasks_per_sec > 0.0);
+            assert!(r.tasks_stolen >= r.jobs_migrated, "{}", r.label());
+        }
         let json = to_json(&b);
         assert!(json.contains("\"bench\": \"executor_overhead\""));
-        assert!(json.contains("work-stealing"));
+        assert!(json.contains("\"deque\": \"chase_lev\""));
+        assert!(json.contains("\"deque\": \"locked\""));
+        assert!(json.contains("\"steals_batched\""));
         assert!(json.contains("\"profile\""));
+        let parsed = tiny_json::parse(&json).expect("self-readable JSON");
+        assert_eq!(
+            parsed.get("runs").and_then(Json::as_array).map(<[Json]>::len),
+            Some(3)
+        );
+        // A run gates cleanly against itself at any threshold.
+        let report = gate(&json, &json, 0.25).unwrap();
+        assert_eq!(report.outcome, GateOutcome::Passed { cells: 3 });
         // Serialization to disk, via a scratch path (never the trajectory).
         let tmp = std::env::temp_dir().join("sfut_bench_executor_smoke.json");
         write_json(&b, &tmp).expect("write smoke json");
@@ -301,6 +501,71 @@ mod tests {
         // Seed the real file only when absent.
         let _ = write_json_if_absent(&b);
         assert!(default_output_path().exists());
+    }
+
+    fn doc(profile: &str, chase_lev_tps: f64, locked_tps: f64) -> String {
+        format!(
+            "{{\"bench\": \"executor_overhead\", \"profile\": \"{profile}\", \
+             \"tasks\": 1000, \"parallelism\": 2, \"warmup\": 1, \"samples\": 2, \
+             \"runs\": [\
+             {{\"scheduler\": \"work-stealing\", \"deque\": \"chase_lev\", \
+               \"spawn_wave_tasks_per_sec\": {chase_lev_tps}, \
+               \"fut_force_tasks_per_sec\": {chase_lev_tps}}}, \
+             {{\"scheduler\": \"work-stealing\", \"deque\": \"locked\", \
+               \"spawn_wave_tasks_per_sec\": {locked_tps}, \
+               \"fut_force_tasks_per_sec\": {locked_tps}}}]}}"
+        )
+    }
+
+    #[test]
+    fn gate_compares_only_like_labeled_points() {
+        let base = doc("release", 1000.0, 500.0);
+        // chase_lev is slower than the *locked* baseline number but fine
+        // vs its own label: must pass — labels never cross-compare.
+        let ok = doc("release", 900.0, 500.0);
+        assert_eq!(gate(&base, &ok, 0.25).unwrap().outcome, GateOutcome::Passed { cells: 2 });
+        // A 40% drop on the chase_lev label fails, and the message names
+        // the label.
+        let bad = doc("release", 600.0, 500.0);
+        match gate(&base, &bad, 0.25).unwrap().outcome {
+            GateOutcome::Failed { regressions } => {
+                assert!(regressions.iter().all(|r| r.contains("deque=chase_lev")));
+            }
+            other => panic!("expected failure, got {other:?}"),
+        }
+        // A vanished label is a failure, not a silent pass.
+        let only_locked = "{\"bench\": \"executor_overhead\", \"profile\": \"release\", \
+             \"tasks\": 1000, \"parallelism\": 2, \"warmup\": 1, \"samples\": 2, \
+             \"runs\": [{\"scheduler\": \"work-stealing\", \"deque\": \"locked\", \
+             \"spawn_wave_tasks_per_sec\": 500.0, \"fut_force_tasks_per_sec\": 500.0}]}";
+        match gate(&base, only_locked, 0.25).unwrap().outcome {
+            GateOutcome::Failed { regressions } => {
+                assert!(
+                    regressions.iter().any(|r| r.contains("deque=chase_lev vanished")),
+                    "{regressions:?}"
+                );
+            }
+            other => panic!("expected failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gate_skips_incomparable_and_rejects_malformed() {
+        let base = doc("release", 1000.0, 500.0);
+        let debug = doc("debug", 100.0, 50.0);
+        assert!(matches!(
+            gate(&base, &debug, 0.25).unwrap().outcome,
+            GateOutcome::Skipped { .. }
+        ));
+        // Garbage or empty current runs are errors — a broken bench
+        // writer must fail the gate, not disarm it.
+        assert!(gate(&base, "{]", 0.25).is_err());
+        assert!(gate(&base, "{\"bench\": \"executor_overhead\"}", 0.25).is_err());
+        let no_runs = "{\"bench\": \"executor_overhead\", \"profile\": \"release\", \
+             \"runs\": []}";
+        assert!(gate(&base, no_runs, 0.25).is_err());
+        // Pipeline files are rejected by the executor gate.
+        assert!(gate("{\"bench\": \"pipeline_throughput\"}", &base, 0.25).is_err());
     }
 
     #[test]

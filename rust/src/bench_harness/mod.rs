@@ -18,7 +18,7 @@ pub mod tiny_json;
 pub use chart::ascii_bar_chart;
 pub use executor_bench::{ExecutorBench, QueueDepthStats, SchedulerRun};
 pub use pipeline_bench::{
-    GateOutcome, GateReport, PipelineBench, PipelineBenchParams, WorkloadPoint,
+    GateOutcome, GateReport, LatencyGate, PipelineBench, PipelineBenchParams, WorkloadPoint,
     DEFAULT_LATENCY_THRESHOLD,
 };
 pub use sampler::{measure, BenchOptions, Measurement};

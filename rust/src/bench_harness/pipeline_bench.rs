@@ -311,15 +311,33 @@ pub enum GateOutcome {
     Failed { regressions: Vec<String> },
 }
 
-/// A gate verdict plus its warn-only findings. Latency regressions (p95
-/// job latency and p95 queue wait) never fail the gate — yet — but they
-/// are reported so the queue-wait numbers the ingress rework added have
-/// teeth from day one.
+/// How p95 latency / queue-wait regressions are enforced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LatencyGate {
+    /// Findings are reported but never fail the gate (default).
+    WarnOnly,
+    /// `--latency-strict`: findings fail the gate like throughput
+    /// regressions.
+    Strict,
+    /// Strict was requested, but the committed baseline's `note` field
+    /// marks it a synthetic floor — its latency ceilings are fiction,
+    /// so the strict gate auto-disarms back to warn-only rather than
+    /// enforce against made-up numbers. Refresh the baseline with a
+    /// measured run (see `ci/check_bench.sh`) to arm it.
+    StrictDisarmedSyntheticBaseline,
+}
+
+/// A gate verdict plus its latency findings. Under
+/// [`LatencyGate::WarnOnly`] (and the synthetic-disarmed state) p95
+/// latency / queue-wait regressions land in `warnings`; under
+/// [`LatencyGate::Strict`] they join the failing regressions.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GateReport {
     pub outcome: GateOutcome,
     /// `… p95 regressed …` lines; empty when latency held.
     pub warnings: Vec<String>,
+    /// The enforcement mode this report was produced under.
+    pub latency_gate: LatencyGate,
 }
 
 /// Default p95 latency growth tolerated before a warn-only finding
@@ -333,17 +351,24 @@ const LATENCY_WARN_FLOOR_MS: f64 = 1.0;
 
 /// Compare two `BENCH_pipeline.json` documents: `current` fails when any
 /// (workload, shards) cell's jobs/sec drops below
-/// `(1 - threshold) × baseline`, and *warns* when a cell's p95 latency or
+/// `(1 - threshold) × baseline`, and reports when a cell's p95 latency or
 /// p95 queue wait grows beyond `(1 + latency_threshold) × baseline`
-/// (and by more than an absolute 1 ms floor). Files are only comparable
-/// when profile and run parameters match — debug-vs-release or
+/// (and by more than an absolute 1 ms floor) — as warnings by default,
+/// as failures under `latency_strict` (`sfut check-bench
+/// --latency-strict`). Strict latency gating auto-disarms while the
+/// baseline's `note` field marks it a synthetic floor, so the gate can
+/// never fire on fictional ceilings. Files are only comparable when
+/// profile and run parameters match — debug-vs-release or
 /// different-scale comparisons are meaningless and yield
-/// [`GateOutcome::Skipped`].
+/// [`GateOutcome::Skipped`]. A malformed *current* run (missing
+/// profile, missing or empty points) is an error, not a skip: a broken
+/// bench writer must fail the gate, not disarm it.
 pub fn gate(
     baseline: &str,
     current: &str,
     threshold: f64,
     latency_threshold: f64,
+    latency_strict: bool,
 ) -> Result<GateReport, String> {
     let b = tiny_json::parse(baseline).map_err(|e| format!("baseline: {e}"))?;
     let c = tiny_json::parse(current).map_err(|e| format!("current: {e}"))?;
@@ -352,6 +377,28 @@ pub fn gate(
             return Err("not a pipeline_throughput trajectory file".to_string());
         }
     }
+    // The current run comes from the harness that just ran: required
+    // fields missing there mean the bench writer broke, and a broken
+    // writer must not quietly skip the gate. (An *old* baseline missing
+    // fields is tolerated below — it only widens the Skipped path.)
+    if c.get("profile").is_none() {
+        return Err("current run is missing \"profile\" — bench writer broken".to_string());
+    }
+    match c.get("points").and_then(Json::as_array) {
+        Some(points) if !points.is_empty() => {}
+        _ => return Err("current run has no points — bench writer broken".to_string()),
+    }
+    let synthetic_baseline = b
+        .get("note")
+        .and_then(Json::as_str)
+        .is_some_and(|n| n.contains("synthetic"));
+    let latency_gate = if !latency_strict {
+        LatencyGate::WarnOnly
+    } else if synthetic_baseline {
+        LatencyGate::StrictDisarmedSyntheticBaseline
+    } else {
+        LatencyGate::Strict
+    };
     for key in ["profile", "scale", "clients", "jobs_per_client", "mode", "warmup", "samples"] {
         let (bv, cv) = (b.get(key), c.get(key));
         if bv != cv {
@@ -363,6 +410,7 @@ pub fn gate(
                     ),
                 },
                 warnings: Vec::new(),
+                latency_gate,
             });
         }
     }
@@ -395,7 +443,10 @@ pub fn gate(
     let cur_cells = cell(&c);
     let mut compared = 0usize;
     let mut regressions = Vec::new();
-    let mut warnings = Vec::new();
+    // Latency findings are routed at the end: into `warnings` (default
+    // and synthetic-disarmed strict) or into the failing `regressions`
+    // (armed strict).
+    let mut latency_findings = Vec::new();
     let mut warn_latency = |workload: &str, shards: u64, what: &str, base: f64, cur: f64| {
         if cur > (1.0 + latency_threshold) * base && cur - base > LATENCY_WARN_FLOOR_MS {
             // Near-zero baselines (an idle queue rounds to 0.000 ms)
@@ -405,7 +456,7 @@ pub fn gate(
             } else {
                 format!("+{:.2}ms", cur - base)
             };
-            warnings.push(format!(
+            latency_findings.push(format!(
                 "{workload} @ {shards} shard(s): {what} {cur:.2}ms vs baseline \
                  {base:.2}ms ({growth})"
             ));
@@ -449,12 +500,19 @@ pub fn gate(
             ));
         }
     }
+    let mut warnings = Vec::new();
+    if latency_gate == LatencyGate::Strict {
+        regressions.extend(latency_findings.iter().map(|f| format!("latency (strict): {f}")));
+    } else {
+        warnings = latency_findings;
+    }
     if compared == 0 && regressions.is_empty() {
         return Ok(GateReport {
             outcome: GateOutcome::Skipped {
                 reason: "no overlapping (workload, shards) cells".to_string(),
             },
             warnings,
+            latency_gate,
         });
     }
     let outcome = if regressions.is_empty() {
@@ -462,7 +520,7 @@ pub fn gate(
     } else {
         GateOutcome::Failed { regressions }
     };
-    Ok(GateReport { outcome, warnings })
+    Ok(GateReport { outcome, warnings, latency_gate })
 }
 
 #[cfg(test)]
@@ -516,7 +574,7 @@ mod tests {
         );
         // A run gates cleanly against itself at any threshold, with no
         // latency warnings (identical numbers).
-        let report = gate(&json, &json, 0.25, DEFAULT_LATENCY_THRESHOLD).unwrap();
+        let report = gate(&json, &json, 0.25, DEFAULT_LATENCY_THRESHOLD, false).unwrap();
         match report.outcome {
             GateOutcome::Passed { cells } => assert_eq!(cells, 6),
             other => panic!("expected pass, got {other:?}"),
@@ -562,12 +620,12 @@ mod tests {
         // 20% down on one cell: inside a 25% threshold.
         let ok = doc("release", 80.0, 50.0);
         assert_eq!(
-            gate(&base, &ok, 0.25, LT).unwrap().outcome,
+            gate(&base, &ok, 0.25, LT, false).unwrap().outcome,
             GateOutcome::Passed { cells: 2 }
         );
         // 40% down: out.
         let bad = doc("release", 60.0, 50.0);
-        match gate(&base, &bad, 0.25, LT).unwrap().outcome {
+        match gate(&base, &bad, 0.25, LT, false).unwrap().outcome {
             GateOutcome::Failed { regressions } => {
                 assert_eq!(regressions.len(), 1);
                 assert!(regressions[0].contains("primes"), "{regressions:?}");
@@ -577,7 +635,7 @@ mod tests {
         // Improvements never fail.
         let faster = doc("release", 200.0, 90.0);
         assert_eq!(
-            gate(&base, &faster, 0.25, LT).unwrap().outcome,
+            gate(&base, &faster, 0.25, LT, false).unwrap().outcome,
             GateOutcome::Passed { cells: 2 }
         );
     }
@@ -588,7 +646,7 @@ mod tests {
         // Throughput fine, p95 latency doubled and queue wait tripled:
         // pass + two warnings.
         let slow = doc_with_latency("release", 100.0, 50.0, 20.0, 6.0);
-        let report = gate(&base, &slow, 0.25, LT).unwrap();
+        let report = gate(&base, &slow, 0.25, LT, false).unwrap();
         assert_eq!(report.outcome, GateOutcome::Passed { cells: 2 });
         assert_eq!(report.warnings.len(), 2, "{:?}", report.warnings);
         assert!(report.warnings.iter().any(|w| w.contains("p95 latency")));
@@ -596,15 +654,15 @@ mod tests {
         // Growth inside the tolerance (or under the 1 ms floor) stays
         // quiet.
         let close = doc_with_latency("release", 100.0, 50.0, 10.9, 2.9);
-        assert!(gate(&base, &close, 0.25, LT).unwrap().warnings.is_empty());
+        assert!(gate(&base, &close, 0.25, LT, false).unwrap().warnings.is_empty());
         // A permissive flag silences the doubled p95 too.
-        let report = gate(&base, &slow, 0.25, 3.0).unwrap();
+        let report = gate(&base, &slow, 0.25, 3.0, false).unwrap();
         assert!(report.warnings.is_empty(), "{:?}", report.warnings);
         // A ~0 baseline (idle queue) reports absolute growth, not a
         // nonsense percentage.
         let idle_base = doc_with_latency("release", 100.0, 50.0, 10.0, 0.0);
         let busy = doc_with_latency("release", 100.0, 50.0, 10.0, 3.0);
-        let report = gate(&idle_base, &busy, 0.25, LT).unwrap();
+        let report = gate(&idle_base, &busy, 0.25, LT, false).unwrap();
         assert_eq!(report.warnings.len(), 1, "{:?}", report.warnings);
         assert!(report.warnings[0].contains("+3.00ms"), "{:?}", report.warnings);
         assert!(!report.warnings[0].contains('%'), "{:?}", report.warnings);
@@ -618,7 +676,7 @@ mod tests {
              \"points\": [\
              {\"workload\": \"primes\", \"shards\": 1, \"jobs_per_sec\": 100.0}]}";
         let cur = doc_with_latency("release", 95.0, 50.0, 400.0, 300.0);
-        let report = gate(base, &cur, 0.25, LT).unwrap();
+        let report = gate(base, &cur, 0.25, LT, false).unwrap();
         assert_eq!(report.outcome, GateOutcome::Passed { cells: 1 });
         assert!(report.warnings.is_empty(), "no baseline latency → no warnings");
     }
@@ -632,7 +690,7 @@ mod tests {
              \"points\": [\
              {\"workload\": \"chunked\", \"shards\": 2, \"jobs_per_sec\": 55.0}]}"
             .to_string();
-        match gate(&base, &cur, 0.25, LT).unwrap().outcome {
+        match gate(&base, &cur, 0.25, LT, false).unwrap().outcome {
             GateOutcome::Failed { regressions } => {
                 assert!(
                     regressions.iter().any(|r| r.contains("primes vanished")),
@@ -648,11 +706,85 @@ mod tests {
         let base = doc("release", 100.0, 50.0);
         let debug = doc("debug", 10.0, 5.0);
         assert!(matches!(
-            gate(&base, &debug, 0.25, LT).unwrap().outcome,
+            gate(&base, &debug, 0.25, LT, false).unwrap().outcome,
             GateOutcome::Skipped { .. }
         ));
         // Garbage input is an error, not a skip.
-        assert!(gate("{]", &base, 0.25, LT).is_err());
-        assert!(gate("{\"bench\": \"executor_overhead\"}", &base, 0.25, LT).is_err());
+        assert!(gate("{]", &base, 0.25, LT, false).is_err());
+        assert!(gate("{\"bench\": \"executor_overhead\"}", &base, 0.25, LT, false).is_err());
+    }
+
+    #[test]
+    fn gate_refuses_malformed_current_runs() {
+        // A broken bench writer must fail the gate, never disarm it: a
+        // current run missing its profile or points is an error even
+        // though the same gaps in an old *baseline* merely skip.
+        let base = doc("release", 100.0, 50.0);
+        let no_profile = "{\"bench\": \"pipeline_throughput\", \"points\": [\
+             {\"workload\": \"primes\", \"shards\": 1, \"jobs_per_sec\": 100.0}]}";
+        let err = gate(&base, no_profile, 0.25, LT, false).unwrap_err();
+        assert!(err.contains("profile"), "{err}");
+        let no_points = "{\"bench\": \"pipeline_throughput\", \"profile\": \"release\"}";
+        assert!(gate(&base, no_points, 0.25, LT, false).is_err());
+        let empty_points = "{\"bench\": \"pipeline_throughput\", \"profile\": \"release\", \
+             \"points\": []}";
+        assert!(gate(&base, empty_points, 0.25, LT, false).is_err());
+        // The same documents on the *baseline* side stay tolerated
+        // (Skipped on the profile mismatch path), because old baselines
+        // predate newer fields.
+        let cur = doc("release", 100.0, 50.0);
+        assert!(matches!(
+            gate(no_points, &cur, 0.25, LT, false).unwrap().outcome,
+            GateOutcome::Skipped { .. }
+        ));
+    }
+
+    /// Prefix a trajectory doc with a synthetic-floor `note`, the way
+    /// the committed day-one baseline is labeled.
+    fn with_synthetic_note(doc: &str) -> String {
+        doc.replacen(
+            "{\"bench\"",
+            "{\"note\": \"synthetic conservative floor baseline\", \"bench\"",
+            1,
+        )
+    }
+
+    #[test]
+    fn strict_latency_gate_passes_fails_and_disarms() {
+        let base = doc_with_latency("release", 100.0, 50.0, 10.0, 2.0);
+        let slow = doc_with_latency("release", 100.0, 50.0, 20.0, 6.0);
+        let fine = doc_with_latency("release", 100.0, 50.0, 10.5, 2.1);
+
+        // Pass: strict armed, latency held — no warnings, no failures.
+        let report = gate(&base, &fine, 0.25, LT, true).unwrap();
+        assert_eq!(report.latency_gate, LatencyGate::Strict);
+        assert_eq!(report.outcome, GateOutcome::Passed { cells: 2 });
+        assert!(report.warnings.is_empty(), "{:?}", report.warnings);
+
+        // Fail: the same latency growth that only warns by default now
+        // fails the gate.
+        let warn_only = gate(&base, &slow, 0.25, LT, false).unwrap();
+        assert_eq!(warn_only.latency_gate, LatencyGate::WarnOnly);
+        assert_eq!(warn_only.outcome, GateOutcome::Passed { cells: 2 });
+        assert_eq!(warn_only.warnings.len(), 2);
+        let strict = gate(&base, &slow, 0.25, LT, true).unwrap();
+        assert_eq!(strict.latency_gate, LatencyGate::Strict);
+        match strict.outcome {
+            GateOutcome::Failed { regressions } => {
+                assert_eq!(regressions.len(), 2, "{regressions:?}");
+                assert!(regressions.iter().all(|r| r.starts_with("latency (strict):")));
+            }
+            other => panic!("expected strict latency failure, got {other:?}"),
+        }
+        assert!(strict.warnings.is_empty(), "strict routes findings to failures");
+
+        // Disarmed: a synthetic-floor baseline cannot arm the strict
+        // gate — its ceilings are fiction. Findings fall back to
+        // warnings and the report says why.
+        let synthetic = with_synthetic_note(&base);
+        let report = gate(&synthetic, &slow, 0.25, LT, true).unwrap();
+        assert_eq!(report.latency_gate, LatencyGate::StrictDisarmedSyntheticBaseline);
+        assert_eq!(report.outcome, GateOutcome::Passed { cells: 2 });
+        assert_eq!(report.warnings.len(), 2, "{:?}", report.warnings);
     }
 }

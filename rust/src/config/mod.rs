@@ -13,6 +13,8 @@ pub use parser::{parse_toml_subset, TomlValue};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
+use crate::exec::DequeKind;
+
 /// Evaluation mode requested for a run: the paper's seq / par(n) axis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
@@ -251,6 +253,11 @@ pub struct Config {
     pub use_kernel: bool,
     /// Worker stack size (deep recursion in stream forcing).
     pub stack_size: usize,
+    /// Per-worker deque implementation for every executor pool the
+    /// coordinator builds: `chase_lev` (lock-free ring, default) or
+    /// `locked` (the mutexed A/B baseline). Overridable via the
+    /// `deque`/`exec.deque` config key, `--deque`, or `SFUT_DEQUE`.
+    pub deque: DequeKind,
     /// Bench harness: measurement samples per cell.
     pub samples: usize,
     /// Bench harness: warmup iterations per cell.
@@ -277,6 +284,7 @@ impl Default for Config {
             artifacts_dir: PathBuf::from("artifacts"),
             use_kernel: true,
             stack_size: 256 << 20,
+            deque: DequeKind::default_kind(),
             samples: 5,
             warmup: 1,
             scale: 1.0,
@@ -367,6 +375,7 @@ impl Config {
             }
             "use_kernel" | "runtime.use_kernel" => self.use_kernel = p(key, value)?,
             "stack_size" | "exec.stack_size" => self.stack_size = p(key, value)?,
+            "deque" | "exec.deque" => self.deque = p(key, value)?,
             "samples" | "bench.samples" => self.samples = p(key, value)?,
             "warmup" | "bench.warmup" => self.warmup = p(key, value)?,
             "scale" | "bench.scale" => self.scale = p(key, value)?,
@@ -510,6 +519,17 @@ mod tests {
         assert!(c.set("chunk_policy", "random").is_err());
         assert_eq!(ChunkPolicy::Adaptive.label(), "adaptive");
         assert_eq!("fixed".parse::<ChunkPolicy>().unwrap(), ChunkPolicy::Fixed);
+    }
+
+    #[test]
+    fn deque_kind_keys_parse() {
+        let mut c = Config::default();
+        c.set("deque", "locked").unwrap();
+        assert_eq!(c.deque, DequeKind::Locked);
+        c.set("exec.deque", "chase_lev").unwrap();
+        assert_eq!(c.deque, DequeKind::ChaseLev);
+        assert!(c.set("deque", "spinlock").is_err());
+        c.validate().unwrap();
     }
 
     #[test]

@@ -272,6 +272,7 @@ impl Ingress {
 
         let mut ticket_cfg = ExecutorConfig::with_parallelism(2);
         ticket_cfg.name = "sfut-ticket".to_string();
+        ticket_cfg.deque = cfg.deque;
         let ticket_exec = Executor::with_config(ticket_cfg);
 
         // Built before any thread spawns so an error below (`?`) drops

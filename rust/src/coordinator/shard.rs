@@ -29,7 +29,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::{Config, Workload};
-use crate::exec::{Executor, ExecutorConfig, ExecutorStats};
+use crate::exec::{DequeKind, Executor, ExecutorConfig, ExecutorStats};
 use crate::metrics::MetricsRegistry;
 use crate::stream::CostCache;
 
@@ -65,6 +65,8 @@ fn add_monotonic(agg: &mut ExecutorStats, s: &ExecutorStats) {
     agg.tasks_executed += s.tasks_executed;
     agg.tasks_panicked += s.tasks_panicked;
     agg.tasks_stolen += s.tasks_stolen;
+    agg.steals_batched += s.steals_batched;
+    agg.jobs_migrated += s.jobs_migrated;
     agg.compensation_threads += s.compensation_threads;
     agg.blocking_sections += s.blocking_sections;
 }
@@ -73,6 +75,9 @@ fn add_monotonic(agg: &mut ExecutorStats, s: &ExecutorStats) {
 pub struct Shard {
     id: usize,
     stack_size: usize,
+    /// Deque implementation every pool this shard builds runs
+    /// ([`Config::deque`]).
+    deque: DequeKind,
     /// Requested parallelism → long-lived pool. Lazily populated (a
     /// shard that never sees `par(k)` never spawns k workers) and
     /// LRU-bounded at [`MAX_POOLS_PER_SHARD`].
@@ -92,10 +97,11 @@ pub struct Shard {
 }
 
 impl Shard {
-    fn new(id: usize, stack_size: usize) -> Shard {
+    fn new(id: usize, stack_size: usize, deque: DequeKind) -> Shard {
         Shard {
             id,
             stack_size,
+            deque,
             pools: Mutex::new(Pools::default()),
             inflight: AtomicUsize::new(0),
             jobs_routed: AtomicU64::new(0),
@@ -144,6 +150,7 @@ impl Shard {
         }
         let mut cfg = ExecutorConfig::with_parallelism(parallelism);
         cfg.stack_size = self.stack_size;
+        cfg.deque = self.deque;
         cfg.name = format!("sfut-s{}w", self.id);
         let executor = Executor::with_config(cfg);
         pools
@@ -218,6 +225,13 @@ impl Shard {
         let id = self.id;
         metrics.gauge(&format!("shard.{id}.tasks_executed")).set(st.tasks_executed);
         metrics.gauge(&format!("shard.{id}.tasks_stolen")).set(st.tasks_stolen);
+        metrics.gauge(&format!("shard.{id}.steals_batched")).set(st.steals_batched);
+        metrics.gauge(&format!("shard.{id}.jobs_migrated")).set(st.jobs_migrated);
+        // Mean batch size, rounded to the nearest whole job (gauges are
+        // integral).
+        metrics
+            .gauge(&format!("shard.{id}.jobs_migrated_per_steal"))
+            .set(st.jobs_migrated_per_steal().round() as u64);
         metrics.gauge(&format!("shard.{id}.queue_depth")).set(st.queue_depth as u64);
         metrics.gauge(&format!("shard.{id}.live_threads")).set(st.live_threads as u64);
         metrics.gauge(&format!("shard.{id}.inflight")).set(self.inflight() as u64);
@@ -286,7 +300,9 @@ impl ShardSet {
             cfg.shards
         };
         ShardSet {
-            shards: (0..n).map(|id| Arc::new(Shard::new(id, cfg.stack_size))).collect(),
+            shards: (0..n)
+                .map(|id| Arc::new(Shard::new(id, cfg.stack_size, cfg.deque)))
+                .collect(),
         }
     }
 
@@ -493,6 +509,10 @@ mod tests {
         assert_eq!(snap.gauges["shard.1.tasks_executed"], 0);
         assert!(snap.gauges.contains_key("shard.0.tasks_stolen"));
         assert!(snap.gauges.contains_key("shard.1.jobs_routed"));
+        // Steal-half batching gauges are published for every shard.
+        assert!(snap.gauges.contains_key("shard.0.steals_batched"));
+        assert!(snap.gauges.contains_key("shard.0.jobs_migrated"));
+        assert!(snap.gauges.contains_key("shard.0.jobs_migrated_per_steal"));
     }
 
     #[test]

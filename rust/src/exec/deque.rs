@@ -1,53 +1,344 @@
-//! Per-worker stealable deque.
+//! Per-worker stealable deque — lock-free Chase–Lev ring by default,
+//! the old minimally-locked `Mutex<VecDeque>` kept runtime-selectable.
 //!
-//! The owner pushes and pops at the back (LIFO — the hot path of a
+//! The owner pushes and pops at the bottom (LIFO — the hot path of a
 //! fork/join-style workload keeps the most recently spawned, cache-warm
-//! task on top); thieves take from the front (FIFO — they get the
+//! task on top); thieves take from the top (FIFO — they get the
 //! *oldest* task, which for recursive spawns is the largest remaining
-//! subtree, minimizing steal frequency). This is the classic Chase–Lev
-//! discipline.
+//! subtree, minimizing steal frequency).
 //!
-//! The implementation is minimally-locked rather than lock-free: one
-//! short-critical-section `Mutex<VecDeque>` per worker. An uncontended
-//! `Mutex` lock/unlock is a pair of atomic RMWs — within noise of a
-//! CAS-based deque at this repo's task granularity — and the contended
-//! case (an owner racing a thief) is rare by construction because
-//! thieves only appear when their own deque and the injector are both
-//! empty. What the design removes is the *global* lock: under the old
-//! single `Mutex<VecDeque>` + `Condvar` injector, every spawn and every
-//! pop of every worker serialized on one cache line.
+//! ## [`ChaseLevDeque`] (default, [`DequeKind::ChaseLev`])
+//!
+//! A true lock-free Chase–Lev deque: a growable circular [`Buffer`] of
+//! jobs indexed by two monotonically increasing (wrapping `u64`) atomic
+//! indices, `top` and `bottom`. The owner's `push`/`pop` touch only the
+//! bottom end and synchronize with thieves through a single
+//! release/acquire fence pair plus one SeqCst fence in `pop`; thieves
+//! claim the top element by CAS-ing `top` forward. Fence placement
+//! follows Le, Pop, Cohen & Nardelli, *Correct and Efficient
+//! Work-Stealing for Weak Memory Models* (PPoPP '13) — the verified
+//! C11 formulation of the original Chase–Lev algorithm.
+//!
+//! **Growth** allocates a doubled buffer, bit-copies the live index
+//! range, and publishes the new pointer with a SeqCst store. A replaced
+//! buffer cannot be freed immediately — a concurrent thief may have
+//! loaded the old pointer and still be reading a slot — so retirement
+//! is epoch-style: thieves *pin* the deque (one atomic increment)
+//! around the window in which they dereference the buffer pointer, and
+//! the owner moves replaced buffers onto a limbo list that is freed
+//! only when the pin count reads zero (the SeqCst ordering between the
+//! publish store, the pin RMW, and the pin read guarantees any thief
+//! pinned after that read observes the *new* buffer). Limbo memory is
+//! bounded: buffer sizes double, so everything parked there together is
+//! smaller than the live buffer.
+//!
+//! **Steal-half batching** ([`WorkerDeque::steal_batch_and_pop`]): a
+//! thief takes up to ⌈len/2⌉ jobs (capped at [`MAX_STEAL_BATCH`]) in
+//! one victim visit — the first is returned to run immediately, the
+//! rest land in the thief's own deque where they are locally poppable
+//! and stealable by third parties. Each job still transfers through the
+//! full single-steal fence-and-CAS protocol: with a LIFO owner popping
+//! the bottom *without* synchronization (except on the last element), a
+//! single multi-element CAS on `top` could claim a range the owner has
+//! meanwhile partially consumed, duplicating jobs. Per-element CAS
+//! makes every transfer individually linearizable; the batching win is
+//! amortizing the victim scan and the thief's cache misses, not the
+//! CAS.
+//!
+//! ## [`LockedDeque`] ([`DequeKind::Locked`])
+//!
+//! The previous implementation — one short-critical-section
+//! `Mutex<VecDeque>` per worker — kept compiled and runtime-selectable
+//! (`Config::deque`, `SFUT_DEQUE`) as the measured A/B baseline for
+//! `BENCH_executor.json`: an uncontended mutex is a pair of atomic
+//! RMWs, so the delta against the CAS ring isolates exactly what the
+//! lock-free structure buys at this crate's task granularity.
+//!
+//! Ownership contract (both kinds): `push`, `pop`, and `drain` are
+//! owner-only — at most one thread at a time (with proper
+//! happens-before on handoff, e.g. a thread join) may call them, and
+//! `steal_batch_and_pop` requires the caller to be the owner of the
+//! *destination* deque. Because the Chase–Lev owner end is
+//! intentionally unsynchronized, these methods are `unsafe fn`s: the
+//! contract is a memory-safety requirement, not a convention (two
+//! concurrent pushes race on a slot and can lose or tear a job).
+//! `steal`, `len`, and `is_empty` are safe from any thread. The
+//! executor upholds the contract by construction: a deque is created
+//! inside `worker_loop` and only its worker pushes and pops it.
 
+use std::cell::UnsafeCell;
 use std::collections::VecDeque;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{fence, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use super::Job;
 
-/// A single worker's job deque. Owner end = back, thief end = front.
-pub struct WorkerDeque {
-    jobs: Mutex<VecDeque<Job>>,
+/// Most jobs one batch steal moves (the first popped plus the rest
+/// landed in the thief's deque). Bounds the time a thief spends inside
+/// one victim visit and leaves work for other thieves.
+pub const MAX_STEAL_BATCH: usize = 16;
+
+/// Which per-worker deque implementation an executor runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DequeKind {
+    /// Lock-free Chase–Lev ring deque (default).
+    #[default]
+    ChaseLev,
+    /// Minimally-locked `Mutex<VecDeque>` — the measured A/B baseline.
+    Locked,
+}
+
+impl DequeKind {
+    pub const ALL: [DequeKind; 2] = [DequeKind::ChaseLev, DequeKind::Locked];
+
+    /// The label used in config values, `SFUT_DEQUE`, and
+    /// `BENCH_executor.json` datapoints.
+    pub fn label(self) -> &'static str {
+        match self {
+            DequeKind::ChaseLev => "chase_lev",
+            DequeKind::Locked => "locked",
+        }
+    }
+
+    /// Read the `SFUT_DEQUE` environment override, if set.
+    ///
+    /// Panics on an *invalid* value rather than falling back: this env
+    /// var is how CI pins the whole test suite to one implementation —
+    /// a typo silently selecting the default would green-light a named
+    /// "locked" step that never ran the locked deque.
+    pub fn from_env() -> Option<DequeKind> {
+        let v = std::env::var("SFUT_DEQUE").ok()?;
+        match v.parse() {
+            Ok(kind) => Some(kind),
+            Err(e) => panic!("invalid SFUT_DEQUE: {e}"),
+        }
+    }
+
+    /// The process-wide default: `SFUT_DEQUE` when set (how CI runs the
+    /// same test suite under both implementations), else Chase–Lev.
+    pub fn default_kind() -> DequeKind {
+        Self::from_env().unwrap_or(DequeKind::ChaseLev)
+    }
+}
+
+impl std::str::FromStr for DequeKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<DequeKind, String> {
+        match s.trim() {
+            "chase_lev" | "chase-lev" | "chaselev" => Ok(DequeKind::ChaseLev),
+            "locked" | "mutex" => Ok(DequeKind::Locked),
+            other => Err(format!("unknown deque kind: {other} (want chase_lev | locked)")),
+        }
+    }
+}
+
+impl std::fmt::Display for DequeKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// A single worker's job deque: owner end = bottom (LIFO), thief end =
+/// top (FIFO). See the module docs for the per-kind designs and the
+/// owner-only contract on `push`/`pop`/`drain`.
+pub enum WorkerDeque {
+    Locked(LockedDeque),
+    ChaseLev(ChaseLevDeque),
 }
 
 impl WorkerDeque {
+    /// A deque of the process-default kind ([`DequeKind::default_kind`],
+    /// i.e. `SFUT_DEQUE` or Chase–Lev).
     pub fn new() -> Self {
-        WorkerDeque { jobs: Mutex::new(VecDeque::new()) }
+        Self::with_kind(DequeKind::default_kind())
     }
 
-    /// Owner push (back). Only the owning worker calls this.
+    pub fn with_kind(kind: DequeKind) -> Self {
+        match kind {
+            DequeKind::ChaseLev => WorkerDeque::ChaseLev(ChaseLevDeque::new()),
+            DequeKind::Locked => WorkerDeque::Locked(LockedDeque::new()),
+        }
+    }
+
+    pub fn kind(&self) -> DequeKind {
+        match self {
+            WorkerDeque::Locked(_) => DequeKind::Locked,
+            WorkerDeque::ChaseLev(_) => DequeKind::ChaseLev,
+        }
+    }
+
+    /// Owner push (bottom).
+    ///
+    /// # Safety
+    ///
+    /// Owner-only: at most one thread at a time may call the owner-end
+    /// methods (`push`/`pop`/`drain`) on this deque, with proper
+    /// happens-before ordering on any ownership handoff. See the
+    /// module docs.
+    pub unsafe fn push(&self, job: Job) {
+        match self {
+            WorkerDeque::Locked(d) => d.push(job),
+            WorkerDeque::ChaseLev(d) => unsafe { d.push(job) },
+        }
+    }
+
+    /// Owner pop (bottom, LIFO).
+    ///
+    /// # Safety
+    ///
+    /// Owner-only; same contract as [`WorkerDeque::push`].
+    pub unsafe fn pop(&self) -> Option<Job> {
+        match self {
+            WorkerDeque::Locked(d) => d.pop(),
+            WorkerDeque::ChaseLev(d) => unsafe { d.pop() },
+        }
+    }
+
+    /// Thief pop (top, FIFO). Any thread. `None` means empty *or* lost
+    /// a race — callers treat both as "move on".
+    pub fn steal(&self) -> Option<Job> {
+        match self {
+            WorkerDeque::Locked(d) => d.steal(),
+            WorkerDeque::ChaseLev(d) => d.steal(),
+        }
+    }
+
+    /// Steal up to ⌈len/2⌉ jobs (capped at [`MAX_STEAL_BATCH`]): the
+    /// first is returned to run now, the rest are pushed into `dest` —
+    /// the calling thief's *own* deque. Returns the first job and how
+    /// many extra jobs were moved into `dest`. The victim keeps the
+    /// newer half of its run in order (its LIFO discipline is
+    /// undisturbed). `None` means empty or contended.
+    ///
+    /// # Safety
+    ///
+    /// The caller must be the owner of `dest` (stolen jobs are pushed
+    /// onto its owner end); stealing from `self` is safe from any
+    /// thread.
+    pub unsafe fn steal_batch_and_pop(&self, dest: &WorkerDeque) -> Option<(Job, usize)> {
+        match self {
+            WorkerDeque::Locked(d) => {
+                let (first, rest) = d.steal_half(MAX_STEAL_BATCH)?;
+                let moved = rest.len();
+                for job in rest {
+                    unsafe { dest.push(job) };
+                }
+                Some((first, moved))
+            }
+            WorkerDeque::ChaseLev(d) => {
+                // Size the batch from one snapshot, then transfer each
+                // job through the full single-steal protocol (see the
+                // module docs for why one big CAS would be unsound
+                // against a LIFO owner).
+                let goal = d.len().div_ceil(2).min(MAX_STEAL_BATCH);
+                let mut first = None;
+                let mut moved = 0usize;
+                for _ in 0..goal.max(1) {
+                    match d.steal() {
+                        Some(job) if first.is_none() => first = Some(job),
+                        Some(job) => {
+                            unsafe { dest.push(job) };
+                            moved += 1;
+                        }
+                        // Empty or lost a race: stop with what we have.
+                        None => break,
+                    }
+                }
+                first.map(|job| (job, moved))
+            }
+        }
+    }
+
+    /// Queued jobs (instantaneous; for stats and idle checks).
+    pub fn len(&self) -> usize {
+        match self {
+            WorkerDeque::Locked(d) => d.len(),
+            WorkerDeque::ChaseLev(d) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take everything (worker exit path; order unspecified).
+    ///
+    /// # Safety
+    ///
+    /// Owner-only; same contract as [`WorkerDeque::push`].
+    pub unsafe fn drain(&self) -> Vec<Job> {
+        match self {
+            WorkerDeque::Locked(d) => d.drain(),
+            WorkerDeque::ChaseLev(d) => unsafe { d.drain() },
+        }
+    }
+}
+
+impl Default for WorkerDeque {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl From<ChaseLevDeque> for WorkerDeque {
+    fn from(d: ChaseLevDeque) -> Self {
+        WorkerDeque::ChaseLev(d)
+    }
+}
+
+impl From<LockedDeque> for WorkerDeque {
+    fn from(d: LockedDeque) -> Self {
+        WorkerDeque::Locked(d)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Locked baseline
+// ---------------------------------------------------------------------
+
+/// The minimally-locked deque: one short-critical-section
+/// `Mutex<VecDeque>`. Kept as the runtime-selectable A/B baseline.
+pub struct LockedDeque {
+    jobs: Mutex<VecDeque<Job>>,
+}
+
+impl LockedDeque {
+    pub fn new() -> Self {
+        LockedDeque { jobs: Mutex::new(VecDeque::new()) }
+    }
+
     pub fn push(&self, job: Job) {
         self.jobs.lock().unwrap().push_back(job);
     }
 
-    /// Owner pop (back, LIFO).
     pub fn pop(&self) -> Option<Job> {
         self.jobs.lock().unwrap().pop_back()
     }
 
-    /// Thief pop (front, FIFO).
     pub fn steal(&self) -> Option<Job> {
         self.jobs.lock().unwrap().pop_front()
     }
 
-    /// Queued jobs (instantaneous; for stats and idle checks).
+    /// Take the oldest job plus up to ⌈len/2⌉ − 1 more (bounded by
+    /// `max`), front-first, leaving the victim's newer half in order.
+    /// The batch is collected under the victim's lock and returned —
+    /// the caller pushes it into its own deque *after* this lock is
+    /// released (two thieves stealing from each other must never hold
+    /// both locks at once).
+    pub fn steal_half(&self, max: usize) -> Option<(Job, Vec<Job>)> {
+        let mut q = self.jobs.lock().unwrap();
+        let len = q.len();
+        if len == 0 {
+            return None;
+        }
+        let take = len.div_ceil(2).min(max.max(1));
+        let first = q.pop_front().expect("len checked above");
+        let rest: Vec<Job> = q.drain(..take - 1).collect();
+        Some((first, rest))
+    }
+
     pub fn len(&self) -> usize {
         self.jobs.lock().unwrap().len()
     }
@@ -56,15 +347,301 @@ impl WorkerDeque {
         self.len() == 0
     }
 
-    /// Take everything (worker exit path).
     pub fn drain(&self) -> Vec<Job> {
         self.jobs.lock().unwrap().drain(..).collect()
     }
 }
 
-impl Default for WorkerDeque {
+impl Default for LockedDeque {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Chase–Lev ring deque
+// ---------------------------------------------------------------------
+
+/// Initial ring capacity (power of two; doubles on overflow). Small
+/// enough that the grow path is exercised by ordinary workloads.
+const MIN_BUFFER_CAP: usize = 16;
+
+/// The growable circular job buffer. Slots are `MaybeUninit` because a
+/// slot's bytes may be read racily by a thief whose claiming CAS then
+/// fails — the read value is discarded without being treated as a live
+/// `Job` (a `MaybeUninit` is never dropped).
+struct Buffer {
+    /// `capacity - 1`; capacity is a power of two, so absolute indices
+    /// map to slots by masking (this is what makes wrapping `u64`
+    /// indices safe: consecutive indices stay consecutive mod capacity
+    /// even across the `u64::MAX` → `0` boundary).
+    mask: u64,
+    slots: Box<[UnsafeCell<MaybeUninit<Job>>]>,
+}
+
+impl Buffer {
+    fn alloc(cap: usize) -> *mut Buffer {
+        debug_assert!(cap.is_power_of_two());
+        let slots: Box<[UnsafeCell<MaybeUninit<Job>>]> =
+            (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+        Box::into_raw(Box::new(Buffer { mask: cap as u64 - 1, slots }))
+    }
+
+    fn capacity(&self) -> u64 {
+        self.mask + 1
+    }
+
+    /// Write a slot. Caller guarantees the slot is dead (outside the
+    /// live `[top, bottom)` window) and that it is the owner.
+    unsafe fn write(&self, index: u64, job: MaybeUninit<Job>) {
+        *self.slots[(index & self.mask) as usize].get() = job;
+    }
+
+    /// Read a slot's bytes. May race a writer; the caller must only
+    /// `assume_init` the result after winning the claiming CAS.
+    unsafe fn read(&self, index: u64) -> MaybeUninit<Job> {
+        std::ptr::read(self.slots[(index & self.mask) as usize].get())
+    }
+}
+
+/// Lock-free Chase–Lev work-stealing deque (see the module docs).
+///
+/// Indices are wrapping `u64`s: lengths are computed as
+/// `bottom.wrapping_sub(top) as i64`, which is exact for any live
+/// window shorter than 2⁶³ jobs. [`ChaseLevDeque::with_start_index`]
+/// lets tests start both indices at an arbitrary point (e.g. just
+/// below `u64::MAX`) to drive the wraparound path.
+pub struct ChaseLevDeque {
+    /// Thief end. Only ever advances (wrapping); claimed by CAS.
+    top: AtomicU64,
+    /// Owner end. Owner-written; thieves read it with Acquire.
+    bottom: AtomicU64,
+    /// Current ring. Replaced (owner-only) on growth with a SeqCst
+    /// store; thieves dereference it only while pinned.
+    buffer: AtomicPtr<Buffer>,
+    /// Thieves currently inside a buffer-dereference window.
+    pins: AtomicUsize,
+    /// Replaced buffers awaiting quiescence (`pins == 0`).
+    limbo: Mutex<Vec<*mut Buffer>>,
+}
+
+// SAFETY: the raw buffer pointers are managed by the pin/limbo protocol
+// described in the module docs — slots transfer ownership of `Job`s
+// (which are `Send`) across threads only through the top CAS or the
+// owner's bottom protocol, and a buffer is freed only after it is
+// unreachable (replaced, and pin count observed zero under the SeqCst
+// ordering argument in `retire`).
+unsafe impl Send for ChaseLevDeque {}
+unsafe impl Sync for ChaseLevDeque {}
+
+/// RAII pin: while one of these lives, no buffer the thief may have
+/// loaded can be freed.
+struct Pin<'a> {
+    deque: &'a ChaseLevDeque,
+}
+
+impl Drop for Pin<'_> {
+    fn drop(&mut self) {
+        self.deque.pins.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl ChaseLevDeque {
+    pub fn new() -> Self {
+        Self::with_start_index(0)
+    }
+
+    /// Test hook: start both indices at `start`, so wraparound across
+    /// the `u64` boundary is reachable in bounded test time. Production
+    /// code uses [`ChaseLevDeque::new`] (start 0); at one job per
+    /// nanosecond the indices would take ~584 years to wrap, but the
+    /// arithmetic is wrapping throughout so correctness never depends
+    /// on that.
+    pub fn with_start_index(start: u64) -> Self {
+        ChaseLevDeque {
+            top: AtomicU64::new(start),
+            bottom: AtomicU64::new(start),
+            buffer: AtomicPtr::new(Buffer::alloc(MIN_BUFFER_CAP)),
+            pins: AtomicUsize::new(0),
+            limbo: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn pin(&self) -> Pin<'_> {
+        self.pins.fetch_add(1, Ordering::SeqCst);
+        Pin { deque: self }
+    }
+
+    /// Owner push (bottom).
+    ///
+    /// # Safety
+    ///
+    /// Owner-only: at most one thread at a time may call
+    /// `push`/`pop`/`drain` on this deque (with happens-before
+    /// ordering on any ownership handoff). The owner end is
+    /// deliberately unsynchronized — concurrent owner calls race on
+    /// `bottom` and the slot bytes.
+    pub unsafe fn push(&self, job: Job) {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        let mut buf = self.buffer.load(Ordering::Relaxed);
+        if b.wrapping_sub(t) >= unsafe { (*buf).capacity() } {
+            self.grow(t, b);
+            buf = self.buffer.load(Ordering::Relaxed);
+        }
+        unsafe { (*buf).write(b, MaybeUninit::new(job)) };
+        // Publish the slot before the index: a thief that observes the
+        // new bottom (Acquire) must observe the written job.
+        fence(Ordering::Release);
+        self.bottom.store(b.wrapping_add(1), Ordering::Relaxed);
+    }
+
+    /// Owner pop (bottom, LIFO).
+    ///
+    /// # Safety
+    ///
+    /// Owner-only; same contract as [`ChaseLevDeque::push`].
+    pub unsafe fn pop(&self) -> Option<Job> {
+        let b = self.bottom.load(Ordering::Relaxed).wrapping_sub(1);
+        let buf = self.buffer.load(Ordering::Relaxed);
+        self.bottom.store(b, Ordering::Relaxed);
+        // Order the bottom decrement against thieves' top CAS: either a
+        // concurrent thief sees the reduced bottom and aborts, or we
+        // see its advanced top below.
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        let len = b.wrapping_sub(t) as i64;
+        if len < 0 {
+            // Was empty: restore the canonical empty state.
+            self.bottom.store(t, Ordering::Relaxed);
+            return None;
+        }
+        let job = unsafe { (*buf).read(b) };
+        if len > 0 {
+            // More than one element: the bottom one is ours without
+            // synchronization (thieves are fenced off by the check
+            // above).
+            return Some(unsafe { job.assume_init() });
+        }
+        // Exactly one element: race thieves for it on `top`.
+        let won = self
+            .top
+            .compare_exchange(t, t.wrapping_add(1), Ordering::SeqCst, Ordering::Relaxed)
+            .is_ok();
+        self.bottom.store(t.wrapping_add(1), Ordering::Relaxed);
+        if won {
+            Some(unsafe { job.assume_init() })
+        } else {
+            // A thief claimed it; our read is discarded uninterpreted.
+            None
+        }
+    }
+
+    /// Thief pop (top, FIFO). Any thread. `None` means empty or lost
+    /// the claiming race.
+    pub fn steal(&self) -> Option<Job> {
+        let t = self.top.load(Ordering::Acquire);
+        // Order the top load before the bottom load: pairs with the
+        // owner's pop fence so a concurrent pop is either seen in
+        // `bottom` or fails our CAS.
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if (b.wrapping_sub(t) as i64) <= 0 {
+            return None;
+        }
+        // Dereference window: pin so a concurrent grow cannot free the
+        // buffer under us.
+        let _pin = self.pin();
+        let buf = self.buffer.load(Ordering::SeqCst);
+        let job = unsafe { (*buf).read(t) };
+        if self
+            .top
+            .compare_exchange(t, t.wrapping_add(1), Ordering::SeqCst, Ordering::Relaxed)
+            .is_ok()
+        {
+            Some(unsafe { job.assume_init() })
+        } else {
+            // Lost to the owner or another thief: the bytes we read are
+            // not ours — drop the MaybeUninit without interpreting it.
+            None
+        }
+    }
+
+    /// Queued jobs (instantaneous snapshot).
+    pub fn len(&self) -> usize {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        (b.wrapping_sub(t) as i64).max(0) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take everything (owner exit path; LIFO order).
+    ///
+    /// # Safety
+    ///
+    /// Owner-only; same contract as [`ChaseLevDeque::push`].
+    pub unsafe fn drain(&self) -> Vec<Job> {
+        let mut out = Vec::new();
+        while let Some(job) = unsafe { self.pop() } {
+            out.push(job);
+        }
+        out
+    }
+
+    /// Owner-only: double the ring, copying the live window `[t, b)`.
+    /// `t` may be stale (thieves advance top concurrently) — copying a
+    /// few already-claimed slots is harmless, they are bit-copies no
+    /// one will read.
+    fn grow(&self, t: u64, b: u64) {
+        let old = self.buffer.load(Ordering::Relaxed);
+        let new_cap = (unsafe { (*old).capacity() } as usize) * 2;
+        let new = Buffer::alloc(new_cap);
+        let mut i = t;
+        while i != b {
+            unsafe { (*new).write(i, (*old).read(i)) };
+            i = i.wrapping_add(1);
+        }
+        self.buffer.store(new, Ordering::SeqCst);
+        self.retire(old);
+    }
+
+    /// Park a replaced buffer; free the limbo list if no thief is
+    /// pinned. SeqCst argument: the new buffer pointer was published
+    /// (SeqCst store) before this pin read. A pin RMW not observed here
+    /// is later in the SeqCst total order, so that thief's subsequent
+    /// buffer load (also SeqCst) returns the new pointer — it can never
+    /// acquire a reference to anything in limbo.
+    fn retire(&self, old: *mut Buffer) {
+        let mut limbo = self.limbo.lock().unwrap();
+        limbo.push(old);
+        if self.pins.load(Ordering::SeqCst) == 0 {
+            for p in limbo.drain(..) {
+                unsafe { drop(Box::from_raw(p)) };
+            }
+        }
+    }
+}
+
+impl Default for ChaseLevDeque {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for ChaseLevDeque {
+    fn drop(&mut self) {
+        // SAFETY: &mut self — no concurrent owner or thieves. Drop
+        // queued jobs, then free the live buffer and anything still in
+        // limbo.
+        while unsafe { self.pop() }.is_some() {}
+        let buf = *self.buffer.get_mut();
+        unsafe { drop(Box::from_raw(buf)) };
+        for p in self.limbo.get_mut().unwrap().drain(..) {
+            unsafe { drop(Box::from_raw(p)) };
+        }
     }
 }
 
@@ -80,77 +657,190 @@ mod tests {
     }
 
     #[test]
-    fn owner_is_lifo_thief_is_fifo() {
-        let d = WorkerDeque::new();
-        let order = Arc::new(Mutex::new(Vec::new()));
-        for tag in 0..4 {
-            d.push(job(&order, tag));
+    fn kind_labels_parse_and_roundtrip() {
+        for kind in DequeKind::ALL {
+            assert_eq!(kind.label().parse::<DequeKind>().unwrap(), kind);
         }
-        // Thief sees the oldest job…
-        d.steal().unwrap()();
-        // …the owner the newest.
-        d.pop().unwrap()();
-        assert_eq!(*order.lock().unwrap(), vec![0, 3]);
-        assert_eq!(d.len(), 2);
+        assert_eq!("chase-lev".parse::<DequeKind>().unwrap(), DequeKind::ChaseLev);
+        assert_eq!("mutex".parse::<DequeKind>().unwrap(), DequeKind::Locked);
+        assert!("spinlock".parse::<DequeKind>().is_err());
+        assert_eq!(WorkerDeque::with_kind(DequeKind::Locked).kind(), DequeKind::Locked);
+        assert_eq!(
+            WorkerDeque::with_kind(DequeKind::ChaseLev).kind(),
+            DequeKind::ChaseLev
+        );
+        assert_eq!(WorkerDeque::new().kind(), DequeKind::default_kind());
+    }
+
+    #[test]
+    fn owner_is_lifo_thief_is_fifo() {
+        for kind in DequeKind::ALL {
+            let d = WorkerDeque::with_kind(kind);
+            let order = Arc::new(Mutex::new(Vec::new()));
+            for tag in 0..4 {
+                unsafe { d.push(job(&order, tag)) };
+            }
+            // Thief sees the oldest job…
+            d.steal().unwrap()();
+            // …the owner the newest.
+            unsafe { d.pop() }.unwrap()();
+            assert_eq!(*order.lock().unwrap(), vec![0, 3], "kind={kind:?}");
+            assert_eq!(d.len(), 2);
+        }
     }
 
     #[test]
     fn drain_empties() {
-        let d = WorkerDeque::new();
-        let n = Arc::new(AtomicUsize::new(0));
-        for _ in 0..5 {
-            let n = n.clone();
-            d.push(Box::new(move || {
-                n.fetch_add(1, Ordering::SeqCst);
-            }));
+        for kind in DequeKind::ALL {
+            let d = WorkerDeque::with_kind(kind);
+            let n = Arc::new(AtomicUsize::new(0));
+            for _ in 0..5 {
+                let n = n.clone();
+                unsafe {
+                    d.push(Box::new(move || {
+                        n.fetch_add(1, Ordering::SeqCst);
+                    }))
+                };
+            }
+            let jobs = unsafe { d.drain() };
+            assert_eq!(jobs.len(), 5);
+            assert!(d.is_empty());
+            for j in jobs {
+                j();
+            }
+            assert_eq!(n.load(Ordering::SeqCst), 5, "kind={kind:?}");
         }
-        let jobs = d.drain();
-        assert_eq!(jobs.len(), 5);
-        assert!(d.is_empty());
-        for j in jobs {
+    }
+
+    #[test]
+    fn steal_half_takes_ceil_half_and_preserves_victim_order() {
+        for kind in DequeKind::ALL {
+            let victim = WorkerDeque::with_kind(kind);
+            let dest = WorkerDeque::with_kind(kind);
+            let order = Arc::new(Mutex::new(Vec::new()));
+            for tag in 0..10 {
+                unsafe { victim.push(job(&order, tag)) };
+            }
+            let (first, moved) = unsafe { victim.steal_batch_and_pop(&dest) }.expect("non-empty");
+            // ⌈10/2⌉ = 5 total: the popped first plus 4 moved.
+            assert_eq!(moved, 4, "kind={kind:?}");
+            assert_eq!(dest.len(), 4);
+            assert_eq!(victim.len(), 5);
+            first();
+            assert_eq!(order.lock().unwrap().pop(), Some(0), "first = victim's oldest");
+            // Victim keeps its newest half in LIFO order.
+            for expect in [9, 8, 7, 6, 5] {
+                unsafe { victim.pop() }.unwrap()();
+                assert_eq!(order.lock().unwrap().pop(), Some(expect), "kind={kind:?}");
+            }
+            // Dest received the next-oldest run (1..=4), poppable LIFO.
+            for expect in [4, 3, 2, 1] {
+                unsafe { dest.pop() }.unwrap()();
+                assert_eq!(order.lock().unwrap().pop(), Some(expect), "kind={kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn steal_half_is_capped_at_max_batch() {
+        for kind in DequeKind::ALL {
+            let victim = WorkerDeque::with_kind(kind);
+            let dest = WorkerDeque::with_kind(kind);
+            let n = 6 * MAX_STEAL_BATCH;
+            for _ in 0..n {
+                unsafe { victim.push(Box::new(|| {})) };
+            }
+            let (_first, moved) = unsafe { victim.steal_batch_and_pop(&dest) }.expect("non-empty");
+            assert!(moved < MAX_STEAL_BATCH, "kind={kind:?}, moved={moved}");
+            assert_eq!(victim.len(), n - moved - 1);
+        }
+    }
+
+    #[test]
+    fn chase_lev_grows_past_initial_capacity() {
+        let d = ChaseLevDeque::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let n = MIN_BUFFER_CAP * 8 + 3;
+        for _ in 0..n {
+            let hits = hits.clone();
+            unsafe {
+                d.push(Box::new(move || {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                }))
+            };
+        }
+        assert_eq!(d.len(), n);
+        while let Some(j) = unsafe { d.pop() } {
             j();
         }
-        assert_eq!(n.load(Ordering::SeqCst), 5);
+        assert_eq!(hits.load(Ordering::SeqCst), n);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn chase_lev_wraps_past_u64_boundary() {
+        // Start just below u64::MAX so pushes carry the indices through
+        // the wrap; LIFO/FIFO semantics and len must be unaffected.
+        let d = ChaseLevDeque::with_start_index(u64::MAX - 2);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        for tag in 0..8 {
+            unsafe { d.push(job(&order, tag)) };
+        }
+        assert_eq!(d.len(), 8);
+        d.steal().unwrap()();
+        d.steal().unwrap()();
+        unsafe { d.pop() }.unwrap()();
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 7]);
+        assert_eq!(d.len(), 5);
+        let rest = unsafe { d.drain() };
+        assert_eq!(rest.len(), 5);
+        assert!(d.is_empty());
+        assert!(unsafe { d.pop() }.is_none());
+        assert!(d.steal().is_none());
     }
 
     #[test]
     fn concurrent_owner_and_thieves_lose_nothing() {
-        let d = Arc::new(WorkerDeque::new());
-        let done = Arc::new(AtomicUsize::new(0));
-        const N: usize = 10_000;
-        std::thread::scope(|s| {
-            // Owner: push everything, popping occasionally.
-            {
-                let d = d.clone();
-                let done = done.clone();
-                s.spawn(move || {
-                    for i in 0..N {
-                        let done = done.clone();
-                        d.push(Box::new(move || {
-                            done.fetch_add(1, Ordering::SeqCst);
-                        }));
-                        if i % 3 == 0 {
-                            if let Some(j) = d.pop() {
-                                j();
+        for kind in DequeKind::ALL {
+            let d = Arc::new(WorkerDeque::with_kind(kind));
+            let done = Arc::new(AtomicUsize::new(0));
+            const N: usize = 10_000;
+            std::thread::scope(|s| {
+                // Owner: push everything, popping occasionally.
+                {
+                    let d = d.clone();
+                    let done = done.clone();
+                    s.spawn(move || {
+                        for i in 0..N {
+                            let done = done.clone();
+                            unsafe {
+                                d.push(Box::new(move || {
+                                    done.fetch_add(1, Ordering::SeqCst);
+                                }))
+                            };
+                            if i % 3 == 0 {
+                                if let Some(j) = unsafe { d.pop() } {
+                                    j();
+                                }
                             }
                         }
-                    }
-                });
-            }
-            // Two thieves.
-            for _ in 0..2 {
-                let d = d.clone();
-                let done = done.clone();
-                s.spawn(move || {
-                    while done.load(Ordering::SeqCst) < N {
-                        match d.steal() {
-                            Some(j) => j(),
-                            None => std::thread::yield_now(),
+                    });
+                }
+                // Two thieves.
+                for _ in 0..2 {
+                    let d = d.clone();
+                    let done = done.clone();
+                    s.spawn(move || {
+                        while done.load(Ordering::SeqCst) < N {
+                            match d.steal() {
+                                Some(j) => j(),
+                                None => std::thread::yield_now(),
+                            }
                         }
-                    }
-                });
-            }
-        });
-        assert_eq!(done.load(Ordering::SeqCst), N);
+                    });
+                }
+            });
+            assert_eq!(done.load(Ordering::SeqCst), N, "kind={kind:?}");
+        }
     }
 }

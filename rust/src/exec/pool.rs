@@ -3,12 +3,20 @@
 //!
 //! Scheduling layout under [`Scheduler::WorkStealing`] (the default):
 //!
-//! * Every worker owns a [`WorkerDeque`]: local spawns push LIFO onto it
-//!   (cache-warm continuation runs next), thieves steal FIFO from the
-//!   far end (oldest = biggest remaining subtree).
+//! * Every worker owns a [`WorkerDeque`] (a lock-free Chase–Lev ring by
+//!   default, or the locked baseline — [`ExecutorConfig::deque`]):
+//!   local spawns push LIFO onto it (cache-warm continuation runs
+//!   next), thieves steal FIFO from the far end (oldest = biggest
+//!   remaining subtree).
 //! * External submissions (driver threads) land in the global injector.
 //! * A worker looks for work in order: own deque → injector → steal from
-//!   a rotating start index across the other deques.
+//!   a rotating start index across the other deques. A steal is a
+//!   **batch acquisition**: the thief takes up to half the victim's run
+//!   in one visit (`steal_batch_and_pop`), runs the oldest job
+//!   immediately, and lands the rest in its own deque — where they are
+//!   locally poppable and stealable by third parties. A thief that
+//!   lands a batch also wakes one parked peer, so a deep backlog fans
+//!   out across the pool instead of draining through one worker.
 //! * Finding nothing, it parks on a pool-wide condvar. Producers only
 //!   touch that condvar when `idle_workers > 0`, so the saturated hot
 //!   path (everyone busy) does no notify work at all.
@@ -31,7 +39,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Duration;
 
-use super::deque::WorkerDeque;
+use super::deque::{DequeKind, WorkerDeque};
 use super::queue::JobQueue;
 use super::{current_worker, set_current_worker, with_current_worker, Job, WorkerCtx};
 
@@ -65,6 +73,11 @@ pub struct ExecutorConfig {
     /// Scheduling core. [`Scheduler::WorkStealing`] unless you are
     /// benchmarking against the baseline.
     pub scheduler: Scheduler,
+    /// Per-worker deque implementation (work-stealing mode only):
+    /// lock-free Chase–Lev ring by default, or the locked baseline for
+    /// A/B runs. Defaults to [`DequeKind::default_kind`] (`SFUT_DEQUE`
+    /// aware).
+    pub deque: DequeKind,
 }
 
 impl ExecutorConfig {
@@ -76,6 +89,7 @@ impl ExecutorConfig {
             max_threads: 512,
             name: "sfut-worker".to_string(),
             scheduler: Scheduler::WorkStealing,
+            deque: DequeKind::default_kind(),
         }
     }
 }
@@ -94,15 +108,34 @@ pub struct ExecutorStats {
     pub tasks_spawned: u64,
     pub tasks_executed: u64,
     pub tasks_panicked: u64,
-    /// Jobs taken FIFO out of another worker's deque. Zero under
-    /// [`Scheduler::GlobalQueue`]; nonzero whenever work-stealing
-    /// actually balanced load.
+    /// Jobs taken FIFO out of another worker's deque (batch-stolen jobs
+    /// included). Zero under [`Scheduler::GlobalQueue`]; nonzero
+    /// whenever work-stealing actually balanced load.
     pub tasks_stolen: u64,
+    /// Steal operations that moved more than one job (steal-half
+    /// batching actually batched).
+    pub steals_batched: u64,
+    /// Extra jobs landed in thieves' deques by batch steals (excludes
+    /// the immediately-run first job of each batch).
+    pub jobs_migrated: u64,
     pub compensation_threads: u64,
     pub blocking_sections: u64,
     /// Injector depth plus the sum of all worker-deque depths.
     pub queue_depth: usize,
     pub live_threads: usize,
+}
+
+impl ExecutorStats {
+    /// Mean batch size of batched steals (extra jobs landed per batch
+    /// operation); 0 when nothing batched yet. Published as the
+    /// `jobs_migrated_per_steal` gauge (rounded).
+    pub fn jobs_migrated_per_steal(&self) -> f64 {
+        if self.steals_batched == 0 {
+            0.0
+        } else {
+            self.jobs_migrated as f64 / self.steals_batched as f64
+        }
+    }
 }
 
 pub(crate) struct Inner {
@@ -131,6 +164,8 @@ pub(crate) struct Inner {
     tasks_executed: AtomicU64,
     tasks_panicked: AtomicU64,
     tasks_stolen: AtomicU64,
+    steals_batched: AtomicU64,
+    jobs_migrated: AtomicU64,
     compensation_threads: AtomicU64,
     blocking_sections: AtomicU64,
     /// Rotates the steal scan's start index so thieves spread out.
@@ -199,6 +234,8 @@ impl Executor {
             tasks_executed: AtomicU64::new(0),
             tasks_panicked: AtomicU64::new(0),
             tasks_stolen: AtomicU64::new(0),
+            steals_batched: AtomicU64::new(0),
+            jobs_migrated: AtomicU64::new(0),
             compensation_threads: AtomicU64::new(0),
             blocking_sections: AtomicU64::new(0),
             steal_seed: AtomicUsize::new(0),
@@ -268,6 +305,8 @@ impl Executor {
             tasks_executed: inner.tasks_executed.load(Ordering::Relaxed),
             tasks_panicked: inner.tasks_panicked.load(Ordering::Relaxed),
             tasks_stolen: inner.tasks_stolen.load(Ordering::Relaxed),
+            steals_batched: inner.steals_batched.load(Ordering::Relaxed),
+            jobs_migrated: inner.jobs_migrated.load(Ordering::Relaxed),
             compensation_threads: inner.compensation_threads.load(Ordering::Relaxed),
             blocking_sections: inner.blocking_sections.load(Ordering::Relaxed),
             queue_depth: inner.injector.len() + deque_depth,
@@ -306,7 +345,10 @@ impl Inner {
         let pushed_local = with_current_worker(|ctx| match ctx {
             Some(ctx) if Arc::ptr_eq(&ctx.inner, self) => match &ctx.deque {
                 Some(d) => {
-                    d.push(job.take().expect("job not yet consumed"));
+                    // SAFETY: `ctx.deque` is the calling worker's own
+                    // deque (thread-local context) — this thread is its
+                    // sole owner.
+                    unsafe { d.push(job.take().expect("job not yet consumed")) };
                     // Close the spawn/shutdown race (the old global queue
                     // checked the flag under its lock): if shutdown landed
                     // between the check above and the push, retract the
@@ -314,7 +356,7 @@ impl Inner {
                     // deque, so `pop` returns exactly it unless a thief
                     // already claimed it (in which case it is in flight,
                     // same as a pre-shutdown submission).
-                    if self.injector.is_shutdown() && d.pop().is_some() {
+                    if self.injector.is_shutdown() && unsafe { d.pop() }.is_some() {
                         LocalPush::Dropped
                     } else {
                         LocalPush::Pushed
@@ -395,7 +437,7 @@ impl Inner {
 
     fn worker_loop(self: Arc<Self>, transient: bool) {
         let deque = match self.cfg.scheduler {
-            Scheduler::WorkStealing => Some(Arc::new(WorkerDeque::new())),
+            Scheduler::WorkStealing => Some(Arc::new(WorkerDeque::with_kind(self.cfg.deque))),
             Scheduler::GlobalQueue => None,
         };
         if let Some(d) = &deque {
@@ -439,7 +481,10 @@ impl Inner {
             // Exit paths imply the deque is empty; if a job is ever left
             // behind, hand it back and wake a worker for it rather than
             // stranding it (and a wait_idle caller) until the next spawn.
-            for job in d.drain() {
+            // SAFETY: this worker thread created the deque and is its
+            // sole owner; the write-locked `retain` above means no thief
+            // can reach it anymore either.
+            for job in unsafe { d.drain() } {
                 if self.injector.push(job) {
                     self.notify_parked();
                 } else {
@@ -452,7 +497,9 @@ impl Inner {
     /// Work-discovery order: own deque (LIFO) → injector → steal (FIFO).
     fn find_job(&self, own: Option<&WorkerDeque>) -> Option<Job> {
         if let Some(d) = own {
-            if let Some(job) = d.pop() {
+            // SAFETY: `own` is the calling worker's deque — this thread
+            // is its sole owner.
+            if let Some(job) = unsafe { d.pop() } {
                 return Some(job);
             }
         }
@@ -463,25 +510,64 @@ impl Inner {
     }
 
     fn try_steal(&self, own: Option<&WorkerDeque>) -> Option<Job> {
-        let deques = self.deques.read().unwrap();
-        let n = deques.len();
-        if n == 0 {
-            return None;
-        }
-        let start = self.steal_seed.fetch_add(1, Ordering::Relaxed) % n;
-        for k in 0..n {
-            let q = &deques[(start + k) % n];
-            if let Some(own) = own {
-                if std::ptr::eq(Arc::as_ptr(q), own) {
-                    continue;
+        // Whether a landed batch should wake a parked peer. The notify
+        // happens *after* the deques read guard drops: notify_parked
+        // takes park_lock, and a parker holds park_lock while its
+        // has_work re-check takes the deques read lock — notifying
+        // under the guard could deadlock through a queued writer.
+        let mut landed_batch = false;
+        let mut found = None;
+        {
+            let deques = self.deques.read().unwrap();
+            let n = deques.len();
+            if n == 0 {
+                return None;
+            }
+            let start = self.steal_seed.fetch_add(1, Ordering::Relaxed) % n;
+            for k in 0..n {
+                let q = &deques[(start + k) % n];
+                match own {
+                    Some(own) => {
+                        if std::ptr::eq(Arc::as_ptr(q), own) {
+                            continue;
+                        }
+                        // Batch acquisition: land up to half the
+                        // victim's run in our own deque, run the oldest
+                        // job now.
+                        // SAFETY: `own` is the calling worker's deque —
+                        // this thread owns the destination end.
+                        if let Some((job, moved)) = unsafe { q.steal_batch_and_pop(own) } {
+                            self.tasks_stolen.fetch_add(1 + moved as u64, Ordering::Relaxed);
+                            if moved > 0 {
+                                self.steals_batched.fetch_add(1, Ordering::Relaxed);
+                                self.jobs_migrated.fetch_add(moved as u64, Ordering::Relaxed);
+                                landed_batch = true;
+                            }
+                            found = Some(job);
+                            break;
+                        }
+                    }
+                    None => {
+                        // No home deque to land a batch in (e.g. a
+                        // worker of a GlobalQueue pool would not get
+                        // here at all): plain single steal.
+                        if let Some(job) = q.steal() {
+                            self.tasks_stolen.fetch_add(1, Ordering::Relaxed);
+                            found = Some(job);
+                            break;
+                        }
+                    }
                 }
             }
-            if let Some(job) = q.steal() {
-                self.tasks_stolen.fetch_add(1, Ordering::Relaxed);
-                return Some(job);
-            }
         }
-        None
+        if landed_batch {
+            // The migrated jobs are poppable by us and stealable from
+            // our deque; wake one parked peer to help drain the backlog
+            // (parking re-checks has_work, so this is purely a latency
+            // hint, never a correctness need).
+            self.notify_parked();
+        }
+        found
     }
 
     /// True when any queue in the pool holds a job.

@@ -2,8 +2,9 @@
 //!
 //! A `Mutex<VecDeque>` + `Condvar` is deliberately the *baseline*
 //! implementation; `benches/ablation_overhead.rs` (section 6) measures it
-//! against the per-worker stealable deques and records the gap in
-//! `BENCH_executor.json`. At the paper's task granularity (hundreds of
+//! against the per-worker stealable deques (both the Chase–Lev ring and
+//! the locked variant — see `exec::deque`) and records the labeled gaps
+//! in `BENCH_executor.json`. At the paper's task granularity (hundreds of
 //! microseconds and up for `stream_big`) the single lock is nowhere near
 //! the bottleneck; at `primes` granularity it is part of the overhead the
 //! paper itself observes (observation 1 in §7).

@@ -30,13 +30,23 @@
 //!
 //! * **Work-stealing executor** ([`exec`]) — per-worker deques with LIFO
 //!   local push/pop and FIFO stealing, a global injector for external
-//!   submissions, and park/unpark idle management. Managed blocking
-//!   (compensation threads) is preserved, so `Fut::force` stays
-//!   deadlock-free even at par(1). The old single-`Mutex` queue survives
-//!   as `Scheduler::GlobalQueue`, the measured baseline; `cargo bench
-//!   --bench ablation_overhead` A/Bs the two and records the trajectory
-//!   in `BENCH_executor.json` (`ExecutorStats::tasks_stolen` shows the
-//!   balancer working).
+//!   submissions, and park/unpark idle management. The deque is a true
+//!   lock-free Chase–Lev ring ([`exec::ChaseLevDeque`]: atomic
+//!   `top`/`bottom`, owner push/pop with one release/acquire fence
+//!   pair, thieves CAS-ing `top`, pin-based retirement of grown-out
+//!   buffers), runtime-selectable against the minimally-locked
+//!   baseline ([`exec::DequeKind`]: `Config::deque`, `--deque`,
+//!   `SFUT_DEQUE`). Thieves batch: one victim visit moves up to half
+//!   the victim's run into the thief's own deque
+//!   (`ExecutorStats::{steals_batched, jobs_migrated}`, the
+//!   `jobs_migrated_per_steal` gauge). Managed blocking (compensation
+//!   threads) is preserved, so `Fut::force` stays deadlock-free even at
+//!   par(1). The old single-`Mutex` queue survives as
+//!   `Scheduler::GlobalQueue`, the measured baseline; `cargo bench
+//!   --bench ablation_overhead` A/Bs all three variants in one run and
+//!   records labeled `deque=chase_lev` / `deque=locked` datapoints in
+//!   `BENCH_executor.json`, which `sfut check-bench` gates comparing
+//!   like-labeled points only.
 //! * **Lock-free future cells** ([`susp`]) — `Fut<T>` is an atomic state
 //!   machine (EMPTY → RUNNING → READY/PANICKED): `is_ready`, `force`,
 //!   and callback registration on a completed cell are single Acquire
@@ -69,8 +79,11 @@
 //!   p50/p95 latency + queue-wait p50/p95 + shed rate at shards
 //!   ∈ {1, 2, N} into `BENCH_pipeline.json`, which CI's `bench-gate`
 //!   job enforces (>25% throughput regressions fail; p95 latency and
-//!   queue-wait growth warn — see `ci/check_bench.sh` and
-//!   `sfut check-bench --latency-threshold`).
+//!   queue-wait growth warns by default and fails under
+//!   `sfut check-bench --latency-strict` / `BENCH_GATE_LATENCY_STRICT=1`
+//!   — auto-disarmed while the committed baseline's note marks it a
+//!   synthetic floor; the `bench-baseline` workflow produces measured
+//!   replacements — see `ci/check_bench.sh`).
 
 pub mod bench_harness;
 pub mod bigint;

@@ -8,6 +8,9 @@
 //! sfut serve [options]                     line-protocol request loop on stdio
 //! sfut info [options]                      platform / artifact / config report
 //! sfut check-bench <baseline> <current>    perf-regression gate on BENCH_pipeline.json
+//!                                          or BENCH_executor.json (dispatched on the
+//!                                          file's "bench" field; executor runs compare
+//!                                          like-labeled scheduler/deque points only)
 //!
 //! options:
 //!   --config <file>          TOML-subset config file
@@ -18,9 +21,14 @@
 //!   --queue-depth <n>        shorthand for --set queue_depth=<n>
 //!   --admission <policy>     shorthand for --set admission=<policy>
 //!                            (block | shed | timeout(MS))
+//!   --deque <kind>           shorthand for --set deque=<kind>
+//!                            (chase_lev | locked)
 //!   --threshold <f>          check-bench regression tolerance (default 0.25)
 //!   --latency-threshold <f>  check-bench p95 growth tolerated before a
-//!                            warn-only finding (default 0.25)
+//!                            finding (default 0.25)
+//!   --latency-strict         check-bench: p95 latency/queue-wait findings
+//!                            fail the gate instead of warning (auto-disarms
+//!                            while the baseline's note marks it synthetic)
 //! ```
 //!
 //! (clap is unavailable offline; parsing is hand-rolled and strict —
@@ -42,6 +50,7 @@ struct Cli {
     overrides: Vec<(String, String)>,
     threshold: Option<f64>,
     latency_threshold: Option<f64>,
+    latency_strict: bool,
 }
 
 fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
@@ -53,6 +62,7 @@ fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
         overrides: Vec::new(),
         threshold: None,
         latency_threshold: None,
+        latency_strict: false,
     };
     while let Some(arg) = args.next() {
         match arg.as_str() {
@@ -86,6 +96,13 @@ fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
                     .context("--admission needs a policy (block | shed | timeout(MS))")?;
                 cli.overrides.push(("admission".to_string(), v));
             }
+            "--deque" => {
+                let v = args.next().context("--deque needs a kind (chase_lev | locked)")?;
+                cli.overrides.push(("deque".to_string(), v));
+            }
+            "--latency-strict" => {
+                cli.latency_strict = true;
+            }
             "--latency-threshold" => {
                 let v = args.next().context("--latency-threshold needs a number > 0")?;
                 let t: f64 = v
@@ -115,6 +132,9 @@ fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
     }
     if cli.latency_threshold.is_some() && cli.command != "check-bench" {
         bail!("--latency-threshold only applies to check-bench");
+    }
+    if cli.latency_strict && cli.command != "check-bench" {
+        bail!("--latency-strict only applies to check-bench");
     }
     Ok(cli)
 }
@@ -193,7 +213,7 @@ fn real_main() -> Result<()> {
             if cli.positional.len() != 2 {
                 bail!(
                     "usage: sfut check-bench <baseline.json> <current.json> \
-                     [--threshold 0.25] [--latency-threshold 0.25]"
+                     [--threshold 0.25] [--latency-threshold 0.25] [--latency-strict]"
                 );
             }
             let threshold = cli.threshold.unwrap_or(0.25);
@@ -204,11 +224,54 @@ fn real_main() -> Result<()> {
                 .with_context(|| format!("reading baseline {}", cli.positional[0]))?;
             let current = std::fs::read_to_string(&cli.positional[1])
                 .with_context(|| format!("reading current {}", cli.positional[1]))?;
-            use stream_future::bench_harness::pipeline_bench::{gate, GateOutcome};
-            let report = gate(&baseline, &current, threshold, latency_threshold)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            use stream_future::bench_harness::tiny_json::{self, Json};
+            use stream_future::bench_harness::{executor_bench, pipeline_bench};
+            use stream_future::bench_harness::{GateOutcome, LatencyGate};
+            // Dispatch on the current run's trajectory kind. A current
+            // file that does not even parse to a known kind is a hard
+            // error — a broken bench writer must fail the gate, never
+            // skip it.
+            let kind = tiny_json::parse(&current)
+                .map_err(|e| anyhow::anyhow!("current run is not valid JSON: {e}"))?
+                .get("bench")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .context("current run has no \"bench\" field — bench writer broken")?;
+            let report = match kind.as_str() {
+                "pipeline_throughput" => pipeline_bench::gate(
+                    &baseline,
+                    &current,
+                    threshold,
+                    latency_threshold,
+                    cli.latency_strict,
+                ),
+                "executor_overhead" => {
+                    // Executor trajectories carry no latency cells;
+                    // make inert flags visible instead of silently
+                    // accepting them.
+                    if cli.latency_strict || cli.latency_threshold.is_some() {
+                        eprintln!(
+                            "note: --latency-strict/--latency-threshold do not apply to \
+                             executor_overhead trajectories (throughput-only gate)"
+                        );
+                    }
+                    executor_bench::gate(&baseline, &current, threshold)
+                }
+                other => bail!("unknown trajectory kind: {other}"),
+            }
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            match report.latency_gate {
+                LatencyGate::WarnOnly => {}
+                LatencyGate::Strict => println!("latency gate: STRICT (armed)"),
+                LatencyGate::StrictDisarmedSyntheticBaseline => println!(
+                    "latency gate: strict requested but DISARMED — the committed \
+                     baseline's note marks it a synthetic floor; refresh it with a \
+                     measured run to arm (see ci/check_bench.sh)"
+                ),
+            }
             // Warn-only latency findings print regardless of the
-            // throughput verdict (they have no exit-code teeth yet).
+            // throughput verdict; under --latency-strict they appear as
+            // REGRESSION lines instead.
             for w in &report.warnings {
                 eprintln!("WARNING: p95 regression (warn-only): {w}");
             }
@@ -231,9 +294,8 @@ fn real_main() -> Result<()> {
                         eprintln!("REGRESSION: {r}");
                     }
                     bail!(
-                        "bench gate FAILED: {} cell(s) regressed beyond {:.0}%",
-                        regressions.len(),
-                        threshold * 100.0
+                        "bench gate FAILED: {} regression(s) beyond tolerance",
+                        regressions.len()
                     );
                 }
             }
@@ -269,11 +331,13 @@ fn real_main() -> Result<()> {
                  \x20 fig4                    regenerate Figure 4 (polynomial chart)\n\
                  \x20 serve                   request loop on stdin/stdout\n\
                  \x20 info                    platform / artifact / config report\n\
-                 \x20 check-bench <a> <b>     compare BENCH_pipeline.json runs (CI perf gate)\n\
+                 \x20 check-bench <a> <b>     compare BENCH_pipeline.json or \
+                 BENCH_executor.json runs (CI perf gate)\n\
                  \n\
                  options: --config <file> | --set k=v | --scale <f> | --samples <n> | \
                  --no-kernel | --queue-depth <n> | --admission <block|shed|timeout(MS)> | \
-                 --threshold <f> | --latency-threshold <f>\n\
+                 --deque <chase_lev|locked> | \
+                 --threshold <f> | --latency-threshold <f> | --latency-strict\n\
                  workloads: primes primes_x3 primes_chunked stream stream_big list list_big \
                  chunked chunked_big\n\
                  modes: seq strict par(N)"
@@ -343,6 +407,25 @@ mod tests {
             parse_args(args("run primes seq --latency-threshold 0.5")).is_err(),
             "--latency-threshold must be rejected outside check-bench"
         );
+    }
+
+    #[test]
+    fn parses_latency_strict_for_check_bench_only() {
+        let cli = parse_args(args("check-bench a.json b.json --latency-strict")).unwrap();
+        assert!(cli.latency_strict);
+        let cli = parse_args(args("check-bench a.json b.json")).unwrap();
+        assert!(!cli.latency_strict);
+        assert!(
+            parse_args(args("run primes seq --latency-strict")).is_err(),
+            "--latency-strict must be rejected outside check-bench"
+        );
+    }
+
+    #[test]
+    fn parses_deque_shorthand() {
+        let cli = parse_args(args("run primes seq --deque locked")).unwrap();
+        assert!(cli.overrides.contains(&("deque".to_string(), "locked".to_string())));
+        assert!(parse_args(args("run primes seq --deque")).is_err());
     }
 
     #[test]

@@ -1,0 +1,329 @@
+//! Model tests for the per-worker stealable deques — run against BOTH
+//! implementations ([`DequeKind::ChaseLev`] and [`DequeKind::Locked`]),
+//! so CI can pin a steal-path regression to one of them at a glance
+//! (`ci.yml` runs this file as a named step under `SFUT_DEQUE=chase_lev`
+//! and `SFUT_DEQUE=locked`; the kind-parameterized tests below cover
+//! both regardless of the env default).
+//!
+//! The invariants checked:
+//!
+//! * **No job lost or duplicated** under one owner racing N concurrent
+//!   thieves (per-job execution flags — every job runs exactly once —
+//!   plus a checksum over executed job ids).
+//! * **Index wraparound**: the Chase–Lev ring's wrapping `u64` indices
+//!   survive crossing the `u64::MAX` → `0` boundary, single-threaded
+//!   and under concurrency ([`ChaseLevDeque::with_start_index`]).
+//! * **Grow under steal**: buffer growth (16 → thousands of slots)
+//!   while thieves are mid-steal neither loses jobs nor frees a buffer
+//!   a thief still reads (the pin/limbo retirement path).
+//! * **Steal-half sizing**: a batch steal takes at most ⌈len/2⌉ jobs
+//!   (capped at [`MAX_STEAL_BATCH`]), the victim keeps the newer half
+//!   with its LIFO order undisturbed, and the thief's deque receives
+//!   the rest.
+//! * **Pool-level batch accounting**: `steals_batched`/`jobs_migrated`
+//!   counters stay mutually consistent under both kinds.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use stream_future::exec::{
+    ChaseLevDeque, DequeKind, Executor, ExecutorConfig, WorkerDeque, MAX_STEAL_BATCH,
+};
+
+/// One execution flag per job: `run_all` asserts each flag is exactly 1,
+/// which catches losses AND duplications (a checksum alone could cancel
+/// one of each).
+fn flag_job(
+    flags: &Arc<Vec<AtomicUsize>>,
+    checksum: &Arc<AtomicUsize>,
+    id: usize,
+) -> Box<dyn FnOnce() + Send> {
+    let flags = Arc::clone(flags);
+    let checksum = Arc::clone(checksum);
+    Box::new(move || {
+        flags[id].fetch_add(1, Ordering::SeqCst);
+        checksum.fetch_add(id, Ordering::SeqCst);
+    })
+}
+
+fn assert_each_ran_once(flags: &[AtomicUsize], checksum: &AtomicUsize, label: &str) {
+    let n = flags.len();
+    for (id, f) in flags.iter().enumerate() {
+        assert_eq!(f.load(Ordering::SeqCst), 1, "{label}: job {id} ran a wrong number of times");
+    }
+    assert_eq!(checksum.load(Ordering::SeqCst), n * (n - 1) / 2, "{label}: id checksum");
+}
+
+/// One owner pushing (and sometimes popping) N jobs against `thieves`
+/// concurrent batch-stealing thieves, each landing batches in its own
+/// deque and draining it. Every job must execute exactly once.
+fn owner_vs_thieves(kind: DequeKind, victim: WorkerDeque, n: usize, thieves: usize) {
+    let victim = Arc::new(victim);
+    let flags = Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>());
+    let checksum = Arc::new(AtomicUsize::new(0));
+    let executed = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|s| {
+        // Owner.
+        {
+            let victim = Arc::clone(&victim);
+            let flags = Arc::clone(&flags);
+            let checksum = Arc::clone(&checksum);
+            let executed = Arc::clone(&executed);
+            s.spawn(move || {
+                for id in 0..n {
+                    let executed = Arc::clone(&executed);
+                    let job = flag_job(&flags, &checksum, id);
+                    // SAFETY: this spawned thread is the deque's
+                    // sole owner-end user while it runs.
+                    unsafe {
+                        victim.push(Box::new(move || {
+                            job();
+                            executed.fetch_add(1, Ordering::SeqCst);
+                        }))
+                    };
+                    // Pop (LIFO) every few pushes: the owner-vs-thief
+                    // race on the bottom end is the hard part of the
+                    // protocol.
+                    if id % 5 == 0 {
+                        if let Some(job) = unsafe { victim.pop() } {
+                            job();
+                        }
+                    }
+                }
+                // Drain whatever the thieves left behind.
+                while let Some(job) = unsafe { victim.pop() } {
+                    job();
+                }
+            });
+        }
+        // Thieves: batch-steal into a private deque, run the first job,
+        // then drain the private deque (the thief is its owner).
+        for _ in 0..thieves {
+            let victim = Arc::clone(&victim);
+            let executed = Arc::clone(&executed);
+            s.spawn(move || {
+                let own = WorkerDeque::with_kind(kind);
+                while executed.load(Ordering::SeqCst) < n {
+                    // SAFETY: `own` was created by and is private
+                    // to this thief thread.
+                    match unsafe { victim.steal_batch_and_pop(&own) } {
+                        Some((job, _moved)) => {
+                            job();
+                            while let Some(j) = unsafe { own.pop() } {
+                                j();
+                            }
+                        }
+                        None => std::thread::yield_now(),
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(executed.load(Ordering::SeqCst), n, "kind={kind:?}");
+    assert_each_ran_once(&flags, &checksum, kind.label());
+}
+
+#[test]
+fn no_loss_or_duplication_under_concurrent_thieves() {
+    const N: usize = 30_000;
+    for kind in DequeKind::ALL {
+        owner_vs_thieves(kind, WorkerDeque::with_kind(kind), N, 4);
+    }
+}
+
+#[test]
+fn chase_lev_wraparound_under_concurrency() {
+    // Indices start 1000 below the u64 boundary, so the wrap happens
+    // while the owner and thieves are racing.
+    const N: usize = 20_000;
+    let deque = WorkerDeque::from(ChaseLevDeque::with_start_index(u64::MAX - 1_000));
+    owner_vs_thieves(DequeKind::ChaseLev, deque, N, 3);
+}
+
+#[test]
+fn chase_lev_wraparound_single_threaded_semantics() {
+    // Start so close to the boundary that every operation straddles it.
+    let d = ChaseLevDeque::with_start_index(u64::MAX);
+    let hits = Arc::new(AtomicUsize::new(0));
+    for _ in 0..3 {
+        let hits = Arc::clone(&hits);
+        unsafe {
+            d.push(Box::new(move || {
+                hits.fetch_add(1, Ordering::SeqCst);
+            }))
+        };
+    }
+    assert_eq!(d.len(), 3);
+    d.steal().expect("oldest job stealable across the boundary")();
+    unsafe { d.pop() }.expect("newest job poppable across the boundary")();
+    unsafe { d.pop() }.expect("last job")();
+    assert_eq!(hits.load(Ordering::SeqCst), 3);
+    assert!(d.is_empty());
+    assert!(unsafe { d.pop() }.is_none());
+    assert!(d.steal().is_none());
+}
+
+#[test]
+fn grow_under_steal_loses_nothing() {
+    // The ring starts at 16 slots; pushing thousands of jobs in a burst
+    // (no owner pops) forces repeated grows while thieves are actively
+    // stealing — the window in which a retired buffer must stay
+    // readable until every pinned thief moves off it.
+    const N: usize = 8_192;
+    for start in [0u64, u64::MAX - 4_000] {
+        let victim = Arc::new(WorkerDeque::from(ChaseLevDeque::with_start_index(start)));
+        let flags = Arc::new((0..N).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>());
+        let checksum = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(AtomicUsize::new(0));
+        let pushed_all = Arc::new(AtomicBool::new(false));
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let victim = Arc::clone(&victim);
+                let done = Arc::clone(&done);
+                let pushed_all = Arc::clone(&pushed_all);
+                s.spawn(move || loop {
+                    match victim.steal() {
+                        Some(job) => {
+                            job();
+                            done.fetch_add(1, Ordering::SeqCst);
+                        }
+                        None => {
+                            if pushed_all.load(Ordering::SeqCst) && victim.is_empty() {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+            {
+                let victim = Arc::clone(&victim);
+                let flags = Arc::clone(&flags);
+                let checksum = Arc::clone(&checksum);
+                let pushed_all = Arc::clone(&pushed_all);
+                s.spawn(move || {
+                    for id in 0..N {
+                        // SAFETY: this thread is the sole owner-end user.
+                        unsafe { victim.push(flag_job(&flags, &checksum, id)) };
+                    }
+                    pushed_all.store(true, Ordering::SeqCst);
+                });
+            }
+        });
+        // Owner thread is gone (scope join = happens-before), so the
+        // main thread is now the owner; anything not stolen drains here.
+        while let Some(job) = unsafe { victim.pop() } {
+            job();
+            done.fetch_add(1, Ordering::SeqCst);
+        }
+        assert_eq!(done.load(Ordering::SeqCst), N, "start={start}");
+        assert_each_ran_once(&flags, &checksum, "grow_under_steal");
+    }
+}
+
+#[test]
+fn steal_half_takes_at_most_ceil_half() {
+    for kind in DequeKind::ALL {
+        for len in [1usize, 2, 3, 7, 10, 2 * MAX_STEAL_BATCH + 5] {
+            let victim = WorkerDeque::with_kind(kind);
+            let dest = WorkerDeque::with_kind(kind);
+            let ran = Arc::new(AtomicUsize::new(0));
+            for _ in 0..len {
+                let ran = Arc::clone(&ran);
+                unsafe {
+                    victim.push(Box::new(move || {
+                        ran.fetch_add(1, Ordering::SeqCst);
+                    }))
+                };
+            }
+            let (first, moved) =
+                unsafe { victim.steal_batch_and_pop(&dest) }.expect("non-empty victim");
+            let taken = moved + 1;
+            assert!(taken <= len.div_ceil(2), "kind={kind:?} len={len} taken={taken}");
+            assert!(taken <= MAX_STEAL_BATCH, "kind={kind:?} len={len} taken={taken}");
+            // Uncontended, the thief gets exactly the allowed half.
+            assert_eq!(taken, len.div_ceil(2).min(MAX_STEAL_BATCH), "kind={kind:?} len={len}");
+            assert_eq!(victim.len(), len - taken);
+            assert_eq!(dest.len(), moved);
+            first();
+            assert_eq!(ran.load(Ordering::SeqCst), 1);
+        }
+    }
+}
+
+#[test]
+fn steal_half_victim_keeps_lifo_order() {
+    for kind in DequeKind::ALL {
+        let victim = WorkerDeque::with_kind(kind);
+        let dest = WorkerDeque::with_kind(kind);
+        let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+        for tag in 0..9u32 {
+            let order = Arc::clone(&order);
+            unsafe { victim.push(Box::new(move || order.lock().unwrap().push(tag))) };
+        }
+        // ⌈9/2⌉ = 5 taken: first = oldest (0), moved = 1..=4.
+        let (first, moved) = unsafe { victim.steal_batch_and_pop(&dest) }.expect("non-empty");
+        assert_eq!(moved, 4, "kind={kind:?}");
+        first();
+        // Victim pops its survivors newest-first: 8, 7, 6, 5.
+        while let Some(job) = unsafe { victim.pop() } {
+            job();
+        }
+        // Dest pops its share newest-first: 4, 3, 2, 1.
+        while let Some(job) = unsafe { dest.pop() } {
+            job();
+        }
+        assert_eq!(
+            *order.lock().unwrap(),
+            vec![0, 8, 7, 6, 5, 4, 3, 2, 1],
+            "kind={kind:?}"
+        );
+    }
+}
+
+#[test]
+fn pool_batch_steal_counters_stay_consistent() {
+    for kind in DequeKind::ALL {
+        let mut cfg = ExecutorConfig::with_parallelism(4);
+        cfg.deque = kind;
+        let ex = Executor::with_config(cfg);
+        let total = Arc::new(AtomicUsize::new(0));
+        // One worker floods its own deque then stalls: the children can
+        // only run via theft, and a 400-deep run guarantees thieves see
+        // batchable depth.
+        let ex2 = ex.clone();
+        let t2 = Arc::clone(&total);
+        ex.spawn(move || {
+            for _ in 0..400 {
+                let t3 = Arc::clone(&t2);
+                ex2.spawn(move || {
+                    t3.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            std::thread::sleep(std::time::Duration::from_millis(40));
+        });
+        ex.wait_idle();
+        assert_eq!(total.load(Ordering::SeqCst), 400, "kind={kind:?}");
+        let st = ex.stats();
+        assert!(st.tasks_stolen > 0, "kind={kind:?}: flooded deque must be stolen from");
+        // Every migrated job is a stolen job, and a batched steal moved
+        // at least one job.
+        assert!(st.tasks_stolen >= st.jobs_migrated, "kind={kind:?}");
+        assert!(st.jobs_migrated >= st.steals_batched, "kind={kind:?}");
+        if st.steals_batched > 0 {
+            assert!(st.jobs_migrated_per_steal() >= 1.0, "kind={kind:?}");
+        }
+    }
+}
+
+#[test]
+fn default_kind_drives_worker_deques() {
+    // `WorkerDeque::new()` (what the pool builds when a config does not
+    // override) follows the process default — SFUT_DEQUE when set. This
+    // is the hook CI's per-kind named steps rely on.
+    assert_eq!(WorkerDeque::new().kind(), DequeKind::default_kind());
+    assert_eq!(
+        ExecutorConfig::with_parallelism(2).deque,
+        DequeKind::default_kind()
+    );
+}

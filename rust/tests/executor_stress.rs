@@ -1,12 +1,13 @@
 //! Scheduler stress coverage for the work-stealing executor:
-//! producer/stealer storms, the par(1) deep-pipeline no-deadlock
-//! regression, and panic propagation through stolen tasks.
+//! producer/stealer storms (under both deque implementations), the
+//! par(1) deep-pipeline no-deadlock regression, and panic propagation
+//! through stolen tasks.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use stream_future::exec::Executor;
+use stream_future::exec::{DequeKind, Executor, ExecutorConfig};
 use stream_future::prelude::*;
 use stream_future::susp::Fut;
 
@@ -63,6 +64,46 @@ fn producers_and_stealers_storm() {
     assert!(stats.tasks_stolen > 0, "work stealing must actually steal: {stats:?}");
     assert_eq!(stats.tasks_panicked, 0);
     assert_eq!(stats.queue_depth, 0, "idle pool holds no queued jobs");
+}
+
+#[test]
+fn producer_storm_survives_both_deque_kinds() {
+    // The storm above runs under the process-default deque; this pins
+    // each implementation explicitly so a regression in one is
+    // attributable regardless of SFUT_DEQUE.
+    for kind in DequeKind::ALL {
+        let mut cfg = ExecutorConfig::with_parallelism(4);
+        cfg.deque = kind;
+        let ex = Executor::with_config(cfg);
+        let total = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let ex = ex.clone();
+                let total = total.clone();
+                s.spawn(move || {
+                    for _ in 0..300 {
+                        let ex2 = ex.clone();
+                        let t2 = total.clone();
+                        ex.spawn(move || {
+                            t2.fetch_add(1, Ordering::SeqCst);
+                            for _ in 0..2 {
+                                let t3 = t2.clone();
+                                ex2.spawn(move || {
+                                    t3.fetch_add(1, Ordering::SeqCst);
+                                });
+                            }
+                        });
+                    }
+                });
+            }
+        });
+        ex.wait_idle();
+        assert_eq!(total.load(Ordering::SeqCst), 3 * 300 * 3, "kind={kind:?}");
+        let stats = ex.stats();
+        assert_eq!(stats.tasks_panicked, 0, "kind={kind:?}");
+        assert_eq!(stats.queue_depth, 0, "kind={kind:?}");
+        assert!(stats.tasks_stolen >= stats.jobs_migrated, "kind={kind:?}: {stats:?}");
+    }
 }
 
 #[test]
