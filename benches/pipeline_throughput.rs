@@ -18,7 +18,7 @@
 mod common;
 
 use stream_future::bench_harness::{pipeline_bench, BenchOptions};
-use stream_future::config::{Mode, Workload};
+use stream_future::config::Mode;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default).max(1)
@@ -33,7 +33,9 @@ fn main() {
         jobs_per_client: env_usize("SFUT_PIPELINE_JOBS", 4),
         shard_counts: pipeline_bench::default_shard_counts(cfg.shard_parallelism),
         mode: Mode::Par(2),
-        workloads: vec![Workload::Primes, Workload::PrimesChunked, Workload::Chunked],
+        // The whole registry: newly registered plugins grow trajectory
+        // columns without touching this bench.
+        workloads: pipeline_bench::trajectory_workloads(),
     };
     let opts = BenchOptions {
         warmup: cfg.warmup.max(1),

@@ -11,7 +11,7 @@
 use anyhow::Result;
 
 use super::{ascii_bar_chart, render_csv, render_table, Cell, ReportTable};
-use crate::config::{ChunkPolicy, Config, Mode, Workload};
+use crate::config::{ChunkPolicy, Config, Mode};
 use crate::coordinator::{JobRequest, Pipeline};
 
 /// The paper's three measurement columns.
@@ -61,14 +61,14 @@ fn fill_table(
     pipeline: &Pipeline,
     cfg: &Config,
     table: &mut ReportTable,
-    workloads: &[Workload],
+    workloads: &[&str],
     modes: &[Mode],
 ) -> Result<()> {
     for &w in workloads {
         for &m in modes {
-            let req = JobRequest { workload: w, mode: m };
+            let req = JobRequest::named(w, m);
             let secs = time_cell(pipeline, &req, cfg)?;
-            table.set(w.name(), &m.label(), Cell::Seconds(secs));
+            table.set(w, &m.label(), Cell::Seconds(secs));
         }
     }
     Ok(())
@@ -90,14 +90,7 @@ pub fn table1(cfg: &Config) -> Result<String> {
         ),
         cols.iter().map(String::as_str).collect(),
     );
-    let workloads = [
-        Workload::Primes,
-        Workload::PrimesX3,
-        Workload::Stream,
-        Workload::StreamBig,
-        Workload::List,
-        Workload::ListBig,
-    ];
+    let workloads = ["primes", "primes_x3", "stream", "stream_big", "list", "list_big"];
     fill_table(&pipeline, cfg, &mut table, &workloads, &modes)?;
 
     let mut out = render_table(&table);
@@ -200,7 +193,7 @@ pub fn fig3(cfg: &Config) -> Result<String> {
         &pipeline,
         cfg,
         &mut table,
-        &[Workload::Primes, Workload::PrimesX3],
+        &["primes", "primes_x3"],
         &modes,
     )?;
     Ok(chart_from_table("Figure 3. Timings for primes (seconds)", &table))
@@ -219,7 +212,7 @@ pub fn fig4(cfg: &Config) -> Result<String> {
         &pipeline,
         cfg,
         &mut table,
-        &[Workload::Stream, Workload::StreamBig, Workload::List, Workload::ListBig],
+        &["stream", "stream_big", "list", "list_big"],
         &modes,
     )?;
     Ok(chart_from_table(
@@ -265,7 +258,7 @@ pub fn ablation_chunk(cfg: &Config, chunk_sizes: &[usize]) -> Result<String> {
         c.chunk_policy = ChunkPolicy::Fixed;
         let pipeline = Pipeline::new(c.clone())?;
         for &m in &modes {
-            let req = JobRequest { workload: Workload::ChunkedBig, mode: m };
+            let req = JobRequest::named("chunked_big", m);
             let secs = time_cell(&pipeline, &req, &c)?;
             table.set(&format!("chunk={chunk}"), &m.label(), Cell::Seconds(secs));
         }
@@ -273,7 +266,7 @@ pub fn ablation_chunk(cfg: &Config, chunk_sizes: &[usize]) -> Result<String> {
     // Reference row: the unchunked stream algorithm.
     let pipeline = Pipeline::new(cfg.clone())?;
     for &m in &modes {
-        let req = JobRequest { workload: Workload::StreamBig, mode: m };
+        let req = JobRequest::named("stream_big", m);
         let secs = time_cell(&pipeline, &req, cfg)?;
         table.set("unchunked(stream_big)", &m.label(), Cell::Seconds(secs));
     }
@@ -301,7 +294,7 @@ pub fn ablation_kernel(cfg: &Config) -> Result<String> {
             continue;
         }
         for &m in &modes {
-            let req = JobRequest { workload: Workload::Chunked, mode: m };
+            let req = JobRequest::named("chunked", m);
             let secs = time_cell(&pipeline, &req, &c)?;
             table.set(row, &m.label(), Cell::Seconds(secs));
         }

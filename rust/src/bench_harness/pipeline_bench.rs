@@ -39,8 +39,9 @@ use anyhow::Result;
 
 use super::tiny_json::{self, Json};
 use super::{measure, BenchOptions};
-use crate::config::{Config, Mode, Workload};
+use crate::config::{Config, Mode};
 use crate::coordinator::{JobRequest, Pipeline, ShardSet};
+use crate::workload::WorkloadRegistry;
 
 /// Shape of one bench run: who drives how many jobs, where.
 #[derive(Debug, Clone)]
@@ -54,7 +55,9 @@ pub struct PipelineBenchParams {
     pub shard_counts: Vec<usize>,
     /// Evaluation mode for every job (par(2) = the paper's column).
     pub mode: Mode,
-    pub workloads: Vec<Workload>,
+    /// Workload registry names to sweep (default: the whole builtin
+    /// registry — see [`trajectory_workloads`]).
+    pub workloads: Vec<String>,
 }
 
 impl Default for PipelineBenchParams {
@@ -64,9 +67,18 @@ impl Default for PipelineBenchParams {
             jobs_per_client: 4,
             shard_counts: default_shard_counts(2),
             mode: Mode::Par(2),
-            workloads: vec![Workload::Primes, Workload::PrimesChunked, Workload::Chunked],
+            workloads: trajectory_workloads(),
         }
     }
+}
+
+/// The trajectory's workload list: every name in the builtin registry.
+/// The bench sweeps the *registry*, not a hardcoded list, so newly
+/// registered plugins grow scenario columns in `BENCH_pipeline.json`
+/// automatically (the gate tolerates extra workloads the committed
+/// baseline has never seen; only *vanished* baseline workloads fail).
+pub fn trajectory_workloads() -> Vec<String> {
+    WorkloadRegistry::builtin().names()
 }
 
 /// The issue's sweep: shards ∈ {1, 2, N}, N = auto count for
@@ -81,7 +93,7 @@ pub fn default_shard_counts(shard_parallelism: usize) -> Vec<usize> {
 /// One (workload, shard count) cell.
 #[derive(Debug, Clone)]
 pub struct WorkloadPoint {
-    pub workload: &'static str,
+    pub workload: String,
     pub shards: usize,
     /// Jobs per timed sample (clients × jobs_per_client).
     pub jobs_per_sample: u64,
@@ -156,8 +168,8 @@ pub fn run(
         cfg.shards = shard_count.max(1);
         let pipeline = Pipeline::new(cfg)?;
         let actual_shards = pipeline.shards().len();
-        for &workload in &params.workloads {
-            let req = JobRequest { workload, mode: params.mode };
+        for workload in &params.workloads {
+            let req = JobRequest::named(workload.clone(), params.mode);
             // Pre-flight: verify once against the oracle; the timed
             // jobs skip it (same discipline as paper::time_cell).
             let first = pipeline.run(&req)?;
@@ -168,7 +180,7 @@ pub fn run(
             // (latency, queue wait) pushed together so the warmup trim
             // below stays aligned.
             let samples = Mutex::new(Vec::<(Duration, Duration)>::new());
-            let label = format!("pipeline.{}.shards{}", workload.name(), actual_shards);
+            let label = format!("pipeline.{workload}.shards{actual_shards}");
             let timing = measure(&label, opts, || {
                 std::thread::scope(|s| {
                     for _ in 0..params.clients {
@@ -199,7 +211,7 @@ pub fn run(
                 + counter(&pipeline, "ingress.timed_out")
                 - shed_before;
             points.push(WorkloadPoint {
-                workload: workload.name(),
+                workload: workload.clone(),
                 shards: actual_shards,
                 jobs_per_sample: batch as u64,
                 jobs_per_sec: batch as f64 / timing.median_secs().max(1e-9),
@@ -548,7 +560,7 @@ mod tests {
             jobs_per_client: 2,
             shard_counts: vec![1, 2],
             mode: Mode::Par(2),
-            workloads: vec![Workload::Primes, Workload::PrimesChunked, Workload::Chunked],
+            workloads: vec!["primes".into(), "primes_chunked".into(), "chunked".into()],
         };
         let opts = BenchOptions { warmup: 1, samples: 2, verbose: false };
         let b = run(&smoke_config(), &params, &opts).unwrap();
@@ -679,6 +691,39 @@ mod tests {
         let report = gate(base, &cur, 0.25, LT, false).unwrap();
         assert_eq!(report.outcome, GateOutcome::Passed { cells: 1 });
         assert!(report.warnings.is_empty(), "no baseline latency → no warnings");
+    }
+
+    #[test]
+    fn trajectory_workloads_track_the_registry() {
+        let names = trajectory_workloads();
+        // Every registered workload is swept — including plugins that
+        // shipped after the enum world ended.
+        for w in ["primes", "chunked_big", "fib", "msort"] {
+            assert!(names.iter().any(|n| n == w), "missing {w} in {names:?}");
+        }
+        assert_eq!(names.len(), crate::workload::WorkloadRegistry::builtin().len());
+    }
+
+    #[test]
+    fn gate_tolerates_extra_registered_workloads() {
+        // A current run carrying cells for *newly registered* workloads
+        // the committed baseline has never seen must pass, not fail or
+        // skip: registering a plugin may not poison the perf gate. (The
+        // inverse — a baseline workload vanishing — still fails; see
+        // gate_fails_when_a_workload_vanishes.)
+        let base = doc("release", 100.0, 50.0);
+        let cur = "{\"bench\": \"pipeline_throughput\", \"profile\": \"release\", \
+             \"scale\": 1.0, \"clients\": 2, \"jobs_per_client\": 2, \"mode\": \"par(2)\", \
+             \"points\": [\
+             {\"workload\": \"primes\", \"shards\": 1, \"jobs_per_sec\": 100.0}, \
+             {\"workload\": \"chunked\", \"shards\": 2, \"jobs_per_sec\": 50.0}, \
+             {\"workload\": \"fib\", \"shards\": 1, \"jobs_per_sec\": 70.0}, \
+             {\"workload\": \"msort\", \"shards\": 2, \"jobs_per_sec\": 30.0}]}";
+        let report = gate(&base, cur, 0.25, LT, false).unwrap();
+        // Only the overlapping cells are compared; the new workloads
+        // ride along un-gated until they appear in a committed baseline.
+        assert_eq!(report.outcome, GateOutcome::Passed { cells: 2 });
+        assert!(report.warnings.is_empty(), "{:?}", report.warnings);
     }
 
     #[test]

@@ -150,65 +150,11 @@ impl std::str::FromStr for AdmissionPolicy {
     }
 }
 
-/// Workload selector matching the rows of Table 1 plus our extensions.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Workload {
-    /// primes (n = `primes_n`).
-    Primes,
-    /// primes_x3 (n = 3 × `primes_n`).
-    PrimesX3,
-    /// primes_chunked — §7's block-granular sieve (our extension; the
-    /// plain `primes` rows stay the paper's deliberately naive sieve).
-    PrimesChunked,
-    /// stream — Fateman product via stream algorithm, small coefficients.
-    Stream,
-    /// stream_big — big coefficients (× `big_factor`^1).
-    StreamBig,
-    /// list — parallel-collections baseline.
-    List,
-    /// list_big — baseline with big coefficients.
-    ListBig,
-    /// chunked — §7's improvement: blocked stream multiply.
-    Chunked,
-    /// chunked_big.
-    ChunkedBig,
-}
-
-impl Workload {
-    pub const ALL: [Workload; 9] = [
-        Workload::Primes,
-        Workload::PrimesX3,
-        Workload::PrimesChunked,
-        Workload::Stream,
-        Workload::StreamBig,
-        Workload::List,
-        Workload::ListBig,
-        Workload::Chunked,
-        Workload::ChunkedBig,
-    ];
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Workload::Primes => "primes",
-            Workload::PrimesX3 => "primes_x3",
-            Workload::PrimesChunked => "primes_chunked",
-            Workload::Stream => "stream",
-            Workload::StreamBig => "stream_big",
-            Workload::List => "list",
-            Workload::ListBig => "list_big",
-            Workload::Chunked => "chunked",
-            Workload::ChunkedBig => "chunked_big",
-        }
-    }
-
-    pub fn parse(s: &str) -> Result<Workload, ConfigError> {
-        Workload::ALL
-            .iter()
-            .copied()
-            .find(|w| w.name() == s)
-            .ok_or_else(|| ConfigError::new(format!("unknown workload: {s}")))
-    }
-}
+// NOTE: the closed `Workload` enum that used to live here is gone.
+// Workloads are an open set now: `workload::StreamWorkload` plugins
+// registered in a `workload::WorkloadRegistry`, resolved by *name* at
+// submit time. Config stays workload-agnostic — per-scenario knobs
+// travel as request params (`workload(k=v,...)`).
 
 /// Full run configuration.
 #[derive(Debug, Clone, PartialEq)]
@@ -446,14 +392,6 @@ mod tests {
         assert!(Mode::parse("par(0)").is_err());
         assert!(Mode::parse("warp").is_err());
         assert_eq!(Mode::Par(2).label(), "par(2)");
-    }
-
-    #[test]
-    fn workload_names_roundtrip() {
-        for w in Workload::ALL {
-            assert_eq!(Workload::parse(w.name()).unwrap(), w);
-        }
-        assert!(Workload::parse("nope").is_err());
     }
 
     #[test]

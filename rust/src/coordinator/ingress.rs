@@ -136,12 +136,18 @@ pub enum SubmitError {
     Timeout { waited_ms: u64, queue_depth: usize },
     /// The pipeline is shutting down.
     Closed,
+    /// The request failed registry validation before admission: unknown
+    /// workload name, or params outside the plugin's declared schema.
+    /// Answered immediately — a malformed request never occupies queue
+    /// capacity.
+    Rejected { reason: String },
 }
 
 impl SubmitError {
-    /// Serve-protocol rendering: a well-formed `err admission=…` line.
+    /// Serve-protocol rendering: a well-formed `err admission=…` /
+    /// `err rejected …` line.
     pub fn render_line(&self, req: &JobRequest) -> String {
-        let w = req.workload.name();
+        let w = req.workload_spec();
         let m = req.mode.label();
         match self {
             SubmitError::Shed { queue_depth } => {
@@ -152,6 +158,9 @@ impl SubmitError {
                  queue_depth={queue_depth}"
             ),
             SubmitError::Closed => format!("err admission=closed workload={w} mode={m}"),
+            SubmitError::Rejected { reason } => {
+                format!("err rejected workload={w} mode={m} reason: {reason}")
+            }
         }
     }
 }
@@ -168,6 +177,7 @@ impl fmt::Display for SubmitError {
                  (queue_depth={queue_depth})"
             ),
             SubmitError::Closed => write!(f, "admission=closed: pipeline is shutting down"),
+            SubmitError::Rejected { reason } => write!(f, "invalid request: {reason}"),
         }
     }
 }
@@ -309,11 +319,19 @@ impl Ingress {
         Ok(ingress)
     }
 
-    /// Stage 1: admit under the configured policy. Returns the ticket
-    /// immediately (the job may not even be routed yet).
+    /// Stage 1: validate against the registry, then admit under the
+    /// configured policy. Returns the ticket immediately (the job may
+    /// not even be routed yet).
     pub(super) fn submit(&self, req: JobRequest, verify: bool) -> Result<JobTicket, SubmitError> {
         let metrics = self.shared.core.metrics();
         metrics.counter("ingress.submitted").inc();
+        // Open-world gate: resolve the workload name and schema-check
+        // its params before taking any queue slot, so malformed
+        // requests answer immediately and never occupy capacity.
+        if let Err(e) = self.shared.core.validate_request(&req) {
+            metrics.counter("ingress.rejected").inc();
+            return Err(SubmitError::Rejected { reason: e.to_string() });
+        }
         let depth = self.shared.queue_depth;
         let mut adm = self.shared.admission.lock().unwrap();
         if adm.closed {
@@ -435,7 +453,7 @@ fn dispatcher_loop(shared: &IngressShared) {
                 adm = shared.not_empty.wait(adm).unwrap();
             }
         };
-        let lease = shared.core.shards().route(pending.req.workload);
+        let lease = shared.core.shards().route(&pending.req.workload);
         let sid = lease.id();
         let depth = {
             let mut run = shared.run.lock().unwrap();
@@ -567,7 +585,7 @@ fn execute_one(shared: &IngressShared, sid: usize, routed: Routed, migrated: boo
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Config, Mode, Workload};
+    use crate::config::{Config, Mode};
     use crate::coordinator::Pipeline;
 
     fn base_config() -> Config {
@@ -583,7 +601,7 @@ mod tests {
     }
 
     fn primes_req() -> JobRequest {
-        JobRequest { workload: Workload::Primes, mode: Mode::Par(2) }
+        JobRequest::named("primes", Mode::Par(2))
     }
 
     fn wait_until(what: &str, mut ok: impl FnMut() -> bool) {
@@ -696,7 +714,7 @@ mod tests {
         cfg.queue_depth = 16;
         let pipeline = Pipeline::new(cfg).unwrap();
         let ingress = pipeline.ingress();
-        let home = pipeline.shards().home_index(Workload::Primes);
+        let home = pipeline.shards().home_index("primes");
         let other = 1 - home;
         // Gate both shards so the 8 submissions build a deterministic
         // 4/4 backlog (single dispatcher routes in submit order;
@@ -744,6 +762,51 @@ mod tests {
         assert_eq!(snap.counters["ingress.migrated"], 3);
         // Every lease returned.
         assert!(pipeline.shards().iter().all(|s| s.inflight() == 0));
+    }
+
+    #[test]
+    fn invalid_requests_are_rejected_before_admission() {
+        let pipeline = Pipeline::new(base_config()).unwrap();
+        // Unknown workload name.
+        match pipeline.submit(&JobRequest::named("warp", Mode::Seq)) {
+            Err(SubmitError::Rejected { reason }) => {
+                assert!(reason.contains("unknown workload: warp"), "{reason}");
+                assert!(reason.contains("primes"), "reason lists registered names: {reason}");
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        // Out-of-schema parameter.
+        let req = JobRequest::parse("primes(frobnicate=1) seq").unwrap();
+        match pipeline.submit(&req) {
+            Err(SubmitError::Rejected { reason }) => {
+                assert!(reason.contains("unknown parameter"), "{reason}")
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        // Mistyped parameter value.
+        let req = JobRequest::parse("primes(n=banana) seq").unwrap();
+        match pipeline.submit(&req) {
+            Err(SubmitError::Rejected { reason }) => {
+                assert!(reason.contains("bad value for param n"), "{reason}")
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        // Rejections never touched the queue.
+        assert_eq!(pipeline.ingress().pending(), 0);
+        let snap = pipeline.metrics().snapshot();
+        assert_eq!(snap.counters["ingress.rejected"], 3);
+        assert_eq!(snap.counters.get("ingress.admitted"), None);
+        // A well-formed param request still runs (and its params bind).
+        let req = JobRequest::parse("primes(n=100) par(2)").unwrap();
+        let res = pipeline.run(&req).unwrap();
+        assert!(res.verified);
+        match res.detail {
+            crate::coordinator::ResultDetail::Primes { count, largest } => {
+                assert_eq!(count, 25); // π(100)
+                assert_eq!(largest, 97);
+            }
+            other => panic!("wrong detail kind: {other:?}"),
+        }
     }
 
     #[test]

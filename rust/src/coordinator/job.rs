@@ -1,48 +1,137 @@
 //! Job requests and results.
+//!
+//! A [`JobRequest`] names a workload by *registry name* (the open
+//! plugin world — nothing here enumerates workloads) and carries a
+//! [`Params`] map that rides the wire protocol end to end: parsed from
+//! `workload(k=v,...)` specs, echoed in [`JobRequest::label`] and
+//! [`JobResult::render_line`], and schema-checked against the plugin at
+//! submit time.
 
-use crate::config::{Mode, Workload};
+use crate::config::Mode;
+use crate::workload::Params;
+
+pub use crate::workload::ResultDetail;
 
 /// A request routed through the [`Pipeline`](super::Pipeline): one
-/// workload under one evaluation mode — one cell of the paper's Table 1.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// registered workload under one evaluation mode, with optional
+/// plugin parameters — one cell of the paper's (now open-ended)
+/// Table 1.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JobRequest {
-    pub workload: Workload,
+    /// Registry name (validated against the pipeline's
+    /// [`WorkloadRegistry`](crate::workload::WorkloadRegistry) at
+    /// submit time, not here — parsing stays open-world).
+    pub workload: String,
+    /// Plugin parameters (`k=v` pairs; schema-checked at submit).
+    pub params: Params,
     pub mode: Mode,
 }
 
 impl JobRequest {
-    /// Parse `"<workload> <mode>"` (the serve protocol / CLI form).
+    /// A request with no parameters.
+    pub fn named(workload: impl Into<String>, mode: Mode) -> JobRequest {
+        JobRequest { workload: workload.into(), params: Params::new(), mode }
+    }
+
+    /// A request with explicit parameters.
+    pub fn with_params(workload: impl Into<String>, params: Params, mode: Mode) -> JobRequest {
+        JobRequest { workload: workload.into(), params, mode }
+    }
+
+    /// Parse a job spec (the serve protocol / CLI form):
+    ///
+    /// ```text
+    /// <workload>[(k=v,...)] <mode>      e.g.  primes par(2)
+    /// <workload>[(k=v,...)]:<mode>      e.g.  fib(n=64):seq
+    /// ```
+    ///
+    /// Errors are precise about what is missing or malformed; workload
+    /// *existence* is the registry's business at submit time.
     pub fn parse(s: &str) -> Result<JobRequest, String> {
-        let mut parts = s.split_whitespace();
-        let w = parts.next().ok_or("missing workload")?;
-        let m = parts.next().ok_or("missing mode")?;
-        if parts.next().is_some() {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err("missing workload (want <workload>[(k=v,...)] <mode>)".to_string());
+        }
+        let (spec, mode_text) = split_spec_and_mode(s)?;
+        let (workload, params) = parse_workload_spec(spec)?;
+        let mode_text = mode_text.trim();
+        if mode_text.is_empty() {
+            return Err(format!(
+                "missing mode in job spec {s:?} (want <workload>[(k=v,...)] <mode>)"
+            ));
+        }
+        if mode_text.split_whitespace().count() > 1 {
             return Err(format!("trailing input in job spec: {s}"));
         }
-        Ok(JobRequest {
-            workload: Workload::parse(w).map_err(|e| e.to_string())?,
-            mode: Mode::parse(m).map_err(|e| e.to_string())?,
-        })
+        let mode = Mode::parse(mode_text).map_err(|e| e.to_string())?;
+        Ok(JobRequest { workload, params, mode })
+    }
+
+    /// The workload spec as written on the wire: bare name, or
+    /// `name(k=v,...)` when parameters are present. Round-trips through
+    /// [`JobRequest::parse`].
+    pub fn workload_spec(&self) -> String {
+        if self.params.is_empty() {
+            self.workload.clone()
+        } else {
+            format!("{}({})", self.workload, self.params.render())
+        }
     }
 
     pub fn label(&self) -> String {
-        format!("{}.{}", self.workload.name(), self.mode.label())
+        format!("{}.{}", self.workload_spec(), self.mode.label())
     }
 }
 
-/// Workload-specific result summary, used for verification and
-/// reporting.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum ResultDetail {
-    Primes {
-        count: usize,
-        largest: u32,
-    },
-    Poly {
-        terms: usize,
-        /// Decimal rendering of the leading coefficient (ring-agnostic).
-        leading_coeff: String,
-    },
+/// Split `spec mode` / `spec:mode` at the first separator *outside*
+/// parentheses (param lists contain commas/equals but never parens).
+fn split_spec_and_mode(s: &str) -> Result<(&str, &str), String> {
+    let mut depth = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth = depth.checked_sub(1).ok_or_else(|| {
+                    format!("unbalanced ')' in job spec {s:?} (want workload(k=v,...))")
+                })?;
+            }
+            c if depth == 0 && (c == ':' || c.is_whitespace()) => {
+                return Ok((&s[..i], &s[i + c.len_utf8()..]));
+            }
+            _ => {}
+        }
+    }
+    if depth > 0 {
+        return Err(format!("unbalanced '(' in job spec {s:?} (want workload(k=v,...))"));
+    }
+    Err(format!("missing mode in job spec {s:?} (want <workload>[(k=v,...)] <mode>)"))
+}
+
+/// Parse `name` or `name(k=v,...)` into a (name, params) pair.
+fn parse_workload_spec(spec: &str) -> Result<(String, Params), String> {
+    let spec = spec.trim();
+    match spec.find('(') {
+        None => {
+            if spec.is_empty() {
+                return Err("missing workload name".to_string());
+            }
+            Ok((spec.to_string(), Params::new()))
+        }
+        Some(open) => {
+            if !spec.ends_with(')') {
+                return Err(format!(
+                    "unbalanced parameter list in {spec:?} (want workload(k=v,...))"
+                ));
+            }
+            let name = &spec[..open];
+            if name.is_empty() {
+                return Err(format!("missing workload name before '(' in {spec:?}"));
+            }
+            let inner = &spec[open + 1..spec.len() - 1];
+            let params = Params::parse(inner).map_err(|e| e.to_string())?;
+            Ok((name.to_string(), params))
+        }
+    }
 }
 
 /// Outcome of one job.
@@ -51,11 +140,10 @@ pub struct JobResult {
     pub request: JobRequest,
     pub seconds: f64,
     pub detail: ResultDetail,
-    /// Result checked against the independent oracle (Eratosthenes /
-    /// classical multiplication).
+    /// Result checked against the plugin's independent oracle.
     pub verified: bool,
-    /// Which block backend served chunked workloads ("rust-scalar",
-    /// "pjrt-kernel", or "-" for non-chunked).
+    /// Which block backend served the workload ("rust-scalar",
+    /// "pjrt-kernel", or "-" for workloads without block offload).
     pub backend: String,
     /// Coordinator shard the job was routed to.
     pub shard: usize,
@@ -74,7 +162,9 @@ pub struct JobResult {
 }
 
 impl JobResult {
-    /// One-line rendering for the serve protocol.
+    /// One-line rendering for the serve protocol. The `workload=` field
+    /// echoes the full spec (params included), so clients can replay a
+    /// result line verbatim as a new request.
     pub fn render_line(&self) -> String {
         let detail = match &self.detail {
             ResultDetail::Primes { count, largest } => {
@@ -83,11 +173,12 @@ impl JobResult {
             ResultDetail::Poly { terms, leading_coeff } => {
                 format!("terms={terms} leading={leading_coeff}")
             }
+            ResultDetail::Scalar { value } => format!("value={value}"),
         };
         format!(
             "ok workload={} mode={} seconds={:.3} verified={} backend={} shard={} steals={} \
              queue_wait={:.3} migrated={} {detail}",
-            self.request.workload.name(),
+            self.request.workload_spec(),
             self.request.mode.label(),
             self.seconds,
             self.verified,
@@ -107,27 +198,76 @@ mod tests {
     #[test]
     fn parse_job_specs() {
         let j = JobRequest::parse("primes seq").unwrap();
-        assert_eq!(j.workload, Workload::Primes);
+        assert_eq!(j.workload, "primes");
         assert_eq!(j.mode, Mode::Seq);
+        assert!(j.params.is_empty());
         let j = JobRequest::parse("stream_big par(4)").unwrap();
         assert_eq!(j.mode, Mode::Par(4));
+        // Open world: unknown names parse — the registry rejects them
+        // at submit time, with its own err line.
+        assert_eq!(JobRequest::parse("warp seq").unwrap().workload, "warp");
         assert!(JobRequest::parse("primes").is_err());
         assert!(JobRequest::parse("primes seq extra").is_err());
-        assert!(JobRequest::parse("warp seq").is_err());
+        assert!(JobRequest::parse("primes warp").is_err());
+        assert!(JobRequest::parse("").is_err());
     }
 
     #[test]
-    fn labels() {
-        let j = JobRequest { workload: Workload::StreamBig, mode: Mode::Par(2) };
+    fn parse_param_specs_and_colon_form() {
+        let j = JobRequest::parse("fib(n=64) par(2)").unwrap();
+        assert_eq!(j.workload, "fib");
+        assert_eq!(j.params.get("n"), Some("64"));
+        assert_eq!(j.mode, Mode::Par(2));
+        let j = JobRequest::parse("fib(n=64):par(2)").unwrap();
+        assert_eq!(j.params.get("n"), Some("64"));
+        assert_eq!(j.mode, Mode::Par(2));
+        let j = JobRequest::parse("msort(n=100, seed=7) seq").unwrap();
+        assert_eq!(j.params.len(), 2);
+        // Empty parameter lists are allowed.
+        let j = JobRequest::parse("primes() seq").unwrap();
+        assert!(j.params.is_empty());
+        assert_eq!(j.workload, "primes");
+        let j = JobRequest::parse("primes:seq").unwrap();
+        assert_eq!(j.mode, Mode::Seq);
+    }
+
+    #[test]
+    fn parse_errors_are_precise() {
+        let e = JobRequest::parse("fib(n=64 seq").unwrap_err();
+        assert!(e.contains("unbalanced"), "{e}");
+        let e = JobRequest::parse("fib(n) seq").unwrap_err();
+        assert!(e.contains("want key=value"), "{e}");
+        let e = JobRequest::parse("fib(n=64)").unwrap_err();
+        assert!(e.contains("missing mode"), "{e}");
+        let e = JobRequest::parse("(n=64) seq").unwrap_err();
+        assert!(e.contains("missing workload name"), "{e}");
+        let e = JobRequest::parse("fib) seq").unwrap_err();
+        assert!(e.contains("unbalanced"), "{e}");
+        let e = JobRequest::parse("fib(n=1,n=2) seq").unwrap_err();
+        assert!(e.contains("duplicate parameter"), "{e}");
+    }
+
+    #[test]
+    fn labels_and_specs_roundtrip() {
+        let j = JobRequest::named("stream_big", Mode::Par(2));
         assert_eq!(j.label(), "stream_big.par(2)");
+        assert_eq!(j.workload_spec(), "stream_big");
+        let j = JobRequest::parse("fib(n=64,deep=true) par(2)").unwrap();
+        assert_eq!(j.workload_spec(), "fib(deep=true,n=64)");
+        assert_eq!(j.label(), "fib(deep=true,n=64).par(2)");
+        // The spec round-trips through parse.
+        let back = JobRequest::parse(&format!("{} {}", j.workload_spec(), j.mode.label()));
+        assert_eq!(back.unwrap(), j);
     }
 
     #[test]
     fn render_line_roundtrips_key_fields() {
+        let mut params = Params::new();
+        params.set("n", "50");
         let r = JobResult {
-            request: JobRequest { workload: Workload::Primes, mode: Mode::Seq },
+            request: JobRequest::with_params("primes", params, Mode::Seq),
             seconds: 1.5,
-            detail: ResultDetail::Primes { count: 25, largest: 97 },
+            detail: ResultDetail::Primes { count: 15, largest: 47 },
             verified: true,
             backend: "-".into(),
             shard: 3,
@@ -136,13 +276,37 @@ mod tests {
             migrated: true,
         };
         let line = r.render_line();
-        assert!(line.contains("workload=primes"));
+        assert!(line.contains("workload=primes(n=50)"), "{line}");
         assert!(line.contains("seconds=1.500"));
-        assert!(line.contains("primes=25"));
+        assert!(line.contains("primes=15"));
         assert!(line.contains("verified=true"));
         assert!(line.contains("shard=3"));
         assert!(line.contains("steals=12"));
         assert!(line.contains("queue_wait=0.250"));
         assert!(line.contains("migrated=true"));
+        // The workload field replays as a request (params round-trip).
+        let token = line
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("workload="))
+            .unwrap();
+        let mode = line.split_whitespace().find_map(|t| t.strip_prefix("mode=")).unwrap();
+        let back = JobRequest::parse(&format!("{token} {mode}")).unwrap();
+        assert_eq!(back, r.request);
+    }
+
+    #[test]
+    fn scalar_detail_renders_value() {
+        let r = JobResult {
+            request: JobRequest::named("fib", Mode::Seq),
+            seconds: 0.1,
+            detail: ResultDetail::Scalar { value: "88".into() },
+            verified: true,
+            backend: "-".into(),
+            shard: 0,
+            steals: 0,
+            queue_wait: 0.0,
+            migrated: false,
+        };
+        assert!(r.render_line().contains("value=88"));
     }
 }

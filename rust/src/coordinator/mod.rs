@@ -44,6 +44,44 @@
 //! [`Pipeline::run`] survives as the synchronous veneer (`submit` +
 //! `wait`), so CLI one-shots and tests keep their pre-ingress semantics
 //! under the default `block` policy.
+//!
+//! # Writing a workload plugin
+//!
+//! The coordinator carries **no per-workload code**: requests name a
+//! workload, the [`Pipeline`]'s
+//! [`WorkloadRegistry`](crate::workload::WorkloadRegistry) resolves it,
+//! and the plugin does the rest. To add a scenario:
+//!
+//! 1. **Implement
+//!    [`StreamWorkload`](crate::workload::StreamWorkload)**. Write the
+//!    algorithm once, generic over `E: Eval`, as an
+//!    [`EvalBody`](crate::workload::EvalBody); `run` dispatches it with
+//!    [`WorkloadCtx::run_mode`](crate::workload::WorkloadCtx::run_mode)
+//!    so `seq`/`strict`/`par(k)` all execute the same code — the
+//!    paper's monad substitution, per request. Declare parameters as
+//!    [`ParamSpec`](crate::workload::ParamSpec)s (they arrive as typed
+//!    [`Params`](crate::workload::Params), already schema-checked) and
+//!    make `verify` recompute an *independent* oracle for the same
+//!    effective parameters.
+//! 2. **Register it**: build a registry with
+//!    `WorkloadRegistry::builtin()` (or `::empty()`), `register` your
+//!    plugin, and construct the coordinator with
+//!    [`Pipeline::with_registry`]. Nothing else changes — routing
+//!    (affinity hashes the *name*), the serve/TCP protocol
+//!    (`run your_workload(k=v) par(2)`, the `workloads` listing), the
+//!    conformance suite, and the bench harness all pick the plugin up
+//!    from the registry.
+//! 3. **Draw resources from the ctx**, never globally: warm `par(k)`
+//!    pools via `ctx.executor(k)`, memoized chunk-probe costs via
+//!    `ctx.cost_cache(...)`, block backends via
+//!    `ctx.multiplier`/`ctx.siever`, configured sizes via `ctx.sizes`.
+//!    That keeps plugins shard-warm under the coordinator and fully
+//!    testable outside it
+//!    ([`LocalResources`](crate::workload::LocalResources)).
+//!
+//! `workload::extra` (`fib`, `msort`) is the worked example: two
+//! scenarios shipped against this API alone, with zero coordinator
+//! edits.
 
 mod ingress;
 mod job;
@@ -62,43 +100,43 @@ pub use tcp::TcpServer;
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Config, Mode, Workload};
+    use crate::config::{Config, Mode};
 
     fn small_config() -> Config {
         let mut cfg = Config::default();
         cfg.primes_n = 500;
         cfg.fateman_degree = 3;
         cfg.chunk_size = 16;
+        cfg.scale = 0.25; // shrinks fib/msort defaults for test speed
         cfg.use_kernel = false; // unit tests stay kernel-independent
         cfg
     }
 
     #[test]
-    fn pipeline_runs_every_workload_seq() {
+    fn pipeline_runs_every_registered_workload_seq() {
         let pipeline = Pipeline::new(small_config()).unwrap();
-        for w in Workload::ALL {
-            let res = pipeline.run(&JobRequest { workload: w, mode: Mode::Seq }).unwrap();
-            assert!(res.verified, "{} failed verification", w.name());
+        for w in pipeline.registry().names() {
+            let res = pipeline.run(&JobRequest::named(&w, Mode::Seq)).unwrap();
+            assert!(res.verified, "{w} failed verification");
             assert!(res.seconds >= 0.0);
         }
     }
 
     #[test]
-    fn pipeline_runs_every_workload_par2() {
+    fn pipeline_runs_every_registered_workload_par2() {
         let pipeline = Pipeline::new(small_config()).unwrap();
-        for w in Workload::ALL {
-            let res =
-                pipeline.run(&JobRequest { workload: w, mode: Mode::Par(2) }).unwrap();
-            assert!(res.verified, "{} failed verification", w.name());
+        for w in pipeline.registry().names() {
+            let res = pipeline.run(&JobRequest::named(&w, Mode::Par(2))).unwrap();
+            assert!(res.verified, "{w} failed verification");
         }
     }
 
     #[test]
     fn primes_detail_counts() {
-        let pipeline = Pipeline::new(small_config()).unwrap();
-        let res = pipeline
-            .run(&JobRequest { workload: Workload::Primes, mode: Mode::Seq })
-            .unwrap();
+        let mut cfg = small_config();
+        cfg.scale = 1.0; // pin primes_n at the configured 500
+        let pipeline = Pipeline::new(cfg).unwrap();
+        let res = pipeline.run(&JobRequest::named("primes", Mode::Seq)).unwrap();
         match res.detail {
             ResultDetail::Primes { count, largest } => {
                 assert_eq!(count, 95); // π(500)
@@ -110,10 +148,10 @@ mod tests {
 
     #[test]
     fn poly_detail_counts() {
-        let pipeline = Pipeline::new(small_config()).unwrap();
-        let res = pipeline
-            .run(&JobRequest { workload: Workload::Stream, mode: Mode::Par(2) })
-            .unwrap();
+        let mut cfg = small_config();
+        cfg.scale = 1.0; // pin fateman_degree at the configured 3
+        let pipeline = Pipeline::new(cfg).unwrap();
+        let res = pipeline.run(&JobRequest::named("stream", Mode::Par(2))).unwrap();
         match res.detail {
             ResultDetail::Poly { terms, .. } => {
                 // (1+x+y+z+t)^3 · ((1+x+y+z+t)^3 + 1) over 4 vars:
@@ -127,7 +165,7 @@ mod tests {
     #[test]
     fn metrics_accumulate_across_runs() {
         let pipeline = Pipeline::new(small_config()).unwrap();
-        let req = JobRequest { workload: Workload::Primes, mode: Mode::Seq };
+        let req = JobRequest::named("primes", Mode::Seq);
         pipeline.run(&req).unwrap();
         pipeline.run(&req).unwrap();
         let snap = pipeline.metrics().snapshot();
@@ -146,9 +184,7 @@ mod tests {
     #[test]
     fn run_reports_queue_wait_and_migration_fields() {
         let pipeline = Pipeline::new(small_config()).unwrap();
-        let res = pipeline
-            .run(&JobRequest { workload: Workload::Primes, mode: Mode::Seq })
-            .unwrap();
+        let res = pipeline.run(&JobRequest::named("primes", Mode::Seq)).unwrap();
         assert!(res.queue_wait >= 0.0);
         assert!(!res.migrated, "an uncontended run must not migrate");
         assert!(res.render_line().contains("queue_wait="));
@@ -159,8 +195,8 @@ mod tests {
         let mut cfg = small_config();
         cfg.shards = 2;
         let pipeline = Pipeline::new(cfg).unwrap();
-        let home = pipeline.shards().home_index(Workload::Primes);
-        let req = JobRequest { workload: Workload::Primes, mode: Mode::Par(2) };
+        let home = pipeline.shards().home_index("primes");
+        let req = JobRequest::named("primes", Mode::Par(2));
         for _ in 0..3 {
             let res = pipeline.run(&req).unwrap();
             assert!(res.verified);
@@ -178,18 +214,26 @@ mod tests {
         let mut cfg = small_config();
         cfg.chunk_policy = crate::config::ChunkPolicy::Fixed;
         let pipeline = Pipeline::new(cfg).unwrap();
-        for w in [Workload::Chunked, Workload::PrimesChunked] {
-            let res = pipeline.run(&JobRequest { workload: w, mode: Mode::Par(2) }).unwrap();
-            assert!(res.verified, "{} failed under fixed chunking", w.name());
+        for w in ["chunked", "primes_chunked"] {
+            let res = pipeline.run(&JobRequest::named(w, Mode::Par(2))).unwrap();
+            assert!(res.verified, "{w} failed under fixed chunking");
         }
     }
 
     #[test]
     fn strict_mode_works_as_control() {
         let pipeline = Pipeline::new(small_config()).unwrap();
-        let res = pipeline
-            .run(&JobRequest { workload: Workload::Stream, mode: Mode::Strict })
-            .unwrap();
+        let res = pipeline.run(&JobRequest::named("stream", Mode::Strict)).unwrap();
         assert!(res.verified);
+    }
+
+    #[test]
+    fn empty_registry_is_refused() {
+        let err = Pipeline::with_registry(
+            small_config(),
+            crate::workload::WorkloadRegistry::empty(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("registry is empty"), "{err}");
     }
 }

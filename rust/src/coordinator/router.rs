@@ -1,29 +1,35 @@
-//! The pipeline router: `(workload, mode)` → algorithm × strategy ×
+//! The pipeline router: `(workload name, mode)` → plugin × strategy ×
 //! shard.
 //!
-//! Monomorphization meets runtime dispatch here: the algorithms are
-//! generic over [`Eval`](crate::susp::Eval), the request is a runtime
-//! value, so [`PipelineCore`] holds the `match` that instantiates the
-//! right combination — exactly the substitution the paper performs by
-//! editing one import.
+//! Monomorphization meets runtime dispatch here — but since the
+//! workload-plugin redesign, *no per-workload code lives in the
+//! coordinator*. The request names a workload; [`PipelineCore`] resolves
+//! it in the [`WorkloadRegistry`], builds a
+//! [`WorkloadCtx`](crate::workload::WorkloadCtx) from the routed shard's
+//! resources, and the plugin's generic body (written once over
+//! `E: Eval`) runs under whatever strategy the mode selects — exactly
+//! the substitution the paper performs by editing one import, now a
+//! registry lookup plus a virtual call.
 //!
 //! Since the ingress rework, [`Pipeline`] is a cloneable handle over two
 //! halves:
 //!
 //! * [`PipelineCore`] — config, optional PJRT engine, metrics, the
-//!   [`ShardSet`], and the execute/verify/report logic
-//!   ([`PipelineCore::execute_routed`]). It knows nothing about queues.
+//!   [`ShardSet`], the [`WorkloadRegistry`], and the
+//!   execute/verify/report logic ([`PipelineCore::execute_routed`]). It
+//!   knows nothing about queues.
 //! * [`Ingress`](super::ingress::Ingress) — the staged admission path
-//!   (admit → route → execute → report). [`Pipeline::submit`] enqueues a
-//!   request and returns a [`JobTicket`] immediately; dispatcher threads
-//!   route it to a shard's run queue; shard runner threads execute it
-//!   (stealing whole queued jobs across shards when one backs up) and
-//!   fulfill the ticket.
+//!   (validate → admit → route → execute → report). [`Pipeline::submit`]
+//!   schema-checks the request against the registry, enqueues it, and
+//!   returns a [`JobTicket`] immediately; dispatcher threads route it to
+//!   a shard's run queue; shard runner threads execute it (stealing
+//!   whole queued jobs across shards when one backs up) and fulfill the
+//!   ticket.
 //!
 //! The synchronous API survives as a veneer: [`Pipeline::run`] is
 //! `submit` + [`JobTicket::wait`], so every job — CLI, serve session,
-//! bench client — flows through the same admission queue and backpressure
-//! policy.
+//! bench client — flows through the same admission queue and
+//! backpressure policy.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -34,26 +40,24 @@ use log::{debug, info, warn};
 use super::ingress::{Ingress, JobTicket, SubmitError};
 use super::job::{JobRequest, JobResult, ResultDetail};
 use super::shard::{Shard, ShardSet};
-use crate::config::{ChunkPolicy, Config, Mode, Workload};
+use crate::config::{ChunkPolicy, Config};
 use crate::metrics::MetricsRegistry;
-use crate::poly::{
-    chunked_times, chunked_times_adaptive_cached, list_times_par, list_times_seq, stream_times,
-    BlockMultiplier, Coeff, Polynomial, RustMultiplier,
-};
+use crate::poly::BlockMultiplier;
 use crate::runtime::{KernelMultiplier, KernelSiever, XlaEngine};
-use crate::sieve::{self, BlockSiever, RustSiever};
-use crate::susp::{FutureEval, LazyEval, StrictEval};
-use crate::workload::{fateman_pair, fateman_pair_big, Sizes};
+use crate::sieve::{BlockSiever, RustSiever};
+use crate::workload::{Sizes, WorkloadCtx, WorkloadError, WorkloadRegistry};
 
 /// Long-lived coordinator state: config, optional PJRT engine, metrics,
-/// the shard group, and the execution logic. Shared (via `Arc`) between
-/// the [`Pipeline`] handle and the ingress worker threads.
+/// the shard group, the workload registry, and the execution logic.
+/// Shared (via `Arc`) between the [`Pipeline`] handle and the ingress
+/// worker threads.
 pub(super) struct PipelineCore {
     cfg: Config,
     sizes: Sizes,
     engine: Option<Arc<XlaEngine>>,
     metrics: MetricsRegistry,
     shards: ShardSet,
+    registry: WorkloadRegistry,
 }
 
 /// Handle to a running coordinator: cheap to clone, shared across serve
@@ -66,12 +70,25 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
-    /// Build a pipeline and start its ingress (dispatcher + shard runner
-    /// threads). When `cfg.use_kernel` is set and the artifacts directory
-    /// exists, the PJRT engine is started (compiling every artifact);
-    /// otherwise chunked workloads run on the pure-Rust block backend.
+    /// Build a pipeline over the builtin workload registry and start its
+    /// ingress (dispatcher + shard runner threads). When `cfg.use_kernel`
+    /// is set and the artifacts directory exists, the PJRT engine is
+    /// started (compiling every artifact); otherwise chunked workloads
+    /// run on the pure-Rust block backend.
     pub fn new(cfg: Config) -> Result<Pipeline> {
+        Pipeline::with_registry(cfg, WorkloadRegistry::builtin())
+    }
+
+    /// [`Pipeline::new`] with a caller-supplied registry — the open
+    /// workload world's front door: register custom
+    /// [`StreamWorkload`](crate::workload::StreamWorkload) plugins and
+    /// the whole coordinator (routing, verification, serve protocol,
+    /// bench harness) serves them with no further edits.
+    pub fn with_registry(cfg: Config, registry: WorkloadRegistry) -> Result<Pipeline> {
         cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+        if registry.is_empty() {
+            return Err(anyhow!("workload registry is empty — nothing to serve"));
+        }
         let engine = if cfg.use_kernel && cfg.artifacts_dir.join("manifest.toml").exists() {
             let engine = XlaEngine::start(&cfg.artifacts_dir)
                 .context("starting PJRT engine (set use_kernel=false to skip)")?;
@@ -93,8 +110,10 @@ impl Pipeline {
         let sizes = Sizes::from_config(&cfg);
         let shards = ShardSet::new(&cfg);
         info!(
-            "coordinator sharded {} way(s); ingress queue_depth={} admission={}",
+            "coordinator sharded {} way(s); {} workload(s) registered; ingress queue_depth={} \
+             admission={}",
             shards.len(),
+            registry.len(),
             cfg.queue_depth,
             cfg.admission.label()
         );
@@ -102,7 +121,7 @@ impl Pipeline {
         // Register every shard's gauges up front; per-job publishing
         // only refreshes the routed shard.
         shards.publish(&metrics);
-        let core = Arc::new(PipelineCore { cfg, sizes, engine, metrics, shards });
+        let core = Arc::new(PipelineCore { cfg, sizes, engine, metrics, shards, registry });
         let ingress = Arc::new(Ingress::start(Arc::clone(&core))?);
         Ok(Pipeline { core, ingress })
     }
@@ -124,6 +143,11 @@ impl Pipeline {
         &self.core.shards
     }
 
+    /// The open workload set this pipeline serves.
+    pub fn registry(&self) -> &WorkloadRegistry {
+        &self.core.registry
+    }
+
     /// The ingress stage: admission-queue introspection and per-shard
     /// drain control (see [`Ingress`]).
     pub fn ingress(&self) -> &Ingress {
@@ -140,12 +164,15 @@ impl Pipeline {
         self.core.siever()
     }
 
-    /// Stage 1 of the request path: admit the request into the bounded
-    /// ingress queue and return a [`JobTicket`] immediately. The ticket
-    /// is a [`Fut`](crate::susp::Fut) cell — callers `and_then`/`bind`
+    /// Stage 1 of the request path: schema-check the request against the
+    /// registry, admit it into the bounded ingress queue, and return a
+    /// [`JobTicket`] immediately. The ticket is a
+    /// [`Fut`](crate::susp::Fut) cell — callers `and_then`/`bind`
     /// continuations on it exactly like the paper's stream cells, or
     /// [`JobTicket::wait`] for the synchronous result.
     ///
+    /// Unknown workload names and out-of-schema params answer
+    /// [`SubmitError::Rejected`] *before* taking any queue capacity.
     /// What happens when the queue is full is the configured
     /// [`AdmissionPolicy`](crate::config::AdmissionPolicy): block, shed
     /// ([`SubmitError::Shed`]), or bounded wait ([`SubmitError::Timeout`]).
@@ -157,7 +184,7 @@ impl Pipeline {
     /// harness verifies one pre-flight job per cell and skips the oracle
     /// on the timed ones).
     pub fn submit_opts(&self, req: &JobRequest, verify: bool) -> Result<JobTicket, SubmitError> {
-        self.ingress.submit(*req, verify)
+        self.ingress.submit(req.clone(), verify)
     }
 
     /// Synchronous veneer over the staged path: admit, then block on the
@@ -189,7 +216,7 @@ impl PipelineCore {
     fn multiplier(&self) -> Arc<dyn BlockMultiplier> {
         match &self.engine {
             Some(engine) => Arc::new(KernelMultiplier::new(Arc::clone(engine))),
-            None => Arc::new(RustMultiplier),
+            None => Arc::new(crate::poly::RustMultiplier),
         }
     }
 
@@ -200,12 +227,38 @@ impl PipelineCore {
         }
     }
 
+    /// The per-job plugin context: configured sizes + chunk policy +
+    /// block backends + the routed shard's warm pools and cost caches.
+    fn workload_ctx<'a>(&'a self, shard: &'a Shard) -> WorkloadCtx<'a> {
+        WorkloadCtx::new(
+            &self.sizes,
+            self.cfg.chunk_policy,
+            self.multiplier(),
+            self.siever(),
+            shard,
+        )
+    }
+
+    /// Submit-time gate: the workload must be registered and the params
+    /// must pass its schema. Runs before any queue slot is taken, so
+    /// malformed requests answer immediately.
+    pub(super) fn validate_request(&self, req: &JobRequest) -> Result<(), WorkloadError> {
+        let Some(plugin) = self.registry.get(&req.workload) else {
+            return Err(WorkloadError::new(format!(
+                "unknown workload: {} (registered: {})",
+                req.workload,
+                self.registry.names().join(" ")
+            )));
+        };
+        plugin.validate(&req.params)
+    }
+
     /// Stage 3 + 4 of the request path: execute one already-routed job on
     /// the calling thread (an ingress runner, spawned with the configured
     /// big stack) and report. Publishes timing to the metrics registry
-    /// and verifies the result against the independent oracle. Only the
-    /// workload itself is timed — queue wait arrives as an input, and
-    /// verification runs after the clock stops.
+    /// and verifies the result against the plugin's independent oracle.
+    /// Only the workload itself is timed — queue wait arrives as an
+    /// input, and verification runs after the clock stops.
     pub(super) fn execute_routed(
         &self,
         req: JobRequest,
@@ -215,14 +268,30 @@ impl PipelineCore {
         migrated: bool,
     ) -> Result<JobResult> {
         let label = req.label();
-        let timer = self.metrics.timer(&format!("job.{label}"));
+        // Timer names use the bare workload name, not the full param
+        // spec: metric entries live forever, and params come straight
+        // off the wire — `job.primes(n=1).seq`, `job.primes(n=2).seq`,
+        // … would grow the registry without bound under a param sweep.
+        let timer =
+            self.metrics.timer(&format!("job.{}.{}", req.workload, req.mode.label()));
         let steals_before = shard.stats().tasks_stolen;
+        // Resolved at submit time too; a miss here means the registry
+        // changed under a queued job, which cannot happen (the registry
+        // is immutable once the pipeline is built).
+        let plugin = Arc::clone(
+            self.registry
+                .get(&req.workload)
+                .ok_or_else(|| anyhow!("unknown workload: {}", req.workload))?,
+        );
+        let ctx = self.workload_ctx(shard.as_ref());
 
         let started = Instant::now();
-        let detail = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            self.workload_body(req, shard.as_ref())
-        }))
-        .map_err(|p| anyhow!("workload panicked: {}", crate::susp::panic_text(&*p)))??;
+        let detail: ResultDetail =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                plugin.run(&ctx, req.mode, &req.params)
+            }))
+            .map_err(|p| anyhow!("workload panicked: {}", crate::susp::panic_text(&*p)))?
+            .map_err(|e| anyhow!("workload {} failed: {e}", req.workload))?;
         let took = started.elapsed();
 
         timer.record(took);
@@ -237,15 +306,11 @@ impl PipelineCore {
         let stats_after = shard.stats();
         let steals = stats_after.tasks_stolen.saturating_sub(steals_before);
         shard.publish_stats(&self.metrics, &stats_after);
-        let verified = !verify || self.verify(req.workload, &detail);
+        let verified = !verify || plugin.verify(&ctx, &req.params, &detail);
         if !verified {
             self.metrics.counter("jobs.verification_failed").inc();
         }
-        let backend = match req.workload {
-            Workload::Chunked | Workload::ChunkedBig => self.multiplier().name().to_string(),
-            Workload::PrimesChunked => self.siever().name().to_string(),
-            _ => "-".to_string(),
-        };
+        let backend = plugin.backend(&ctx, &req.params);
         Ok(JobResult {
             request: req,
             seconds: took.as_secs_f64(),
@@ -257,224 +322,5 @@ impl PipelineCore {
             queue_wait: queue_wait.as_secs_f64(),
             migrated,
         })
-    }
-
-    fn workload_body(&self, req: JobRequest, shard: &Shard) -> Result<ResultDetail> {
-        let sizes = &self.sizes;
-        match req.workload {
-            Workload::Primes => Ok(self.run_sieve(shard, req.mode, sizes.primes_n)),
-            Workload::PrimesX3 => Ok(self.run_sieve(shard, req.mode, sizes.primes_x3_n)),
-            Workload::PrimesChunked => {
-                Ok(self.run_sieve_chunked(shard, req.mode, sizes.primes_n))
-            }
-            Workload::Stream => {
-                let (p, q) = fateman_pair(sizes.fateman_vars, sizes.fateman_degree);
-                let prod = self.run_stream_times(shard, req.mode, &p, &q);
-                Ok(poly_detail(&prod))
-            }
-            Workload::StreamBig => {
-                let (p, q) = fateman_pair_big(
-                    sizes.fateman_vars,
-                    sizes.fateman_degree,
-                    sizes.big_factor,
-                );
-                let prod = self.run_stream_times(shard, req.mode, &p, &q);
-                Ok(poly_detail(&prod))
-            }
-            Workload::List => {
-                let (p, q) = fateman_pair(sizes.fateman_vars, sizes.fateman_degree);
-                let prod = self.run_list_times(shard, req.mode, &p, &q);
-                Ok(poly_detail(&prod))
-            }
-            Workload::ListBig => {
-                let (p, q) = fateman_pair_big(
-                    sizes.fateman_vars,
-                    sizes.fateman_degree,
-                    sizes.big_factor,
-                );
-                let prod = self.run_list_times(shard, req.mode, &p, &q);
-                Ok(poly_detail(&prod))
-            }
-            Workload::Chunked => {
-                let (p, q) = fateman_pair(sizes.fateman_vars, sizes.fateman_degree);
-                let prod = self.run_chunked_times(shard, req.workload, req.mode, &p, &q);
-                Ok(poly_detail(&prod))
-            }
-            Workload::ChunkedBig => {
-                let (p, q) = fateman_pair_big(
-                    sizes.fateman_vars,
-                    sizes.fateman_degree,
-                    sizes.big_factor,
-                );
-                let prod = self.run_chunked_times(shard, req.workload, req.mode, &p, &q);
-                Ok(poly_detail(&prod))
-            }
-        }
-    }
-
-    fn run_sieve(&self, shard: &Shard, mode: Mode, n: u32) -> ResultDetail {
-        let primes = match mode {
-            Mode::Seq => sieve::primes(LazyEval, n),
-            Mode::Strict => sieve::primes(StrictEval, n),
-            Mode::Par(k) => sieve::primes(FutureEval::new(shard.executor(k)), n),
-        };
-        ResultDetail::Primes {
-            count: primes.len(),
-            largest: primes.last().copied().unwrap_or(0),
-        }
-    }
-
-    /// The §7 block-granular sieve. Adaptive chunking by default, with
-    /// the probe cost cached on the shard; `ChunkPolicy::Fixed` keeps
-    /// the constant `chunk_size` for A/B runs.
-    fn run_sieve_chunked(&self, shard: &Shard, mode: Mode, n: u32) -> ResultDetail {
-        let siever = self.siever();
-        let primes = match self.cfg.chunk_policy {
-            ChunkPolicy::Fixed => {
-                let chunk = self.sizes.chunk_size;
-                match mode {
-                    Mode::Seq => sieve::chunked_primes_with_runtime(LazyEval, n, chunk, siever),
-                    Mode::Strict => {
-                        sieve::chunked_primes_with_runtime(StrictEval, n, chunk, siever)
-                    }
-                    Mode::Par(k) => sieve::chunked_primes_with_runtime(
-                        FutureEval::new(shard.executor(k)),
-                        n,
-                        chunk,
-                        siever,
-                    ),
-                }
-            }
-            ChunkPolicy::Adaptive => {
-                let cost = shard.cost_cache(Workload::PrimesChunked.name());
-                match mode {
-                    Mode::Seq => {
-                        sieve::chunked_primes_adaptive_cached(LazyEval, n, siever, &cost)
-                    }
-                    Mode::Strict => {
-                        sieve::chunked_primes_adaptive_cached(StrictEval, n, siever, &cost)
-                    }
-                    Mode::Par(k) => sieve::chunked_primes_adaptive_cached(
-                        FutureEval::new(shard.executor(k)),
-                        n,
-                        siever,
-                        &cost,
-                    ),
-                }
-            }
-        };
-        ResultDetail::Primes {
-            count: primes.len(),
-            largest: primes.last().copied().unwrap_or(0),
-        }
-    }
-
-    fn run_stream_times<C: Coeff>(
-        &self,
-        shard: &Shard,
-        mode: Mode,
-        p: &Polynomial<C>,
-        q: &Polynomial<C>,
-    ) -> Polynomial<C> {
-        match mode {
-            Mode::Seq => stream_times(&LazyEval, p, q),
-            Mode::Strict => stream_times(&StrictEval, p, q),
-            Mode::Par(k) => stream_times(&FutureEval::new(shard.executor(k)), p, q),
-        }
-    }
-
-    fn run_list_times<C: Coeff>(
-        &self,
-        shard: &Shard,
-        mode: Mode,
-        p: &Polynomial<C>,
-        q: &Polynomial<C>,
-    ) -> Polynomial<C> {
-        match mode {
-            Mode::Seq | Mode::Strict => list_times_seq(p, q),
-            Mode::Par(k) => list_times_par(&shard.executor(k), p, q),
-        }
-    }
-
-    /// Chunked multiply. Adaptive block edges by default (probe cost
-    /// cached per (shard, workload)); `ChunkPolicy::Fixed` pins
-    /// `chunk_size` — the pre-sharding behaviour, kept for A/B (the A1
-    /// chunk-sweep ablation sets it explicitly).
-    fn run_chunked_times<C: Coeff>(
-        &self,
-        shard: &Shard,
-        workload: Workload,
-        mode: Mode,
-        p: &Polynomial<C>,
-        q: &Polynomial<C>,
-    ) -> Polynomial<C> {
-        let mult = self.multiplier();
-        match self.cfg.chunk_policy {
-            ChunkPolicy::Fixed => {
-                let chunk = self.sizes.chunk_size;
-                match mode {
-                    Mode::Seq => chunked_times(&LazyEval, p, q, chunk, mult),
-                    Mode::Strict => chunked_times(&StrictEval, p, q, chunk, mult),
-                    Mode::Par(k) => {
-                        chunked_times(&FutureEval::new(shard.executor(k)), p, q, chunk, mult)
-                    }
-                }
-            }
-            ChunkPolicy::Adaptive => {
-                let cost = shard.cost_cache(workload.name());
-                match mode {
-                    Mode::Seq => chunked_times_adaptive_cached(&LazyEval, p, q, mult, &cost),
-                    Mode::Strict => {
-                        chunked_times_adaptive_cached(&StrictEval, p, q, mult, &cost)
-                    }
-                    Mode::Par(k) => chunked_times_adaptive_cached(
-                        &FutureEval::new(shard.executor(k)),
-                        p,
-                        q,
-                        mult,
-                        &cost,
-                    ),
-                }
-            }
-        }
-    }
-
-    /// Check against the independent oracle: Eratosthenes for primes,
-    /// classical multiplication for polynomials.
-    fn verify(&self, workload: Workload, detail: &ResultDetail) -> bool {
-        let sizes = &self.sizes;
-        match (workload, detail) {
-            (
-                Workload::Primes | Workload::PrimesChunked,
-                ResultDetail::Primes { count, largest },
-            ) => {
-                let oracle = sieve::eratosthenes(sizes.primes_n);
-                oracle.len() == *count && oracle.last().copied().unwrap_or(0) == *largest
-            }
-            (Workload::PrimesX3, ResultDetail::Primes { count, largest }) => {
-                let oracle = sieve::eratosthenes(sizes.primes_x3_n);
-                oracle.len() == *count && oracle.last().copied().unwrap_or(0) == *largest
-            }
-            (Workload::Stream | Workload::List | Workload::Chunked, d) => {
-                let (p, q) = fateman_pair(sizes.fateman_vars, sizes.fateman_degree);
-                poly_detail(&p.mul(&q)) == *d
-            }
-            (Workload::StreamBig | Workload::ListBig | Workload::ChunkedBig, d) => {
-                let (p, q) = fateman_pair_big(
-                    sizes.fateman_vars,
-                    sizes.fateman_degree,
-                    sizes.big_factor,
-                );
-                poly_detail(&p.mul(&q)) == *d
-            }
-            _ => false,
-        }
-    }
-}
-
-fn poly_detail<C: Coeff>(p: &Polynomial<C>) -> ResultDetail {
-    ResultDetail::Poly {
-        terms: p.num_terms(),
-        leading_coeff: p.leading().map(|(_, c)| c.to_string()).unwrap_or_else(|| "0".into()),
     }
 }

@@ -3,15 +3,23 @@
 //! Protocol (one request per line):
 //!
 //! ```text
-//! run <workload> <mode>      → ok workload=... seconds=... | err <message>
-//! submit <workload> <mode>   → ticket id=N               | err admission=...
+//! run <spec> <mode>          → ok workload=... seconds=... | err <message>
+//! submit <spec> <mode>       → ticket id=N               | err admission=...
 //! wait <id>                  → ok workload=... (blocks)   | err <message>
 //! poll <id>                  → ticket id=N state=<empty|running|ready|panicked>
+//! workloads                  → one line per registered workload (name,
+//!                              param schema, description), terminated by "."
 //! metrics                    → multi-line snapshot, terminated by "."
 //! config                     → one line per effective config field
 //! help                       → command summary
 //! quit                       → closes the session
 //! ```
+//!
+//! `<spec>` is a registry name with optional parameters —
+//! `primes`, `fib(n=64)`, `stream(big_factor=7,chunked=true)` — the
+//! open plugin world on the wire. Unknown names and out-of-schema
+//! params answer well-formed `err rejected …` lines before any queue
+//! capacity is taken.
 //!
 //! `run` is the synchronous veneer (admit + wait in one step); `submit`
 //! exposes the staged ingress directly — the session gets a [`JobTicket`]
@@ -76,15 +84,30 @@ pub fn serve(pipeline: &Pipeline, input: impl BufRead, mut output: impl Write) -
             "help" => {
                 writeln!(
                     output,
-                    "commands: run <workload> <mode> | submit <workload> <mode> | \
-                     wait <id> | poll <id> | metrics | config | quit"
+                    "commands: run <spec> <mode> | submit <spec> <mode> | wait <id> | \
+                     poll <id> | workloads | metrics | config | quit"
                 )?;
                 writeln!(
                     output,
-                    "workloads: {}",
-                    crate::config::Workload::ALL.map(|w| w.name()).join(" ")
+                    "workloads: {} (spec = name[(k=v,...)]; `workloads` lists params)",
+                    pipeline.registry().names().join(" ")
                 )?;
                 writeln!(output, "modes: seq strict par(N)")?;
+            }
+            "workloads" => {
+                for w in pipeline.registry().iter() {
+                    let params: Vec<String> =
+                        w.params().iter().map(crate::workload::ParamSpec::render).collect();
+                    let params =
+                        if params.is_empty() { "-".to_string() } else { params.join(",") };
+                    writeln!(
+                        output,
+                        "workload name={} params=[{params}] {}",
+                        w.name(),
+                        w.describe()
+                    )?;
+                }
+                writeln!(output, ".")?;
             }
             "config" => {
                 writeln!(output, "{:#?}", pipeline.config())?;
@@ -342,6 +365,52 @@ mod tests {
         assert!(out.contains("par(N)"));
         assert!(out.contains("submit"));
         assert!(out.contains("wait <id>"));
+    }
+
+    #[test]
+    fn workloads_verb_lists_registry_with_schemas() {
+        let (jobs, out) = drive("workloads\nquit\n");
+        assert_eq!(jobs, 0);
+        // One line per registered workload, "."-terminated like metrics.
+        let p = pipeline();
+        let lines: Vec<_> =
+            out.lines().filter(|l| l.starts_with("workload name=")).collect();
+        assert_eq!(lines.len(), p.registry().len(), "{out}");
+        for name in ["primes", "stream_big", "fib", "msort"] {
+            assert!(
+                lines.iter().any(|l| l.contains(&format!("name={name} "))),
+                "missing {name} in:\n{out}"
+            );
+        }
+        // Param schemas ride along.
+        assert!(out.contains("n:u32"), "{out}");
+        assert!(out.contains("seed:u64"), "{out}");
+        assert!(out.lines().any(|l| l == "."), "{out}");
+    }
+
+    #[test]
+    fn params_travel_the_wire_and_reject_cleanly() {
+        let (jobs, out) = drive(
+            "run primes(n=100) par(2)\nrun primes(frobnicate=1) seq\n\
+             run warp(n=3) seq\nsubmit fib(n=banana) seq\n\
+             run msort(n=99999999999) seq\nquit\n",
+        );
+        assert_eq!(jobs, 1);
+        // Params echo on the ok line (round-trip through render_line).
+        assert!(out.contains("ok workload=primes(n=100) mode=par(2)"), "{out}");
+        assert!(out.contains("primes=25"), "{out}");
+        // Unknown param / workload / bad value / out-of-range: all
+        // well-formed err lines.
+        let errs: Vec<_> = out.lines().filter(|l| l.starts_with("err ")).collect();
+        assert_eq!(errs.len(), 4, "{out}");
+        assert!(out.contains("unknown parameter"), "{out}");
+        assert!(out.contains("unknown workload: warp"), "{out}");
+        assert!(out.contains("bad value for param n"), "{out}");
+        assert!(out.contains("out of range for param n"), "{out}");
+        assert!(
+            errs.iter().all(|l| l.starts_with("err rejected workload=")),
+            "rejections are machine-parseable: {out}"
+        );
     }
 
     #[test]

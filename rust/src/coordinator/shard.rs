@@ -28,10 +28,11 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::config::{Config, Workload};
+use crate::config::Config;
 use crate::exec::{DequeKind, Executor, ExecutorConfig, ExecutorStats};
 use crate::metrics::MetricsRegistry;
 use crate::stream::CostCache;
+use crate::workload::ExecResources;
 
 /// Most distinct `par(k)` pools a shard keeps warm. Requests name
 /// arbitrary parallelism (the serve protocol accepts any `par(N)`), so
@@ -257,6 +258,20 @@ impl Shard {
     }
 }
 
+/// A [`Shard`] is what workload plugins draw execution resources from:
+/// warm `par(k)` pools and the shared probe-cost caches, surfaced
+/// through the plugin API's [`ExecResources`] capability so plugins
+/// never see coordinator internals.
+impl ExecResources for Shard {
+    fn executor(&self, parallelism: usize) -> Executor {
+        Shard::executor(self, parallelism)
+    }
+
+    fn cost_cache(&self, key: &str) -> CostCache {
+        Shard::cost_cache(self, key)
+    }
+}
+
 /// RAII routing lease: holds the shard's `inflight` slot for the
 /// duration of one job so concurrent routing sees true load.
 pub struct ShardLease {
@@ -323,16 +338,18 @@ impl ShardSet {
     }
 
     /// A workload's affinity home: stable across runs and processes
-    /// (FNV-1a of the workload name), so repeated jobs land where their
-    /// pools and cost caches are warm.
-    pub fn home_index(&self, workload: Workload) -> usize {
-        (fnv1a(workload.name().as_bytes()) % self.shards.len() as u64) as usize
+    /// (FNV-1a of the *registry name* — the open world hashes names,
+    /// not enum discriminants), so repeated jobs land where their pools
+    /// and cost caches are warm. Params deliberately don't feed the
+    /// hash: `fib(n=64)` and `fib(n=128)` share pools and probe costs.
+    pub fn home_index(&self, workload: &str) -> usize {
+        (fnv1a(workload.as_bytes()) % self.shards.len() as u64) as usize
     }
 
     /// Route a request: home shard unless a strictly less-loaded shard
     /// exists (ties keep affinity). Returns the lease that both names
     /// the shard and holds its load slot.
-    pub fn route(&self, workload: Workload) -> ShardLease {
+    pub fn route(&self, workload: &str) -> ShardLease {
         let home = self.home_index(workload);
         let mut best = home;
         let mut best_load = self.shards[home].inflight.load(Ordering::Relaxed);
@@ -402,13 +419,14 @@ mod tests {
     #[test]
     fn affinity_is_stable_when_idle() {
         let set = set_of(4);
-        let home = set.home_index(Workload::Primes);
+        let home = set.home_index("primes");
         for _ in 0..10 {
-            let lease = set.route(Workload::Primes);
+            let lease = set.route("primes");
             assert_eq!(lease.id(), home, "idle routing must stick to the home shard");
         }
-        // Different workloads may map anywhere, but always in range.
-        for w in Workload::ALL {
+        // Any name — registered or not — hashes somewhere in range; the
+        // open world means routing never enumerates workloads.
+        for w in ["primes", "stream_big", "fib", "msort", "some_future_plugin"] {
             assert!(set.home_index(w) < 4);
         }
     }
@@ -416,15 +434,15 @@ mod tests {
     #[test]
     fn least_loaded_fallback_spills_then_returns() {
         let set = set_of(2);
-        let home = set.home_index(Workload::Primes);
+        let home = set.home_index("primes");
         let other = 1 - home;
         // Home busy, other idle: spill.
-        let lease_home = set.route(Workload::Primes);
+        let lease_home = set.route("primes");
         assert_eq!(lease_home.id(), home);
-        let lease_spill = set.route(Workload::Primes);
+        let lease_spill = set.route("primes");
         assert_eq!(lease_spill.id(), other, "busy home must spill to the idle shard");
         // Both equally busy: tie goes back to home.
-        let lease_tie = set.route(Workload::Primes);
+        let lease_tie = set.route("primes");
         assert_eq!(lease_tie.id(), home, "ties must keep affinity");
         // Dropping leases releases load; routing returns home.
         drop(lease_home);
@@ -432,7 +450,7 @@ mod tests {
         drop(lease_tie);
         assert_eq!(set.shard(home).inflight(), 0);
         assert_eq!(set.shard(other).inflight(), 0);
-        let lease = set.route(Workload::Primes);
+        let lease = set.route("primes");
         assert_eq!(lease.id(), home);
         assert_eq!(set.shard(other).jobs_routed(), 1);
         assert_eq!(set.shard(other).affinity_hits(), 0, "spill is not an affinity hit");

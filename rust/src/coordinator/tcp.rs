@@ -253,8 +253,8 @@ mod tests {
         // FNV-1a affinity is deterministic: with two shards, `primes`
         // and `primes_chunked` have different home shards, so this mix
         // is guaranteed to exercise both.
-        let home_a = p.shards().home_index(crate::config::Workload::Primes);
-        let home_b = p.shards().home_index(crate::config::Workload::PrimesChunked);
+        let home_a = p.shards().home_index("primes");
+        let home_b = p.shards().home_index("primes_chunked");
         assert_ne!(home_a, home_b, "test premise: distinct home shards");
 
         let server = TcpServer::start(Arc::clone(&p), "127.0.0.1:0").unwrap();
@@ -288,6 +288,32 @@ mod tests {
         );
         // All leases returned.
         assert!(p.shards().iter().all(|s| s.inflight() == 0));
+    }
+
+    #[test]
+    fn tcp_workloads_verb_and_params_roundtrip() {
+        let p = pipeline();
+        let server = TcpServer::start(Arc::clone(&p), "127.0.0.1:0").unwrap();
+        let lines = session(
+            server.local_addr(),
+            "workloads\nrun fib(n=32) par(2)\nrun msort(n=64,seed=5) seq\nquit\n",
+        );
+        // The registry listing arrives over the wire, schema included.
+        let listed = lines.iter().filter(|l| l.starts_with("workload name=")).count();
+        assert_eq!(listed, p.registry().len(), "{lines:?}");
+        assert!(lines.iter().any(|l| l.contains("name=fib") && l.contains("n:u32")), "{lines:?}");
+        // Parameterized runs of both post-enum workloads, verified.
+        assert!(
+            lines
+                .iter()
+                .any(|l| l.contains("ok workload=fib(n=32)") && l.contains("verified=true")),
+            "{lines:?}"
+        );
+        assert!(
+            lines.iter().any(|l| l.contains("ok workload=msort(n=64,seed=5)")
+                && l.contains("verified=true")),
+            "{lines:?}"
+        );
     }
 
     #[test]

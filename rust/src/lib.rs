@@ -84,6 +84,28 @@
 //!   — auto-disarmed while the committed baseline's note marks it a
 //!   synthetic floor; the `bench-baseline` workflow produces measured
 //!   replacements — see `ci/check_bench.sh`).
+//! * **Open workload-plugin surface** ([`workload`]) — the coordinator
+//!   serves an *open* set of scenarios: a
+//!   [`workload::StreamWorkload`] trait (name, param schema, generic
+//!   `run` over `E: Eval` via [`workload::EvalBody`], independent
+//!   `verify`, backend/cost hooks) registered in a
+//!   [`workload::WorkloadRegistry`] that the router, verifier, serve
+//!   protocol, and bench harness all dispatch through *by name* — no
+//!   workload enum, no dispatch `match` anywhere in the coordinator.
+//!   Requests carry typed params on the wire
+//!   (`run stream(big_factor=7,chunked=true) par(2)`), schema-checked
+//!   at submit before any queue capacity is taken. The paper's nine
+//!   Table-1 scenarios are three plugin families ([`workload::builtin`]:
+//!   sieve, stream-multiply, list baseline); `fib` (big-integer
+//!   Fibonacci stream) and `msort` (streaming merge sort on
+//!   `merge_sorted`) shipped through the public API alone
+//!   ([`workload::extra`]) — the existence proof that new scenarios
+//!   need zero coordinator edits. `sfut workloads` / the serve
+//!   `workloads` verb list every registration with its schema, and the
+//!   conformance suite (`rust/tests/workload_registry.rs`) holds every
+//!   plugin to Seq-self-verifies / Par(2)-equals-Seq / well-formed err
+//!   lines. See `coordinator`'s module docs for the plugin-writing
+//!   guide.
 
 pub mod bench_harness;
 pub mod bigint;
@@ -104,8 +126,9 @@ pub mod workload;
 
 /// The most common imports, bundled.
 pub mod prelude {
-    pub use crate::config::{Config, Mode, Workload};
+    pub use crate::config::{Config, Mode};
     pub use crate::exec::Executor;
     pub use crate::stream::Stream;
     pub use crate::susp::{Eval, FutureEval, LazyEval, StrictEval, Susp};
+    pub use crate::workload::{Params, StreamWorkload, WorkloadCtx, WorkloadRegistry};
 }

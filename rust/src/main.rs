@@ -1,7 +1,10 @@
 //! `sfut` — CLI launcher for the stream-future reproduction.
 //!
 //! ```text
-//! sfut run <workload> <mode> [options]     run one Table-1 cell
+//! sfut run <spec> <mode> [options]         run one cell; spec = name[(k=v,...)],
+//!                                          e.g. `run fib(n=64) par(2)`
+//! sfut workloads [options]                 list every registered workload with its
+//!                                          parameter schema
 //! sfut table1 [options]                    regenerate Table 1
 //! sfut fig3 [options]                      regenerate Figure 3
 //! sfut fig4 [options]                      regenerate Figure 4
@@ -159,7 +162,7 @@ fn real_main() -> Result<()> {
     match cli.command.as_str() {
         "run" => {
             if cli.positional.len() != 2 {
-                bail!("usage: sfut run <workload> <mode>");
+                bail!("usage: sfut run <workload[(k=v,...)]> <mode>");
             }
             let cfg = load_config(&cli)?;
             let pipeline = Pipeline::new(cfg)?;
@@ -170,6 +173,26 @@ fn real_main() -> Result<()> {
             if !result.verified {
                 bail!("result failed verification against the oracle");
             }
+            Ok(())
+        }
+        "workloads" => {
+            // Config flags are accepted (and validated) for symmetry
+            // with every other subcommand; the registry itself is
+            // config-independent.
+            let _ = load_config(&cli)?;
+            let registry = stream_future::workload::WorkloadRegistry::builtin();
+            println!("registered workloads ({}):", registry.len());
+            for w in registry.iter() {
+                let params: Vec<String> =
+                    w.params().iter().map(|p| format!("{} ({})", p.render(), p.help)).collect();
+                let params = if params.is_empty() { "-".to_string() } else { params.join("; ") };
+                println!("  {:<16} {}", w.name(), w.describe());
+                println!("  {:<16} params: {params}", "");
+            }
+            println!(
+                "run one with: sfut run <name>[(k=v,...)] <seq|strict|par(N)> — e.g. \
+                 `sfut run fib(n=64) par(2)`"
+            );
             Ok(())
         }
         "table1" => {
@@ -319,13 +342,16 @@ fn real_main() -> Result<()> {
             Ok(())
         }
         "help" | "--help" | "-h" => {
+            let registry = stream_future::workload::WorkloadRegistry::builtin();
             println!(
                 "sfut — reproduction of 'Parallelizing Stream with Future' (Jolly, 2013)\n\
                  \n\
                  usage: sfut <command> [options]\n\
                  \n\
                  commands:\n\
-                 \x20 run <workload> <mode>   run one Table-1 cell (e.g. `run stream_big par(2)`)\n\
+                 \x20 run <spec> <mode>       run one cell; spec = name[(k=v,...)] \
+                 (e.g. `run fib(n=64) par(2)`)\n\
+                 \x20 workloads               list registered workloads + param schemas\n\
                  \x20 table1                  regenerate the paper's Table 1\n\
                  \x20 fig3                    regenerate Figure 3 (primes chart)\n\
                  \x20 fig4                    regenerate Figure 4 (polynomial chart)\n\
@@ -338,9 +364,9 @@ fn real_main() -> Result<()> {
                  --no-kernel | --queue-depth <n> | --admission <block|shed|timeout(MS)> | \
                  --deque <chase_lev|locked> | \
                  --threshold <f> | --latency-threshold <f> | --latency-strict\n\
-                 workloads: primes primes_x3 primes_chunked stream stream_big list list_big \
-                 chunked chunked_big\n\
-                 modes: seq strict par(N)"
+                 workloads: {}\n\
+                 modes: seq strict par(N)",
+                registry.names().join(" ")
             );
             Ok(())
         }

@@ -1,0 +1,585 @@
+//! The open workload-plugin API: [`StreamWorkload`], [`WorkloadCtx`],
+//! and the parameter machinery.
+//!
+//! Before this module the coordinator served exactly the scenarios a
+//! closed `Workload` enum enumerated: adding an algorithm meant editing
+//! the enum, a nine-arm dispatch `match` in the router, the verifier,
+//! the backend picker, and the bench harness. The paper's claim is the
+//! opposite of that shape — Future-substitution parallelizes *any*
+//! algorithm expressible as a Stream computation — so the workload
+//! surface is now a trait:
+//!
+//! * [`StreamWorkload`] — name, parameter schema, `run`, `verify`, and
+//!   optional backend/cost hooks. One implementation covers a *family*
+//!   of scenarios via [`Params`] (`primes`/`primes_x3`/`primes_chunked`
+//!   are three registrations of one sieve plugin).
+//! * [`WorkloadCtx`] — everything a plugin may draw from the shard that
+//!   executes it: warm `par(k)` executor pools, the memoized
+//!   chunk-probe [`CostCache`]s, the block multiplier/siever backends,
+//!   and the configured [`Sizes`]. Plugins never see the coordinator.
+//! * [`EvalBody`] + [`WorkloadCtx::run_mode`] — the paper's
+//!   substitution as a library call: write one body generic over
+//!   `E: Eval` and the requested [`Mode`] selects `Lazy`, `Strict`, or
+//!   `Future`-on-a-warm-pool.
+//!
+//! Registration happens in a
+//! [`WorkloadRegistry`](super::WorkloadRegistry); the coordinator
+//! dispatches by *name*, so a new algorithm ships without touching
+//! config, router, verifier, or bench code (see `workload::extra` for
+//! two workloads added exactly that way).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::config::{ChunkPolicy, Mode};
+use crate::exec::{Executor, ExecutorConfig};
+use crate::poly::{BlockMultiplier, Coeff, Polynomial};
+use crate::sieve::BlockSiever;
+use crate::stream::CostCache;
+use crate::susp::{Eval, FutureEval, LazyEval, StrictEval};
+
+use super::Sizes;
+
+/// Error raised by workload parsing, validation, registration, or
+/// execution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkloadError {
+    pub message: String,
+}
+
+impl WorkloadError {
+    pub fn new(message: impl Into<String>) -> WorkloadError {
+        WorkloadError { message: message.into() }
+    }
+}
+
+impl fmt::Display for WorkloadError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for WorkloadError {}
+
+/// Workload-specific result summary, used for verification and
+/// reporting. The `Primes`/`Poly` variants serve the paper's original
+/// families; `Scalar` is the open-world variant — any deterministic
+/// rendering (digest, decimal value, …) that `seq`/`strict`/`par(k)`
+/// runs of the same request must agree on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ResultDetail {
+    Primes {
+        count: usize,
+        largest: u32,
+    },
+    Poly {
+        terms: usize,
+        /// Decimal rendering of the leading coefficient (ring-agnostic).
+        leading_coeff: String,
+    },
+    Scalar {
+        /// Opaque plugin summary; must be mode-independent.
+        value: String,
+    },
+}
+
+/// The standard polynomial summary: term count + leading coefficient.
+/// Shared by the multiply plugins and anything else producing a
+/// [`Polynomial`].
+pub fn poly_detail<C: Coeff>(p: &Polynomial<C>) -> ResultDetail {
+    ResultDetail::Poly {
+        terms: p.num_terms(),
+        leading_coeff: p.leading().map(|(_, c)| c.to_string()).unwrap_or_else(|| "0".into()),
+    }
+}
+
+/// Parsed `k=v` parameters attached to a job request. Deterministically
+/// ordered (BTreeMap), so [`Params::render`] round-trips through the
+/// wire protocol and labels.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Params {
+    map: BTreeMap<String, String>,
+}
+
+impl Params {
+    pub fn new() -> Params {
+        Params::default()
+    }
+
+    /// Parse the inside of a `workload(k=v,...)` spec — comma-separated
+    /// `k=v` pairs, whitespace-tolerant, empty input allowed. Errors
+    /// name the offending piece.
+    pub fn parse(s: &str) -> Result<Params, WorkloadError> {
+        let mut params = Params::new();
+        for piece in s.split(',') {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue;
+            }
+            let (k, v) = piece.split_once('=').ok_or_else(|| {
+                WorkloadError::new(format!("bad parameter {piece:?} (want key=value)"))
+            })?;
+            let (k, v) = (k.trim(), v.trim());
+            if k.is_empty() || v.is_empty() {
+                return Err(WorkloadError::new(format!(
+                    "bad parameter {piece:?}: empty key or value"
+                )));
+            }
+            if params.map.insert(k.to_string(), v.to_string()).is_some() {
+                return Err(WorkloadError::new(format!("duplicate parameter: {k}")));
+            }
+        }
+        Ok(params)
+    }
+
+    /// Inverse of [`Params::parse`]: `"k=v,k2=v2"` in key order.
+    pub fn render(&self) -> String {
+        self.map
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    pub fn set(&mut self, key: impl Into<String>, value: impl Into<String>) {
+        self.map.insert(key.into(), value.into());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(String::as_str)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    fn typed<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        kind: &str,
+    ) -> Result<Option<T>, WorkloadError> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|_| {
+                WorkloadError::new(format!("bad value for param {key}: {v:?} (want {kind})"))
+            }),
+        }
+    }
+
+    pub fn get_u32(&self, key: &str, default: u32) -> Result<u32, WorkloadError> {
+        Ok(self.typed::<u32>(key, "u32")?.unwrap_or(default))
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, WorkloadError> {
+        Ok(self.typed::<u64>(key, "u64")?.unwrap_or(default))
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, WorkloadError> {
+        Ok(self.typed::<usize>(key, "usize")?.unwrap_or(default))
+    }
+
+    pub fn get_i64(&self, key: &str, default: i64) -> Result<i64, WorkloadError> {
+        Ok(self.typed::<i64>(key, "i64")?.unwrap_or(default))
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool, WorkloadError> {
+        Ok(self.typed::<bool>(key, "true|false")?.unwrap_or(default))
+    }
+}
+
+/// Declared type of one workload parameter (for validation and the
+/// `workloads` listings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    U32,
+    U64,
+    Usize,
+    I64,
+    Bool,
+}
+
+impl ParamKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ParamKind::U32 => "u32",
+            ParamKind::U64 => "u64",
+            ParamKind::Usize => "usize",
+            ParamKind::I64 => "i64",
+            ParamKind::Bool => "bool",
+        }
+    }
+
+    /// Parse `v` to its magnitude for range checking (`None` = type
+    /// error; [`ParamKind::Bool`] has no magnitude and returns 0).
+    fn magnitude(&self, v: &str) -> Option<u64> {
+        match self {
+            ParamKind::U32 => v.parse::<u32>().ok().map(u64::from),
+            ParamKind::U64 => v.parse::<u64>().ok(),
+            ParamKind::Usize => v.parse::<usize>().ok().map(|x| x as u64),
+            ParamKind::I64 => v.parse::<i64>().ok().map(i64::unsigned_abs),
+            ParamKind::Bool => v.parse::<bool>().ok().map(|_| 0),
+        }
+    }
+}
+
+/// Schema entry for one parameter a workload accepts. Numeric kinds
+/// carry a magnitude range enforced at submit time — the wire is open
+/// to any client, so a plugin must bound what a single request can ask
+/// for (`msort(n=u64::MAX)` must die at validation, not as an OOM on a
+/// runner thread). Default range: unbounded.
+#[derive(Debug, Clone, Copy)]
+pub struct ParamSpec {
+    pub name: &'static str,
+    pub kind: ParamKind,
+    /// Human-readable default (may describe a config-derived value).
+    pub default: &'static str,
+    pub help: &'static str,
+    /// Smallest accepted magnitude (for [`ParamKind::I64`]: of the
+    /// absolute value).
+    pub min: u64,
+    /// Largest accepted magnitude.
+    pub max: u64,
+}
+
+impl ParamSpec {
+    pub const fn new(
+        name: &'static str,
+        kind: ParamKind,
+        default: &'static str,
+        help: &'static str,
+    ) -> ParamSpec {
+        ParamSpec { name, kind, default, help, min: 0, max: u64::MAX }
+    }
+
+    /// Restrict the accepted magnitude range (inclusive).
+    pub const fn with_range(mut self, min: u64, max: u64) -> ParamSpec {
+        self.min = min;
+        self.max = max;
+        self
+    }
+
+    /// Compact rendering for listings: `name:kind=default`, plus the
+    /// accepted range when bounded.
+    pub fn render(&self) -> String {
+        let mut out = format!("{}:{}={}", self.name, self.kind.label(), self.default);
+        if self.min != 0 || self.max != u64::MAX {
+            out.push_str(&format!(" in {}..={}", self.min, self.max));
+        }
+        out
+    }
+}
+
+/// Check that every provided parameter is declared in `specs`, parses
+/// under its declared kind, and falls inside its declared range. The
+/// standard implementation behind [`StreamWorkload::validate`].
+pub fn validate_params(specs: &[ParamSpec], params: &Params) -> Result<(), WorkloadError> {
+    for (key, value) in params.iter() {
+        let Some(spec) = specs.iter().find(|s| s.name == key) else {
+            let known = specs.iter().map(|s| s.name).collect::<Vec<_>>().join(", ");
+            let known = if known.is_empty() { "none".to_string() } else { known };
+            return Err(WorkloadError::new(format!(
+                "unknown parameter: {key} (accepted: {known})"
+            )));
+        };
+        let Some(magnitude) = spec.kind.magnitude(value) else {
+            return Err(WorkloadError::new(format!(
+                "bad value for param {key}: {value:?} (want {})",
+                spec.kind.label()
+            )));
+        };
+        if magnitude < spec.min || magnitude > spec.max {
+            return Err(WorkloadError::new(format!(
+                "out of range for param {key}: {value} (want magnitude in {}..={})",
+                spec.min, spec.max
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// What a plugin may draw from the execution slot running it. The
+/// coordinator's `Shard` implements this (warm pools, shared cost
+/// caches); [`LocalResources`] is the standalone implementation for
+/// plugin unit tests and out-of-coordinator runs.
+pub trait ExecResources: Send + Sync {
+    /// A (warm, reusable) executor pool of `parallelism` workers.
+    fn executor(&self, parallelism: usize) -> Executor;
+
+    /// The memoized adaptive-chunking probe cost for `key` (created
+    /// empty on first request).
+    fn cost_cache(&self, key: &str) -> CostCache;
+}
+
+/// Self-contained [`ExecResources`]: pools and cost caches private to
+/// this instance. For plugin tests and direct harness use; inside the
+/// coordinator the shard's shared pools are used instead.
+pub struct LocalResources {
+    stack_size: usize,
+    pools: Mutex<BTreeMap<usize, Executor>>,
+    costs: Mutex<BTreeMap<String, CostCache>>,
+}
+
+impl LocalResources {
+    pub fn new() -> LocalResources {
+        LocalResources::with_stack(64 << 20)
+    }
+
+    pub fn with_stack(stack_size: usize) -> LocalResources {
+        LocalResources {
+            stack_size,
+            pools: Mutex::new(BTreeMap::new()),
+            costs: Mutex::new(BTreeMap::new()),
+        }
+    }
+}
+
+impl Default for LocalResources {
+    fn default() -> Self {
+        LocalResources::new()
+    }
+}
+
+impl ExecResources for LocalResources {
+    fn executor(&self, parallelism: usize) -> Executor {
+        let parallelism = parallelism.max(1);
+        self.pools
+            .lock()
+            .unwrap()
+            .entry(parallelism)
+            .or_insert_with(|| {
+                let mut cfg = ExecutorConfig::with_parallelism(parallelism);
+                cfg.stack_size = self.stack_size;
+                Executor::with_config(cfg)
+            })
+            .clone()
+    }
+
+    fn cost_cache(&self, key: &str) -> CostCache {
+        self.costs.lock().unwrap().entry(key.to_string()).or_default().clone()
+    }
+}
+
+/// One stream-expressed computation body, generic over the suspension
+/// strategy — the unit [`WorkloadCtx::run_mode`] dispatches. (A trait
+/// rather than a closure because Rust closures cannot be generic over a
+/// type parameter.)
+pub trait EvalBody {
+    type Out;
+    fn run<E: Eval>(self, eval: E) -> Self::Out;
+}
+
+/// Everything a plugin's `run`/`verify` may use: configured sizes, the
+/// chunking policy, the block backends, and the executing slot's
+/// resources. Built per job by the coordinator; buildable by hand (with
+/// [`LocalResources`]) everywhere else.
+pub struct WorkloadCtx<'a> {
+    pub sizes: &'a Sizes,
+    pub chunk_policy: ChunkPolicy,
+    /// Block multiplier chunked polynomial workloads use (PJRT kernel
+    /// when artifacts are loaded, pure-Rust otherwise).
+    pub multiplier: Arc<dyn BlockMultiplier>,
+    /// Block siever chunked sieve workloads use.
+    pub siever: Arc<dyn BlockSiever>,
+    res: &'a dyn ExecResources,
+}
+
+impl<'a> WorkloadCtx<'a> {
+    pub fn new(
+        sizes: &'a Sizes,
+        chunk_policy: ChunkPolicy,
+        multiplier: Arc<dyn BlockMultiplier>,
+        siever: Arc<dyn BlockSiever>,
+        res: &'a dyn ExecResources,
+    ) -> WorkloadCtx<'a> {
+        WorkloadCtx { sizes, chunk_policy, multiplier, siever, res }
+    }
+
+    /// A warm executor pool of `parallelism` workers from the executing
+    /// slot.
+    pub fn executor(&self, parallelism: usize) -> Executor {
+        self.res.executor(parallelism.max(1))
+    }
+
+    /// The slot's memoized chunk-probe cost for `key` (plugins usually
+    /// pass their [`StreamWorkload::cost_key`]).
+    pub fn cost_cache(&self, key: &str) -> CostCache {
+        self.res.cost_cache(key)
+    }
+
+    /// The paper's substitution as a library call: run one generic
+    /// stream body under the strategy `mode` selects — `Lazy` for
+    /// `seq`, `Strict` for the control, `Future` on a warm `k`-worker
+    /// pool for `par(k)`.
+    pub fn run_mode<B: EvalBody>(&self, mode: Mode, body: B) -> B::Out {
+        match mode {
+            Mode::Seq => body.run(LazyEval),
+            Mode::Strict => body.run(StrictEval),
+            Mode::Par(k) => body.run(FutureEval::new(self.executor(k))),
+        }
+    }
+}
+
+/// An algorithm expressible as a Stream computation, packaged for the
+/// coordinator. Implementations are registered in a
+/// [`WorkloadRegistry`](super::WorkloadRegistry) and dispatched by name
+/// — the coordinator carries no per-workload code.
+///
+/// Contract:
+/// * `run` must be deterministic for a given `(params, sizes)` across
+///   modes — `seq`, `strict`, and every `par(k)` return the same
+///   [`ResultDetail`] (the conformance suite enforces this).
+/// * `verify` must check against an *independent* oracle (a different
+///   algorithm, not a re-run).
+/// * Param handling must go through the declared schema: `validate` is
+///   called at submit time, before a request occupies queue capacity.
+pub trait StreamWorkload: Send + Sync + 'static {
+    /// Registry key and affinity-hash input (`primes`, `fib`, …).
+    fn name(&self) -> &str;
+
+    /// One-line description for `sfut workloads` / the serve verb.
+    fn describe(&self) -> &str;
+
+    /// Declared parameter schema (empty = no parameters accepted).
+    fn params(&self) -> Vec<ParamSpec>;
+
+    /// Execute under `mode` and summarize. Runs on a shard runner
+    /// thread (big stack); panics are caught and reported by the
+    /// coordinator.
+    fn run(
+        &self,
+        ctx: &WorkloadCtx<'_>,
+        mode: Mode,
+        params: &Params,
+    ) -> Result<ResultDetail, WorkloadError>;
+
+    /// Check `detail` against an independent oracle for the same
+    /// `params`.
+    fn verify(&self, ctx: &WorkloadCtx<'_>, params: &Params, detail: &ResultDetail) -> bool;
+
+    /// Which backend served this workload's block computations
+    /// (reported as `backend=` on the result line; `"-"` when none).
+    fn backend(&self, _ctx: &WorkloadCtx<'_>, _params: &Params) -> String {
+        "-".to_string()
+    }
+
+    /// Chunk-cost hook: the [`CostCache`] slot key this workload's
+    /// adaptive chunking memoizes under. Defaults to the workload name;
+    /// override to share or split probe costs across registrations.
+    fn cost_key(&self, _params: &Params) -> String {
+        self.name().to_string()
+    }
+
+    /// Schema-check `params` (called at submit time). The default
+    /// enforces declared-and-typed via [`validate_params`].
+    fn validate(&self, params: &Params) -> Result<(), WorkloadError> {
+        validate_params(&self.params(), params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_parse_render_roundtrip() {
+        let p = Params::parse("n=100, big_factor=7,chunked=true").unwrap();
+        assert_eq!(p.get("n"), Some("100"));
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.render(), "big_factor=7,chunked=true,n=100");
+        assert_eq!(Params::parse(&p.render()).unwrap(), p);
+        assert!(Params::parse("").unwrap().is_empty());
+        assert!(Params::parse("  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn params_parse_reports_precise_errors() {
+        let e = Params::parse("n").unwrap_err();
+        assert!(e.message.contains("want key=value"), "{e}");
+        let e = Params::parse("n=").unwrap_err();
+        assert!(e.message.contains("empty key or value"), "{e}");
+        let e = Params::parse("=5").unwrap_err();
+        assert!(e.message.contains("empty key or value"), "{e}");
+        let e = Params::parse("n=1,n=2").unwrap_err();
+        assert!(e.message.contains("duplicate parameter"), "{e}");
+    }
+
+    #[test]
+    fn typed_getters_default_and_validate() {
+        let p = Params::parse("n=12,neg=-3,flag=true").unwrap();
+        assert_eq!(p.get_u32("n", 5).unwrap(), 12);
+        assert_eq!(p.get_u32("missing", 5).unwrap(), 5);
+        assert_eq!(p.get_i64("neg", 0).unwrap(), -3);
+        assert!(p.get_bool("flag", false).unwrap());
+        assert!(p.get_u32("neg", 0).is_err());
+        let bad = Params::parse("n=many").unwrap();
+        let e = bad.get_u32("n", 0).unwrap_err();
+        assert!(e.message.contains("bad value for param n"), "{e}");
+    }
+
+    #[test]
+    fn schema_validation_rejects_unknown_and_mistyped() {
+        let specs = [
+            ParamSpec::new("n", ParamKind::U32, "20000", "bound"),
+            ParamSpec::new("chunked", ParamKind::Bool, "false", "use blocks"),
+        ];
+        validate_params(&specs, &Params::parse("n=7,chunked=true").unwrap()).unwrap();
+        let e = validate_params(&specs, &Params::parse("frobnicate=1").unwrap()).unwrap_err();
+        assert!(e.message.contains("unknown parameter"), "{e}");
+        assert!(e.message.contains("n, chunked"), "{e}");
+        let e = validate_params(&specs, &Params::parse("n=nope").unwrap()).unwrap_err();
+        assert!(e.message.contains("want u32"), "{e}");
+    }
+
+    #[test]
+    fn schema_validation_enforces_ranges() {
+        let specs = [
+            ParamSpec::new("n", ParamKind::U32, "100", "bound").with_range(1, 1000),
+            ParamSpec::new("factor", ParamKind::I64, "0", "scale").with_range(0, 1000),
+        ];
+        validate_params(&specs, &Params::parse("n=1000").unwrap()).unwrap();
+        validate_params(&specs, &Params::parse("n=1,factor=-1000").unwrap()).unwrap();
+        let e = validate_params(&specs, &Params::parse("n=1001").unwrap()).unwrap_err();
+        assert!(e.message.contains("out of range for param n"), "{e}");
+        assert!(e.message.contains("1..=1000"), "{e}");
+        let e = validate_params(&specs, &Params::parse("n=0").unwrap()).unwrap_err();
+        assert!(e.message.contains("out of range"), "{e}");
+        // I64 ranges bound the magnitude.
+        let e = validate_params(&specs, &Params::parse("factor=-1001").unwrap()).unwrap_err();
+        assert!(e.message.contains("out of range for param factor"), "{e}");
+    }
+
+    #[test]
+    fn param_spec_renders_compactly() {
+        let s = ParamSpec::new("n", ParamKind::U32, "20000", "bound");
+        assert_eq!(s.render(), "n:u32=20000");
+        let s = ParamSpec::new("n", ParamKind::U32, "20000", "bound").with_range(1, 50);
+        assert_eq!(s.render(), "n:u32=20000 in 1..=50");
+    }
+
+    #[test]
+    fn local_resources_reuse_pools_and_caches() {
+        let res = LocalResources::new();
+        let a = res.executor(2);
+        a.spawn(|| {});
+        a.wait_idle();
+        // Same parallelism → same pool (counters persist).
+        let b = res.executor(2);
+        assert_eq!(b.stats().tasks_executed, 1);
+        // Cost caches are shared per key.
+        res.cost_cache("w").get_or_measure(|| std::time::Duration::from_micros(5));
+        assert_eq!(
+            res.cost_cache("w").get(),
+            Some(std::time::Duration::from_micros(5))
+        );
+        assert_eq!(res.cost_cache("other").get(), None);
+    }
+}

@@ -1,0 +1,586 @@
+//! The paper's nine Table-1 scenarios as three [`StreamWorkload`]
+//! families.
+//!
+//! What used to be nine enum variants (and a nine-arm router `match`)
+//! is three plugin types × a handful of registrations:
+//!
+//! * [`SieveWorkload`] — the §5 trial-division sieve (`primes`,
+//!   `primes_x3`) and the §7 block-granular variant (`primes_chunked`).
+//!   Param: `n` (sieve bound).
+//! * [`PolyMulWorkload`] — the §6 stream multiply (`stream`,
+//!   `stream_big`) and the §7 chunked improvement (`chunked`,
+//!   `chunked_big`). Params: `degree`, `big_factor` (0 = machine-word
+//!   coefficients), `chunked` (override the registration's algorithm).
+//! * [`ListMulWorkload`] — the data-parallel collections baseline
+//!   (`list`, `list_big`). Params: `degree`, `big_factor`.
+//!
+//! Every body is written once over `E: Eval` (an [`EvalBody`]) and
+//! dispatched by [`WorkloadCtx::run_mode`]; verification recomputes the
+//! oracle for the *effective* parameters, so `stream(degree=3)` and
+//! `stream` verify against different products.
+
+use std::sync::Arc;
+
+use crate::config::{ChunkPolicy, Mode};
+use crate::poly::{
+    chunked_times, chunked_times_adaptive_cached, list_times_par, list_times_seq, stream_times,
+    BlockMultiplier, Coeff, Polynomial,
+};
+use crate::sieve;
+use crate::sieve::BlockSiever;
+use crate::stream::CostCache;
+use crate::susp::Eval;
+
+use super::api::{
+    poly_detail, EvalBody, ParamKind, ParamSpec, Params, ResultDetail, StreamWorkload,
+    WorkloadCtx, WorkloadError,
+};
+use super::registry::WorkloadRegistry;
+use super::{fateman_pair, fateman_pair_big};
+
+/// Register the paper's nine scenarios into `reg`.
+pub fn register_paper_workloads(reg: &mut WorkloadRegistry) -> Result<(), WorkloadError> {
+    reg.register(Arc::new(SieveWorkload::plain(
+        "primes",
+        1,
+        "trial-division stream sieve below n (the paper's deliberately naive §5 sieve)",
+    )))?;
+    reg.register(Arc::new(SieveWorkload::plain(
+        "primes_x3",
+        3,
+        "the stream sieve at three times the configured bound",
+    )))?;
+    reg.register(Arc::new(SieveWorkload::chunked(
+        "primes_chunked",
+        "block-granular sieve (§7 improvement; kernel-offloadable)",
+    )))?;
+    reg.register(Arc::new(PolyMulWorkload::new(
+        "stream",
+        false,
+        false,
+        "Fateman product via the stream algorithm, machine-word coefficients",
+    )))?;
+    reg.register(Arc::new(PolyMulWorkload::new(
+        "stream_big",
+        false,
+        true,
+        "stream multiply with big coefficients (x big_factor)",
+    )))?;
+    reg.register(Arc::new(PolyMulWorkload::new(
+        "chunked",
+        true,
+        false,
+        "blocked stream multiply (§7 improvement; kernel-offloadable)",
+    )))?;
+    reg.register(Arc::new(PolyMulWorkload::new(
+        "chunked_big",
+        true,
+        true,
+        "blocked stream multiply with big coefficients",
+    )))?;
+    reg.register(Arc::new(ListMulWorkload::new(
+        "list",
+        false,
+        "parallel-collections baseline multiply",
+    )))?;
+    reg.register(Arc::new(ListMulWorkload::new(
+        "list_big",
+        true,
+        "baseline multiply with big coefficients",
+    )))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// sieve family
+// ---------------------------------------------------------------------
+
+/// The prime-sieve family: plain stream sieve or §7 chunked blocks.
+pub struct SieveWorkload {
+    name: &'static str,
+    describe: &'static str,
+    /// Default bound = `sizes.primes_n × n_mult` (the `_x3` knob).
+    n_mult: u32,
+    chunked: bool,
+}
+
+impl SieveWorkload {
+    pub fn plain(name: &'static str, n_mult: u32, describe: &'static str) -> SieveWorkload {
+        SieveWorkload { name, describe, n_mult, chunked: false }
+    }
+
+    pub fn chunked(name: &'static str, describe: &'static str) -> SieveWorkload {
+        SieveWorkload { name, describe, n_mult: 1, chunked: true }
+    }
+
+    fn effective_n(&self, ctx: &WorkloadCtx<'_>, params: &Params) -> Result<u32, WorkloadError> {
+        params.get_u32("n", ctx.sizes.primes_n.saturating_mul(self.n_mult))
+    }
+}
+
+struct PlainSieveBody {
+    n: u32,
+}
+
+impl EvalBody for PlainSieveBody {
+    type Out = Vec<u32>;
+
+    fn run<E: Eval>(self, eval: E) -> Vec<u32> {
+        sieve::primes(eval, self.n)
+    }
+}
+
+struct ChunkedSieveBody {
+    n: u32,
+    chunk: usize,
+    policy: ChunkPolicy,
+    siever: Arc<dyn BlockSiever>,
+    cost: CostCache,
+}
+
+impl EvalBody for ChunkedSieveBody {
+    type Out = Vec<u32>;
+
+    fn run<E: Eval>(self, eval: E) -> Vec<u32> {
+        match self.policy {
+            ChunkPolicy::Fixed => {
+                sieve::chunked_primes_with_runtime(eval, self.n, self.chunk, self.siever)
+            }
+            ChunkPolicy::Adaptive => {
+                sieve::chunked_primes_adaptive_cached(eval, self.n, self.siever, &self.cost)
+            }
+        }
+    }
+}
+
+impl StreamWorkload for SieveWorkload {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn describe(&self) -> &str {
+        self.describe
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        // Bounded: the Eratosthenes oracle allocates O(n) — a wire
+        // request must not be able to ask for an arbitrary allocation.
+        vec![ParamSpec::new(
+            "n",
+            ParamKind::U32,
+            "primes_n (scaled; ×3 for primes_x3)",
+            "sieve bound (exclusive)",
+        )
+        .with_range(0, 50_000_000)]
+    }
+
+    fn run(
+        &self,
+        ctx: &WorkloadCtx<'_>,
+        mode: Mode,
+        params: &Params,
+    ) -> Result<ResultDetail, WorkloadError> {
+        let n = self.effective_n(ctx, params)?;
+        let primes = if self.chunked {
+            ctx.run_mode(
+                mode,
+                ChunkedSieveBody {
+                    n,
+                    chunk: ctx.sizes.chunk_size,
+                    policy: ctx.chunk_policy,
+                    siever: Arc::clone(&ctx.siever),
+                    cost: ctx.cost_cache(&self.cost_key(params)),
+                },
+            )
+        } else {
+            ctx.run_mode(mode, PlainSieveBody { n })
+        };
+        Ok(ResultDetail::Primes {
+            count: primes.len(),
+            largest: primes.last().copied().unwrap_or(0),
+        })
+    }
+
+    fn verify(&self, ctx: &WorkloadCtx<'_>, params: &Params, detail: &ResultDetail) -> bool {
+        let Ok(n) = self.effective_n(ctx, params) else {
+            return false;
+        };
+        let oracle = sieve::eratosthenes(n);
+        matches!(detail, ResultDetail::Primes { count, largest }
+            if oracle.len() == *count && oracle.last().copied().unwrap_or(0) == *largest)
+    }
+
+    fn backend(&self, ctx: &WorkloadCtx<'_>, _params: &Params) -> String {
+        if self.chunked {
+            ctx.siever.name().to_string()
+        } else {
+            "-".to_string()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fateman-product shared pieces (stream-multiply + list families)
+// ---------------------------------------------------------------------
+
+/// Effective `(degree, big_factor)` for a Fateman-product workload
+/// after param overrides; factor 0 selects the machine-word ring.
+fn fateman_effective(
+    ctx: &WorkloadCtx<'_>,
+    params: &Params,
+    big_default: bool,
+) -> Result<(u32, i64), WorkloadError> {
+    let degree = params.get_u32("degree", ctx.sizes.fateman_degree)?;
+    if degree == 0 {
+        return Err(WorkloadError::new("degree must be >= 1"));
+    }
+    let default_factor = if big_default { ctx.sizes.big_factor } else { 0 };
+    Ok((degree, params.get_i64("big_factor", default_factor)?))
+}
+
+/// The independent oracle every Fateman family verifies against:
+/// classical multiplication of the same effective pair.
+fn fateman_oracle(vars: usize, degree: u32, factor: i64) -> ResultDetail {
+    if factor == 0 {
+        let (p, q) = fateman_pair(vars, degree);
+        poly_detail(&p.mul(&q))
+    } else {
+        let (p, q) = fateman_pair_big(vars, degree, factor);
+        poly_detail(&p.mul(&q))
+    }
+}
+
+/// Shared `degree`/`big_factor` schema for the Fateman families. The
+/// degree cap bounds the O(terms²) product a single request can demand
+/// (degree 24 over 4 vars ≈ 20k terms already).
+fn fateman_param_specs(factor_default: &'static str) -> Vec<ParamSpec> {
+    vec![
+        ParamSpec::new(
+            "degree",
+            ParamKind::U32,
+            "fateman_degree (scaled)",
+            "Fateman exponent k in (1+Σx)^k",
+        )
+        .with_range(1, 24),
+        ParamSpec::new(
+            "big_factor",
+            ParamKind::I64,
+            factor_default,
+            "coefficient scale; 0 = machine words, else BigInt × factor",
+        ),
+    ]
+}
+
+// ---------------------------------------------------------------------
+// stream-multiply family
+// ---------------------------------------------------------------------
+
+/// The Fateman-product family over the stream algorithm (§6) or the §7
+/// chunked improvement, with machine-word or big coefficients.
+pub struct PolyMulWorkload {
+    name: &'static str,
+    describe: &'static str,
+    chunked: bool,
+    big: bool,
+}
+
+impl PolyMulWorkload {
+    pub fn new(
+        name: &'static str,
+        chunked: bool,
+        big: bool,
+        describe: &'static str,
+    ) -> PolyMulWorkload {
+        PolyMulWorkload { name, describe, chunked, big }
+    }
+
+    /// `(degree, big_factor, chunked)` after param overrides; factor 0
+    /// selects the machine-word ring.
+    fn effective(
+        &self,
+        ctx: &WorkloadCtx<'_>,
+        params: &Params,
+    ) -> Result<(u32, i64, bool), WorkloadError> {
+        let (degree, factor) = fateman_effective(ctx, params, self.big)?;
+        Ok((degree, factor, params.get_bool("chunked", self.chunked)?))
+    }
+
+    fn multiply<C: Coeff>(
+        &self,
+        ctx: &WorkloadCtx<'_>,
+        mode: Mode,
+        chunked: bool,
+        params: &Params,
+        p: &Polynomial<C>,
+        q: &Polynomial<C>,
+    ) -> Polynomial<C> {
+        if chunked {
+            ctx.run_mode(
+                mode,
+                ChunkedTimesBody {
+                    p,
+                    q,
+                    chunk: ctx.sizes.chunk_size,
+                    policy: ctx.chunk_policy,
+                    mult: Arc::clone(&ctx.multiplier),
+                    cost: ctx.cost_cache(&self.cost_key(params)),
+                },
+            )
+        } else {
+            ctx.run_mode(mode, StreamTimesBody { p, q })
+        }
+    }
+}
+
+struct StreamTimesBody<'a, C: Coeff> {
+    p: &'a Polynomial<C>,
+    q: &'a Polynomial<C>,
+}
+
+impl<C: Coeff> EvalBody for StreamTimesBody<'_, C> {
+    type Out = Polynomial<C>;
+
+    fn run<E: Eval>(self, eval: E) -> Polynomial<C> {
+        stream_times(&eval, self.p, self.q)
+    }
+}
+
+struct ChunkedTimesBody<'a, C: Coeff> {
+    p: &'a Polynomial<C>,
+    q: &'a Polynomial<C>,
+    chunk: usize,
+    policy: ChunkPolicy,
+    mult: Arc<dyn BlockMultiplier>,
+    cost: CostCache,
+}
+
+impl<C: Coeff> EvalBody for ChunkedTimesBody<'_, C> {
+    type Out = Polynomial<C>;
+
+    fn run<E: Eval>(self, eval: E) -> Polynomial<C> {
+        match self.policy {
+            ChunkPolicy::Fixed => chunked_times(&eval, self.p, self.q, self.chunk, self.mult),
+            ChunkPolicy::Adaptive => {
+                chunked_times_adaptive_cached(&eval, self.p, self.q, self.mult, &self.cost)
+            }
+        }
+    }
+}
+
+impl StreamWorkload for PolyMulWorkload {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn describe(&self) -> &str {
+        self.describe
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        let mut specs = fateman_param_specs("0 (big_factor for _big registrations)");
+        specs.push(ParamSpec::new(
+            "chunked",
+            ParamKind::Bool,
+            "per registration",
+            "use the §7 blocked algorithm",
+        ));
+        specs
+    }
+
+    fn run(
+        &self,
+        ctx: &WorkloadCtx<'_>,
+        mode: Mode,
+        params: &Params,
+    ) -> Result<ResultDetail, WorkloadError> {
+        let (degree, factor, chunked) = self.effective(ctx, params)?;
+        let vars = ctx.sizes.fateman_vars;
+        if factor == 0 {
+            let (p, q) = fateman_pair(vars, degree);
+            Ok(poly_detail(&self.multiply(ctx, mode, chunked, params, &p, &q)))
+        } else {
+            let (p, q) = fateman_pair_big(vars, degree, factor);
+            Ok(poly_detail(&self.multiply(ctx, mode, chunked, params, &p, &q)))
+        }
+    }
+
+    fn verify(&self, ctx: &WorkloadCtx<'_>, params: &Params, detail: &ResultDetail) -> bool {
+        let Ok((degree, factor, _)) = self.effective(ctx, params) else {
+            return false;
+        };
+        fateman_oracle(ctx.sizes.fateman_vars, degree, factor) == *detail
+    }
+
+    fn backend(&self, ctx: &WorkloadCtx<'_>, params: &Params) -> String {
+        match self.effective(ctx, params) {
+            Ok((_, _, true)) => ctx.multiplier.name().to_string(),
+            _ => "-".to_string(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// list baseline family
+// ---------------------------------------------------------------------
+
+/// The parallel-collections control: classical multiply, data-parallel
+/// under `par(k)`. Not stream-expressed — it exists to be measured
+/// against, so it dispatches on [`Mode`] directly instead of an
+/// [`EvalBody`].
+pub struct ListMulWorkload {
+    name: &'static str,
+    describe: &'static str,
+    big: bool,
+}
+
+impl ListMulWorkload {
+    pub fn new(name: &'static str, big: bool, describe: &'static str) -> ListMulWorkload {
+        ListMulWorkload { name, describe, big }
+    }
+
+    fn multiply<C: Coeff>(
+        &self,
+        ctx: &WorkloadCtx<'_>,
+        mode: Mode,
+        p: &Polynomial<C>,
+        q: &Polynomial<C>,
+    ) -> Polynomial<C> {
+        match mode {
+            Mode::Seq | Mode::Strict => list_times_seq(p, q),
+            Mode::Par(k) => list_times_par(&ctx.executor(k), p, q),
+        }
+    }
+}
+
+impl StreamWorkload for ListMulWorkload {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn describe(&self) -> &str {
+        self.describe
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        fateman_param_specs("0 (big_factor for list_big)")
+    }
+
+    fn run(
+        &self,
+        ctx: &WorkloadCtx<'_>,
+        mode: Mode,
+        params: &Params,
+    ) -> Result<ResultDetail, WorkloadError> {
+        let (degree, factor) = fateman_effective(ctx, params, self.big)?;
+        let vars = ctx.sizes.fateman_vars;
+        if factor == 0 {
+            let (p, q) = fateman_pair(vars, degree);
+            Ok(poly_detail(&self.multiply(ctx, mode, &p, &q)))
+        } else {
+            let (p, q) = fateman_pair_big(vars, degree, factor);
+            Ok(poly_detail(&self.multiply(ctx, mode, &p, &q)))
+        }
+    }
+
+    fn verify(&self, ctx: &WorkloadCtx<'_>, params: &Params, detail: &ResultDetail) -> bool {
+        let Ok((degree, factor)) = fateman_effective(ctx, params, self.big) else {
+            return false;
+        };
+        fateman_oracle(ctx.sizes.fateman_vars, degree, factor) == *detail
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::poly::RustMultiplier;
+    use crate::sieve::RustSiever;
+    use crate::workload::{LocalResources, Sizes};
+
+    fn small_sizes() -> Sizes {
+        let mut cfg = Config::default();
+        cfg.primes_n = 200;
+        cfg.fateman_degree = 2;
+        cfg.chunk_size = 16;
+        Sizes::from_config(&cfg)
+    }
+
+    fn ctx<'a>(sizes: &'a Sizes, res: &'a LocalResources) -> WorkloadCtx<'a> {
+        WorkloadCtx::new(
+            sizes,
+            ChunkPolicy::Adaptive,
+            Arc::new(RustMultiplier),
+            Arc::new(RustSiever),
+            res,
+        )
+    }
+
+    #[test]
+    fn sieve_family_runs_and_verifies_outside_the_coordinator() {
+        let sizes = small_sizes();
+        let res = LocalResources::new();
+        let ctx = ctx(&sizes, &res);
+        let w = SieveWorkload::plain("primes", 1, "t");
+        let detail = w.run(&ctx, Mode::Seq, &Params::new()).unwrap();
+        assert!(w.verify(&ctx, &Params::new(), &detail));
+        assert_eq!(detail, ResultDetail::Primes { count: 46, largest: 199 });
+        // Param override re-aims both run and oracle.
+        let p = Params::parse("n=50").unwrap();
+        let detail = w.run(&ctx, Mode::Par(2), &p).unwrap();
+        assert_eq!(detail, ResultDetail::Primes { count: 15, largest: 47 });
+        assert!(w.verify(&ctx, &p, &detail));
+        assert!(!w.verify(&ctx, &Params::new(), &detail), "wrong params must fail verify");
+        assert_eq!(w.backend(&ctx, &Params::new()), "-");
+    }
+
+    #[test]
+    fn chunked_sieve_reports_its_siever_backend() {
+        let sizes = small_sizes();
+        let res = LocalResources::new();
+        let ctx = ctx(&sizes, &res);
+        let w = SieveWorkload::chunked("primes_chunked", "t");
+        let detail = w.run(&ctx, Mode::Par(2), &Params::new()).unwrap();
+        assert!(w.verify(&ctx, &Params::new(), &detail));
+        assert_eq!(w.backend(&ctx, &Params::new()), "rust-scalar");
+    }
+
+    #[test]
+    fn poly_family_modes_agree_and_chunked_param_switches_algorithm() {
+        let sizes = small_sizes();
+        let res = LocalResources::new();
+        let ctx = ctx(&sizes, &res);
+        let w = PolyMulWorkload::new("stream", false, false, "t");
+        let seq = w.run(&ctx, Mode::Seq, &Params::new()).unwrap();
+        let par = w.run(&ctx, Mode::Par(2), &Params::new()).unwrap();
+        let strict = w.run(&ctx, Mode::Strict, &Params::new()).unwrap();
+        assert_eq!(seq, par);
+        assert_eq!(seq, strict);
+        assert!(w.verify(&ctx, &Params::new(), &seq));
+        // chunked=true flips algorithm and backend, not the result.
+        let p = Params::parse("chunked=true").unwrap();
+        let chunked = w.run(&ctx, Mode::Par(2), &p).unwrap();
+        assert_eq!(chunked, seq);
+        assert_eq!(w.backend(&ctx, &p), "rust-scalar");
+        assert_eq!(w.backend(&ctx, &Params::new()), "-");
+        // big_factor switches the ring; detail differs, verify follows.
+        let pb = Params::parse("big_factor=100000000001").unwrap();
+        let big = w.run(&ctx, Mode::Seq, &pb).unwrap();
+        assert_ne!(big, seq);
+        assert!(w.verify(&ctx, &pb, &big));
+    }
+
+    #[test]
+    fn list_family_baseline_verifies_under_all_modes() {
+        let sizes = small_sizes();
+        let res = LocalResources::new();
+        let ctx = ctx(&sizes, &res);
+        let w = ListMulWorkload::new("list", false, "t");
+        for mode in [Mode::Seq, Mode::Strict, Mode::Par(2)] {
+            let detail = w.run(&ctx, mode, &Params::new()).unwrap();
+            assert!(w.verify(&ctx, &Params::new(), &detail), "{mode:?}");
+        }
+        let e = w.run(&ctx, Mode::Seq, &Params::parse("degree=0").unwrap()).unwrap_err();
+        assert!(e.message.contains("degree"), "{e}");
+    }
+}

@@ -1,0 +1,341 @@
+//! Post-enum workloads: scenarios added through the public plugin API
+//! alone.
+//!
+//! These two plugins are the existence proof for the open workload
+//! surface: they implement [`StreamWorkload`] against the exported API
+//! (streams, `BigInt`, `Params`, [`WorkloadCtx`]) and are *registered*
+//! — no coordinator, config, router, verifier, or bench-harness code
+//! changed to ship them.
+//!
+//! * [`FibWorkload`] (`fib`) — a big-integer Fibonacci stream: the
+//!   first `n` Fibonacci numbers as a monadic stream (one suspension
+//!   per element, so `par(k)` pipelines the BigInt additions exactly
+//!   like the paper's Figure 1 cascade), folded into their sum.
+//!   Oracle: an independent iterative loop.
+//! * [`MergeSortWorkload`] (`msort`) — streaming merge sort over the
+//!   existing `merge_sorted` combinator: a deterministic xorshift input
+//!   is split into singleton streams and merged pairwise; under
+//!   `Future` every merge level runs as suspended tasks. Oracle:
+//!   `slice::sort_unstable` on the same input.
+
+use std::sync::Arc;
+
+use crate::bigint::BigInt;
+use crate::config::Mode;
+use crate::stream::Stream;
+use crate::susp::Eval;
+
+use super::api::{
+    EvalBody, ParamKind, ParamSpec, Params, ResultDetail, StreamWorkload, WorkloadCtx,
+    WorkloadError,
+};
+use super::registry::WorkloadRegistry;
+
+/// Register the `fib` and `msort` plugins into `reg`.
+pub fn register_extra_workloads(reg: &mut WorkloadRegistry) -> Result<(), WorkloadError> {
+    reg.register(Arc::new(FibWorkload))?;
+    reg.register(Arc::new(MergeSortWorkload))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// fib — big-integer Fibonacci stream
+// ---------------------------------------------------------------------
+
+/// Big-integer Fibonacci via a monadic stream; detail = decimal sum of
+/// the first `n` Fibonacci numbers (F(0)=0, F(1)=1).
+pub struct FibWorkload;
+
+struct FibBody {
+    n: u32,
+}
+
+impl EvalBody for FibBody {
+    type Out = BigInt;
+
+    fn run<E: Eval>(self, eval: E) -> BigInt {
+        // One cons cell per Fibonacci number: under Future the whole
+        // cascade of BigInt additions is scheduled at construction.
+        let s: Stream<BigInt, E> = Stream::unfold(
+            eval,
+            (BigInt::zero(), BigInt::one(), self.n),
+            |state: &mut (BigInt, BigInt, u32)| {
+                if state.2 == 0 {
+                    return None;
+                }
+                state.2 -= 1;
+                let next = &state.0 + &state.1;
+                let out = std::mem::replace(&mut state.0, std::mem::replace(&mut state.1, next));
+                Some(out)
+            },
+        );
+        s.fold(BigInt::zero(), |acc, x| &acc + x)
+    }
+}
+
+/// Independent oracle: plain iterative accumulation.
+fn fib_sum_iterative(n: u32) -> BigInt {
+    let mut a = BigInt::zero();
+    let mut b = BigInt::one();
+    let mut sum = BigInt::zero();
+    for _ in 0..n {
+        sum = &sum + &a;
+        let next = &a + &b;
+        a = std::mem::replace(&mut b, next);
+    }
+    sum
+}
+
+impl FibWorkload {
+    fn effective_n(&self, ctx: &WorkloadCtx<'_>, params: &Params) -> Result<u32, WorkloadError> {
+        params.get_u32("n", ctx.sizes.fib_n)
+    }
+}
+
+impl StreamWorkload for FibWorkload {
+    fn name(&self) -> &str {
+        "fib"
+    }
+
+    fn describe(&self) -> &str {
+        "big-integer Fibonacci stream: sum of the first n Fibonacci numbers"
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        // Bounded: F(n) has Θ(n) digits, so the sum costs Θ(n²) limb
+        // operations — a wire request must not buy unbounded compute.
+        vec![ParamSpec::new(
+            "n",
+            ParamKind::U32,
+            "512 (scaled)",
+            "how many Fibonacci numbers to stream",
+        )
+        .with_range(0, 10_000)]
+    }
+
+    fn run(
+        &self,
+        ctx: &WorkloadCtx<'_>,
+        mode: Mode,
+        params: &Params,
+    ) -> Result<ResultDetail, WorkloadError> {
+        let n = self.effective_n(ctx, params)?;
+        let sum = ctx.run_mode(mode, FibBody { n });
+        Ok(ResultDetail::Scalar { value: sum.to_string() })
+    }
+
+    fn verify(&self, ctx: &WorkloadCtx<'_>, params: &Params, detail: &ResultDetail) -> bool {
+        let Ok(n) = self.effective_n(ctx, params) else {
+            return false;
+        };
+        matches!(detail, ResultDetail::Scalar { value }
+            if *value == fib_sum_iterative(n).to_string())
+    }
+}
+
+// ---------------------------------------------------------------------
+// msort — streaming merge sort
+// ---------------------------------------------------------------------
+
+/// Streaming merge sort over `Stream::merge_sorted`; detail = element
+/// count plus an order-sensitive FNV-1a digest of the sorted sequence.
+pub struct MergeSortWorkload;
+
+const MSORT_DEFAULT_SEED: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// Deterministic input: xorshift64* sequence from `seed`.
+fn msort_input(n: usize, seed: u64) -> Vec<u64> {
+    // xorshift state must be nonzero; 0 falls back to the default seed.
+    let mut x = if seed == 0 { MSORT_DEFAULT_SEED } else { seed };
+    (0..n)
+        .map(|_| {
+            x ^= x >> 12;
+            x ^= x << 25;
+            x ^= x >> 27;
+            x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+        })
+        .collect()
+}
+
+/// Order-sensitive FNV-1a over the sequence.
+fn digest(items: &[u64]) -> u64 {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for &v in items {
+        for b in v.to_le_bytes() {
+            hash ^= b as u64;
+            hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    hash
+}
+
+fn msort_stream<E: Eval>(eval: E, items: &[u64]) -> Stream<u64, E> {
+    match items.len() {
+        0 => Stream::Empty,
+        1 => Stream::singleton(eval, items[0]),
+        len => {
+            let (lo, hi) = items.split_at(len / 2);
+            let left = msort_stream(eval.clone(), lo);
+            let right = msort_stream(eval, hi);
+            left.merge_sorted(&right, |a, b| a.cmp(b))
+        }
+    }
+}
+
+struct MsortBody {
+    items: Vec<u64>,
+}
+
+impl EvalBody for MsortBody {
+    type Out = Vec<u64>;
+
+    fn run<E: Eval>(self, eval: E) -> Vec<u64> {
+        msort_stream(eval, &self.items).to_vec()
+    }
+}
+
+impl MergeSortWorkload {
+    fn effective(
+        &self,
+        ctx: &WorkloadCtx<'_>,
+        params: &Params,
+    ) -> Result<(usize, u64), WorkloadError> {
+        let n = params.get_usize("n", ctx.sizes.msort_n)?;
+        let seed = params.get_u64("seed", MSORT_DEFAULT_SEED)?;
+        Ok((n, seed))
+    }
+}
+
+impl StreamWorkload for MergeSortWorkload {
+    fn name(&self) -> &str {
+        "msort"
+    }
+
+    fn describe(&self) -> &str {
+        "streaming merge sort of a deterministic pseudo-random sequence"
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![
+            // Bounded: the input vec and the stream spine are O(n)
+            // allocations driven straight from the wire.
+            ParamSpec::new("n", ParamKind::Usize, "4096 (scaled)", "elements to sort")
+                .with_range(0, 1_000_000),
+            // Decimal (= 0x9e3779b97f4a7c15): the u64 parser is
+            // decimal-only, so the advertised default must replay as-is.
+            ParamSpec::new("seed", ParamKind::U64, "11400714819323198485", "input PRNG seed"),
+        ]
+    }
+
+    fn run(
+        &self,
+        ctx: &WorkloadCtx<'_>,
+        mode: Mode,
+        params: &Params,
+    ) -> Result<ResultDetail, WorkloadError> {
+        let (n, seed) = self.effective(ctx, params)?;
+        let sorted = ctx.run_mode(mode, MsortBody { items: msort_input(n, seed) });
+        if sorted.len() != n {
+            return Err(WorkloadError::new(format!(
+                "merge sort lost elements: {} of {n}",
+                sorted.len()
+            )));
+        }
+        Ok(ResultDetail::Scalar { value: format!("{:016x}/{n}", digest(&sorted)) })
+    }
+
+    fn verify(&self, ctx: &WorkloadCtx<'_>, params: &Params, detail: &ResultDetail) -> bool {
+        let Ok((n, seed)) = self.effective(ctx, params) else {
+            return false;
+        };
+        let mut oracle = msort_input(n, seed);
+        oracle.sort_unstable();
+        matches!(detail, ResultDetail::Scalar { value }
+            if *value == format!("{:016x}/{n}", digest(&oracle)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChunkPolicy, Config};
+    use crate::poly::RustMultiplier;
+    use crate::sieve::RustSiever;
+    use crate::susp::LazyEval;
+    use crate::workload::{LocalResources, Sizes};
+
+    fn sizes() -> Sizes {
+        let mut cfg = Config::default();
+        cfg.scale = 0.05;
+        Sizes::from_config(&cfg)
+    }
+
+    fn ctx<'a>(sizes: &'a Sizes, res: &'a LocalResources) -> WorkloadCtx<'a> {
+        WorkloadCtx::new(
+            sizes,
+            ChunkPolicy::Adaptive,
+            Arc::new(RustMultiplier),
+            Arc::new(RustSiever),
+            res,
+        )
+    }
+
+    #[test]
+    fn fib_sum_matches_known_values() {
+        // F(0..10) = 0 1 1 2 3 5 8 13 21 34 → sum 88.
+        assert_eq!(fib_sum_iterative(10).to_string(), "88");
+        assert_eq!(fib_sum_iterative(0).to_string(), "0");
+        let sizes = sizes();
+        let res = LocalResources::new();
+        let ctx = ctx(&sizes, &res);
+        let w = FibWorkload;
+        let p = Params::parse("n=10").unwrap();
+        for mode in [Mode::Seq, Mode::Strict, Mode::Par(2)] {
+            let detail = w.run(&ctx, mode, &p).unwrap();
+            assert_eq!(detail, ResultDetail::Scalar { value: "88".into() }, "{mode:?}");
+            assert!(w.verify(&ctx, &p, &detail));
+        }
+        // Big enough to overflow machine words: F(100) has 21 digits.
+        let p = Params::parse("n=101").unwrap();
+        let detail = w.run(&ctx, Mode::Seq, &p).unwrap();
+        assert!(w.verify(&ctx, &p, &detail));
+        match &detail {
+            ResultDetail::Scalar { value } => assert!(value.len() > 19, "not big: {value}"),
+            other => panic!("wrong detail kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn msort_stream_sorts_and_verifies_across_modes() {
+        let sizes = sizes();
+        let res = LocalResources::new();
+        let ctx = ctx(&sizes, &res);
+        let w = MergeSortWorkload;
+        let p = Params::parse("n=300,seed=42").unwrap();
+        let seq = w.run(&ctx, Mode::Seq, &p).unwrap();
+        assert!(w.verify(&ctx, &p, &seq));
+        for mode in [Mode::Strict, Mode::Par(2)] {
+            assert_eq!(w.run(&ctx, mode, &p).unwrap(), seq, "{mode:?}");
+        }
+        // Different seed → different digest, still verified.
+        let p2 = Params::parse("n=300,seed=43").unwrap();
+        let other = w.run(&ctx, Mode::Seq, &p2).unwrap();
+        assert_ne!(other, seq);
+        assert!(w.verify(&ctx, &p2, &other));
+        assert!(!w.verify(&ctx, &p, &other), "seed mismatch must fail verify");
+    }
+
+    #[test]
+    fn msort_stream_is_genuinely_sorted_and_stable_sized() {
+        let input = msort_input(257, 7);
+        let sorted = msort_stream(LazyEval, &input).to_vec();
+        assert_eq!(sorted.len(), input.len());
+        assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+        let mut oracle = input.clone();
+        oracle.sort_unstable();
+        assert_eq!(sorted, oracle);
+        // Degenerate sizes.
+        assert!(msort_stream(LazyEval, &[]).is_empty());
+        assert_eq!(msort_stream(LazyEval, &[9]).to_vec(), vec![9]);
+    }
+}

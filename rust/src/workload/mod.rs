@@ -1,10 +1,35 @@
-//! Workload generators for the paper's evaluation (§7) and our
-//! extensions.
+//! Workloads: the open plugin surface plus the paper's generators.
 //!
-//! The polynomial test case is Fateman's sparse-multiplication benchmark
-//! [2]: take `p = (1 + x + y + z + t)^k`, compute `p · (p + 1)`. The
-//! `_big` variants scale every coefficient by 100000000001 "in order to
+//! This module owns the coordinator-facing workload API:
+//!
+//! * [`StreamWorkload`] / [`WorkloadCtx`] / [`Params`] ([`api`]) — the
+//!   plugin trait, execution context, and parameter machinery;
+//! * [`WorkloadRegistry`] ([`registry`]) — the open name → plugin map
+//!   the coordinator dispatches through;
+//! * [`builtin`] — the paper's nine Table-1 scenarios as three plugin
+//!   families (sieve, stream-multiply, list baseline);
+//! * [`extra`] — workloads added through the public API alone (`fib`,
+//!   `msort`), proving the coordinator needs no edits for new
+//!   scenarios.
+//!
+//! It also keeps the shared generators: the polynomial test case is
+//! Fateman's sparse-multiplication benchmark [2] — take
+//! `p = (1 + x + y + z + t)^k`, compute `p · (p + 1)`; the `_big`
+//! variants scale every coefficient by 100000000001 "in order to
 //! increase the footprint of elementary operations".
+
+pub mod api;
+pub mod builtin;
+pub mod extra;
+pub mod registry;
+
+pub use api::{
+    poly_detail, validate_params, EvalBody, ExecResources, LocalResources, ParamKind, ParamSpec,
+    Params, ResultDetail, StreamWorkload, WorkloadCtx, WorkloadError,
+};
+pub use builtin::{ListMulWorkload, PolyMulWorkload, SieveWorkload};
+pub use extra::{FibWorkload, MergeSortWorkload};
+pub use registry::WorkloadRegistry;
 
 use crate::bigint::BigInt;
 use crate::config::Config;
@@ -37,26 +62,31 @@ pub fn fateman_pair_big(
     )
 }
 
-/// Workload sizes derived from a [`Config`] (applies `scale`).
+/// Workload sizes derived from a [`Config`] (applies `scale`). The
+/// per-plugin *defaults* — every field can be overridden per request
+/// through [`Params`].
 pub struct Sizes {
     pub primes_n: u32,
-    pub primes_x3_n: u32,
     pub fateman_vars: usize,
     pub fateman_degree: u32,
     pub big_factor: i64,
     pub chunk_size: usize,
+    /// Default Fibonacci-stream length for the `fib` workload.
+    pub fib_n: u32,
+    /// Default element count for the `msort` workload.
+    pub msort_n: usize,
 }
 
 impl Sizes {
     pub fn from_config(cfg: &Config) -> Sizes {
-        let n = cfg.scaled_primes_n();
         Sizes {
-            primes_n: n,
-            primes_x3_n: n.saturating_mul(3),
+            primes_n: cfg.scaled_primes_n(),
             fateman_vars: cfg.fateman_vars,
             fateman_degree: cfg.scaled_fateman_degree(),
             big_factor: cfg.big_factor,
             chunk_size: cfg.chunk_size,
+            fib_n: ((512.0 * cfg.scale) as u32).max(8),
+            msort_n: ((4096.0 * cfg.scale) as usize).max(16),
         }
     }
 }
@@ -131,7 +161,13 @@ mod tests {
         cfg.scale = 0.25;
         let s = Sizes::from_config(&cfg);
         assert_eq!(s.primes_n, 5000);
-        assert_eq!(s.primes_x3_n, 15000);
         assert!(s.fateman_degree < cfg.fateman_degree);
+        assert_eq!(s.fib_n, 128);
+        assert_eq!(s.msort_n, 1024);
+        // Tiny scales floor out instead of degenerating to zero.
+        cfg.scale = 0.001;
+        let s = Sizes::from_config(&cfg);
+        assert_eq!(s.fib_n, 8);
+        assert_eq!(s.msort_n, 16);
     }
 }

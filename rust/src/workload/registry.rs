@@ -1,0 +1,163 @@
+//! [`WorkloadRegistry`] — the open set of workloads a coordinator
+//! serves.
+//!
+//! The registry is the replacement for the old closed `Workload` enum's
+//! `ALL`/`parse` world: the coordinator resolves requests by name
+//! against whatever was registered, so the set of scenarios grows by
+//! *registration*, never by editing dispatch code. `builtin()` is the
+//! default population: the paper's nine Table-1 scenarios (three plugin
+//! families parameterized by [`Params`](super::Params)) plus the two
+//! post-enum workloads that shipped through this API alone
+//! ([`workload::extra`](super::extra)).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::api::{StreamWorkload, WorkloadError};
+
+/// Name → plugin map with stable (sorted) iteration order.
+pub struct WorkloadRegistry {
+    map: BTreeMap<String, Arc<dyn StreamWorkload>>,
+}
+
+impl WorkloadRegistry {
+    /// An empty registry (for fully custom populations).
+    pub fn empty() -> WorkloadRegistry {
+        WorkloadRegistry { map: BTreeMap::new() }
+    }
+
+    /// The default population: the paper's nine scenarios plus the
+    /// `fib` and `msort` extensions.
+    pub fn builtin() -> WorkloadRegistry {
+        let mut reg = WorkloadRegistry::empty();
+        super::builtin::register_paper_workloads(&mut reg)
+            .expect("builtin workload names are unique");
+        super::extra::register_extra_workloads(&mut reg)
+            .expect("extra workload names are unique");
+        reg
+    }
+
+    /// Register a plugin under its [`StreamWorkload::name`]. Duplicate
+    /// names are an error — silent shadowing would make `verify`
+    /// results ambiguous.
+    pub fn register(&mut self, workload: Arc<dyn StreamWorkload>) -> Result<(), WorkloadError> {
+        let name = workload.name().to_string();
+        if name.is_empty() || name.contains(|c: char| c.is_whitespace() || "():,=".contains(c)) {
+            return Err(WorkloadError::new(format!(
+                "invalid workload name {name:?}: must be non-empty and free of \
+                 whitespace/()/:/,/="
+            )));
+        }
+        if self.map.contains_key(&name) {
+            return Err(WorkloadError::new(format!("workload already registered: {name}")));
+        }
+        self.map.insert(name, workload);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Arc<dyn StreamWorkload>> {
+        self.map.get(name)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.map.keys().cloned().collect()
+    }
+
+    /// Registered plugins in name order.
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn StreamWorkload>> {
+        self.map.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+impl Default for WorkloadRegistry {
+    fn default() -> Self {
+        WorkloadRegistry::builtin()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Mode;
+    use crate::workload::{Params, ResultDetail, WorkloadCtx};
+
+    struct Dummy(&'static str);
+
+    impl StreamWorkload for Dummy {
+        fn name(&self) -> &str {
+            self.0
+        }
+
+        fn describe(&self) -> &str {
+            "dummy"
+        }
+
+        fn params(&self) -> Vec<crate::workload::ParamSpec> {
+            Vec::new()
+        }
+
+        fn run(
+            &self,
+            _ctx: &WorkloadCtx<'_>,
+            _mode: Mode,
+            _params: &Params,
+        ) -> Result<ResultDetail, WorkloadError> {
+            Ok(ResultDetail::Scalar { value: "0".into() })
+        }
+
+        fn verify(&self, _: &WorkloadCtx<'_>, _: &Params, _: &ResultDetail) -> bool {
+            true
+        }
+    }
+
+    #[test]
+    fn builtin_registers_paper_and_extra_workloads() {
+        let reg = WorkloadRegistry::builtin();
+        for name in [
+            "primes",
+            "primes_x3",
+            "primes_chunked",
+            "stream",
+            "stream_big",
+            "list",
+            "list_big",
+            "chunked",
+            "chunked_big",
+            "fib",
+            "msort",
+        ] {
+            assert!(reg.contains(name), "missing builtin workload {name}");
+        }
+        assert_eq!(reg.len(), 11);
+        // Sorted, stable listing.
+        let names = reg.names();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn duplicate_and_invalid_names_are_rejected() {
+        let mut reg = WorkloadRegistry::empty();
+        reg.register(Arc::new(Dummy("ok"))).unwrap();
+        let e = reg.register(Arc::new(Dummy("ok"))).unwrap_err();
+        assert!(e.message.contains("already registered"), "{e}");
+        for bad in ["", "has space", "par(2)", "a:b", "a,b", "a=b"] {
+            assert!(reg.register(Arc::new(Dummy(bad))).is_err(), "name {bad:?} must be rejected");
+        }
+        assert_eq!(reg.len(), 1);
+    }
+}

@@ -5,7 +5,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use stream_future::config::{Config, Mode, Workload};
+use stream_future::config::{Config, Mode};
 use stream_future::coordinator::{serve, JobRequest, Pipeline};
 use stream_future::poly::{chunked_times, RustMultiplier};
 use stream_future::prelude::*;
@@ -35,17 +35,13 @@ fn pipeline_with_kernel_runs_chunked_workloads() {
     let pipeline = Pipeline::new(test_config()).unwrap();
     assert!(pipeline.engine().is_some(), "engine must start when artifacts exist");
     for mode in [Mode::Seq, Mode::Par(2)] {
-        let res = pipeline
-            .run(&JobRequest { workload: Workload::Chunked, mode })
-            .unwrap();
+        let res = pipeline.run(&JobRequest::named("chunked", mode)).unwrap();
         assert!(res.verified, "chunked {mode:?} failed verification");
         assert_eq!(res.backend, "pjrt-kernel");
     }
     // The big variant is f64-inexact → generic path, still through the
     // same chunked code, still verified.
-    let res = pipeline
-        .run(&JobRequest { workload: Workload::ChunkedBig, mode: Mode::Par(2) })
-        .unwrap();
+    let res = pipeline.run(&JobRequest::named("chunked_big", Mode::Par(2))).unwrap();
     assert!(res.verified);
     let stats = pipeline.engine().unwrap().stats();
     assert!(stats.poly_calls > 0, "kernel must actually be invoked");
@@ -114,9 +110,7 @@ fn pipeline_without_kernel_falls_back() {
     cfg.use_kernel = false;
     let pipeline = Pipeline::new(cfg).unwrap();
     assert!(pipeline.engine().is_none());
-    let res = pipeline
-        .run(&JobRequest { workload: Workload::Chunked, mode: Mode::Seq })
-        .unwrap();
+    let res = pipeline.run(&JobRequest::named("chunked", Mode::Seq)).unwrap();
     assert!(res.verified);
     assert_eq!(res.backend, "rust-scalar");
 }
