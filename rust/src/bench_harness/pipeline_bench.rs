@@ -20,6 +20,10 @@
 //! * **shed rate** — ingress submissions rejected ÷ submissions over the
 //!   cell (0 under the default `block` policy; nonzero when a `shed` or
 //!   `timeout` admission config is being benched);
+//! * **panic/retry rate** — `jobs.panicked` / `jobs.retried` deltas ÷
+//!   submissions over the cell. Production workloads must bench at 0;
+//!   [`gate`] warns when a current run shows nonzero panics on any
+//!   workload whose name doesn't mark it as deliberately faulty;
 //! * **steal counter** — the shard pools' cumulative `tasks_stolen`.
 //!
 //! Seeding discipline matches the executor trajectory: `cargo test`
@@ -107,6 +111,11 @@ pub struct WorkloadPoint {
     /// Ingress shed fraction over the whole cell (sheds ÷ submissions,
     /// warmup included; 0 under `admission = block`).
     pub shed_rate: f64,
+    /// `jobs.panicked` delta ÷ submissions over the cell. Must be 0 for
+    /// healthy workloads — the gate warns otherwise.
+    pub panic_rate: f64,
+    /// `jobs.retried` delta ÷ submissions over the cell.
+    pub retry_rate: f64,
     /// Cumulative steals across the pipeline's shard pools during this
     /// cell (warmup included).
     pub tasks_stolen: u64,
@@ -177,6 +186,8 @@ pub fn run(
             let submitted_before = counter(&pipeline, "ingress.submitted");
             let shed_before =
                 counter(&pipeline, "ingress.shed") + counter(&pipeline, "ingress.timed_out");
+            let panicked_before = counter(&pipeline, "jobs.panicked");
+            let retried_before = counter(&pipeline, "jobs.retried");
             // (latency, queue wait) pushed together so the warmup trim
             // below stays aligned.
             let samples = Mutex::new(Vec::<(Duration, Duration)>::new());
@@ -210,6 +221,9 @@ pub fn run(
             let shed = counter(&pipeline, "ingress.shed")
                 + counter(&pipeline, "ingress.timed_out")
                 - shed_before;
+            let panicked = counter(&pipeline, "jobs.panicked") - panicked_before;
+            let retried = counter(&pipeline, "jobs.retried") - retried_before;
+            let rate = |n: u64| if submitted == 0 { 0.0 } else { n as f64 / submitted as f64 };
             points.push(WorkloadPoint {
                 workload: workload.clone(),
                 shards: actual_shards,
@@ -219,7 +233,9 @@ pub fn run(
                 p95_ms: percentile_ms(&lat, 0.95),
                 queue_wait_p50_ms: percentile_ms(&waits, 0.5),
                 queue_wait_p95_ms: percentile_ms(&waits, 0.95),
-                shed_rate: if submitted == 0 { 0.0 } else { shed as f64 / submitted as f64 },
+                shed_rate: rate(shed),
+                panic_rate: rate(panicked),
+                retry_rate: rate(retried),
                 tasks_stolen: total_steals(&pipeline).saturating_sub(steals_before),
                 verified: first.verified,
             });
@@ -243,7 +259,8 @@ fn json_point(p: &WorkloadPoint) -> String {
         "    {{\"workload\": \"{}\", \"shards\": {}, \"jobs_per_sample\": {}, \
          \"jobs_per_sec\": {:.2}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
          \"queue_wait_p50_ms\": {:.3}, \"queue_wait_p95_ms\": {:.3}, \
-         \"shed_rate\": {:.4}, \"tasks_stolen\": {}, \"verified\": {}}}",
+         \"shed_rate\": {:.4}, \"panic_rate\": {:.4}, \"retry_rate\": {:.4}, \
+         \"tasks_stolen\": {}, \"verified\": {}}}",
         p.workload,
         p.shards,
         p.jobs_per_sample,
@@ -253,6 +270,8 @@ fn json_point(p: &WorkloadPoint) -> String {
         p.queue_wait_p50_ms,
         p.queue_wait_p95_ms,
         p.shed_rate,
+        p.panic_rate,
+        p.retry_rate,
         p.tasks_stolen,
         p.verified,
     )
@@ -434,6 +453,9 @@ pub fn gate(
         /// Optional: pre-ingress baselines lack the latency fields.
         p95_ms: Option<f64>,
         queue_wait_p95_ms: Option<f64>,
+        /// Optional: pre-lifecycle baselines lack the fault-rate fields.
+        panic_rate: Option<f64>,
+        retry_rate: Option<f64>,
     }
     let cell = |doc: &Json| -> Vec<CellStats> {
         doc.get("points")
@@ -447,6 +469,8 @@ pub fn gate(
                     jobs_per_sec: p.get("jobs_per_sec")?.as_f64()?,
                     p95_ms: p.get("p95_ms").and_then(Json::as_f64),
                     queue_wait_p95_ms: p.get("queue_wait_p95_ms").and_then(Json::as_f64),
+                    panic_rate: p.get("panic_rate").and_then(Json::as_f64),
+                    retry_rate: p.get("retry_rate").and_then(Json::as_f64),
                 })
             })
             .collect()
@@ -518,6 +542,24 @@ pub fn gate(
     } else {
         warnings = latency_findings;
     }
+    // Fault-health check on the *current* run alone (no baseline
+    // needed): a healthy workload panicking during a bench is a
+    // correctness smell even when throughput held. Deliberately faulty
+    // workloads (the chaos plugin and its registrations) are exempt.
+    // Always a warning — fault injection must not fail the perf gate.
+    for cur in &cur_cells {
+        if cur.workload.contains("faulty") {
+            continue;
+        }
+        if let Some(rate) = cur.panic_rate.filter(|&r| r > 0.0) {
+            let retries = cur.retry_rate.unwrap_or(0.0);
+            warnings.push(format!(
+                "{} @ {} shard(s): panic_rate {rate:.4} (retry_rate {retries:.4}) on a \
+                 non-faulty workload — jobs panicked during the bench",
+                cur.workload, cur.shards
+            ));
+        }
+    }
     if compared == 0 && regressions.is_empty() {
         return Ok(GateReport {
             outcome: GateOutcome::Skipped {
@@ -571,6 +613,8 @@ mod tests {
         assert!(b.points.iter().all(|p| p.queue_wait_p95_ms >= p.queue_wait_p50_ms));
         // Default admission is block: nothing sheds during the sweep.
         assert!(b.points.iter().all(|p| p.shed_rate == 0.0));
+        // Healthy workloads must bench fault-free.
+        assert!(b.points.iter().all(|p| p.panic_rate == 0.0 && p.retry_rate == 0.0));
         assert!(b.points.iter().all(|p| p.jobs_per_sample == 4));
         assert_eq!(b.points.iter().filter(|p| p.shards == 2).count(), 3);
 
@@ -578,6 +622,8 @@ mod tests {
         assert!(json.contains("\"bench\": \"pipeline_throughput\""));
         assert!(json.contains("queue_wait_p95_ms"));
         assert!(json.contains("shed_rate"));
+        assert!(json.contains("panic_rate"));
+        assert!(json.contains("retry_rate"));
         let parsed = tiny_json::parse(&json).expect("self-readable JSON");
         assert_eq!(parsed.get("clients").and_then(Json::as_f64), Some(2.0));
         assert_eq!(
@@ -678,6 +724,35 @@ mod tests {
         assert_eq!(report.warnings.len(), 1, "{:?}", report.warnings);
         assert!(report.warnings[0].contains("+3.00ms"), "{:?}", report.warnings);
         assert!(!report.warnings[0].contains('%'), "{:?}", report.warnings);
+    }
+
+    #[test]
+    fn gate_warns_on_nonzero_panic_rate_for_healthy_workloads() {
+        let base = doc("release", 100.0, 50.0);
+        // A current run where `primes` panicked (and retried) during the
+        // bench, `chunked` stayed clean, and a deliberately faulty chaos
+        // registration panicked by design.
+        let cur = "{\"bench\": \"pipeline_throughput\", \"profile\": \"release\", \
+             \"scale\": 1.0, \"clients\": 2, \"jobs_per_client\": 2, \"mode\": \"par(2)\", \
+             \"points\": [\
+             {\"workload\": \"primes\", \"shards\": 1, \"jobs_per_sec\": 100.0, \
+               \"panic_rate\": 0.1250, \"retry_rate\": 0.1250}, \
+             {\"workload\": \"chunked\", \"shards\": 2, \"jobs_per_sec\": 50.0, \
+               \"panic_rate\": 0.0, \"retry_rate\": 0.0}, \
+             {\"workload\": \"faulty\", \"shards\": 1, \"jobs_per_sec\": 10.0, \
+               \"panic_rate\": 1.0, \"retry_rate\": 1.0}]}";
+        let report = gate(&base, cur, 0.25, LT, false).unwrap();
+        // Warn, never fail: fault injection must not poison the perf
+        // gate, and the throughput cells all held.
+        assert_eq!(report.outcome, GateOutcome::Passed { cells: 2 });
+        assert_eq!(report.warnings.len(), 1, "{:?}", report.warnings);
+        assert!(report.warnings[0].contains("primes"), "{:?}", report.warnings);
+        assert!(report.warnings[0].contains("panic_rate 0.1250"), "{:?}", report.warnings);
+        assert!(report.warnings[0].contains("non-faulty"), "{:?}", report.warnings);
+        // Clean runs and pre-lifecycle documents (no fault fields at
+        // all) stay quiet.
+        let clean = doc("release", 100.0, 50.0);
+        assert!(gate(&base, &clean, 0.25, LT, false).unwrap().warnings.is_empty());
     }
 
     #[test]

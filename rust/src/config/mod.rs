@@ -192,6 +192,24 @@ pub struct Config {
     /// idle shards steal whole queued jobs from it (cross-shard
     /// migration; 1 = steal once two or more jobs are waiting).
     pub migrate_threshold: usize,
+    /// Default per-job execution deadline in milliseconds, enforced by
+    /// the shard-set reaper through cooperative cancellation. 0 (the
+    /// default) disables deadlines; a request overrides per job with
+    /// the reserved `deadline_ms` param.
+    pub deadline_ms: u64,
+    /// Retries a job gets after a *transient* failure (panic or
+    /// deadline timeout — never a validation reject or workload error),
+    /// each re-leased onto a different shard. 0 (the default) disables
+    /// retry.
+    pub retry_max: u32,
+    /// Base backoff before a retry, in milliseconds; attempt `k` waits
+    /// `retry_backoff_ms << k` (capped at 5s).
+    pub retry_backoff_ms: u64,
+    /// Consecutive panics of one workload that trip its circuit
+    /// breaker: further submissions answer `err rejected … breaker
+    /// open` without taking queue capacity. 0 (the default) disables
+    /// the breaker.
+    pub breaker_threshold: u32,
     /// Directory holding AOT artifacts (*.hlo.txt).
     pub artifacts_dir: PathBuf,
     /// Use the PJRT kernel for chunked block products when artifacts are
@@ -227,6 +245,10 @@ impl Default for Config {
             admission: AdmissionPolicy::Block,
             dispatchers: 2,
             migrate_threshold: 1,
+            deadline_ms: 0,
+            retry_max: 0,
+            retry_backoff_ms: 25,
+            breaker_threshold: 0,
             artifacts_dir: PathBuf::from("artifacts"),
             use_kernel: true,
             stack_size: 256 << 20,
@@ -316,6 +338,14 @@ impl Config {
             "migrate_threshold" | "ingress.migrate_threshold" => {
                 self.migrate_threshold = p(key, value)?;
             }
+            "deadline_ms" | "ingress.deadline_ms" => self.deadline_ms = p(key, value)?,
+            "retry_max" | "ingress.retry_max" => self.retry_max = p(key, value)?,
+            "retry_backoff_ms" | "ingress.retry_backoff_ms" => {
+                self.retry_backoff_ms = p(key, value)?;
+            }
+            "breaker_threshold" | "ingress.breaker_threshold" => {
+                self.breaker_threshold = p(key, value)?;
+            }
             "artifacts_dir" | "runtime.artifacts_dir" => {
                 self.artifacts_dir = PathBuf::from(value.trim().trim_matches('"'));
             }
@@ -357,6 +387,15 @@ impl Config {
         }
         if self.migrate_threshold == 0 {
             return Err(ConfigError::new("migrate_threshold must be >= 1"));
+        }
+        if self.retry_max > 8 {
+            return Err(ConfigError::new("retry_max must be <= 8 (0 = off)"));
+        }
+        if self.retry_backoff_ms == 0 || self.retry_backoff_ms > 60_000 {
+            return Err(ConfigError::new("retry_backoff_ms must be in 1..=60000"));
+        }
+        if self.deadline_ms > 86_400_000 {
+            return Err(ConfigError::new("deadline_ms must be <= 86400000 (0 = off)"));
         }
         if self.samples == 0 {
             return Err(ConfigError::new("samples must be >= 1"));
@@ -509,6 +548,30 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = Config::default();
         c.migrate_threshold = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn lifecycle_keys_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.deadline_ms, 0, "deadlines default off");
+        assert_eq!(c.retry_max, 0, "retry defaults off");
+        assert_eq!(c.breaker_threshold, 0, "breaker defaults off");
+        c.set("deadline_ms", "250").unwrap();
+        c.set("ingress.retry_max", "2").unwrap();
+        c.set("retry_backoff_ms", "5").unwrap();
+        c.set("ingress.breaker_threshold", "3").unwrap();
+        assert_eq!(c.deadline_ms, 250);
+        assert_eq!(c.retry_max, 2);
+        assert_eq!(c.retry_backoff_ms, 5);
+        assert_eq!(c.breaker_threshold, 3);
+        c.validate().unwrap();
+        assert!(c.set("retry_max", "some").is_err());
+        let mut c = Config::default();
+        c.retry_max = 9;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.retry_backoff_ms = 0;
         assert!(c.validate().is_err());
     }
 

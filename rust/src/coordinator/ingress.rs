@@ -36,8 +36,30 @@
 //! admission, lets the dispatchers drain the admission queue, then the
 //! runners drain every run queue (ignoring holds and the migration
 //! threshold) before joining — in-flight tickets always resolve.
+//!
+//! The execute stage is **fault-contained** (see the failure-semantics
+//! section in the [module docs](super)):
+//!
+//! * A panicking workload body is caught at the job boundary and
+//!   answered as a terminal `panicked …` error; the runner thread
+//!   survives (the whole `execute_one` body runs under a second
+//!   `catch_unwind`, so even coordinator-machinery panics only cost the
+//!   one job, whose ticket the [`FutPromise`] drop guard resolves).
+//! * A job with a deadline (`deadline_ms` wire param, or
+//!   `Config::deadline_ms`) registers with the shard-set **reaper**
+//!   thread, which trips the job's [`CancelToken`] when the deadline
+//!   expires; the body unwinds cooperatively at its next safe point and
+//!   the attempt is classified `timeout`, not a crash.
+//! * Transient outcomes (panic, timeout) are **retried** up to
+//!   `Config::retry_max` times with exponential backoff, each retry
+//!   re-leased onto a *different* shard (a poisoned pool or wedged
+//!   worker on one shard doesn't doom the job).
+//! * Repeated panics from one workload open a per-workload **circuit
+//!   breaker** (`Config::breaker_threshold`): further submissions answer
+//!   `rejected … breaker open` immediately, without taking queue
+//!   capacity, until the pipeline restarts.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -46,11 +68,12 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use super::job::{JobRequest, JobResult};
-use super::router::PipelineCore;
+use super::router::{ExecOutcome, PipelineCore, DEADLINE_PARAM};
 use super::shard::ShardLease;
 use crate::config::AdmissionPolicy;
 use crate::exec::{Executor, ExecutorConfig};
-use crate::susp::{Fut, FutPromise, FutState, Susp};
+use crate::metrics::MetricsRegistry;
+use crate::susp::{CancelToken, Fut, FutPromise, FutState, Susp};
 
 /// What a resolved [`JobTicket`] carries: the job's result, or the
 /// error/panic message it failed with.
@@ -102,6 +125,18 @@ impl JobTicket {
             Ok(Err(msg)) => Err(anyhow!("{msg}")),
             Err(msg) => Err(anyhow!("job ticket abandoned: {msg}")),
         }
+    }
+
+    /// Bounded [`JobTicket::wait`]: park for at most `timeout`. `None`
+    /// means the job is still queued or running — the ticket stays valid
+    /// and may be waited on (or polled) again later. `Some` carries the
+    /// same mapping `wait` produces.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<JobResult>> {
+        self.fut.wait_timeout(timeout).map(|r| match r {
+            Ok(Ok(res)) => Ok(res.clone()),
+            Ok(Err(msg)) => Err(anyhow!("{msg}")),
+            Err(msg) => Err(anyhow!("job ticket abandoned: {msg}")),
+        })
     }
 
     /// Chain a transformation on the outcome, exactly like mapping a
@@ -198,6 +233,150 @@ struct Routed {
     lease: ShardLease,
 }
 
+/// Per-workload circuit breaker: after `threshold` *consecutive*
+/// panicking attempts of one workload, quarantine it — further
+/// submissions are rejected at the front door (no queue capacity
+/// consumed) with a `breaker open` reason. `threshold == 0` disables
+/// the breaker entirely. A breaker, once open, stays open for the
+/// pipeline's lifetime: a plugin that panics repeatedly is broken code,
+/// and flapping half-open probes would keep feeding jobs into it.
+struct Breaker {
+    threshold: u32,
+    entries: Mutex<BTreeMap<String, BreakerEntry>>,
+}
+
+#[derive(Default)]
+struct BreakerEntry {
+    consecutive: u32,
+    open: bool,
+}
+
+impl Breaker {
+    fn new(threshold: u32) -> Breaker {
+        Breaker { threshold, entries: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn is_open(&self, workload: &str) -> bool {
+        self.threshold != 0
+            && self.entries.lock().unwrap().get(workload).is_some_and(|e| e.open)
+    }
+
+    /// Record one panicking attempt; returns `true` if this one opened
+    /// the breaker (the `breaker.<workload>.open` gauge flips to 1).
+    fn note_panic(&self, workload: &str, metrics: &MetricsRegistry) -> bool {
+        if self.threshold == 0 {
+            return false;
+        }
+        let mut entries = self.entries.lock().unwrap();
+        let entry = entries.entry(workload.to_string()).or_default();
+        if entry.open {
+            return false;
+        }
+        entry.consecutive += 1;
+        if entry.consecutive >= self.threshold {
+            entry.open = true;
+            metrics.gauge(&format!("breaker.{workload}.open")).set(1);
+            return true;
+        }
+        false
+    }
+
+    /// A completed attempt resets the consecutive-panic streak.
+    fn note_ok(&self, workload: &str) {
+        if self.threshold == 0 {
+            return;
+        }
+        if let Some(entry) = self.entries.lock().unwrap().get_mut(workload) {
+            if !entry.open {
+                entry.consecutive = 0;
+            }
+        }
+    }
+}
+
+/// The deadline reaper: one parked thread (`sfut-reaper`) holding every
+/// in-flight job's `(deadline, CancelToken)`. It wakes at the earliest
+/// registered deadline (or on registration/shutdown), trips expired
+/// tokens, and goes back to sleep — enforcement is cooperative
+/// cancellation, so the reaper never touches the job's thread.
+struct Reaper {
+    inner: Mutex<ReaperInner>,
+    cv: Condvar,
+}
+
+struct ReaperInner {
+    entries: Vec<(u64, Instant, CancelToken)>,
+    next_id: u64,
+    closed: bool,
+}
+
+impl Reaper {
+    fn new() -> Arc<Reaper> {
+        Arc::new(Reaper {
+            inner: Mutex::new(ReaperInner { entries: Vec::new(), next_id: 0, closed: false }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Watch `token` until `deadline`; deregistration is the returned
+    /// guard's drop (the attempt finished first — the common case).
+    fn register(self: Arc<Reaper>, deadline: Instant, token: CancelToken) -> DeadlineGuard {
+        let id = {
+            let mut inner = self.inner.lock().unwrap();
+            let id = inner.next_id;
+            inner.next_id += 1;
+            inner.entries.push((id, deadline, token));
+            id
+        };
+        self.cv.notify_all();
+        DeadlineGuard { reaper: self, id }
+    }
+
+    fn run(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.closed {
+                return;
+            }
+            let now = Instant::now();
+            inner.entries.retain(|(_, deadline, token)| {
+                if *deadline <= now {
+                    token.cancel();
+                    false
+                } else {
+                    true
+                }
+            });
+            let earliest = inner.entries.iter().map(|(_, deadline, _)| *deadline).min();
+            inner = match earliest {
+                Some(deadline) => {
+                    let wait = deadline.saturating_duration_since(now);
+                    self.cv.wait_timeout(inner, wait).unwrap().0
+                }
+                None => self.cv.wait(inner).unwrap(),
+            };
+        }
+    }
+
+    fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// RAII deregistration for one reaper entry.
+struct DeadlineGuard {
+    reaper: Arc<Reaper>,
+    id: u64,
+}
+
+impl Drop for DeadlineGuard {
+    fn drop(&mut self) {
+        let mut inner = self.reaper.inner.lock().unwrap();
+        inner.entries.retain(|(id, _, _)| *id != self.id);
+    }
+}
+
 /// Stage-1 state: the bounded admission queue.
 struct Admission {
     queue: VecDeque<Pending>,
@@ -232,6 +411,19 @@ struct IngressShared {
     run: Mutex<RunQueues>,
     /// Signalled when a job lands in any run queue (or on shutdown).
     work: Condvar,
+    /// Deadline enforcement for in-flight attempts.
+    reaper: Arc<Reaper>,
+    /// Per-workload panic quarantine.
+    breaker: Breaker,
+    /// Deterministic fault injection for the chaos harness: when
+    /// nonzero, every `nth` execute_one call panics in coordinator
+    /// machinery (after the admission slot is released, before the
+    /// promise starts) — exercising the runner-recovery and
+    /// ticket-drop-guard paths without touching any workload.
+    #[cfg(feature = "chaos")]
+    chaos_runner_panic_every: std::sync::atomic::AtomicU64,
+    #[cfg(feature = "chaos")]
+    chaos_runner_panic_count: std::sync::atomic::AtomicU64,
 }
 
 /// The staged ingress: admission queue, dispatcher pool, and per-shard
@@ -247,6 +439,7 @@ pub struct Ingress {
     ticket_exec: Executor,
     dispatchers: Mutex<Vec<JoinHandle<()>>>,
     runners: Mutex<Vec<JoinHandle<()>>>,
+    reaper_thread: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl Ingress {
@@ -259,6 +452,7 @@ impl Ingress {
         let dispatcher_count = cfg.dispatchers;
         let runners_per_shard = cfg.shard_parallelism;
         let stack = cfg.stack_size;
+        let breaker_threshold = cfg.breaker_threshold;
         let shard_count = core.shards().len();
         let shared = Arc::new(IngressShared {
             queue_depth,
@@ -277,6 +471,12 @@ impl Ingress {
                 closed: false,
             }),
             work: Condvar::new(),
+            reaper: Reaper::new(),
+            breaker: Breaker::new(breaker_threshold),
+            #[cfg(feature = "chaos")]
+            chaos_runner_panic_every: std::sync::atomic::AtomicU64::new(0),
+            #[cfg(feature = "chaos")]
+            chaos_runner_panic_count: std::sync::atomic::AtomicU64::new(0),
             core,
         });
 
@@ -293,7 +493,16 @@ impl Ingress {
             ticket_exec,
             dispatchers: Mutex::new(Vec::with_capacity(dispatcher_count)),
             runners: Mutex::new(Vec::with_capacity(shard_count * runners_per_shard)),
+            reaper_thread: Mutex::new(None),
         };
+        {
+            let reaper = Arc::clone(&shared.reaper);
+            let handle = std::thread::Builder::new()
+                .name("sfut-reaper".to_string())
+                .spawn(move || reaper.run())
+                .context("spawning deadline reaper")?;
+            *ingress.reaper_thread.lock().unwrap() = Some(handle);
+        }
         for i in 0..dispatcher_count {
             let shared = Arc::clone(&shared);
             let handle = std::thread::Builder::new()
@@ -331,6 +540,17 @@ impl Ingress {
         if let Err(e) = self.shared.core.validate_request(&req) {
             metrics.counter("ingress.rejected").inc();
             return Err(SubmitError::Rejected { reason: e.to_string() });
+        }
+        // Quarantine gate: a workload whose breaker opened answers here,
+        // like any other rejection — before taking a queue slot.
+        if self.shared.breaker.is_open(&req.workload) {
+            metrics.counter("ingress.rejected").inc();
+            return Err(SubmitError::Rejected {
+                reason: format!(
+                    "breaker open: workload {} quarantined after repeated panics",
+                    req.workload
+                ),
+            });
         }
         let depth = self.shared.queue_depth;
         let mut adm = self.shared.admission.lock().unwrap();
@@ -403,6 +623,16 @@ impl Ingress {
         self.shared.work.notify_all();
     }
 
+    /// Fault injection: make every `nth` execute call panic inside
+    /// coordinator machinery (0 disables; resets the counter). Per
+    /// pipeline — parallel tests never see each other's faults.
+    #[cfg(feature = "chaos")]
+    pub fn chaos_set_runner_panic_every(&self, nth: u64) {
+        use std::sync::atomic::Ordering;
+        self.shared.chaos_runner_panic_every.store(nth, Ordering::SeqCst);
+        self.shared.chaos_runner_panic_count.store(0, Ordering::SeqCst);
+    }
+
     /// Close admission, drain both stages, and join every thread.
     /// Queued jobs are *executed*, not dropped — every outstanding
     /// ticket resolves before this returns. Idempotent.
@@ -425,6 +655,11 @@ impl Ingress {
         }
         self.shared.work.notify_all();
         for handle in self.runners.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+        // Last: no runner is left to register deadlines.
+        self.shared.reaper.close();
+        if let Some(handle) = self.reaper_thread.lock().unwrap().take() {
             let _ = handle.join();
         }
     }
@@ -536,16 +771,57 @@ fn runner_loop(shared: &IngressShared, sid: usize) {
                 .gauge(&format!("shard.{shard_id}.run_queue_depth"))
                 .set(depth as u64);
         }
-        execute_one(shared, sid, routed, migrated);
+        // Runner survival: a panic anywhere in the execute path — the
+        // workload boundary catches its own, so this only fires for
+        // coordinator machinery (or injected) faults — costs exactly one
+        // job. The unwind drops the job's promise (its drop guard
+        // resolves the ticket as abandoned) and its lease (inflight
+        // decrements); the runner thread itself lives on.
+        let survived = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            execute_one(shared, sid, routed, migrated);
+        }));
+        if survived.is_err() {
+            shared.core.metrics().counter("ingress.runner_recovered").inc();
+        }
     }
 }
 
-/// Stage 3 body: adopt the job (re-leasing on migration), release its
-/// admission slot, execute, and fulfill the ticket.
+/// Cap on one exponential-backoff sleep between retries.
+const MAX_RETRY_BACKOFF: Duration = Duration::from_millis(5000);
+
+#[cfg(feature = "chaos")]
+fn chaos_maybe_panic(shared: &IngressShared) {
+    use std::sync::atomic::Ordering;
+    let every = shared.chaos_runner_panic_every.load(Ordering::SeqCst);
+    if every == 0 {
+        return;
+    }
+    let n = shared.chaos_runner_panic_count.fetch_add(1, Ordering::SeqCst) + 1;
+    if n % every == 0 {
+        panic!("chaos: injected runner fault");
+    }
+}
+
+/// Stage 3 body: release the job's admission slot, adopt it (re-leasing
+/// on migration), execute — retrying transient failures with backoff on
+/// a different shard — and fulfill the ticket with exactly one terminal
+/// outcome.
 fn execute_one(shared: &IngressShared, sid: usize, routed: Routed, migrated: bool) {
     let Routed { pending, lease } = routed;
     let metrics = shared.core.metrics();
-    let lease = if migrated {
+    // Free the admission slot FIRST — before any machinery that could
+    // unwind (lease adoption, chaos injection) — so a runner panic can
+    // never leak queue capacity. Blocked submitters refill the queue
+    // while the job runs.
+    {
+        let mut adm = shared.admission.lock().unwrap();
+        adm.pending -= 1;
+        metrics.gauge("ingress.queue_depth").set(adm.pending as u64);
+    }
+    shared.not_full.notify_one();
+    #[cfg(feature = "chaos")]
+    chaos_maybe_panic(shared);
+    let mut lease = if migrated {
         let from = lease.id();
         drop(lease);
         let shards = shared.core.shards();
@@ -557,28 +833,92 @@ fn execute_one(shared: &IngressShared, sid: usize, routed: Routed, migrated: boo
     } else {
         lease
     };
-    // The job is starting: free its admission slot so blocked submitters
-    // refill the queue while it runs.
-    {
-        let mut adm = shared.admission.lock().unwrap();
-        adm.pending -= 1;
-        metrics.gauge("ingress.queue_depth").set(adm.pending as u64);
-    }
-    shared.not_full.notify_one();
     // Flip the ticket to Running so pollers can tell executing from
     // queued (`serve`'s `poll` command surfaces this state).
     pending.promise.start();
     let queue_wait = pending.submitted.elapsed();
-    let shard = Arc::clone(lease.shard());
-    let outcome =
-        shared.core.execute_routed(pending.req, &shard, pending.verify, queue_wait, migrated);
-    drop(lease);
-    match outcome {
-        Ok(result) => pending.promise.fulfill(Ok(result)),
-        Err(e) => {
-            metrics.counter("jobs.failed").inc();
-            pending.promise.fulfill(Err(format!("{e:#}")));
+    let Pending { req, verify, promise, .. } = pending;
+    let cfg = shared.core.config();
+    // Per-attempt deadline: the wire param wins over the config default;
+    // 0 = none. Type-checked at submit time, so the fallback never fires.
+    let deadline_ms =
+        req.params.get_u64(DEADLINE_PARAM, cfg.deadline_ms).unwrap_or(cfg.deadline_ms);
+    let retry_max = cfg.retry_max;
+    let backoff_ms = cfg.retry_backoff_ms;
+    let workload_spec = req.workload_spec();
+    let mode_label = req.mode.label();
+    let mut attempt: u32 = 0;
+    loop {
+        // Fresh token per attempt: a retry must not start pre-cancelled
+        // by the previous attempt's expired deadline.
+        let token = CancelToken::new();
+        let deadline_guard = (deadline_ms > 0).then(|| {
+            Arc::clone(&shared.reaper)
+                .register(Instant::now() + Duration::from_millis(deadline_ms), token.clone())
+        });
+        let shard = Arc::clone(lease.shard());
+        let outcome = shared.core.execute_routed(
+            req.clone(),
+            &shard,
+            verify,
+            queue_wait,
+            migrated,
+            &token,
+            attempt,
+        );
+        drop(deadline_guard);
+        match outcome {
+            ExecOutcome::Done(result) => {
+                shared.breaker.note_ok(&req.workload);
+                drop(lease);
+                promise.fulfill(Ok(*result));
+                return;
+            }
+            ExecOutcome::Failed(msg) => {
+                // Deterministic failure: retrying would fail identically.
+                metrics.counter("jobs.failed").inc();
+                drop(lease);
+                promise.fulfill(Err(msg));
+                return;
+            }
+            ExecOutcome::Panicked(reason) => {
+                metrics.counter("jobs.panicked").inc();
+                shared.breaker.note_panic(&req.workload, metrics);
+                if attempt >= retry_max {
+                    drop(lease);
+                    // `reason=` is last: it may contain spaces (see the
+                    // failure-semantics grammar in the module docs).
+                    promise.fulfill(Err(format!(
+                        "panicked workload={workload_spec} mode={mode_label} reason={reason}"
+                    )));
+                    return;
+                }
+            }
+            ExecOutcome::TimedOut => {
+                metrics.counter("jobs.timed_out").inc();
+                if attempt >= retry_max {
+                    drop(lease);
+                    promise.fulfill(Err(format!(
+                        "timeout workload={workload_spec} mode={mode_label} \
+                         deadline_ms={deadline_ms}"
+                    )));
+                    return;
+                }
+            }
         }
+        // Transient failure with retry budget left: back off, then
+        // re-lease onto the next shard — a wedged pool on this one must
+        // not doom every attempt. (Not counted as migration: the job was
+        // not stolen, it bounced.)
+        metrics.counter("jobs.retried").inc();
+        attempt += 1;
+        let scaled_ms = backoff_ms.checked_shl(attempt - 1).unwrap_or(u64::MAX);
+        let backoff = Duration::from_millis(scaled_ms).min(MAX_RETRY_BACKOFF);
+        std::thread::sleep(backoff);
+        let shards = shared.core.shards();
+        let next = (lease.id() + 1) % shards.len();
+        drop(lease);
+        lease = shards.lease_on(next);
     }
 }
 
@@ -807,6 +1147,91 @@ mod tests {
             }
             other => panic!("wrong detail kind: {other:?}"),
         }
+    }
+
+    #[test]
+    fn deadline_param_is_reserved_typed_and_accepted_everywhere() {
+        let pipeline = Pipeline::new(base_config()).unwrap();
+        // Every workload accepts the reserved key without declaring it;
+        // a generous deadline never fires for a fast job.
+        let req = JobRequest::parse("primes(n=100,deadline_ms=60000) par(2)").unwrap();
+        let res = pipeline.run(&req).unwrap();
+        assert!(res.verified);
+        // Mistyped values die at validation, not on a runner.
+        let req = JobRequest::parse("primes(deadline_ms=soon) seq").unwrap();
+        match pipeline.submit(&req) {
+            Err(SubmitError::Rejected { reason }) => {
+                assert!(reason.contains("bad value for param deadline_ms"), "{reason}")
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        let snap = pipeline.metrics().snapshot();
+        assert_eq!(snap.counters.get("jobs.timed_out"), None);
+    }
+
+    #[test]
+    fn ticket_wait_timeout_gives_up_then_succeeds() {
+        let pipeline = Pipeline::new(base_config()).unwrap();
+        pipeline.ingress().set_runner_hold(0, true);
+        let ticket = pipeline.submit(&primes_req()).unwrap();
+        // Held: the bounded wait returns None and the ticket stays live.
+        assert!(ticket.wait_timeout(Duration::from_millis(30)).is_none());
+        assert!(!ticket.is_ready());
+        pipeline.ingress().set_runner_hold(0, false);
+        let res = ticket
+            .wait_timeout(Duration::from_secs(30))
+            .expect("released job finishes well within the bound")
+            .unwrap();
+        assert!(res.verified);
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_and_quarantines() {
+        let metrics = crate::metrics::MetricsRegistry::new();
+        let breaker = Breaker::new(3);
+        assert!(!breaker.note_panic("faulty", &metrics));
+        assert!(!breaker.is_open("faulty"));
+        // A success between panics resets the consecutive streak.
+        breaker.note_ok("faulty");
+        assert!(!breaker.note_panic("faulty", &metrics));
+        assert!(!breaker.note_panic("faulty", &metrics));
+        assert!(breaker.note_panic("faulty", &metrics), "third consecutive panic opens");
+        assert!(breaker.is_open("faulty"));
+        // Open is sticky: further panics and oks change nothing.
+        assert!(!breaker.note_panic("faulty", &metrics));
+        breaker.note_ok("faulty");
+        assert!(breaker.is_open("faulty"));
+        // Per workload, and visible as a gauge.
+        assert!(!breaker.is_open("primes"));
+        assert_eq!(metrics.snapshot().gauges["breaker.faulty.open"], 1);
+        // Threshold 0 = disabled entirely.
+        let off = Breaker::new(0);
+        assert!(!off.note_panic("w", &metrics));
+        assert!(!off.is_open("w"));
+    }
+
+    #[test]
+    fn reaper_trips_expired_tokens_and_drop_deregisters() {
+        let reaper = Reaper::new();
+        let thread = {
+            let reaper = Arc::clone(&reaper);
+            std::thread::spawn(move || reaper.run())
+        };
+        // An expired deadline trips its token.
+        let tripped = CancelToken::new();
+        let guard = Arc::clone(&reaper)
+            .register(Instant::now() + Duration::from_millis(10), tripped.clone());
+        wait_until("deadline fires", || tripped.is_cancelled());
+        drop(guard);
+        // A deregistered (finished-first) entry never trips.
+        let survivor = CancelToken::new();
+        let guard = Arc::clone(&reaper)
+            .register(Instant::now() + Duration::from_millis(40), survivor.clone());
+        drop(guard);
+        std::thread::sleep(Duration::from_millis(80));
+        assert!(!survivor.is_cancelled(), "drop must deregister before the deadline");
+        reaper.close();
+        thread.join().unwrap();
     }
 
     #[test]

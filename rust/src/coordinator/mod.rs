@@ -82,6 +82,54 @@
 //! `workload::extra` (`fib`, `msort`) is the worked example: two
 //! scenarios shipped against this API alone, with zero coordinator
 //! edits.
+//!
+//! # Failure semantics
+//!
+//! Every submitted job resolves to **exactly one terminal outcome**, and
+//! every failure reaches the wire as a machine-parseable `err` line.
+//! The grammar below is stable — tools may match on it:
+//!
+//! * `err rejected workload=<spec> mode=<mode> reason: <text>` —
+//!   refused at submit time, before the job occupied queue capacity:
+//!   unknown workload, schema/validation failure, or
+//!   `reason: breaker open: workload <name> quarantined after repeated
+//!   panics` when the per-workload circuit breaker is open.
+//! * `err admission=shed workload=<spec> …` /
+//!   `err admission=timeout …` / `err admission=closed …` — the bounded
+//!   admission queue applied its configured policy (shed | timeout(ms))
+//!   or the pipeline is shutting down.
+//! * `err panicked workload=<spec> mode=<mode> reason=<text>` — the
+//!   plugin panicked on its final delivery attempt. The runner thread
+//!   survives (`catch_unwind`); `reason` is the panic payload and is
+//!   always the **last** field because it may contain spaces.
+//! * `err timeout workload=<spec> mode=<mode> deadline_ms=<n>` — the
+//!   job exceeded its deadline (`deadline_ms` wire param, falling back
+//!   to `Config::deadline_ms`) on its final attempt; the reaper tripped
+//!   the job's [`CancelToken`](crate::susp::CancelToken) and the
+//!   cooperative checkpoints unwound it.
+//! * `err timeout ticket=<id> waited_ms=<n>` — a serve-protocol `wait`
+//!   gave up at the server-side cap; the ticket stays addressable and
+//!   can be waited again.
+//! * `err closed ticket=<id>` — session drain: the server is shutting
+//!   down while this `wait` was parked. Emitted as the final line after
+//!   a bounded grace in which a completing job still delivers its real
+//!   result.
+//! * `err job ticket abandoned: promise dropped before completion` —
+//!   the executing runner died without fulfilling the ticket (only
+//!   reachable via injected runner faults); the promise drop-guard
+//!   resolved the ticket rather than leaving the waiter parked.
+//!
+//! Retry/breaker state machine: **transient** failures (panic, timeout)
+//! are retried up to `Config::retry_max` times, each attempt re-leased
+//! onto the *next* shard with exponential backoff
+//! (`Config::retry_backoff_ms`, doubling, capped at 5 s); validation
+//! rejects and wrong-result verifications are **not** transient and
+//! never retry. Independently, `Config::breaker_threshold` consecutive
+//! panics of one workload open that workload's circuit breaker
+//! (`breaker.<name>.open` gauge = 1): further submissions are rejected
+//! up front — without occupying queue capacity — for the pipeline's
+//! lifetime. Counters: `jobs.panicked`, `jobs.timed_out`, `jobs.retried`
+//! (per attempt), `ingress.runner_recovered`.
 
 mod ingress;
 mod job;
@@ -93,7 +141,7 @@ mod tcp;
 pub use ingress::{Ingress, JobTicket, SubmitError, TicketValue};
 pub use job::{JobRequest, JobResult, ResultDetail};
 pub use router::Pipeline;
-pub use server::serve;
+pub use server::{serve, serve_with_stop};
 pub use shard::{Shard, ShardLease, ShardSet};
 pub use tcp::TcpServer;
 

@@ -45,7 +45,32 @@ use crate::metrics::MetricsRegistry;
 use crate::poly::BlockMultiplier;
 use crate::runtime::{KernelMultiplier, KernelSiever, XlaEngine};
 use crate::sieve::{BlockSiever, RustSiever};
+use crate::susp::{CancelScope, CancelToken};
 use crate::workload::{Sizes, WorkloadCtx, WorkloadError, WorkloadRegistry};
+
+/// Reserved wire parameter: per-job deadline in milliseconds. Consumed
+/// by the coordinator (admission validation + the deadline reaper);
+/// stripped before the plugin's schema validation, so every workload
+/// accepts it without declaring it.
+pub(super) const DEADLINE_PARAM: &str = "deadline_ms";
+
+/// Classified result of one execution attempt — the router reports *what
+/// happened*, the ingress decides *what to do about it* (complete the
+/// ticket, retry on another shard, trip a breaker).
+pub(super) enum ExecOutcome {
+    /// Completed (boxed: the success payload is much larger than the
+    /// failure arms).
+    Done(Box<JobResult>),
+    /// Deterministic failure (validation-style error from the plugin, or
+    /// an unknown workload). Not retried.
+    Failed(String),
+    /// The workload body panicked. Transient from the coordinator's
+    /// point of view: eligible for retry on a different shard.
+    Panicked(String),
+    /// The job's cancel token tripped (deadline reaper) and the body
+    /// unwound — or finished too late to count. Eligible for retry.
+    TimedOut,
+}
 
 /// Long-lived coordinator state: config, optional PJRT engine, metrics,
 /// the shard group, the workload registry, and the execution logic.
@@ -250,15 +275,36 @@ impl PipelineCore {
                 self.registry.names().join(" ")
             )));
         };
+        if let Some(v) = req.params.get(DEADLINE_PARAM) {
+            // Type-check the reserved key here (it never reaches the
+            // plugin schema), then validate the rest without it.
+            if v.parse::<u64>().is_err() {
+                return Err(WorkloadError::new(format!(
+                    "bad value for param {DEADLINE_PARAM}: {v:?} (want u64)"
+                )));
+            }
+            let mut stripped = req.params.clone();
+            stripped.remove(DEADLINE_PARAM);
+            return plugin.validate(&stripped);
+        }
         plugin.validate(&req.params)
     }
 
     /// Stage 3 + 4 of the request path: execute one already-routed job on
     /// the calling thread (an ingress runner, spawned with the configured
-    /// big stack) and report. Publishes timing to the metrics registry
-    /// and verifies the result against the plugin's independent oracle.
-    /// Only the workload itself is timed — queue wait arrives as an
-    /// input, and verification runs after the clock stops.
+    /// big stack) and report a classified [`ExecOutcome`]. Publishes
+    /// timing to the metrics registry and verifies the result against the
+    /// plugin's independent oracle — but only on the `Done` arm; failed,
+    /// panicked, and timed-out attempts record nothing so that retries
+    /// don't double-count. Only the workload itself is timed — queue wait
+    /// arrives as an input, and verification runs after the clock stops.
+    ///
+    /// `cancel` is installed both on the [`WorkloadCtx`] (explicit
+    /// polling) and as the ambient [`CancelScope`] (stream traversal
+    /// loops) for the duration of the body; a body that unwinds with the
+    /// cancellation marker — or completes after the token tripped — is
+    /// classified `TimedOut`, not `Panicked`.
+    #[allow(clippy::too_many_arguments)]
     pub(super) fn execute_routed(
         &self,
         req: JobRequest,
@@ -266,7 +312,9 @@ impl PipelineCore {
         verify: bool,
         queue_wait: Duration,
         migrated: bool,
-    ) -> Result<JobResult> {
+        cancel: &CancelToken,
+        attempt: u32,
+    ) -> ExecOutcome {
         let label = req.label();
         // Timer names use the bare workload name, not the full param
         // spec: metric entries live forever, and params come straight
@@ -278,21 +326,43 @@ impl PipelineCore {
         // Resolved at submit time too; a miss here means the registry
         // changed under a queued job, which cannot happen (the registry
         // is immutable once the pipeline is built).
-        let plugin = Arc::clone(
-            self.registry
-                .get(&req.workload)
-                .ok_or_else(|| anyhow!("unknown workload: {}", req.workload))?,
-        );
-        let ctx = self.workload_ctx(shard.as_ref());
+        let Some(plugin) = self.registry.get(&req.workload) else {
+            return ExecOutcome::Failed(format!("unknown workload: {}", req.workload));
+        };
+        let plugin = Arc::clone(plugin);
+        let ctx = self
+            .workload_ctx(shard.as_ref())
+            .with_cancel(cancel.clone())
+            .with_attempt(attempt);
 
         let started = Instant::now();
-        let detail: ResultDetail =
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                plugin.run(&ctx, req.mode, &req.params)
-            }))
-            .map_err(|p| anyhow!("workload panicked: {}", crate::susp::panic_text(&*p)))?
-            .map_err(|e| anyhow!("workload {} failed: {e}", req.workload))?;
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ambient = CancelScope::enter(cancel.clone());
+            plugin.run(&ctx, req.mode, &req.params)
+        }));
         let took = started.elapsed();
+        let detail: ResultDetail = match run {
+            Err(payload) => {
+                return if crate::susp::cancel::was_cancelled(&*payload) || cancel.is_cancelled()
+                {
+                    ExecOutcome::TimedOut
+                } else {
+                    ExecOutcome::Panicked(crate::susp::panic_text(&*payload))
+                };
+            }
+            Ok(Err(e)) => {
+                return if cancel.is_cancelled() {
+                    ExecOutcome::TimedOut
+                } else {
+                    ExecOutcome::Failed(format!("workload {} failed: {e}", req.workload))
+                };
+            }
+            // Completed after the deadline tripped: the outcome already
+            // counts as a timeout (and may have been superseded by a
+            // retry); discard the late result.
+            Ok(Ok(_)) if cancel.is_cancelled() => return ExecOutcome::TimedOut,
+            Ok(Ok(detail)) => detail,
+        };
 
         timer.record(took);
         debug!(
@@ -311,7 +381,7 @@ impl PipelineCore {
             self.metrics.counter("jobs.verification_failed").inc();
         }
         let backend = plugin.backend(&ctx, &req.params);
-        Ok(JobResult {
+        ExecOutcome::Done(Box::new(JobResult {
             request: req,
             seconds: took.as_secs_f64(),
             detail,
@@ -321,6 +391,6 @@ impl PipelineCore {
             steals,
             queue_wait: queue_wait.as_secs_f64(),
             migrated,
-        })
+        }))
     }
 }

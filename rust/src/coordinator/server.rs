@@ -5,7 +5,12 @@
 //! ```text
 //! run <spec> <mode>          → ok workload=... seconds=... | err <message>
 //! submit <spec> <mode>       → ticket id=N               | err admission=...
-//! wait <id>                  → ok workload=... (blocks)   | err <message>
+//! wait <id>                  → ok workload=... (blocks, bounded)
+//!                              | err <message>
+//!                              | err timeout ticket=N waited_ms=M (cap hit;
+//!                                ticket stays addressable)
+//!                              | err closed ticket=N (server shutting down;
+//!                                session ends)
 //! poll <id>                  → ticket id=N state=<empty|running|ready|panicked>
 //! workloads                  → one line per registered workload (name,
 //!                              param schema, description), terminated by "."
@@ -34,11 +39,13 @@
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::ingress::JobTicket;
-use super::job::JobRequest;
+use super::job::{JobRequest, JobResult};
 use super::router::Pipeline;
 use crate::susp::FutState;
 
@@ -48,6 +55,24 @@ use crate::susp::FutState;
 /// the cap the oldest resolved tickets are released (waiting them again
 /// answers `err ticket released`).
 const MAX_SESSION_TICKETS: usize = 1024;
+
+/// Server-side cap on one `wait <id>` command. A generous bound — far
+/// beyond any sane job — that exists so a session blocked on a wedged
+/// job eventually gets a well-formed `err timeout ticket=…` line instead
+/// of holding the connection forever. The ticket stays addressable; the
+/// client may `wait`/`poll` it again.
+const SERVE_WAIT_CAP: Duration = Duration::from_secs(600);
+
+/// Poll slice for `wait`: how often a parked waiter re-checks the
+/// session stop flag (shutdown drain latency, not result latency — a
+/// completing job wakes the waiter immediately).
+const WAIT_POLL_SLICE: Duration = Duration::from_millis(50);
+
+/// Grace given to a waited job when the stop flag rises: a result that
+/// lands within it still delivers; past it the waiter gets the final
+/// `err closed` line. Comfortably inside the TCP server's session drain
+/// window.
+const STOP_DRAIN_GRACE: Duration = Duration::from_secs(1);
 
 fn state_label(state: FutState) -> &'static str {
     match state {
@@ -61,7 +86,21 @@ fn state_label(state: FutState) -> &'static str {
 /// Serve requests from `input`, writing responses to `output`, until
 /// `quit` or EOF. Returns the number of jobs whose results were
 /// delivered (via `run` or `wait`).
-pub fn serve(pipeline: &Pipeline, input: impl BufRead, mut output: impl Write) -> Result<u64> {
+pub fn serve(pipeline: &Pipeline, input: impl BufRead, output: impl Write) -> Result<u64> {
+    serve_with_stop(pipeline, input, output, &AtomicBool::new(false))
+}
+
+/// [`serve`] with a caller-owned stop flag (the TCP server's shutdown
+/// signal). A session parked in `wait <id>` when the flag rises answers
+/// the waiter with a final well-formed `err closed ticket=<id>` line,
+/// flushes, and ends the session — in-flight waiters are never left
+/// hanging on a half-dead connection during shutdown/drain.
+pub fn serve_with_stop(
+    pipeline: &Pipeline,
+    input: impl BufRead,
+    mut output: impl Write,
+    stop: &AtomicBool,
+) -> Result<u64> {
     let mut jobs = 0u64;
     // Tickets this session has submitted; ids are 1-based submission
     // order. A waited ticket stays addressable (wait is idempotent)
@@ -145,13 +184,43 @@ pub fn serve(pipeline: &Pipeline, input: impl BufRead, mut output: impl Write) -
             },
             "wait" => match parse_ticket_id(rest, next_ticket) {
                 Ok(id) => match tickets.get(&id) {
-                    Some(ticket) => match ticket.wait() {
-                        Ok(result) => {
-                            jobs += 1;
-                            writeln!(output, "{}", result.render_line())?;
+                    Some(ticket) => {
+                        let started = Instant::now();
+                        let mut answered = false;
+                        loop {
+                            if let Some(result) = ticket.wait_timeout(WAIT_POLL_SLICE) {
+                                deliver(&mut output, &mut jobs, result)?;
+                                answered = true;
+                                break;
+                            }
+                            if stop.load(Ordering::Acquire) {
+                                // Drain grace: a job about to finish
+                                // still delivers its result.
+                                if let Some(result) = ticket.wait_timeout(STOP_DRAIN_GRACE) {
+                                    deliver(&mut output, &mut jobs, result)?;
+                                    answered = true;
+                                }
+                                break;
+                            }
+                            if started.elapsed() >= SERVE_WAIT_CAP {
+                                // The ticket survives — poll/wait again later.
+                                writeln!(
+                                    output,
+                                    "err timeout ticket={id} waited_ms={}",
+                                    started.elapsed().as_millis()
+                                )?;
+                                answered = true;
+                                break;
+                            }
                         }
-                        Err(e) => writeln!(output, "err {e:#}")?,
-                    },
+                        if !answered {
+                            // Shutdown drain: one final well-formed line,
+                            // then end the session.
+                            writeln!(output, "err closed ticket={id}")?;
+                            output.flush()?;
+                            return Ok(jobs);
+                        }
+                    }
                     None => writeln!(output, "err ticket released: {id}")?,
                 },
                 Err(e) => writeln!(output, "err {e}")?,
@@ -187,6 +256,18 @@ fn release_oldest_resolved(tickets: &mut BTreeMap<u64, JobTicket>, cap: usize) {
         };
         tickets.remove(&oldest_done);
     }
+}
+
+/// Write one waited outcome as its protocol line (`ok …` / `err …`).
+fn deliver(output: &mut impl Write, jobs: &mut u64, result: Result<JobResult>) -> Result<()> {
+    match result {
+        Ok(result) => {
+            *jobs += 1;
+            writeln!(output, "{}", result.render_line())?;
+        }
+        Err(e) => writeln!(output, "err {e:#}")?,
+    }
+    Ok(())
 }
 
 fn parse_ticket_id(rest: &str, next_ticket: u64) -> Result<u64, String> {
@@ -411,6 +492,49 @@ mod tests {
             errs.iter().all(|l| l.starts_with("err rejected workload=")),
             "rejections are machine-parseable: {out}"
         );
+    }
+
+    #[test]
+    fn wait_answers_closed_line_when_stop_flag_rises() {
+        let mut cfg = config();
+        cfg.shards = 1;
+        cfg.shard_parallelism = 1;
+        let p = Pipeline::new(cfg).unwrap();
+        // Park the only shard so the waited job can never resolve; the
+        // pre-raised stop flag must drain the waiter with a final line.
+        p.ingress().set_runner_hold(0, true);
+        let stop = AtomicBool::new(true);
+        let mut out = Vec::new();
+        let jobs = serve_with_stop(
+            &p,
+            "submit primes seq\nwait 1\nrun primes seq\n".as_bytes(),
+            &mut out,
+            &stop,
+        )
+        .unwrap();
+        let out = String::from_utf8(out).unwrap();
+        assert_eq!(jobs, 0);
+        assert!(out.contains("ticket id=1"), "{out}");
+        assert!(out.contains("err closed ticket=1"), "{out}");
+        // The session ended at the drain: the trailing run never answered.
+        assert!(!out.contains("ok workload="), "{out}");
+        p.ingress().set_runner_hold(0, false);
+    }
+
+    #[test]
+    fn wait_still_delivers_resolved_results_under_stop() {
+        let p = pipeline();
+        let stop = AtomicBool::new(true);
+        let mut out = Vec::new();
+        // The job resolves promptly; a raised stop flag must not eat a
+        // deliverable result.
+        let jobs =
+            serve_with_stop(&p, "submit primes seq\nwait 1\n".as_bytes(), &mut out, &stop)
+                .unwrap();
+        let out = String::from_utf8(out).unwrap();
+        assert_eq!(jobs, 1, "{out}");
+        assert!(out.contains("ok workload=primes"), "{out}");
+        assert!(!out.contains("err closed"), "{out}");
     }
 
     #[test]

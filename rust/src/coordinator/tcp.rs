@@ -11,6 +11,12 @@
 //! complete before the pipeline drops; stragglers hung on a live client
 //! socket are detached with a warning rather than blocking shutdown
 //! forever.
+//!
+//! Sessions share the server's stop flag: a client parked on `wait`
+//! during shutdown is drained by `serve_with_stop` — it gets either the
+//! job's real result (if it lands within the drain grace) or a final
+//! well-formed `err closed ticket=N` line, never a silently dropped
+//! connection mid-command.
 
 use std::io::BufReader;
 use std::net::{TcpListener, ToSocketAddrs};
@@ -23,7 +29,7 @@ use anyhow::{Context, Result};
 use log::{info, warn};
 
 use super::router::Pipeline;
-use super::server::serve;
+use super::server::serve_with_stop;
 
 /// How long [`TcpServer::shutdown`] waits for in-flight sessions before
 /// detaching them.
@@ -138,6 +144,7 @@ fn accept_loop(
                 sessions.fetch_add(1, Ordering::Relaxed);
                 info!("accepted session from {peer}");
                 let pipeline = Arc::clone(&pipeline);
+                let session_stop = Arc::clone(&stop);
                 let name = format!("sfut-session-{peer}");
                 let spawned = std::thread::Builder::new().name(name).spawn(move || {
                     let reader = match socket.try_clone() {
@@ -147,7 +154,7 @@ fn accept_loop(
                             return;
                         }
                     };
-                    match serve(&pipeline, reader, socket) {
+                    match serve_with_stop(&pipeline, reader, socket, &session_stop) {
                         Ok(jobs) => info!("session {peer} done ({jobs} jobs)"),
                         Err(e) => warn!("session {peer} errored: {e:#}"),
                     }
@@ -351,6 +358,35 @@ mod tests {
         // Idempotent.
         server.shutdown();
         assert_eq!(server.live_sessions(), 0);
+    }
+
+    #[test]
+    fn tcp_shutdown_drains_inflight_waiter_with_closed_line() {
+        let mut cfg = Config::default();
+        cfg.primes_n = 200;
+        cfg.fateman_degree = 2;
+        cfg.use_kernel = false;
+        cfg.shards = 1;
+        cfg.shard_parallelism = 1;
+        let p = Arc::new(Pipeline::new(cfg).unwrap());
+        // Park the only shard so the waited job cannot resolve before
+        // shutdown; the waiter must still get a final well-formed line.
+        p.ingress().set_runner_hold(0, true);
+        let mut server = TcpServer::start(Arc::clone(&p), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let waiter = std::thread::spawn(move || session(addr, "submit primes seq\nwait 1\n"));
+        // Regardless of whether shutdown wins the race with the submit,
+        // the session processes both commands and the raised stop flag
+        // drains the parked waiter deterministically.
+        while server.sessions() == 0 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        server.shutdown();
+        let lines = waiter.join().unwrap();
+        assert!(lines.iter().any(|l| l.starts_with("ticket id=1")), "{lines:?}");
+        assert!(lines.iter().any(|l| l == "err closed ticket=1"), "{lines:?}");
+        assert_eq!(server.live_sessions(), 0, "drained session must be joined");
+        p.ingress().set_runner_hold(0, false);
     }
 
     #[test]

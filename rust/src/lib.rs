@@ -106,6 +106,24 @@
 //!   plugin to Seq-self-verifies / Par(2)-equals-Seq / well-formed err
 //!   lines. See `coordinator`'s module docs for the plugin-writing
 //!   guide.
+//! * **Fault-contained job lifecycle** (`coordinator::ingress`,
+//!   [`susp::cancel`]) — runner threads execute plugins under
+//!   `catch_unwind`, so a panicking workload costs one job, not a
+//!   runner: the panic resolves the ticket as a machine-parseable
+//!   `err panicked …` line and the thread keeps serving. Per-job
+//!   deadlines (`deadline_ms` wire param / `Config::deadline_ms`) are
+//!   enforced by a reaper thread tripping a cooperative
+//!   [`susp::CancelToken`] that stream traversals and chunked bodies
+//!   poll between elements. Transient failures (panic, timeout) retry
+//!   up to `Config::retry_max` times on the next shard with exponential
+//!   backoff, and `Config::breaker_threshold` consecutive panics open a
+//!   per-workload circuit breaker that rejects further submissions up
+//!   front. The full `err` taxonomy and the retry/breaker state machine
+//!   are documented in [`coordinator`]'s "Failure semantics" section;
+//!   the seeded chaos suite (`rust/tests/chaos_lifecycle.rs`, behind
+//!   the `chaos` feature) reconciles injected faults against wire
+//!   output and the `jobs.panicked` / `jobs.timed_out` / `jobs.retried`
+//!   counters exactly.
 
 pub mod bench_harness;
 pub mod bigint;

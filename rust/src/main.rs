@@ -292,11 +292,12 @@ fn real_main() -> Result<()> {
                      measured run to arm (see ci/check_bench.sh)"
                 ),
             }
-            // Warn-only latency findings print regardless of the
-            // throughput verdict; under --latency-strict they appear as
-            // REGRESSION lines instead.
+            // Warn-only findings (p95 latency/queue-wait growth, nonzero
+            // panic rates on non-faulty workloads) print regardless of
+            // the throughput verdict; under --latency-strict the latency
+            // ones appear as REGRESSION lines instead.
             for w in &report.warnings {
-                eprintln!("WARNING: p95 regression (warn-only): {w}");
+                eprintln!("WARNING (warn-only): {w}");
             }
             match report.outcome {
                 GateOutcome::Passed { cells } => {

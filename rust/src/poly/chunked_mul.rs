@@ -162,9 +162,20 @@ pub fn chunked_times<C: Coeff, E: Eval>(
         .flat_map(|bx| y_blocks.iter().map(move |by| (Arc::clone(bx), Arc::clone(by))))
         .collect();
 
+    // Captured on the constructing thread (the coordinator runner, when
+    // inside a job's cancel scope): chunk tasks run on pool workers that
+    // can't see that scope, so each task re-checks the captured token
+    // and degrades to a free zero partial once the job is cancelled —
+    // residual fan-out stops burning pool capacity.
+    let cancel = crate::susp::cancel::active();
     let mult = Arc::clone(&multiplier);
-    let partials: Stream<Polynomial<C>, E> = Stream::from_vec(eval.clone(), pairs)
-        .map_elems(move |(bx, by)| block_pair_product(nvars, bx, by, &*mult));
+    let partials: Stream<Polynomial<C>, E> =
+        Stream::from_vec(eval.clone(), pairs).map_elems(move |(bx, by)| {
+            if cancel.as_ref().is_some_and(|c| c.is_cancelled()) {
+                return Polynomial::zero(nvars);
+            }
+            block_pair_product(nvars, bx, by, &*mult)
+        });
 
     // Sequential sorted merge of the pipeline's outputs.
     partials.fold(Polynomial::zero(nvars), |acc, p| acc.add(p))

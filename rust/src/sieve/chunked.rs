@@ -98,7 +98,15 @@ fn fan_out_blocks<E: Eval>(
     let block_stream: Stream<Chunk<u32>, E> = {
         let seed2 = Arc::clone(&seed);
         let siever2 = Arc::clone(&siever);
+        // Captured on the constructing thread (inside the job's cancel
+        // scope when run by a coordinator runner); block tasks on pool
+        // workers re-check it and return empty once the job is
+        // cancelled, so residual fan-out stops burning pool capacity.
+        let cancel = crate::susp::cancel::active();
         Stream::from_vec(eval, blocks).map_elems(move |&(lo, hi)| {
+            if cancel.as_ref().is_some_and(|c| c.is_cancelled()) {
+                return Arc::new(Vec::new());
+            }
             let candidates: Vec<u32> = (lo..hi).collect();
             let mask = siever2.survivors(&candidates, &seed2);
             debug_assert_eq!(mask.len(), candidates.len());

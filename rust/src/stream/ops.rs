@@ -126,10 +126,19 @@ impl<T: Elem, E: Eval> Stream<T, E> {
 
     /// Walk the whole stream, forcing every tail — the paper's `.force`
     /// ("wait for the computation to complete"). Returns the length.
+    ///
+    /// Every forcing consumer here is also a cooperative-cancellation
+    /// safe point: between elements it calls
+    /// [`cancel::checkpoint`](crate::susp::cancel::checkpoint), so a
+    /// coordinator job whose deadline reaper tripped the ambient token
+    /// stops traversing (and forcing further suspensions) at the next
+    /// element boundary. Outside a cancel scope the check is a
+    /// thread-local read — a no-op for plain library use.
     pub fn force_all(&self) -> usize {
         let mut n = 0;
         let mut cur = self.clone();
         while let Some(t) = cur.tail() {
+            crate::susp::cancel::checkpoint();
             n += 1;
             let next = t.clone();
             cur = next;
@@ -142,6 +151,7 @@ impl<T: Elem, E: Eval> Stream<T, E> {
         let mut out = Vec::new();
         let mut cur = self.clone();
         while let Some((head, _, _)) = cur.uncons() {
+            crate::susp::cancel::checkpoint();
             out.push(head.clone());
             let next = cur.tail().expect("non-empty").clone();
             cur = next;
@@ -157,6 +167,7 @@ impl<T: Elem, E: Eval> Stream<T, E> {
         let mut acc = init;
         let mut cur = self.clone();
         while let Some((head, _, _)) = cur.uncons() {
+            crate::susp::cancel::checkpoint();
             acc = f(acc, head);
             let next = cur.tail().expect("non-empty").clone();
             cur = next;
@@ -194,6 +205,7 @@ impl<T: Elem, E: Eval> Iterator for StreamIter<T, E> {
     type Item = T;
 
     fn next(&mut self) -> Option<T> {
+        crate::susp::cancel::checkpoint();
         let head = self.cur.head().cloned()?;
         let next = self.cur.tail().expect("non-empty").clone();
         self.cur = next;

@@ -1,0 +1,158 @@
+//! Cooperative cancellation for suspended computations.
+//!
+//! A [`CancelToken`] is a shared flag a *reaper* (or any supervisor)
+//! sets when a computation has outlived its deadline. Cancellation is
+//! cooperative: nothing is killed — the computation observes the flag
+//! at its own safe points and unwinds by panicking with the private
+//! [`Cancelled`] marker payload, which the job boundary's
+//! `catch_unwind` recognizes (via [`was_cancelled`]) and classifies as
+//! a timeout rather than a crash.
+//!
+//! Two polling styles are supported:
+//!
+//! * **Explicit** — code that holds a token (e.g. a workload reading
+//!   `WorkloadCtx::cancel`) calls [`CancelToken::checkpoint`] in its
+//!   loops.
+//! * **Ambient** — the coordinator installs the job's token in a
+//!   thread-local [`CancelScope`] around the workload call; generic
+//!   library loops that cannot thread a token through their signatures
+//!   (the stream traversal in `Stream::fold`/`iter`, which forces one
+//!   chunk suspension per step) call the free [`checkpoint`] and pick
+//!   it up ambiently. Code running outside any scope (unit tests,
+//!   benches, plain library use) sees a no-op.
+//!
+//! Tasks already fanned out to pool workers don't see the runner
+//! thread's scope; chunk producers instead capture [`active`] at
+//! stream-construction time (on the runner thread) and short-circuit
+//! their per-chunk work once the token trips, so a cancelled job's
+//! residual tasks degrade to near-free no-ops instead of burning pool
+//! capacity.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Shared cancellation flag. Cloning shares the flag.
+#[derive(Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, un-cancelled token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Trip the flag. Idempotent; never blocks.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+
+    /// Unwind with the [`Cancelled`] marker if the flag is tripped —
+    /// the explicit safe point for loops that hold a token.
+    pub fn checkpoint(&self) {
+        if self.is_cancelled() {
+            std::panic::panic_any(Cancelled);
+        }
+    }
+}
+
+/// Panic payload marking a cooperative-cancellation unwind. Private to
+/// the crate's classification logic by convention: anything catching
+/// panics at a job boundary should test [`was_cancelled`] before
+/// treating the payload as a crash.
+pub struct Cancelled;
+
+/// Whether a caught panic payload is the cancellation marker.
+pub fn was_cancelled(payload: &(dyn std::any::Any + Send)) -> bool {
+    payload.is::<Cancelled>()
+}
+
+thread_local! {
+    static SCOPE: RefCell<Vec<CancelToken>> = const { RefCell::new(Vec::new()) };
+}
+
+/// RAII installer for the ambient token: while alive, [`active`] and
+/// the free [`checkpoint`] on this thread observe `token`. Scopes nest
+/// (innermost wins).
+pub struct CancelScope {
+    _priv: (),
+}
+
+impl CancelScope {
+    pub fn enter(token: CancelToken) -> CancelScope {
+        SCOPE.with(|s| s.borrow_mut().push(token));
+        CancelScope { _priv: () }
+    }
+}
+
+impl Drop for CancelScope {
+    fn drop(&mut self) {
+        SCOPE.with(|s| {
+            s.borrow_mut().pop();
+        });
+    }
+}
+
+/// The innermost ambient token installed on this thread, if any.
+/// Chunk producers capture this at stream-construction time so their
+/// closures can short-circuit on worker threads.
+pub fn active() -> Option<CancelToken> {
+    SCOPE.with(|s| s.borrow().last().cloned())
+}
+
+/// Ambient safe point: unwind with [`Cancelled`] if the innermost
+/// scoped token is tripped. A no-op outside any scope.
+pub fn checkpoint() {
+    if let Some(token) = active() {
+        token.checkpoint();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_trips_once_and_stays_tripped() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        t.checkpoint(); // no-op while clear
+        let shared = t.clone();
+        shared.cancel();
+        assert!(t.is_cancelled(), "clones share the flag");
+        let p = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t.checkpoint()))
+            .expect_err("tripped checkpoint must unwind");
+        assert!(was_cancelled(&*p), "payload must be the cancellation marker");
+    }
+
+    #[test]
+    fn ambient_scope_installs_and_restores() {
+        assert!(active().is_none());
+        checkpoint(); // no-op outside any scope
+        let outer = CancelToken::new();
+        {
+            let _s = CancelScope::enter(outer.clone());
+            assert!(active().is_some());
+            let inner = CancelToken::new();
+            inner.cancel();
+            {
+                let _s2 = CancelScope::enter(inner);
+                let p = std::panic::catch_unwind(checkpoint).expect_err("inner token tripped");
+                assert!(was_cancelled(&*p));
+            }
+            // Inner scope popped: the clear outer token is back.
+            checkpoint();
+        }
+        assert!(active().is_none(), "scope must restore on drop");
+    }
+
+    #[test]
+    fn ordinary_panics_are_not_cancellation() {
+        let p = std::panic::catch_unwind(|| panic!("boom")).expect_err("panics");
+        assert!(!was_cancelled(&*p));
+    }
+}

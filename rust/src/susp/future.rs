@@ -376,6 +376,41 @@ impl<T: Send + Sync + 'static> Fut<T> {
         self.0.value.get().expect("woken implies completed")
     }
 
+    /// Bounded [`Fut::wait_result`]: block for at most `timeout`, then
+    /// give up. `Some` carries the raw outcome (value or failure message)
+    /// exactly as `wait_result` would have returned it; `None` means the
+    /// future is still pending — the caller keeps the handle and may wait
+    /// again later. Parks under managed blocking so calling it from a
+    /// pool worker cannot starve the pool; the ready case is a single
+    /// Acquire load.
+    pub fn wait_timeout(&self, timeout: std::time::Duration) -> Option<&Result<T, String>> {
+        if self.0.state.load(Ordering::Acquire) < READY {
+            let deadline = std::time::Instant::now() + timeout;
+            let completed = Executor::blocking(|| {
+                let mut pending = self.0.pending.lock().unwrap();
+                // `pending` is `None` from the moment `complete` takes the
+                // callback list, so `is_some` doubles as "still pending".
+                while pending.is_some() {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        return false;
+                    }
+                    let (guard, res) =
+                        self.0.done.wait_timeout(pending, deadline - now).unwrap();
+                    pending = guard;
+                    if res.timed_out() && pending.is_some() {
+                        return false;
+                    }
+                }
+                true
+            });
+            if !completed {
+                return None;
+            }
+        }
+        Some(self.0.value.get().expect("woken implies completed"))
+    }
+
     /// An explicitly-completed cell: the future/promise pair. The
     /// returned [`Fut`] behaves exactly like a spawned one (lock-free
     /// ready paths, inline `and_then`/`bind` fast paths, managed-blocking
@@ -735,6 +770,98 @@ mod tests {
         let (fut2, promise2) = Fut::<u32>::promise(&ex);
         drop(promise2);
         assert_eq!(fut2.state(), FutState::Panicked);
+    }
+
+    #[test]
+    fn dropped_promise_fails_dependents_through_and_then_chain() {
+        // Simulated runner death: continuations were attached while the
+        // promise was alive, then the producer unwinds without fulfilling.
+        // Every dependent in the chain must resolve (with the drop-guard
+        // failure), not strand its waiters.
+        let ex = Executor::new(2);
+        let (fut, promise) = Fut::<u32>::promise(&ex);
+        let chained = fut.and_then(|x| x + 1).and_then(|x| x * 2);
+        assert!(!chained.is_ready());
+        drop(promise);
+        ex.wait_idle();
+        assert_eq!(chained.state(), FutState::Panicked);
+        match chained.wait_result() {
+            Ok(_) => panic!("dropped promise must fail dependents"),
+            Err(msg) => assert!(msg.contains("promise dropped"), "got: {msg}"),
+        }
+    }
+
+    #[test]
+    fn dropped_promise_fails_dependents_through_bind_chain() {
+        let ex = Executor::new(2);
+        let ex2 = ex.clone();
+        let (fut, promise) = Fut::<u32>::promise(&ex);
+        let bound = fut.bind(move |x| Fut::spawn(&ex2, move || x * 7));
+        assert!(!bound.is_ready());
+        drop(promise);
+        ex.wait_idle();
+        assert_eq!(bound.state(), FutState::Panicked);
+        let msg = bound.wait_result().as_ref().expect_err("must fail");
+        assert!(msg.contains("promise dropped"), "got: {msg}");
+    }
+
+    #[test]
+    fn dropped_promise_observed_after_the_fact_still_fails_inline_maps() {
+        // A continuation attached *after* the drop takes the inline fast
+        // path and must see the same failure.
+        let ex = Executor::new(1);
+        let (fut, promise) = Fut::<u32>::promise(&ex);
+        drop(promise);
+        let mapped = fut.and_then(|x| x + 1);
+        assert_eq!(mapped.state(), FutState::Panicked);
+        let msg = mapped.wait_result().as_ref().expect_err("must fail");
+        assert!(msg.contains("promise dropped"), "got: {msg}");
+    }
+
+    #[test]
+    fn wait_timeout_returns_none_while_pending_and_some_when_done() {
+        let ex = Executor::new(2);
+        let (fut, promise) = Fut::<u32>::promise(&ex);
+        // Pending: a short bounded wait gives up without resolving.
+        let before = std::time::Instant::now();
+        assert!(fut.wait_timeout(Duration::from_millis(20)).is_none());
+        assert!(before.elapsed() >= Duration::from_millis(20));
+        // The handle is still usable afterwards.
+        promise.fulfill(9);
+        match fut.wait_timeout(Duration::from_millis(20)) {
+            Some(Ok(v)) => assert_eq!(*v, 9),
+            other => panic!("expected Ok(9), got {other:?}"),
+        }
+        // Ready case never waits.
+        let ready = Fut::ready(&ex, 3u32);
+        assert_eq!(ready.wait_timeout(Duration::ZERO), Some(&Ok(3)));
+    }
+
+    #[test]
+    fn wait_timeout_wakes_on_completion_mid_wait() {
+        let ex = Executor::new(2);
+        let (fut, promise) = Fut::<u32>::promise(&ex);
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(15));
+            promise.fulfill(44);
+        });
+        // Generous bound: completion arrives well before it.
+        match fut.wait_timeout(Duration::from_secs(10)) {
+            Some(Ok(v)) => assert_eq!(*v, 44),
+            other => panic!("expected Ok(44), got {other:?}"),
+        }
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn wait_timeout_surfaces_failures_like_wait_result() {
+        let ex = Executor::new(1);
+        let (fut, promise) = Fut::<u32>::promise(&ex);
+        promise.fail("producer died");
+        match fut.wait_timeout(Duration::ZERO) {
+            Some(Err(msg)) => assert!(msg.contains("producer died")),
+            other => panic!("expected failure, got {other:?}"),
+        }
     }
 
     #[test]

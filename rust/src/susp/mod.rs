@@ -21,10 +21,12 @@
 //! [`FutureEval`], [`StrictEval`]); stream code is generic over it, which
 //! is the Rust spelling of the paper's "substitute Future for Lazy".
 
+pub mod cancel;
 mod future;
 mod lazy;
 mod strict;
 
+pub use cancel::{CancelScope, CancelToken, Cancelled};
 pub use future::{Fut, FutPromise, FutState, FutureEval};
 pub use lazy::{Lazy, LazyEval};
 pub use strict::{Strict, StrictEval};

@@ -37,7 +37,7 @@ use crate::exec::{Executor, ExecutorConfig};
 use crate::poly::{BlockMultiplier, Coeff, Polynomial};
 use crate::sieve::BlockSiever;
 use crate::stream::CostCache;
-use crate::susp::{Eval, FutureEval, LazyEval, StrictEval};
+use crate::susp::{CancelToken, Eval, FutureEval, LazyEval, StrictEval};
 
 use super::Sizes;
 
@@ -150,6 +150,13 @@ impl Params {
         self.map.get(key).map(String::as_str)
     }
 
+    /// Remove `key`, returning its value if present. Used by the
+    /// coordinator to strip reserved wire parameters (`deadline_ms`)
+    /// before a plugin's schema validation sees them.
+    pub fn remove(&mut self, key: &str) -> Option<String> {
+        self.map.remove(key)
+    }
+
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
@@ -205,6 +212,8 @@ pub enum ParamKind {
     Usize,
     I64,
     Bool,
+    /// Free-form text; plugins validate the accepted values themselves.
+    Str,
 }
 
 impl ParamKind {
@@ -215,11 +224,13 @@ impl ParamKind {
             ParamKind::Usize => "usize",
             ParamKind::I64 => "i64",
             ParamKind::Bool => "bool",
+            ParamKind::Str => "str",
         }
     }
 
     /// Parse `v` to its magnitude for range checking (`None` = type
-    /// error; [`ParamKind::Bool`] has no magnitude and returns 0).
+    /// error; [`ParamKind::Bool`] and [`ParamKind::Str`] have no
+    /// magnitude and return 0).
     fn magnitude(&self, v: &str) -> Option<u64> {
         match self {
             ParamKind::U32 => v.parse::<u32>().ok().map(u64::from),
@@ -227,6 +238,7 @@ impl ParamKind {
             ParamKind::Usize => v.parse::<usize>().ok().map(|x| x as u64),
             ParamKind::I64 => v.parse::<i64>().ok().map(i64::unsigned_abs),
             ParamKind::Bool => v.parse::<bool>().ok().map(|_| 0),
+            ParamKind::Str => Some(0),
         }
     }
 }
@@ -390,6 +402,11 @@ pub struct WorkloadCtx<'a> {
     /// Block siever chunked sieve workloads use.
     pub siever: Arc<dyn BlockSiever>,
     res: &'a dyn ExecResources,
+    /// Cooperative-cancellation token for this job (never trips outside
+    /// the coordinator unless a caller wires one in).
+    cancel: CancelToken,
+    /// Zero-based delivery attempt (> 0 on coordinator retries).
+    attempt: u32,
 }
 
 impl<'a> WorkloadCtx<'a> {
@@ -400,7 +417,42 @@ impl<'a> WorkloadCtx<'a> {
         siever: Arc<dyn BlockSiever>,
         res: &'a dyn ExecResources,
     ) -> WorkloadCtx<'a> {
-        WorkloadCtx { sizes, chunk_policy, multiplier, siever, res }
+        WorkloadCtx {
+            sizes,
+            chunk_policy,
+            multiplier,
+            siever,
+            res,
+            cancel: CancelToken::new(),
+            attempt: 0,
+        }
+    }
+
+    /// Attach the cancellation token the deadline reaper may trip.
+    pub fn with_cancel(mut self, cancel: CancelToken) -> WorkloadCtx<'a> {
+        self.cancel = cancel;
+        self
+    }
+
+    /// Record which delivery attempt this execution is (0 = first).
+    pub fn with_attempt(mut self, attempt: u32) -> WorkloadCtx<'a> {
+        self.attempt = attempt;
+        self
+    }
+
+    /// This job's cancellation token. Long chunked bodies should call
+    /// [`CancelToken::checkpoint`] between chunks; the coordinator also
+    /// installs the token as the ambient
+    /// [`CancelScope`](crate::susp::CancelScope), so stream traversal
+    /// loops poll it without plugin code changes.
+    pub fn cancel(&self) -> &CancelToken {
+        &self.cancel
+    }
+
+    /// Zero-based delivery attempt (> 0 when the coordinator re-leased
+    /// the job after a transient failure).
+    pub fn attempt(&self) -> u32 {
+        self.attempt
     }
 
     /// A warm executor pool of `parallelism` workers from the executing
@@ -563,6 +615,44 @@ mod tests {
         assert_eq!(s.render(), "n:u32=20000");
         let s = ParamSpec::new("n", ParamKind::U32, "20000", "bound").with_range(1, 50);
         assert_eq!(s.render(), "n:u32=20000 in 1..=50");
+    }
+
+    #[test]
+    fn params_remove_strips_reserved_keys() {
+        let mut p = Params::parse("deadline_ms=250,n=7").unwrap();
+        assert_eq!(p.remove("deadline_ms").as_deref(), Some("250"));
+        assert_eq!(p.remove("deadline_ms"), None);
+        assert_eq!(p.render(), "n=7");
+    }
+
+    #[test]
+    fn str_params_validate_as_text() {
+        let specs = [ParamSpec::new("fail_mode", ParamKind::Str, "panic", "fault kind")];
+        validate_params(&specs, &Params::parse("fail_mode=stall").unwrap()).unwrap();
+        // Any text passes the kind check; semantic checks are the
+        // plugin's job.
+        validate_params(&specs, &Params::parse("fail_mode=whatever").unwrap()).unwrap();
+        assert_eq!(specs[0].render(), "fail_mode:str=panic");
+    }
+
+    #[test]
+    fn ctx_carries_cancel_token_and_attempt() {
+        let res = LocalResources::new();
+        let sizes = Sizes::from_config(&crate::config::Config::default());
+        let ctx = WorkloadCtx::new(
+            &sizes,
+            ChunkPolicy::Adaptive,
+            Arc::new(crate::poly::RustMultiplier),
+            Arc::new(crate::sieve::RustSiever),
+            &res,
+        );
+        assert_eq!(ctx.attempt(), 0);
+        assert!(!ctx.cancel().is_cancelled());
+        let token = CancelToken::new();
+        let ctx = ctx.with_cancel(token.clone()).with_attempt(2);
+        assert_eq!(ctx.attempt(), 2);
+        token.cancel();
+        assert!(ctx.cancel().is_cancelled());
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Deterministic fault-injection workload (`faulty`), compiled only
+//! under the `chaos` feature.
+//!
+//! The chaos harness needs a plugin whose failures are *scripted*: the
+//! `chaos_lifecycle` integration suite injects a known number of faults
+//! and then reconciles wire output against the lifecycle counters
+//! exactly. Randomized faults cannot be reconciled that way, so every
+//! knob here is a parameter and the schedule is a pure function of
+//! `(fail_mode, fail_nth, attempt)`:
+//!
+//! * `fail_mode=panic` — `panic!` inside `run` (exercises the
+//!   coordinator's `catch_unwind` isolation and the retry path).
+//! * `fail_mode=stall` — spin on 1 ms sleeps, polling the job's
+//!   [`CancelToken`](crate::susp::CancelToken) checkpoint, until the
+//!   deadline reaper trips it (exercises timeouts) or `stall_ms`
+//!   elapses (the test misconfigured its deadline — succeed rather
+//!   than hang the suite).
+//! * `fail_mode=wrong_result` — return a value the oracle rejects
+//!   (exercises `verified=false` reporting; *not* a transient fault,
+//!   so it must not trigger retries).
+//! * `fail_mode=none` — always succeed (control group).
+//!
+//! A fault fires while `attempt < fail_nth`: `fail_nth=1` with
+//! `retry_max>=1` means "fail the first delivery, succeed on retry" —
+//! the canonical retry-recovers scenario. `fail_nth=0` never fails.
+//!
+//! This plugin is **not** part of the default registry; chaos tests
+//! register it explicitly via [`register_chaos_workloads`].
+
+use std::sync::Arc;
+
+use crate::config::Mode;
+
+use super::api::{
+    ParamKind, ParamSpec, Params, ResultDetail, StreamWorkload, WorkloadCtx, WorkloadError,
+};
+use super::registry::WorkloadRegistry;
+
+/// Register the `faulty` plugin into `reg` (chaos builds only).
+pub fn register_chaos_workloads(reg: &mut WorkloadRegistry) -> Result<(), WorkloadError> {
+    reg.register(Arc::new(FaultyWorkload))?;
+    Ok(())
+}
+
+const FAIL_MODES: [&str; 4] = ["panic", "stall", "wrong_result", "none"];
+
+/// Scripted-failure workload: see the module docs for the schedule.
+pub struct FaultyWorkload;
+
+impl FaultyWorkload {
+    fn expected_value(seed: u64) -> String {
+        seed.to_string()
+    }
+}
+
+impl StreamWorkload for FaultyWorkload {
+    fn name(&self) -> &str {
+        "faulty"
+    }
+
+    fn describe(&self) -> &str {
+        "deterministic fault injection: scripted panics, stalls, and wrong results"
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec::new("fail_mode", ParamKind::Str, "panic", "panic|stall|wrong_result|none"),
+            ParamSpec::new(
+                "fail_nth",
+                ParamKind::U32,
+                "1",
+                "fault fires while attempt < fail_nth (0 = never)",
+            )
+            .with_range(0, 64),
+            ParamSpec::new("seed", ParamKind::U64, "0", "labels the job; success value = seed"),
+            ParamSpec::new(
+                "stall_ms",
+                ParamKind::U64,
+                "30000",
+                "stall mode gives up (succeeds) after this long",
+            )
+            .with_range(0, 600_000),
+        ]
+    }
+
+    fn validate(&self, params: &Params) -> Result<(), WorkloadError> {
+        super::api::validate_params(&self.params(), params)?;
+        let mode = params.get("fail_mode").unwrap_or("panic");
+        if !FAIL_MODES.contains(&mode) {
+            return Err(WorkloadError::new(format!(
+                "bad value for param fail_mode: {mode:?} (want one of {})",
+                FAIL_MODES.join("|")
+            )));
+        }
+        Ok(())
+    }
+
+    fn run(
+        &self,
+        ctx: &WorkloadCtx<'_>,
+        _mode: Mode,
+        params: &Params,
+    ) -> Result<ResultDetail, WorkloadError> {
+        let fail_mode = params.get("fail_mode").unwrap_or("panic");
+        let fail_nth = params.get_u32("fail_nth", 1)?;
+        let seed = params.get_u64("seed", 0)?;
+        let stall_ms = params.get_u64("stall_ms", 30_000)?;
+        let attempt = ctx.attempt();
+        if attempt < fail_nth {
+            match fail_mode {
+                "panic" => panic!("injected panic (attempt {attempt} seed {seed})"),
+                "stall" => {
+                    // Stay cancellable: the deadline reaper trips the
+                    // token and the checkpoint unwinds as a timeout.
+                    // The stall_ms cap keeps a misconfigured test from
+                    // hanging forever.
+                    for _ in 0..stall_ms {
+                        ctx.cancel().checkpoint();
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                }
+                "wrong_result" => {
+                    return Ok(ResultDetail::Scalar {
+                        value: Self::expected_value(seed.wrapping_add(1)),
+                    });
+                }
+                _ => {}
+            }
+        }
+        Ok(ResultDetail::Scalar { value: Self::expected_value(seed) })
+    }
+
+    fn verify(&self, _ctx: &WorkloadCtx<'_>, params: &Params, detail: &ResultDetail) -> bool {
+        let Ok(seed) = params.get_u64("seed", 0) else {
+            return false;
+        };
+        matches!(detail, ResultDetail::Scalar { value } if *value == Self::expected_value(seed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChunkPolicy, Config};
+    use crate::poly::RustMultiplier;
+    use crate::sieve::RustSiever;
+    use crate::susp::CancelToken;
+    use crate::workload::api::LocalResources;
+    use crate::workload::Sizes;
+
+    fn with_ctx<R>(f: impl FnOnce(WorkloadCtx<'_>) -> R) -> R {
+        let res = LocalResources::new();
+        let sizes = Sizes::from_config(&Config::default());
+        f(WorkloadCtx::new(
+            &sizes,
+            ChunkPolicy::Adaptive,
+            Arc::new(RustMultiplier),
+            Arc::new(RustSiever),
+            &res,
+        ))
+    }
+
+    #[test]
+    fn schedule_is_a_pure_function_of_attempt() {
+        let w = FaultyWorkload;
+        let params = Params::parse("fail_mode=panic,fail_nth=1,seed=9").unwrap();
+        // Attempt 0 panics…
+        let panicked = with_ctx(|ctx| {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                w.run(&ctx, Mode::Seq, &params)
+            }))
+            .is_err()
+        });
+        assert!(panicked);
+        // …attempt 1 (the retry) succeeds with the seed value.
+        with_ctx(|ctx| {
+            let ctx = ctx.with_attempt(1);
+            let detail = w.run(&ctx, Mode::Seq, &params).unwrap();
+            assert!(w.verify(&ctx, &params, &detail));
+            assert_eq!(detail, ResultDetail::Scalar { value: "9".into() });
+        });
+    }
+
+    #[test]
+    fn wrong_result_fails_verification_without_panicking() {
+        let w = FaultyWorkload;
+        let params = Params::parse("fail_mode=wrong_result,seed=4").unwrap();
+        with_ctx(|ctx| {
+            let detail = w.run(&ctx, Mode::Seq, &params).unwrap();
+            assert!(!w.verify(&ctx, &params, &detail));
+        });
+    }
+
+    #[test]
+    fn stall_unwinds_as_cancelled_when_token_trips() {
+        let w = FaultyWorkload;
+        let params = Params::parse("fail_mode=stall,stall_ms=60000").unwrap();
+        let token = CancelToken::new();
+        token.cancel();
+        let payload = with_ctx(|ctx| {
+            let ctx = ctx.with_cancel(token.clone());
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                w.run(&ctx, Mode::Seq, &params)
+            }))
+            .unwrap_err()
+        });
+        assert!(crate::susp::cancel::was_cancelled(&*payload));
+    }
+
+    #[test]
+    fn validate_rejects_unknown_fail_modes_and_params() {
+        let w = FaultyWorkload;
+        w.validate(&Params::parse("fail_mode=none,fail_nth=0").unwrap()).unwrap();
+        let e = w.validate(&Params::parse("fail_mode=explode").unwrap()).unwrap_err();
+        assert!(e.message.contains("bad value for param fail_mode"), "{e}");
+        assert!(w.validate(&Params::parse("boom=1").unwrap()).is_err());
+    }
+}

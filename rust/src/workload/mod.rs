@@ -10,7 +10,10 @@
 //!   families (sieve, stream-multiply, list baseline);
 //! * [`extra`] — workloads added through the public API alone (`fib`,
 //!   `msort`), proving the coordinator needs no edits for new
-//!   scenarios.
+//!   scenarios;
+//! * `faulty` (behind the `chaos` feature) — the deterministic
+//!   fault-injection plugin the chaos lifecycle suite drives. Never in
+//!   the default registry.
 //!
 //! It also keeps the shared generators: the polynomial test case is
 //! Fateman's sparse-multiplication benchmark [2] — take
@@ -21,6 +24,8 @@
 pub mod api;
 pub mod builtin;
 pub mod extra;
+#[cfg(feature = "chaos")]
+pub mod faulty;
 pub mod registry;
 
 pub use api::{
@@ -29,6 +34,8 @@ pub use api::{
 };
 pub use builtin::{ListMulWorkload, PolyMulWorkload, SieveWorkload};
 pub use extra::{FibWorkload, MergeSortWorkload};
+#[cfg(feature = "chaos")]
+pub use faulty::{register_chaos_workloads, FaultyWorkload};
 pub use registry::WorkloadRegistry;
 
 use crate::bigint::BigInt;

@@ -1,0 +1,330 @@
+//! Seeded chaos suite for the fault-contained job lifecycle (requires
+//! `--features chaos`).
+//!
+//! Every scenario injects a *known* schedule of faults through the
+//! `faulty` workload or the ingress runner-fault hook and then checks
+//! the lifecycle invariant: **every submitted job resolves to exactly
+//! one terminal outcome** — a verified `ok`, a `verified=false` ok, or
+//! one machine-parseable `err` line from the documented taxonomy
+//! (`panicked` / `timeout` / `rejected` / abandoned) — with the wire
+//! totals reconciling *exactly* against the `jobs.panicked` /
+//! `jobs.timed_out` / `jobs.retried` counters, no runner thread dying
+//! permanently, and graceful drain resolving every outstanding ticket.
+//!
+//! CI runs the suite under both `SFUT_DEQUE=chase_lev` and `=locked`
+//! and uploads the reconciliation dump the concurrent-TCP scenario
+//! writes (`CHAOS_report.json`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use stream_future::config::Config;
+use stream_future::coordinator::{serve, JobRequest, Pipeline, TcpServer};
+use stream_future::exec::DequeKind;
+use stream_future::workload::{register_chaos_workloads, WorkloadRegistry};
+
+fn chaos_pipeline(cfg: Config) -> Pipeline {
+    let mut reg = WorkloadRegistry::builtin();
+    register_chaos_workloads(&mut reg).unwrap();
+    Pipeline::with_registry(cfg, reg).unwrap()
+}
+
+fn base_config() -> Config {
+    let mut cfg = Config::default();
+    cfg.primes_n = 300;
+    cfg.fateman_degree = 2;
+    cfg.chunk_size = 16;
+    cfg.use_kernel = false;
+    cfg.shards = 1;
+    cfg.shard_parallelism = 1;
+    cfg.dispatchers = 1;
+    cfg.queue_depth = 8;
+    cfg
+}
+
+fn counter(p: &Pipeline, name: &str) -> u64 {
+    p.metrics().snapshot().counters.get(name).copied().unwrap_or(0)
+}
+
+fn session(addr: std::net::SocketAddr, script: &str) -> Vec<String> {
+    let mut sock = TcpStream::connect(addr).unwrap();
+    sock.write_all(script.as_bytes()).unwrap();
+    sock.flush().unwrap();
+    sock.shutdown(std::net::Shutdown::Write).unwrap();
+    BufReader::new(sock).lines().map(|l| l.unwrap()).collect()
+}
+
+/// A workload panic costs exactly one job: the wire gets the documented
+/// `err panicked …` line (reason last — it contains spaces), the runner
+/// thread survives to serve the next request, and nothing retried.
+#[test]
+fn panic_is_contained_to_one_job_and_machine_parseable() {
+    let p = chaos_pipeline(base_config());
+    let script = "run faulty(fail_mode=panic,seed=7) seq\nrun primes seq\n";
+    let mut out = Vec::new();
+    let jobs = serve(&p, script.as_bytes(), &mut out).unwrap();
+    let out = String::from_utf8(out).unwrap();
+    assert_eq!(jobs, 1, "{out}");
+    let line = out.lines().find(|l| l.starts_with("err panicked ")).expect("panicked line");
+    assert!(line.contains("workload=faulty(fail_mode=panic,seed=7)"), "{line}");
+    assert!(line.contains("mode=seq"), "{line}");
+    assert!(line.ends_with("reason=injected panic (attempt 0 seed 7)"), "{line}");
+    // The single runner that caught the panic served the follow-up job:
+    // containment, not survival-by-respawn.
+    assert!(out.contains("ok workload=primes"), "{out}");
+    assert_eq!(counter(&p, "jobs.panicked"), 1);
+    assert_eq!(counter(&p, "jobs.retried"), 0);
+    // Caught at the workload boundary — the runner-level guard never
+    // had to fire.
+    assert_eq!(counter(&p, "ingress.runner_recovered"), 0);
+}
+
+/// Transient panics retry with backoff onto a fresh attempt and
+/// recover: every job ends verified, with the panic and retry counters
+/// agreeing exactly on how many first attempts died.
+#[test]
+fn transient_panic_retries_and_recovers() {
+    let mut cfg = base_config();
+    cfg.retry_max = 1;
+    cfg.retry_backoff_ms = 1;
+    let p = chaos_pipeline(cfg);
+    for seed in 0..3u64 {
+        let spec = format!("faulty(fail_mode=panic,fail_nth=1,seed={seed}) seq");
+        let res = p.run(&JobRequest::parse(&spec).unwrap()).unwrap();
+        assert!(res.verified, "retry must recover seed {seed}");
+    }
+    assert_eq!(counter(&p, "jobs.panicked"), 3);
+    assert_eq!(counter(&p, "jobs.retried"), 3);
+    assert_eq!(counter(&p, "jobs.completed"), 3);
+}
+
+/// The per-job deadline reaps a stalled workload through the
+/// cooperative cancel token: terminal `timeout` outcome naming the
+/// deadline, long before the stall's own 60 s give-up.
+#[test]
+fn deadline_reaps_stalled_job_as_timeout() {
+    let p = chaos_pipeline(base_config());
+    let spec = "faulty(deadline_ms=120,fail_mode=stall,stall_ms=60000) seq";
+    let started = Instant::now();
+    let err = p.run(&JobRequest::parse(spec).unwrap()).unwrap_err().to_string();
+    assert!(
+        started.elapsed() < Duration::from_secs(30),
+        "deadline must cut the stall short, not wait it out"
+    );
+    assert!(err.starts_with("timeout workload=faulty"), "{err}");
+    assert!(err.contains("mode=seq"), "{err}");
+    assert!(err.contains("deadline_ms=120"), "{err}");
+    assert_eq!(counter(&p, "jobs.timed_out"), 1);
+}
+
+/// A wrong result is a *deterministic* fault: it reports
+/// `verified=false` and must not burn retry budget (retrying would
+/// produce the same wrong answer).
+#[test]
+fn wrong_result_is_not_transient_and_never_retries() {
+    let mut cfg = base_config();
+    cfg.retry_max = 2;
+    cfg.retry_backoff_ms = 1;
+    let p = chaos_pipeline(cfg);
+    let res = p.run(&JobRequest::parse("faulty(fail_mode=wrong_result,seed=5) seq").unwrap());
+    let res = res.unwrap();
+    assert!(!res.verified);
+    assert_eq!(counter(&p, "jobs.retried"), 0);
+    assert_eq!(counter(&p, "jobs.panicked"), 0);
+}
+
+/// Repeated panics open the per-workload circuit breaker: further
+/// submissions answer up front with the documented rejected line (no
+/// queue capacity taken), other workloads keep flowing, and the
+/// `breaker.faulty.open` gauge flips.
+#[test]
+fn breaker_quarantines_workload_after_repeated_panics() {
+    let mut cfg = base_config();
+    cfg.breaker_threshold = 2;
+    let p = chaos_pipeline(cfg);
+    for _ in 0..2 {
+        let err = p.run(&JobRequest::parse("faulty(fail_mode=panic) seq").unwrap()).unwrap_err();
+        assert!(err.to_string().starts_with("panicked workload=faulty"), "{err:#}");
+    }
+    let mut out = Vec::new();
+    serve(&p, "run faulty(fail_mode=none) seq\nrun primes seq\n".as_bytes(), &mut out).unwrap();
+    let out = String::from_utf8(out).unwrap();
+    let line = out
+        .lines()
+        .find(|l| l.starts_with("err rejected workload=faulty"))
+        .expect("breaker rejection line");
+    assert!(
+        line.contains("reason: breaker open: workload faulty quarantined after repeated panics"),
+        "{line}"
+    );
+    assert!(out.contains("ok workload=primes"), "healthy workloads keep flowing: {out}");
+    assert_eq!(p.metrics().snapshot().gauges["breaker.faulty.open"], 1);
+    // Direct submissions see the same quarantine.
+    match p.submit(&JobRequest::parse("faulty(fail_mode=none) seq").unwrap()) {
+        Err(e) => assert!(e.to_string().contains("breaker open"), "{e}"),
+        Ok(_) => panic!("expected breaker rejection, got a ticket"),
+    }
+}
+
+/// Seeded runner-level faults (the hook panics *outside* the workload
+/// boundary): exactly the scheduled jobs resolve as abandoned tickets
+/// via the promise drop-guard, the recovery counter matches, and the
+/// runner thread keeps serving afterwards.
+#[test]
+fn injected_runner_faults_abandon_exactly_their_jobs_and_recover() {
+    let p = chaos_pipeline(base_config());
+    p.ingress().chaos_set_runner_panic_every(2);
+    let req = JobRequest::parse("primes seq").unwrap();
+    let tickets: Vec<_> = (0..4).map(|_| p.submit(&req).unwrap()).collect();
+    let mut oks = 0u32;
+    let mut abandoned = 0u32;
+    for t in &tickets {
+        match t.wait() {
+            Ok(res) => {
+                assert!(res.verified);
+                oks += 1;
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(msg.contains("job ticket abandoned"), "{msg}");
+                assert!(msg.contains("promise dropped before completion"), "{msg}");
+                abandoned += 1;
+            }
+        }
+    }
+    assert_eq!((oks, abandoned), (2, 2), "every-2nd schedule: half abandoned");
+    assert_eq!(counter(&p, "ingress.runner_recovered"), 2);
+    // Injection off: the surviving runner serves normally.
+    p.ingress().chaos_set_runner_panic_every(0);
+    assert!(p.run(&req).unwrap().verified);
+}
+
+/// Graceful drain under pending faults: queued jobs (including ones
+/// scheduled to panic once and recover on retry) all execute during
+/// shutdown — every ticket resolves, none hang, none are abandoned.
+#[test]
+fn graceful_drain_resolves_every_ticket() {
+    let mut cfg = base_config();
+    cfg.retry_max = 1;
+    cfg.retry_backoff_ms = 1;
+    let p = chaos_pipeline(cfg);
+    p.ingress().set_runner_hold(0, true);
+    let specs = [
+        "faulty(fail_mode=panic,fail_nth=1,seed=1) seq",
+        "faulty(fail_mode=none,seed=2) seq",
+        "primes seq",
+        "faulty(fail_mode=panic,fail_nth=1,seed=3) seq",
+    ];
+    let tickets: Vec<_> =
+        specs.iter().map(|s| p.submit(&JobRequest::parse(s).unwrap()).unwrap()).collect();
+    assert!(tickets.iter().all(|t| !t.is_ready()), "hold keeps the queue parked");
+    // Dropping the last handle shuts the ingress down; the drain clears
+    // holds and executes (and where scheduled, retries) every job.
+    drop(p);
+    for (t, spec) in tickets.iter().zip(specs) {
+        let res = t.wait().unwrap_or_else(|e| panic!("{spec} not resolved by drain: {e:#}"));
+        assert!(res.verified, "{spec}");
+    }
+}
+
+/// The headline invariant, end-to-end over TCP: four concurrent
+/// sessions mixing scripted panics, stalls-under-deadline, wrong
+/// results, and healthy jobs. Every request gets exactly one response
+/// line from the documented grammar, and the wire totals reconcile
+/// *exactly* with the lifecycle counters. Writes `CHAOS_report.json`
+/// (the CI artifact) after the asserts pass.
+#[test]
+fn concurrent_sessions_reconcile_faults_exactly() {
+    let mut cfg = base_config();
+    cfg.shards = 2;
+    cfg.shard_parallelism = 2;
+    cfg.dispatchers = 2;
+    cfg.queue_depth = 16;
+    let p = Arc::new(chaos_pipeline(cfg));
+    let server = TcpServer::start(Arc::clone(&p), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+
+    let sessions = 4usize;
+    let commands_per_session = 6usize;
+    let all_lines: Vec<String> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..sessions)
+            .map(|i| {
+                s.spawn(move || {
+                    let script = format!(
+                        "run faulty(fail_mode=panic,seed={i}) seq\n\
+                         run faulty(fail_mode=none,seed={i}) seq\n\
+                         run primes seq\n\
+                         run faulty(fail_mode=wrong_result,seed={i}) seq\n\
+                         run faulty(deadline_ms=150,fail_mode=stall,stall_ms=60000) seq\n\
+                         run primes par(2)\n"
+                    );
+                    session(addr, &script)
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+
+    let total = sessions * commands_per_session;
+    assert_eq!(all_lines.len(), total, "exactly one terminal line per request: {all_lines:?}");
+    let mut oks = 0u64;
+    let mut wrongs = 0u64;
+    let mut panics = 0u64;
+    let mut timeouts = 0u64;
+    for line in &all_lines {
+        if line.starts_with("ok ") {
+            oks += 1;
+            if line.contains("verified=false") {
+                assert!(line.contains("workload=faulty(fail_mode=wrong_result"), "{line}");
+                wrongs += 1;
+            }
+        } else if line.starts_with("err panicked workload=faulty") {
+            assert!(line.contains("reason=injected panic"), "{line}");
+            panics += 1;
+        } else if line.starts_with("err timeout workload=faulty") {
+            assert!(line.contains("deadline_ms=150"), "{line}");
+            timeouts += 1;
+        } else {
+            panic!("response line outside the documented grammar: {line}");
+        }
+    }
+    assert_eq!(oks, (4 * sessions) as u64, "{all_lines:?}");
+    assert_eq!(wrongs, sessions as u64, "{all_lines:?}");
+    assert_eq!(panics, sessions as u64, "{all_lines:?}");
+    assert_eq!(timeouts, sessions as u64, "{all_lines:?}");
+
+    // Wire ↔ counter reconciliation, exact.
+    let snap = p.metrics().snapshot();
+    assert_eq!(snap.counters["jobs.completed"], oks);
+    assert_eq!(snap.counters["jobs.panicked"], panics);
+    assert_eq!(snap.counters["jobs.timed_out"], timeouts);
+    assert_eq!(snap.counters.get("jobs.retried").copied().unwrap_or(0), 0);
+    assert_eq!(snap.counters.get("ingress.runner_recovered").copied().unwrap_or(0), 0);
+    assert_eq!(snap.counters["ingress.submitted"], total as u64);
+    assert_eq!(snap.counters["ingress.admitted"], total as u64);
+    assert_eq!(snap.gauges["ingress.queue_depth"], 0);
+    // No runner died permanently: the same pipeline still serves.
+    assert!(p.run(&JobRequest::parse("primes seq").unwrap()).unwrap().verified);
+
+    let json = format!(
+        "{{\n  \"suite\": \"chaos_lifecycle\",\n  \"profile\": \"{}\",\n  \"deque\": \"{}\",\n  \
+         \"sessions\": {sessions},\n  \"requests\": {total},\n  \
+         \"injected\": {{ \"panic\": {sessions}, \"stall\": {sessions}, \
+         \"wrong_result\": {sessions} }},\n  \
+         \"observed\": {{ \"ok\": {oks}, \"verified_false\": {wrongs}, \
+         \"panicked\": {panics}, \"timed_out\": {timeouts} }},\n  \
+         \"counters\": {{ \"jobs_completed\": {}, \"jobs_panicked\": {}, \
+         \"jobs_timed_out\": {}, \"jobs_retried\": 0, \"runner_recovered\": 0 }},\n  \
+         \"reconciled\": true\n}}\n",
+        if cfg!(debug_assertions) { "debug" } else { "release" },
+        DequeKind::default_kind().label(),
+        snap.counters["jobs.completed"],
+        snap.counters["jobs.panicked"],
+        snap.counters["jobs.timed_out"],
+    );
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("CHAOS_report.json");
+    std::fs::write(&out, json).expect("writing chaos reconciliation report");
+}
