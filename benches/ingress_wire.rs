@@ -1,0 +1,73 @@
+//! Framed-vs-text ingress saturation A/B → `BENCH_ingress.json`.
+//!
+//! One invocation sweeps BOTH wire modes over a connection ladder
+//! against otherwise identical pipelines (see
+//! `bench_harness::ingress_bench` for the measurement discipline and
+//! the both-modes gate invariant). Release numbers overwrite any
+//! test-seeded trajectory file; the CI ingress gate
+//! (`ci/check_bench.sh ingress`) compares the overwritten file against
+//! the committed baseline via `sfut check-bench`.
+//!
+//! Environment knobs (on top of `benches/common`'s `SFUT_SCALE`,
+//! `SFUT_BENCH_SAMPLES`, `SFUT_BENCH_WARMUP`, `SFUT_NO_KERNEL`):
+//! * `SFUT_INGRESS_CONNS` — connection ladder, e.g. `1,2,4` (default 1,2)
+//! * `SFUT_INGRESS_JOBS`  — submit→wait round-trips per connection per
+//!   sample (default 3)
+//!
+//! Run: `cargo bench --bench ingress_wire`.
+
+mod common;
+
+use stream_future::bench_harness::{ingress_bench, BenchOptions};
+
+fn main() {
+    let cfg = common::bench_config();
+    common::banner("ingress_wire", &cfg);
+
+    let params = ingress_bench::IngressBenchParams {
+        connections: ingress_bench::connections_from_env().unwrap_or_else(|| vec![1, 2]),
+        jobs_per_connection: ingress_bench::jobs_from_env().unwrap_or(3),
+        ..Default::default()
+    };
+    let opts = BenchOptions {
+        warmup: cfg.warmup.max(1),
+        samples: cfg.samples.max(3),
+        verbose: false,
+    };
+    eprintln!(
+        "wires={:?} connections={:?} jobs/connection={}",
+        params.wires.iter().map(|w| w.label()).collect::<Vec<_>>(),
+        params.connections,
+        params.jobs_per_connection
+    );
+
+    let bench = ingress_bench::run(&cfg, &params, &opts).expect("ingress bench failed");
+    println!(
+        "\ningress wire saturation ({} profile, {} jobs/connection):",
+        bench.profile, bench.jobs_per_connection
+    );
+    for p in &bench.points {
+        println!(
+            "  {:<7} conns={:<2} {:>10.1} jobs/s   p50={:>8.2}ms p95={:>8.2}ms shed={:>5.1}%",
+            p.wire,
+            p.connections,
+            p.jobs_per_sec,
+            p.p50_ms,
+            p.p95_ms,
+            p.shed_rate * 100.0
+        );
+    }
+
+    let out = ingress_bench::default_output_path();
+    match ingress_bench::write_json(&bench, &out) {
+        Ok(()) => println!("\nwrote {}", out.display()),
+        Err(e) => {
+            // Exiting nonzero matters: if the trajectory file silently
+            // kept its old contents, the CI gate would compare the
+            // committed baseline against itself and always pass.
+            eprintln!("\ncould not write {}: {e}", out.display());
+            std::process::exit(1);
+        }
+    }
+    println!("ingress_wire done");
+}

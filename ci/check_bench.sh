@@ -1,13 +1,23 @@
 #!/usr/bin/env bash
-# Pipeline perf-regression gate. Runs the small-scale pipeline bench and
-# compares it against the committed BENCH_pipeline.json baseline via
-# `sfut check-bench`, failing on a >25% (BENCH_GATE_THRESHOLD) jobs/sec
-# drop in any (workload, shards) cell. Runs identically in CI
-# (.github/workflows/ci.yml, job `bench-gate`) and locally:
+# Perf-regression gates. Each gate runs a small-scale bench and compares
+# it against its committed baseline via `sfut check-bench`, failing on a
+# >25% (BENCH_GATE_THRESHOLD) jobs/sec drop in any comparable cell.
+# Runs identically in CI (.github/workflows/ci.yml, job `bench-gate`)
+# and locally:
 #
-#   ci/check_bench.sh
+#   ci/check_bench.sh [pipeline|ingress|all]
 #
-# Behaviour:
+# Targets (default `all`, so the argless invocation keeps working):
+#   * pipeline — `cargo bench --bench pipeline_throughput` vs
+#                BENCH_pipeline.json (per (workload, shards) cell);
+#   * ingress  — `cargo bench --bench ingress_wire` vs
+#                BENCH_ingress.json: the framed-vs-text A/B — one
+#                harness invocation sweeps BOTH wire modes, and
+#                `sfut check-bench` hard-fails if either side is
+#                missing from the current run (per (wire, connections)
+#                cell otherwise).
+#
+# Behaviour (per gate):
 #   * no committed baseline      → seed one (prints a reminder to commit
 #                                  it), exit 0 — the gate arms itself on
 #                                  the next run;
@@ -20,15 +30,14 @@
 #                                  a broken bench writer must FAIL the
 #                                  gate, not disarm it into a skip.
 #
-# Latency gating: p95 job latency and p95 queue-wait growth beyond
-# BENCH_GATE_LATENCY_THRESHOLD warns by default. Set
-# BENCH_GATE_LATENCY_STRICT=1 to pass --latency-strict, which fails the
-# gate on those findings instead — with one safety: while the committed
-# baseline's "note" field still marks it a synthetic floor, strict mode
-# auto-disarms back to warn-only (the gate must not fire on fictional
-# ceilings).
+# Latency gating: p95 latency growth beyond BENCH_GATE_LATENCY_THRESHOLD
+# warns by default. Set BENCH_GATE_LATENCY_STRICT=1 to pass
+# --latency-strict, which fails the gate on those findings instead —
+# with one safety: while a committed baseline's "note" field still marks
+# it a synthetic floor, strict mode auto-disarms back to warn-only (the
+# gate must not fire on fictional ceilings).
 #
-# Refreshing the committed baseline with MEASURED numbers (the path off
+# Refreshing a committed baseline with MEASURED numbers (the path off
 # the synthetic floor):
 #   1. Trigger the `bench-baseline` workflow
 #      (.github/workflows/bench-baseline.yml) from the Actions tab
@@ -43,13 +52,14 @@
 #      `sfut check-bench` on like-labeled scheduler/deque points).
 #   3. Commit. From that run on, the gate compares against measured
 #      numbers, and BENCH_GATE_LATENCY_STRICT=1 has teeth.
-#   Alternatively run `SFUT_SCALE=0.05 cargo bench --bench
-#   pipeline_throughput` on a quiet machine matching CI's core count and
-#   commit the overwritten BENCH_pipeline.json.
+#   Alternatively run the bench on a quiet machine matching CI's core
+#   count and commit the overwritten trajectory file, e.g.
+#   `SFUT_SCALE=0.05 cargo bench --bench pipeline_throughput` or
+#   `SFUT_SCALE=0.05 cargo bench --bench ingress_wire`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-BASELINE="BENCH_pipeline.json"
+TARGET="${1:-all}"
 THRESHOLD="${BENCH_GATE_THRESHOLD:-0.25}"
 # p95 latency / queue-wait growth tolerated before a finding
 # (warn-only unless BENCH_GATE_LATENCY_STRICT=1; see
@@ -68,38 +78,60 @@ export SFUT_PIPELINE_CLIENTS="${SFUT_PIPELINE_CLIENTS:-2}"
 export SFUT_PIPELINE_JOBS="${SFUT_PIPELINE_JOBS:-3}"
 export SFUT_NO_KERNEL=1
 
-if [[ ! -f "$BASELINE" ]]; then
-    # A committed floor baseline normally prevents this branch; landing
-    # here means the gate is NOT enforcing anything this run.
-    echo "::warning title=bench-gate unarmed::no committed $BASELINE — seeding a baseline; commit it to arm the gate"
-    cargo bench --bench pipeline_throughput
-    echo "seeded $BASELINE; the gate is a no-op until it is committed"
-    exit 0
-fi
+trap 'rm -f BENCH_pipeline.json.baseline BENCH_ingress.json.baseline' EXIT
 
-cp "$BASELINE" "$BASELINE.baseline"
-trap 'rm -f "$BASELINE.baseline"' EXIT
+# run_gate <label> <baseline file> <bench target>
+run_gate() {
+    local label="$1" baseline="$2" bench="$3"
 
-# The bench overwrites $BASELINE with the fresh run (uploaded as the CI
-# artifact); the copy above is the committed baseline we compare against.
-cargo bench --bench pipeline_throughput
+    if [[ ! -f "$baseline" ]]; then
+        # A committed floor baseline normally prevents this branch;
+        # landing here means this gate is NOT enforcing anything.
+        echo "::warning title=bench-gate unarmed::no committed $baseline — seeding a baseline; commit it to arm the $label gate"
+        cargo bench --bench "$bench"
+        echo "seeded $baseline; the $label gate is a no-op until it is committed"
+        return 0
+    fi
 
-# Teeth: a bench run that produced no/empty output is a broken writer —
-# fail loudly instead of letting the compare step skip on a half-parsed
-# document.
-if [[ ! -s "$BASELINE" ]]; then
-    echo "::error title=bench-gate::bench run left no (or empty) $BASELINE — failing the gate, not skipping it"
-    exit 1
-fi
+    cp "$baseline" "$baseline.baseline"
 
-set +e
-cargo run --release --quiet --bin sfut -- \
-    check-bench "$BASELINE.baseline" "$BASELINE" \
-    --threshold "$THRESHOLD" --latency-threshold "$LATENCY_THRESHOLD" \
-    ${STRICT_ARGS[@]+"${STRICT_ARGS[@]}"}
-status=$?
-set -e
-if [[ "$status" -ne 0 ]]; then
-    echo "::error title=bench-gate::sfut check-bench failed (exit $status) — regression, or malformed current run"
-    exit "$status"
-fi
+    # The bench overwrites $baseline with the fresh run (uploaded as the
+    # CI artifact); the copy above is the committed baseline we compare
+    # against.
+    cargo bench --bench "$bench"
+
+    # Teeth: a bench run that produced no/empty output is a broken
+    # writer — fail loudly instead of letting the compare step skip on a
+    # half-parsed document.
+    if [[ ! -s "$baseline" ]]; then
+        echo "::error title=bench-gate::$bench run left no (or empty) $baseline — failing the $label gate, not skipping it"
+        return 1
+    fi
+
+    local status=0
+    cargo run --release --quiet --bin sfut -- \
+        check-bench "$baseline.baseline" "$baseline" \
+        --threshold "$THRESHOLD" --latency-threshold "$LATENCY_THRESHOLD" \
+        ${STRICT_ARGS[@]+"${STRICT_ARGS[@]}"} || status=$?
+    if [[ "$status" -ne 0 ]]; then
+        echo "::error title=bench-gate::sfut check-bench failed for $label (exit $status) — regression, or malformed current run"
+        return "$status"
+    fi
+}
+
+case "$TARGET" in
+    pipeline)
+        run_gate pipeline BENCH_pipeline.json pipeline_throughput
+        ;;
+    ingress)
+        run_gate ingress BENCH_ingress.json ingress_wire
+        ;;
+    all)
+        run_gate pipeline BENCH_pipeline.json pipeline_throughput
+        run_gate ingress BENCH_ingress.json ingress_wire
+        ;;
+    *)
+        echo "usage: ci/check_bench.sh [pipeline|ingress|all]" >&2
+        exit 2
+        ;;
+esac

@@ -1,0 +1,574 @@
+//! Framed-vs-text wire saturation benchmark with a machine-readable
+//! trajectory (`BENCH_ingress.json`).
+//!
+//! The event-loop ingress replaced thread-per-session TCP with a poll
+//! reactor speaking length-prefixed frames; this harness is its A/B
+//! evidence and regression tripwire. One invocation sweeps **both**
+//! wire modes over a connection-count ladder against otherwise
+//! identical pipelines: per (wire, connections) cell, `connections`
+//! client threads each drive `jobs_per_connection` submit→wait
+//! round-trips through a real TCP listener ([`TcpServer::start_wire`])
+//! — [`FramedClient`] frames on the reactor, `run <spec>` lines on the
+//! thread-per-session baseline — with the same warmup +
+//! median-of-samples discipline as the other trajectories
+//! ([`measure`]). Reported per cell: jobs/sec, per-job p50/p95, and
+//! the ingress shed rate over the cell.
+//!
+//! Seeding discipline matches `BENCH_pipeline.json`: the committed
+//! file is a synthetic floor baseline, `cargo test` seeds only when
+//! absent, and `cargo bench --bench ingress_wire` overwrites — that
+//! bench target is how CI (`ci/check_bench.sh ingress`) regenerates
+//! the current run for the gate. `SFUT_INGRESS_BENCH_FORCE=1` lets the
+//! test-side seeder overwrite too.
+//! [`gate`] compares like cells only and **hard-errors unless the
+//! current run carries both framed and text rows**: a harness that
+//! silently dropped one side of the A/B must fail the gate, not pass
+//! it on the surviving half.
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::tiny_json::{self, Json};
+use super::{measure, BenchOptions, GateOutcome, GateReport, LatencyGate};
+use crate::config::{Config, WireProtocol};
+use crate::coordinator::{Pipeline, TcpServer};
+use crate::testkit::wire::{FramedClient, SubmitReply};
+
+/// Shape of one saturation sweep.
+#[derive(Debug, Clone)]
+pub struct IngressBenchParams {
+    /// Wire modes to sweep — both, for the A/B (text-only off unix,
+    /// where the poll reactor is unavailable).
+    pub wires: Vec<WireProtocol>,
+    /// Concurrent connections per cell, ascending.
+    pub connections: Vec<usize>,
+    /// Submit→wait round-trips each connection drives per sample.
+    pub jobs_per_connection: usize,
+    /// Request spec every job runs, e.g. `primes par(2)`.
+    pub spec: String,
+}
+
+impl Default for IngressBenchParams {
+    fn default() -> Self {
+        IngressBenchParams {
+            wires: default_wires(),
+            connections: vec![1, 2],
+            jobs_per_connection: 3,
+            spec: "primes par(2)".to_string(),
+        }
+    }
+}
+
+/// Both wire modes on unix; the framed reactor needs poll(2), so other
+/// platforms sweep the text baseline only.
+pub fn default_wires() -> Vec<WireProtocol> {
+    if cfg!(unix) {
+        vec![WireProtocol::Framed, WireProtocol::Text]
+    } else {
+        vec![WireProtocol::Text]
+    }
+}
+
+/// Connection ladder override: `SFUT_INGRESS_CONNS="1,2,4"`.
+pub fn connections_from_env() -> Option<Vec<usize>> {
+    let raw = std::env::var("SFUT_INGRESS_CONNS").ok()?;
+    let conns: Vec<usize> = raw
+        .split(',')
+        .map(|t| t.trim().parse().unwrap_or_else(|_| panic!("bad SFUT_INGRESS_CONNS: {raw}")))
+        .collect();
+    assert!(!conns.is_empty(), "SFUT_INGRESS_CONNS must name at least one count");
+    Some(conns)
+}
+
+/// Jobs-per-connection override: `SFUT_INGRESS_JOBS=5`.
+pub fn jobs_from_env() -> Option<usize> {
+    let raw = std::env::var("SFUT_INGRESS_JOBS").ok()?;
+    Some(raw.parse().unwrap_or_else(|_| panic!("bad SFUT_INGRESS_JOBS: {raw}")))
+}
+
+/// One (wire, connections) cell.
+#[derive(Debug, Clone)]
+pub struct WirePoint {
+    pub wire: String,
+    pub connections: usize,
+    /// Jobs per timed sample (connections × jobs_per_connection).
+    pub jobs_per_sample: u64,
+    pub jobs_per_sec: f64,
+    /// Per-job submit→result round-trip percentiles across post-warmup
+    /// samples.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    /// Ingress submissions shed or timed out ÷ submissions over the
+    /// cell (0 under the default `block` policy).
+    pub shed_rate: f64,
+}
+
+/// The full A/B sweep.
+#[derive(Debug, Clone)]
+pub struct IngressBench {
+    pub profile: &'static str,
+    pub scale: f64,
+    pub spec: String,
+    pub connections: Vec<usize>,
+    pub jobs_per_connection: usize,
+    pub warmup: usize,
+    pub samples: usize,
+    pub points: Vec<WirePoint>,
+}
+
+fn build_profile() -> &'static str {
+    if cfg!(debug_assertions) {
+        "debug"
+    } else {
+        "release"
+    }
+}
+
+fn counter(pipeline: &Pipeline, name: &str) -> u64 {
+    pipeline.metrics().snapshot().counters.get(name).copied().unwrap_or(0)
+}
+
+fn percentile_ms(sorted: &[Duration], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    super::sampler::percentile_sorted(sorted, q).as_secs_f64() * 1e3
+}
+
+/// One framed connection's share of a sample: submit→wait round-trips,
+/// recording only completed (`ok`) jobs' latencies.
+fn drive_framed(addr: std::net::SocketAddr, spec: &str, jobs: usize, lat: &Mutex<Vec<Duration>>) {
+    let mut client = FramedClient::connect(addr).expect("bench framed connect");
+    for _ in 0..jobs {
+        let t = Instant::now();
+        match client.submit(spec).expect("bench framed submit") {
+            SubmitReply::Ticket { id, .. } => {
+                let line = client.wait(id).expect("bench framed wait");
+                if line.starts_with("ok ") {
+                    lat.lock().unwrap().push(t.elapsed());
+                }
+            }
+            SubmitReply::Err(_) => {} // shed — accounted via the counters
+        }
+    }
+}
+
+/// The text-baseline counterpart: `run <spec>` lines on one session.
+fn drive_text(addr: std::net::SocketAddr, spec: &str, jobs: usize, lat: &Mutex<Vec<Duration>>) {
+    let sock = TcpStream::connect(addr).expect("bench text connect");
+    let mut reader = BufReader::new(sock.try_clone().expect("clone bench socket"));
+    let mut sock = sock;
+    for _ in 0..jobs {
+        let t = Instant::now();
+        writeln!(sock, "run {spec}").expect("bench text submit");
+        sock.flush().expect("bench text flush");
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("bench text reply");
+        if line.starts_with("ok ") {
+            lat.lock().unwrap().push(t.elapsed());
+        }
+    }
+}
+
+/// Run the sweep: per (wire, connections) cell a fresh [`Pipeline`] and
+/// listener, then `warmup + samples` batches of `connections ×
+/// jobs_per_connection` round-trips.
+pub fn run(
+    base: &Config,
+    params: &IngressBenchParams,
+    opts: &BenchOptions,
+) -> Result<IngressBench> {
+    let mut points = Vec::new();
+    for &wire in &params.wires {
+        for &connections in &params.connections {
+            let pipeline = Arc::new(Pipeline::new(base.clone())?);
+            let server = TcpServer::start_wire(Arc::clone(&pipeline), "127.0.0.1:0", wire)
+                .with_context(|| format!("starting {} listener", wire.label()))?;
+            let addr = server.local_addr();
+            let batch = connections * params.jobs_per_connection;
+            let submitted_before = counter(&pipeline, "ingress.submitted");
+            let shed_before =
+                counter(&pipeline, "ingress.shed") + counter(&pipeline, "ingress.timed_out");
+            let lat = Mutex::new(Vec::<Duration>::new());
+            let label = format!("ingress.{}.conns{connections}", wire.label());
+            let timing = measure(&label, opts, || {
+                std::thread::scope(|s| {
+                    for _ in 0..connections {
+                        s.spawn(|| match wire {
+                            WireProtocol::Framed => {
+                                drive_framed(addr, &params.spec, params.jobs_per_connection, &lat)
+                            }
+                            WireProtocol::Text => {
+                                drive_text(addr, &params.spec, params.jobs_per_connection, &lat)
+                            }
+                        });
+                    }
+                });
+            });
+            // Drop the warmup batches' samples, same as pipeline_bench.
+            let mut all = lat.into_inner().unwrap();
+            let keep_from = (opts.warmup * batch).min(all.len());
+            let mut kept = all.split_off(keep_from);
+            kept.sort_unstable();
+            let submitted = counter(&pipeline, "ingress.submitted") - submitted_before;
+            let shed = counter(&pipeline, "ingress.shed")
+                + counter(&pipeline, "ingress.timed_out")
+                - shed_before;
+            points.push(WirePoint {
+                wire: wire.label().to_string(),
+                connections,
+                jobs_per_sample: batch as u64,
+                jobs_per_sec: batch as f64 / timing.median_secs().max(1e-9),
+                p50_ms: percentile_ms(&kept, 0.5),
+                p95_ms: percentile_ms(&kept, 0.95),
+                shed_rate: if submitted == 0 { 0.0 } else { shed as f64 / submitted as f64 },
+            });
+            drop(server);
+        }
+    }
+    Ok(IngressBench {
+        profile: build_profile(),
+        scale: base.scale,
+        spec: params.spec.clone(),
+        connections: params.connections.clone(),
+        jobs_per_connection: params.jobs_per_connection,
+        warmup: opts.warmup,
+        samples: opts.samples,
+        points,
+    })
+}
+
+fn json_point(p: &WirePoint) -> String {
+    format!(
+        "    {{\"wire\": \"{}\", \"connections\": {}, \"jobs_per_sample\": {}, \
+         \"jobs_per_sec\": {:.2}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
+         \"shed_rate\": {:.4}}}",
+        p.wire, p.connections, p.jobs_per_sample, p.jobs_per_sec, p.p50_ms, p.p95_ms, p.shed_rate,
+    )
+}
+
+/// Serialize to the `BENCH_ingress.json` schema (hand-rolled; no serde
+/// offline). Readable back via [`tiny_json`] / [`gate`].
+pub fn to_json(b: &IngressBench) -> String {
+    let connections =
+        b.connections.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(", ");
+    let points = b.points.iter().map(json_point).collect::<Vec<_>>().join(",\n");
+    format!(
+        "{{\n\
+         \x20 \"bench\": \"ingress_wire_saturation\",\n\
+         \x20 \"profile\": \"{}\",\n\
+         \x20 \"scale\": {:.4},\n\
+         \x20 \"spec\": \"{}\",\n\
+         \x20 \"connections\": [{}],\n\
+         \x20 \"jobs_per_connection\": {},\n\
+         \x20 \"warmup\": {},\n\
+         \x20 \"samples\": {},\n\
+         \x20 \"points\": [\n{}\n  ]\n\
+         }}\n",
+        b.profile,
+        b.scale,
+        b.spec,
+        connections,
+        b.jobs_per_connection,
+        b.warmup,
+        b.samples,
+        points,
+    )
+}
+
+pub fn write_json(b: &IngressBench, path: &Path) -> std::io::Result<()> {
+    std::fs::write(path, to_json(b))
+}
+
+/// Default artifact location: the repository root.
+pub fn default_output_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_ingress.json")
+}
+
+/// Seed the trajectory file only when absent — unless
+/// `SFUT_INGRESS_BENCH_FORCE=1`, the CI hook that regenerates the
+/// current run for the gate.
+pub fn write_json_if_absent(b: &IngressBench) -> std::io::Result<bool> {
+    let path = default_output_path();
+    let force = std::env::var("SFUT_INGRESS_BENCH_FORCE").is_ok_and(|v| v == "1");
+    if path.exists() && !force {
+        return Ok(false);
+    }
+    write_json(b, &path).map(|()| true)
+}
+
+/// Absolute p95 growth ignored below this floor (micro-cells jitter).
+const LATENCY_WARN_FLOOR_MS: f64 = 1.0;
+
+/// Compare two `BENCH_ingress.json` documents. Semantics mirror
+/// `pipeline_bench::gate` — jobs/sec throughput gate per comparable
+/// (wire, connections) cell, p95 warn-or-strict with the
+/// synthetic-baseline disarm, Skipped on incomparable run parameters,
+/// hard error on a malformed current run — plus one extra invariant:
+/// **the current run must carry at least one framed and one text
+/// cell**. The trajectory exists to compare the two wires; a one-sided
+/// run means the harness broke, and that fails the gate rather than
+/// quietly gating the surviving mode.
+pub fn gate(
+    baseline: &str,
+    current: &str,
+    threshold: f64,
+    latency_threshold: f64,
+    latency_strict: bool,
+) -> Result<GateReport, String> {
+    let b = tiny_json::parse(baseline).map_err(|e| format!("baseline: {e}"))?;
+    let c = tiny_json::parse(current).map_err(|e| format!("current: {e}"))?;
+    for doc in [&b, &c] {
+        if doc.get("bench").and_then(Json::as_str) != Some("ingress_wire_saturation") {
+            return Err("not an ingress_wire_saturation trajectory file".to_string());
+        }
+    }
+    if c.get("profile").is_none() {
+        return Err("current run is missing \"profile\" — bench writer broken".to_string());
+    }
+    struct Cell {
+        wire: String,
+        connections: u64,
+        jobs_per_sec: f64,
+        p95_ms: Option<f64>,
+    }
+    let cells = |doc: &Json| -> Vec<Cell> {
+        doc.get("points")
+            .and_then(Json::as_array)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|p| {
+                Some(Cell {
+                    wire: p.get("wire")?.as_str()?.to_string(),
+                    connections: p.get("connections")?.as_f64()? as u64,
+                    jobs_per_sec: p.get("jobs_per_sec")?.as_f64()?,
+                    p95_ms: p.get("p95_ms").and_then(Json::as_f64),
+                })
+            })
+            .collect()
+    };
+    let cur_cells = cells(&c);
+    if cur_cells.is_empty() {
+        return Err("current run has no points — bench writer broken".to_string());
+    }
+    // The A/B invariant: one harness invocation must produce both
+    // sides. (Checked before comparability — a one-sided writer is
+    // broken regardless of whether the baseline matches.)
+    for wire in ["framed", "text"] {
+        if !cur_cells.iter().any(|cell| cell.wire == wire) {
+            return Err(format!(
+                "current run has no {wire} cells — the A/B harness must sweep both wire \
+                 modes in one invocation"
+            ));
+        }
+    }
+    let synthetic_baseline = b
+        .get("note")
+        .and_then(Json::as_str)
+        .is_some_and(|n| n.contains("synthetic"));
+    let latency_gate = if !latency_strict {
+        LatencyGate::WarnOnly
+    } else if synthetic_baseline {
+        LatencyGate::StrictDisarmedSyntheticBaseline
+    } else {
+        LatencyGate::Strict
+    };
+    for key in ["profile", "scale", "spec", "jobs_per_connection", "warmup", "samples"] {
+        let (bv, cv) = (b.get(key), c.get(key));
+        if bv != cv {
+            return Ok(GateReport {
+                outcome: GateOutcome::Skipped {
+                    reason: format!(
+                        "{key} differs (baseline {bv:?}, current {cv:?}); runs are not \
+                         comparable — refresh the committed baseline"
+                    ),
+                },
+                warnings: Vec::new(),
+                latency_gate,
+            });
+        }
+    }
+    let base_cells = cells(&b);
+    let mut compared = 0usize;
+    let mut regressions = Vec::new();
+    let mut latency_findings = Vec::new();
+    for cur in &cur_cells {
+        let Some(base) = base_cells
+            .iter()
+            .find(|b| b.wire == cur.wire && b.connections == cur.connections)
+        else {
+            continue;
+        };
+        compared += 1;
+        if cur.jobs_per_sec < (1.0 - threshold) * base.jobs_per_sec {
+            let drop_pct = (1.0 - cur.jobs_per_sec / base.jobs_per_sec.max(1e-9)) * 100.0;
+            regressions.push(format!(
+                "{} @ {} connection(s): {:.1} jobs/s vs baseline {:.1} (-{drop_pct:.0}%)",
+                cur.wire, cur.connections, cur.jobs_per_sec, base.jobs_per_sec
+            ));
+        }
+        if let (Some(b95), Some(c95)) = (base.p95_ms, cur.p95_ms) {
+            if c95 > (1.0 + latency_threshold) * b95 && c95 - b95 > LATENCY_WARN_FLOOR_MS {
+                let growth = if b95 > 0.01 {
+                    format!("+{:.0}%", (c95 / b95 - 1.0) * 100.0)
+                } else {
+                    format!("+{:.2}ms", c95 - b95)
+                };
+                latency_findings.push(format!(
+                    "{} @ {} connection(s): p95 latency {c95:.2}ms vs baseline \
+                     {b95:.2}ms ({growth})",
+                    cur.wire, cur.connections
+                ));
+            }
+        }
+    }
+    // A wire mode the baseline covered disappearing from the overlap is
+    // a silent 100% regression on that side of the A/B.
+    for wire in ["framed", "text"] {
+        if base_cells.iter().any(|b| b.wire == wire) && !cur_cells.iter().any(|c| c.wire == wire) {
+            regressions
+                .push(format!("{wire} vanished: baseline has cells, current run has none"));
+        }
+    }
+    let mut warnings = Vec::new();
+    if latency_gate == LatencyGate::Strict {
+        regressions.extend(latency_findings.iter().map(|f| format!("latency (strict): {f}")));
+    } else {
+        warnings = latency_findings;
+    }
+    if compared == 0 && regressions.is_empty() {
+        return Ok(GateReport {
+            outcome: GateOutcome::Skipped {
+                reason: "no overlapping (wire, connections) cells".to_string(),
+            },
+            warnings,
+            latency_gate,
+        });
+    }
+    let outcome = if regressions.is_empty() {
+        GateOutcome::Passed { cells: compared }
+    } else {
+        GateOutcome::Failed { regressions }
+    };
+    Ok(GateReport { outcome, warnings, latency_gate })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LT: f64 = super::super::DEFAULT_LATENCY_THRESHOLD;
+
+    fn doc(profile: &str, framed_jps: f64, text_jps: f64) -> String {
+        format!(
+            "{{\"bench\": \"ingress_wire_saturation\", \"profile\": \"{profile}\", \
+             \"scale\": 0.05, \"spec\": \"primes par(2)\", \"jobs_per_connection\": 3, \
+             \"warmup\": 1, \"samples\": 3, \"points\": [\
+             {{\"wire\": \"framed\", \"connections\": 1, \"jobs_per_sec\": {framed_jps}, \
+               \"p95_ms\": 50.0}}, \
+             {{\"wire\": \"text\", \"connections\": 1, \"jobs_per_sec\": {text_jps}, \
+               \"p95_ms\": 50.0}}]}}"
+        )
+    }
+
+    #[test]
+    fn gate_passes_within_threshold_and_fails_beyond() {
+        let base = doc("release", 100.0, 90.0);
+        let ok = doc("release", 80.0, 80.0);
+        assert_eq!(
+            gate(&base, &ok, 0.25, LT, false).unwrap().outcome,
+            GateOutcome::Passed { cells: 2 }
+        );
+        let bad = doc("release", 40.0, 90.0);
+        match gate(&base, &bad, 0.25, LT, false).unwrap().outcome {
+            GateOutcome::Failed { regressions } => {
+                assert_eq!(regressions.len(), 1, "{regressions:?}");
+                assert!(regressions[0].contains("framed"), "{regressions:?}");
+            }
+            other => panic!("expected failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gate_requires_both_wire_modes_in_the_current_run() {
+        let base = doc("release", 100.0, 90.0);
+        let framed_only = "{\"bench\": \"ingress_wire_saturation\", \
+             \"profile\": \"release\", \"scale\": 0.05, \"spec\": \"primes par(2)\", \
+             \"jobs_per_connection\": 3, \"warmup\": 1, \"samples\": 3, \"points\": [\
+             {\"wire\": \"framed\", \"connections\": 1, \"jobs_per_sec\": 100.0}]}";
+        let err = gate(&base, framed_only, 0.25, LT, false).unwrap_err();
+        assert!(err.contains("no text cells"), "{err}");
+        // The inverse half-run fails the same way.
+        let text_only = framed_only.replace("\"framed\"", "\"text\"");
+        let err = gate(&base, &text_only, 0.25, LT, false).unwrap_err();
+        assert!(err.contains("no framed cells"), "{err}");
+        // An incomplete *baseline* (e.g. seeded before a mode existed)
+        // does not error — only the current run carries the invariant.
+        let report = gate(framed_only, &base, 0.25, LT, false).unwrap();
+        assert_eq!(report.outcome, GateOutcome::Passed { cells: 1 });
+    }
+
+    #[test]
+    fn gate_skips_incomparable_and_refuses_malformed_runs() {
+        let base = doc("release", 100.0, 90.0);
+        let debug = doc("debug", 10.0, 9.0);
+        assert!(matches!(
+            gate(&base, &debug, 0.25, LT, false).unwrap().outcome,
+            GateOutcome::Skipped { .. }
+        ));
+        assert!(gate("{]", &base, 0.25, LT, false).is_err());
+        assert!(gate(&base, "{\"bench\": \"pipeline_throughput\"}", 0.25, LT, false).is_err());
+        let no_points = "{\"bench\": \"ingress_wire_saturation\", \"profile\": \"release\"}";
+        assert!(gate(&base, no_points, 0.25, LT, false).is_err());
+    }
+
+    #[test]
+    fn gate_fails_when_a_wire_mode_vanishes_from_the_overlap() {
+        // Baseline covers connections {1}; current covers both modes
+        // but framed only at a different connection count — framed
+        // stays in the A/B (no hard error) yet loses its baseline
+        // overlap. The throughput comparison still runs on text.
+        let base = doc("release", 100.0, 90.0);
+        let cur = "{\"bench\": \"ingress_wire_saturation\", \"profile\": \"release\", \
+             \"scale\": 0.05, \"spec\": \"primes par(2)\", \"jobs_per_connection\": 3, \
+             \"warmup\": 1, \"samples\": 3, \"points\": [\
+             {\"wire\": \"framed\", \"connections\": 8, \"jobs_per_sec\": 100.0}, \
+             {\"wire\": \"text\", \"connections\": 1, \"jobs_per_sec\": 90.0}]}";
+        let report = gate(&base, cur, 0.25, LT, false).unwrap();
+        assert_eq!(report.outcome, GateOutcome::Passed { cells: 1 });
+    }
+
+    #[test]
+    fn strict_latency_gate_disarms_on_synthetic_baselines() {
+        let base = doc("release", 100.0, 90.0);
+        let synthetic = base.replacen(
+            "{\"bench\"",
+            "{\"note\": \"synthetic conservative floor baseline\", \"bench\"",
+            1,
+        );
+        let slow = base.replace("\"p95_ms\": 50.0", "\"p95_ms\": 500.0");
+        let strict = gate(&base, &slow, 0.25, LT, true).unwrap();
+        assert_eq!(strict.latency_gate, LatencyGate::Strict);
+        assert!(matches!(strict.outcome, GateOutcome::Failed { .. }));
+        let disarmed = gate(&synthetic, &slow, 0.25, LT, true).unwrap();
+        assert_eq!(disarmed.latency_gate, LatencyGate::StrictDisarmedSyntheticBaseline);
+        assert_eq!(disarmed.outcome, GateOutcome::Passed { cells: 2 });
+        assert_eq!(disarmed.warnings.len(), 2, "{:?}", disarmed.warnings);
+    }
+
+    #[test]
+    fn env_knobs_parse() {
+        // No env set in the test harness: both fall through to None.
+        if std::env::var("SFUT_INGRESS_CONNS").is_err() {
+            assert!(connections_from_env().is_none());
+        }
+        if std::env::var("SFUT_INGRESS_JOBS").is_err() {
+            assert!(jobs_from_env().is_none());
+        }
+    }
+}

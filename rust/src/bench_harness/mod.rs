@@ -9,6 +9,7 @@
 
 mod chart;
 pub mod executor_bench;
+pub mod ingress_bench;
 pub mod paper;
 pub mod pipeline_bench;
 mod sampler;
@@ -17,6 +18,7 @@ pub mod tiny_json;
 
 pub use chart::ascii_bar_chart;
 pub use executor_bench::{ExecutorBench, QueueDepthStats, SchedulerRun};
+pub use ingress_bench::{IngressBench, IngressBenchParams, WirePoint};
 pub use pipeline_bench::{
     GateOutcome, GateReport, LatencyGate, PipelineBench, PipelineBenchParams, WorkloadPoint,
     DEFAULT_LATENCY_THRESHOLD,

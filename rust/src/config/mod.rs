@@ -150,6 +150,58 @@ impl std::str::FromStr for AdmissionPolicy {
     }
 }
 
+/// Which wire protocol a TCP listener speaks (see the coordinator
+/// module docs, "Wire protocol").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireProtocol {
+    /// Length-prefixed binary frames on a poll(2) reactor — the
+    /// event-loop ingress.
+    Framed,
+    /// Newline-delimited text commands, one blocking thread per
+    /// session. The compatibility baseline and A/B control; the
+    /// default.
+    Text,
+}
+
+impl WireProtocol {
+    pub fn label(&self) -> &'static str {
+        match self {
+            WireProtocol::Framed => "framed",
+            WireProtocol::Text => "text",
+        }
+    }
+
+    /// Parse `SFUT_WIRE` if set. Panics on an invalid value: CI pins
+    /// the wire mode per step, and a typo silently falling back to the
+    /// default would invalidate the A/B comparison.
+    pub fn from_env() -> Option<WireProtocol> {
+        let raw = std::env::var("SFUT_WIRE").ok()?;
+        match raw.parse() {
+            Ok(kind) => Some(kind),
+            Err(e) => panic!("SFUT_WIRE: {e}"),
+        }
+    }
+
+    /// Env override if present, otherwise [`WireProtocol::Text`].
+    pub fn default_wire() -> WireProtocol {
+        WireProtocol::from_env().unwrap_or(WireProtocol::Text)
+    }
+}
+
+impl std::str::FromStr for WireProtocol {
+    type Err = ConfigError;
+
+    fn from_str(s: &str) -> Result<WireProtocol, ConfigError> {
+        match s.trim() {
+            "framed" | "frame" | "binary" => Ok(WireProtocol::Framed),
+            "text" | "line" => Ok(WireProtocol::Text),
+            other => Err(ConfigError::new(format!(
+                "unknown wire protocol: {other} (want framed | text)"
+            ))),
+        }
+    }
+}
+
 // NOTE: the closed `Workload` enum that used to live here is gone.
 // Workloads are an open set now: `workload::StreamWorkload` plugins
 // registered in a `workload::WorkloadRegistry`, resolved by *name* at
@@ -222,6 +274,11 @@ pub struct Config {
     /// `locked` (the mutexed A/B baseline). Overridable via the
     /// `deque`/`exec.deque` config key, `--deque`, or `SFUT_DEQUE`.
     pub deque: DequeKind,
+    /// Wire protocol TCP listeners speak: `framed` (binary frames on a
+    /// poll reactor) or `text` (newline commands, thread per session,
+    /// the default). Overridable via the `wire`/`ingress.wire` config
+    /// key, `--wire`, or `SFUT_WIRE`.
+    pub wire: WireProtocol,
     /// Bench harness: measurement samples per cell.
     pub samples: usize,
     /// Bench harness: warmup iterations per cell.
@@ -253,6 +310,7 @@ impl Default for Config {
             use_kernel: true,
             stack_size: 256 << 20,
             deque: DequeKind::default_kind(),
+            wire: WireProtocol::default_wire(),
             samples: 5,
             warmup: 1,
             scale: 1.0,
@@ -352,6 +410,7 @@ impl Config {
             "use_kernel" | "runtime.use_kernel" => self.use_kernel = p(key, value)?,
             "stack_size" | "exec.stack_size" => self.stack_size = p(key, value)?,
             "deque" | "exec.deque" => self.deque = p(key, value)?,
+            "wire" | "ingress.wire" => self.wire = p(key, value)?,
             "samples" | "bench.samples" => self.samples = p(key, value)?,
             "warmup" | "bench.warmup" => self.warmup = p(key, value)?,
             "scale" | "bench.scale" => self.scale = p(key, value)?,
@@ -506,6 +565,21 @@ mod tests {
         c.set("exec.deque", "chase_lev").unwrap();
         assert_eq!(c.deque, DequeKind::ChaseLev);
         assert!(c.set("deque", "spinlock").is_err());
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn wire_protocol_keys_parse() {
+        let mut c = Config::default();
+        assert_eq!(c.wire, WireProtocol::Text, "text wire is the compat default");
+        c.set("wire", "framed").unwrap();
+        assert_eq!(c.wire, WireProtocol::Framed);
+        c.set("ingress.wire", "text").unwrap();
+        assert_eq!(c.wire, WireProtocol::Text);
+        assert!(c.set("wire", "carrier_pigeon").is_err());
+        assert_eq!(WireProtocol::Framed.label(), "framed");
+        assert_eq!("binary".parse::<WireProtocol>().unwrap(), WireProtocol::Framed);
+        assert_eq!("line".parse::<WireProtocol>().unwrap(), WireProtocol::Text);
         c.validate().unwrap();
     }
 

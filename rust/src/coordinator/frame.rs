@@ -1,0 +1,400 @@
+//! Length-prefixed binary frame codec for the framed wire protocol.
+//!
+//! The layout is KLV-style, deliberately minimal (rebar's `FORMAT.md`
+//! is the exemplar): a connection opens with a 5-byte preamble — the
+//! magic `b"SFUT"` followed by a `u8` protocol version — and every
+//! subsequent message in either direction is one frame:
+//!
+//! ```text
+//! +----------------+--------+-----------------+
+//! | u32 LE length  | u8 kind| payload (length)|
+//! +----------------+--------+-----------------+
+//! ```
+//!
+//! `length` counts the payload only (not the 5-byte header). Payloads
+//! are capped at [`MAX_FRAME_LEN`]; a declared length beyond the cap is
+//! a protocol error answered before any payload bytes are buffered, so
+//! a hostile client cannot make the server allocate unboundedly.
+//!
+//! The decoder is incremental: [`FrameDecoder::feed`] accepts bytes in
+//! whatever chunks the socket delivers (one byte at a time from a
+//! slow-loris client, a hundred pipelined frames in one read) and
+//! [`FrameDecoder::next`] yields complete frames. EOF mid-frame is not
+//! a decoder error — the session layer distinguishes "clean close at a
+//! frame boundary" from "mid-frame disconnect" via
+//! [`FrameDecoder::has_partial`].
+//!
+//! See the "Wire protocol" section of [`crate::coordinator`] for the
+//! kind table and the mapping onto the text protocol.
+
+use std::io::Read;
+
+/// Connection preamble magic (client → server, before any frame).
+pub const MAGIC: [u8; 4] = *b"SFUT";
+
+/// Current protocol version, echoed back in the server's `Hello` frame.
+pub const VERSION: u8 = 1;
+
+/// Hard cap on a frame payload, in bytes. Large enough for any result
+/// line or workload listing; small enough that a malicious length
+/// prefix cannot drive allocation.
+pub const MAX_FRAME_LEN: usize = 256 * 1024;
+
+/// Frame header size: u32 length + u8 kind.
+pub const HEADER_LEN: usize = 5;
+
+/// Frame kinds. Client-originated kinds are low numbers, server replies
+/// start at 16 — the split makes a direction bug visible in a hex dump.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Client: submit a job. Payload is the UTF-8 text-protocol spec
+    /// (`workload(params) mode`), reusing the text parser.
+    Submit = 1,
+    /// Client: block (server-side) until a ticket resolves. Payload is
+    /// a u64 LE ticket id.
+    Wait = 2,
+    /// Client: nonblocking ticket state query. Payload is a u64 LE
+    /// ticket id.
+    Poll = 3,
+    /// Client: list registered workloads. Empty payload.
+    Workloads = 4,
+    /// Server: handshake accepted. Payload is `[VERSION]`.
+    Hello = 16,
+    /// Server: a submit was admitted. Payload is u64 LE ticket id +
+    /// u8 state code (0 empty, 1 running, 2 ready, 3 panicked — see
+    /// the kind table in [`crate::coordinator`]'s wire-protocol docs).
+    Ticket = 17,
+    /// Server: a wait/poll resolved with a result. Payload is u64 LE
+    /// ticket id + the UTF-8 `ok …` result line.
+    Result = 18,
+    /// Server: an error. Payload is u64 LE ticket id (0 when no ticket
+    /// is involved) + the UTF-8 `err …` line, same taxonomy as the
+    /// text protocol.
+    Err = 19,
+    /// Server: reply to [`FrameKind::Workloads`]. Payload is the UTF-8
+    /// listing, newline-separated.
+    WorkloadsReply = 20,
+}
+
+impl FrameKind {
+    pub fn from_u8(b: u8) -> Option<FrameKind> {
+        Some(match b {
+            1 => FrameKind::Submit,
+            2 => FrameKind::Wait,
+            3 => FrameKind::Poll,
+            4 => FrameKind::Workloads,
+            16 => FrameKind::Hello,
+            17 => FrameKind::Ticket,
+            18 => FrameKind::Result,
+            19 => FrameKind::Err,
+            20 => FrameKind::WorkloadsReply,
+            _ => return None,
+        })
+    }
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+}
+
+/// One decoded frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(kind: FrameKind, payload: Vec<u8>) -> Frame {
+        Frame { kind, payload }
+    }
+
+    /// Serialize to header + payload bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + self.payload.len());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.push(self.kind.as_u8());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Append the encoded frame to an existing buffer (the reactor's
+    /// per-session write buffer).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.push(self.kind.as_u8());
+        out.extend_from_slice(&self.payload);
+    }
+}
+
+/// Protocol violations the decoder (or handshake check) can detect.
+/// Each maps to exactly one `err` frame followed by connection close.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// Declared payload length exceeds [`MAX_FRAME_LEN`].
+    Oversized { len: usize },
+    /// Frame kind byte is not in the [`FrameKind`] table.
+    UnknownKind(u8),
+    /// Connection preamble did not start with [`MAGIC`].
+    BadMagic,
+    /// Preamble magic matched but the version is unsupported.
+    BadVersion(u8),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Oversized { len } => {
+                write!(f, "frame payload {len} bytes exceeds cap {MAX_FRAME_LEN}")
+            }
+            FrameError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            FrameError::BadMagic => write!(f, "bad connection magic (want SFUT)"),
+            FrameError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (want {VERSION})")
+            }
+        }
+    }
+}
+
+/// Incremental frame decoder over an internal byte buffer.
+///
+/// Feed it whatever the socket yields; pull complete frames with
+/// [`FrameDecoder::next`]. The decoder validates the header (length
+/// cap, kind table) as soon as the 5 header bytes are present — before
+/// waiting for the payload — so oversized declarations fail fast.
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    /// Buffer incoming bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes currently buffered (partial frame or not-yet-pulled
+    /// complete frames).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when buffered bytes form an incomplete frame — i.e. EOF now
+    /// would be a mid-frame disconnect, not a clean close.
+    pub fn has_partial(&self) -> bool {
+        !self.buf.is_empty()
+    }
+
+    /// Pull the next complete frame, if the buffer holds one.
+    ///
+    /// `Ok(None)` means "need more bytes"; `Err` is a protocol
+    /// violation (the buffer is left as-is — the session is dead and
+    /// should be closed after one `err` frame).
+    pub fn next(&mut self) -> Result<Option<Frame>, FrameError> {
+        if self.buf.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
+        if len > MAX_FRAME_LEN {
+            return Err(FrameError::Oversized { len });
+        }
+        let Some(kind) = FrameKind::from_u8(self.buf[4]) else {
+            return Err(FrameError::UnknownKind(self.buf[4]));
+        };
+        if self.buf.len() < HEADER_LEN + len {
+            return Ok(None);
+        }
+        let payload = self.buf[HEADER_LEN..HEADER_LEN + len].to_vec();
+        self.buf.drain(..HEADER_LEN + len);
+        Ok(Some(Frame { kind, payload }))
+    }
+}
+
+/// Validate a 5-byte connection preamble.
+pub fn check_preamble(bytes: &[u8; 5]) -> Result<(), FrameError> {
+    if bytes[..4] != MAGIC {
+        return Err(FrameError::BadMagic);
+    }
+    if bytes[4] != VERSION {
+        return Err(FrameError::BadVersion(bytes[4]));
+    }
+    Ok(())
+}
+
+/// Encode the client preamble (magic + version).
+pub fn preamble() -> [u8; 5] {
+    [MAGIC[0], MAGIC[1], MAGIC[2], MAGIC[3], VERSION]
+}
+
+// ---- payload helpers -------------------------------------------------
+
+/// u64 LE ticket id prefix shared by Ticket/Result/Err payloads.
+pub fn put_ticket_id(out: &mut Vec<u8>, id: u64) {
+    out.extend_from_slice(&id.to_le_bytes());
+}
+
+/// Read the u64 LE ticket id prefix off a payload; `None` if short.
+pub fn take_ticket_id(payload: &[u8]) -> Option<(u64, &[u8])> {
+    if payload.len() < 8 {
+        return None;
+    }
+    let mut id = [0u8; 8];
+    id.copy_from_slice(&payload[..8]);
+    Some((u64::from_le_bytes(id), &payload[8..]))
+}
+
+/// Build a `Ticket` frame payload: id + state code.
+pub fn ticket_payload(id: u64, state_code: u8) -> Vec<u8> {
+    let mut p = Vec::with_capacity(9);
+    put_ticket_id(&mut p, id);
+    p.push(state_code);
+    p
+}
+
+/// Build a `Result`/`Err`/`WorkloadsReply`-style payload: id + UTF-8
+/// line.
+pub fn line_payload(id: u64, line: &str) -> Vec<u8> {
+    let mut p = Vec::with_capacity(8 + line.len());
+    put_ticket_id(&mut p, id);
+    p.extend_from_slice(line.as_bytes());
+    p
+}
+
+/// Blocking read of exactly one frame from a stream — test/bench client
+/// helper, not used by the reactor (which decodes incrementally).
+pub fn read_frame(stream: &mut impl Read) -> std::io::Result<Option<Frame>> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0;
+    while got < HEADER_LEN {
+        match stream.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof mid-frame-header",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes([header[0], header[1], header[2], header[3]]) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame payload {len} exceeds cap"),
+        ));
+    }
+    let Some(kind) = FrameKind::from_u8(header[4]) else {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("unknown frame kind {}", header[4]),
+        ));
+    };
+    let mut payload = vec![0u8; len];
+    let mut got = 0;
+    while got < len {
+        match stream.read(&mut payload[got..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof mid-frame-payload",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Some(Frame { kind, payload }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_single_frame() {
+        let frame = Frame::new(FrameKind::Submit, b"primes(n=10) seq".to_vec());
+        let bytes = frame.encode();
+        let mut dec = FrameDecoder::new();
+        dec.feed(&bytes);
+        assert_eq!(dec.next().unwrap(), Some(frame));
+        assert!(!dec.has_partial());
+        assert_eq!(dec.next().unwrap(), None);
+    }
+
+    #[test]
+    fn byte_at_a_time_slow_loris() {
+        let frame = Frame::new(FrameKind::Wait, 42u64.to_le_bytes().to_vec());
+        let bytes = frame.encode();
+        let mut dec = FrameDecoder::new();
+        for (i, b) in bytes.iter().enumerate() {
+            dec.feed(std::slice::from_ref(b));
+            let got = dec.next().unwrap();
+            if i + 1 < bytes.len() {
+                assert!(got.is_none(), "frame complete too early at byte {i}");
+                assert!(dec.has_partial());
+            } else {
+                assert_eq!(got, Some(frame.clone()));
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_batch_in_one_feed() {
+        let mut bytes = Vec::new();
+        for i in 0..100u64 {
+            Frame::new(FrameKind::Poll, i.to_le_bytes().to_vec()).encode_into(&mut bytes);
+        }
+        let mut dec = FrameDecoder::new();
+        dec.feed(&bytes);
+        for i in 0..100u64 {
+            let f = dec.next().unwrap().expect("frame {i} missing");
+            assert_eq!(f.kind, FrameKind::Poll);
+            assert_eq!(take_ticket_id(&f.payload).unwrap().0, i);
+        }
+        assert_eq!(dec.next().unwrap(), None);
+        assert!(!dec.has_partial());
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_payload() {
+        let mut dec = FrameDecoder::new();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&((MAX_FRAME_LEN as u32) + 1).to_le_bytes());
+        bytes.push(FrameKind::Submit.as_u8());
+        // No payload bytes at all — the header alone must trip the cap.
+        dec.feed(&bytes);
+        assert_eq!(dec.next(), Err(FrameError::Oversized { len: MAX_FRAME_LEN + 1 }));
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let mut dec = FrameDecoder::new();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.push(99);
+        dec.feed(&bytes);
+        assert_eq!(dec.next(), Err(FrameError::UnknownKind(99)));
+    }
+
+    #[test]
+    fn preamble_checks() {
+        assert!(check_preamble(&preamble()).is_ok());
+        assert_eq!(check_preamble(b"NOPE\x01"), Err(FrameError::BadMagic));
+        assert_eq!(check_preamble(b"SFUT\x07"), Err(FrameError::BadVersion(7)));
+    }
+
+    #[test]
+    fn ticket_id_helpers_roundtrip() {
+        let p = line_payload(7, "ok done");
+        let (id, rest) = take_ticket_id(&p).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(rest, b"ok done");
+        assert_eq!(take_ticket_id(&[1, 2, 3]), None);
+    }
+}

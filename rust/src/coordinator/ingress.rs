@@ -219,6 +219,22 @@ impl fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// Outcome of one *nonblocking* admission attempt
+/// ([`Ingress::try_submit`]) — what the reactor needs: either a ticket,
+/// a terminal rejection, or the request handed back because the queue
+/// is at its bound under a parking policy (the reactor defers it and
+/// retries; a thread-per-session submitter would have parked instead).
+pub(super) enum TryAdmit {
+    /// Admitted; the ticket is live.
+    Ticket(JobTicket),
+    /// Terminal: validation/breaker rejection, shed at the bound, or
+    /// closed. Never retried.
+    Reject(SubmitError),
+    /// Queue at its bound under `block`/`timeout(ms)`: the request is
+    /// returned so the caller can defer and retry without cloning.
+    Full(JobRequest),
+}
+
 /// A job admitted but not yet routed.
 struct Pending {
     req: JobRequest,
@@ -532,20 +548,86 @@ impl Ingress {
     /// configured policy. Returns the ticket immediately (the job may
     /// not even be routed yet).
     pub(super) fn submit(&self, req: JobRequest, verify: bool) -> Result<JobTicket, SubmitError> {
+        let req = match self.try_submit(req, verify, true) {
+            TryAdmit::Ticket(ticket) => return Ok(ticket),
+            TryAdmit::Reject(err) => return Err(err),
+            TryAdmit::Full(req) => req,
+        };
+        // Queue at the bound under a parking policy: wait for a slot
+        // (bounded under `timeout(ms)`), then admit through the same
+        // single admit site the nonblocking path uses.
         let metrics = self.shared.core.metrics();
-        metrics.counter("ingress.submitted").inc();
+        let depth = self.shared.queue_depth;
+        let mut adm = self.shared.admission.lock().unwrap();
+        match self.shared.policy {
+            // `try_submit` sheds at the bound itself, so reaching here
+            // under shed means a slot freed in between — the re-check
+            // keeps the policy honest if it raced full again.
+            AdmissionPolicy::Shed => {
+                if adm.pending >= depth && !adm.closed {
+                    metrics.counter("ingress.shed").inc();
+                    return Err(SubmitError::Shed { queue_depth: depth });
+                }
+            }
+            AdmissionPolicy::Block => {
+                while adm.pending >= depth && !adm.closed {
+                    adm = self.shared.not_full.wait(adm).unwrap();
+                }
+            }
+            AdmissionPolicy::Timeout(ms) => {
+                let deadline = Instant::now() + Duration::from_millis(ms);
+                while adm.pending >= depth && !adm.closed {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        metrics.counter("ingress.timed_out").inc();
+                        return Err(SubmitError::Timeout { waited_ms: ms, queue_depth: depth });
+                    }
+                    let (guard, _timeout) =
+                        self.shared.not_full.wait_timeout(adm, deadline - now).unwrap();
+                    adm = guard;
+                }
+            }
+        }
+        if adm.closed {
+            return Err(SubmitError::Closed);
+        }
+        let ticket = self.admit_locked(&mut adm, req, verify);
+        drop(adm);
+        self.shared.not_empty.notify_one();
+        Ok(ticket)
+    }
+
+    /// Nonblocking stage 1, for callers that must never park (the
+    /// framed-wire reactor thread). Validation, breaker gate, and the
+    /// shed policy behave exactly as [`Ingress::submit`]; the difference
+    /// is at the bound under `block`/`timeout`: the request is handed
+    /// back as [`TryAdmit::Full`] instead of parking the caller.
+    ///
+    /// `count_submission` gates the `ingress.submitted` counter so a
+    /// deferred request retried across reactor ticks still counts as
+    /// one submission.
+    pub(super) fn try_submit(
+        &self,
+        req: JobRequest,
+        verify: bool,
+        count_submission: bool,
+    ) -> TryAdmit {
+        let metrics = self.shared.core.metrics();
+        if count_submission {
+            metrics.counter("ingress.submitted").inc();
+        }
         // Open-world gate: resolve the workload name and schema-check
         // its params before taking any queue slot, so malformed
         // requests answer immediately and never occupy capacity.
         if let Err(e) = self.shared.core.validate_request(&req) {
             metrics.counter("ingress.rejected").inc();
-            return Err(SubmitError::Rejected { reason: e.to_string() });
+            return TryAdmit::Reject(SubmitError::Rejected { reason: e.to_string() });
         }
         // Quarantine gate: a workload whose breaker opened answers here,
         // like any other rejection — before taking a queue slot.
         if self.shared.breaker.is_open(&req.workload) {
             metrics.counter("ingress.rejected").inc();
-            return Err(SubmitError::Rejected {
+            return TryAdmit::Reject(SubmitError::Rejected {
                 reason: format!(
                     "breaker open: workload {} quarantined after repeated panics",
                     req.workload
@@ -555,48 +637,39 @@ impl Ingress {
         let depth = self.shared.queue_depth;
         let mut adm = self.shared.admission.lock().unwrap();
         if adm.closed {
-            return Err(SubmitError::Closed);
+            return TryAdmit::Reject(SubmitError::Closed);
         }
         if adm.pending >= depth {
-            match self.shared.policy {
-                AdmissionPolicy::Shed => {
-                    metrics.counter("ingress.shed").inc();
-                    return Err(SubmitError::Shed { queue_depth: depth });
-                }
-                AdmissionPolicy::Block => {
-                    while adm.pending >= depth && !adm.closed {
-                        adm = self.shared.not_full.wait(adm).unwrap();
-                    }
-                }
-                AdmissionPolicy::Timeout(ms) => {
-                    let deadline = Instant::now() + Duration::from_millis(ms);
-                    while adm.pending >= depth && !adm.closed {
-                        let now = Instant::now();
-                        if now >= deadline {
-                            metrics.counter("ingress.timed_out").inc();
-                            return Err(SubmitError::Timeout {
-                                waited_ms: ms,
-                                queue_depth: depth,
-                            });
-                        }
-                        let (guard, _timeout) =
-                            self.shared.not_full.wait_timeout(adm, deadline - now).unwrap();
-                        adm = guard;
-                    }
-                }
+            if matches!(self.shared.policy, AdmissionPolicy::Shed) {
+                metrics.counter("ingress.shed").inc();
+                return TryAdmit::Reject(SubmitError::Shed { queue_depth: depth });
             }
-            if adm.closed {
-                return Err(SubmitError::Closed);
-            }
+            return TryAdmit::Full(req);
         }
+        let ticket = self.admit_locked(&mut adm, req, verify);
+        drop(adm);
+        self.shared.not_empty.notify_one();
+        TryAdmit::Ticket(ticket)
+    }
+
+    /// The one admit site: create the ticket's promise pair and enqueue
+    /// the pending job. Caller holds the admission lock, has verified
+    /// capacity and open-ness, and signals `not_empty` after unlocking.
+    fn admit_locked(&self, adm: &mut Admission, req: JobRequest, verify: bool) -> JobTicket {
+        let metrics = self.shared.core.metrics();
         let (fut, promise) = Fut::promise(&self.ticket_exec);
         adm.pending += 1;
         adm.queue.push_back(Pending { req, verify, promise, submitted: Instant::now() });
         metrics.counter("ingress.admitted").inc();
         metrics.gauge("ingress.queue_depth").set(adm.pending as u64);
-        drop(adm);
-        self.shared.not_empty.notify_one();
-        Ok(JobTicket { fut })
+        JobTicket { fut }
+    }
+
+    /// Count a deferred admission that expired under `timeout(ms)`
+    /// without ever getting a slot — the reactor's analogue of the
+    /// parking path's timeout bookkeeping.
+    pub(super) fn note_deferred_timeout(&self) {
+        self.shared.core.metrics().counter("ingress.timed_out").inc();
     }
 
     /// Jobs admitted but not yet executing (the quantity `queue_depth`

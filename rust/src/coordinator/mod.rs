@@ -130,14 +130,90 @@
 //! up front — without occupying queue capacity — for the pipeline's
 //! lifetime. Counters: `jobs.panicked`, `jobs.timed_out`, `jobs.retried`
 //! (per attempt), `ingress.runner_recovered`.
+//!
+//! # Wire protocol
+//!
+//! TCP listeners speak one of two wire protocols, chosen per listener
+//! (`Config::wire` = `framed` | `text`, `--wire` flag, `SFUT_WIRE`
+//! env). Both expose the same four operations and the same failure
+//! taxonomy above; the **text** protocol (newline-delimited commands,
+//! one blocking thread per session) is the compatibility baseline, the
+//! **framed** protocol is the event-loop ingress: one poll(2)-based
+//! reactor thread multiplexes every session, and job completion wakes
+//! the reactor through the same [`Fut`](crate::susp::Fut)
+//! promise/callback path the tickets are built on — no thread parked
+//! per in-flight `wait`.
+//!
+//! ## Frame layout
+//!
+//! A connection opens with a 5-byte preamble: the magic `b"SFUT"`
+//! followed by a `u8` protocol version (currently `1`). The server
+//! answers with a `Hello` frame echoing the version it speaks. After
+//! the handshake the stream is a sequence of frames:
+//!
+//! ```text
+//! +---------------+--------+-------------------------+
+//! | u32 LE length | u8 kind| payload (length bytes)  |
+//! +---------------+--------+-------------------------+
+//! ```
+//!
+//! `length` counts only the payload and is capped at
+//! [`frame::MAX_FRAME_LEN`]; an oversized header or an unknown kind is
+//! a protocol error — the server sends one `Err` frame and closes.
+//!
+//! ## Frame kinds
+//!
+//! | kind | #  | dir | payload |
+//! |------|----|-----|---------|
+//! | `Submit` | 1 | c→s | UTF-8 request spec, e.g. `primes(n=500) par(2)` |
+//! | `Wait` | 2 | c→s | `u64` LE ticket id |
+//! | `Poll` | 3 | c→s | `u64` LE ticket id |
+//! | `Workloads` | 4 | c→s | empty |
+//! | `Hello` | 16 | s→c | `[version]` |
+//! | `Ticket` | 17 | s→c | `u64` LE id + `u8` state (0 empty, 1 running, 2 ready, 3 panicked) |
+//! | `Result` | 18 | s→c | `u64` LE id + UTF-8 `ok …` result line |
+//! | `Err` | 19 | s→c | `u64` LE id (0 = no ticket) + UTF-8 err line |
+//! | `WorkloadsReply` | 20 | s→c | UTF-8 workload listing |
+//!
+//! Submits may be pipelined: many `Submit` frames in one write produce
+//! `Ticket` replies in submission order. When the admission queue is
+//! full under the block/timeout policy the reactor *defers* the
+//! session's submit (retrying each tick) instead of blocking the event
+//! loop; shed/timeout/closed render the same `err admission=…` lines as
+//! the text protocol, carried in `Err` frames. A session whose write
+//! buffer exceeds the high-water mark stops being read until it drains
+//! (`wire.read_paused`), so a non-draining client backs pressure up
+//! into admission rather than buffering unboundedly.
+//!
+//! ## Versioning
+//!
+//! The version byte bumps on any breaking change to the preamble,
+//! header, or an existing kind's payload; adding a new kind is
+//! non-breaking (clients must ignore kinds they don't know only if
+//! they negotiated a newer version — today's server rejects unknown
+//! *client* kinds). A mismatched magic or version yields one `Err`
+//! frame (`bad connection magic` / `unsupported protocol version`) and
+//! a close, so misdirected text clients fail fast and loudly.
+//!
+//! ## Text-protocol mapping
+//!
+//! `Submit` ↔ `run <spec>` / bare spec line, `Wait` ↔ `wait <id>`,
+//! `Poll` ↔ `poll <id>`, `Workloads` ↔ `workloads`. A `Result` payload
+//! is exactly the text `ok …` line; an `Err` payload is exactly one
+//! line of the failure taxonomy above — both protocols share a single
+//! formatting site, so the grammars cannot drift.
 
 mod ingress;
 mod job;
+pub mod frame;
+#[cfg(unix)]
+mod reactor;
 mod router;
 mod server;
 pub mod shard;
 mod tcp;
 
+pub use frame::{Frame, FrameDecoder, FrameError, FrameKind};
 pub use ingress::{Ingress, JobTicket, SubmitError, TicketValue};
 pub use job::{JobRequest, JobResult, ResultDetail};
 pub use router::Pipeline;

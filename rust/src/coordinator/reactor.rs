@@ -1,0 +1,715 @@
+//! Poll-based event-loop session layer for the framed wire protocol.
+//!
+//! One `sfut-reactor` thread owns the nonblocking listener and every
+//! framed session — no thread-per-connection. The async primitive is
+//! the repo's own [`Fut`](crate::susp::Fut): a `wait` on an unresolved
+//! ticket registers an `on_complete` continuation that pushes the
+//! (session, ticket) pair onto a ready list and wakes the reactor
+//! through a self-pipe, so job completion flows to the consumer over
+//! the exact promise/callback path the paper's stream cells use —
+//! never a dedicated waiting thread, never a poll of the job.
+//!
+//! Flow control is end-to-end:
+//!
+//! * **Read backpressure** — a session whose write buffer crosses
+//!   [`HIGH_WATER`] (a client that stops draining results), or whose
+//!   front submit is deferred on a full admission queue, stops being
+//!   polled for readability. The kernel socket buffer fills, TCP
+//!   pushes back on the client, and server memory stays bounded
+//!   (`wire.read_paused` counts the transitions).
+//! * **Admission backpressure** — submits go through the ingress's
+//!   nonblocking [`try_submit`](super::ingress::Ingress::try_submit):
+//!   `shed` answers its usual `err admission=shed` frame immediately;
+//!   the parking policies (`block`, `timeout(ms)`) defer the frame
+//!   in-session — FIFO order preserved so ticket ids still correlate
+//!   by submit order — and retry each tick, `timeout` expiring into
+//!   the same `err admission=timeout` line the text protocol emits.
+//!
+//! Protocol errors (bad magic, oversized length, unknown kind) answer
+//! exactly one well-formed `Err` frame and then close; a mid-frame
+//! disconnect is detected via the decoder's partial state and closed
+//! without ceremony. Shutdown mirrors the text path's drain: parked
+//! waits get a grace window to deliver late results, then a final
+//! `err closed ticket=N` frame each, buffers are flushed best-effort,
+//! and the thread exits.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use log::{debug, info, warn};
+
+use super::frame::{
+    check_preamble, line_payload, take_ticket_id, ticket_payload, Frame, FrameDecoder, FrameKind,
+    VERSION,
+};
+use super::ingress::{JobTicket, SubmitError, TryAdmit};
+use super::job::{JobRequest, JobResult};
+use super::router::Pipeline;
+use super::server::{
+    err_closed_line, err_released_line, release_oldest_resolved, workloads_listing,
+    MAX_SESSION_TICKETS,
+};
+use crate::config::AdmissionPolicy;
+use crate::metrics::MetricsRegistry;
+use crate::susp::FutState;
+
+/// Write-buffer level that pauses reading from a session until the
+/// client drains results below it.
+const HIGH_WATER: usize = 64 * 1024;
+
+/// Poll timeout when idle; completion wakes arrive via the self-pipe
+/// long before this fires.
+const IDLE_POLL_MS: i32 = 50;
+
+/// Poll timeout while any session has a deferred (queue-full) submit:
+/// admission slots free without a wake, so tick faster.
+const DEFERRED_POLL_MS: i32 = 5;
+
+/// Shutdown drain: how long parked waits may still deliver real
+/// results before being answered with `err closed` frames (mirrors the
+/// text server's `STOP_DRAIN_GRACE`).
+const DRAIN_GRACE: Duration = Duration::from_secs(1);
+
+mod sys {
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+    }
+
+    /// `poll(2)` with EINTR retry. The one FFI call in the crate — the
+    /// toolchain ships no event-loop dependency, and one symbol from
+    /// libc (already linked by std) is all a readiness loop needs.
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+        loop {
+            let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, timeout_ms) };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let err = std::io::Error::last_os_error();
+            if err.kind() != std::io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+}
+
+/// Completions waiting to be turned into `Result` frames:
+/// `(session id, ticket id)` pairs pushed by `on_complete` callbacks.
+type ReadyList = Arc<Mutex<Vec<(u64, u64)>>>;
+
+/// Self-pipe wake handle: job-completion callbacks (and
+/// [`TcpServer::shutdown`](super::TcpServer::shutdown)) call
+/// [`Waker::wake`] to interrupt the reactor's `poll`.
+#[derive(Clone)]
+pub(super) struct Waker {
+    tx: Arc<UnixStream>,
+}
+
+impl Waker {
+    fn pair() -> std::io::Result<(Waker, UnixStream)> {
+        let (tx, rx) = UnixStream::pair()?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        Ok((Waker { tx: Arc::new(tx) }, rx))
+    }
+
+    pub(super) fn wake(&self) {
+        // A full pipe already guarantees a pending wake; errors (incl.
+        // a reactor that already exited) are fine to drop.
+        let _ = (&*self.tx).write(&[1u8]);
+    }
+}
+
+/// What [`start`] hands back to the TCP front-end.
+pub(super) struct ReactorHandle {
+    pub(super) thread: JoinHandle<()>,
+    pub(super) waker: Waker,
+    /// Live framed sessions (the reactor's analogue of tracked session
+    /// threads).
+    pub(super) live: Arc<AtomicU64>,
+}
+
+/// Spawn the reactor thread over an already-bound nonblocking listener.
+pub(super) fn start(
+    listener: TcpListener,
+    pipeline: Arc<Pipeline>,
+    stop: Arc<AtomicBool>,
+    sessions_total: Arc<AtomicU64>,
+) -> Result<ReactorHandle> {
+    let (waker, waker_rx) = Waker::pair().context("creating reactor self-pipe")?;
+    let live = Arc::new(AtomicU64::new(0));
+    let reactor = Reactor {
+        pipeline,
+        listener,
+        stop,
+        sessions_total,
+        live: Arc::clone(&live),
+        waker: waker.clone(),
+        waker_rx,
+        ready: Arc::new(Mutex::new(Vec::new())),
+    };
+    let thread = std::thread::Builder::new()
+        .name("sfut-reactor".to_string())
+        .spawn(move || reactor.run())
+        .context("spawning reactor thread")?;
+    Ok(ReactorHandle { thread, waker, live })
+}
+
+/// One framed connection's state, owned by the reactor thread.
+struct Session {
+    stream: TcpStream,
+    peer: std::net::SocketAddr,
+    /// Bytes collected toward the 5-byte connect preamble.
+    pre: Vec<u8>,
+    handshaken: bool,
+    decoder: FrameDecoder,
+    /// Decoded frames not yet processed — nonempty past index 0 only
+    /// while the front is deferred (FIFO order is what lets a client
+    /// correlate `Ticket` replies with its submit order).
+    input: VecDeque<Frame>,
+    /// When the front submit frame was first deferred on a full queue.
+    deferred_since: Option<Instant>,
+    /// Pending output bytes (encoded frames awaiting socket space).
+    out: Vec<u8>,
+    tickets: BTreeMap<u64, JobTicket>,
+    next_ticket: u64,
+    /// Outstanding `Wait`s per ticket (a wait may be issued twice).
+    pending_waits: BTreeMap<u64, u32>,
+    /// Close once `out` drains; no further input is processed.
+    closing: bool,
+    /// Client half-closed; finish pending work, then close.
+    read_eof: bool,
+    /// Currently not polled for readability (flow control).
+    read_paused: bool,
+}
+
+impl Session {
+    fn new(stream: TcpStream, peer: std::net::SocketAddr) -> Session {
+        Session {
+            stream,
+            peer,
+            pre: Vec::with_capacity(5),
+            handshaken: false,
+            decoder: FrameDecoder::new(),
+            input: VecDeque::new(),
+            deferred_since: None,
+            out: Vec::new(),
+            tickets: BTreeMap::new(),
+            next_ticket: 1,
+            pending_waits: BTreeMap::new(),
+            closing: false,
+            read_eof: false,
+            read_paused: false,
+        }
+    }
+
+    /// Nothing left to do for this client: all input processed, all
+    /// waits answered, all output flushed.
+    fn finished(&self) -> bool {
+        (self.closing && self.out.is_empty())
+            || (self.read_eof
+                && self.input.is_empty()
+                && self.pending_waits.is_empty()
+                && self.out.is_empty()
+                && self.deferred_since.is_none())
+    }
+}
+
+struct Reactor {
+    pipeline: Arc<Pipeline>,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    sessions_total: Arc<AtomicU64>,
+    live: Arc<AtomicU64>,
+    waker: Waker,
+    waker_rx: UnixStream,
+    ready: ReadyList,
+}
+
+impl Reactor {
+    fn run(self) {
+        let Reactor { pipeline, listener, stop, sessions_total, live, waker, waker_rx, ready } =
+            self;
+        let mut sessions: BTreeMap<u64, Session> = BTreeMap::new();
+        let mut next_session: u64 = 1;
+        let mut drain_deadline: Option<Instant> = None;
+        info!("sfut reactor serving framed wire on {:?}", listener.local_addr().ok());
+        loop {
+            let draining = stop.load(Ordering::SeqCst);
+            if draining {
+                let deadline = *drain_deadline.get_or_insert_with(|| Instant::now() + DRAIN_GRACE);
+                let busy = sessions.values().any(|s| {
+                    !s.pending_waits.is_empty() || !s.out.is_empty() || s.deferred_since.is_some()
+                });
+                if !busy || Instant::now() >= deadline {
+                    final_drain(&pipeline, &mut sessions);
+                    live.store(0, Ordering::Relaxed);
+                    pipeline.metrics().gauge("wire.sessions").set(0);
+                    return;
+                }
+            }
+
+            // --- poll set: self-pipe, listener (unless draining), sessions.
+            let metrics = pipeline.metrics();
+            let mut fds: Vec<sys::PollFd> = Vec::with_capacity(2 + sessions.len());
+            fds.push(sys::PollFd { fd: waker_rx.as_raw_fd(), events: sys::POLLIN, revents: 0 });
+            if !draining {
+                fds.push(sys::PollFd {
+                    fd: listener.as_raw_fd(),
+                    events: sys::POLLIN,
+                    revents: 0,
+                });
+            }
+            let base = fds.len();
+            let mut ids: Vec<u64> = Vec::with_capacity(sessions.len());
+            let mut any_deferred = false;
+            for (&sid, s) in sessions.iter_mut() {
+                let paused = s.out.len() >= HIGH_WATER || s.deferred_since.is_some();
+                if paused && !s.read_paused {
+                    metrics.counter("wire.read_paused").inc();
+                }
+                s.read_paused = paused;
+                any_deferred |= s.deferred_since.is_some();
+                let mut events: i16 = 0;
+                if !s.read_eof && !s.closing && !paused {
+                    events |= sys::POLLIN;
+                }
+                if !s.out.is_empty() {
+                    events |= sys::POLLOUT;
+                }
+                ids.push(sid);
+                fds.push(sys::PollFd { fd: s.stream.as_raw_fd(), events, revents: 0 });
+            }
+            let timeout = if draining {
+                20
+            } else if any_deferred {
+                DEFERRED_POLL_MS
+            } else {
+                IDLE_POLL_MS
+            };
+            if let Err(e) = sys::poll_fds(&mut fds, timeout) {
+                warn!("reactor poll failed: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+
+            // --- drain the self-pipe (level-triggered; always safe).
+            let mut sink = [0u8; 64];
+            while matches!((&waker_rx).read(&mut sink), Ok(n) if n > 0) {}
+
+            // --- accept new sessions.
+            if !draining {
+                loop {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            if stream.set_nonblocking(true).is_err() {
+                                continue;
+                            }
+                            let _ = stream.set_nodelay(true);
+                            sessions_total.fetch_add(1, Ordering::Relaxed);
+                            debug!("reactor accepted framed session from {peer}");
+                            sessions.insert(next_session, Session::new(stream, peer));
+                            next_session += 1;
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) => {
+                            warn!("reactor accept error: {e}");
+                            break;
+                        }
+                    }
+                }
+            }
+
+            // --- read readable sessions, decode, process.
+            for (i, &sid) in ids.iter().enumerate() {
+                let revents = fds[base + i].revents;
+                if revents & (sys::POLLIN | sys::POLLHUP | sys::POLLERR) != 0 {
+                    if let Some(s) = sessions.get_mut(&sid) {
+                        read_session(metrics, s);
+                    }
+                }
+            }
+            // Every tick, every session: drives deferred retries and
+            // frames decoded this tick alike. Cheap when input is empty.
+            for (&sid, s) in sessions.iter_mut() {
+                process_input(&pipeline, &ready, &waker, sid, s);
+            }
+
+            // --- completed tickets → Result/Err frames.
+            let completed: Vec<(u64, u64)> = std::mem::take(&mut *ready.lock().unwrap());
+            for (sid, tid) in completed {
+                let Some(s) = sessions.get_mut(&sid) else { continue };
+                match s.pending_waits.get_mut(&tid) {
+                    Some(cnt) => {
+                        *cnt -= 1;
+                        if *cnt == 0 {
+                            s.pending_waits.remove(&tid);
+                        }
+                    }
+                    None => continue,
+                }
+                answer_wait(metrics, s, tid);
+            }
+
+            // --- flush writable output; reap finished sessions.
+            let mut dead: Vec<u64> = Vec::new();
+            for (&sid, s) in sessions.iter_mut() {
+                if !s.out.is_empty() {
+                    if let Err(e) = flush_out(s) {
+                        debug!("session {}: write failed ({e}); dropping", s.peer);
+                        s.out.clear();
+                        s.closing = true;
+                    }
+                }
+                if s.finished() {
+                    dead.push(sid);
+                }
+            }
+            for sid in dead {
+                if let Some(s) = sessions.remove(&sid) {
+                    debug!("reactor closed session {}", s.peer);
+                }
+            }
+            live.store(sessions.len() as u64, Ordering::Relaxed);
+            metrics.gauge("wire.sessions").set(sessions.len() as u64);
+        }
+    }
+}
+
+fn state_code(state: FutState) -> u8 {
+    match state {
+        FutState::Empty => 0,
+        FutState::Running => 1,
+        FutState::Ready => 2,
+        FutState::Panicked => 3,
+    }
+}
+
+fn enqueue(metrics: &MetricsRegistry, s: &mut Session, frame: &Frame) {
+    frame.encode_into(&mut s.out);
+    metrics.counter("wire.frames_out").inc();
+}
+
+fn enqueue_err(metrics: &MetricsRegistry, s: &mut Session, id: u64, line: &str) {
+    enqueue(metrics, s, &Frame::new(FrameKind::Err, line_payload(id, line)));
+}
+
+/// Pull whatever the socket has, run the handshake, decode frames.
+fn read_session(metrics: &MetricsRegistry, s: &mut Session) {
+    let mut buf = [0u8; 8192];
+    loop {
+        match s.stream.read(&mut buf) {
+            Ok(0) => {
+                if s.decoder.has_partial() || (!s.pre.is_empty() && !s.handshaken) {
+                    // Mid-frame disconnect: nothing to answer — the
+                    // bytes that would complete the frame can never
+                    // arrive. Close without ceremony.
+                    metrics.counter("wire.midframe_disconnects").inc();
+                }
+                s.read_eof = true;
+                break;
+            }
+            Ok(n) => {
+                let mut bytes = &buf[..n];
+                if !s.handshaken {
+                    let need = 5 - s.pre.len();
+                    let take = need.min(bytes.len());
+                    s.pre.extend_from_slice(&bytes[..take]);
+                    bytes = &bytes[take..];
+                    if s.pre.len() == 5 {
+                        let mut p = [0u8; 5];
+                        p.copy_from_slice(&s.pre);
+                        match check_preamble(&p) {
+                            Ok(()) => {
+                                s.handshaken = true;
+                                enqueue(metrics, s, &Frame::new(FrameKind::Hello, vec![VERSION]));
+                            }
+                            Err(e) => {
+                                enqueue_err(metrics, s, 0, &format!("err {e}"));
+                                s.closing = true;
+                                return;
+                            }
+                        }
+                    }
+                }
+                if s.handshaken && !bytes.is_empty() {
+                    s.decoder.feed(bytes);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => {
+                debug!("session {}: read failed ({e}); dropping", s.peer);
+                s.out.clear();
+                s.closing = true;
+                return;
+            }
+        }
+    }
+    if !s.handshaken || s.closing {
+        return;
+    }
+    loop {
+        match s.decoder.next() {
+            Ok(Some(frame)) => {
+                metrics.counter("wire.frames_in").inc();
+                s.input.push_back(frame);
+            }
+            Ok(None) => break,
+            Err(e) => {
+                // One well-formed err frame, then close — never a
+                // panic, never a stuck session.
+                enqueue_err(metrics, s, 0, &format!("err {e}"));
+                s.closing = true;
+                break;
+            }
+        }
+    }
+}
+
+/// Handle decoded frames in FIFO order. Stops at a submit that the
+/// admission queue defers (queue full under a parking policy); the
+/// frame stays at the front and is retried next tick.
+fn process_input(pipeline: &Pipeline, ready: &ReadyList, waker: &Waker, sid: u64, s: &mut Session) {
+    let metrics = pipeline.metrics();
+    while !s.closing {
+        let Some(frame) = s.input.front().cloned() else { return };
+        match frame.kind {
+            FrameKind::Submit => {
+                let text = match std::str::from_utf8(&frame.payload) {
+                    Ok(t) => t.trim().to_string(),
+                    Err(_) => {
+                        s.input.pop_front();
+                        s.deferred_since = None;
+                        enqueue_err(metrics, s, 0, "err submit payload is not valid utf-8");
+                        continue;
+                    }
+                };
+                let req = match JobRequest::parse(&text) {
+                    Ok(req) => req,
+                    Err(e) => {
+                        s.input.pop_front();
+                        s.deferred_since = None;
+                        enqueue_err(metrics, s, 0, &format!("err {e}"));
+                        continue;
+                    }
+                };
+                // A deferred submit under `timeout(ms)` that never got a
+                // slot expires into the same admission line the parking
+                // path emits (same configured `waited_ms`, same counter).
+                if let Some(since) = s.deferred_since {
+                    if let AdmissionPolicy::Timeout(ms) = pipeline.config().admission {
+                        if since.elapsed() >= Duration::from_millis(ms) {
+                            pipeline.ingress().note_deferred_timeout();
+                            let err = SubmitError::Timeout {
+                                waited_ms: ms,
+                                queue_depth: pipeline.config().queue_depth,
+                            };
+                            s.input.pop_front();
+                            s.deferred_since = None;
+                            enqueue_err(metrics, s, 0, &err.render_line(&req));
+                            continue;
+                        }
+                    }
+                }
+                let first_attempt = s.deferred_since.is_none();
+                match pipeline.ingress().try_submit(req.clone(), true, first_attempt) {
+                    TryAdmit::Ticket(ticket) => {
+                        s.input.pop_front();
+                        s.deferred_since = None;
+                        let id = s.next_ticket;
+                        s.next_ticket += 1;
+                        let code = state_code(ticket.state());
+                        s.tickets.insert(id, ticket);
+                        release_oldest_resolved(&mut s.tickets, MAX_SESSION_TICKETS);
+                        enqueue(
+                            metrics,
+                            s,
+                            &Frame::new(FrameKind::Ticket, ticket_payload(id, code)),
+                        );
+                    }
+                    TryAdmit::Reject(err) => {
+                        s.input.pop_front();
+                        s.deferred_since = None;
+                        enqueue_err(metrics, s, 0, &err.render_line(&req));
+                    }
+                    TryAdmit::Full(_) => {
+                        if s.deferred_since.is_none() {
+                            s.deferred_since = Some(Instant::now());
+                        }
+                        return;
+                    }
+                }
+            }
+            FrameKind::Wait | FrameKind::Poll => {
+                s.input.pop_front();
+                let Some((id, _)) = take_ticket_id(&frame.payload) else {
+                    enqueue_err(metrics, s, 0, "err bad ticket payload (want u64 le id)");
+                    continue;
+                };
+                if id == 0 || id >= s.next_ticket {
+                    enqueue_err(
+                        metrics,
+                        s,
+                        id,
+                        &format!(
+                            "err unknown ticket: {id} ({} issued this session)",
+                            s.next_ticket - 1
+                        ),
+                    );
+                    continue;
+                }
+                let Some(ticket) = s.tickets.get(&id) else {
+                    enqueue_err(metrics, s, id, &err_released_line(id));
+                    continue;
+                };
+                if frame.kind == FrameKind::Poll {
+                    let code = state_code(ticket.state());
+                    enqueue(metrics, s, &Frame::new(FrameKind::Ticket, ticket_payload(id, code)));
+                } else if ticket.is_ready() {
+                    answer_wait(metrics, s, id);
+                } else {
+                    // Park the wait on the ticket's Fut: completion
+                    // pushes onto the ready list and wakes the poll.
+                    *s.pending_waits.entry(id).or_insert(0) += 1;
+                    let ready = Arc::clone(ready);
+                    let waker = waker.clone();
+                    ticket.fut().on_complete(move |_| {
+                        if let Ok(mut queue) = ready.lock() {
+                            queue.push((sid, id));
+                        }
+                        waker.wake();
+                    });
+                }
+            }
+            FrameKind::Workloads => {
+                s.input.pop_front();
+                let listing = workloads_listing(pipeline);
+                enqueue(metrics, s, &Frame::new(FrameKind::WorkloadsReply, listing.into_bytes()));
+            }
+            // Server-to-client kinds arriving from a client are a
+            // protocol violation: one err frame, then close.
+            FrameKind::Hello
+            | FrameKind::Ticket
+            | FrameKind::Result
+            | FrameKind::Err
+            | FrameKind::WorkloadsReply => {
+                s.input.pop_front();
+                enqueue_err(
+                    metrics,
+                    s,
+                    0,
+                    &format!("err unexpected client frame kind {}", frame.kind.as_u8()),
+                );
+                s.closing = true;
+            }
+        }
+    }
+}
+
+/// Emit the resolved outcome of `tid` as one `Result`/`Err` frame —
+/// the framed analogue of the text server's `deliver`.
+fn answer_wait(metrics: &MetricsRegistry, s: &mut Session, tid: u64) {
+    let outcome = match s.tickets.get(&tid) {
+        Some(ticket) => ticket.wait_timeout(Duration::from_millis(0)),
+        None => {
+            enqueue_err(metrics, s, tid, &err_released_line(tid));
+            return;
+        }
+    };
+    match outcome {
+        Some(outcome) => deliver_outcome(metrics, s, tid, outcome),
+        // Completion raced the release path; ask the client to retry.
+        None => enqueue_err(metrics, s, tid, &format!("err ticket not ready: {tid}")),
+    }
+}
+
+fn deliver_outcome(
+    metrics: &MetricsRegistry,
+    s: &mut Session,
+    tid: u64,
+    outcome: Result<JobResult>,
+) {
+    match outcome {
+        Ok(result) => enqueue(
+            metrics,
+            s,
+            &Frame::new(FrameKind::Result, line_payload(tid, &result.render_line())),
+        ),
+        Err(e) => enqueue_err(metrics, s, tid, &format!("err {e:#}")),
+    }
+}
+
+/// Nonblocking write of whatever the socket will take.
+fn flush_out(s: &mut Session) -> std::io::Result<()> {
+    while !s.out.is_empty() {
+        match s.stream.write(&s.out) {
+            Ok(0) => return Err(ErrorKind::WriteZero.into()),
+            Ok(n) => {
+                s.out.drain(..n);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Shutdown endgame: every still-parked wait is answered — with the
+/// real result if it landed during the grace window, else a final
+/// `err closed ticket=N` frame — deferred submits answer `closed`,
+/// buffers flush best-effort (briefly blocking), sockets close.
+fn final_drain(pipeline: &Pipeline, sessions: &mut BTreeMap<u64, Session>) {
+    let metrics = pipeline.metrics();
+    for s in sessions.values_mut() {
+        let waits: Vec<(u64, u32)> = s.pending_waits.iter().map(|(&k, &v)| (k, v)).collect();
+        s.pending_waits.clear();
+        for (tid, count) in waits {
+            let resolved = s.tickets.get(&tid).is_some_and(JobTicket::is_ready);
+            for _ in 0..count {
+                if resolved {
+                    answer_wait(metrics, s, tid);
+                } else {
+                    enqueue_err(metrics, s, tid, &err_closed_line(tid));
+                }
+            }
+        }
+        if s.deferred_since.take().is_some() {
+            let line = s
+                .input
+                .front()
+                .and_then(|f| std::str::from_utf8(&f.payload).ok())
+                .and_then(|t| JobRequest::parse(t.trim()).ok())
+                .map(|req| SubmitError::Closed.render_line(&req))
+                .unwrap_or_else(|| "err admission=closed".to_string());
+            enqueue_err(metrics, s, 0, &line);
+        }
+        s.input.clear();
+        let _ = s.stream.set_nonblocking(false);
+        let _ = s.stream.set_write_timeout(Some(Duration::from_millis(200)));
+        let out = std::mem::take(&mut s.out);
+        let _ = s.stream.write_all(&out);
+        let _ = s.stream.shutdown(std::net::Shutdown::Both);
+    }
+    sessions.clear();
+}

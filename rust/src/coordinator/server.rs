@@ -54,7 +54,7 @@ use crate::susp::FutState;
 /// would grow for the life of a long-running monitoring session; past
 /// the cap the oldest resolved tickets are released (waiting them again
 /// answers `err ticket released`).
-const MAX_SESSION_TICKETS: usize = 1024;
+pub(crate) const MAX_SESSION_TICKETS: usize = 1024;
 
 /// Server-side cap on one `wait <id>` command. A generous bound — far
 /// beyond any sane job — that exists so a session blocked on a wedged
@@ -74,13 +74,50 @@ const WAIT_POLL_SLICE: Duration = Duration::from_millis(50);
 /// window.
 const STOP_DRAIN_GRACE: Duration = Duration::from_secs(1);
 
-fn state_label(state: FutState) -> &'static str {
+pub(crate) fn state_label(state: FutState) -> &'static str {
     match state {
         FutState::Empty => "empty",
         FutState::Running => "running",
         FutState::Ready => "ready",
         FutState::Panicked => "panicked",
     }
+}
+
+// Single formatting site for every ticket-lifecycle `err` line, shared
+// by the text protocol here and the framed reactor — the taxonomy
+// documented in the module docs of [`crate::coordinator`] cannot drift
+// per wire. (Admission/terminal-job errors already have theirs:
+// `SubmitError::render_line` and the `execute_one` terminal messages.)
+
+/// `wait` exceeded the server-side cap; the ticket stays addressable.
+pub(crate) fn err_wait_timeout_line(id: u64, waited_ms: u128) -> String {
+    format!("err timeout ticket={id} waited_ms={waited_ms}")
+}
+
+/// Server shutting down while a wait was parked on this ticket.
+pub(crate) fn err_closed_line(id: u64) -> String {
+    format!("err closed ticket={id}")
+}
+
+/// The ticket was released from the session table (past the cap).
+pub(crate) fn err_released_line(id: u64) -> String {
+    format!("err ticket released: {id}")
+}
+
+/// The `workloads` listing, one `workload name=… params=[…] …` line per
+/// registered plugin, "."-terminated — shared by the text protocol and
+/// the framed `Workloads` reply.
+pub(crate) fn workloads_listing(pipeline: &Pipeline) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for w in pipeline.registry().iter() {
+        let params: Vec<String> =
+            w.params().iter().map(crate::workload::ParamSpec::render).collect();
+        let params = if params.is_empty() { "-".to_string() } else { params.join(",") };
+        let _ = writeln!(out, "workload name={} params=[{params}] {}", w.name(), w.describe());
+    }
+    out.push_str(".\n");
+    out
 }
 
 /// Serve requests from `input`, writing responses to `output`, until
@@ -134,19 +171,7 @@ pub fn serve_with_stop(
                 writeln!(output, "modes: seq strict par(N)")?;
             }
             "workloads" => {
-                for w in pipeline.registry().iter() {
-                    let params: Vec<String> =
-                        w.params().iter().map(crate::workload::ParamSpec::render).collect();
-                    let params =
-                        if params.is_empty() { "-".to_string() } else { params.join(",") };
-                    writeln!(
-                        output,
-                        "workload name={} params=[{params}] {}",
-                        w.name(),
-                        w.describe()
-                    )?;
-                }
-                writeln!(output, ".")?;
+                write!(output, "{}", workloads_listing(pipeline))?;
             }
             "config" => {
                 writeln!(output, "{:#?}", pipeline.config())?;
@@ -206,8 +231,8 @@ pub fn serve_with_stop(
                                 // The ticket survives — poll/wait again later.
                                 writeln!(
                                     output,
-                                    "err timeout ticket={id} waited_ms={}",
-                                    started.elapsed().as_millis()
+                                    "{}",
+                                    err_wait_timeout_line(id, started.elapsed().as_millis())
                                 )?;
                                 answered = true;
                                 break;
@@ -216,12 +241,12 @@ pub fn serve_with_stop(
                         if !answered {
                             // Shutdown drain: one final well-formed line,
                             // then end the session.
-                            writeln!(output, "err closed ticket={id}")?;
+                            writeln!(output, "{}", err_closed_line(id))?;
                             output.flush()?;
                             return Ok(jobs);
                         }
                     }
-                    None => writeln!(output, "err ticket released: {id}")?,
+                    None => writeln!(output, "{}", err_released_line(id))?,
                 },
                 Err(e) => writeln!(output, "err {e}")?,
             },
@@ -231,7 +256,7 @@ pub fn serve_with_stop(
                         let state = state_label(ticket.state());
                         writeln!(output, "ticket id={id} state={state}")?;
                     }
-                    None => writeln!(output, "err ticket released: {id}")?,
+                    None => writeln!(output, "{}", err_released_line(id))?,
                 },
                 Err(e) => writeln!(output, "err {e}")?,
             },
@@ -247,7 +272,7 @@ pub fn serve_with_stop(
 /// dropped handles release their `JobResult`s). Unresolved tickets are
 /// never dropped — their count is already bounded by the admission
 /// queue and the runners.
-fn release_oldest_resolved(tickets: &mut BTreeMap<u64, JobTicket>, cap: usize) {
+pub(crate) fn release_oldest_resolved(tickets: &mut BTreeMap<u64, JobTicket>, cap: usize) {
     while tickets.len() > cap {
         let Some(oldest_done) =
             tickets.iter().find(|(_, t)| t.is_ready()).map(|(&id, _)| id)

@@ -1,10 +1,21 @@
-//! TCP front-end for the line-protocol server: `sfut serve --tcp ADDR`.
+//! TCP front-end for the request server: `sfut serve --tcp ADDR`.
 //!
-//! One session thread per connection, all sharing the [`Pipeline`] (and
-//! therefore the PJRT engine, the metrics registry, and the config).
-//! The protocol is identical to the stdio server (`server.rs`),
-//! including the ticketed `submit`/`wait` commands and the
-//! `err admission=…` shed/timeout lines.
+//! Two wire modes, selected per-listener ([`Config::wire`], `--wire`,
+//! `SFUT_WIRE`):
+//!
+//! * **text** (compat + A/B baseline) — one session thread per
+//!   connection speaking the line protocol of `server.rs`, including
+//!   the ticketed `submit`/`wait` commands and the `err admission=…`
+//!   shed/timeout lines.
+//! * **framed** — a single poll-based reactor thread (`reactor.rs`)
+//!   speaking the length-prefixed binary frame protocol of `frame.rs`;
+//!   no per-connection threads, pipelined multi-job batches per read,
+//!   write backpressure wired into the admission policy.
+//!
+//! Both modes share the [`Pipeline`] (and therefore the PJRT engine,
+//! the metrics registry, and the config), the same job taxonomy, and
+//! this handle's `local_addr`/`sessions`/`live_sessions`/`shutdown`
+//! surface.
 //!
 //! Session threads are tracked: [`TcpServer::shutdown`] stops accepting,
 //! then waits (bounded) for in-flight sessions to finish so their jobs
@@ -30,46 +41,98 @@ use log::{info, warn};
 
 use super::router::Pipeline;
 use super::server::serve_with_stop;
+use crate::config::WireProtocol;
 
 /// How long [`TcpServer::shutdown`] waits for in-flight sessions before
 /// detaching them.
 const SESSION_DRAIN_WINDOW: Duration = Duration::from_secs(5);
 
-/// Handle to a running TCP server (for tests and graceful shutdown).
+/// Handle to a running TCP server (for tests and graceful shutdown),
+/// uniform across both wire modes.
 pub struct TcpServer {
     local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     sessions: Arc<AtomicU64>,
     session_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    /// Text mode: the accept-loop thread. Framed mode: the reactor.
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// Framed mode only: interrupts the reactor's poll on shutdown.
+    #[cfg(unix)]
+    waker: Option<super::reactor::Waker>,
+    /// Framed mode only: live reactor sessions (text mode counts
+    /// tracked session threads instead).
+    reactor_live: Arc<AtomicU64>,
 }
 
 impl TcpServer {
-    /// Bind and start accepting. `pipeline` is shared across sessions.
+    /// Bind and start accepting under the pipeline's configured wire
+    /// protocol ([`Config::wire`]). `pipeline` is shared across
+    /// sessions.
     pub fn start(pipeline: Arc<Pipeline>, addr: impl ToSocketAddrs) -> Result<TcpServer> {
+        let wire = pipeline.config().wire;
+        TcpServer::start_wire(pipeline, addr, wire)
+    }
+
+    /// [`TcpServer::start`] with the wire protocol chosen per-listener
+    /// (the A/B harness runs one framed and one text listener over
+    /// identical pipelines).
+    pub fn start_wire(
+        pipeline: Arc<Pipeline>,
+        addr: impl ToSocketAddrs,
+        wire: WireProtocol,
+    ) -> Result<TcpServer> {
         let listener = TcpListener::bind(addr).context("binding TCP listener")?;
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        info!("sfut tcp server listening on {local_addr}");
+        info!("sfut tcp server listening on {local_addr} (wire={})", wire.label());
         let stop = Arc::new(AtomicBool::new(false));
         let sessions = Arc::new(AtomicU64::new(0));
         let session_threads = Arc::new(Mutex::new(Vec::new()));
-        let stop2 = Arc::clone(&stop);
-        let sessions2 = Arc::clone(&sessions);
-        let threads2 = Arc::clone(&session_threads);
-        let accept_thread = std::thread::Builder::new()
-            .name("sfut-tcp-accept".to_string())
-            .spawn(move || {
-                accept_loop(listener, pipeline, stop2, sessions2, threads2);
-            })
-            .context("spawning accept thread")?;
-        Ok(TcpServer {
-            local_addr,
-            stop,
-            sessions,
-            session_threads,
-            accept_thread: Some(accept_thread),
-        })
+        match wire {
+            WireProtocol::Text => {
+                let stop2 = Arc::clone(&stop);
+                let sessions2 = Arc::clone(&sessions);
+                let threads2 = Arc::clone(&session_threads);
+                let accept_thread = std::thread::Builder::new()
+                    .name("sfut-tcp-accept".to_string())
+                    .spawn(move || {
+                        accept_loop(listener, pipeline, stop2, sessions2, threads2);
+                    })
+                    .context("spawning accept thread")?;
+                Ok(TcpServer {
+                    local_addr,
+                    stop,
+                    sessions,
+                    session_threads,
+                    accept_thread: Some(accept_thread),
+                    #[cfg(unix)]
+                    waker: None,
+                    reactor_live: Arc::new(AtomicU64::new(0)),
+                })
+            }
+            #[cfg(unix)]
+            WireProtocol::Framed => {
+                let handle = super::reactor::start(
+                    listener,
+                    pipeline,
+                    Arc::clone(&stop),
+                    Arc::clone(&sessions),
+                )?;
+                Ok(TcpServer {
+                    local_addr,
+                    stop,
+                    sessions,
+                    session_threads,
+                    accept_thread: Some(handle.thread),
+                    waker: Some(handle.waker),
+                    reactor_live: handle.live,
+                })
+            }
+            #[cfg(not(unix))]
+            WireProtocol::Framed => {
+                anyhow::bail!("wire=framed needs a unix platform (poll); use wire=text")
+            }
+        }
     }
 
     pub fn local_addr(&self) -> std::net::SocketAddr {
@@ -81,10 +144,12 @@ impl TcpServer {
         self.sessions.load(Ordering::Relaxed)
     }
 
-    /// Session threads currently tracked (unjoined). 0 after a clean
-    /// [`TcpServer::shutdown`].
+    /// Sessions currently live: tracked (unjoined) session threads in
+    /// text mode, open reactor sessions in framed mode. 0 after a
+    /// clean [`TcpServer::shutdown`].
     pub fn live_sessions(&self) -> usize {
         self.session_threads.lock().unwrap().len()
+            + self.reactor_live.load(Ordering::Relaxed) as usize
     }
 
     /// Stop accepting new connections, join the accept thread, then wait
@@ -95,6 +160,10 @@ impl TcpServer {
     /// shutdown.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        #[cfg(unix)]
+        if let Some(waker) = &self.waker {
+            waker.wake();
+        }
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
         }

@@ -124,6 +124,28 @@
 //!   the `chaos` feature) reconciles injected faults against wire
 //!   output and the `jobs.panicked` / `jobs.timed_out` / `jobs.retried`
 //!   counters exactly.
+//! * **Framed event-loop ingress** ([`coordinator::frame`],
+//!   `coordinator::reactor`) — the TCP front-end is no longer
+//!   thread-per-session: one poll(2) reactor thread owns every framed
+//!   connection, speaking a length-prefixed binary protocol (magic
+//!   `SFUT` + version preamble; u32 LE length, u8 kind, payload) with
+//!   pipelined multi-job batches per read. Job completion wakes the
+//!   reactor through the ticket's [`susp::Fut`] `on_complete` callback
+//!   and a self-pipe — the paper's promise path, never a thread parked
+//!   per waiter. Backpressure is end-to-end: a non-draining client
+//!   stops being read (`wire.read_paused`) and submits flow through
+//!   the nonblocking admission path, answering the same
+//!   `err admission=…` taxonomy as text. The text protocol survives as
+//!   compat mode and A/B baseline (`Config::wire` = framed | text,
+//!   `--wire`, `SFUT_WIRE`; per-listener via
+//!   [`coordinator::TcpServer::start_wire`]), and `cargo bench --bench
+//!   ingress_wire` sweeps BOTH modes over a connection ladder into
+//!   `BENCH_ingress.json`, which CI's ingress gate compares cell-wise
+//!   (a current run missing either wire mode hard-fails). The frame
+//!   layout and kind table live in [`coordinator`]'s "Wire protocol"
+//!   section; the conformance corpus (`rust/tests/framed_wire.rs`)
+//!   holds every malformed input to at most one err frame and a clean
+//!   close.
 
 pub mod bench_harness;
 pub mod bigint;

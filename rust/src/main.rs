@@ -10,10 +10,12 @@
 //! sfut fig4 [options]                      regenerate Figure 4
 //! sfut serve [options]                     line-protocol request loop on stdio
 //! sfut info [options]                      platform / artifact / config report
-//! sfut check-bench <baseline> <current>    perf-regression gate on BENCH_pipeline.json
-//!                                          or BENCH_executor.json (dispatched on the
-//!                                          file's "bench" field; executor runs compare
-//!                                          like-labeled scheduler/deque points only)
+//! sfut check-bench <baseline> <current>    perf-regression gate on BENCH_pipeline.json,
+//!                                          BENCH_executor.json, or BENCH_ingress.json
+//!                                          (dispatched on the file's "bench" field;
+//!                                          executor runs compare like-labeled
+//!                                          scheduler/deque points only, ingress runs
+//!                                          compare framed-vs-text saturation cells)
 //!
 //! options:
 //!   --config <file>          TOML-subset config file
@@ -26,6 +28,8 @@
 //!                            (block | shed | timeout(MS))
 //!   --deque <kind>           shorthand for --set deque=<kind>
 //!                            (chase_lev | locked)
+//!   --wire <protocol>        shorthand for --set wire=<protocol>
+//!                            (framed | text) — TCP listener wire mode
 //!   --threshold <f>          check-bench regression tolerance (default 0.25)
 //!   --latency-threshold <f>  check-bench p95 growth tolerated before a
 //!                            finding (default 0.25)
@@ -102,6 +106,10 @@ fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
             "--deque" => {
                 let v = args.next().context("--deque needs a kind (chase_lev | locked)")?;
                 cli.overrides.push(("deque".to_string(), v));
+            }
+            "--wire" => {
+                let v = args.next().context("--wire needs a protocol (framed | text)")?;
+                cli.overrides.push(("wire".to_string(), v));
             }
             "--latency-strict" => {
                 cli.latency_strict = true;
@@ -280,6 +288,13 @@ fn real_main() -> Result<()> {
                     }
                     executor_bench::gate(&baseline, &current, threshold)
                 }
+                "ingress_wire_saturation" => stream_future::bench_harness::ingress_bench::gate(
+                    &baseline,
+                    &current,
+                    threshold,
+                    latency_threshold,
+                    cli.latency_strict,
+                ),
                 other => bail!("unknown trajectory kind: {other}"),
             }
             .map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -358,12 +373,12 @@ fn real_main() -> Result<()> {
                  \x20 fig4                    regenerate Figure 4 (polynomial chart)\n\
                  \x20 serve                   request loop on stdin/stdout\n\
                  \x20 info                    platform / artifact / config report\n\
-                 \x20 check-bench <a> <b>     compare BENCH_pipeline.json or \
-                 BENCH_executor.json runs (CI perf gate)\n\
+                 \x20 check-bench <a> <b>     compare BENCH_pipeline.json, \
+                 BENCH_executor.json, or BENCH_ingress.json runs (CI perf gate)\n\
                  \n\
                  options: --config <file> | --set k=v | --scale <f> | --samples <n> | \
                  --no-kernel | --queue-depth <n> | --admission <block|shed|timeout(MS)> | \
-                 --deque <chase_lev|locked> | \
+                 --deque <chase_lev|locked> | --wire <framed|text> | \
                  --threshold <f> | --latency-threshold <f> | --latency-strict\n\
                  workloads: {}\n\
                  modes: seq strict par(N)",
@@ -453,6 +468,13 @@ mod tests {
         let cli = parse_args(args("run primes seq --deque locked")).unwrap();
         assert!(cli.overrides.contains(&("deque".to_string(), "locked".to_string())));
         assert!(parse_args(args("run primes seq --deque")).is_err());
+    }
+
+    #[test]
+    fn parses_wire_shorthand() {
+        let cli = parse_args(args("serve 127.0.0.1:0 --wire framed")).unwrap();
+        assert!(cli.overrides.contains(&("wire".to_string(), "framed".to_string())));
+        assert!(parse_args(args("serve --wire")).is_err());
     }
 
     #[test]

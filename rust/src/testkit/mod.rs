@@ -4,9 +4,13 @@
 //! a deterministic property-testing harness: a splittable xorshift
 //! generator, size-aware combinators, and a runner that reports the
 //! failing seed so any counterexample is reproducible with
-//! `SFUT_PROP_SEED=<seed>`.
+//! `SFUT_PROP_SEED=<seed>`. [`wire`] is the shared wire-protocol
+//! support: one parser for the coordinator's `err` line taxonomy (so
+//! suites don't each re-implement fragments of the grammar) and a
+//! blocking client for the framed binary protocol.
 
 pub mod prop;
+pub mod wire;
 
 /// Run `f` on a thread with a `stack_mb`-megabyte stack and propagate
 /// its result (and panics). Deep-recursion paths (long Lazy filter

@@ -1,0 +1,384 @@
+//! Wire-level test support shared by the integration suites and the
+//! ingress bench harness: a typed parser for the coordinator's `err`
+//! line taxonomy (the grammar documented in
+//! [`crate::coordinator`], "Failure semantics") and a small blocking
+//! client for the framed binary protocol.
+//!
+//! The parser exists so tests assert against *parsed fields* instead of
+//! each re-implementing `starts_with`/`contains` fragments of the
+//! grammar — one place to update if the taxonomy ever changes, and the
+//! chaos/saturation suites stop drifting from each other.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use crate::coordinator::frame::{self, Frame, FrameKind};
+
+/// Ticket state codes carried in `Ticket` frame payloads (see the
+/// coordinator module docs, "Wire protocol").
+pub const STATE_EMPTY: u8 = 0;
+pub const STATE_RUNNING: u8 = 1;
+pub const STATE_READY: u8 = 2;
+pub const STATE_PANICKED: u8 = 3;
+
+/// One parsed line of the documented `err` taxonomy. Lines are
+/// accepted with or without the leading `err ` tag — error Display
+/// forms (e.g. `Pipeline::run` errors) carry the same grammar minus
+/// the tag.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ErrLine {
+    /// `err admission=<policy> workload=<w> mode=<m> [waited_ms=<ms>]
+    /// [queue_depth=<d>]` — the bounded queue applied its policy.
+    Admission {
+        policy: String,
+        workload: String,
+        mode: String,
+        waited_ms: Option<u64>,
+        queue_depth: Option<u64>,
+    },
+    /// `err rejected workload=<w> mode=<m> reason: <text>` — refused
+    /// at submit time (validation, unknown workload, open breaker).
+    Rejected { workload: String, mode: String, reason: String },
+    /// `err panicked workload=<w> mode=<m> reason=<text>` — reason is
+    /// always the last field and may contain spaces.
+    Panicked { workload: String, mode: String, reason: String },
+    /// `err timeout workload=<w> mode=<m> deadline_ms=<n>` — the job
+    /// blew its execution deadline.
+    JobTimeout { workload: String, mode: String, deadline_ms: u64 },
+    /// `err timeout ticket=<id> waited_ms=<n>` — a protocol `wait`
+    /// gave up; the ticket stays addressable.
+    WaitTimeout { ticket: u64, waited_ms: u64 },
+    /// `err closed ticket=<id>` — session drain resolved a parked wait.
+    Closed { ticket: u64 },
+    /// `err ticket released: <id>` — the ticket was evicted by the
+    /// per-session cap.
+    Released { ticket: u64 },
+    /// Any other `err …` line (abandoned tickets, unknown commands,
+    /// protocol errors).
+    Other { message: String },
+}
+
+/// Parse one response line against the documented `err` taxonomy.
+/// Returns `None` for lines that are not errors at all (`ok …`,
+/// `ticket id=…`, untagged lines outside the grammar); a tagged
+/// `err …` line always parses, falling back to [`ErrLine::Other`].
+pub fn parse_err_line(line: &str) -> Option<ErrLine> {
+    let (tagged, body) = match line.strip_prefix("err ") {
+        Some(rest) => (true, rest),
+        None => (false, line),
+    };
+    match parse_body(body) {
+        Some(parsed) => Some(parsed),
+        None if tagged => Some(ErrLine::Other { message: body.to_string() }),
+        None => None,
+    }
+}
+
+/// Whitespace-token field scanner: the value of the first `key=` token.
+fn field(body: &str, key: &str) -> Option<String> {
+    let prefix = format!("{key}=");
+    body.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(&prefix))
+        .map(str::to_string)
+}
+
+fn num_field(body: &str, key: &str) -> Option<u64> {
+    field(body, key)?.parse().ok()
+}
+
+fn parse_body(body: &str) -> Option<ErrLine> {
+    let first = body.split_whitespace().next()?;
+    if let Some(policy) = first.strip_prefix("admission=") {
+        return Some(ErrLine::Admission {
+            policy: policy.to_string(),
+            workload: field(body, "workload")?,
+            mode: field(body, "mode")?,
+            waited_ms: num_field(body, "waited_ms"),
+            queue_depth: num_field(body, "queue_depth"),
+        });
+    }
+    match first {
+        "rejected" => Some(ErrLine::Rejected {
+            workload: field(body, "workload")?,
+            mode: field(body, "mode")?,
+            reason: body.split_once("reason: ")?.1.to_string(),
+        }),
+        "panicked" => Some(ErrLine::Panicked {
+            workload: field(body, "workload")?,
+            mode: field(body, "mode")?,
+            // Always the last field; runs to end of line (spaces legal).
+            reason: body.split_once("reason=")?.1.to_string(),
+        }),
+        "timeout" => {
+            if let Some(ticket) = num_field(body, "ticket") {
+                Some(ErrLine::WaitTimeout { ticket, waited_ms: num_field(body, "waited_ms")? })
+            } else {
+                Some(ErrLine::JobTimeout {
+                    workload: field(body, "workload")?,
+                    mode: field(body, "mode")?,
+                    deadline_ms: num_field(body, "deadline_ms")?,
+                })
+            }
+        }
+        "closed" => Some(ErrLine::Closed { ticket: num_field(body, "ticket")? }),
+        "ticket" => {
+            let id = body.strip_prefix("ticket released: ")?.trim().parse().ok()?;
+            Some(ErrLine::Released { ticket: id })
+        }
+        _ => None,
+    }
+}
+
+/// Blocking client for the framed wire protocol — the test/bench
+/// counterpart of the reactor. Performs the magic+version handshake on
+/// connect; send and receive are split so tests can pipeline many
+/// requests into one write before draining replies.
+pub struct FramedClient {
+    stream: TcpStream,
+}
+
+/// A server reply to `Submit`: either an assigned ticket or one err
+/// taxonomy line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitReply {
+    Ticket { id: u64, state: u8 },
+    Err(String),
+}
+
+impl FramedClient {
+    /// Connect, send the preamble, and consume the server's `Hello`.
+    pub fn connect(addr: SocketAddr) -> io::Result<FramedClient> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.write_all(&frame::preamble())?;
+        stream.flush()?;
+        let hello = frame::read_frame(&mut stream)?
+            .ok_or_else(|| io::Error::new(io::ErrorKind::UnexpectedEof, "no hello frame"))?;
+        match hello.kind {
+            FrameKind::Hello => Ok(FramedClient { stream }),
+            FrameKind::Err => Err(io::Error::other(format!(
+                "handshake rejected: {}",
+                String::from_utf8_lossy(&hello.payload)
+            ))),
+            other => Err(io::Error::other(format!("unexpected handshake frame: {other:?}"))),
+        }
+    }
+
+    /// Raw bytes, no framing — for malformed-input conformance tests.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> io::Result<()> {
+        self.stream.write_all(bytes)?;
+        self.stream.flush()
+    }
+
+    pub fn send(&mut self, f: &Frame) -> io::Result<()> {
+        self.send_raw(&f.encode())
+    }
+
+    pub fn send_submit(&mut self, spec: &str) -> io::Result<()> {
+        self.send(&Frame::new(FrameKind::Submit, spec.as_bytes().to_vec()))
+    }
+
+    pub fn send_wait(&mut self, id: u64) -> io::Result<()> {
+        self.send(&Frame::new(FrameKind::Wait, id.to_le_bytes().to_vec()))
+    }
+
+    pub fn send_poll(&mut self, id: u64) -> io::Result<()> {
+        self.send(&Frame::new(FrameKind::Poll, id.to_le_bytes().to_vec()))
+    }
+
+    /// Next frame, or `None` on clean EOF.
+    pub fn recv(&mut self) -> io::Result<Option<Frame>> {
+        frame::read_frame(&mut self.stream)
+    }
+
+    /// Next frame; EOF is an error (the caller expected a reply).
+    pub fn recv_expect(&mut self) -> io::Result<Frame> {
+        self.recv()?
+            .ok_or_else(|| io::Error::new(io::ErrorKind::UnexpectedEof, "server closed mid-reply"))
+    }
+
+    /// Submit one spec and read its reply.
+    pub fn submit(&mut self, spec: &str) -> io::Result<SubmitReply> {
+        self.send_submit(spec)?;
+        let f = self.recv_expect()?;
+        Self::submit_reply(&f)
+    }
+
+    /// Decode a `Submit` reply frame (`Ticket` or `Err`).
+    pub fn submit_reply(f: &Frame) -> io::Result<SubmitReply> {
+        match f.kind {
+            FrameKind::Ticket => {
+                let (id, rest) = frame::take_ticket_id(&f.payload)
+                    .ok_or_else(|| io::Error::other("short ticket payload"))?;
+                let state = rest.first().copied().unwrap_or(STATE_EMPTY);
+                Ok(SubmitReply::Ticket { id, state })
+            }
+            FrameKind::Err => Ok(SubmitReply::Err(Self::line_of(f)?)),
+            other => Err(io::Error::other(format!("unexpected submit reply: {other:?}"))),
+        }
+    }
+
+    /// Wait for a ticket: returns the terminal line — `ok …` from a
+    /// `Result` frame or one err taxonomy line from an `Err` frame.
+    pub fn wait(&mut self, id: u64) -> io::Result<String> {
+        self.send_wait(id)?;
+        let f = self.recv_expect()?;
+        match f.kind {
+            FrameKind::Result | FrameKind::Err => Self::line_of(&f),
+            other => Err(io::Error::other(format!("unexpected wait reply: {other:?}"))),
+        }
+    }
+
+    /// Poll a ticket's state code without blocking on the result.
+    pub fn poll(&mut self, id: u64) -> io::Result<u8> {
+        self.send_poll(id)?;
+        let f = self.recv_expect()?;
+        match f.kind {
+            FrameKind::Ticket => {
+                let (_, rest) = frame::take_ticket_id(&f.payload)
+                    .ok_or_else(|| io::Error::other("short ticket payload"))?;
+                Ok(rest.first().copied().unwrap_or(STATE_EMPTY))
+            }
+            FrameKind::Err => Err(io::Error::other(Self::line_of(&f)?)),
+            other => Err(io::Error::other(format!("unexpected poll reply: {other:?}"))),
+        }
+    }
+
+    /// The registered-workload listing.
+    pub fn workloads(&mut self) -> io::Result<String> {
+        self.send(&Frame::new(FrameKind::Workloads, Vec::new()))?;
+        let f = self.recv_expect()?;
+        match f.kind {
+            FrameKind::WorkloadsReply => {
+                String::from_utf8(f.payload).map_err(|_| io::Error::other("non-utf8 listing"))
+            }
+            other => Err(io::Error::other(format!("unexpected workloads reply: {other:?}"))),
+        }
+    }
+
+    /// Extract the UTF-8 line carried after the ticket id of a
+    /// `Result`/`Err` payload (id 0 = no ticket).
+    pub fn line_of(f: &Frame) -> io::Result<String> {
+        let (_, rest) = frame::take_ticket_id(&f.payload)
+            .ok_or_else(|| io::Error::other("short line payload"))?;
+        String::from_utf8(rest.to_vec()).map_err(|_| io::Error::other("non-utf8 line"))
+    }
+
+    /// Half-close the write side (the framed analogue of the text
+    /// sessions' `shutdown(Write)` script style).
+    pub fn shutdown_write(&mut self) -> io::Result<()> {
+        self.stream.shutdown(std::net::Shutdown::Write)
+    }
+
+    /// Drain every remaining frame until EOF.
+    pub fn drain(&mut self) -> io::Result<Vec<Frame>> {
+        let mut frames = Vec::new();
+        while let Some(f) = self.recv()? {
+            frames.push(f);
+        }
+        Ok(frames)
+    }
+
+    pub fn stream(&mut self) -> &mut TcpStream {
+        &mut self.stream
+    }
+}
+
+/// Read whatever the peer sends until EOF, raw (for sessions the
+/// server is expected to close after a protocol error).
+pub fn read_to_eof(stream: &mut TcpStream) -> io::Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_admission_lines() {
+        let shed = parse_err_line("err admission=shed workload=primes mode=par(2) queue_depth=1");
+        assert_eq!(
+            shed,
+            Some(ErrLine::Admission {
+                policy: "shed".into(),
+                workload: "primes".into(),
+                mode: "par(2)".into(),
+                waited_ms: None,
+                queue_depth: Some(1),
+            })
+        );
+        let timeout = parse_err_line(
+            "err admission=timeout workload=stream mode=seq waited_ms=25 queue_depth=4",
+        )
+        .unwrap();
+        match timeout {
+            ErrLine::Admission { policy, waited_ms, queue_depth, .. } => {
+                assert_eq!(policy, "timeout");
+                assert_eq!(waited_ms, Some(25));
+                assert_eq!(queue_depth, Some(4));
+            }
+            other => panic!("{other:?}"),
+        }
+        let closed = parse_err_line("err admission=closed workload=primes mode=seq").unwrap();
+        assert!(matches!(closed, ErrLine::Admission { ref policy, .. } if policy == "closed"));
+    }
+
+    #[test]
+    fn parses_terminal_outcome_lines_with_or_without_tag() {
+        let p = parse_err_line(
+            "err panicked workload=faulty(fail_mode=panic,seed=7) mode=seq \
+             reason=injected panic (attempt 0 seed 7)",
+        )
+        .unwrap();
+        assert_eq!(
+            p,
+            ErrLine::Panicked {
+                workload: "faulty(fail_mode=panic,seed=7)".into(),
+                mode: "seq".into(),
+                reason: "injected panic (attempt 0 seed 7)".into(),
+            }
+        );
+        // Display forms carry the same grammar minus the tag.
+        let t = parse_err_line("timeout workload=faulty(x=1) mode=seq deadline_ms=120").unwrap();
+        assert_eq!(
+            t,
+            ErrLine::JobTimeout {
+                workload: "faulty(x=1)".into(),
+                mode: "seq".into(),
+                deadline_ms: 120,
+            }
+        );
+        let r = parse_err_line("err rejected workload=faulty mode=seq reason: breaker open: x")
+            .unwrap();
+        assert!(matches!(r, ErrLine::Rejected { ref reason, .. } if reason == "breaker open: x"));
+    }
+
+    #[test]
+    fn parses_ticket_lines() {
+        assert_eq!(
+            parse_err_line("err timeout ticket=3 waited_ms=5000"),
+            Some(ErrLine::WaitTimeout { ticket: 3, waited_ms: 5000 })
+        );
+        assert_eq!(parse_err_line("err closed ticket=9"), Some(ErrLine::Closed { ticket: 9 }));
+        assert_eq!(
+            parse_err_line("err ticket released: 4"),
+            Some(ErrLine::Released { ticket: 4 })
+        );
+    }
+
+    #[test]
+    fn non_err_lines_do_not_parse() {
+        assert_eq!(parse_err_line("ok workload=primes verified=true"), None);
+        assert_eq!(parse_err_line("ticket id=1 state=running"), None);
+        // A tagged line outside the structured grammar still classifies.
+        assert_eq!(
+            parse_err_line("err unknown command: frobnicate"),
+            Some(ErrLine::Other { message: "unknown command: frobnicate".into() })
+        );
+        assert!(matches!(
+            parse_err_line("err job ticket abandoned: promise dropped before completion"),
+            Some(ErrLine::Other { .. })
+        ));
+    }
+}

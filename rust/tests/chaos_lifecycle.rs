@@ -24,6 +24,7 @@ use std::time::{Duration, Instant};
 use stream_future::config::Config;
 use stream_future::coordinator::{serve, JobRequest, Pipeline, TcpServer};
 use stream_future::exec::DequeKind;
+use stream_future::testkit::wire::{parse_err_line, ErrLine};
 use stream_future::workload::{register_chaos_workloads, WorkloadRegistry};
 
 fn chaos_pipeline(cfg: Config) -> Pipeline {
@@ -68,10 +69,17 @@ fn panic_is_contained_to_one_job_and_machine_parseable() {
     let jobs = serve(&p, script.as_bytes(), &mut out).unwrap();
     let out = String::from_utf8(out).unwrap();
     assert_eq!(jobs, 1, "{out}");
-    let line = out.lines().find(|l| l.starts_with("err panicked ")).expect("panicked line");
-    assert!(line.contains("workload=faulty(fail_mode=panic,seed=7)"), "{line}");
-    assert!(line.contains("mode=seq"), "{line}");
-    assert!(line.ends_with("reason=injected panic (attempt 0 seed 7)"), "{line}");
+    let panicked = out
+        .lines()
+        .filter_map(parse_err_line)
+        .find_map(|e| match e {
+            ErrLine::Panicked { workload, mode, reason } => Some((workload, mode, reason)),
+            _ => None,
+        })
+        .unwrap_or_else(|| panic!("panicked line: {out}"));
+    assert_eq!(panicked.0, "faulty(fail_mode=panic,seed=7)", "{out}");
+    assert_eq!(panicked.1, "seq", "{out}");
+    assert_eq!(panicked.2, "injected panic (attempt 0 seed 7)", "{out}");
     // The single runner that caught the panic served the follow-up job:
     // containment, not survival-by-respawn.
     assert!(out.contains("ok workload=primes"), "{out}");
@@ -114,9 +122,16 @@ fn deadline_reaps_stalled_job_as_timeout() {
         started.elapsed() < Duration::from_secs(30),
         "deadline must cut the stall short, not wait it out"
     );
-    assert!(err.starts_with("timeout workload=faulty"), "{err}");
-    assert!(err.contains("mode=seq"), "{err}");
-    assert!(err.contains("deadline_ms=120"), "{err}");
+    // Error Display forms carry the documented grammar minus the `err `
+    // tag; the shared parser accepts both.
+    match parse_err_line(&err) {
+        Some(ErrLine::JobTimeout { workload, mode, deadline_ms }) => {
+            assert!(workload.starts_with("faulty"), "{err}");
+            assert_eq!(mode, "seq", "{err}");
+            assert_eq!(deadline_ms, 120, "{err}");
+        }
+        other => panic!("expected a job-timeout line, got {other:?}: {err}"),
+    }
     assert_eq!(counter(&p, "jobs.timed_out"), 1);
 }
 
@@ -147,18 +162,29 @@ fn breaker_quarantines_workload_after_repeated_panics() {
     let p = chaos_pipeline(cfg);
     for _ in 0..2 {
         let err = p.run(&JobRequest::parse("faulty(fail_mode=panic) seq").unwrap()).unwrap_err();
-        assert!(err.to_string().starts_with("panicked workload=faulty"), "{err:#}");
+        let parsed = parse_err_line(&err.to_string());
+        assert!(
+            matches!(parsed, Some(ErrLine::Panicked { ref workload, .. })
+                if workload.starts_with("faulty")),
+            "{err:#}"
+        );
     }
     let mut out = Vec::new();
     serve(&p, "run faulty(fail_mode=none) seq\nrun primes seq\n".as_bytes(), &mut out).unwrap();
     let out = String::from_utf8(out).unwrap();
-    let line = out
+    let reason = out
         .lines()
-        .find(|l| l.starts_with("err rejected workload=faulty"))
-        .expect("breaker rejection line");
-    assert!(
-        line.contains("reason: breaker open: workload faulty quarantined after repeated panics"),
-        "{line}"
+        .filter_map(parse_err_line)
+        .find_map(|e| match e {
+            ErrLine::Rejected { workload, reason, .. } if workload.starts_with("faulty") => {
+                Some(reason)
+            }
+            _ => None,
+        })
+        .unwrap_or_else(|| panic!("breaker rejection line: {out}"));
+    assert_eq!(
+        reason, "breaker open: workload faulty quarantined after repeated panics",
+        "{out}"
     );
     assert!(out.contains("ok workload=primes"), "healthy workloads keep flowing: {out}");
     assert_eq!(p.metrics().snapshot().gauges["breaker.faulty.open"], 1);
@@ -281,14 +307,22 @@ fn concurrent_sessions_reconcile_faults_exactly() {
                 assert!(line.contains("workload=faulty(fail_mode=wrong_result"), "{line}");
                 wrongs += 1;
             }
-        } else if line.starts_with("err panicked workload=faulty") {
-            assert!(line.contains("reason=injected panic"), "{line}");
-            panics += 1;
-        } else if line.starts_with("err timeout workload=faulty") {
-            assert!(line.contains("deadline_ms=150"), "{line}");
-            timeouts += 1;
         } else {
-            panic!("response line outside the documented grammar: {line}");
+            match parse_err_line(line) {
+                Some(ErrLine::Panicked { workload, reason, .. }) => {
+                    assert!(workload.starts_with("faulty"), "{line}");
+                    assert!(reason.starts_with("injected panic"), "{line}");
+                    panics += 1;
+                }
+                Some(ErrLine::JobTimeout { workload, deadline_ms, .. }) => {
+                    assert!(workload.starts_with("faulty"), "{line}");
+                    assert_eq!(deadline_ms, 150, "{line}");
+                    timeouts += 1;
+                }
+                other => panic!(
+                    "response line outside the documented grammar: {line} (parsed: {other:?})"
+                ),
+            }
         }
     }
     assert_eq!(oks, (4 * sessions) as u64, "{all_lines:?}");

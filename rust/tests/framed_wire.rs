@@ -1,0 +1,332 @@
+//! End-to-end coverage of the framed binary wire protocol on the poll
+//! reactor: handshake and job lifecycle over real sockets, the
+//! malformed-frame conformance corpus (every hostile input answers at
+//! most one `err` frame and closes — never a panic, never a stuck
+//! session), slow-loris and pipelined-batch framing, shed-based
+//! backpressure against a non-draining reader, and the framed-vs-text
+//! saturation trajectory that CI gates (`BENCH_ingress.json`).
+//!
+//! The reactor needs `poll(2)`, so the whole suite is unix-only.
+#![cfg(unix)]
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use stream_future::bench_harness::{ingress_bench, BenchOptions, GateOutcome};
+use stream_future::config::{AdmissionPolicy, Config, WireProtocol};
+use stream_future::coordinator::frame::{self, Frame, FrameKind, MAX_FRAME_LEN};
+use stream_future::coordinator::{Pipeline, TcpServer};
+use stream_future::testkit::wire::{
+    parse_err_line, read_to_eof, ErrLine, FramedClient, SubmitReply, STATE_READY,
+};
+
+fn smoke_config() -> Config {
+    let mut cfg = Config::default();
+    cfg.primes_n = 300;
+    cfg.fateman_degree = 2;
+    cfg.chunk_size = 16;
+    cfg.use_kernel = false;
+    cfg.shards = 1;
+    cfg.shard_parallelism = 1;
+    cfg.dispatchers = 1;
+    cfg
+}
+
+fn framed_server(cfg: Config) -> (Arc<Pipeline>, TcpServer) {
+    let pipeline = Arc::new(Pipeline::new(cfg).unwrap());
+    let server =
+        TcpServer::start_wire(Arc::clone(&pipeline), "127.0.0.1:0", WireProtocol::Framed).unwrap();
+    (pipeline, server)
+}
+
+fn counter(pipeline: &Pipeline, name: &str) -> u64 {
+    pipeline.metrics().snapshot().counters.get(name).copied().unwrap_or(0)
+}
+
+/// Happy path over real sockets: handshake, submit → ticket, wait →
+/// verified result, poll → terminal state, workloads listing, and a
+/// well-formed err frame for an unknown ticket.
+#[test]
+fn framed_session_submits_waits_and_polls() {
+    let (pipeline, server) = framed_server(smoke_config());
+    let mut client = FramedClient::connect(server.local_addr()).unwrap();
+
+    let id = match client.submit("primes par(2)").unwrap() {
+        SubmitReply::Ticket { id, .. } => id,
+        SubmitReply::Err(e) => panic!("submit rejected: {e}"),
+    };
+    assert_eq!(id, 1, "first ticket of the session");
+    let line = client.wait(id).unwrap();
+    assert!(line.starts_with("ok "), "{line}");
+    assert!(line.contains("workload=primes"), "{line}");
+    assert!(line.contains("verified=true"), "{line}");
+    assert_eq!(client.poll(id).unwrap(), STATE_READY);
+
+    let listing = client.workloads().unwrap();
+    assert!(listing.contains("primes"), "{listing}");
+
+    // A ticket this session never issued answers one tagged err frame
+    // on the documented taxonomy, and the session stays usable.
+    client.send_wait(99).unwrap();
+    let f = client.recv_expect().unwrap();
+    assert_eq!(f.kind, FrameKind::Err);
+    let err = FramedClient::line_of(&f).unwrap();
+    assert!(
+        matches!(parse_err_line(&err), Some(ErrLine::Other { .. })),
+        "unknown-ticket reply must parse as a tagged err line: {err}"
+    );
+    let line = client.wait(id).unwrap();
+    assert!(line.starts_with("ok "), "session still live after err: {line}");
+
+    let frames_in = counter(&pipeline, "wire.frames_in");
+    assert!(frames_in >= 6, "submit+wait+poll+workloads+2 waits, got {frames_in}");
+}
+
+/// The malformed-input corpus: every entry must produce at most one
+/// well-formed `Err` frame followed by a clean close — and the server
+/// must keep serving new sessions afterwards.
+#[test]
+fn conformance_corpus_answers_one_err_frame_then_closes() {
+    let (pipeline, server) = framed_server(smoke_config());
+    let addr = server.local_addr();
+
+    // Garbage magic: err frame naming the magic, then EOF. No Hello.
+    let mut sock = TcpStream::connect(addr).unwrap();
+    sock.write_all(b"JUNK\x01").unwrap();
+    let f = frame::read_frame(&mut sock).unwrap().expect("err frame for bad magic");
+    assert_eq!(f.kind, FrameKind::Err);
+    let line = FramedClient::line_of(&f).unwrap();
+    assert!(line.contains("bad connection magic"), "{line}");
+    assert_eq!(frame::read_frame(&mut sock).unwrap(), None, "closed after err");
+
+    // Right magic, wrong version: the version err, then EOF.
+    let mut sock = TcpStream::connect(addr).unwrap();
+    sock.write_all(b"SFUT\x09").unwrap();
+    let f = frame::read_frame(&mut sock).unwrap().expect("err frame for bad version");
+    let line = FramedClient::line_of(&f).unwrap();
+    assert!(line.contains("unsupported protocol version 9"), "{line}");
+    assert_eq!(frame::read_frame(&mut sock).unwrap(), None);
+
+    // Oversized declared length: rejected from the header alone,
+    // before any payload is sent (or allocated server-side).
+    let mut client = FramedClient::connect(addr).unwrap();
+    let mut evil = ((MAX_FRAME_LEN as u32) + 1).to_le_bytes().to_vec();
+    evil.push(FrameKind::Submit.as_u8());
+    client.send_raw(&evil).unwrap();
+    let f = client.recv_expect().unwrap();
+    assert_eq!(f.kind, FrameKind::Err);
+    let line = FramedClient::line_of(&f).unwrap();
+    assert!(line.contains("exceeds cap"), "{line}");
+    assert_eq!(client.recv().unwrap(), None, "closed after oversized header");
+
+    // Unknown kind byte: one err naming the kind, then EOF.
+    let mut client = FramedClient::connect(addr).unwrap();
+    let mut evil = 0u32.to_le_bytes().to_vec();
+    evil.push(9);
+    client.send_raw(&evil).unwrap();
+    let f = client.recv_expect().unwrap();
+    assert_eq!(f.kind, FrameKind::Err);
+    let line = FramedClient::line_of(&f).unwrap();
+    assert!(line.contains("unknown frame kind 9"), "{line}");
+    assert_eq!(client.recv().unwrap(), None);
+
+    // A client-side frame kind from the *server* table is a protocol
+    // violation too: err, then close.
+    let mut client = FramedClient::connect(addr).unwrap();
+    client.send(&Frame::new(FrameKind::Hello, vec![1])).unwrap();
+    let f = client.recv_expect().unwrap();
+    assert_eq!(f.kind, FrameKind::Err);
+    let line = FramedClient::line_of(&f).unwrap();
+    assert!(line.contains("unexpected client frame kind 16"), "{line}");
+    assert_eq!(client.recv().unwrap(), None);
+
+    let disconnects_before = counter(&pipeline, "wire.midframe_disconnects");
+
+    // Truncated header then disconnect: nothing to answer — the bytes
+    // completing the frame can never arrive. Clean close, counted.
+    let mut client = FramedClient::connect(addr).unwrap();
+    client.send_raw(&[0x02, 0x00]).unwrap();
+    client.shutdown_write().unwrap();
+    assert_eq!(client.recv().unwrap(), None, "mid-header disconnect closes quietly");
+
+    // Valid header, payload cut short, disconnect: same quiet close.
+    let mut client = FramedClient::connect(addr).unwrap();
+    let mut partial = 10u32.to_le_bytes().to_vec();
+    partial.push(FrameKind::Submit.as_u8());
+    partial.extend_from_slice(b"pri");
+    client.send_raw(&partial).unwrap();
+    client.shutdown_write().unwrap();
+    assert_eq!(client.recv().unwrap(), None, "mid-payload disconnect closes quietly");
+
+    // Truncated *preamble* then disconnect is the handshake analogue.
+    let mut sock = TcpStream::connect(addr).unwrap();
+    sock.write_all(b"SF").unwrap();
+    sock.shutdown(std::net::Shutdown::Write).unwrap();
+    assert!(read_to_eof(&mut sock).unwrap().is_empty(), "no frames for a dead handshake");
+
+    // The disconnect counter saw all three mid-frame cases, and the
+    // server survived the whole corpus: a fresh session still works.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while counter(&pipeline, "wire.midframe_disconnects") < disconnects_before + 3 {
+        assert!(std::time::Instant::now() < deadline, "mid-frame disconnects not counted");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let mut client = FramedClient::connect(addr).unwrap();
+    let SubmitReply::Ticket { id, .. } = client.submit("primes par(2)").unwrap() else {
+        panic!("post-corpus submit rejected");
+    };
+    let line = client.wait(id).unwrap();
+    assert!(line.starts_with("ok "), "server dead after corpus: {line}");
+}
+
+/// A slow-loris client dribbles a valid submit frame one byte at a
+/// time; the incremental decoder assembles it and the job completes.
+#[test]
+fn slow_loris_single_bytes_still_frame_correctly() {
+    let (_pipeline, server) = framed_server(smoke_config());
+    let mut client = FramedClient::connect(server.local_addr()).unwrap();
+    let submit = Frame::new(FrameKind::Submit, b"primes par(2)".to_vec()).encode();
+    for byte in &submit {
+        client.send_raw(std::slice::from_ref(byte)).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let f = client.recv_expect().unwrap();
+    let SubmitReply::Ticket { id, .. } = FramedClient::submit_reply(&f).unwrap() else {
+        panic!("loris submit rejected: {f:?}");
+    };
+    let line = client.wait(id).unwrap();
+    assert!(line.starts_with("ok "), "{line}");
+}
+
+/// 100 pipelined submits in one write: the server decodes the whole
+/// batch, answers tickets 1..=100 in submit order, and every job
+/// resolves through pipelined waits.
+#[test]
+fn pipelined_batch_of_100_submits_in_one_write() {
+    let (pipeline, server) = framed_server(smoke_config());
+    let mut client = FramedClient::connect(server.local_addr()).unwrap();
+
+    let jobs = 100u64;
+    let mut batch = Vec::new();
+    for _ in 0..jobs {
+        Frame::new(FrameKind::Submit, b"primes par(2)".to_vec()).encode_into(&mut batch);
+    }
+    client.send_raw(&batch).unwrap();
+    for expect in 1..=jobs {
+        let f = client.recv_expect().unwrap();
+        let SubmitReply::Ticket { id, .. } = FramedClient::submit_reply(&f).unwrap() else {
+            panic!("batch submit {expect} rejected: {f:?}");
+        };
+        assert_eq!(id, expect, "tickets answer in submit order");
+    }
+
+    // Pipeline the waits too; results carry ids, so order is free.
+    let mut waits = Vec::new();
+    for id in 1..=jobs {
+        Frame::new(FrameKind::Wait, id.to_le_bytes().to_vec()).encode_into(&mut waits);
+    }
+    client.send_raw(&waits).unwrap();
+    let mut resolved = std::collections::BTreeSet::new();
+    for _ in 0..jobs {
+        let f = client.recv_expect().unwrap();
+        assert_eq!(f.kind, FrameKind::Result, "all batch jobs succeed: {f:?}");
+        let (id, _) = frame::take_ticket_id(&f.payload).unwrap();
+        let line = FramedClient::line_of(&f).unwrap();
+        assert!(line.starts_with("ok "), "{line}");
+        assert!(resolved.insert(id), "duplicate result for ticket {id}");
+    }
+    assert_eq!(resolved.len(), jobs as usize);
+    assert_eq!(counter(&pipeline, "jobs.completed"), jobs);
+}
+
+/// A non-draining reader cannot force unbounded buffering: with a
+/// bounded queue under `shed`, a flood of pipelined submits is answered
+/// by admission control (ticket or well-formed shed line per submit),
+/// and the wire totals reconcile exactly with the ingress counters.
+#[test]
+fn backpressure_floods_shed_instead_of_buffering() {
+    let mut cfg = smoke_config();
+    cfg.queue_depth = 1;
+    cfg.admission = AdmissionPolicy::Shed;
+    let (pipeline, server) = framed_server(cfg);
+    let mut client = FramedClient::connect(server.local_addr()).unwrap();
+
+    let flood = 300usize;
+    let mut batch = Vec::new();
+    for _ in 0..flood {
+        Frame::new(FrameKind::Submit, b"primes par(2)".to_vec()).encode_into(&mut batch);
+    }
+    // One write, no reads: the server must answer everything without
+    // queueing more than `queue_depth` jobs.
+    client.send_raw(&batch).unwrap();
+    client.shutdown_write().unwrap();
+
+    let mut tickets = 0u64;
+    let mut sheds = 0u64;
+    for f in client.drain().unwrap() {
+        match FramedClient::submit_reply(&f).unwrap() {
+            SubmitReply::Ticket { .. } => tickets += 1,
+            SubmitReply::Err(line) => {
+                match parse_err_line(&line) {
+                    Some(ErrLine::Admission { policy, workload, queue_depth, .. }) => {
+                        assert_eq!(policy, "shed", "{line}");
+                        assert_eq!(workload, "primes", "{line}");
+                        assert_eq!(queue_depth, Some(1), "{line}");
+                    }
+                    other => panic!("unexpected flood reply: {line} (parsed: {other:?})"),
+                }
+                sheds += 1;
+            }
+        }
+    }
+    assert_eq!(tickets + sheds, flood as u64, "every submit answered");
+    assert!(sheds > 0, "a queue_depth=1 flood must shed");
+    assert!(tickets >= 1, "at least one job must get through");
+    assert_eq!(counter(&pipeline, "ingress.submitted"), flood as u64);
+    assert_eq!(counter(&pipeline, "ingress.shed"), sheds);
+    assert_eq!(counter(&pipeline, "ingress.admitted"), tickets);
+}
+
+/// The CI-gated A/B trajectory: one harness invocation sweeps framed
+/// AND text cells, the result self-gates cleanly, and the trajectory
+/// file seeds only when absent (`cargo bench --bench ingress_wire`
+/// owns the overwrite path).
+#[test]
+fn ingress_wire_trajectory_covers_both_wires_and_seeds() {
+    let cfg = smoke_config();
+    let params = ingress_bench::IngressBenchParams {
+        connections: vec![1, 2],
+        jobs_per_connection: 2,
+        ..Default::default()
+    };
+    let opts = BenchOptions { warmup: 1, samples: 2, verbose: false };
+    let b = ingress_bench::run(&cfg, &params, &opts).unwrap();
+
+    assert_eq!(b.points.len(), 4, "2 wires × 2 connection counts");
+    for wire in ["framed", "text"] {
+        assert!(
+            b.points.iter().any(|p| p.wire == wire),
+            "one invocation must produce {wire} cells: {:?}",
+            b.points
+        );
+    }
+    assert!(b.points.iter().all(|p| p.jobs_per_sec > 0.0));
+    assert!(b.points.iter().all(|p| p.p95_ms >= p.p50_ms));
+    // Default admission is block: nothing sheds during the sweep.
+    assert!(b.points.iter().all(|p| p.shed_rate == 0.0));
+
+    let json = ingress_bench::to_json(&b);
+    assert!(json.contains("\"bench\": \"ingress_wire_saturation\""));
+    let report =
+        ingress_bench::gate(&json, &json, 0.25, 0.25, false).expect("self-gate must not error");
+    match report.outcome {
+        GateOutcome::Passed { cells } => assert_eq!(cells, 4),
+        other => panic!("expected self-gate pass, got {other:?}"),
+    }
+    assert!(report.warnings.is_empty(), "{:?}", report.warnings);
+
+    let _ = ingress_bench::write_json_if_absent(&b);
+    assert!(ingress_bench::default_output_path().exists());
+}

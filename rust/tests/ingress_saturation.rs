@@ -11,6 +11,7 @@ use std::sync::Arc;
 
 use stream_future::config::{AdmissionPolicy, Config};
 use stream_future::coordinator::{serve, Pipeline, TcpServer};
+use stream_future::testkit::wire::{parse_err_line, ErrLine};
 
 fn saturating_config() -> Config {
     let mut cfg = Config::default();
@@ -66,13 +67,15 @@ fn tcp_saturation_sheds_are_well_formed_and_accounted() {
             oks += 1;
         } else {
             // The only legal rejection under admission=shed.
-            assert!(
-                line.starts_with("err admission=shed "),
-                "unexpected response line: {line}"
-            );
-            assert!(line.contains("workload=primes"), "{line}");
-            assert!(line.contains("mode=par(2)"), "{line}");
-            assert!(line.contains("queue_depth=1"), "{line}");
+            match parse_err_line(line) {
+                Some(ErrLine::Admission { policy, workload, mode, queue_depth, .. }) => {
+                    assert_eq!(policy, "shed", "{line}");
+                    assert_eq!(workload, "primes", "{line}");
+                    assert_eq!(mode, "par(2)", "{line}");
+                    assert_eq!(queue_depth, Some(1), "{line}");
+                }
+                other => panic!("unexpected response line: {line} (parsed: {other:?})"),
+            }
             sheds += 1;
         }
     }
@@ -125,7 +128,13 @@ fn serve_submit_burst_sheds_deterministically() {
     assert_eq!(jobs, 1, "exactly one wait delivered a result: {out}");
 
     let tickets = out.lines().filter(|l| l.starts_with("ticket id=")).count();
-    let sheds = out.lines().filter(|l| l.starts_with("err admission=shed ")).count();
+    let sheds = out
+        .lines()
+        .filter(|l| {
+            matches!(parse_err_line(l), Some(ErrLine::Admission { ref policy, .. })
+                if policy == "shed")
+        })
+        .count();
     assert_eq!(tickets + sheds, 7, "every submit answered: {out}");
     assert!(tickets <= 2, "capacity 1 + one occupied runner admits at most 2: {out}");
     assert!(sheds >= 5, "the burst must shed: {out}");
@@ -151,14 +160,24 @@ fn timeout_admission_sheds_late_then_recovers() {
     serve(&pipeline, script.as_bytes(), &mut out).unwrap();
     let out = String::from_utf8(out).unwrap();
     let tickets = out.lines().filter(|l| l.starts_with("ticket id=")).count();
-    let timeouts = out.lines().filter(|l| l.starts_with("err admission=timeout ")).count();
+    let timed_out: Vec<ErrLine> = out
+        .lines()
+        .filter_map(parse_err_line)
+        .filter(|e| matches!(e, ErrLine::Admission { policy, .. } if policy == "timeout"))
+        .collect();
+    let timeouts = timed_out.len();
     assert_eq!(tickets + timeouts, 7, "every submit answered: {out}");
     // Each timed-out submission waited its full window at a genuinely
     // full queue (the slow jobs dwarf the burst); the exact split
     // depends on when the runner frees slots, but the storm cannot all
     // be admitted.
     assert!(timeouts >= 3, "the burst must time out at the full queue: {out}");
-    assert!(out.contains("waited_ms=25"), "{out}");
+    assert!(
+        timed_out
+            .iter()
+            .all(|e| matches!(e, ErrLine::Admission { waited_ms: Some(25), .. })),
+        "every timeout names the configured window: {out}"
+    );
     let snap = pipeline.metrics().snapshot();
     assert_eq!(snap.counters["ingress.timed_out"], timeouts as u64);
     // Timed-out submissions left no residue: once the slow backlog
