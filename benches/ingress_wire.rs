@@ -1,18 +1,25 @@
 //! Framed-vs-text ingress saturation A/B → `BENCH_ingress.json`.
 //!
 //! One invocation sweeps BOTH wire modes over a connection ladder
-//! against otherwise identical pipelines (see
-//! `bench_harness::ingress_bench` for the measurement discipline and
-//! the both-modes gate invariant). Release numbers overwrite any
-//! test-seeded trajectory file; the CI ingress gate
-//! (`ci/check_bench.sh ingress`) compares the overwritten file against
-//! the committed baseline via `sfut check-bench`.
+//! against otherwise identical pipelines — and, on the framed side,
+//! the readiness backends (`poll`/`epoll`) crossed with a
+//! reactor-count ladder (see `bench_harness::ingress_bench` for the
+//! measurement discipline and the both-modes / both-pollers gate
+//! invariants). Release numbers overwrite any test-seeded trajectory
+//! file; the CI ingress gate (`ci/check_bench.sh ingress`) compares
+//! the overwritten file against the committed baseline via
+//! `sfut check-bench`.
 //!
 //! Environment knobs (on top of `benches/common`'s `SFUT_SCALE`,
 //! `SFUT_BENCH_SAMPLES`, `SFUT_BENCH_WARMUP`, `SFUT_NO_KERNEL`):
-//! * `SFUT_INGRESS_CONNS` — connection ladder, e.g. `1,2,4` (default 1,2)
-//! * `SFUT_INGRESS_JOBS`  — submit→wait round-trips per connection per
-//!   sample (default 3)
+//! * `SFUT_INGRESS_CONNS`    — connection ladder, e.g. `1,2,4`
+//!   (default 1,2)
+//! * `SFUT_INGRESS_JOBS`     — submit→wait round-trips per connection
+//!   per sample (default 3)
+//! * `SFUT_INGRESS_POLLERS`  — framed readiness backends, e.g.
+//!   `poll,epoll` (default: both on linux, `poll` elsewhere)
+//! * `SFUT_INGRESS_REACTORS` — framed reactor-count ladder, e.g.
+//!   `1,2,4` (default 1,2)
 //!
 //! Run: `cargo bench --bench ingress_wire`.
 
@@ -27,6 +34,9 @@ fn main() {
     let params = ingress_bench::IngressBenchParams {
         connections: ingress_bench::connections_from_env().unwrap_or_else(|| vec![1, 2]),
         jobs_per_connection: ingress_bench::jobs_from_env().unwrap_or(3),
+        pollers: ingress_bench::pollers_from_env()
+            .unwrap_or_else(ingress_bench::default_pollers),
+        reactor_counts: ingress_bench::reactor_counts_from_env().unwrap_or_else(|| vec![1, 2]),
         ..Default::default()
     };
     let opts = BenchOptions {
@@ -35,8 +45,10 @@ fn main() {
         verbose: false,
     };
     eprintln!(
-        "wires={:?} connections={:?} jobs/connection={}",
+        "wires={:?} pollers={:?} reactors={:?} connections={:?} jobs/connection={}",
         params.wires.iter().map(|w| w.label()).collect::<Vec<_>>(),
+        params.pollers.iter().map(|p| p.label()).collect::<Vec<_>>(),
+        params.reactor_counts,
         params.connections,
         params.jobs_per_connection
     );
@@ -48,8 +60,11 @@ fn main() {
     );
     for p in &bench.points {
         println!(
-            "  {:<7} conns={:<2} {:>10.1} jobs/s   p50={:>8.2}ms p95={:>8.2}ms shed={:>5.1}%",
+            "  {:<7} poller={:<5} reactors={:<2} conns={:<4} {:>10.1} jobs/s   \
+             p50={:>8.2}ms p95={:>8.2}ms shed={:>5.1}%",
             p.wire,
+            p.poller,
+            p.reactors,
             p.connections,
             p.jobs_per_sec,
             p.p50_ms,

@@ -12,10 +12,14 @@
 #                BENCH_pipeline.json (per (workload, shards) cell);
 #   * ingress  — `cargo bench --bench ingress_wire` vs
 #                BENCH_ingress.json: the framed-vs-text A/B — one
-#                harness invocation sweeps BOTH wire modes, and
-#                `sfut check-bench` hard-fails if either side is
-#                missing from the current run (per (wire, connections)
-#                cell otherwise).
+#                harness invocation sweeps BOTH wire modes (framed cells
+#                crossed with the platform's readiness backends and the
+#                reactor ladder), and `sfut check-bench` hard-fails if
+#                either wire mode — or any framed poller backend the
+#                baseline has cells for — is missing from the current
+#                run (per (wire, poller, reactors, connections) cell
+#                otherwise; legacy baselines without poller/reactors
+#                fields compare as poll/1-reactor cells).
 #
 # Behaviour (per gate):
 #   * no committed baseline      → seed one (prints a reminder to commit
@@ -76,6 +80,11 @@ export SFUT_BENCH_SAMPLES="${SFUT_BENCH_SAMPLES:-3}"
 export SFUT_BENCH_WARMUP="${SFUT_BENCH_WARMUP:-1}"
 export SFUT_PIPELINE_CLIENTS="${SFUT_PIPELINE_CLIENTS:-2}"
 export SFUT_PIPELINE_JOBS="${SFUT_PIPELINE_JOBS:-3}"
+# Ingress gate ladders (pollers default to every backend the platform
+# has — poll+epoll on linux, poll elsewhere; leave SFUT_INGRESS_POLLERS
+# unset so the gate exercises them all).
+export SFUT_INGRESS_CONNS="${SFUT_INGRESS_CONNS:-1,2}"
+export SFUT_INGRESS_REACTORS="${SFUT_INGRESS_REACTORS:-1,2}"
 export SFUT_NO_KERNEL=1
 
 trap 'rm -f BENCH_pipeline.json.baseline BENCH_ingress.json.baseline' EXIT

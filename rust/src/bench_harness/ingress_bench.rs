@@ -1,18 +1,23 @@
 //! Framed-vs-text wire saturation benchmark with a machine-readable
 //! trajectory (`BENCH_ingress.json`).
 //!
-//! The event-loop ingress replaced thread-per-session TCP with a poll
-//! reactor speaking length-prefixed frames; this harness is its A/B
-//! evidence and regression tripwire. One invocation sweeps **both**
+//! The event-loop ingress replaced thread-per-session TCP with a
+//! reactor pool speaking length-prefixed frames; this harness is its
+//! A/B evidence and regression tripwire. One invocation sweeps **both**
 //! wire modes over a connection-count ladder against otherwise
-//! identical pipelines: per (wire, connections) cell, `connections`
-//! client threads each drive `jobs_per_connection` submit→wait
-//! round-trips through a real TCP listener ([`TcpServer::start_wire`])
-//! — [`FramedClient`] frames on the reactor, `run <spec>` lines on the
-//! thread-per-session baseline — with the same warmup +
-//! median-of-samples discipline as the other trajectories
-//! ([`measure`]). Reported per cell: jobs/sec, per-job p50/p95, and
-//! the ingress shed rate over the cell.
+//! identical pipelines — and, on the framed side, over the readiness
+//! backends (`poll` vs `epoll`) and a reactor-count ladder, so the
+//! O(n)-scan-vs-O(1)-delivery and single-vs-multi-reactor claims are
+//! measured, not asserted. Per (wire, poller, reactors, connections)
+//! cell, `connections` client threads each drive `jobs_per_connection`
+//! submit→wait round-trips through a real TCP listener
+//! ([`TcpServer::start_wire`]) — [`FramedClient`] frames on the
+//! reactors, `run <spec>` lines on the thread-per-session baseline —
+//! with the same warmup + median-of-samples discipline as the other
+//! trajectories ([`measure`]). Reported per cell: jobs/sec, per-job
+//! p50/p95, and the ingress shed rate over the cell. Text cells carry
+//! `poller: "none"`, `reactors: 0` — the dimensions are meaningless
+//! off the event loop.
 //!
 //! Seeding discipline matches `BENCH_pipeline.json`: the committed
 //! file is a synthetic floor baseline, `cargo test` seeds only when
@@ -35,7 +40,7 @@ use anyhow::{Context, Result};
 
 use super::tiny_json::{self, Json};
 use super::{measure, BenchOptions, GateOutcome, GateReport, LatencyGate};
-use crate::config::{Config, WireProtocol};
+use crate::config::{Config, PollerKind, WireProtocol};
 use crate::coordinator::{Pipeline, TcpServer};
 use crate::testkit::wire::{FramedClient, SubmitReply};
 
@@ -45,6 +50,10 @@ pub struct IngressBenchParams {
     /// Wire modes to sweep — both, for the A/B (text-only off unix,
     /// where the poll reactor is unavailable).
     pub wires: Vec<WireProtocol>,
+    /// Readiness backends the framed cells sweep (ignored for text).
+    pub pollers: Vec<PollerKind>,
+    /// Reactor counts the framed cells sweep (ignored for text).
+    pub reactor_counts: Vec<usize>,
     /// Concurrent connections per cell, ascending.
     pub connections: Vec<usize>,
     /// Submit→wait round-trips each connection drives per sample.
@@ -57,6 +66,8 @@ impl Default for IngressBenchParams {
     fn default() -> Self {
         IngressBenchParams {
             wires: default_wires(),
+            pollers: default_pollers(),
+            reactor_counts: vec![1, 2],
             connections: vec![1, 2],
             jobs_per_connection: 3,
             spec: "primes par(2)".to_string(),
@@ -72,6 +83,45 @@ pub fn default_wires() -> Vec<WireProtocol> {
     } else {
         vec![WireProtocol::Text]
     }
+}
+
+/// Both readiness backends where both exist: the poll/epoll A/B is the
+/// point of the poller dimension, so Linux sweeps both; other unix
+/// platforms only have the poll scan.
+pub fn default_pollers() -> Vec<PollerKind> {
+    if cfg!(target_os = "linux") {
+        vec![PollerKind::Poll, PollerKind::Epoll]
+    } else {
+        vec![PollerKind::Poll]
+    }
+}
+
+/// Poller-ladder override: `SFUT_INGRESS_POLLERS="poll,epoll"`.
+/// `auto` is resolved to its concrete backend — cells name what ran.
+pub fn pollers_from_env() -> Option<Vec<PollerKind>> {
+    let raw = std::env::var("SFUT_INGRESS_POLLERS").ok()?;
+    let pollers: Vec<PollerKind> = raw
+        .split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<PollerKind>()
+                .unwrap_or_else(|_| panic!("bad SFUT_INGRESS_POLLERS: {raw}"))
+                .resolved()
+        })
+        .collect();
+    assert!(!pollers.is_empty(), "SFUT_INGRESS_POLLERS must name at least one backend");
+    Some(pollers)
+}
+
+/// Reactor-ladder override: `SFUT_INGRESS_REACTORS="1,2,4"`.
+pub fn reactor_counts_from_env() -> Option<Vec<usize>> {
+    let raw = std::env::var("SFUT_INGRESS_REACTORS").ok()?;
+    let counts: Vec<usize> = raw
+        .split(',')
+        .map(|t| t.trim().parse().unwrap_or_else(|_| panic!("bad SFUT_INGRESS_REACTORS: {raw}")))
+        .collect();
+    assert!(!counts.is_empty(), "SFUT_INGRESS_REACTORS must name at least one count");
+    Some(counts)
 }
 
 /// Connection ladder override: `SFUT_INGRESS_CONNS="1,2,4"`.
@@ -91,10 +141,14 @@ pub fn jobs_from_env() -> Option<usize> {
     Some(raw.parse().unwrap_or_else(|_| panic!("bad SFUT_INGRESS_JOBS: {raw}")))
 }
 
-/// One (wire, connections) cell.
+/// One (wire, poller, reactors, connections) cell.
 #[derive(Debug, Clone)]
 pub struct WirePoint {
     pub wire: String,
+    /// Readiness backend the framed cell ran on (`"none"` for text).
+    pub poller: String,
+    /// Reactor threads the framed cell ran (0 for text).
+    pub reactors: usize,
     pub connections: usize,
     /// Jobs per timed sample (connections × jobs_per_connection).
     pub jobs_per_sample: u64,
@@ -175,9 +229,11 @@ fn drive_text(addr: std::net::SocketAddr, spec: &str, jobs: usize, lat: &Mutex<V
     }
 }
 
-/// Run the sweep: per (wire, connections) cell a fresh [`Pipeline`] and
-/// listener, then `warmup + samples` batches of `connections ×
-/// jobs_per_connection` round-trips.
+/// Run the sweep: per (wire, poller, reactors, connections) cell a
+/// fresh [`Pipeline`] and listener, then `warmup + samples` batches of
+/// `connections × jobs_per_connection` round-trips. Framed cells cross
+/// the poller and reactor ladders; text has neither dimension and runs
+/// one variant per connection count.
 pub fn run(
     base: &Config,
     params: &IngressBenchParams,
@@ -185,50 +241,84 @@ pub fn run(
 ) -> Result<IngressBench> {
     let mut points = Vec::new();
     for &wire in &params.wires {
-        for &connections in &params.connections {
-            let pipeline = Arc::new(Pipeline::new(base.clone())?);
-            let server = TcpServer::start_wire(Arc::clone(&pipeline), "127.0.0.1:0", wire)
-                .with_context(|| format!("starting {} listener", wire.label()))?;
-            let addr = server.local_addr();
-            let batch = connections * params.jobs_per_connection;
-            let submitted_before = counter(&pipeline, "ingress.submitted");
-            let shed_before =
-                counter(&pipeline, "ingress.shed") + counter(&pipeline, "ingress.timed_out");
-            let lat = Mutex::new(Vec::<Duration>::new());
-            let label = format!("ingress.{}.conns{connections}", wire.label());
-            let timing = measure(&label, opts, || {
-                std::thread::scope(|s| {
-                    for _ in 0..connections {
-                        s.spawn(|| match wire {
-                            WireProtocol::Framed => {
-                                drive_framed(addr, &params.spec, params.jobs_per_connection, &lat)
-                            }
-                            WireProtocol::Text => {
-                                drive_text(addr, &params.spec, params.jobs_per_connection, &lat)
-                            }
-                        });
+        let variants: Vec<(Option<PollerKind>, usize)> = match wire {
+            WireProtocol::Framed => {
+                let mut v = Vec::new();
+                for &p in &params.pollers {
+                    for &n in &params.reactor_counts {
+                        v.push((Some(p.resolved()), n));
                     }
+                }
+                v
+            }
+            WireProtocol::Text => vec![(None, 0)],
+        };
+        for &(poller, reactors) in &variants {
+            for &connections in &params.connections {
+                let mut cfg = base.clone();
+                if let Some(p) = poller {
+                    cfg.poller = p;
+                    cfg.reactors = reactors;
+                }
+                let pipeline = Arc::new(Pipeline::new(cfg)?);
+                let server = TcpServer::start_wire(Arc::clone(&pipeline), "127.0.0.1:0", wire)
+                    .with_context(|| format!("starting {} listener", wire.label()))?;
+                let addr = server.local_addr();
+                let batch = connections * params.jobs_per_connection;
+                let submitted_before = counter(&pipeline, "ingress.submitted");
+                let shed_before =
+                    counter(&pipeline, "ingress.shed") + counter(&pipeline, "ingress.timed_out");
+                let lat = Mutex::new(Vec::<Duration>::new());
+                let label = match poller {
+                    Some(p) => format!(
+                        "ingress.framed.{}.r{reactors}.conns{connections}",
+                        p.label()
+                    ),
+                    None => format!("ingress.text.conns{connections}"),
+                };
+                let timing = measure(&label, opts, || {
+                    std::thread::scope(|s| {
+                        for _ in 0..connections {
+                            s.spawn(|| match wire {
+                                WireProtocol::Framed => drive_framed(
+                                    addr,
+                                    &params.spec,
+                                    params.jobs_per_connection,
+                                    &lat,
+                                ),
+                                WireProtocol::Text => drive_text(
+                                    addr,
+                                    &params.spec,
+                                    params.jobs_per_connection,
+                                    &lat,
+                                ),
+                            });
+                        }
+                    });
                 });
-            });
-            // Drop the warmup batches' samples, same as pipeline_bench.
-            let mut all = lat.into_inner().unwrap();
-            let keep_from = (opts.warmup * batch).min(all.len());
-            let mut kept = all.split_off(keep_from);
-            kept.sort_unstable();
-            let submitted = counter(&pipeline, "ingress.submitted") - submitted_before;
-            let shed = counter(&pipeline, "ingress.shed")
-                + counter(&pipeline, "ingress.timed_out")
-                - shed_before;
-            points.push(WirePoint {
-                wire: wire.label().to_string(),
-                connections,
-                jobs_per_sample: batch as u64,
-                jobs_per_sec: batch as f64 / timing.median_secs().max(1e-9),
-                p50_ms: percentile_ms(&kept, 0.5),
-                p95_ms: percentile_ms(&kept, 0.95),
-                shed_rate: if submitted == 0 { 0.0 } else { shed as f64 / submitted as f64 },
-            });
-            drop(server);
+                // Drop the warmup batches' samples, same as
+                // pipeline_bench.
+                let mut all = lat.into_inner().unwrap();
+                let keep_from = (opts.warmup * batch).min(all.len());
+                let mut kept = all.split_off(keep_from);
+                kept.sort_unstable();
+                let submitted = counter(&pipeline, "ingress.submitted") - submitted_before;
+                let shed = counter(&pipeline, "ingress.shed")
+                    + counter(&pipeline, "ingress.timed_out")
+                    - shed_before;
+                points.push(WirePoint {
+                    wire: wire.label().to_string(),
+                    poller: poller.map_or_else(|| "none".to_string(), |p| p.label().to_string()),
+                    reactors,
+                    connections,
+                    jobs_per_sample: batch as u64,
+                    jobs_per_sec: batch as f64 / timing.median_secs().max(1e-9),
+                    p50_ms: percentile_ms(&kept, 0.5),
+                    p95_ms: percentile_ms(&kept, 0.95),
+                    shed_rate: if submitted == 0 { 0.0 } else { shed as f64 / submitted as f64 },
+                });
+                drop(server);
+            }
         }
     }
     Ok(IngressBench {
@@ -245,10 +335,18 @@ pub fn run(
 
 fn json_point(p: &WirePoint) -> String {
     format!(
-        "    {{\"wire\": \"{}\", \"connections\": {}, \"jobs_per_sample\": {}, \
-         \"jobs_per_sec\": {:.2}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
-         \"shed_rate\": {:.4}}}",
-        p.wire, p.connections, p.jobs_per_sample, p.jobs_per_sec, p.p50_ms, p.p95_ms, p.shed_rate,
+        "    {{\"wire\": \"{}\", \"poller\": \"{}\", \"reactors\": {}, \"connections\": {}, \
+         \"jobs_per_sample\": {}, \"jobs_per_sec\": {:.2}, \"p50_ms\": {:.3}, \
+         \"p95_ms\": {:.3}, \"shed_rate\": {:.4}}}",
+        p.wire,
+        p.poller,
+        p.reactors,
+        p.connections,
+        p.jobs_per_sample,
+        p.jobs_per_sec,
+        p.p50_ms,
+        p.p95_ms,
+        p.shed_rate,
     )
 }
 
@@ -307,13 +405,23 @@ const LATENCY_WARN_FLOOR_MS: f64 = 1.0;
 
 /// Compare two `BENCH_ingress.json` documents. Semantics mirror
 /// `pipeline_bench::gate` — jobs/sec throughput gate per comparable
-/// (wire, connections) cell, p95 warn-or-strict with the
-/// synthetic-baseline disarm, Skipped on incomparable run parameters,
-/// hard error on a malformed current run — plus one extra invariant:
-/// **the current run must carry at least one framed and one text
-/// cell**. The trajectory exists to compare the two wires; a one-sided
-/// run means the harness broke, and that fails the gate rather than
-/// quietly gating the surviving mode.
+/// (wire, poller, reactors, connections) cell, p95 warn-or-strict with
+/// the synthetic-baseline disarm, Skipped on incomparable run
+/// parameters, hard error on a malformed current run — plus extra
+/// invariants:
+///
+/// * **the current run must carry at least one framed and one text
+///   cell** — the trajectory exists to compare the two wires; a
+///   one-sided run means the harness broke, and that fails the gate
+///   rather than quietly gating the surviving mode;
+/// * **multi-reactor cells compare only like-for-like** — a framed
+///   cell matches a baseline cell only on identical poller *and*
+///   reactor count (pre-pool baselines without the fields default to
+///   `poll`/1 reactor for framed, `none`/0 for text, so old baselines
+///   stay comparable);
+/// * **a poller the baseline covers must appear in the current run** —
+///   losing the epoll (or poll) column is a silent 100% regression on
+///   that side of the backend A/B and fails the gate.
 pub fn gate(
     baseline: &str,
     current: &str,
@@ -333,6 +441,8 @@ pub fn gate(
     }
     struct Cell {
         wire: String,
+        poller: String,
+        reactors: u64,
         connections: u64,
         jobs_per_sec: f64,
         p95_ms: Option<f64>,
@@ -343,8 +453,25 @@ pub fn gate(
             .unwrap_or(&[])
             .iter()
             .filter_map(|p| {
+                let wire = p.get("wire")?.as_str()?.to_string();
+                // Pre-pool baselines lack the poller/reactors fields:
+                // those cells ran the single poll(2) reactor, so they
+                // stay comparable under (poll, 1) / text (none, 0).
+                let framed = wire == "framed";
+                let poller = p
+                    .get("poller")
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .unwrap_or_else(|| if framed { "poll" } else { "none" }.to_string());
+                let reactors = p
+                    .get("reactors")
+                    .and_then(Json::as_f64)
+                    .map(|v| v as u64)
+                    .unwrap_or(u64::from(framed));
                 Some(Cell {
-                    wire: p.get("wire")?.as_str()?.to_string(),
+                    wire,
+                    poller,
+                    reactors,
                     connections: p.get("connections")?.as_f64()? as u64,
                     jobs_per_sec: p.get("jobs_per_sec")?.as_f64()?,
                     p95_ms: p.get("p95_ms").and_then(Json::as_f64),
@@ -397,11 +524,22 @@ pub fn gate(
     let mut compared = 0usize;
     let mut regressions = Vec::new();
     let mut latency_findings = Vec::new();
+    // A framed cell's performance is a function of its backend and its
+    // reactor count — only identical (poller, reactors) cells compare.
+    let cell_name = |cell: &Cell| -> String {
+        if cell.wire == "framed" {
+            format!("framed[{}, r{}]", cell.poller, cell.reactors)
+        } else {
+            cell.wire.clone()
+        }
+    };
     for cur in &cur_cells {
-        let Some(base) = base_cells
-            .iter()
-            .find(|b| b.wire == cur.wire && b.connections == cur.connections)
-        else {
+        let Some(base) = base_cells.iter().find(|b| {
+            b.wire == cur.wire
+                && b.poller == cur.poller
+                && b.reactors == cur.reactors
+                && b.connections == cur.connections
+        }) else {
             continue;
         };
         compared += 1;
@@ -409,7 +547,10 @@ pub fn gate(
             let drop_pct = (1.0 - cur.jobs_per_sec / base.jobs_per_sec.max(1e-9)) * 100.0;
             regressions.push(format!(
                 "{} @ {} connection(s): {:.1} jobs/s vs baseline {:.1} (-{drop_pct:.0}%)",
-                cur.wire, cur.connections, cur.jobs_per_sec, base.jobs_per_sec
+                cell_name(cur),
+                cur.connections,
+                cur.jobs_per_sec,
+                base.jobs_per_sec
             ));
         }
         if let (Some(b95), Some(c95)) = (base.p95_ms, cur.p95_ms) {
@@ -422,7 +563,8 @@ pub fn gate(
                 latency_findings.push(format!(
                     "{} @ {} connection(s): p95 latency {c95:.2}ms vs baseline \
                      {b95:.2}ms ({growth})",
-                    cur.wire, cur.connections
+                    cell_name(cur),
+                    cur.connections
                 ));
             }
         }
@@ -433,6 +575,20 @@ pub fn gate(
         if base_cells.iter().any(|b| b.wire == wire) && !cur_cells.iter().any(|c| c.wire == wire) {
             regressions
                 .push(format!("{wire} vanished: baseline has cells, current run has none"));
+        }
+    }
+    // Same for a readiness backend: a baseline that measured a poller
+    // the current run never ran means the backend A/B lost a column.
+    let base_pollers: std::collections::BTreeSet<&str> = base_cells
+        .iter()
+        .filter(|b| b.wire == "framed")
+        .map(|b| b.poller.as_str())
+        .collect();
+    for poller in base_pollers {
+        if !cur_cells.iter().any(|c| c.wire == "framed" && c.poller == poller) {
+            regressions.push(format!(
+                "framed poller={poller} vanished: baseline has cells, current run has none"
+            ));
         }
     }
     let mut warnings = Vec::new();
@@ -561,14 +717,107 @@ mod tests {
         assert_eq!(disarmed.warnings.len(), 2, "{:?}", disarmed.warnings);
     }
 
+    /// New-schema doc: framed cells across two pollers and two reactor
+    /// counts, plus the text baseline.
+    fn pool_doc(epoll_r2_jps: f64) -> String {
+        let framed = |poller: &str, reactors: u64, jps: f64| {
+            format!(
+                "{{\"wire\": \"framed\", \"poller\": \"{poller}\", \"reactors\": {reactors}, \
+                 \"connections\": 1, \"jobs_per_sec\": {jps}, \"p95_ms\": 50.0}}"
+            )
+        };
+        format!(
+            "{{\"bench\": \"ingress_wire_saturation\", \"profile\": \"release\", \
+             \"scale\": 0.05, \"spec\": \"primes par(2)\", \"jobs_per_connection\": 3, \
+             \"warmup\": 1, \"samples\": 3, \"points\": [{}, {}, {}, \
+             {{\"wire\": \"text\", \"poller\": \"none\", \"reactors\": 0, \
+               \"connections\": 1, \"jobs_per_sec\": 90.0, \"p95_ms\": 50.0}}]}}",
+            framed("poll", 1, 100.0),
+            framed("poll", 2, 150.0),
+            framed("epoll", 2, epoll_r2_jps),
+        )
+    }
+
+    #[test]
+    fn gate_matches_poller_and_reactor_cells_like_for_like() {
+        // Identical runs: every cell finds its exact counterpart.
+        let base = pool_doc(200.0);
+        assert_eq!(
+            gate(&base, &base, 0.25, LT, false).unwrap().outcome,
+            GateOutcome::Passed { cells: 4 }
+        );
+        // A regression confined to the epoll/r2 cell is attributed to
+        // it — the poll cells don't mask it.
+        let bad = pool_doc(40.0);
+        match gate(&base, &bad, 0.25, LT, false).unwrap().outcome {
+            GateOutcome::Failed { regressions } => {
+                assert_eq!(regressions.len(), 1, "{regressions:?}");
+                assert!(regressions[0].contains("framed[epoll, r2]"), "{regressions:?}");
+            }
+            other => panic!("expected failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gate_fails_when_a_baseline_poller_is_missing_from_the_current_run() {
+        let base = pool_doc(200.0);
+        // Current run kept both wires but never ran epoll.
+        let no_epoll = "{\"bench\": \"ingress_wire_saturation\", \"profile\": \"release\", \
+             \"scale\": 0.05, \"spec\": \"primes par(2)\", \"jobs_per_connection\": 3, \
+             \"warmup\": 1, \"samples\": 3, \"points\": [\
+             {\"wire\": \"framed\", \"poller\": \"poll\", \"reactors\": 1, \
+              \"connections\": 1, \"jobs_per_sec\": 100.0, \"p95_ms\": 50.0}, \
+             {\"wire\": \"text\", \"poller\": \"none\", \"reactors\": 0, \
+              \"connections\": 1, \"jobs_per_sec\": 90.0, \"p95_ms\": 50.0}]}";
+        match gate(&base, no_epoll, 0.25, LT, false).unwrap().outcome {
+            GateOutcome::Failed { regressions } => {
+                assert!(
+                    regressions.iter().any(|r| r.contains("poller=epoll vanished")),
+                    "{regressions:?}"
+                );
+            }
+            other => panic!("expected failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gate_defaults_legacy_cells_to_the_single_poll_reactor() {
+        // A pre-pool baseline (no poller/reactors fields) must compare
+        // against exactly the current run's (poll, r1) cells — not the
+        // multi-reactor or epoll ones.
+        let legacy = doc("release", 100.0, 90.0);
+        let current = pool_doc(200.0);
+        let report = gate(&legacy, &current, 0.25, LT, false).unwrap();
+        assert_eq!(report.outcome, GateOutcome::Passed { cells: 2 });
+        // And the reverse: dropping to (poll, r1)-only from a pool
+        // baseline loses the epoll column loudly.
+        let err_free = gate(&current, &legacy, 0.25, LT, false).unwrap();
+        match err_free.outcome {
+            GateOutcome::Failed { regressions } => {
+                assert!(
+                    regressions.iter().any(|r| r.contains("poller=epoll vanished")),
+                    "{regressions:?}"
+                );
+            }
+            other => panic!("expected failure, got {other:?}"),
+        }
+    }
+
     #[test]
     fn env_knobs_parse() {
-        // No env set in the test harness: both fall through to None.
+        // No env set in the test harness: all fall through to None.
         if std::env::var("SFUT_INGRESS_CONNS").is_err() {
             assert!(connections_from_env().is_none());
         }
         if std::env::var("SFUT_INGRESS_JOBS").is_err() {
             assert!(jobs_from_env().is_none());
         }
+        if std::env::var("SFUT_INGRESS_POLLERS").is_err() {
+            assert!(pollers_from_env().is_none());
+        }
+        if std::env::var("SFUT_INGRESS_REACTORS").is_err() {
+            assert!(reactor_counts_from_env().is_none());
+        }
+        assert!(!default_pollers().is_empty());
     }
 }

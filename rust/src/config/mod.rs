@@ -202,6 +202,88 @@ impl std::str::FromStr for WireProtocol {
     }
 }
 
+/// Readiness backend the framed reactor pool polls descriptors with
+/// (see the coordinator module docs, "Wire protocol").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PollerKind {
+    /// Pick the best backend for the platform: epoll on Linux, the
+    /// poll(2) scan everywhere else. The default.
+    Auto,
+    /// The portable poll(2) descriptor scan — O(n) per wakeup, kept as
+    /// the A/B baseline the epoll backend is measured against.
+    Poll,
+    /// Linux epoll (`epoll_create1`/`epoll_ctl`/`epoll_wait`): O(1)
+    /// readiness delivery regardless of session count. Selecting it on
+    /// a non-Linux platform fails at listener start.
+    Epoll,
+}
+
+impl PollerKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PollerKind::Auto => "auto",
+            PollerKind::Poll => "poll",
+            PollerKind::Epoll => "epoll",
+        }
+    }
+
+    /// Parse `SFUT_POLLER` if set. Panics on an invalid value: CI pins
+    /// the backend per step, and a typo silently falling back to the
+    /// default would invalidate the poll-vs-epoll A/B comparison.
+    pub fn from_env() -> Option<PollerKind> {
+        let raw = std::env::var("SFUT_POLLER").ok()?;
+        match raw.parse() {
+            Ok(kind) => Some(kind),
+            Err(e) => panic!("SFUT_POLLER: {e}"),
+        }
+    }
+
+    /// Env override if present, otherwise [`PollerKind::Auto`].
+    pub fn default_poller() -> PollerKind {
+        PollerKind::from_env().unwrap_or(PollerKind::Auto)
+    }
+
+    /// The concrete backend `Auto` resolves to on this platform.
+    pub fn resolved(&self) -> PollerKind {
+        match self {
+            PollerKind::Auto => {
+                if cfg!(target_os = "linux") {
+                    PollerKind::Epoll
+                } else {
+                    PollerKind::Poll
+                }
+            }
+            other => *other,
+        }
+    }
+}
+
+impl std::str::FromStr for PollerKind {
+    type Err = ConfigError;
+
+    fn from_str(s: &str) -> Result<PollerKind, ConfigError> {
+        match s.trim() {
+            "auto" => Ok(PollerKind::Auto),
+            "poll" => Ok(PollerKind::Poll),
+            "epoll" => Ok(PollerKind::Epoll),
+            other => Err(ConfigError::new(format!(
+                "unknown poller: {other} (want poll | epoll | auto)"
+            ))),
+        }
+    }
+}
+
+/// Parse `SFUT_REACTORS` if set (the framed reactor-thread count; 0 =
+/// auto from cores). Panics on an invalid value for the same reason as
+/// [`PollerKind::from_env`].
+pub fn reactors_from_env() -> Option<usize> {
+    let raw = std::env::var("SFUT_REACTORS").ok()?;
+    match raw.trim().parse() {
+        Ok(n) => Some(n),
+        Err(_) => panic!("SFUT_REACTORS: not a reactor count: {raw}"),
+    }
+}
+
 // NOTE: the closed `Workload` enum that used to live here is gone.
 // Workloads are an open set now: `workload::StreamWorkload` plugins
 // registered in a `workload::WorkloadRegistry`, resolved by *name* at
@@ -279,6 +361,24 @@ pub struct Config {
     /// the default). Overridable via the `wire`/`ingress.wire` config
     /// key, `--wire`, or `SFUT_WIRE`.
     pub wire: WireProtocol,
+    /// Readiness backend for framed listeners: `poll` (portable O(n)
+    /// scan, the A/B baseline), `epoll` (Linux, O(1) delivery), or
+    /// `auto` (epoll where available; the default). Overridable via the
+    /// `poller`/`ingress.poller` config key, `--poller`, or
+    /// `SFUT_POLLER`.
+    pub poller: PollerKind,
+    /// Reactor threads a framed listener runs (accepts fan out
+    /// round-robin; each session is pinned to one reactor for life).
+    /// 0 = auto from available cores; 1 (the default) keeps the PR 7
+    /// single-reactor shape. Overridable via `reactors`/
+    /// `ingress.reactors`, `--reactors`, or `SFUT_REACTORS`.
+    pub reactors: usize,
+    /// Whether a multi-reactor framed listener may bind an
+    /// SO_REUSEPORT listener group (kernel-hashed accept fanout).
+    /// `false` forces the in-process fd-handoff path, whose round-robin
+    /// dispatch is deterministic — the fanout tests pin it. Overridable
+    /// via `reuseport`/`ingress.reuseport`.
+    pub reuseport: bool,
     /// Bench harness: measurement samples per cell.
     pub samples: usize,
     /// Bench harness: warmup iterations per cell.
@@ -311,6 +411,9 @@ impl Default for Config {
             stack_size: 256 << 20,
             deque: DequeKind::default_kind(),
             wire: WireProtocol::default_wire(),
+            poller: PollerKind::default_poller(),
+            reactors: reactors_from_env().unwrap_or(1),
+            reuseport: true,
             samples: 5,
             warmup: 1,
             scale: 1.0,
@@ -411,6 +514,9 @@ impl Config {
             "stack_size" | "exec.stack_size" => self.stack_size = p(key, value)?,
             "deque" | "exec.deque" => self.deque = p(key, value)?,
             "wire" | "ingress.wire" => self.wire = p(key, value)?,
+            "poller" | "ingress.poller" => self.poller = p(key, value)?,
+            "reactors" | "ingress.reactors" => self.reactors = p(key, value)?,
+            "reuseport" | "ingress.reuseport" => self.reuseport = p(key, value)?,
             "samples" | "bench.samples" => self.samples = p(key, value)?,
             "warmup" | "bench.warmup" => self.warmup = p(key, value)?,
             "scale" | "bench.scale" => self.scale = p(key, value)?,
@@ -455,6 +561,9 @@ impl Config {
         }
         if self.deadline_ms > 86_400_000 {
             return Err(ConfigError::new("deadline_ms must be <= 86400000 (0 = off)"));
+        }
+        if self.reactors > 128 {
+            return Err(ConfigError::new("reactors must be <= 128 (0 = auto)"));
         }
         if self.samples == 0 {
             return Err(ConfigError::new("samples must be >= 1"));
@@ -581,6 +690,41 @@ mod tests {
         assert_eq!("binary".parse::<WireProtocol>().unwrap(), WireProtocol::Framed);
         assert_eq!("line".parse::<WireProtocol>().unwrap(), WireProtocol::Text);
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn poller_and_reactor_keys_parse() {
+        let mut c = Config::default();
+        if std::env::var("SFUT_POLLER").is_err() {
+            assert_eq!(c.poller, PollerKind::Auto, "auto poller is the default");
+        }
+        if std::env::var("SFUT_REACTORS").is_err() {
+            assert_eq!(c.reactors, 1, "single reactor is the default shape");
+        }
+        assert!(c.reuseport, "reuseport fanout defaults on");
+        c.set("poller", "epoll").unwrap();
+        assert_eq!(c.poller, PollerKind::Epoll);
+        c.set("ingress.poller", "poll").unwrap();
+        assert_eq!(c.poller, PollerKind::Poll);
+        assert!(c.set("poller", "kqueue").is_err());
+        c.set("reactors", "4").unwrap();
+        assert_eq!(c.reactors, 4);
+        c.set("ingress.reactors", "0").unwrap();
+        assert_eq!(c.reactors, 0, "0 = auto from cores");
+        c.set("reuseport", "false").unwrap();
+        assert!(!c.reuseport);
+        c.validate().unwrap();
+        let mut c = Config::default();
+        c.reactors = 129;
+        assert!(c.validate().is_err());
+        assert_eq!(PollerKind::Epoll.label(), "epoll");
+        assert_eq!("auto".parse::<PollerKind>().unwrap(), PollerKind::Auto);
+        assert_eq!(PollerKind::Poll.resolved(), PollerKind::Poll);
+        if cfg!(target_os = "linux") {
+            assert_eq!(PollerKind::Auto.resolved(), PollerKind::Epoll);
+        } else {
+            assert_eq!(PollerKind::Auto.resolved(), PollerKind::Poll);
+        }
     }
 
     #[test]

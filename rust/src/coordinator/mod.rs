@@ -138,11 +138,40 @@
 //! env). Both expose the same four operations and the same failure
 //! taxonomy above; the **text** protocol (newline-delimited commands,
 //! one blocking thread per session) is the compatibility baseline, the
-//! **framed** protocol is the event-loop ingress: one poll(2)-based
-//! reactor thread multiplexes every session, and job completion wakes
-//! the reactor through the same [`Fut`](crate::susp::Fut)
+//! **framed** protocol is the event-loop ingress: a pool of reactor
+//! threads multiplexes every session, and job completion wakes the
+//! owning reactor through the same [`Fut`](crate::susp::Fut)
 //! promise/callback path the tickets are built on — no thread parked
 //! per in-flight `wait`.
+//!
+//! ## Reactor pool
+//!
+//! The framed listener runs `Config::reactors` event-loop threads
+//! (`--reactors`, `SFUT_REACTORS`; 0 = auto from cores), each with its
+//! own readiness backend, self-pipe waker, and session table:
+//!
+//! * **Pinning** — a connection is adopted by exactly one reactor at
+//!   accept and stays there for its lifetime. Session state (decode
+//!   buffer, ticket table, write queue) is therefore single-threaded,
+//!   and a parked `wait`'s completion callback wakes precisely the
+//!   reactor that owns the session — per-reactor wakers never contend.
+//! * **Accept fanout** — on Linux each reactor owns its own listener in
+//!   an `SO_REUSEPORT` group and the kernel spreads connections with
+//!   zero in-process coordination; elsewhere (or with
+//!   `Config::reuseport = false`, which tests use for determinism)
+//!   reactor 0 accepts and deals fds round-robin to per-reactor
+//!   inboxes, waking the target.
+//! * **Poller selection** — readiness is a trait with two backends
+//!   (`Config::poller` = `poll | epoll | auto`; `--poller`,
+//!   `SFUT_POLLER`): the portable poll(2) scan, O(sessions) per wakeup
+//!   and kept as the A/B baseline, and Linux epoll, O(ready) per
+//!   wakeup. `auto` picks epoll on Linux, poll elsewhere.
+//!
+//! Observability: per-reactor `wire.<r>.sessions` / `wire.<r>.*`
+//! gauges and counters shadow the pool-wide `wire.*` totals, whose
+//! meaning is unchanged from the single-reactor design — counter
+//! reconciliation holds under any reactor count, and the per-reactor
+//! split is what the session-pinning tests assert against.
 //!
 //! ## Frame layout
 //!
@@ -207,7 +236,11 @@ mod ingress;
 mod job;
 pub mod frame;
 #[cfg(unix)]
+mod poller;
+#[cfg(unix)]
 mod reactor;
+#[cfg(unix)]
+mod reuseport;
 mod router;
 mod server;
 pub mod shard;

@@ -1,21 +1,43 @@
-//! Poll-based event-loop session layer for the framed wire protocol.
+//! Event-loop session layer for the framed wire protocol: a pool of
+//! reactor threads over a pluggable readiness backend.
 //!
-//! One `sfut-reactor` thread owns the nonblocking listener and every
-//! framed session — no thread-per-connection. The async primitive is
-//! the repo's own [`Fut`](crate::susp::Fut): a `wait` on an unresolved
-//! ticket registers an `on_complete` continuation that pushes the
-//! (session, ticket) pair onto a ready list and wakes the reactor
-//! through a self-pipe, so job completion flows to the consumer over
-//! the exact promise/callback path the paper's stream cells use —
-//! never a dedicated waiting thread, never a poll of the job.
+//! Each `sfut-reactor-<r>` thread owns a disjoint set of nonblocking
+//! framed sessions — no thread-per-connection, and no cross-thread
+//! session state: a connection is **pinned** to one reactor for its
+//! lifetime, so decode buffers, ticket tables, and write queues stay
+//! single-threaded and each reactor's waker/self-pipe stays
+//! uncontended. The async primitive is the repo's own
+//! [`Fut`](crate::susp::Fut): a `wait` on an unresolved ticket
+//! registers an `on_complete` continuation that pushes the (session,
+//! ticket) pair onto the owning reactor's ready list and wakes *that*
+//! reactor through its self-pipe, so job completion flows to the
+//! consumer over the exact promise/callback path the paper's stream
+//! cells use — never a dedicated waiting thread, never a poll of the
+//! job.
 //!
-//! Flow control is end-to-end:
+//! **Readiness** is behind the [`super::poller::Poller`] trait: the
+//! portable poll(2) scan or Linux epoll, selected by
+//! [`Config::poller`](crate::config::Config) (`--poller`,
+//! `SFUT_POLLER`; `auto` picks epoll where available).
+//!
+//! **Accept fanout** ([`Config::reactors`](crate::config::Config), 0 =
+//! auto from cores): with an SO_REUSEPORT listener group
+//! ([`super::reuseport`], Linux) every reactor accepts from its own
+//! listener and the kernel balances connections — zero in-process
+//! coordination. Where the group is unavailable (non-Linux, or
+//! `Config::reuseport = false`), reactor 0 owns the single listener
+//! and hands accepted fds round-robin to per-reactor inboxes, waking
+//! the target; the session is adopted — pinned — by the receiving
+//! reactor before its first byte is parsed.
+//!
+//! Flow control is end-to-end and unchanged from the single-reactor
+//! design:
 //!
 //! * **Read backpressure** — a session whose write buffer crosses
 //!   [`HIGH_WATER`] (a client that stops draining results), or whose
-//!   front submit is deferred on a full admission queue, stops being
-//!   polled for readability. The kernel socket buffer fills, TCP
-//!   pushes back on the client, and server memory stays bounded
+//!   front submit is deferred on a full admission queue, drops to an
+//!   empty poll interest. The kernel socket buffer fills, TCP pushes
+//!   back on the client, and server memory stays bounded
 //!   (`wire.read_paused` counts the transitions).
 //! * **Admission backpressure** — submits go through the ingress's
 //!   nonblocking [`try_submit`](super::ingress::Ingress::try_submit):
@@ -25,17 +47,27 @@
 //!   by submit order — and retry each tick, `timeout` expiring into
 //!   the same `err admission=timeout` line the text protocol emits.
 //!
+//! Per-reactor observability: `wire.<r>.sessions`,
+//! `wire.<r>.read_paused`, `wire.<r>.midframe_disconnects`, and
+//! `wire.<r>.frames_in` shadow the pool-wide totals (`wire.sessions`,
+//! `wire.read_paused`, …), which keep their exact pre-pool meaning —
+//! every reconciliation that balances wire traffic against the
+//! aggregate counters holds under any reactor count. The per-reactor
+//! `frames_in` is also what makes the pinning invariant *testable*:
+//! all frames of one connection land on exactly one `wire.<r>.*` set.
+//!
 //! Protocol errors (bad magic, oversized length, unknown kind) answer
 //! exactly one well-formed `Err` frame and then close; a mid-frame
 //! disconnect is detected via the decoder's partial state and closed
-//! without ceremony. Shutdown mirrors the text path's drain: parked
-//! waits get a grace window to deliver late results, then a final
-//! `err closed ticket=N` frame each, buffers are flushed best-effort,
-//! and the thread exits.
+//! without ceremony. Shutdown mirrors the text path's drain in every
+//! reactor: parked waits get a grace window to deliver late results,
+//! then a final `err closed ticket=N` frame each, buffers are flushed
+//! best-effort, and the thread exits; the TCP front-end joins all pool
+//! threads and drops the waker handles so the self-pipe fds close.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
 use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -52,24 +84,26 @@ use super::frame::{
 };
 use super::ingress::{JobTicket, SubmitError, TryAdmit};
 use super::job::{JobRequest, JobResult};
+use super::poller::{self, Event, Interest, Poller};
+use super::reuseport;
 use super::router::Pipeline;
 use super::server::{
     err_closed_line, err_released_line, release_oldest_resolved, workloads_listing,
     MAX_SESSION_TICKETS,
 };
 use crate::config::AdmissionPolicy;
-use crate::metrics::MetricsRegistry;
+use crate::metrics::{Counter, Gauge, MetricsRegistry};
 use crate::susp::FutState;
 
 /// Write-buffer level that pauses reading from a session until the
 /// client drains results below it.
 const HIGH_WATER: usize = 64 * 1024;
 
-/// Poll timeout when idle; completion wakes arrive via the self-pipe
+/// Wait timeout when idle; completion wakes arrive via the self-pipe
 /// long before this fires.
 const IDLE_POLL_MS: i32 = 50;
 
-/// Poll timeout while any session has a deferred (queue-full) submit:
+/// Wait timeout while any session has a deferred (queue-full) submit:
 /// admission slots free without a wake, so tick faster.
 const DEFERRED_POLL_MS: i32 = 5;
 
@@ -78,48 +112,28 @@ const DEFERRED_POLL_MS: i32 = 5;
 /// text server's `STOP_DRAIN_GRACE`).
 const DRAIN_GRACE: Duration = Duration::from_secs(1);
 
-mod sys {
-    #[repr(C)]
-    #[derive(Clone, Copy)]
-    pub struct PollFd {
-        pub fd: i32,
-        pub events: i16,
-        pub revents: i16,
-    }
+/// Poller token of a reactor's self-pipe read end.
+const TOKEN_WAKER: u64 = 0;
+/// Poller token of a reactor's listener (when it owns one).
+const TOKEN_LISTENER: u64 = 1;
+/// Session id `sid` registers under token `sid + TOKEN_SESSION_BASE`.
+const TOKEN_SESSION_BASE: u64 = 2;
 
-    pub const POLLIN: i16 = 0x001;
-    pub const POLLOUT: i16 = 0x004;
-    pub const POLLERR: i16 = 0x008;
-    pub const POLLHUP: i16 = 0x010;
-
-    extern "C" {
-        fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
-    }
-
-    /// `poll(2)` with EINTR retry. The one FFI call in the crate — the
-    /// toolchain ships no event-loop dependency, and one symbol from
-    /// libc (already linked by std) is all a readiness loop needs.
-    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
-        loop {
-            let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, timeout_ms) };
-            if rc >= 0 {
-                return Ok(rc as usize);
-            }
-            let err = std::io::Error::last_os_error();
-            if err.kind() != std::io::ErrorKind::Interrupted {
-                return Err(err);
-            }
-        }
-    }
-}
+/// Auto reactor count (`Config::reactors = 0`): available cores, capped
+/// — past this, accept fanout stops being the bottleneck anyway.
+const MAX_AUTO_REACTORS: usize = 16;
 
 /// Completions waiting to be turned into `Result` frames:
 /// `(session id, ticket id)` pairs pushed by `on_complete` callbacks.
 type ReadyList = Arc<Mutex<Vec<(u64, u64)>>>;
 
+/// Accepted-but-not-yet-adopted connections handed to a reactor by the
+/// fanout dispatcher (fd handoff mode only).
+type Inbox = Arc<Mutex<VecDeque<(TcpStream, SocketAddr)>>>;
+
 /// Self-pipe wake handle: job-completion callbacks (and
 /// [`TcpServer::shutdown`](super::TcpServer::shutdown)) call
-/// [`Waker::wake`] to interrupt the reactor's `poll`.
+/// [`Waker::wake`] to interrupt the owning reactor's wait.
 #[derive(Clone)]
 pub(super) struct Waker {
     tx: Arc<UnixStream>,
@@ -140,45 +154,181 @@ impl Waker {
     }
 }
 
-/// What [`start`] hands back to the TCP front-end.
-pub(super) struct ReactorHandle {
-    pub(super) thread: JoinHandle<()>,
-    pub(super) waker: Waker,
-    /// Live framed sessions (the reactor's analogue of tracked session
-    /// threads).
-    pub(super) live: Arc<AtomicU64>,
+/// What [`start_pool`] hands back to the TCP front-end.
+pub(super) struct PoolHandle {
+    /// Where the pool actually listens (port 0 resolved).
+    pub(super) local_addr: SocketAddr,
+    /// One `sfut-reactor-<r>` thread per reactor, in id order.
+    pub(super) threads: Vec<JoinHandle<()>>,
+    /// One waker per reactor; dropping them after join closes the
+    /// self-pipe write ends.
+    pub(super) wakers: Vec<Waker>,
+    /// Live framed sessions per reactor (the pool's analogue of
+    /// tracked session threads).
+    pub(super) live: Arc<Vec<AtomicU64>>,
+    /// Sessions ever pinned to each reactor — the fanout distribution,
+    /// observable without metrics scraping.
+    pub(super) pinned: Arc<Vec<AtomicU64>>,
 }
 
-/// Spawn the reactor thread over an already-bound nonblocking listener.
-pub(super) fn start(
-    listener: TcpListener,
+/// Resolve `Config::reactors` (0 = auto from available cores).
+fn resolve_reactors(configured: usize) -> usize {
+    if configured > 0 {
+        return configured;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(MAX_AUTO_REACTORS)
+}
+
+fn bind_std(addr: SocketAddr) -> Result<TcpListener> {
+    let listener = TcpListener::bind(addr).context("binding TCP listener")?;
+    listener.set_nonblocking(true)?;
+    Ok(listener)
+}
+
+/// Bind `addr` and spawn the reactor pool over it, per the pipeline's
+/// `reactors`/`poller`/`reuseport` config. Binding happens in here —
+/// not the caller — because an SO_REUSEPORT group must set the option
+/// before bind on every member socket, which std's `TcpListener::bind`
+/// cannot retrofit.
+pub(super) fn start_pool(
+    addr: SocketAddr,
     pipeline: Arc<Pipeline>,
     stop: Arc<AtomicBool>,
     sessions_total: Arc<AtomicU64>,
-) -> Result<ReactorHandle> {
-    let (waker, waker_rx) = Waker::pair().context("creating reactor self-pipe")?;
-    let live = Arc::new(AtomicU64::new(0));
-    let reactor = Reactor {
-        pipeline,
-        listener,
-        stop,
-        sessions_total,
-        live: Arc::clone(&live),
-        waker: waker.clone(),
-        waker_rx,
-        ready: Arc::new(Mutex::new(Vec::new())),
+) -> Result<PoolHandle> {
+    let cfg = pipeline.config();
+    let n = resolve_reactors(cfg.reactors);
+    let poller_kind = cfg.poller;
+    // Build every backend up front so an unsupported selection (epoll
+    // off Linux) fails the listener start, not a spawned thread.
+    let mut pollers: Vec<Box<dyn Poller>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        pollers.push(poller::build(poller_kind).context("building poller backend")?);
+    }
+
+    // Accept plan: per-reactor SO_REUSEPORT listeners where the group
+    // binds, else one listener on reactor 0 with fd handoff.
+    let mut listener_slots: Vec<Option<TcpListener>>;
+    let handoff: bool;
+    if n > 1 && cfg.reuseport {
+        match reuseport::bind_group(addr, n) {
+            Ok(group) => {
+                listener_slots = group.into_iter().map(Some).collect();
+                handoff = false;
+            }
+            Err(e) => {
+                info!("SO_REUSEPORT group unavailable ({e}); using in-process fd handoff");
+                let mut slots: Vec<Option<TcpListener>> = (0..n).map(|_| None).collect();
+                slots[0] = Some(bind_std(addr)?);
+                listener_slots = slots;
+                handoff = true;
+            }
+        }
+    } else {
+        let mut slots: Vec<Option<TcpListener>> = (0..n).map(|_| None).collect();
+        slots[0] = Some(bind_std(addr)?);
+        listener_slots = slots;
+        handoff = true;
+    }
+    let local_addr = listener_slots[0]
+        .as_ref()
+        .expect("reactor 0 always holds a listener")
+        .local_addr()?;
+
+    let live: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+    let pinned: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+    let mut wakers: Vec<Waker> = Vec::with_capacity(n);
+    let mut waker_rxs: Vec<UnixStream> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (w, rx) = Waker::pair().context("creating reactor self-pipe")?;
+        wakers.push(w);
+        waker_rxs.push(rx);
+    }
+    let inboxes: Vec<Inbox> = (0..n).map(|_| Arc::new(Mutex::new(VecDeque::new()))).collect();
+    let mut dispatch = if handoff && n > 1 {
+        Some(Dispatch { inboxes: inboxes.clone(), wakers: wakers.clone(), next: 0 })
+    } else {
+        None
     };
-    let thread = std::thread::Builder::new()
-        .name("sfut-reactor".to_string())
-        .spawn(move || reactor.run())
-        .context("spawning reactor thread")?;
-    Ok(ReactorHandle { thread, waker, live })
+
+    info!(
+        "sfut reactor pool serving framed wire on {local_addr} (reactors={n}, fanout={}, \
+         poller={})",
+        if handoff { "handoff" } else { "reuseport" },
+        poller_kind.label(),
+    );
+
+    let mut threads = Vec::with_capacity(n);
+    let mut rx_iter = waker_rxs.into_iter();
+    let mut poller_iter = pollers.into_iter();
+    let mut listener_iter = listener_slots.drain(..);
+    for r in 0..n {
+        let reactor = Reactor {
+            id: r,
+            pipeline: Arc::clone(&pipeline),
+            listener: listener_iter.next().unwrap(),
+            dispatch: if r == 0 { dispatch.take() } else { None },
+            inbox: Arc::clone(&inboxes[r]),
+            stop: Arc::clone(&stop),
+            sessions_total: Arc::clone(&sessions_total),
+            live: Arc::clone(&live),
+            pinned: Arc::clone(&pinned),
+            waker: wakers[r].clone(),
+            waker_rx: rx_iter.next().unwrap(),
+            ready: Arc::new(Mutex::new(Vec::new())),
+            poller: poller_iter.next().unwrap(),
+        };
+        let thread = std::thread::Builder::new()
+            .name(format!("sfut-reactor-{r}"))
+            .spawn(move || reactor.run())
+            .context("spawning reactor thread")?;
+        threads.push(thread);
+    }
+    Ok(PoolHandle { local_addr, threads, wakers, live, pinned })
 }
 
-/// One framed connection's state, owned by the reactor thread.
+/// Round-robin fd handoff state, held by the accepting reactor (id 0)
+/// when there is no SO_REUSEPORT group.
+struct Dispatch {
+    inboxes: Vec<Inbox>,
+    wakers: Vec<Waker>,
+    next: usize,
+}
+
+/// Cached metric handles — totals plus this reactor's `wire.<r>.*`
+/// shadows — so the hot loop never touches the registry mutex.
+struct WireMetrics {
+    frames_in: Arc<Counter>,
+    frames_in_r: Arc<Counter>,
+    frames_out: Arc<Counter>,
+    midframe: Arc<Counter>,
+    midframe_r: Arc<Counter>,
+    read_paused: Arc<Counter>,
+    read_paused_r: Arc<Counter>,
+    sessions: Arc<Gauge>,
+    sessions_r: Arc<Gauge>,
+}
+
+impl WireMetrics {
+    fn new(m: &MetricsRegistry, r: usize) -> WireMetrics {
+        WireMetrics {
+            frames_in: m.counter("wire.frames_in"),
+            frames_in_r: m.counter(&format!("wire.{r}.frames_in")),
+            frames_out: m.counter("wire.frames_out"),
+            midframe: m.counter("wire.midframe_disconnects"),
+            midframe_r: m.counter(&format!("wire.{r}.midframe_disconnects")),
+            read_paused: m.counter("wire.read_paused"),
+            read_paused_r: m.counter(&format!("wire.{r}.read_paused")),
+            sessions: m.gauge("wire.sessions"),
+            sessions_r: m.gauge(&format!("wire.{r}.sessions")),
+        }
+    }
+}
+
+/// One framed connection's state, owned by its pinned reactor thread.
 struct Session {
     stream: TcpStream,
-    peer: std::net::SocketAddr,
+    peer: SocketAddr,
     /// Bytes collected toward the 5-byte connect preamble.
     pre: Vec<u8>,
     handshaken: bool,
@@ -201,10 +351,13 @@ struct Session {
     read_eof: bool,
     /// Currently not polled for readability (flow control).
     read_paused: bool,
+    /// Interest currently registered with the poller (None = not yet
+    /// registered; a fresh session registers on its first tick).
+    registered: Option<Interest>,
 }
 
 impl Session {
-    fn new(stream: TcpStream, peer: std::net::SocketAddr) -> Session {
+    fn new(stream: TcpStream, peer: SocketAddr) -> Session {
         Session {
             stream,
             peer,
@@ -220,6 +373,7 @@ impl Session {
             closing: false,
             read_eof: false,
             read_paused: false,
+            registered: None,
         }
     }
 
@@ -236,70 +390,104 @@ impl Session {
 }
 
 struct Reactor {
+    id: usize,
     pipeline: Arc<Pipeline>,
-    listener: TcpListener,
+    /// This reactor's own listener (every reactor in reuseport mode;
+    /// only reactor 0 in handoff mode).
+    listener: Option<TcpListener>,
+    /// Handoff round-robin (the accepting reactor in handoff mode).
+    dispatch: Option<Dispatch>,
+    /// Connections handed to this reactor by the dispatcher.
+    inbox: Inbox,
     stop: Arc<AtomicBool>,
     sessions_total: Arc<AtomicU64>,
-    live: Arc<AtomicU64>,
+    live: Arc<Vec<AtomicU64>>,
+    pinned: Arc<Vec<AtomicU64>>,
     waker: Waker,
     waker_rx: UnixStream,
     ready: ReadyList,
+    poller: Box<dyn Poller>,
 }
 
 impl Reactor {
-    fn run(self) {
-        let Reactor { pipeline, listener, stop, sessions_total, live, waker, waker_rx, ready } =
-            self;
+    fn run(mut self) {
+        let wm = WireMetrics::new(self.pipeline.metrics(), self.id);
         let mut sessions: BTreeMap<u64, Session> = BTreeMap::new();
         let mut next_session: u64 = 1;
         let mut drain_deadline: Option<Instant> = None;
-        info!("sfut reactor serving framed wire on {:?}", listener.local_addr().ok());
+        let mut events: Vec<Event> = Vec::new();
+        debug!("reactor {} up (poller={})", self.id, self.poller.label());
+        if let Err(e) = self.poller.register(self.waker_rx.as_raw_fd(), TOKEN_WAKER, Interest::READ)
+        {
+            warn!("reactor {}: cannot register self-pipe ({e}); exiting", self.id);
+            return;
+        }
+        if let Some(l) = &self.listener {
+            if let Err(e) = self.poller.register(l.as_raw_fd(), TOKEN_LISTENER, Interest::READ) {
+                warn!("reactor {}: cannot register listener ({e}); exiting", self.id);
+                return;
+            }
+        }
         loop {
-            let draining = stop.load(Ordering::SeqCst);
+            let draining = self.stop.load(Ordering::SeqCst);
             if draining {
                 let deadline = *drain_deadline.get_or_insert_with(|| Instant::now() + DRAIN_GRACE);
                 let busy = sessions.values().any(|s| {
                     !s.pending_waits.is_empty() || !s.out.is_empty() || s.deferred_since.is_some()
                 });
                 if !busy || Instant::now() >= deadline {
-                    final_drain(&pipeline, &mut sessions);
-                    live.store(0, Ordering::Relaxed);
-                    pipeline.metrics().gauge("wire.sessions").set(0);
+                    final_drain(&wm, &mut sessions);
+                    self.live[self.id].store(0, Ordering::Relaxed);
+                    wm.sessions_r.set(0);
+                    wm.sessions.set(self.live.iter().map(|a| a.load(Ordering::Relaxed)).sum());
                     return;
                 }
             }
 
-            // --- poll set: self-pipe, listener (unless draining), sessions.
-            let metrics = pipeline.metrics();
-            let mut fds: Vec<sys::PollFd> = Vec::with_capacity(2 + sessions.len());
-            fds.push(sys::PollFd { fd: waker_rx.as_raw_fd(), events: sys::POLLIN, revents: 0 });
-            if !draining {
-                fds.push(sys::PollFd {
-                    fd: listener.as_raw_fd(),
-                    events: sys::POLLIN,
-                    revents: 0,
-                });
+            // --- adopt connections the dispatcher handed over.
+            loop {
+                let item = self.inbox.lock().unwrap().pop_front();
+                let Some((stream, peer)) = item else { break };
+                Self::adopt(self.id, &self.pinned, &mut sessions, &mut next_session, stream, peer);
             }
-            let base = fds.len();
-            let mut ids: Vec<u64> = Vec::with_capacity(sessions.len());
+
+            // --- interest pass: register fresh sessions, track pause
+            // transitions, reconcile what the poller watches.
             let mut any_deferred = false;
+            let mut unregisterable: Vec<u64> = Vec::new();
             for (&sid, s) in sessions.iter_mut() {
                 let paused = s.out.len() >= HIGH_WATER || s.deferred_since.is_some();
                 if paused && !s.read_paused {
-                    metrics.counter("wire.read_paused").inc();
+                    wm.read_paused.inc();
+                    wm.read_paused_r.inc();
                 }
                 s.read_paused = paused;
                 any_deferred |= s.deferred_since.is_some();
-                let mut events: i16 = 0;
-                if !s.read_eof && !s.closing && !paused {
-                    events |= sys::POLLIN;
+                let want = Interest {
+                    readable: !s.read_eof && !s.closing && !paused,
+                    writable: !s.out.is_empty(),
+                };
+                let token = sid + TOKEN_SESSION_BASE;
+                let outcome = match s.registered {
+                    None => self.poller.register(s.stream.as_raw_fd(), token, want),
+                    Some(cur) if cur != want => {
+                        self.poller.reregister(s.stream.as_raw_fd(), token, want)
+                    }
+                    Some(_) => Ok(()),
+                };
+                match outcome {
+                    Ok(()) => s.registered = Some(want),
+                    Err(e) => {
+                        let peer = s.peer;
+                        warn!("reactor {}: cannot watch session {peer} ({e}); dropping", self.id);
+                        unregisterable.push(sid);
+                    }
                 }
-                if !s.out.is_empty() {
-                    events |= sys::POLLOUT;
-                }
-                ids.push(sid);
-                fds.push(sys::PollFd { fd: s.stream.as_raw_fd(), events, revents: 0 });
             }
+            for sid in unregisterable {
+                sessions.remove(&sid);
+            }
+
             let timeout = if draining {
                 20
             } else if any_deferred {
@@ -307,55 +495,38 @@ impl Reactor {
             } else {
                 IDLE_POLL_MS
             };
-            if let Err(e) = sys::poll_fds(&mut fds, timeout) {
-                warn!("reactor poll failed: {e}");
+            if let Err(e) = self.poller.wait(&mut events, timeout) {
+                warn!("reactor {} wait failed: {e}", self.id);
                 std::thread::sleep(Duration::from_millis(10));
             }
 
             // --- drain the self-pipe (level-triggered; always safe).
             let mut sink = [0u8; 64];
-            while matches!((&waker_rx).read(&mut sink), Ok(n) if n > 0) {}
+            while matches!((&self.waker_rx).read(&mut sink), Ok(n) if n > 0) {}
 
-            // --- accept new sessions.
+            // --- accept new sessions (own listener, if any).
             if !draining {
-                loop {
-                    match listener.accept() {
-                        Ok((stream, peer)) => {
-                            if stream.set_nonblocking(true).is_err() {
-                                continue;
-                            }
-                            let _ = stream.set_nodelay(true);
-                            sessions_total.fetch_add(1, Ordering::Relaxed);
-                            debug!("reactor accepted framed session from {peer}");
-                            sessions.insert(next_session, Session::new(stream, peer));
-                            next_session += 1;
-                        }
-                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-                        Err(e) => {
-                            warn!("reactor accept error: {e}");
-                            break;
-                        }
-                    }
-                }
+                self.accept_tick(&mut sessions, &mut next_session);
             }
 
             // --- read readable sessions, decode, process.
-            for (i, &sid) in ids.iter().enumerate() {
-                let revents = fds[base + i].revents;
-                if revents & (sys::POLLIN | sys::POLLHUP | sys::POLLERR) != 0 {
-                    if let Some(s) = sessions.get_mut(&sid) {
-                        read_session(metrics, s);
-                    }
+            for ev in &events {
+                if ev.token < TOKEN_SESSION_BASE || !ev.readable {
+                    continue;
+                }
+                let sid = ev.token - TOKEN_SESSION_BASE;
+                if let Some(s) = sessions.get_mut(&sid) {
+                    read_session(&wm, s);
                 }
             }
             // Every tick, every session: drives deferred retries and
             // frames decoded this tick alike. Cheap when input is empty.
             for (&sid, s) in sessions.iter_mut() {
-                process_input(&pipeline, &ready, &waker, sid, s);
+                process_input(&self.pipeline, &wm, &self.ready, &self.waker, sid, s);
             }
 
             // --- completed tickets → Result/Err frames.
-            let completed: Vec<(u64, u64)> = std::mem::take(&mut *ready.lock().unwrap());
+            let completed: Vec<(u64, u64)> = std::mem::take(&mut *self.ready.lock().unwrap());
             for (sid, tid) in completed {
                 let Some(s) = sessions.get_mut(&sid) else { continue };
                 match s.pending_waits.get_mut(&tid) {
@@ -367,7 +538,7 @@ impl Reactor {
                     }
                     None => continue,
                 }
-                answer_wait(metrics, s, tid);
+                answer_wait(&wm, s, tid);
             }
 
             // --- flush writable output; reap finished sessions.
@@ -386,12 +557,80 @@ impl Reactor {
             }
             for sid in dead {
                 if let Some(s) = sessions.remove(&sid) {
-                    debug!("reactor closed session {}", s.peer);
+                    if s.registered.is_some() {
+                        let _ = self.poller.deregister(s.stream.as_raw_fd());
+                    }
+                    debug!("reactor {} closed session {}", self.id, s.peer);
                 }
             }
-            live.store(sessions.len() as u64, Ordering::Relaxed);
-            metrics.gauge("wire.sessions").set(sessions.len() as u64);
+            self.live[self.id].store(sessions.len() as u64, Ordering::Relaxed);
+            wm.sessions_r.set(sessions.len() as u64);
+            wm.sessions.set(self.live.iter().map(|a| a.load(Ordering::Relaxed)).sum());
         }
+    }
+
+    /// Accept whatever the listener has. In handoff mode the accepts
+    /// are dealt round-robin across all reactors' inboxes (own sessions
+    /// adopted directly); in reuseport mode everything accepted here is
+    /// ours — the kernel already did the fanout.
+    fn accept_tick(&mut self, sessions: &mut BTreeMap<u64, Session>, next_session: &mut u64) {
+        let Some(listener) = &self.listener else { return };
+        loop {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    self.sessions_total.fetch_add(1, Ordering::Relaxed);
+                    match &mut self.dispatch {
+                        Some(d) => {
+                            let target = d.next % d.inboxes.len();
+                            d.next = d.next.wrapping_add(1);
+                            if target == self.id {
+                                Self::adopt(
+                                    self.id,
+                                    &self.pinned,
+                                    sessions,
+                                    next_session,
+                                    stream,
+                                    peer,
+                                );
+                            } else {
+                                d.inboxes[target].lock().unwrap().push_back((stream, peer));
+                                d.wakers[target].wake();
+                            }
+                        }
+                        None => {
+                            Self::adopt(self.id, &self.pinned, sessions, next_session, stream, peer)
+                        }
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    warn!("reactor {} accept error: {e}", self.id);
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Pin a connection to reactor `id`: from here on, every frame of
+    /// this session is parsed, executed, and answered by that one
+    /// thread. Registration with the poller happens on the next tick's
+    /// interest pass (`registered: None`).
+    fn adopt(
+        id: usize,
+        pinned: &Arc<Vec<AtomicU64>>,
+        sessions: &mut BTreeMap<u64, Session>,
+        next_session: &mut u64,
+        stream: TcpStream,
+        peer: SocketAddr,
+    ) {
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        pinned[id].fetch_add(1, Ordering::Relaxed);
+        debug!("reactor {id} adopted framed session from {peer}");
+        sessions.insert(*next_session, Session::new(stream, peer));
+        *next_session += 1;
     }
 }
 
@@ -404,17 +643,17 @@ fn state_code(state: FutState) -> u8 {
     }
 }
 
-fn enqueue(metrics: &MetricsRegistry, s: &mut Session, frame: &Frame) {
+fn enqueue(wm: &WireMetrics, s: &mut Session, frame: &Frame) {
     frame.encode_into(&mut s.out);
-    metrics.counter("wire.frames_out").inc();
+    wm.frames_out.inc();
 }
 
-fn enqueue_err(metrics: &MetricsRegistry, s: &mut Session, id: u64, line: &str) {
-    enqueue(metrics, s, &Frame::new(FrameKind::Err, line_payload(id, line)));
+fn enqueue_err(wm: &WireMetrics, s: &mut Session, id: u64, line: &str) {
+    enqueue(wm, s, &Frame::new(FrameKind::Err, line_payload(id, line)));
 }
 
 /// Pull whatever the socket has, run the handshake, decode frames.
-fn read_session(metrics: &MetricsRegistry, s: &mut Session) {
+fn read_session(wm: &WireMetrics, s: &mut Session) {
     let mut buf = [0u8; 8192];
     loop {
         match s.stream.read(&mut buf) {
@@ -423,7 +662,8 @@ fn read_session(metrics: &MetricsRegistry, s: &mut Session) {
                     // Mid-frame disconnect: nothing to answer — the
                     // bytes that would complete the frame can never
                     // arrive. Close without ceremony.
-                    metrics.counter("wire.midframe_disconnects").inc();
+                    wm.midframe.inc();
+                    wm.midframe_r.inc();
                 }
                 s.read_eof = true;
                 break;
@@ -441,10 +681,10 @@ fn read_session(metrics: &MetricsRegistry, s: &mut Session) {
                         match check_preamble(&p) {
                             Ok(()) => {
                                 s.handshaken = true;
-                                enqueue(metrics, s, &Frame::new(FrameKind::Hello, vec![VERSION]));
+                                enqueue(wm, s, &Frame::new(FrameKind::Hello, vec![VERSION]));
                             }
                             Err(e) => {
-                                enqueue_err(metrics, s, 0, &format!("err {e}"));
+                                enqueue_err(wm, s, 0, &format!("err {e}"));
                                 s.closing = true;
                                 return;
                             }
@@ -471,14 +711,15 @@ fn read_session(metrics: &MetricsRegistry, s: &mut Session) {
     loop {
         match s.decoder.next() {
             Ok(Some(frame)) => {
-                metrics.counter("wire.frames_in").inc();
+                wm.frames_in.inc();
+                wm.frames_in_r.inc();
                 s.input.push_back(frame);
             }
             Ok(None) => break,
             Err(e) => {
                 // One well-formed err frame, then close — never a
                 // panic, never a stuck session.
-                enqueue_err(metrics, s, 0, &format!("err {e}"));
+                enqueue_err(wm, s, 0, &format!("err {e}"));
                 s.closing = true;
                 break;
             }
@@ -489,8 +730,14 @@ fn read_session(metrics: &MetricsRegistry, s: &mut Session) {
 /// Handle decoded frames in FIFO order. Stops at a submit that the
 /// admission queue defers (queue full under a parking policy); the
 /// frame stays at the front and is retried next tick.
-fn process_input(pipeline: &Pipeline, ready: &ReadyList, waker: &Waker, sid: u64, s: &mut Session) {
-    let metrics = pipeline.metrics();
+fn process_input(
+    pipeline: &Pipeline,
+    wm: &WireMetrics,
+    ready: &ReadyList,
+    waker: &Waker,
+    sid: u64,
+    s: &mut Session,
+) {
     while !s.closing {
         let Some(frame) = s.input.front().cloned() else { return };
         match frame.kind {
@@ -500,7 +747,7 @@ fn process_input(pipeline: &Pipeline, ready: &ReadyList, waker: &Waker, sid: u64
                     Err(_) => {
                         s.input.pop_front();
                         s.deferred_since = None;
-                        enqueue_err(metrics, s, 0, "err submit payload is not valid utf-8");
+                        enqueue_err(wm, s, 0, "err submit payload is not valid utf-8");
                         continue;
                     }
                 };
@@ -509,7 +756,7 @@ fn process_input(pipeline: &Pipeline, ready: &ReadyList, waker: &Waker, sid: u64
                     Err(e) => {
                         s.input.pop_front();
                         s.deferred_since = None;
-                        enqueue_err(metrics, s, 0, &format!("err {e}"));
+                        enqueue_err(wm, s, 0, &format!("err {e}"));
                         continue;
                     }
                 };
@@ -526,7 +773,7 @@ fn process_input(pipeline: &Pipeline, ready: &ReadyList, waker: &Waker, sid: u64
                             };
                             s.input.pop_front();
                             s.deferred_since = None;
-                            enqueue_err(metrics, s, 0, &err.render_line(&req));
+                            enqueue_err(wm, s, 0, &err.render_line(&req));
                             continue;
                         }
                     }
@@ -541,16 +788,12 @@ fn process_input(pipeline: &Pipeline, ready: &ReadyList, waker: &Waker, sid: u64
                         let code = state_code(ticket.state());
                         s.tickets.insert(id, ticket);
                         release_oldest_resolved(&mut s.tickets, MAX_SESSION_TICKETS);
-                        enqueue(
-                            metrics,
-                            s,
-                            &Frame::new(FrameKind::Ticket, ticket_payload(id, code)),
-                        );
+                        enqueue(wm, s, &Frame::new(FrameKind::Ticket, ticket_payload(id, code)));
                     }
                     TryAdmit::Reject(err) => {
                         s.input.pop_front();
                         s.deferred_since = None;
-                        enqueue_err(metrics, s, 0, &err.render_line(&req));
+                        enqueue_err(wm, s, 0, &err.render_line(&req));
                     }
                     TryAdmit::Full(_) => {
                         if s.deferred_since.is_none() {
@@ -563,12 +806,12 @@ fn process_input(pipeline: &Pipeline, ready: &ReadyList, waker: &Waker, sid: u64
             FrameKind::Wait | FrameKind::Poll => {
                 s.input.pop_front();
                 let Some((id, _)) = take_ticket_id(&frame.payload) else {
-                    enqueue_err(metrics, s, 0, "err bad ticket payload (want u64 le id)");
+                    enqueue_err(wm, s, 0, "err bad ticket payload (want u64 le id)");
                     continue;
                 };
                 if id == 0 || id >= s.next_ticket {
                     enqueue_err(
-                        metrics,
+                        wm,
                         s,
                         id,
                         &format!(
@@ -579,17 +822,18 @@ fn process_input(pipeline: &Pipeline, ready: &ReadyList, waker: &Waker, sid: u64
                     continue;
                 }
                 let Some(ticket) = s.tickets.get(&id) else {
-                    enqueue_err(metrics, s, id, &err_released_line(id));
+                    enqueue_err(wm, s, id, &err_released_line(id));
                     continue;
                 };
                 if frame.kind == FrameKind::Poll {
                     let code = state_code(ticket.state());
-                    enqueue(metrics, s, &Frame::new(FrameKind::Ticket, ticket_payload(id, code)));
+                    enqueue(wm, s, &Frame::new(FrameKind::Ticket, ticket_payload(id, code)));
                 } else if ticket.is_ready() {
-                    answer_wait(metrics, s, id);
+                    answer_wait(wm, s, id);
                 } else {
                     // Park the wait on the ticket's Fut: completion
-                    // pushes onto the ready list and wakes the poll.
+                    // pushes onto this reactor's ready list and wakes
+                    // its self-pipe — the pinned reactor answers.
                     *s.pending_waits.entry(id).or_insert(0) += 1;
                     let ready = Arc::clone(ready);
                     let waker = waker.clone();
@@ -604,7 +848,7 @@ fn process_input(pipeline: &Pipeline, ready: &ReadyList, waker: &Waker, sid: u64
             FrameKind::Workloads => {
                 s.input.pop_front();
                 let listing = workloads_listing(pipeline);
-                enqueue(metrics, s, &Frame::new(FrameKind::WorkloadsReply, listing.into_bytes()));
+                enqueue(wm, s, &Frame::new(FrameKind::WorkloadsReply, listing.into_bytes()));
             }
             // Server-to-client kinds arriving from a client are a
             // protocol violation: one err frame, then close.
@@ -615,7 +859,7 @@ fn process_input(pipeline: &Pipeline, ready: &ReadyList, waker: &Waker, sid: u64
             | FrameKind::WorkloadsReply => {
                 s.input.pop_front();
                 enqueue_err(
-                    metrics,
+                    wm,
                     s,
                     0,
                     &format!("err unexpected client frame kind {}", frame.kind.as_u8()),
@@ -628,34 +872,27 @@ fn process_input(pipeline: &Pipeline, ready: &ReadyList, waker: &Waker, sid: u64
 
 /// Emit the resolved outcome of `tid` as one `Result`/`Err` frame —
 /// the framed analogue of the text server's `deliver`.
-fn answer_wait(metrics: &MetricsRegistry, s: &mut Session, tid: u64) {
+fn answer_wait(wm: &WireMetrics, s: &mut Session, tid: u64) {
     let outcome = match s.tickets.get(&tid) {
         Some(ticket) => ticket.wait_timeout(Duration::from_millis(0)),
         None => {
-            enqueue_err(metrics, s, tid, &err_released_line(tid));
+            enqueue_err(wm, s, tid, &err_released_line(tid));
             return;
         }
     };
     match outcome {
-        Some(outcome) => deliver_outcome(metrics, s, tid, outcome),
+        Some(outcome) => deliver_outcome(wm, s, tid, outcome),
         // Completion raced the release path; ask the client to retry.
-        None => enqueue_err(metrics, s, tid, &format!("err ticket not ready: {tid}")),
+        None => enqueue_err(wm, s, tid, &format!("err ticket not ready: {tid}")),
     }
 }
 
-fn deliver_outcome(
-    metrics: &MetricsRegistry,
-    s: &mut Session,
-    tid: u64,
-    outcome: Result<JobResult>,
-) {
+fn deliver_outcome(wm: &WireMetrics, s: &mut Session, tid: u64, outcome: Result<JobResult>) {
     match outcome {
-        Ok(result) => enqueue(
-            metrics,
-            s,
-            &Frame::new(FrameKind::Result, line_payload(tid, &result.render_line())),
-        ),
-        Err(e) => enqueue_err(metrics, s, tid, &format!("err {e:#}")),
+        Ok(result) => {
+            enqueue(wm, s, &Frame::new(FrameKind::Result, line_payload(tid, &result.render_line())))
+        }
+        Err(e) => enqueue_err(wm, s, tid, &format!("err {e:#}")),
     }
 }
 
@@ -679,8 +916,7 @@ fn flush_out(s: &mut Session) -> std::io::Result<()> {
 /// real result if it landed during the grace window, else a final
 /// `err closed ticket=N` frame — deferred submits answer `closed`,
 /// buffers flush best-effort (briefly blocking), sockets close.
-fn final_drain(pipeline: &Pipeline, sessions: &mut BTreeMap<u64, Session>) {
-    let metrics = pipeline.metrics();
+fn final_drain(wm: &WireMetrics, sessions: &mut BTreeMap<u64, Session>) {
     for s in sessions.values_mut() {
         let waits: Vec<(u64, u32)> = s.pending_waits.iter().map(|(&k, &v)| (k, v)).collect();
         s.pending_waits.clear();
@@ -688,9 +924,9 @@ fn final_drain(pipeline: &Pipeline, sessions: &mut BTreeMap<u64, Session>) {
             let resolved = s.tickets.get(&tid).is_some_and(JobTicket::is_ready);
             for _ in 0..count {
                 if resolved {
-                    answer_wait(metrics, s, tid);
+                    answer_wait(wm, s, tid);
                 } else {
-                    enqueue_err(metrics, s, tid, &err_closed_line(tid));
+                    enqueue_err(wm, s, tid, &err_closed_line(tid));
                 }
             }
         }
@@ -702,7 +938,7 @@ fn final_drain(pipeline: &Pipeline, sessions: &mut BTreeMap<u64, Session>) {
                 .and_then(|t| JobRequest::parse(t.trim()).ok())
                 .map(|req| SubmitError::Closed.render_line(&req))
                 .unwrap_or_else(|| "err admission=closed".to_string());
-            enqueue_err(metrics, s, 0, &line);
+            enqueue_err(wm, s, 0, &line);
         }
         s.input.clear();
         let _ = s.stream.set_nonblocking(false);
@@ -712,4 +948,16 @@ fn final_drain(pipeline: &Pipeline, sessions: &mut BTreeMap<u64, Session>) {
         let _ = s.stream.shutdown(std::net::Shutdown::Both);
     }
     sessions.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_reactor_count_is_bounded() {
+        assert_eq!(resolve_reactors(3), 3, "explicit count wins");
+        let auto = resolve_reactors(0);
+        assert!(auto >= 1 && auto <= MAX_AUTO_REACTORS, "auto in 1..={MAX_AUTO_REACTORS}: {auto}");
+    }
 }

@@ -1,0 +1,180 @@
+//! SO_REUSEPORT listener groups for the reactor pool.
+//!
+//! Each reactor thread owning its *own* listener bound to the *same*
+//! address is the zero-coordination accept fanout: the kernel hashes
+//! incoming connections across the group, no in-process handoff, no
+//! shared accept lock. The option must be set *before* bind on every
+//! socket in the group — std's `TcpListener::bind` leaves no hook for
+//! that, so the sockets are made by hand in the crate's minimal-FFI
+//! style (the same libc-already-linked symbols idiom as
+//! [`super::poller`]) and wrapped with `FromRawFd`.
+//!
+//! Linux-only (the semantics of connection balancing across a
+//! REUSEPORT group are Linux's); elsewhere [`bind_group`] returns
+//! `Unsupported` and the pool falls back to in-process fd handoff.
+//! The fallback is also forced by `Config::reuseport = false`, whose
+//! round-robin dispatch is deterministic — the fanout tests pin that.
+
+use std::io;
+use std::net::{SocketAddr, TcpListener};
+
+/// Bind `count` nonblocking listeners sharing `addr` via SO_REUSEPORT.
+/// A port-0 request resolves on the first socket; the rest join the
+/// resolved port, so `group[0].local_addr()` names the group.
+#[cfg(target_os = "linux")]
+pub(super) fn bind_group(addr: SocketAddr, count: usize) -> io::Result<Vec<TcpListener>> {
+    let first = bind_one(&addr)?;
+    let local = first.local_addr()?;
+    let mut group = vec![first];
+    for _ in 1..count {
+        group.push(bind_one(&local)?);
+    }
+    Ok(group)
+}
+
+#[cfg(not(target_os = "linux"))]
+pub(super) fn bind_group(_addr: SocketAddr, _count: usize) -> io::Result<Vec<TcpListener>> {
+    Err(io::Error::new(
+        io::ErrorKind::Unsupported,
+        "SO_REUSEPORT listener groups are linux-only; the pool falls back to fd handoff",
+    ))
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    pub const AF_INET: i32 = 2;
+    pub const AF_INET6: i32 = 10;
+    pub const SOCK_STREAM: i32 = 1;
+    pub const SOCK_NONBLOCK: i32 = 0o4000;
+    pub const SOCK_CLOEXEC: i32 = 0o2000000;
+    pub const SOL_SOCKET: i32 = 1;
+    pub const SO_REUSEADDR: i32 = 2;
+    pub const SO_REUSEPORT: i32 = 15;
+
+    extern "C" {
+        pub fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        pub fn setsockopt(fd: i32, level: i32, name: i32, value: *const u8, len: u32) -> i32;
+        pub fn bind(fd: i32, addr: *const u8, len: u32) -> i32;
+        pub fn listen(fd: i32, backlog: i32) -> i32;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+/// Closes the raw fd unless defused by `forget` (bind/listen error
+/// paths must not leak sockets).
+#[cfg(target_os = "linux")]
+struct FdGuard(i32);
+
+#[cfg(target_os = "linux")]
+impl Drop for FdGuard {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.0);
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn bind_one(addr: &SocketAddr) -> io::Result<TcpListener> {
+    use std::os::unix::io::FromRawFd;
+
+    let domain = match addr {
+        SocketAddr::V4(_) => sys::AF_INET,
+        SocketAddr::V6(_) => sys::AF_INET6,
+    };
+    let ty = sys::SOCK_STREAM | sys::SOCK_NONBLOCK | sys::SOCK_CLOEXEC;
+    let fd = unsafe { sys::socket(domain, ty, 0) };
+    if fd < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    let guard = FdGuard(fd);
+    let one: i32 = 1;
+    for opt in [sys::SO_REUSEADDR, sys::SO_REUSEPORT] {
+        let rc = unsafe {
+            sys::setsockopt(fd, sys::SOL_SOCKET, opt, &one as *const i32 as *const u8, 4)
+        };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+    }
+    let sa = sockaddr_bytes(addr);
+    let rc = unsafe { sys::bind(fd, sa.as_ptr(), sa.len() as u32) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    let rc = unsafe { sys::listen(fd, 1024) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    std::mem::forget(guard);
+    Ok(unsafe { TcpListener::from_raw_fd(fd) })
+}
+
+/// `struct sockaddr_in{,6}` as raw bytes (family in host order, port
+/// and addresses in network order) — layout-stable without a `repr(C)`
+/// struct per family.
+#[cfg(target_os = "linux")]
+fn sockaddr_bytes(addr: &SocketAddr) -> Vec<u8> {
+    match addr {
+        SocketAddr::V4(v4) => {
+            let mut b = Vec::with_capacity(16);
+            b.extend_from_slice(&(sys::AF_INET as u16).to_ne_bytes());
+            b.extend_from_slice(&v4.port().to_be_bytes());
+            b.extend_from_slice(&v4.ip().octets());
+            b.extend_from_slice(&[0u8; 8]);
+            b
+        }
+        SocketAddr::V6(v6) => {
+            let mut b = Vec::with_capacity(28);
+            b.extend_from_slice(&(sys::AF_INET6 as u16).to_ne_bytes());
+            b.extend_from_slice(&v6.port().to_be_bytes());
+            b.extend_from_slice(&v6.flowinfo().to_be_bytes());
+            b.extend_from_slice(&v6.ip().octets());
+            b.extend_from_slice(&v6.scope_id().to_ne_bytes());
+            b
+        }
+    }
+}
+
+#[cfg(all(test, target_os = "linux"))]
+mod tests {
+    use super::*;
+    use std::io::ErrorKind;
+    use std::net::TcpStream;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn group_shares_one_port_and_accepts() {
+        let group = bind_group("127.0.0.1:0".parse().unwrap(), 3).unwrap();
+        assert_eq!(group.len(), 3);
+        let addr = group[0].local_addr().unwrap();
+        assert_ne!(addr.port(), 0, "port 0 resolved on first bind");
+        for l in &group[1..] {
+            assert_eq!(l.local_addr().unwrap().port(), addr.port());
+        }
+        let clients: Vec<TcpStream> =
+            (0..8).map(|_| TcpStream::connect(addr).unwrap()).collect();
+        // The group's sockets are nonblocking by construction; sweep
+        // accepts until the kernel has handed every connection to some
+        // member.
+        let mut accepted = 0;
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while accepted < clients.len() && Instant::now() < deadline {
+            let mut progressed = false;
+            for l in &group {
+                match l.accept() {
+                    Ok(_) => {
+                        accepted += 1;
+                        progressed = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+                    Err(e) => panic!("accept failed: {e}"),
+                }
+            }
+            if !progressed {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        assert_eq!(accepted, clients.len(), "every connection lands on some group member");
+    }
+}

@@ -7,10 +7,12 @@
 //!   connection speaking the line protocol of `server.rs`, including
 //!   the ticketed `submit`/`wait` commands and the `err admission=…`
 //!   shed/timeout lines.
-//! * **framed** — a single poll-based reactor thread (`reactor.rs`)
-//!   speaking the length-prefixed binary frame protocol of `frame.rs`;
-//!   no per-connection threads, pipelined multi-job batches per read,
-//!   write backpressure wired into the admission policy.
+//! * **framed** — a pool of reactor threads (`reactor.rs`) over a
+//!   pluggable readiness backend (`poller.rs`: poll(2) or epoll,
+//!   `Config::poller`) speaking the length-prefixed binary frame
+//!   protocol of `frame.rs`; no per-connection threads, accepts fanned
+//!   out across reactors (`Config::reactors`), each session pinned to
+//!   one reactor, write backpressure wired into the admission policy.
 //!
 //! Both modes share the [`Pipeline`] (and therefore the PJRT engine,
 //! the metrics registry, and the config), the same job taxonomy, and
@@ -54,14 +56,22 @@ pub struct TcpServer {
     stop: Arc<AtomicBool>,
     sessions: Arc<AtomicU64>,
     session_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
-    /// Text mode: the accept-loop thread. Framed mode: the reactor.
+    /// Text mode: the accept-loop thread.
     accept_thread: Option<std::thread::JoinHandle<()>>,
-    /// Framed mode only: interrupts the reactor's poll on shutdown.
+    /// Framed mode: the reactor pool's threads, joined on shutdown with
+    /// the same bounded drain as text sessions.
+    reactor_threads: Vec<JoinHandle<()>>,
+    /// Framed mode: one waker per reactor (interrupts its wait on
+    /// shutdown); cleared after the pool joins so the self-pipe write
+    /// fds close with shutdown, not process exit.
     #[cfg(unix)]
-    waker: Option<super::reactor::Waker>,
-    /// Framed mode only: live reactor sessions (text mode counts
+    wakers: Vec<super::reactor::Waker>,
+    /// Framed mode: live sessions per reactor (text mode counts
     /// tracked session threads instead).
-    reactor_live: Arc<AtomicU64>,
+    reactor_live: Arc<Vec<AtomicU64>>,
+    /// Framed mode: sessions ever pinned to each reactor — the
+    /// accept-fanout distribution.
+    pinned: Arc<Vec<AtomicU64>>,
 }
 
 impl TcpServer {
@@ -81,15 +91,15 @@ impl TcpServer {
         addr: impl ToSocketAddrs,
         wire: WireProtocol,
     ) -> Result<TcpServer> {
-        let listener = TcpListener::bind(addr).context("binding TCP listener")?;
-        let local_addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        info!("sfut tcp server listening on {local_addr} (wire={})", wire.label());
         let stop = Arc::new(AtomicBool::new(false));
         let sessions = Arc::new(AtomicU64::new(0));
         let session_threads = Arc::new(Mutex::new(Vec::new()));
         match wire {
             WireProtocol::Text => {
+                let listener = TcpListener::bind(addr).context("binding TCP listener")?;
+                let local_addr = listener.local_addr()?;
+                listener.set_nonblocking(true)?;
+                info!("sfut tcp server listening on {local_addr} (wire={})", wire.label());
                 let stop2 = Arc::clone(&stop);
                 let sessions2 = Arc::clone(&sessions);
                 let threads2 = Arc::clone(&session_threads);
@@ -105,27 +115,39 @@ impl TcpServer {
                     sessions,
                     session_threads,
                     accept_thread: Some(accept_thread),
+                    reactor_threads: Vec::new(),
                     #[cfg(unix)]
-                    waker: None,
-                    reactor_live: Arc::new(AtomicU64::new(0)),
+                    wakers: Vec::new(),
+                    reactor_live: Arc::new(Vec::new()),
+                    pinned: Arc::new(Vec::new()),
                 })
             }
             #[cfg(unix)]
             WireProtocol::Framed => {
-                let handle = super::reactor::start(
-                    listener,
+                // The pool binds for itself: an SO_REUSEPORT listener
+                // group must set the option before bind, which a
+                // std-bound listener cannot retrofit.
+                let sock_addr = addr
+                    .to_socket_addrs()
+                    .context("resolving listen address")?
+                    .next()
+                    .context("listen address resolved to nothing")?;
+                let handle = super::reactor::start_pool(
+                    sock_addr,
                     pipeline,
                     Arc::clone(&stop),
                     Arc::clone(&sessions),
                 )?;
                 Ok(TcpServer {
-                    local_addr,
+                    local_addr: handle.local_addr,
                     stop,
                     sessions,
                     session_threads,
-                    accept_thread: Some(handle.thread),
-                    waker: Some(handle.waker),
+                    accept_thread: None,
+                    reactor_threads: handle.threads,
+                    wakers: handle.wakers,
                     reactor_live: handle.live,
+                    pinned: handle.pinned,
                 })
             }
             #[cfg(not(unix))]
@@ -148,8 +170,15 @@ impl TcpServer {
     /// text mode, open reactor sessions in framed mode. 0 after a
     /// clean [`TcpServer::shutdown`].
     pub fn live_sessions(&self) -> usize {
-        self.session_threads.lock().unwrap().len()
-            + self.reactor_live.load(Ordering::Relaxed) as usize
+        let reactor: u64 = self.reactor_live.iter().map(|a| a.load(Ordering::Relaxed)).sum();
+        self.session_threads.lock().unwrap().len() + reactor as usize
+    }
+
+    /// Framed mode: how many sessions each reactor has ever been
+    /// pinned — the accept-fanout distribution, one slot per reactor.
+    /// Empty in text mode.
+    pub fn sessions_per_reactor(&self) -> Vec<u64> {
+        self.pinned.iter().map(|a| a.load(Ordering::Relaxed)).collect()
     }
 
     /// Stop accepting new connections, join the accept thread, then wait
@@ -161,14 +190,17 @@ impl TcpServer {
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         #[cfg(unix)]
-        if let Some(waker) = &self.waker {
+        for waker in &self.wakers {
             waker.wake();
         }
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
         }
+        // Reactor pool threads drain under the same bounded window as
+        // text sessions (their own in-loop grace is shorter than it).
         let mut handles: Vec<JoinHandle<()>> =
             self.session_threads.lock().unwrap().drain(..).collect();
+        handles.append(&mut self.reactor_threads);
         let deadline = Instant::now() + SESSION_DRAIN_WINDOW;
         while !handles.is_empty() {
             let (done, still_running): (Vec<_>, Vec<_>) =
@@ -191,6 +223,10 @@ impl TcpServer {
             }
             std::thread::sleep(Duration::from_millis(5));
         }
+        // Drop the waker handles now that the pool has joined: the
+        // self-pipe write fds close here, not at process exit.
+        #[cfg(unix)]
+        self.wakers.clear();
     }
 }
 

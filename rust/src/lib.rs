@@ -126,26 +126,35 @@
 //!   counters exactly.
 //! * **Framed event-loop ingress** ([`coordinator::frame`],
 //!   `coordinator::reactor`) — the TCP front-end is no longer
-//!   thread-per-session: one poll(2) reactor thread owns every framed
-//!   connection, speaking a length-prefixed binary protocol (magic
-//!   `SFUT` + version preamble; u32 LE length, u8 kind, payload) with
-//!   pipelined multi-job batches per read. Job completion wakes the
-//!   reactor through the ticket's [`susp::Fut`] `on_complete` callback
-//!   and a self-pipe — the paper's promise path, never a thread parked
-//!   per waiter. Backpressure is end-to-end: a non-draining client
-//!   stops being read (`wire.read_paused`) and submits flow through
-//!   the nonblocking admission path, answering the same
-//!   `err admission=…` taxonomy as text. The text protocol survives as
-//!   compat mode and A/B baseline (`Config::wire` = framed | text,
-//!   `--wire`, `SFUT_WIRE`; per-listener via
-//!   [`coordinator::TcpServer::start_wire`]), and `cargo bench --bench
-//!   ingress_wire` sweeps BOTH modes over a connection ladder into
-//!   `BENCH_ingress.json`, which CI's ingress gate compares cell-wise
-//!   (a current run missing either wire mode hard-fails). The frame
-//!   layout and kind table live in [`coordinator`]'s "Wire protocol"
-//!   section; the conformance corpus (`rust/tests/framed_wire.rs`)
-//!   holds every malformed input to at most one err frame and a clean
-//!   close.
+//!   thread-per-session: a pool of reactor threads (`Config::reactors`,
+//!   0 = auto from cores) owns the framed connections, each session
+//!   pinned to one reactor for its lifetime, speaking a length-prefixed
+//!   binary protocol (magic `SFUT` + version preamble; u32 LE length,
+//!   u8 kind, payload) with pipelined multi-job batches per read.
+//!   Readiness comes through a swappable `Poller` backend —
+//!   `Config::poller` = poll | epoll | auto (`--poller`, `SFUT_POLLER`)
+//!   — and accepts fan out via `SO_REUSEPORT` listener groups on linux
+//!   (in-process round-robin handoff elsewhere). Job completion wakes
+//!   the owning reactor through the ticket's [`susp::Fut`]
+//!   `on_complete` callback and a per-reactor self-pipe — the paper's
+//!   promise path, never a thread parked per waiter. Backpressure is
+//!   end-to-end: a non-draining client stops being read
+//!   (`wire.read_paused`) and submits flow through the nonblocking
+//!   admission path, answering the same `err admission=…` taxonomy as
+//!   text. The text protocol survives as compat mode and A/B baseline
+//!   (`Config::wire` = framed | text, `--wire`, `SFUT_WIRE`;
+//!   per-listener via [`coordinator::TcpServer::start_wire`]), and
+//!   `cargo bench --bench ingress_wire` sweeps BOTH modes — framed
+//!   crossed with (poller × reactor count) — over a connection ladder
+//!   into `BENCH_ingress.json`, which CI's ingress gate compares
+//!   cell-wise (a current run missing either wire mode, or a framed
+//!   poller the baseline has, hard-fails). The frame layout, kind
+//!   table, and pool architecture live in [`coordinator`]'s "Wire
+//!   protocol" section; the conformance corpus
+//!   (`rust/tests/framed_wire.rs`) holds every malformed input to at
+//!   most one err frame and a clean close under every poller backend,
+//!   and `rust/tests/reactor_pool.rs` pins the fanout, pinning, and
+//!   drain invariants.
 
 pub mod bench_harness;
 pub mod bigint;

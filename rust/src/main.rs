@@ -30,6 +30,11 @@
 //!                            (chase_lev | locked)
 //!   --wire <protocol>        shorthand for --set wire=<protocol>
 //!                            (framed | text) — TCP listener wire mode
+//!   --poller <backend>       shorthand for --set poller=<backend>
+//!                            (poll | epoll | auto) — framed readiness
+//!                            backend; auto = epoll on linux, else poll
+//!   --reactors <n>           shorthand for --set reactors=<n> — framed
+//!                            reactor threads (0 = auto from cores)
 //!   --threshold <f>          check-bench regression tolerance (default 0.25)
 //!   --latency-threshold <f>  check-bench p95 growth tolerated before a
 //!                            finding (default 0.25)
@@ -110,6 +115,14 @@ fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
             "--wire" => {
                 let v = args.next().context("--wire needs a protocol (framed | text)")?;
                 cli.overrides.push(("wire".to_string(), v));
+            }
+            "--poller" => {
+                let v = args.next().context("--poller needs a backend (poll | epoll | auto)")?;
+                cli.overrides.push(("poller".to_string(), v));
+            }
+            "--reactors" => {
+                let v = args.next().context("--reactors needs a count (0 = auto)")?;
+                cli.overrides.push(("reactors".to_string(), v));
             }
             "--latency-strict" => {
                 cli.latency_strict = true;
@@ -379,6 +392,7 @@ fn real_main() -> Result<()> {
                  options: --config <file> | --set k=v | --scale <f> | --samples <n> | \
                  --no-kernel | --queue-depth <n> | --admission <block|shed|timeout(MS)> | \
                  --deque <chase_lev|locked> | --wire <framed|text> | \
+                 --poller <poll|epoll|auto> | --reactors <n> | \
                  --threshold <f> | --latency-threshold <f> | --latency-strict\n\
                  workloads: {}\n\
                  modes: seq strict par(N)",
@@ -475,6 +489,17 @@ mod tests {
         let cli = parse_args(args("serve 127.0.0.1:0 --wire framed")).unwrap();
         assert!(cli.overrides.contains(&("wire".to_string(), "framed".to_string())));
         assert!(parse_args(args("serve --wire")).is_err());
+    }
+
+    #[test]
+    fn parses_poller_and_reactors_shorthand() {
+        let cli =
+            parse_args(args("serve 127.0.0.1:0 --wire framed --poller epoll --reactors 4"))
+                .unwrap();
+        assert!(cli.overrides.contains(&("poller".to_string(), "epoll".to_string())));
+        assert!(cli.overrides.contains(&("reactors".to_string(), "4".to_string())));
+        assert!(parse_args(args("serve --poller")).is_err());
+        assert!(parse_args(args("serve --reactors")).is_err());
     }
 
     #[test]

@@ -1,12 +1,15 @@
-//! End-to-end coverage of the framed binary wire protocol on the poll
-//! reactor: handshake and job lifecycle over real sockets, the
+//! End-to-end coverage of the framed binary wire protocol on the
+//! reactor pool: handshake and job lifecycle over real sockets, the
 //! malformed-frame conformance corpus (every hostile input answers at
 //! most one `err` frame and closes — never a panic, never a stuck
-//! session), slow-loris and pipelined-batch framing, shed-based
-//! backpressure against a non-draining reader, and the framed-vs-text
-//! saturation trajectory that CI gates (`BENCH_ingress.json`).
+//! session) run under **every readiness backend the platform has**,
+//! slow-loris and pipelined-batch framing, shed-based backpressure
+//! against a non-draining reader, and the framed-vs-text saturation
+//! trajectory that CI gates (`BENCH_ingress.json`).
 //!
-//! The reactor needs `poll(2)`, so the whole suite is unix-only.
+//! The reactors need a unix readiness syscall, so the whole suite is
+//! unix-only. Pool-specific invariants (pinning, fanout, pool
+//! shutdown) live in `reactor_pool.rs`.
 #![cfg(unix)]
 
 use std::io::Write;
@@ -15,7 +18,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use stream_future::bench_harness::{ingress_bench, BenchOptions, GateOutcome};
-use stream_future::config::{AdmissionPolicy, Config, WireProtocol};
+use stream_future::config::{AdmissionPolicy, Config, PollerKind, WireProtocol};
 use stream_future::coordinator::frame::{self, Frame, FrameKind, MAX_FRAME_LEN};
 use stream_future::coordinator::{Pipeline, TcpServer};
 use stream_future::testkit::wire::{
@@ -32,6 +35,16 @@ fn smoke_config() -> Config {
     cfg.shard_parallelism = 1;
     cfg.dispatchers = 1;
     cfg
+}
+
+/// Every readiness backend this platform can run: the conformance
+/// corpus must hold under each, not just whichever `auto` picks.
+fn test_pollers() -> Vec<PollerKind> {
+    if cfg!(target_os = "linux") {
+        vec![PollerKind::Poll, PollerKind::Epoll]
+    } else {
+        vec![PollerKind::Poll]
+    }
 }
 
 fn framed_server(cfg: Config) -> (Arc<Pipeline>, TcpServer) {
@@ -86,10 +99,20 @@ fn framed_session_submits_waits_and_polls() {
 
 /// The malformed-input corpus: every entry must produce at most one
 /// well-formed `Err` frame followed by a clean close — and the server
-/// must keep serving new sessions afterwards.
+/// must keep serving new sessions afterwards. The corpus is a protocol
+/// contract, not a backend detail, so it runs under every readiness
+/// backend the platform supports.
 #[test]
 fn conformance_corpus_answers_one_err_frame_then_closes() {
-    let (pipeline, server) = framed_server(smoke_config());
+    for poller in test_pollers() {
+        let mut cfg = smoke_config();
+        cfg.poller = poller;
+        conformance_corpus_one_backend(cfg);
+    }
+}
+
+fn conformance_corpus_one_backend(cfg: Config) {
+    let (pipeline, server) = framed_server(cfg);
     let addr = server.local_addr();
 
     // Garbage magic: err frame naming the magic, then EOF. No Hello.
@@ -290,7 +313,8 @@ fn backpressure_floods_shed_instead_of_buffering() {
 }
 
 /// The CI-gated A/B trajectory: one harness invocation sweeps framed
-/// AND text cells, the result self-gates cleanly, and the trajectory
+/// cells for every platform poller crossed with the reactor ladder,
+/// plus text cells, the result self-gates cleanly, and the trajectory
 /// file seeds only when absent (`cargo bench --bench ingress_wire`
 /// owns the overwrite path).
 #[test]
@@ -304,7 +328,11 @@ fn ingress_wire_trajectory_covers_both_wires_and_seeds() {
     let opts = BenchOptions { warmup: 1, samples: 2, verbose: false };
     let b = ingress_bench::run(&cfg, &params, &opts).unwrap();
 
-    assert_eq!(b.points.len(), 4, "2 wires × 2 connection counts");
+    // framed: pollers × reactor counts × connections; text: connections.
+    let framed_cells =
+        params.pollers.len() * params.reactor_counts.len() * params.connections.len();
+    let expected = framed_cells + params.connections.len();
+    assert_eq!(b.points.len(), expected, "points: {:?}", b.points);
     for wire in ["framed", "text"] {
         assert!(
             b.points.iter().any(|p| p.wire == wire),
@@ -312,6 +340,17 @@ fn ingress_wire_trajectory_covers_both_wires_and_seeds() {
             b.points
         );
     }
+    // The framed sweep exercises every platform poller and at least two
+    // reactor counts in the one invocation CI runs.
+    for poller in &params.pollers {
+        assert!(b.points.iter().any(|p| p.poller == poller.label()), "no {poller:?} cells");
+    }
+    let reactor_counts: std::collections::BTreeSet<usize> =
+        b.points.iter().filter(|p| p.wire == "framed").map(|p| p.reactors).collect();
+    assert!(
+        reactor_counts.len() >= 2,
+        "framed sweep covers only one reactor count: {reactor_counts:?}"
+    );
     assert!(b.points.iter().all(|p| p.jobs_per_sec > 0.0));
     assert!(b.points.iter().all(|p| p.p95_ms >= p.p50_ms));
     // Default admission is block: nothing sheds during the sweep.
@@ -322,7 +361,7 @@ fn ingress_wire_trajectory_covers_both_wires_and_seeds() {
     let report =
         ingress_bench::gate(&json, &json, 0.25, 0.25, false).expect("self-gate must not error");
     match report.outcome {
-        GateOutcome::Passed { cells } => assert_eq!(cells, 4),
+        GateOutcome::Passed { cells } => assert_eq!(cells, expected),
         other => panic!("expected self-gate pass, got {other:?}"),
     }
     assert!(report.warnings.is_empty(), "{:?}", report.warnings);

@@ -1,0 +1,231 @@
+//! Reactor-pool invariants over real sockets: accept fanout spreads
+//! sessions across reactors (deterministic round-robin under in-process
+//! handoff, kernel balancing under `SO_REUSEPORT`), every session stays
+//! pinned to the reactor that adopted it (observed through the
+//! per-reactor `wire.<r>.*` shadow counters, which must also reconcile
+//! with the totals), the job lifecycle holds under each readiness
+//! backend with a multi-reactor pool, and pool shutdown drains parked
+//! waiters then joins every reactor thread.
+//!
+//! Frame-level protocol conformance lives in `framed_wire.rs`; this
+//! suite is about the pool itself.
+#![cfg(unix)]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use stream_future::config::{Config, PollerKind, WireProtocol};
+use stream_future::coordinator::frame::FrameKind;
+use stream_future::coordinator::{Pipeline, TcpServer};
+use stream_future::testkit::wire::{FramedClient, SubmitReply};
+
+/// Smoke-sized pipeline with an explicit reactor count. `reuseport` is
+/// off so accept fanout takes the in-process handoff path: round-robin
+/// dispatch is deterministic, which the distribution assertions need.
+fn pool_config(reactors: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.primes_n = 300;
+    cfg.fateman_degree = 2;
+    cfg.chunk_size = 16;
+    cfg.use_kernel = false;
+    cfg.shards = 1;
+    cfg.shard_parallelism = 1;
+    cfg.dispatchers = 1;
+    cfg.reactors = reactors;
+    cfg.reuseport = false;
+    cfg
+}
+
+fn framed_server(cfg: Config) -> (Arc<Pipeline>, TcpServer) {
+    let pipeline = Arc::new(Pipeline::new(cfg).unwrap());
+    let server =
+        TcpServer::start_wire(Arc::clone(&pipeline), "127.0.0.1:0", WireProtocol::Framed).unwrap();
+    (pipeline, server)
+}
+
+fn counter(pipeline: &Pipeline, name: &str) -> u64 {
+    pipeline.metrics().snapshot().counters.get(name).copied().unwrap_or(0)
+}
+
+fn test_pollers() -> Vec<PollerKind> {
+    if cfg!(target_os = "linux") {
+        vec![PollerKind::Poll, PollerKind::Epoll]
+    } else {
+        vec![PollerKind::Poll]
+    }
+}
+
+fn wait_until(what: &str, mut pred: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !pred() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn submit_and_wait_ok(client: &mut FramedClient) {
+    let SubmitReply::Ticket { id, .. } = client.submit("primes par(2)").unwrap() else {
+        panic!("submit rejected");
+    };
+    let line = client.wait(id).unwrap();
+    assert!(line.starts_with("ok "), "{line}");
+}
+
+/// Handoff fanout is strict round-robin: with 3 reactors, 9 sequential
+/// connections land 3-3-3. Each `connect` completes the handshake, so
+/// every session is adopted (and its pin counted) before the next one
+/// reaches the dispatcher — the distribution is exact, not statistical.
+#[test]
+fn handoff_fanout_round_robins_sessions_across_reactors() {
+    let (_pipeline, mut server) = framed_server(pool_config(3));
+    let addr = server.local_addr();
+
+    let clients: Vec<_> = (0..9).map(|_| FramedClient::connect(addr).unwrap()).collect();
+
+    assert_eq!(server.sessions(), 9);
+    assert_eq!(
+        server.sessions_per_reactor(),
+        vec![3, 3, 3],
+        "handoff dispatch must round-robin exactly"
+    );
+
+    drop(clients);
+    server.shutdown();
+    assert_eq!(server.live_sessions(), 0, "shutdown must drain the pool");
+}
+
+/// A session is pinned for life: every frame it sends is decoded by the
+/// one reactor that adopted it, visible as exactly one moving
+/// `wire.<r>.frames_in` shadow — and the shadows must reconcile with
+/// the `wire.frames_in` total the existing dashboards read.
+#[test]
+fn session_frames_stay_pinned_to_one_reactor() {
+    let (pipeline, mut server) = framed_server(pool_config(3));
+    let mut client = FramedClient::connect(server.local_addr()).unwrap();
+
+    let shadow = |r: usize| counter(&pipeline, &format!("wire.{r}.frames_in"));
+    let before: Vec<u64> = (0..3).map(shadow).collect();
+    let total_before = counter(&pipeline, "wire.frames_in");
+
+    for _ in 0..5 {
+        submit_and_wait_ok(&mut client);
+    }
+
+    let deltas: Vec<u64> = (0..3).map(|r| shadow(r) - before[r]).collect();
+    let total_delta = counter(&pipeline, "wire.frames_in") - total_before;
+    assert_eq!(total_delta, 10, "5 submits + 5 waits, got {total_delta}");
+    assert_eq!(
+        deltas.iter().filter(|&&d| d > 0).count(),
+        1,
+        "one session must be read by exactly one reactor: {deltas:?}"
+    );
+    assert_eq!(
+        deltas.iter().sum::<u64>(),
+        total_delta,
+        "per-reactor shadows must reconcile with the total: {deltas:?}"
+    );
+
+    drop(client);
+    server.shutdown();
+}
+
+/// The full job lifecycle — several concurrent sessions, submit → wait
+/// → verified ok — holds under every readiness backend with a
+/// two-reactor pool, and the pool reaps sessions as clients disconnect.
+#[test]
+fn jobs_resolve_under_each_poller_with_two_reactors() {
+    for poller in test_pollers() {
+        let mut cfg = pool_config(2);
+        cfg.poller = poller;
+        let (_pipeline, mut server) = framed_server(cfg);
+        let addr = server.local_addr();
+
+        let mut clients: Vec<_> = (0..4).map(|_| FramedClient::connect(addr).unwrap()).collect();
+        for client in &mut clients {
+            submit_and_wait_ok(client);
+            submit_and_wait_ok(client);
+        }
+        assert_eq!(server.sessions(), 4, "poller {poller:?}");
+        assert_eq!(server.sessions_per_reactor(), vec![2, 2], "poller {poller:?}");
+
+        drop(clients);
+        wait_until("disconnected sessions to be reaped", || server.live_sessions() == 0);
+        server.shutdown();
+    }
+}
+
+/// Pool shutdown is a drain, not an abort: a waiter parked on a job the
+/// held shard can never finish still gets its final well-formed
+/// `err closed` frame, every reactor thread joins (self-pipe fds close
+/// with them), and shutdown is idempotent.
+#[test]
+fn pool_shutdown_drains_parked_waiter_and_joins_reactors() {
+    let cfg = pool_config(2);
+    let (pipeline, mut server) = framed_server(cfg);
+    // Park the only shard so the waited job cannot resolve before
+    // shutdown; the waiter must still get a final well-formed line.
+    pipeline.ingress().set_runner_hold(0, true);
+
+    let mut client = FramedClient::connect(server.local_addr()).unwrap();
+    let SubmitReply::Ticket { id, .. } = client.submit("primes seq").unwrap() else {
+        panic!("submit rejected");
+    };
+    let frames_seen = counter(&pipeline, "wire.frames_in");
+    client.send_wait(id).unwrap();
+    // The wait frame parks only once its reactor has decoded it; gate
+    // shutdown on that so the drain path (not a pre-read close) answers.
+    wait_until("the wait frame to be decoded", || {
+        counter(&pipeline, "wire.frames_in") > frames_seen
+    });
+
+    server.shutdown();
+    assert_eq!(server.live_sessions(), 0, "shutdown must join every reactor");
+
+    let frames = client.drain().unwrap();
+    let closed = frames.iter().any(|f| {
+        f.kind == FrameKind::Err
+            && FramedClient::line_of(f).is_ok_and(|l| l == format!("err closed ticket={id}"))
+    });
+    assert!(closed, "parked waiter must see the closed line, got {frames:?}");
+
+    // Idempotent.
+    server.shutdown();
+    assert_eq!(server.live_sessions(), 0);
+    pipeline.ingress().set_runner_hold(0, false);
+}
+
+/// `SO_REUSEPORT` fanout under a connection flood: the kernel spreads
+/// 40 concurrent sessions over both listeners, every reactor adopts at
+/// least one, and every job still resolves. Linux-only, like the
+/// reuseport bind path itself.
+#[cfg(target_os = "linux")]
+#[test]
+fn reuseport_fanout_spreads_a_connection_flood() {
+    let mut cfg = pool_config(2);
+    cfg.reuseport = true;
+    let (_pipeline, mut server) = framed_server(cfg);
+    let addr = server.local_addr();
+
+    let flood = 40u64;
+    let workers: Vec<_> = (0..flood)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut client = FramedClient::connect(addr).unwrap();
+                submit_and_wait_ok(&mut client);
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    let per_reactor = server.sessions_per_reactor();
+    assert_eq!(per_reactor.len(), 2);
+    assert_eq!(per_reactor.iter().sum::<u64>(), flood, "{per_reactor:?}");
+    // 40 distinct 4-tuples all hashing to one listener is a ~2^-39
+    // event; a zero here means the group bind silently collapsed.
+    assert!(per_reactor.iter().all(|&n| n > 0), "one-sided fanout: {per_reactor:?}");
+
+    server.shutdown();
+    assert_eq!(server.live_sessions(), 0);
+}
