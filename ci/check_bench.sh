@@ -1,25 +1,29 @@
 #!/usr/bin/env bash
 # Perf-regression gates. Each gate runs a small-scale bench and compares
-# it against its committed baseline via `sfut check-bench`, failing on a
+# it against its committed baseline via `sfut bench gate`, failing on a
 # >25% (BENCH_GATE_THRESHOLD) jobs/sec drop in any comparable cell.
 # Runs identically in CI (.github/workflows/ci.yml, job `bench-gate`)
 # and locally:
 #
-#   ci/check_bench.sh [pipeline|ingress|all]
+#   ci/check_bench.sh [<target>|all]
 #
-# Targets (default `all`, so the argless invocation keeps working):
+# The gate set is DECLARED, not hard-coded here: ci/plans/gates.plan
+# maps each target name to its committed baseline file and cargo bench
+# target, and `sfut bench list gates` prints that mapping one target
+# per line — this script just loops over it. Adding a gate means adding
+# one line to gates.plan, not editing this script. Today's set:
 #   * pipeline — `cargo bench --bench pipeline_throughput` vs
 #                BENCH_pipeline.json (per (workload, shards) cell);
 #   * ingress  — `cargo bench --bench ingress_wire` vs
 #                BENCH_ingress.json: the framed-vs-text A/B — one
-#                harness invocation sweeps BOTH wire modes (framed cells
-#                crossed with the platform's readiness backends and the
-#                reactor ladder), and `sfut check-bench` hard-fails if
-#                either wire mode — or any framed poller backend the
-#                baseline has cells for — is missing from the current
-#                run (per (wire, poller, reactors, connections) cell
-#                otherwise; legacy baselines without poller/reactors
-#                fields compare as poll/1-reactor cells).
+#                harness invocation sweeps BOTH wire modes, and the gate
+#                hard-fails if either wire mode (or any framed poller
+#                backend the baseline has cells for) is missing from the
+#                current run;
+#   * executor — `cargo bench --bench ablation_overhead` vs
+#                BENCH_executor.json (like-labeled scheduler/deque
+#                points; no baseline is committed yet, so this gate
+#                seeds-and-arms).
 #
 # Behaviour (per gate):
 #   * no committed baseline      → seed one (prints a reminder to commit
@@ -52,8 +56,7 @@
 #   2. Download the `BENCH_pipeline-measured` artifact and copy it over
 #      the repo-root BENCH_pipeline.json (dropping the synthetic "note"
 #      field arms strict latency gating; BENCH_executor-measured is the
-#      executor trajectory counterpart, gated via
-#      `sfut check-bench` on like-labeled scheduler/deque points).
+#      executor trajectory counterpart).
 #   3. Commit. From that run on, the gate compares against measured
 #      numbers, and BENCH_GATE_LATENCY_STRICT=1 has teeth.
 #   Alternatively run the bench on a quiet machine matching CI's core
@@ -67,7 +70,7 @@ TARGET="${1:-all}"
 THRESHOLD="${BENCH_GATE_THRESHOLD:-0.25}"
 # p95 latency / queue-wait growth tolerated before a finding
 # (warn-only unless BENCH_GATE_LATENCY_STRICT=1; see
-# `sfut check-bench --latency-threshold/--latency-strict`).
+# `sfut bench gate --latency-threshold/--latency-strict`).
 LATENCY_THRESHOLD="${BENCH_GATE_LATENCY_THRESHOLD:-0.25}"
 STRICT_ARGS=()
 if [[ "${BENCH_GATE_LATENCY_STRICT:-0}" == "1" ]]; then
@@ -87,7 +90,7 @@ export SFUT_INGRESS_CONNS="${SFUT_INGRESS_CONNS:-1,2}"
 export SFUT_INGRESS_REACTORS="${SFUT_INGRESS_REACTORS:-1,2}"
 export SFUT_NO_KERNEL=1
 
-trap 'rm -f BENCH_pipeline.json.baseline BENCH_ingress.json.baseline' EXIT
+trap 'rm -f BENCH_*.json.baseline' EXIT
 
 # run_gate <label> <baseline file> <bench target>
 run_gate() {
@@ -119,28 +122,30 @@ run_gate() {
 
     local status=0
     cargo run --release --quiet --bin sfut -- \
-        check-bench "$baseline.baseline" "$baseline" \
+        bench gate "$label" "$baseline.baseline" "$baseline" \
         --threshold "$THRESHOLD" --latency-threshold "$LATENCY_THRESHOLD" \
         ${STRICT_ARGS[@]+"${STRICT_ARGS[@]}"} || status=$?
     if [[ "$status" -ne 0 ]]; then
-        echo "::error title=bench-gate::sfut check-bench failed for $label (exit $status) — regression, or malformed current run"
+        echo "::error title=bench-gate::sfut bench gate failed for $label (exit $status) — regression, or malformed current run"
         return "$status"
     fi
 }
 
-case "$TARGET" in
-    pipeline)
-        run_gate pipeline BENCH_pipeline.json pipeline_throughput
-        ;;
-    ingress)
-        run_gate ingress BENCH_ingress.json ingress_wire
-        ;;
-    all)
-        run_gate pipeline BENCH_pipeline.json pipeline_throughput
-        run_gate ingress BENCH_ingress.json ingress_wire
-        ;;
-    *)
-        echo "usage: ci/check_bench.sh [pipeline|ingress|all]" >&2
-        exit 2
-        ;;
-esac
+# One loop over the plan-declared gate set replaces the old hand-copied
+# per-target case arms (which had drifted to duplicate the invocation).
+GATE_SET="$(cargo run --release --quiet --bin sfut -- bench list gates)"
+MATCHED=0
+while read -r name baseline bench; do
+    [[ -z "$name" ]] && continue
+    if [[ "$TARGET" == "all" || "$TARGET" == "$name" ]]; then
+        MATCHED=1
+        # </dev/null so nothing in run_gate can eat the gate-set stream
+        run_gate "$name" "$baseline" "$bench" < /dev/null
+    fi
+done <<< "$GATE_SET"
+
+if [[ "$MATCHED" -eq 0 ]]; then
+    echo "usage: ci/check_bench.sh [<target>|all]; declared targets:" >&2
+    echo "$GATE_SET" | awk '{print "  " $1}' >&2
+    exit 2
+fi

@@ -38,8 +38,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use super::pipeline_bench::{GateOutcome, GateReport, LatencyGate};
-use super::tiny_json::{self, Json};
-use super::{measure, BenchOptions};
+use super::{measure, BenchOptions, BenchPoint, BenchReport, Provenance, BENCH_SCHEMA_VERSION};
 use crate::exec::{DequeKind, Executor, ExecutorConfig, Scheduler};
 use crate::metrics::Histogram;
 use crate::susp::{Fut, Susp};
@@ -98,6 +97,8 @@ pub struct ExecutorBench {
     /// "release" or "debug" — only release points belong on the
     /// cross-PR trajectory.
     pub profile: &'static str,
+    /// Where this run came from (commit, dirty flag, toolchain, …).
+    pub provenance: Provenance,
     /// Global-queue baseline first, then the work-stealing deque
     /// variants, all measured in this same process.
     pub runs: Vec<SchedulerRun>,
@@ -254,68 +255,72 @@ pub fn run(tasks: u64, parallelism: usize, opts: &BenchOptions) -> ExecutorBench
         warmup: opts.warmup,
         samples: opts.samples,
         profile: build_profile(),
+        provenance: Provenance::capture(0, 1.0),
         runs,
     }
 }
 
-fn json_run(r: &SchedulerRun, indent: &str) -> String {
-    format!(
-        "{{\n\
-         {indent}  \"scheduler\": \"{}\",\n\
-         {indent}  \"deque\": \"{}\",\n\
-         {indent}  \"spawn_wave_secs\": {:.6},\n\
-         {indent}  \"spawn_wave_tasks_per_sec\": {:.1},\n\
-         {indent}  \"fut_force_secs\": {:.6},\n\
-         {indent}  \"fut_force_tasks_per_sec\": {:.1},\n\
-         {indent}  \"tasks_executed\": {},\n\
-         {indent}  \"tasks_stolen\": {},\n\
-         {indent}  \"steals_batched\": {},\n\
-         {indent}  \"jobs_migrated\": {},\n\
-         {indent}  \"speedup_spawn_wave\": {:.3},\n\
-         {indent}  \"speedup_fut_force\": {:.3},\n\
-         {indent}  \"queue_depth\": {{\"samples\": {}, \"mean\": {:.1}, \
-         \"p50\": {}, \"p99\": {}, \"max\": {}}}\n\
-         {indent}}}",
-        r.scheduler,
-        r.deque,
-        r.spawn_wave_secs,
-        r.spawn_wave_tasks_per_sec,
-        r.fut_force_secs,
-        r.fut_force_tasks_per_sec,
-        r.tasks_executed,
-        r.tasks_stolen,
-        r.steals_batched,
-        r.jobs_migrated,
-        r.speedup_spawn_wave,
-        r.speedup_fut_force,
-        r.queue_depth.samples,
-        r.queue_depth.mean,
-        r.queue_depth.p50,
-        r.queue_depth.p99,
-        r.queue_depth.max,
-    )
+/// Render one labeled run in the unified [`BenchPoint`] shape (schema
+/// v1): `(scheduler, deque)` under `labels`, everything measured under
+/// `metrics` (the queue-depth histogram flattens to dotted keys). The
+/// plan runner ([`super::plan::run_plan`]) reuses this to feed grid
+/// cells into the results registry.
+pub fn unified_point(r: &SchedulerRun) -> BenchPoint {
+    let mut point = BenchPoint::default();
+    point.labels.insert("scheduler".to_string(), r.scheduler.to_string());
+    point.labels.insert("deque".to_string(), r.deque.to_string());
+    for (key, value) in [
+        ("spawn_wave_secs", r.spawn_wave_secs),
+        ("spawn_wave_tasks_per_sec", r.spawn_wave_tasks_per_sec),
+        ("fut_force_secs", r.fut_force_secs),
+        ("fut_force_tasks_per_sec", r.fut_force_tasks_per_sec),
+        ("tasks_executed", r.tasks_executed as f64),
+        ("tasks_stolen", r.tasks_stolen as f64),
+        ("steals_batched", r.steals_batched as f64),
+        ("jobs_migrated", r.jobs_migrated as f64),
+        ("speedup_spawn_wave", r.speedup_spawn_wave),
+        ("speedup_fut_force", r.speedup_fut_force),
+        ("queue_depth.samples", r.queue_depth.samples as f64),
+        ("queue_depth.mean", r.queue_depth.mean),
+        ("queue_depth.p50", r.queue_depth.p50 as f64),
+        ("queue_depth.p99", r.queue_depth.p99 as f64),
+        ("queue_depth.max", r.queue_depth.max as f64),
+    ] {
+        point.metrics.insert(key.to_string(), value);
+    }
+    point
 }
 
-/// Serialize to the `BENCH_executor.json` schema (hand-rolled; no serde
-/// offline). Readable back via [`tiny_json`] / [`gate`].
+/// Serialize to the versioned `BENCH_executor.json` schema (hand-rolled;
+/// no serde offline). Readable back via [`BenchReport::parse`] /
+/// [`gate`], which also still accept the pre-v1 `runs` shape.
 pub fn to_json(b: &ExecutorBench) -> String {
-    let runs = b.runs.iter().map(|r| format!("    {}", json_run(r, "    "))).collect::<Vec<_>>();
+    let points = b
+        .runs
+        .iter()
+        .map(|r| format!("    {}", unified_point(r).to_json()))
+        .collect::<Vec<_>>()
+        .join(",\n");
     format!(
         "{{\n\
+         \x20 \"schema_version\": {},\n\
          \x20 \"bench\": \"executor_overhead\",\n\
          \x20 \"profile\": \"{}\",\n\
          \x20 \"tasks\": {},\n\
          \x20 \"parallelism\": {},\n\
          \x20 \"warmup\": {},\n\
          \x20 \"samples\": {},\n\
-         \x20 \"runs\": [\n{}\n  ]\n\
+         \x20 \"provenance\": {},\n\
+         \x20 \"points\": [\n{}\n  ]\n\
          }}\n",
+        BENCH_SCHEMA_VERSION,
         b.profile,
         b.tasks,
         b.parallelism,
         b.warmup,
         b.samples,
-        runs.join(",\n"),
+        b.provenance.to_json(),
+        points,
     )
 }
 
@@ -349,22 +354,21 @@ pub fn write_json_if_absent(b: &ExecutorBench) -> std::io::Result<bool> {
 /// current run is a failure (silent 100% regression), and a malformed
 /// current run is an error, not a skip.
 pub fn gate(baseline: &str, current: &str, threshold: f64) -> Result<GateReport, String> {
-    let b = tiny_json::parse(baseline).map_err(|e| format!("baseline: {e}"))?;
-    let c = tiny_json::parse(current).map_err(|e| format!("current: {e}"))?;
+    let b = BenchReport::parse(baseline).map_err(|e| format!("baseline: {e}"))?;
+    let c = BenchReport::parse(current).map_err(|e| format!("current: {e}"))?;
     for doc in [&b, &c] {
-        if doc.get("bench").and_then(Json::as_str) != Some("executor_overhead") {
+        if doc.bench != "executor_overhead" {
             return Err("not an executor_overhead trajectory file".to_string());
         }
     }
-    if c.get("profile").is_none() {
+    if c.param("profile").is_none() {
         return Err("current run is missing \"profile\" — bench writer broken".to_string());
     }
-    match c.get("runs").and_then(Json::as_array) {
-        Some(runs) if !runs.is_empty() => {}
-        _ => return Err("current run has no runs — bench writer broken".to_string()),
+    if c.points.is_empty() {
+        return Err("current run has no runs — bench writer broken".to_string());
     }
     for key in ["profile", "tasks", "parallelism", "warmup", "samples"] {
-        let (bv, cv) = (b.get(key), c.get(key));
+        let (bv, cv) = (b.param(key), c.param(key));
         if bv != cv {
             return Ok(GateReport {
                 outcome: GateOutcome::Skipped {
@@ -385,17 +389,15 @@ pub fn gate(baseline: &str, current: &str, threshold: f64) -> Result<GateReport,
         spawn_wave: f64,
         fut_force: f64,
     }
-    let read_runs = |doc: &Json| -> Vec<RunStats> {
-        doc.get("runs")
-            .and_then(Json::as_array)
-            .unwrap_or(&[])
+    let read_runs = |doc: &BenchReport| -> Vec<RunStats> {
+        doc.points
             .iter()
             .filter_map(|r| {
                 Some(RunStats {
-                    scheduler: r.get("scheduler")?.as_str()?.to_string(),
-                    deque: r.get("deque")?.as_str()?.to_string(),
-                    spawn_wave: r.get("spawn_wave_tasks_per_sec")?.as_f64()?,
-                    fut_force: r.get("fut_force_tasks_per_sec")?.as_f64()?,
+                    scheduler: r.label("scheduler")?.to_string(),
+                    deque: r.label("deque")?.to_string(),
+                    spawn_wave: r.metric("spawn_wave_tasks_per_sec")?,
+                    fut_force: r.metric("fut_force_tasks_per_sec")?,
                 })
             })
             .collect()
@@ -456,6 +458,7 @@ pub fn gate(baseline: &str, current: &str, threshold: f64) -> Result<GateReport,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bench_harness::tiny_json::{self, Json};
 
     #[test]
     fn ab_comparison_runs_and_emits_labeled_json() {
@@ -487,7 +490,7 @@ mod tests {
         assert!(json.contains("\"profile\""));
         let parsed = tiny_json::parse(&json).expect("self-readable JSON");
         assert_eq!(
-            parsed.get("runs").and_then(Json::as_array).map(<[Json]>::len),
+            parsed.get("points").and_then(Json::as_array).map(<[Json]>::len),
             Some(3)
         );
         // A run gates cleanly against itself at any threshold.

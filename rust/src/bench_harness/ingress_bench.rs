@@ -38,8 +38,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::tiny_json::{self, Json};
-use super::{measure, BenchOptions, GateOutcome, GateReport, LatencyGate};
+use super::{
+    fmt_f64, measure, BenchOptions, BenchPoint, BenchReport, GateOutcome, GateReport,
+    LatencyGate, Provenance, BENCH_SCHEMA_VERSION,
+};
 use crate::config::{Config, PollerKind, WireProtocol};
 use crate::coordinator::{Pipeline, TcpServer};
 use crate::testkit::wire::{FramedClient, SubmitReply};
@@ -172,6 +174,8 @@ pub struct IngressBench {
     pub jobs_per_connection: usize,
     pub warmup: usize,
     pub samples: usize,
+    /// Where this run came from (commit, dirty flag, toolchain, …).
+    pub provenance: Provenance,
     pub points: Vec<WirePoint>,
 }
 
@@ -329,52 +333,69 @@ pub fn run(
         jobs_per_connection: params.jobs_per_connection,
         warmup: opts.warmup,
         samples: opts.samples,
+        provenance: Provenance::capture(0, base.scale),
         points,
     })
 }
 
-fn json_point(p: &WirePoint) -> String {
-    format!(
-        "    {{\"wire\": \"{}\", \"poller\": \"{}\", \"reactors\": {}, \"connections\": {}, \
-         \"jobs_per_sample\": {}, \"jobs_per_sec\": {:.2}, \"p50_ms\": {:.3}, \
-         \"p95_ms\": {:.3}, \"shed_rate\": {:.4}}}",
-        p.wire,
-        p.poller,
-        p.reactors,
-        p.connections,
-        p.jobs_per_sample,
-        p.jobs_per_sec,
-        p.p50_ms,
-        p.p95_ms,
-        p.shed_rate,
-    )
+/// Render one cell in the unified [`BenchPoint`] shape (schema v1):
+/// the `(wire, poller, reactors, connections)` identity under `labels`,
+/// the measurements under `metrics`. The plan runner
+/// ([`super::plan::run_plan`]) reuses this to feed grid cells into the
+/// results registry.
+pub fn unified_point(p: &WirePoint) -> BenchPoint {
+    let mut point = BenchPoint::default();
+    point.labels.insert("wire".to_string(), p.wire.clone());
+    point.labels.insert("poller".to_string(), p.poller.clone());
+    point.labels.insert("reactors".to_string(), p.reactors.to_string());
+    point.labels.insert("connections".to_string(), p.connections.to_string());
+    for (key, value) in [
+        ("jobs_per_sample", p.jobs_per_sample as f64),
+        ("jobs_per_sec", p.jobs_per_sec),
+        ("p50_ms", p.p50_ms),
+        ("p95_ms", p.p95_ms),
+        ("shed_rate", p.shed_rate),
+    ] {
+        point.metrics.insert(key.to_string(), value);
+    }
+    point
 }
 
-/// Serialize to the `BENCH_ingress.json` schema (hand-rolled; no serde
-/// offline). Readable back via [`tiny_json`] / [`gate`].
+/// Serialize to the versioned `BENCH_ingress.json` schema (hand-rolled;
+/// no serde offline). Readable back via [`BenchReport::parse`] /
+/// [`gate`], which also still accept the pre-v1 flat point shape.
 pub fn to_json(b: &IngressBench) -> String {
     let connections =
         b.connections.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(", ");
-    let points = b.points.iter().map(json_point).collect::<Vec<_>>().join(",\n");
+    let points = b
+        .points
+        .iter()
+        .map(|p| format!("    {}", unified_point(p).to_json()))
+        .collect::<Vec<_>>()
+        .join(",\n");
     format!(
         "{{\n\
+         \x20 \"schema_version\": {},\n\
          \x20 \"bench\": \"ingress_wire_saturation\",\n\
          \x20 \"profile\": \"{}\",\n\
-         \x20 \"scale\": {:.4},\n\
+         \x20 \"scale\": {},\n\
          \x20 \"spec\": \"{}\",\n\
          \x20 \"connections\": [{}],\n\
          \x20 \"jobs_per_connection\": {},\n\
          \x20 \"warmup\": {},\n\
          \x20 \"samples\": {},\n\
+         \x20 \"provenance\": {},\n\
          \x20 \"points\": [\n{}\n  ]\n\
          }}\n",
+        BENCH_SCHEMA_VERSION,
         b.profile,
-        b.scale,
+        fmt_f64(b.scale),
         b.spec,
         connections,
         b.jobs_per_connection,
         b.warmup,
         b.samples,
+        b.provenance.to_json(),
         points,
     )
 }
@@ -429,14 +450,14 @@ pub fn gate(
     latency_threshold: f64,
     latency_strict: bool,
 ) -> Result<GateReport, String> {
-    let b = tiny_json::parse(baseline).map_err(|e| format!("baseline: {e}"))?;
-    let c = tiny_json::parse(current).map_err(|e| format!("current: {e}"))?;
+    let b = BenchReport::parse(baseline).map_err(|e| format!("baseline: {e}"))?;
+    let c = BenchReport::parse(current).map_err(|e| format!("current: {e}"))?;
     for doc in [&b, &c] {
-        if doc.get("bench").and_then(Json::as_str) != Some("ingress_wire_saturation") {
+        if doc.bench != "ingress_wire_saturation" {
             return Err("not an ingress_wire_saturation trajectory file".to_string());
         }
     }
-    if c.get("profile").is_none() {
+    if c.param("profile").is_none() {
         return Err("current run is missing \"profile\" — bench writer broken".to_string());
     }
     struct Cell {
@@ -447,34 +468,21 @@ pub fn gate(
         jobs_per_sec: f64,
         p95_ms: Option<f64>,
     }
-    let cells = |doc: &Json| -> Vec<Cell> {
-        doc.get("points")
-            .and_then(Json::as_array)
-            .unwrap_or(&[])
+    // Pre-pool baselines lack the poller/reactors labels; the
+    // normalizer in [`BenchReport::parse`] already defaulted those cells
+    // to (poll, 1) for framed / (none, 0) for text, so old baselines
+    // stay comparable like-for-like.
+    let cells = |doc: &BenchReport| -> Vec<Cell> {
+        doc.points
             .iter()
             .filter_map(|p| {
-                let wire = p.get("wire")?.as_str()?.to_string();
-                // Pre-pool baselines lack the poller/reactors fields:
-                // those cells ran the single poll(2) reactor, so they
-                // stay comparable under (poll, 1) / text (none, 0).
-                let framed = wire == "framed";
-                let poller = p
-                    .get("poller")
-                    .and_then(Json::as_str)
-                    .map(str::to_string)
-                    .unwrap_or_else(|| if framed { "poll" } else { "none" }.to_string());
-                let reactors = p
-                    .get("reactors")
-                    .and_then(Json::as_f64)
-                    .map(|v| v as u64)
-                    .unwrap_or(u64::from(framed));
                 Some(Cell {
-                    wire,
-                    poller,
-                    reactors,
-                    connections: p.get("connections")?.as_f64()? as u64,
-                    jobs_per_sec: p.get("jobs_per_sec")?.as_f64()?,
-                    p95_ms: p.get("p95_ms").and_then(Json::as_f64),
+                    wire: p.label("wire")?.to_string(),
+                    poller: p.label("poller").unwrap_or("none").to_string(),
+                    reactors: p.label_u64("reactors").unwrap_or(0),
+                    connections: p.label_u64("connections")?,
+                    jobs_per_sec: p.metric("jobs_per_sec")?,
+                    p95_ms: p.metric("p95_ms"),
                 })
             })
             .collect()
@@ -494,10 +502,7 @@ pub fn gate(
             ));
         }
     }
-    let synthetic_baseline = b
-        .get("note")
-        .and_then(Json::as_str)
-        .is_some_and(|n| n.contains("synthetic"));
+    let synthetic_baseline = b.note.as_deref().is_some_and(|n| n.contains("synthetic"));
     let latency_gate = if !latency_strict {
         LatencyGate::WarnOnly
     } else if synthetic_baseline {
@@ -506,7 +511,7 @@ pub fn gate(
         LatencyGate::Strict
     };
     for key in ["profile", "scale", "spec", "jobs_per_connection", "warmup", "samples"] {
-        let (bv, cv) = (b.get(key), c.get(key));
+        let (bv, cv) = (b.param(key), c.param(key));
         if bv != cv {
             return Ok(GateReport {
                 outcome: GateOutcome::Skipped {

@@ -1,20 +1,61 @@
-//! Benchmark harness — sampling, statistics, and the table/figure
-//! renderers that regenerate the paper's Table 1 and Figures 3–4.
+//! Benchmark harness — sampling, statistics, the table/figure renderers
+//! that regenerate the paper's Table 1 and Figures 3–4, and the perf
+//! lab (declarative ablation plans + provenance-stamped registry).
 //!
 //! `criterion` is not available offline; this is a purpose-built
 //! replacement: warmup + N timed samples per cell, median/MAD statistics
 //! (robust against scheduler noise, which matters because the measured
 //! quantity *is* scheduling behaviour), CSV output for plotting, and
 //! ASCII bar charts mirroring the paper's figures.
+//!
+//! # Running the perf lab
+//!
+//! A perf question is a *plan*, not a hand-run. Plans are small
+//! key=value files under `ci/plans/` declaring a grid sweep (axes over
+//! config keys like `shards`, `deque`, `poller`, `admission`,
+//! `chunk_policy`, plus backend parameters like `workload`), a sample
+//! budget, and a seed; [`plan::run_plan`] expands the grid, runs every
+//! cell through the existing pipeline/executor/ingress harnesses with
+//! the usual warmup + median-of-samples discipline, and appends each
+//! cell — stamped with full [`Provenance`] (commit, dirty flag, seed,
+//! toolchain, scale, host cores) — to the `BENCH_registry.jsonl`
+//! results registry ([`registry`]).
+//!
+//! ```text
+//! sfut bench run ci/plans/msort_shards.plan   # "does steal-half help msort at 8 shards?"
+//! sfut bench list                             # committed plans + the gate set
+//! sfut bench report [<plan>]                  # diff registry cells across commits
+//! sfut bench gate <target|all> [<a> <b>]      # the CI perf-regression gate
+//! ```
+//!
+//! CI runs the committed `ci/plans/smoke.plan` on every push (the
+//! `bench-plan-smoke` step) and uploads the registry as an artifact; the
+//! gate set the `bench gate` family loops over is itself plan-declared
+//! (`ci/plans/gates.plan`), so adding a bench trajectory means adding a
+//! line to a plan file, not editing shell.
+//!
+//! All three trajectory writers emit one **versioned schema**
+//! ([`BENCH_SCHEMA_VERSION`]): a top-level `bench` kind, run
+//! parameters, a `provenance` block, and `points` whose `labels`
+//! identify a cell and whose `metrics` measure it. [`BenchReport`] is
+//! the one reader — it also tolerates all three legacy (v0) shapes, so
+//! committed baselines keep parsing.
 
 mod chart;
 pub mod executor_bench;
 pub mod ingress_bench;
 pub mod paper;
 pub mod pipeline_bench;
+pub mod plan;
+pub mod registry;
 mod sampler;
 mod table;
 pub mod tiny_json;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use tiny_json::Json;
 
 pub use chart::ascii_bar_chart;
 pub use executor_bench::{ExecutorBench, QueueDepthStats, SchedulerRun};
@@ -23,8 +64,326 @@ pub use pipeline_bench::{
     GateOutcome, GateReport, LatencyGate, PipelineBench, PipelineBenchParams, WorkloadPoint,
     DEFAULT_LATENCY_THRESHOLD,
 };
+pub use plan::{run_plan, AblationPlan, Axis, GateTarget, PlanBackend, PlanReport};
 pub use sampler::{measure, BenchOptions, Measurement};
 pub use table::{render_csv, render_table, Cell, ReportTable};
+
+/// Version stamp every unified trajectory/registry document carries.
+/// Documents without the field are legacy (v0) and go through the
+/// tolerant reader paths in [`BenchReport::parse`].
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// Where a measurement came from — stamped on every trajectory file and
+/// every registry cell so numbers stay comparable (or visibly not)
+/// across commits and machines.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    /// `git rev-parse --short=12 HEAD`, or "unknown" outside a repo.
+    pub commit: String,
+    /// Working tree had uncommitted changes when the bench ran.
+    pub dirty: bool,
+    /// The plan seed (0 for direct bench runs — they take no seed).
+    pub seed: u64,
+    /// `rustc --version`, or "unknown" when the toolchain is absent.
+    pub toolchain: String,
+    /// The `Config::scale` the run used.
+    pub scale: f64,
+    pub host_cores: usize,
+}
+
+impl Provenance {
+    /// Capture the current environment. Never fails: fields degrade to
+    /// "unknown"/false when git or rustc are unavailable.
+    pub fn capture(seed: u64, scale: f64) -> Provenance {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let git = |args: &[&str]| -> Option<String> {
+            let out = std::process::Command::new("git")
+                .args(args)
+                .current_dir(root)
+                .output()
+                .ok()?;
+            if !out.status.success() {
+                return None;
+            }
+            Some(String::from_utf8_lossy(&out.stdout).trim().to_string())
+        };
+        let commit =
+            git(&["rev-parse", "--short=12", "HEAD"]).unwrap_or_else(|| "unknown".to_string());
+        let dirty = git(&["status", "--porcelain"]).map(|s| !s.is_empty()).unwrap_or(false);
+        let toolchain = std::process::Command::new("rustc")
+            .arg("--version")
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+            .unwrap_or_else(|| "unknown".to_string());
+        let host_cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Provenance { commit, dirty, seed, toolchain, scale, host_cores }
+    }
+
+    /// Single-line JSON object (hand-rolled; no serde offline).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"commit\": {}, \"dirty\": {}, \"seed\": {}, \"toolchain\": {}, \
+             \"scale\": {}, \"host_cores\": {}}}",
+            json_string(&self.commit),
+            self.dirty,
+            self.seed,
+            json_string(&self.toolchain),
+            fmt_f64(self.scale),
+            self.host_cores,
+        )
+    }
+
+    /// Tolerant read: missing fields fall back to capture-failure
+    /// defaults, so registries written by newer code stay readable.
+    pub fn from_json(v: &Json) -> Provenance {
+        Provenance {
+            commit: v
+                .get("commit")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            dirty: matches!(v.get("dirty"), Some(Json::Bool(true))),
+            seed: v.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            toolchain: v
+                .get("toolchain")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            scale: v.get("scale").and_then(Json::as_f64).unwrap_or(1.0),
+            host_cores: v.get("host_cores").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+        }
+    }
+}
+
+/// One measured cell in the unified schema: `labels` identify it (the
+/// gate and the registry differ match cells only on identical labels),
+/// `metrics` measure it, `flags` carry booleans like `verified`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BenchPoint {
+    pub labels: BTreeMap<String, String>,
+    pub metrics: BTreeMap<String, f64>,
+    pub flags: BTreeMap<String, bool>,
+}
+
+impl BenchPoint {
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.get(key).map(String::as_str)
+    }
+
+    pub fn label_u64(&self, key: &str) -> Option<u64> {
+        self.labels.get(key)?.parse().ok()
+    }
+
+    pub fn metric(&self, key: &str) -> Option<f64> {
+        self.metrics.get(key).copied()
+    }
+
+    /// Single-line JSON object; `flags` is omitted when empty.
+    pub fn to_json(&self) -> String {
+        let join = |pairs: Vec<String>| pairs.join(", ");
+        let labels: Vec<String> = self
+            .labels
+            .iter()
+            .map(|(k, v)| format!("{}: {}", json_string(k), json_string(v)))
+            .collect();
+        let metrics: Vec<String> = self
+            .metrics
+            .iter()
+            .map(|(k, v)| format!("{}: {}", json_string(k), fmt_f64(*v)))
+            .collect();
+        let mut out = format!(
+            "{{\"labels\": {{{}}}, \"metrics\": {{{}}}",
+            join(labels),
+            join(metrics)
+        );
+        if !self.flags.is_empty() {
+            let flags: Vec<String> = self
+                .flags
+                .iter()
+                .map(|(k, v)| format!("{}: {}", json_string(k), v))
+                .collect();
+            out.push_str(&format!(", \"flags\": {{{}}}", join(flags)));
+        }
+        out.push('}');
+        out
+    }
+}
+
+/// A parsed trajectory document behind one reader: the v1 unified shape
+/// *or* any of the three legacy (v0) shapes — flat pipeline/ingress
+/// points, or the executor's `runs` array — normalized into
+/// [`BenchPoint`]s. The raw document stays reachable via [`Self::param`]
+/// for run-parameter comparability checks.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    /// 0 for legacy documents without the field.
+    pub schema_version: u64,
+    /// The `bench` kind ("" when absent — the gates reject that).
+    pub bench: String,
+    /// The top-level `note` (the synthetic-floor marker lives here).
+    pub note: Option<String>,
+    pub provenance: Option<Provenance>,
+    pub points: Vec<BenchPoint>,
+    doc: Json,
+}
+
+impl BenchReport {
+    pub fn parse(text: &str) -> Result<BenchReport, String> {
+        let doc = tiny_json::parse(text)?;
+        let bench = doc.get("bench").and_then(Json::as_str).unwrap_or("").to_string();
+        let schema_version =
+            doc.get("schema_version").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let note = doc.get("note").and_then(Json::as_str).map(str::to_string);
+        let provenance = doc.get("provenance").map(Provenance::from_json);
+        let points = doc
+            .get("points")
+            .or_else(|| doc.get("runs")) // legacy executor shape
+            .and_then(Json::as_array)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|p| normalize_point(&bench, p))
+            .collect();
+        Ok(BenchReport { schema_version, bench, note, provenance, points, doc })
+    }
+
+    /// Top-level run-parameter lookup on the raw document (profile,
+    /// scale, clients, …) — the gates compare these for comparability.
+    pub fn param(&self, key: &str) -> Option<&Json> {
+        self.doc.get(key)
+    }
+}
+
+/// Label keys per legacy bench kind: fields under these names become
+/// labels when normalizing a v0 point; everything else routes by JSON
+/// type (numbers → metrics, bools → flags, strings → labels, nested
+/// objects → dotted metric keys).
+fn legacy_label_keys(bench: &str) -> &'static [&'static str] {
+    match bench {
+        "pipeline_throughput" => &["workload", "shards"],
+        "executor_overhead" => &["scheduler", "deque"],
+        "ingress_wire_saturation" => &["wire", "poller", "reactors", "connections"],
+        _ => &[],
+    }
+}
+
+fn json_to_label(v: &Json) -> Option<String> {
+    match v {
+        Json::Str(s) => Some(s.clone()),
+        Json::Num(n) => Some(fmt_f64(*n)),
+        Json::Bool(b) => Some(b.to_string()),
+        _ => None,
+    }
+}
+
+fn normalize_point(bench: &str, p: &Json) -> Option<BenchPoint> {
+    let mut point = BenchPoint::default();
+    if let Some(Json::Obj(_)) = p.get("labels") {
+        // v1 shape: labels/metrics/flags objects.
+        if let Some(Json::Obj(fields)) = p.get("labels") {
+            for (k, v) in fields {
+                if let Some(s) = json_to_label(v) {
+                    point.labels.insert(k.clone(), s);
+                }
+            }
+        }
+        if let Some(Json::Obj(fields)) = p.get("metrics") {
+            for (k, v) in fields {
+                if let Some(n) = v.as_f64() {
+                    point.metrics.insert(k.clone(), n);
+                }
+            }
+        }
+        if let Some(Json::Obj(fields)) = p.get("flags") {
+            for (k, v) in fields {
+                if let Json::Bool(b) = v {
+                    point.flags.insert(k.clone(), *b);
+                }
+            }
+        }
+    } else {
+        // v0 shape: one flat object per point.
+        let Json::Obj(fields) = p else { return None };
+        let label_keys = legacy_label_keys(bench);
+        for (k, v) in fields {
+            if label_keys.contains(&k.as_str()) {
+                if let Some(s) = json_to_label(v) {
+                    point.labels.insert(k.clone(), s);
+                }
+                continue;
+            }
+            match v {
+                Json::Num(n) => {
+                    point.metrics.insert(k.clone(), *n);
+                }
+                Json::Bool(b) => {
+                    point.flags.insert(k.clone(), *b);
+                }
+                Json::Str(s) => {
+                    point.labels.insert(k.clone(), s.clone());
+                }
+                Json::Obj(nested) => {
+                    // e.g. the executor's queue_depth histogram block.
+                    for (nk, nv) in nested {
+                        if let Some(n) = nv.as_f64() {
+                            point.metrics.insert(format!("{k}.{nk}"), n);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    // Pre-pool ingress cells lack poller/reactors: they ran the single
+    // poll(2) reactor (text cells have neither dimension). Defaulting
+    // here keeps legacy baselines comparable like-for-like.
+    if bench == "ingress_wire_saturation" {
+        if let Some(framed) = point.label("wire").map(|w| w == "framed") {
+            point
+                .labels
+                .entry("poller".to_string())
+                .or_insert_with(|| if framed { "poll" } else { "none" }.to_string());
+            point
+                .labels
+                .entry("reactors".to_string())
+                .or_insert_with(|| u64::from(framed).to_string());
+        }
+    }
+    Some(point)
+}
+
+/// JSON string literal with the escapes [`tiny_json`] reads back.
+pub(crate) fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            _ => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Compact f64 formatting: integers drop the fraction, everything else
+/// prints to 6 places with trailing zeros trimmed. Non-finite values
+/// (the writers never produce them) clamp to 0.
+pub(crate) fn fmt_f64(v: f64) -> String {
+    if !v.is_finite() {
+        return "0".to_string();
+    }
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        return format!("{}", v as i64);
+    }
+    let s = format!("{v:.6}");
+    s.trim_end_matches('0').trim_end_matches('.').to_string()
+}
 
 #[cfg(test)]
 mod tests {
@@ -70,5 +429,111 @@ mod tests {
         assert!(chart.contains("primes"));
         assert!(chart.contains('#'));
         assert!(chart.contains("5.9"));
+    }
+
+    #[test]
+    fn fmt_f64_is_compact_and_json_strings_escape() {
+        assert_eq!(fmt_f64(2.0), "2");
+        assert_eq!(fmt_f64(0.05), "0.05");
+        assert_eq!(fmt_f64(1234.5), "1234.5");
+        assert_eq!(fmt_f64(f64::NAN), "0");
+        assert_eq!(json_string("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn provenance_roundtrips_through_json() {
+        let p = Provenance {
+            commit: "abc123def456".to_string(),
+            dirty: true,
+            seed: 42,
+            toolchain: "rustc 1.76.0".to_string(),
+            scale: 0.05,
+            host_cores: 8,
+        };
+        let parsed = tiny_json::parse(&p.to_json()).expect("provenance JSON parses");
+        assert_eq!(Provenance::from_json(&parsed), p);
+        // Tolerant of missing fields.
+        let sparse = tiny_json::parse("{\"commit\": \"deadbeef\"}").unwrap();
+        let q = Provenance::from_json(&sparse);
+        assert_eq!(q.commit, "deadbeef");
+        assert_eq!(q.toolchain, "unknown");
+        assert!(!q.dirty);
+    }
+
+    #[test]
+    fn provenance_capture_never_fails() {
+        let p = Provenance::capture(7, 0.5);
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.scale, 0.5);
+        assert!(p.host_cores >= 1);
+        assert!(!p.commit.is_empty());
+        assert!(!p.toolchain.is_empty());
+    }
+
+    #[test]
+    fn bench_point_serializes_and_reparses() {
+        let mut p = BenchPoint::default();
+        p.labels.insert("workload".to_string(), "msort".to_string());
+        p.labels.insert("shards".to_string(), "8".to_string());
+        p.metrics.insert("jobs_per_sec".to_string(), 123.25);
+        p.flags.insert("verified".to_string(), true);
+        let json = p.to_json();
+        let doc = format!(
+            "{{\"schema_version\": 1, \"bench\": \"pipeline_throughput\", \"points\": [{json}]}}"
+        );
+        let report = BenchReport::parse(&doc).unwrap();
+        assert_eq!(report.schema_version, 1);
+        assert_eq!(report.points.len(), 1);
+        assert_eq!(report.points[0], p);
+        assert_eq!(report.points[0].label_u64("shards"), Some(8));
+        assert_eq!(report.points[0].metric("jobs_per_sec"), Some(123.25));
+    }
+
+    #[test]
+    fn bench_report_reads_all_three_legacy_shapes() {
+        // Legacy pipeline: flat point, numeric shards label.
+        let pipeline = "{\"bench\": \"pipeline_throughput\", \"profile\": \"release\", \
+             \"points\": [{\"workload\": \"primes\", \"shards\": 2, \
+             \"jobs_per_sec\": 100.0, \"verified\": true}]}";
+        let r = BenchReport::parse(pipeline).unwrap();
+        assert_eq!(r.schema_version, 0);
+        assert_eq!(r.points[0].label("workload"), Some("primes"));
+        assert_eq!(r.points[0].label_u64("shards"), Some(2));
+        assert_eq!(r.points[0].metric("jobs_per_sec"), Some(100.0));
+        assert_eq!(r.points[0].flags.get("verified"), Some(&true));
+        assert_eq!(r.param("profile").and_then(Json::as_str), Some("release"));
+
+        // Legacy executor: "runs" array, nested queue_depth object.
+        let executor = "{\"bench\": \"executor_overhead\", \"runs\": [\
+             {\"scheduler\": \"work-stealing\", \"deque\": \"chase_lev\", \
+              \"spawn_wave_tasks_per_sec\": 5000.0, \
+              \"queue_depth\": {\"mean\": 3.5, \"p99\": 9}}]}";
+        let r = BenchReport::parse(executor).unwrap();
+        assert_eq!(r.points[0].label("deque"), Some("chase_lev"));
+        assert_eq!(r.points[0].metric("spawn_wave_tasks_per_sec"), Some(5000.0));
+        assert_eq!(r.points[0].metric("queue_depth.mean"), Some(3.5));
+
+        // Legacy ingress without poller/reactors: framed defaults to
+        // (poll, 1), text to (none, 0).
+        let ingress = "{\"bench\": \"ingress_wire_saturation\", \"points\": [\
+             {\"wire\": \"framed\", \"connections\": 1, \"jobs_per_sec\": 10.0}, \
+             {\"wire\": \"text\", \"connections\": 1, \"jobs_per_sec\": 9.0}]}";
+        let r = BenchReport::parse(ingress).unwrap();
+        assert_eq!(r.points[0].label("poller"), Some("poll"));
+        assert_eq!(r.points[0].label_u64("reactors"), Some(1));
+        assert_eq!(r.points[1].label("poller"), Some("none"));
+        assert_eq!(r.points[1].label_u64("reactors"), Some(0));
+    }
+
+    #[test]
+    fn bench_report_surfaces_note_and_provenance() {
+        let doc = "{\"note\": \"synthetic floor\", \"bench\": \"pipeline_throughput\", \
+             \"provenance\": {\"commit\": \"cafe\", \"seed\": 3}, \"points\": []}";
+        let r = BenchReport::parse(doc).unwrap();
+        assert_eq!(r.note.as_deref(), Some("synthetic floor"));
+        let p = r.provenance.expect("provenance parsed");
+        assert_eq!(p.commit, "cafe");
+        assert_eq!(p.seed, 3);
+        assert!(r.points.is_empty());
     }
 }

@@ -41,8 +41,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::tiny_json::{self, Json};
-use super::{measure, BenchOptions};
+use super::{
+    fmt_f64, measure, BenchOptions, BenchPoint, BenchReport, Provenance, BENCH_SCHEMA_VERSION,
+};
 use crate::config::{Config, Mode};
 use crate::coordinator::{JobRequest, Pipeline, ShardSet};
 use crate::workload::WorkloadRegistry;
@@ -136,6 +137,8 @@ pub struct PipelineBench {
     pub warmup: usize,
     pub samples: usize,
     pub shard_counts: Vec<usize>,
+    /// Where this run came from (commit, dirty flag, toolchain, …).
+    pub provenance: Provenance,
     pub points: Vec<WorkloadPoint>,
 }
 
@@ -250,60 +253,74 @@ pub fn run(
         warmup: opts.warmup,
         samples: opts.samples,
         shard_counts: params.shard_counts.clone(),
+        provenance: Provenance::capture(0, base.scale),
         points,
     })
 }
 
-fn json_point(p: &WorkloadPoint) -> String {
-    format!(
-        "    {{\"workload\": \"{}\", \"shards\": {}, \"jobs_per_sample\": {}, \
-         \"jobs_per_sec\": {:.2}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
-         \"queue_wait_p50_ms\": {:.3}, \"queue_wait_p95_ms\": {:.3}, \
-         \"shed_rate\": {:.4}, \"panic_rate\": {:.4}, \"retry_rate\": {:.4}, \
-         \"tasks_stolen\": {}, \"verified\": {}}}",
-        p.workload,
-        p.shards,
-        p.jobs_per_sample,
-        p.jobs_per_sec,
-        p.p50_ms,
-        p.p95_ms,
-        p.queue_wait_p50_ms,
-        p.queue_wait_p95_ms,
-        p.shed_rate,
-        p.panic_rate,
-        p.retry_rate,
-        p.tasks_stolen,
-        p.verified,
-    )
+/// Render one cell in the unified [`BenchPoint`] shape (schema v1):
+/// identity under `labels`, numbers under `metrics`, booleans under
+/// `flags`. The plan runner ([`super::plan::run_plan`]) reuses this to
+/// feed grid cells into the results registry.
+pub fn unified_point(p: &WorkloadPoint) -> BenchPoint {
+    let mut point = BenchPoint::default();
+    point.labels.insert("workload".to_string(), p.workload.clone());
+    point.labels.insert("shards".to_string(), p.shards.to_string());
+    for (key, value) in [
+        ("jobs_per_sample", p.jobs_per_sample as f64),
+        ("jobs_per_sec", p.jobs_per_sec),
+        ("p50_ms", p.p50_ms),
+        ("p95_ms", p.p95_ms),
+        ("queue_wait_p50_ms", p.queue_wait_p50_ms),
+        ("queue_wait_p95_ms", p.queue_wait_p95_ms),
+        ("shed_rate", p.shed_rate),
+        ("panic_rate", p.panic_rate),
+        ("retry_rate", p.retry_rate),
+        ("tasks_stolen", p.tasks_stolen as f64),
+    ] {
+        point.metrics.insert(key.to_string(), value);
+    }
+    point.flags.insert("verified".to_string(), p.verified);
+    point
 }
 
-/// Serialize to the `BENCH_pipeline.json` schema (hand-rolled; no serde
-/// offline). Readable back via [`tiny_json`] / [`gate`].
+/// Serialize to the versioned `BENCH_pipeline.json` schema (hand-rolled;
+/// no serde offline). Readable back via [`BenchReport::parse`] /
+/// [`gate`], which also still accept the pre-v1 flat point shape.
 pub fn to_json(b: &PipelineBench) -> String {
     let shard_counts =
         b.shard_counts.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(", ");
-    let points = b.points.iter().map(json_point).collect::<Vec<_>>().join(",\n");
+    let points = b
+        .points
+        .iter()
+        .map(|p| format!("    {}", unified_point(p).to_json()))
+        .collect::<Vec<_>>()
+        .join(",\n");
     format!(
         "{{\n\
+         \x20 \"schema_version\": {},\n\
          \x20 \"bench\": \"pipeline_throughput\",\n\
          \x20 \"profile\": \"{}\",\n\
-         \x20 \"scale\": {:.4},\n\
+         \x20 \"scale\": {},\n\
          \x20 \"clients\": {},\n\
          \x20 \"jobs_per_client\": {},\n\
          \x20 \"mode\": \"{}\",\n\
          \x20 \"warmup\": {},\n\
          \x20 \"samples\": {},\n\
          \x20 \"shard_counts\": [{}],\n\
+         \x20 \"provenance\": {},\n\
          \x20 \"points\": [\n{}\n  ]\n\
          }}\n",
+        BENCH_SCHEMA_VERSION,
         b.profile,
-        b.scale,
+        fmt_f64(b.scale),
         b.clients,
         b.jobs_per_client,
         b.mode,
         b.warmup,
         b.samples,
         shard_counts,
+        b.provenance.to_json(),
         points,
     )
 }
@@ -401,10 +418,10 @@ pub fn gate(
     latency_threshold: f64,
     latency_strict: bool,
 ) -> Result<GateReport, String> {
-    let b = tiny_json::parse(baseline).map_err(|e| format!("baseline: {e}"))?;
-    let c = tiny_json::parse(current).map_err(|e| format!("current: {e}"))?;
+    let b = BenchReport::parse(baseline).map_err(|e| format!("baseline: {e}"))?;
+    let c = BenchReport::parse(current).map_err(|e| format!("current: {e}"))?;
     for doc in [&b, &c] {
-        if doc.get("bench").and_then(Json::as_str) != Some("pipeline_throughput") {
+        if doc.bench != "pipeline_throughput" {
             return Err("not a pipeline_throughput trajectory file".to_string());
         }
     }
@@ -412,17 +429,13 @@ pub fn gate(
     // fields missing there mean the bench writer broke, and a broken
     // writer must not quietly skip the gate. (An *old* baseline missing
     // fields is tolerated below — it only widens the Skipped path.)
-    if c.get("profile").is_none() {
+    if c.param("profile").is_none() {
         return Err("current run is missing \"profile\" — bench writer broken".to_string());
     }
-    match c.get("points").and_then(Json::as_array) {
-        Some(points) if !points.is_empty() => {}
-        _ => return Err("current run has no points — bench writer broken".to_string()),
+    if c.points.is_empty() {
+        return Err("current run has no points — bench writer broken".to_string());
     }
-    let synthetic_baseline = b
-        .get("note")
-        .and_then(Json::as_str)
-        .is_some_and(|n| n.contains("synthetic"));
+    let synthetic_baseline = b.note.as_deref().is_some_and(|n| n.contains("synthetic"));
     let latency_gate = if !latency_strict {
         LatencyGate::WarnOnly
     } else if synthetic_baseline {
@@ -431,7 +444,7 @@ pub fn gate(
         LatencyGate::Strict
     };
     for key in ["profile", "scale", "clients", "jobs_per_client", "mode", "warmup", "samples"] {
-        let (bv, cv) = (b.get(key), c.get(key));
+        let (bv, cv) = (b.param(key), c.param(key));
         if bv != cv {
             return Ok(GateReport {
                 outcome: GateOutcome::Skipped {
@@ -457,20 +470,18 @@ pub fn gate(
         panic_rate: Option<f64>,
         retry_rate: Option<f64>,
     }
-    let cell = |doc: &Json| -> Vec<CellStats> {
-        doc.get("points")
-            .and_then(Json::as_array)
-            .unwrap_or(&[])
+    let cell = |doc: &BenchReport| -> Vec<CellStats> {
+        doc.points
             .iter()
             .filter_map(|p| {
                 Some(CellStats {
-                    workload: p.get("workload")?.as_str()?.to_string(),
-                    shards: p.get("shards")?.as_f64()? as u64,
-                    jobs_per_sec: p.get("jobs_per_sec")?.as_f64()?,
-                    p95_ms: p.get("p95_ms").and_then(Json::as_f64),
-                    queue_wait_p95_ms: p.get("queue_wait_p95_ms").and_then(Json::as_f64),
-                    panic_rate: p.get("panic_rate").and_then(Json::as_f64),
-                    retry_rate: p.get("retry_rate").and_then(Json::as_f64),
+                    workload: p.label("workload")?.to_string(),
+                    shards: p.label_u64("shards")?,
+                    jobs_per_sec: p.metric("jobs_per_sec")?,
+                    p95_ms: p.metric("p95_ms"),
+                    queue_wait_p95_ms: p.metric("queue_wait_p95_ms"),
+                    panic_rate: p.metric("panic_rate"),
+                    retry_rate: p.metric("retry_rate"),
                 })
             })
             .collect()
@@ -580,6 +591,7 @@ pub fn gate(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bench_harness::tiny_json::{self, Json};
 
     fn smoke_config() -> Config {
         let mut cfg = Config::default();

@@ -1,0 +1,748 @@
+//! Declarative ablation plans — the perf lab's front door.
+//!
+//! A perf question ("does steal-half help msort at 8 shards?") becomes
+//! a small key=value plan file under `ci/plans/` instead of a hand-run:
+//! top-level keys pin the run shape (backend, sample budget, seed,
+//! backend parameters), an `[axis]` section declares the grid sweep
+//! (comma-separated values per key, crossed in file order), and a
+//! `[fixed]` section pins config keys for every cell. [`run_plan`]
+//! expands the grid, routes each cell through the existing
+//! pipeline/executor/ingress harnesses with the usual warmup +
+//! median-of-samples discipline ([`BenchOptions`]), and returns a
+//! [`PlanReport`] of provenance-stamped [`BenchPoint`]s ready for the
+//! results registry ([`super::registry`]).
+//!
+//! ```text
+//! # ci/plans/msort_shards.plan
+//! name = msort_shards
+//! backend = pipeline
+//! workload = msort
+//! seed = 7
+//! [axis]
+//! shards = 1, 2, 4, 8
+//! deque = chase_lev, locked
+//! ```
+//!
+//! Axis and `[fixed]` keys are validated up front — config keys against
+//! [`Config::set`] (so a typo'd key or value fails at parse time, not
+//! mid-sweep), workloads against the registry, modes and specs against
+//! their parsers. The CI gate set the `sfut bench gate` family loops
+//! over lives in the same directory (`ci/plans/gates.plan`) in an even
+//! smaller `name = baseline bench_target` format ([`parse_gate_set`]).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use super::ingress_bench::IngressBenchParams;
+use super::pipeline_bench::PipelineBenchParams;
+use super::{executor_bench, ingress_bench, pipeline_bench};
+use super::{BenchOptions, BenchPoint, Provenance};
+use crate::config::{Config, Mode};
+use crate::coordinator::JobRequest;
+use crate::workload::WorkloadRegistry;
+
+/// Which harness runs a plan's cells.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanBackend {
+    /// [`pipeline_bench`]: end-to-end jobs through a [`Pipeline`]
+    /// (workload/mode/clients/jobs_per_client + any config axis).
+    ///
+    /// [`Pipeline`]: crate::coordinator::Pipeline
+    Pipeline,
+    /// [`executor_bench`]: the scheduler/deque A/B/C. Takes only
+    /// `tasks`/`parallelism` — it builds executors directly, bypassing
+    /// [`Config`], so config axes are rejected at validation.
+    Executor,
+    /// [`ingress_bench`]: TCP wire saturation
+    /// (spec/connections/jobs_per_connection + any config axis; sweep
+    /// `wire`/`poller`/`reactors` as config axes).
+    Ingress,
+}
+
+impl PlanBackend {
+    pub fn label(self) -> &'static str {
+        match self {
+            PlanBackend::Pipeline => "pipeline",
+            PlanBackend::Executor => "executor",
+            PlanBackend::Ingress => "ingress",
+        }
+    }
+}
+
+impl std::str::FromStr for PlanBackend {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<PlanBackend, String> {
+        match s {
+            "pipeline" => Ok(PlanBackend::Pipeline),
+            "executor" => Ok(PlanBackend::Executor),
+            "ingress" => Ok(PlanBackend::Ingress),
+            _ => Err(format!("unknown backend: {s} (expected pipeline, executor or ingress)")),
+        }
+    }
+}
+
+/// One grid dimension: a key swept over its values, crossed with every
+/// other axis in file order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Axis {
+    pub key: String,
+    pub values: Vec<String>,
+}
+
+/// A parsed plan file. Top-level keys not swept by an axis keep the
+/// defaults below; `fixed` pins config keys for every cell.
+#[derive(Debug, Clone)]
+pub struct AblationPlan {
+    pub name: String,
+    pub backend: PlanBackend,
+    /// Stamped into every cell's [`Provenance`]; reserved for workloads
+    /// that take randomness.
+    pub seed: u64,
+    pub samples: usize,
+    pub warmup: usize,
+    pub axes: Vec<Axis>,
+    /// Config keys pinned for every cell (applied before axis values).
+    pub fixed: Vec<(String, String)>,
+    // Backend parameter defaults, overridable per-cell via axes.
+    pub mode: Mode,
+    pub workload: String,
+    pub clients: usize,
+    pub jobs_per_client: usize,
+    pub tasks: u64,
+    pub parallelism: usize,
+    pub spec: String,
+    pub connections: usize,
+    pub jobs_per_connection: usize,
+}
+
+impl Default for AblationPlan {
+    fn default() -> Self {
+        AblationPlan {
+            name: String::new(),
+            backend: PlanBackend::Pipeline,
+            seed: 0,
+            samples: 2,
+            warmup: 1,
+            axes: Vec::new(),
+            fixed: Vec::new(),
+            mode: Mode::Par(2),
+            workload: "primes".to_string(),
+            clients: 2,
+            jobs_per_client: 2,
+            tasks: 10_000,
+            parallelism: 2,
+            spec: "primes par(2)".to_string(),
+            connections: 1,
+            jobs_per_connection: 2,
+        }
+    }
+}
+
+impl AblationPlan {
+    /// Cells the grid expands to (product of the axis value counts).
+    pub fn grid_size(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product()
+    }
+
+    /// Check the plan makes sense before anything runs: a name, at
+    /// least one axis, a bounded grid, and every axis/fixed key + value
+    /// valid for the backend (config values go through a scratch
+    /// [`Config::set`], so a typo fails here, not mid-sweep).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() {
+            return Err("plan has no name".to_string());
+        }
+        if !self.name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_') {
+            return Err(format!(
+                "bad plan name {:?} (alphanumeric, '-' and '_' only)",
+                self.name
+            ));
+        }
+        if self.samples == 0 {
+            return Err("samples must be >= 1".to_string());
+        }
+        if self.axes.is_empty() {
+            return Err("plan declares no axes — the grid is empty".to_string());
+        }
+        let cells = self.grid_size();
+        if cells > 1024 {
+            return Err(format!("grid expands to {cells} cells — the cap is 1024"));
+        }
+        for axis in &self.axes {
+            if self.fixed.iter().any(|(k, _)| *k == axis.key) {
+                return Err(format!("axis {} collides with a [fixed] key", axis.key));
+            }
+            for value in &axis.values {
+                check_key_value(self.backend, &axis.key, value)?;
+            }
+        }
+        if self.backend == PlanBackend::Executor && !self.fixed.is_empty() {
+            return Err(
+                "executor plans take no [fixed] config — the executor bench bypasses Config"
+                    .to_string(),
+            );
+        }
+        for (key, value) in &self.fixed {
+            check_key_value(self.backend, key, value)?;
+        }
+        Ok(())
+    }
+}
+
+/// Backend parameter keys routable per-cell (everything else must be a
+/// [`Config`] key).
+fn backend_param_keys(backend: PlanBackend) -> &'static [&'static str] {
+    match backend {
+        PlanBackend::Pipeline => &["workload", "mode", "clients", "jobs_per_client"],
+        PlanBackend::Executor => &["tasks", "parallelism"],
+        PlanBackend::Ingress => &["spec", "connections", "jobs_per_connection"],
+    }
+}
+
+fn check_key_value(backend: PlanBackend, key: &str, value: &str) -> Result<(), String> {
+    if backend_param_keys(backend).contains(&key) {
+        return match key {
+            "workload" => {
+                if WorkloadRegistry::builtin().contains(value) {
+                    Ok(())
+                } else {
+                    Err(format!("unknown workload: {value}"))
+                }
+            }
+            "mode" => Mode::parse(value).map(|_| ()).map_err(|e| e.to_string()),
+            "spec" => JobRequest::parse(value).map(|_| ()),
+            _ => value
+                .parse::<u64>()
+                .map(|_| ())
+                .map_err(|_| format!("bad value for {key}: {value}")),
+        };
+    }
+    if backend == PlanBackend::Executor {
+        return Err(format!(
+            "executor plans sweep only tasks/parallelism — {key} is not an executor axis"
+        ));
+    }
+    let mut scratch = Config::default();
+    scratch.set(key, value).map_err(|e| e.to_string())
+}
+
+/// Parse a plan file: `key = value` lines, `#` comments, `[axis]` and
+/// `[fixed]` sections. Errors name their line.
+pub fn parse(text: &str) -> Result<AblationPlan, String> {
+    #[derive(PartialEq)]
+    enum Section {
+        Top,
+        Axis,
+        Fixed,
+    }
+    let mut plan = AblationPlan::default();
+    let mut seen_top: Vec<String> = Vec::new();
+    let mut section = Section::Top;
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        match line {
+            "[axis]" => {
+                section = Section::Axis;
+                continue;
+            }
+            "[fixed]" => {
+                section = Section::Fixed;
+                continue;
+            }
+            _ if line.starts_with('[') => {
+                return Err(format!(
+                    "line {lineno}: unknown section {line} (expected [axis] or [fixed])"
+                ));
+            }
+            _ => {}
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(format!("line {lineno}: expected key = value, got {line:?}"));
+        };
+        let key = key.trim().to_string();
+        let value = value.trim().to_string();
+        match section {
+            Section::Top => {
+                if seen_top.contains(&key) {
+                    return Err(format!("line {lineno}: duplicate key {key}"));
+                }
+                set_top_key(&mut plan, &key, &value)
+                    .map_err(|e| format!("line {lineno}: {e}"))?;
+                seen_top.push(key);
+            }
+            Section::Axis => {
+                if plan.axes.iter().any(|a| a.key == key) {
+                    return Err(format!("line {lineno}: duplicate axis {key}"));
+                }
+                let values: Vec<String> = value
+                    .split(',')
+                    .map(|v| v.trim().to_string())
+                    .filter(|v| !v.is_empty())
+                    .collect();
+                if values.is_empty() {
+                    return Err(format!("line {lineno}: axis {key} has no values"));
+                }
+                plan.axes.push(Axis { key, values });
+            }
+            Section::Fixed => {
+                if plan.fixed.iter().any(|(k, _)| *k == key) {
+                    return Err(format!("line {lineno}: duplicate fixed key {key}"));
+                }
+                plan.fixed.push((key, value));
+            }
+        }
+    }
+    Ok(plan)
+}
+
+fn set_top_key(plan: &mut AblationPlan, key: &str, value: &str) -> Result<(), String> {
+    fn num<T: std::str::FromStr>(key: &str, v: &str) -> Result<T, String> {
+        v.parse().map_err(|_| format!("bad value for {key}: {v}"))
+    }
+    match key {
+        "name" => plan.name = value.to_string(),
+        "backend" => plan.backend = value.parse()?,
+        "seed" => plan.seed = num(key, value)?,
+        "samples" => plan.samples = num(key, value)?,
+        "warmup" => plan.warmup = num(key, value)?,
+        "mode" => plan.mode = Mode::parse(value).map_err(|e| e.to_string())?,
+        "workload" => plan.workload = value.to_string(),
+        "clients" => plan.clients = num(key, value)?,
+        "jobs_per_client" => plan.jobs_per_client = num(key, value)?,
+        "tasks" => plan.tasks = num(key, value)?,
+        "parallelism" => plan.parallelism = num(key, value)?,
+        "spec" => plan.spec = value.to_string(),
+        "connections" => plan.connections = num(key, value)?,
+        "jobs_per_connection" => plan.jobs_per_connection = num(key, value)?,
+        _ => return Err(format!("unknown plan key: {key}")),
+    }
+    Ok(())
+}
+
+/// Expand axes into the full cartesian grid, file order outermost-first
+/// (last axis varies fastest). No axes → one empty cell, which
+/// [`AblationPlan::validate`] rejects before it matters.
+pub fn grid(axes: &[Axis]) -> Vec<Vec<(String, String)>> {
+    let mut cells: Vec<Vec<(String, String)>> = vec![Vec::new()];
+    for axis in axes {
+        let mut next = Vec::with_capacity(cells.len() * axis.values.len());
+        for cell in &cells {
+            for value in &axis.values {
+                let mut grown = cell.clone();
+                grown.push((axis.key.clone(), value.clone()));
+                next.push(grown);
+            }
+        }
+        cells = next;
+    }
+    cells
+}
+
+/// Everything one plan run produced: provenance-stamped grid cells
+/// ready for [`super::registry::append`].
+#[derive(Debug, Clone)]
+pub struct PlanReport {
+    pub name: String,
+    pub backend: PlanBackend,
+    /// "release" or "debug" — stamped on every registry record.
+    pub profile: &'static str,
+    pub seed: u64,
+    pub grid_cells: usize,
+    pub provenance: Provenance,
+    pub points: Vec<BenchPoint>,
+}
+
+impl PlanReport {
+    /// Human-readable summary: provenance header + one line per cell
+    /// (labels, then the cell's primary throughput metric).
+    pub fn render(&self) -> String {
+        let p = &self.provenance;
+        let mut out = format!(
+            "plan {} ({} backend, {} grid cell(s), {} point(s), seed {}, {} build)\n",
+            self.name,
+            self.backend.label(),
+            self.grid_cells,
+            self.points.len(),
+            self.seed,
+            self.profile,
+        );
+        out.push_str(&format!(
+            "  provenance: commit {}{} · {} · scale {} · {} core(s)\n",
+            p.commit,
+            if p.dirty { "*" } else { "" },
+            p.toolchain,
+            super::fmt_f64(p.scale),
+            p.host_cores,
+        ));
+        for point in &self.points {
+            let labels = point
+                .labels
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            let (metric, value) = super::registry::primary_metric(point);
+            out.push_str(&format!("  {labels}: {metric} {}\n", super::fmt_f64(value)));
+        }
+        out
+    }
+}
+
+fn parse_cell_num<T: std::str::FromStr>(key: &str, value: &str) -> Result<T> {
+    value.parse().map_err(|_| anyhow!("bad value for {key}: {value}"))
+}
+
+/// Execute a plan: expand the grid, run every cell through its backend
+/// harness with the plan's sample budget, and return the labeled,
+/// provenance-stamped points. Cells inherit `base` (the session config)
+/// with the plan's `[fixed]` keys pinned and the cell's axis values
+/// applied on top; backend parameter axes route to harness parameters
+/// instead of [`Config`].
+pub fn run_plan(plan: &AblationPlan, base: &Config) -> Result<PlanReport> {
+    plan.validate().map_err(|e| anyhow!("invalid plan {:?}: {e}", plan.name))?;
+    let opts = BenchOptions { warmup: plan.warmup, samples: plan.samples, verbose: false };
+    let mut pinned = base.clone();
+    for (key, value) in &plan.fixed {
+        pinned
+            .set(key, value)
+            .map_err(|e| anyhow!("plan {} [fixed] {key}: {e}", plan.name))?;
+    }
+    pinned.validate().map_err(|e| anyhow!("plan {}: {e}", plan.name))?;
+    let cells = grid(&plan.axes);
+    let grid_cells = cells.len();
+    let mut points = Vec::new();
+    for cell in &cells {
+        let mut cfg = pinned.clone();
+        let mut workload = plan.workload.clone();
+        let mut mode = plan.mode;
+        let mut clients = plan.clients;
+        let mut jobs_per_client = plan.jobs_per_client;
+        let mut tasks = plan.tasks;
+        let mut parallelism = plan.parallelism;
+        let mut spec = plan.spec.clone();
+        let mut connections = plan.connections;
+        let mut jobs_per_connection = plan.jobs_per_connection;
+        for (key, value) in cell {
+            match key.as_str() {
+                "workload" => workload = value.clone(),
+                "mode" => mode = Mode::parse(value).map_err(|e| anyhow!("{e}"))?,
+                "clients" => clients = parse_cell_num(key, value)?,
+                "jobs_per_client" => jobs_per_client = parse_cell_num(key, value)?,
+                "tasks" => tasks = parse_cell_num(key, value)?,
+                "parallelism" => parallelism = parse_cell_num(key, value)?,
+                "spec" => spec = value.clone(),
+                "connections" => connections = parse_cell_num(key, value)?,
+                "jobs_per_connection" => jobs_per_connection = parse_cell_num(key, value)?,
+                _ => cfg.set(key, value).map_err(|e| anyhow!("{e}"))?,
+            }
+        }
+        cfg.validate().map_err(|e| anyhow!("{e}"))?;
+        let mut cell_points: Vec<BenchPoint> = match plan.backend {
+            PlanBackend::Pipeline => {
+                let params = PipelineBenchParams {
+                    clients,
+                    jobs_per_client,
+                    shard_counts: vec![cfg.shards.max(1)],
+                    mode,
+                    workloads: vec![workload.clone()],
+                };
+                let bench = pipeline_bench::run(&cfg, &params, &opts)?;
+                bench
+                    .points
+                    .iter()
+                    .map(pipeline_bench::unified_point)
+                    .map(|mut p| {
+                        p.labels.insert("mode".to_string(), mode.label());
+                        p
+                    })
+                    .collect()
+            }
+            PlanBackend::Executor => {
+                let bench = executor_bench::run(tasks, parallelism, &opts);
+                bench.runs.iter().map(executor_bench::unified_point).collect()
+            }
+            PlanBackend::Ingress => {
+                let params = IngressBenchParams {
+                    wires: vec![cfg.wire],
+                    pollers: vec![cfg.poller.resolved()],
+                    reactor_counts: vec![cfg.reactors.max(1)],
+                    connections: vec![connections],
+                    jobs_per_connection,
+                    spec: spec.clone(),
+                };
+                let bench = ingress_bench::run(&cfg, &params, &opts)?;
+                bench.points.iter().map(ingress_bench::unified_point).collect()
+            }
+        };
+        // Stamp the cell's axis coordinates onto every point. Backend
+        // labels win on collision — e.g. the pipeline's `shards` label
+        // reports the *actual* shard count, which an auto (`shards=0`)
+        // axis value wouldn't.
+        for point in &mut cell_points {
+            for (key, value) in cell {
+                point.labels.entry(key.clone()).or_insert_with(|| value.clone());
+            }
+        }
+        points.extend(cell_points);
+    }
+    Ok(PlanReport {
+        name: plan.name.clone(),
+        backend: plan.backend,
+        profile: if cfg!(debug_assertions) { "debug" } else { "release" },
+        seed: plan.seed,
+        grid_cells,
+        provenance: Provenance::capture(plan.seed, pinned.scale),
+        points,
+    })
+}
+
+/// One CI gate target: a committed baseline file and the `cargo bench`
+/// target that regenerates its current run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GateTarget {
+    /// `sfut bench gate <name>` / `ci/check_bench.sh <name>`.
+    pub name: String,
+    /// Committed baseline filename at the repo root.
+    pub baseline: String,
+    /// `cargo bench --bench <bench_target>` regenerates the current run.
+    pub bench_target: String,
+}
+
+/// The built-in gate set, used when `ci/plans/gates.plan` is absent.
+/// Kept in sync with the committed file — the file is the source of
+/// truth CI reads (`sfut bench list gates`).
+pub const DEFAULT_GATE_SET: &str = "pipeline = BENCH_pipeline.json pipeline_throughput\n\
+     ingress = BENCH_ingress.json ingress_wire\n\
+     executor = BENCH_executor.json ablation_overhead\n";
+
+/// Parse a gate-set file: `name = baseline bench_target` lines, `#`
+/// comments. Errors name their line.
+pub fn parse_gate_set(text: &str) -> Result<Vec<GateTarget>, String> {
+    let mut targets: Vec<GateTarget> = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, rest)) = line.split_once('=') else {
+            return Err(format!("line {lineno}: expected name = baseline bench_target"));
+        };
+        let name = name.trim().to_string();
+        let parts: Vec<&str> = rest.split_whitespace().collect();
+        if parts.len() != 2 {
+            return Err(format!(
+                "line {lineno}: expected name = baseline bench_target, got {} value \
+                 token(s)",
+                parts.len()
+            ));
+        }
+        if name == "all" {
+            return Err(format!("line {lineno}: \"all\" is reserved for the whole set"));
+        }
+        if targets.iter().any(|t| t.name == name) {
+            return Err(format!("line {lineno}: duplicate gate target {name}"));
+        }
+        targets.push(GateTarget {
+            name,
+            baseline: parts[0].to_string(),
+            bench_target: parts[1].to_string(),
+        });
+    }
+    if targets.is_empty() {
+        return Err("gate set declares no targets".to_string());
+    }
+    Ok(targets)
+}
+
+/// Where the committed plans live.
+pub fn plans_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("ci").join("plans")
+}
+
+/// The committed gate-set file.
+pub fn gate_set_path() -> PathBuf {
+    plans_dir().join("gates.plan")
+}
+
+/// The plan-declared gate set: `ci/plans/gates.plan` when present,
+/// [`DEFAULT_GATE_SET`] otherwise (e.g. a checkout that predates it).
+pub fn load_gate_set() -> Result<Vec<GateTarget>, String> {
+    match std::fs::read_to_string(gate_set_path()) {
+        Ok(text) => {
+            parse_gate_set(&text).map_err(|e| format!("{}: {e}", gate_set_path().display()))
+        }
+        Err(_) => parse_gate_set(DEFAULT_GATE_SET),
+    }
+}
+
+/// Load one plan file: read, parse, validate.
+pub fn load(path: &Path) -> Result<AblationPlan, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    let plan = parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    plan.validate().map_err(|e| format!("{}: {e}", path.display()))?;
+    Ok(plan)
+}
+
+/// Every `*.plan` in a directory (excluding the gate set), sorted by
+/// plan name. Cross-file duplicate names are an error — `sfut bench
+/// run` addresses plans by file, but the registry groups by name.
+pub fn load_all_plans_in(dir: &Path) -> Result<Vec<(AblationPlan, PathBuf)>, String> {
+    let mut plans: Vec<(AblationPlan, PathBuf)> = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(entries) => entries,
+        Err(_) => return Ok(plans), // no plans dir yet — an empty lab
+    };
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "plan"))
+        .filter(|p| p.file_name().is_some_and(|n| n != "gates.plan"))
+        .collect();
+    paths.sort();
+    for path in paths {
+        let plan = load(&path)?;
+        if let Some((_, prev)) = plans.iter().find(|(p, _)| p.name == plan.name) {
+            return Err(format!(
+                "duplicate plan name {:?} in {} and {}",
+                plan.name,
+                prev.display(),
+                path.display()
+            ));
+        }
+        plans.push((plan, path));
+    }
+    plans.sort_by(|a, b| a.0.name.cmp(&b.0.name));
+    Ok(plans)
+}
+
+/// [`load_all_plans_in`] on the committed [`plans_dir`].
+pub fn load_all_plans() -> Result<Vec<(AblationPlan, PathBuf)>, String> {
+    load_all_plans_in(&plans_dir())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SMOKE: &str = "\
+        # a smoke plan\n\
+        name = smoke\n\
+        backend = pipeline\n\
+        seed = 42\n\
+        samples = 2\n\
+        workload = primes\n\
+        [axis]\n\
+        shards = 1, 2\n\
+        deque = chase_lev, locked\n\
+        [fixed]\n\
+        scale = 0.05\n";
+
+    #[test]
+    fn parses_a_plan_with_axes_and_fixed_keys() {
+        let plan = parse(SMOKE).unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.name, "smoke");
+        assert_eq!(plan.backend, PlanBackend::Pipeline);
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.samples, 2);
+        assert_eq!(plan.axes.len(), 2);
+        assert_eq!(plan.axes[0].key, "shards");
+        assert_eq!(plan.axes[1].values, vec!["chase_lev", "locked"]);
+        assert_eq!(plan.fixed, vec![("scale".to_string(), "0.05".to_string())]);
+        assert_eq!(plan.grid_size(), 4);
+        // The grid crosses in file order, last axis fastest.
+        let cells = grid(&plan.axes);
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0][0], ("shards".to_string(), "1".to_string()));
+        assert_eq!(cells[0][1], ("deque".to_string(), "chase_lev".to_string()));
+        assert_eq!(cells[1][1], ("deque".to_string(), "locked".to_string()));
+        assert_eq!(cells[2][0], ("shards".to_string(), "2".to_string()));
+    }
+
+    #[test]
+    fn rejects_bad_axes_and_values() {
+        // Unknown key: neither a backend param nor a config key.
+        let bad_key = SMOKE.replace("shards = 1, 2", "flux_capacitor = 1, 2");
+        let err = parse(&bad_key).unwrap().validate().unwrap_err();
+        assert!(err.contains("flux_capacitor"), "{err}");
+        // Known config key, bad value.
+        let bad_value = SMOKE.replace("deque = chase_lev, locked", "deque = warp");
+        let err = parse(&bad_value).unwrap().validate().unwrap_err();
+        assert!(err.contains("deque"), "{err}");
+        // Unknown workload.
+        let bad_workload = SMOKE.replace("workload = primes", "workload = nope");
+        let err = parse(&bad_workload).unwrap().validate().unwrap_err();
+        assert!(err.contains("unknown workload"), "{err}");
+        // Empty axis values line.
+        let empty_axis = SMOKE.replace("shards = 1, 2", "shards =");
+        let err = parse(&empty_axis).unwrap_err();
+        assert!(err.contains("no values"), "{err}");
+        // No axes at all → empty grid.
+        let plan = parse("name = empty\nbackend = pipeline\n").unwrap();
+        let err = plan.validate().unwrap_err();
+        assert!(err.contains("no axes"), "{err}");
+    }
+
+    #[test]
+    fn rejects_duplicates_and_collisions() {
+        let dup_top = format!("name = twice\n{SMOKE}");
+        let err = parse(&dup_top).unwrap_err();
+        assert!(err.contains("duplicate key name"), "{err}");
+        let dup_axis = SMOKE.replace("[fixed]", "shards = 4\n[fixed]");
+        let err = parse(&dup_axis).unwrap_err();
+        assert!(err.contains("duplicate axis"), "{err}");
+        let collision = SMOKE.replace("scale = 0.05", "shards = 4");
+        let plan = parse(&collision).unwrap();
+        // Axis parsing succeeded; the axis/fixed collision surfaces in
+        // validation.
+        let err = plan.validate().unwrap_err();
+        assert!(err.contains("collides"), "{err}");
+    }
+
+    #[test]
+    fn executor_plans_reject_config_axes() {
+        let plan = parse(
+            "name = exec\nbackend = executor\n[axis]\ntasks = 1000, 2000\nshards = 1, 2\n",
+        )
+        .unwrap();
+        let err = plan.validate().unwrap_err();
+        assert!(err.contains("shards"), "{err}");
+        let ok = parse("name = exec\nbackend = executor\n[axis]\ntasks = 1000, 2000\n").unwrap();
+        ok.validate().unwrap();
+        assert_eq!(ok.grid_size(), 2);
+    }
+
+    #[test]
+    fn seed_roundtrips_and_unknown_keys_error_with_line_numbers() {
+        let plan = parse("name = s\nseed = 7\n[axis]\nshards = 1\n").unwrap();
+        assert_eq!(plan.seed, 7);
+        let err = parse("name = s\nbogus = 1\n").unwrap_err();
+        assert!(err.starts_with("line 2:"), "{err}");
+        assert!(err.contains("unknown plan key"), "{err}");
+    }
+
+    #[test]
+    fn gate_set_parses_and_rejects_duplicates() {
+        let targets = parse_gate_set(DEFAULT_GATE_SET).unwrap();
+        assert_eq!(targets.len(), 3);
+        assert_eq!(targets[0].name, "pipeline");
+        assert_eq!(targets[0].baseline, "BENCH_pipeline.json");
+        assert_eq!(targets[2].bench_target, "ablation_overhead");
+        let dup = "a = f.json t\na = g.json u\n";
+        let err = parse_gate_set(dup).unwrap_err();
+        assert!(err.contains("duplicate gate target"), "{err}");
+        assert!(parse_gate_set("# only comments\n").is_err());
+        // The committed gate set (or the built-in fallback) always
+        // loads.
+        let loaded = load_gate_set().unwrap();
+        assert!(loaded.iter().any(|t| t.name == "pipeline"));
+    }
+}

@@ -1,0 +1,296 @@
+//! The results registry: every plan cell ever run, one JSONL line each.
+//!
+//! `BENCH_registry.jsonl` at the repo root is append-only — `sfut bench
+//! run <plan>` appends its cells, each stamped with the plan name,
+//! backend, build profile, and full [`Provenance`] (commit, dirty flag,
+//! seed, toolchain, scale, host cores). Because cells carry their
+//! commit, `sfut bench report` can diff a plan's latest cells against
+//! the previous commit's like-labeled cells without any baseline
+//! ceremony: the registry *is* the trajectory.
+//!
+//! The reader is tolerant by design: unknown top-level keys are
+//! ignored (future writers may stamp more), missing provenance degrades
+//! to "unknown" fields, and blank lines are skipped — a registry is
+//! long-lived and merges across branches, so strictness here would
+//! turn history into a liability.
+
+use std::path::{Path, PathBuf};
+
+use super::plan::PlanReport;
+use super::tiny_json::{self, Json};
+use super::{BenchPoint, Provenance};
+
+/// The committed registry location: the repository root.
+pub fn default_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_registry.jsonl")
+}
+
+/// One registry line, parsed.
+#[derive(Debug, Clone)]
+pub struct RegistryRecord {
+    pub plan: String,
+    pub backend: String,
+    pub profile: String,
+    pub point: BenchPoint,
+    pub provenance: Provenance,
+}
+
+fn record_line(report: &PlanReport, point: &BenchPoint) -> String {
+    format!(
+        "{{\"schema_version\": {}, \"plan\": {}, \"backend\": {}, \"profile\": {}, \
+         \"point\": {}, \"provenance\": {}}}",
+        super::BENCH_SCHEMA_VERSION,
+        super::json_string(&report.name),
+        super::json_string(report.backend.label()),
+        super::json_string(report.profile),
+        point.to_json(),
+        report.provenance.to_json(),
+    )
+}
+
+/// Append every point of a plan run to the registry (created on first
+/// use). Returns the number of cells written.
+pub fn append(path: &Path, report: &PlanReport) -> std::io::Result<usize> {
+    use std::io::Write as _;
+    let mut file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    for point in &report.points {
+        writeln!(file, "{}", record_line(report, point))?;
+    }
+    Ok(report.points.len())
+}
+
+/// Read the whole registry. A missing file is an empty registry, not an
+/// error; a malformed line is an error naming its line number.
+pub fn read(path: &Path) -> Result<Vec<RegistryRecord>, String> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(text) => text,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(format!("cannot read {}: {e}", path.display())),
+    };
+    let mut records = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let doc = tiny_json::parse(line)
+            .map_err(|e| format!("{} line {}: {e}", path.display(), idx + 1))?;
+        let field = |key: &str| doc.get(key).and_then(Json::as_str).unwrap_or("").to_string();
+        let point = doc
+            .get("point")
+            .and_then(|p| super::normalize_point("", p))
+            .unwrap_or_default();
+        let provenance = doc
+            .get("provenance")
+            .map(Provenance::from_json)
+            .unwrap_or_else(|| Provenance::from_json(&Json::Null));
+        records.push(RegistryRecord {
+            plan: field("plan"),
+            backend: field("backend"),
+            profile: field("profile"),
+            point,
+            provenance,
+        });
+    }
+    Ok(records)
+}
+
+/// The one metric a cell's report line leads with: jobs/sec where the
+/// backend has it, the spawn-wave rate for executor cells, else the
+/// first metric alphabetically.
+pub fn primary_metric(point: &BenchPoint) -> (String, f64) {
+    for key in ["jobs_per_sec", "spawn_wave_tasks_per_sec"] {
+        if let Some(value) = point.metric(key) {
+            return (key.to_string(), value);
+        }
+    }
+    point
+        .metrics
+        .iter()
+        .next()
+        .map(|(k, v)| (k.clone(), *v))
+        .unwrap_or_else(|| ("none".to_string(), 0.0))
+}
+
+/// Render the cross-commit report: per plan, the latest commit's cells
+/// with a delta against the previous commit's like-labeled cell.
+/// Dirty-tree cells are marked `*` — their numbers may not reproduce
+/// from the commit they claim.
+pub fn render_report(records: &[RegistryRecord], plan_filter: Option<&str>) -> String {
+    let selected: Vec<&RegistryRecord> = records
+        .iter()
+        .filter(|r| plan_filter.map_or(true, |f| r.plan == f))
+        .collect();
+    if selected.is_empty() {
+        return match plan_filter {
+            Some(f) => format!(
+                "registry has no cells for plan {f:?} — run `sfut bench run \
+                 ci/plans/{f}.plan` first\n"
+            ),
+            None => "registry is empty — run `sfut bench run <plan>` first\n".to_string(),
+        };
+    }
+    let mut plan_names: Vec<&str> = Vec::new();
+    for r in &selected {
+        if !plan_names.contains(&r.plan.as_str()) {
+            plan_names.push(&r.plan);
+        }
+    }
+    let mut out = String::new();
+    for plan in plan_names {
+        let rows: Vec<&RegistryRecord> =
+            selected.iter().copied().filter(|r| r.plan == plan).collect();
+        let mut commits: Vec<&str> = Vec::new();
+        for r in &rows {
+            if !commits.contains(&r.provenance.commit.as_str()) {
+                commits.push(&r.provenance.commit);
+            }
+        }
+        let latest = *commits.last().expect("rows is non-empty");
+        let prev = commits.len().checked_sub(2).map(|i| commits[i]);
+        out.push_str(&format!(
+            "plan {plan} — {} commit(s) in registry, latest {latest}\n",
+            commits.len()
+        ));
+        for r in rows.iter().filter(|r| r.provenance.commit == latest) {
+            let labels = r
+                .point
+                .labels
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            let (metric, value) = primary_metric(&r.point);
+            let dirty = if r.provenance.dirty { "*" } else { "" };
+            let delta = prev
+                .and_then(|prev_commit| {
+                    rows.iter()
+                        .find(|p| {
+                            p.provenance.commit == prev_commit && p.point.labels == r.point.labels
+                        })
+                        .map(|p| (prev_commit, primary_metric(&p.point).1))
+                })
+                .map(|(prev_commit, prev_value)| {
+                    if prev_value.abs() > 1e-9 {
+                        format!(
+                            " ({:+.1}% vs {prev_commit})",
+                            (value / prev_value - 1.0) * 100.0
+                        )
+                    } else {
+                        String::new()
+                    }
+                })
+                .unwrap_or_default();
+            out.push_str(&format!(
+                "  {labels}: {metric} {}{dirty}{delta}\n",
+                super::fmt_f64(value)
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::plan::PlanBackend;
+    use super::*;
+
+    fn point(shards: &str, jps: f64) -> BenchPoint {
+        let mut p = BenchPoint::default();
+        p.labels.insert("workload".to_string(), "msort".to_string());
+        p.labels.insert("shards".to_string(), shards.to_string());
+        p.metrics.insert("jobs_per_sec".to_string(), jps);
+        p
+    }
+
+    fn report(commit: &str, dirty: bool, points: Vec<BenchPoint>) -> PlanReport {
+        PlanReport {
+            name: "msort_shards".to_string(),
+            backend: PlanBackend::Pipeline,
+            profile: "release",
+            seed: 7,
+            grid_cells: points.len(),
+            provenance: Provenance {
+                commit: commit.to_string(),
+                dirty,
+                seed: 7,
+                toolchain: "rustc 1.x".to_string(),
+                scale: 1.0,
+                host_cores: 4,
+            },
+            points,
+        }
+    }
+
+    #[test]
+    fn append_then_read_roundtrips_with_provenance() {
+        let path = std::env::temp_dir().join("sfut_registry_roundtrip.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let n = append(&path, &report("aaa", false, vec![point("1", 100.0), point("2", 150.0)]))
+            .unwrap();
+        assert_eq!(n, 2);
+        let records = read(&path).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].plan, "msort_shards");
+        assert_eq!(records[0].backend, "pipeline");
+        assert_eq!(records[0].profile, "release");
+        assert_eq!(records[0].provenance.commit, "aaa");
+        assert_eq!(records[0].provenance.seed, 7);
+        assert_eq!(records[0].provenance.host_cores, 4);
+        assert_eq!(records[1].point.label("shards"), Some("2"));
+        assert_eq!(records[1].point.metric("jobs_per_sec"), Some(150.0));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn reader_tolerates_unknown_keys_blank_lines_and_missing_files() {
+        let missing = std::env::temp_dir().join("sfut_registry_never_written.jsonl");
+        let _ = std::fs::remove_file(&missing);
+        assert!(read(&missing).unwrap().is_empty());
+
+        let path = std::env::temp_dir().join("sfut_registry_tolerant.jsonl");
+        std::fs::write(
+            &path,
+            "\n{\"plan\": \"p\", \"future_key\": {\"nested\": 1}, \"point\": \
+             {\"labels\": {\"shards\": \"1\"}, \"metrics\": {\"jobs_per_sec\": 5}}}\n\n",
+        )
+        .unwrap();
+        let records = read(&path).unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].plan, "p");
+        assert_eq!(records[0].point.metric("jobs_per_sec"), Some(5.0));
+        // Missing provenance degrades, never errors.
+        assert_eq!(records[0].provenance.commit, "unknown");
+        // Malformed JSON names its line.
+        std::fs::write(&path, "{\"plan\": \"p\"}\n{broken\n").unwrap();
+        let err = read(&path).unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn primary_metric_prefers_throughput_keys() {
+        assert_eq!(primary_metric(&point("1", 42.0)), ("jobs_per_sec".to_string(), 42.0));
+        let mut exec = BenchPoint::default();
+        exec.metrics.insert("spawn_wave_tasks_per_sec".to_string(), 9.0);
+        assert_eq!(primary_metric(&exec), ("spawn_wave_tasks_per_sec".to_string(), 9.0));
+        assert_eq!(primary_metric(&BenchPoint::default()), ("none".to_string(), 0.0));
+    }
+
+    #[test]
+    fn report_diffs_latest_commit_against_previous() {
+        let path = std::env::temp_dir().join("sfut_registry_diff.jsonl");
+        let _ = std::fs::remove_file(&path);
+        append(&path, &report("aaa", false, vec![point("8", 100.0)])).unwrap();
+        append(&path, &report("bbb", true, vec![point("8", 80.0)])).unwrap();
+        let records = read(&path).unwrap();
+        let text = render_report(&records, None);
+        assert!(text.contains("latest bbb"), "{text}");
+        assert!(text.contains("-20.0% vs aaa"), "{text}");
+        assert!(text.contains('*'), "dirty cells are marked: {text}");
+        // Filtering on an absent plan explains itself.
+        let empty = render_report(&records, Some("nope"));
+        assert!(empty.contains("no cells for plan"), "{empty}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

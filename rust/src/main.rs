@@ -10,12 +10,20 @@
 //! sfut fig4 [options]                      regenerate Figure 4
 //! sfut serve [options]                     line-protocol request loop on stdio
 //! sfut info [options]                      platform / artifact / config report
-//! sfut check-bench <baseline> <current>    perf-regression gate on BENCH_pipeline.json,
-//!                                          BENCH_executor.json, or BENCH_ingress.json
-//!                                          (dispatched on the file's "bench" field;
-//!                                          executor runs compare like-labeled
-//!                                          scheduler/deque points only, ingress runs
-//!                                          compare framed-vs-text saturation cells)
+//! sfut bench run <plan-file>               execute a declarative ablation plan
+//!                                          (see ci/plans/*.plan) and append every
+//!                                          cell, provenance-stamped, to
+//!                                          BENCH_registry.jsonl
+//! sfut bench gate <target|all> [<a> <b>]   perf-regression gate; with no files,
+//!                                          gates the working-tree BENCH files of
+//!                                          every plan-declared target (missing
+//!                                          baseline = UNARMED, not a failure)
+//! sfut bench list [gates]                  list committed plans and gate targets
+//!                                          (`gates` = machine-readable gate set)
+//! sfut bench report [plan]                 diff registry cells across commits
+//! sfut check-bench <a> <b>                 deprecated alias for
+//!                                          `sfut bench gate <target> <a> <b>`
+//! ```
 //!
 //! options:
 //!   --config <file>          TOML-subset config file
@@ -35,23 +43,23 @@
 //!                            backend; auto = epoll on linux, else poll
 //!   --reactors <n>           shorthand for --set reactors=<n> — framed
 //!                            reactor threads (0 = auto from cores)
-//!   --threshold <f>          check-bench regression tolerance (default 0.25)
-//!   --latency-threshold <f>  check-bench p95 growth tolerated before a
+//!   --threshold <f>          bench gate regression tolerance (default 0.25)
+//!   --latency-threshold <f>  bench gate p95 growth tolerated before a
 //!                            finding (default 0.25)
-//!   --latency-strict         check-bench: p95 latency/queue-wait findings
+//!   --latency-strict         bench gate: p95 latency/queue-wait findings
 //!                            fail the gate instead of warning (auto-disarms
 //!                            while the baseline's note marks it synthetic)
-//! ```
 //!
 //! (clap is unavailable offline; parsing is hand-rolled and strict —
 //! unknown flags are errors, not surprises.)
 
 use std::io::{stdin, stdout, BufReader};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 use stream_future::bench_harness::paper;
+use stream_future::bench_harness::{plan, registry};
 use stream_future::config::Config;
 use stream_future::coordinator::{serve, JobRequest, Pipeline};
 
@@ -151,14 +159,15 @@ fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
             other => cli.positional.push(other.to_string()),
         }
     }
-    if cli.threshold.is_some() && cli.command != "check-bench" {
-        bail!("--threshold only applies to check-bench");
+    let gate_command = matches!(cli.command.as_str(), "check-bench" | "bench");
+    if cli.threshold.is_some() && !gate_command {
+        bail!("--threshold only applies to bench gate / check-bench");
     }
-    if cli.latency_threshold.is_some() && cli.command != "check-bench" {
-        bail!("--latency-threshold only applies to check-bench");
+    if cli.latency_threshold.is_some() && !gate_command {
+        bail!("--latency-threshold only applies to bench gate / check-bench");
     }
-    if cli.latency_strict && cli.command != "check-bench" {
-        bail!("--latency-strict only applies to check-bench");
+    if cli.latency_strict && !gate_command {
+        bail!("--latency-strict only applies to bench gate / check-bench");
     }
     Ok(cli)
 }
@@ -174,6 +183,247 @@ fn main() -> ExitCode {
             eprintln!("error: {e:#}");
             ExitCode::FAILURE
         }
+    }
+}
+
+/// Run one baseline-vs-current gate over a pair of unified-schema (or
+/// legacy) bench files. Dispatches on the current run's trajectory
+/// kind; a current file that does not even parse to a known kind is a
+/// hard error — a broken bench writer must fail the gate, never skip
+/// it.
+fn gate_files(
+    baseline_path: &Path,
+    current_path: &Path,
+    threshold: f64,
+    latency_threshold: f64,
+    latency_strict: bool,
+    latency_flags_given: bool,
+) -> Result<()> {
+    let baseline = std::fs::read_to_string(baseline_path)
+        .with_context(|| format!("reading baseline {}", baseline_path.display()))?;
+    let current = std::fs::read_to_string(current_path)
+        .with_context(|| format!("reading current {}", current_path.display()))?;
+    use stream_future::bench_harness::tiny_json::{self, Json};
+    use stream_future::bench_harness::{executor_bench, pipeline_bench};
+    use stream_future::bench_harness::{GateOutcome, LatencyGate};
+    let kind = tiny_json::parse(&current)
+        .map_err(|e| anyhow::anyhow!("current run is not valid JSON: {e}"))?
+        .get("bench")
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .context("current run has no \"bench\" field — bench writer broken")?;
+    let report = match kind.as_str() {
+        "pipeline_throughput" => {
+            pipeline_bench::gate(&baseline, &current, threshold, latency_threshold, latency_strict)
+        }
+        "executor_overhead" => {
+            // Executor trajectories carry no latency cells; make inert
+            // flags visible instead of silently accepting them.
+            if latency_flags_given {
+                eprintln!(
+                    "note: --latency-strict/--latency-threshold do not apply to \
+                     executor_overhead trajectories (throughput-only gate)"
+                );
+            }
+            executor_bench::gate(&baseline, &current, threshold)
+        }
+        "ingress_wire_saturation" => stream_future::bench_harness::ingress_bench::gate(
+            &baseline,
+            &current,
+            threshold,
+            latency_threshold,
+            latency_strict,
+        ),
+        other => bail!("unknown trajectory kind: {other}"),
+    }
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    match report.latency_gate {
+        LatencyGate::WarnOnly => {}
+        LatencyGate::Strict => println!("latency gate: STRICT (armed)"),
+        LatencyGate::StrictDisarmedSyntheticBaseline => println!(
+            "latency gate: strict requested but DISARMED — the committed \
+             baseline's note marks it a synthetic floor; refresh it with a \
+             measured run to arm (see ci/check_bench.sh)"
+        ),
+    }
+    // Warn-only findings (p95 latency/queue-wait growth, nonzero panic
+    // rates on non-faulty workloads) print regardless of the throughput
+    // verdict; under --latency-strict the latency ones appear as
+    // REGRESSION lines instead.
+    for w in &report.warnings {
+        eprintln!("WARNING (warn-only): {w}");
+    }
+    match report.outcome {
+        GateOutcome::Passed { cells } => {
+            println!(
+                "bench gate PASSED: {cells} cell(s) within {:.0}% of baseline \
+                 ({} latency warning(s))",
+                threshold * 100.0,
+                report.warnings.len()
+            );
+            Ok(())
+        }
+        GateOutcome::Skipped { reason } => {
+            println!("bench gate SKIPPED: {reason}");
+            Ok(())
+        }
+        GateOutcome::Failed { regressions } => {
+            for r in &regressions {
+                eprintln!("REGRESSION: {r}");
+            }
+            bail!("bench gate FAILED: {} regression(s) beyond tolerance", regressions.len());
+        }
+    }
+}
+
+/// The `sfut bench` family: `run <plan>`, `gate <target|all> [<a> <b>]`,
+/// `list [gates]`, `report [plan]`.
+fn bench_command(cli: &Cli) -> Result<()> {
+    let threshold = cli.threshold.unwrap_or(0.25);
+    let latency_threshold = cli
+        .latency_threshold
+        .unwrap_or(stream_future::bench_harness::DEFAULT_LATENCY_THRESHOLD);
+    let latency_flags_given = cli.latency_strict || cli.latency_threshold.is_some();
+    match cli.positional.first().map(String::as_str) {
+        Some("run") => {
+            if cli.positional.len() != 2 {
+                bail!("usage: sfut bench run <plan-file> [--config <file>] [--set k=v]");
+            }
+            let base = load_config(cli)?;
+            let plan = plan::load(Path::new(&cli.positional[1]))
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let report = plan::run_plan(&plan, &base)?;
+            print!("{}", report.render());
+            let path = registry::default_path();
+            let cells = registry::append(&path, &report)
+                .with_context(|| format!("appending to {}", path.display()))?;
+            println!("appended {cells} cell(s) to {}", path.display());
+            Ok(())
+        }
+        Some("gate") => {
+            let gate_set = plan::load_gate_set().map_err(|e| anyhow::anyhow!("{e}"))?;
+            let known = || {
+                gate_set.iter().map(|t| t.name.as_str()).collect::<Vec<_>>().join(", ")
+            };
+            match cli.positional.len() {
+                // Explicit files: `bench gate <target> <baseline> <current>`.
+                4 => {
+                    let target = cli.positional[1].as_str();
+                    if target != "all" && !gate_set.iter().any(|t| t.name == target) {
+                        bail!("unknown gate target: {target} (declared: {}, or all)", known());
+                    }
+                    gate_files(
+                        Path::new(&cli.positional[2]),
+                        Path::new(&cli.positional[3]),
+                        threshold,
+                        latency_threshold,
+                        cli.latency_strict,
+                        latency_flags_given,
+                    )
+                }
+                // No files: gate the working-tree BENCH files of every
+                // selected plan-declared target.
+                2 => {
+                    let target = cli.positional[1].as_str();
+                    let selected: Vec<_> = gate_set
+                        .iter()
+                        .filter(|t| target == "all" || t.name == target)
+                        .collect();
+                    if selected.is_empty() {
+                        bail!("unknown gate target: {target} (declared: {}, or all)", known());
+                    }
+                    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+                    let mut failed: Vec<String> = Vec::new();
+                    for t in selected {
+                        let committed = root.join(&t.baseline);
+                        if !committed.exists() {
+                            println!(
+                                "gate {}: UNARMED — no committed {} (commit a measured \
+                                 baseline to arm; see ci/check_bench.sh)",
+                                t.name, t.baseline
+                            );
+                            continue;
+                        }
+                        let snapshot =
+                            PathBuf::from(format!("{}.baseline", committed.display()));
+                        let baseline =
+                            if snapshot.exists() { snapshot } else { committed.clone() };
+                        println!(
+                            "gate {}: {} vs {}",
+                            t.name,
+                            baseline.display(),
+                            committed.display()
+                        );
+                        if let Err(e) = gate_files(
+                            &baseline,
+                            &committed,
+                            threshold,
+                            latency_threshold,
+                            cli.latency_strict,
+                            latency_flags_given,
+                        ) {
+                            eprintln!("gate {} FAILED: {e:#}", t.name);
+                            failed.push(t.name.clone());
+                        }
+                    }
+                    if !failed.is_empty() {
+                        bail!("{} gate(s) failed: {}", failed.len(), failed.join(", "));
+                    }
+                    Ok(())
+                }
+                _ => bail!(
+                    "usage: sfut bench gate <target|all> [<baseline.json> <current.json>] \
+                     [--threshold 0.25] [--latency-threshold 0.25] [--latency-strict]"
+                ),
+            }
+        }
+        Some("list") => {
+            if cli.positional.get(1).map(String::as_str) == Some("gates") {
+                // Machine-readable: one `name baseline bench_target`
+                // line per gate — ci/check_bench.sh consumes this.
+                for t in plan::load_gate_set().map_err(|e| anyhow::anyhow!("{e}"))? {
+                    println!("{} {} {}", t.name, t.baseline, t.bench_target);
+                }
+                return Ok(());
+            }
+            let plans = plan::load_all_plans().map_err(|e| anyhow::anyhow!("{e}"))?;
+            if plans.is_empty() {
+                println!("no plans committed under {}", plan::plans_dir().display());
+            } else {
+                println!("plans (sfut bench run <file>):");
+                for (p, path) in &plans {
+                    let axes: Vec<String> = p
+                        .axes
+                        .iter()
+                        .map(|a| format!("{}×{}", a.key, a.values.len()))
+                        .collect();
+                    println!(
+                        "  {:<14} {:<9} {:>4} cell(s)  [{}]  {}",
+                        p.name,
+                        p.backend.label(),
+                        p.grid_size(),
+                        axes.join(" "),
+                        path.display()
+                    );
+                }
+            }
+            println!("gate targets (sfut bench gate <name|all>):");
+            for t in plan::load_gate_set().map_err(|e| anyhow::anyhow!("{e}"))? {
+                println!("  {:<10} baseline {} ({})", t.name, t.baseline, t.bench_target);
+            }
+            Ok(())
+        }
+        Some("report") => {
+            let path = registry::default_path();
+            let records = registry::read(&path).map_err(|e| anyhow::anyhow!("{e}"))?;
+            print!(
+                "{}",
+                registry::render_report(&records, cli.positional.get(1).map(String::as_str))
+            );
+            Ok(())
+        }
+        Some(other) => bail!("unknown bench subcommand: {other} (try run, gate, list or report)"),
+        None => bail!("usage: sfut bench <run|gate|list|report> ... (try `sfut help`)"),
     }
 }
 
@@ -253,6 +503,7 @@ fn real_main() -> Result<()> {
             eprintln!("served {jobs} jobs");
             Ok(())
         }
+        "bench" => bench_command(&cli),
         "check-bench" => {
             if cli.positional.len() != 2 {
                 bail!(
@@ -260,97 +511,19 @@ fn real_main() -> Result<()> {
                      [--threshold 0.25] [--latency-threshold 0.25] [--latency-strict]"
                 );
             }
-            let threshold = cli.threshold.unwrap_or(0.25);
-            let latency_threshold = cli
-                .latency_threshold
-                .unwrap_or(stream_future::bench_harness::DEFAULT_LATENCY_THRESHOLD);
-            let baseline = std::fs::read_to_string(&cli.positional[0])
-                .with_context(|| format!("reading baseline {}", cli.positional[0]))?;
-            let current = std::fs::read_to_string(&cli.positional[1])
-                .with_context(|| format!("reading current {}", cli.positional[1]))?;
-            use stream_future::bench_harness::tiny_json::{self, Json};
-            use stream_future::bench_harness::{executor_bench, pipeline_bench};
-            use stream_future::bench_harness::{GateOutcome, LatencyGate};
-            // Dispatch on the current run's trajectory kind. A current
-            // file that does not even parse to a known kind is a hard
-            // error — a broken bench writer must fail the gate, never
-            // skip it.
-            let kind = tiny_json::parse(&current)
-                .map_err(|e| anyhow::anyhow!("current run is not valid JSON: {e}"))?
-                .get("bench")
-                .and_then(Json::as_str)
-                .map(str::to_string)
-                .context("current run has no \"bench\" field — bench writer broken")?;
-            let report = match kind.as_str() {
-                "pipeline_throughput" => pipeline_bench::gate(
-                    &baseline,
-                    &current,
-                    threshold,
-                    latency_threshold,
-                    cli.latency_strict,
-                ),
-                "executor_overhead" => {
-                    // Executor trajectories carry no latency cells;
-                    // make inert flags visible instead of silently
-                    // accepting them.
-                    if cli.latency_strict || cli.latency_threshold.is_some() {
-                        eprintln!(
-                            "note: --latency-strict/--latency-threshold do not apply to \
-                             executor_overhead trajectories (throughput-only gate)"
-                        );
-                    }
-                    executor_bench::gate(&baseline, &current, threshold)
-                }
-                "ingress_wire_saturation" => stream_future::bench_harness::ingress_bench::gate(
-                    &baseline,
-                    &current,
-                    threshold,
-                    latency_threshold,
-                    cli.latency_strict,
-                ),
-                other => bail!("unknown trajectory kind: {other}"),
-            }
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
-            match report.latency_gate {
-                LatencyGate::WarnOnly => {}
-                LatencyGate::Strict => println!("latency gate: STRICT (armed)"),
-                LatencyGate::StrictDisarmedSyntheticBaseline => println!(
-                    "latency gate: strict requested but DISARMED — the committed \
-                     baseline's note marks it a synthetic floor; refresh it with a \
-                     measured run to arm (see ci/check_bench.sh)"
-                ),
-            }
-            // Warn-only findings (p95 latency/queue-wait growth, nonzero
-            // panic rates on non-faulty workloads) print regardless of
-            // the throughput verdict; under --latency-strict the latency
-            // ones appear as REGRESSION lines instead.
-            for w in &report.warnings {
-                eprintln!("WARNING (warn-only): {w}");
-            }
-            match report.outcome {
-                GateOutcome::Passed { cells } => {
-                    println!(
-                        "bench gate PASSED: {cells} cell(s) within {:.0}% of baseline \
-                         ({} latency warning(s))",
-                        threshold * 100.0,
-                        report.warnings.len()
-                    );
-                    Ok(())
-                }
-                GateOutcome::Skipped { reason } => {
-                    println!("bench gate SKIPPED: {reason}");
-                    Ok(())
-                }
-                GateOutcome::Failed { regressions } => {
-                    for r in &regressions {
-                        eprintln!("REGRESSION: {r}");
-                    }
-                    bail!(
-                        "bench gate FAILED: {} regression(s) beyond tolerance",
-                        regressions.len()
-                    );
-                }
-            }
+            eprintln!(
+                "note: `sfut check-bench` is deprecated — use \
+                 `sfut bench gate <target> <baseline> <current>`"
+            );
+            gate_files(
+                Path::new(&cli.positional[0]),
+                Path::new(&cli.positional[1]),
+                cli.threshold.unwrap_or(0.25),
+                cli.latency_threshold
+                    .unwrap_or(stream_future::bench_harness::DEFAULT_LATENCY_THRESHOLD),
+                cli.latency_strict,
+                cli.latency_strict || cli.latency_threshold.is_some(),
+            )
         }
         "info" => {
             let cfg = load_config(&cli)?;
@@ -386,8 +559,13 @@ fn real_main() -> Result<()> {
                  \x20 fig4                    regenerate Figure 4 (polynomial chart)\n\
                  \x20 serve                   request loop on stdin/stdout\n\
                  \x20 info                    platform / artifact / config report\n\
-                 \x20 check-bench <a> <b>     compare BENCH_pipeline.json, \
-                 BENCH_executor.json, or BENCH_ingress.json runs (CI perf gate)\n\
+                 \x20 bench run <plan>        execute an ablation plan (ci/plans/*.plan), \
+                 append cells to BENCH_registry.jsonl\n\
+                 \x20 bench gate <t|all>      perf-regression gate over the plan-declared \
+                 gate set (or explicit <baseline> <current> files)\n\
+                 \x20 bench list [gates]      list committed plans and gate targets\n\
+                 \x20 bench report [plan]     diff registry cells across commits\n\
+                 \x20 check-bench <a> <b>     deprecated alias for `bench gate`\n\
                  \n\
                  options: --config <file> | --set k=v | --scale <f> | --samples <n> | \
                  --no-kernel | --queue-depth <n> | --admission <block|shed|timeout(MS)> | \
@@ -437,8 +615,23 @@ mod tests {
         assert!(parse_args(args("check-bench a b --threshold soon")).is_err());
         assert!(
             parse_args(args("run primes seq --threshold 0.1")).is_err(),
-            "--threshold must be rejected outside check-bench"
+            "--threshold must be rejected outside the gate commands"
         );
+    }
+
+    #[test]
+    fn parses_bench_family() {
+        let cli = parse_args(args("bench run ci/plans/smoke.plan --set scale=0.05")).unwrap();
+        assert_eq!(cli.command, "bench");
+        assert_eq!(cli.positional, vec!["run", "ci/plans/smoke.plan"]);
+        assert!(cli.overrides.contains(&("scale".to_string(), "0.05".to_string())));
+        let cli = parse_args(args("bench gate pipeline a.json b.json --threshold 0.4")).unwrap();
+        assert_eq!(cli.positional, vec!["gate", "pipeline", "a.json", "b.json"]);
+        assert_eq!(cli.threshold, Some(0.4));
+        let cli = parse_args(args("bench gate all --latency-strict")).unwrap();
+        assert!(cli.latency_strict);
+        let cli = parse_args(args("bench report smoke")).unwrap();
+        assert_eq!(cli.positional, vec!["report", "smoke"]);
     }
 
     #[test]
@@ -454,26 +647,26 @@ mod tests {
     }
 
     #[test]
-    fn parses_latency_threshold_for_check_bench_only() {
+    fn parses_latency_threshold_for_gate_commands_only() {
         let cli = parse_args(args("check-bench a.json b.json --latency-threshold 0.5")).unwrap();
         assert_eq!(cli.latency_threshold, Some(0.5));
         assert!(parse_args(args("check-bench a b --latency-threshold nope")).is_err());
         assert!(parse_args(args("check-bench a b --latency-threshold 0")).is_err());
         assert!(
             parse_args(args("run primes seq --latency-threshold 0.5")).is_err(),
-            "--latency-threshold must be rejected outside check-bench"
+            "--latency-threshold must be rejected outside the gate commands"
         );
     }
 
     #[test]
-    fn parses_latency_strict_for_check_bench_only() {
+    fn parses_latency_strict_for_gate_commands_only() {
         let cli = parse_args(args("check-bench a.json b.json --latency-strict")).unwrap();
         assert!(cli.latency_strict);
         let cli = parse_args(args("check-bench a.json b.json")).unwrap();
         assert!(!cli.latency_strict);
         assert!(
             parse_args(args("run primes seq --latency-strict")).is_err(),
-            "--latency-strict must be rejected outside check-bench"
+            "--latency-strict must be rejected outside the gate commands"
         );
     }
 

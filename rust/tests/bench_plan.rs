@@ -1,0 +1,219 @@
+//! Perf-lab integration surface: plan files parse and validate, the
+//! grid runs end-to-end through the pipeline harness into the results
+//! registry, legacy bench documents still read through the unified
+//! schema, and the `sfut bench` / deprecated `check-bench` CLI contract
+//! holds (spawned via `CARGO_BIN_EXE_sfut`).
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use stream_future::bench_harness::plan::{self, PlanBackend};
+use stream_future::bench_harness::registry;
+use stream_future::bench_harness::BenchReport;
+use stream_future::config::Config;
+
+fn temp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("sfut_bench_plan_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn plan_parses_axes_fixed_and_seed() {
+    let text = "\
+# a perf question as data
+name = lab
+backend = pipeline
+seed = 42
+samples = 2
+warmup = 1
+workload = primes
+mode = par(2)
+
+[axis]
+shards = 1, 2
+deque = chase_lev, locked
+
+[fixed]
+use_kernel = false
+";
+    let plan = plan::parse(text).unwrap();
+    plan.validate().unwrap();
+    assert_eq!(plan.name, "lab");
+    assert_eq!(plan.backend, PlanBackend::Pipeline);
+    assert_eq!(plan.seed, 42, "seed must survive the file roundtrip");
+    assert_eq!(plan.samples, 2);
+    assert_eq!(plan.grid_size(), 4);
+    assert_eq!(plan.axes[0].key, "shards");
+    assert_eq!(plan.axes[1].values, vec!["chase_lev".to_string(), "locked".to_string()]);
+    assert_eq!(plan.fixed, vec![("use_kernel".to_string(), "false".to_string())]);
+}
+
+#[test]
+fn plan_validation_rejects_bad_axes_and_empty_grids() {
+    // Unknown config key as an axis.
+    let err = plan::parse("name = x\n[axis]\nflux_capacitor = 1, 2\n")
+        .unwrap()
+        .validate()
+        .unwrap_err();
+    assert!(err.contains("flux_capacitor"), "{err}");
+
+    // Known key, bad value — caught at validation, not mid-sweep.
+    let err = plan::parse("name = x\n[axis]\ndeque = warp\n").unwrap().validate().unwrap_err();
+    assert!(err.contains("warp") || err.contains("deque"), "{err}");
+
+    // Unknown workload on the workload axis.
+    let err = plan::parse("name = x\n[axis]\nworkload = primes, nonesuch\n")
+        .unwrap()
+        .validate()
+        .unwrap_err();
+    assert!(err.contains("unknown workload"), "{err}");
+
+    // No axes at all: nothing to sweep.
+    let err = plan::parse("name = x\n").unwrap().validate().unwrap_err();
+    assert!(err.contains("no axes"), "{err}");
+
+    // An axis with no values is a parse error naming its line.
+    let err = plan::parse("name = x\n[axis]\nshards =\n").unwrap_err();
+    assert!(err.contains("line 3"), "{err}");
+}
+
+#[test]
+fn plan_parse_rejects_duplicates_with_line_numbers() {
+    let err = plan::parse("name = a\nname = b\n").unwrap_err();
+    assert!(err.contains("line 2") && err.contains("duplicate"), "{err}");
+    let err = plan::parse("name = a\n[axis]\nshards = 1\nshards = 2\n").unwrap_err();
+    assert!(err.contains("line 4") && err.contains("duplicate axis"), "{err}");
+    let err = plan::parse("name = a\nwarp_factor = 9\n").unwrap_err();
+    assert!(err.contains("line 2") && err.contains("unknown plan key"), "{err}");
+}
+
+#[test]
+fn gate_set_parses_and_lists_three_targets() {
+    let text = std::fs::read_to_string(plan::gate_set_path()).unwrap();
+    let targets = plan::parse_gate_set(&text).unwrap();
+    let names: Vec<&str> = targets.iter().map(|t| t.name.as_str()).collect();
+    assert_eq!(names, vec!["pipeline", "ingress", "executor"]);
+    assert_eq!(targets[0].baseline, "BENCH_pipeline.json");
+    assert_eq!(targets[2].bench_target, "ablation_overhead");
+    // The compiled-in fallback must match the committed file.
+    assert_eq!(plan::parse_gate_set(plan::DEFAULT_GATE_SET).unwrap(), targets);
+}
+
+#[test]
+fn run_plan_executes_a_two_axis_grid_into_the_registry() {
+    let mut base = Config::default();
+    for (key, value) in
+        [("primes_n", "400"), ("use_kernel", "false"), ("shard_parallelism", "1")]
+    {
+        base.set(key, value).unwrap();
+    }
+
+    let text = "\
+name = e2e
+backend = pipeline
+seed = 9
+samples = 1
+warmup = 0
+workload = primes
+mode = par(2)
+clients = 1
+jobs_per_client = 1
+
+[axis]
+shards = 1, 2
+deque = chase_lev
+";
+    let plan = plan::parse(text).unwrap();
+    let report = plan::run_plan(&plan, &base).unwrap();
+    assert_eq!(report.grid_cells, 2);
+    assert_eq!(report.points.len(), 2, "one pipeline point per grid cell");
+    for point in &report.points {
+        assert_eq!(point.label("workload"), Some("primes"));
+        assert_eq!(point.label("deque"), Some("chase_lev"), "axis value stamped as label");
+        assert!(point.metric("jobs_per_sec").is_some_and(|v| v > 0.0));
+    }
+    let shards: Vec<_> = report.points.iter().filter_map(|p| p.label("shards")).collect();
+    assert_eq!(shards, vec!["1", "2"]);
+    assert_eq!(report.provenance.seed, 9, "plan seed lands in provenance");
+    assert!(!report.provenance.toolchain.is_empty());
+
+    let reg = temp_path("e2e_registry.jsonl");
+    let _ = std::fs::remove_file(&reg);
+    assert_eq!(registry::append(&reg, &report).unwrap(), 2);
+    let records = registry::read(&reg).unwrap();
+    assert_eq!(records.len(), 2);
+    assert_eq!(records[0].plan, "e2e");
+    assert_eq!(records[0].backend, "pipeline");
+    assert_eq!(records[0].provenance.seed, 9);
+    let rendered = registry::render_report(&records, Some("e2e"));
+    assert!(rendered.contains("plan e2e"), "{rendered}");
+    assert!(rendered.contains("jobs_per_sec"), "{rendered}");
+    let _ = std::fs::remove_file(&reg);
+}
+
+#[test]
+fn bench_report_reads_legacy_flat_documents() {
+    let legacy = r#"{"bench": "pipeline_throughput", "profile": "release", "scale": 0.05, "runs": [{"workload": "primes", "shards": 2, "jobs_per_sec": 120.5, "verified": true}]}"#;
+    let report = BenchReport::parse(legacy).unwrap();
+    assert_eq!(report.bench, "pipeline_throughput");
+    assert_eq!(report.points.len(), 1);
+    let p = &report.points[0];
+    assert_eq!(p.label("workload"), Some("primes"));
+    assert_eq!(p.label("shards"), Some("2"), "legacy numeric shards becomes a label");
+    assert_eq!(p.metric("jobs_per_sec"), Some(120.5));
+    assert_eq!(p.flags.get("verified"), Some(&true));
+}
+
+#[test]
+fn check_bench_alias_forwards_to_the_gate_with_a_notice() {
+    let doc = r#"{"bench": "pipeline_throughput", "profile": "release", "scale": 0.05, "runs": [{"workload": "primes", "shards": 1, "jobs_per_sec": 100}]}"#;
+    let a = temp_path("alias_baseline.json");
+    let b = temp_path("alias_current.json");
+    std::fs::write(&a, doc).unwrap();
+    std::fs::write(&b, doc).unwrap();
+
+    // Deprecated spelling: still gates, exit 0, one-line notice.
+    let out = Command::new(env!("CARGO_BIN_EXE_sfut"))
+        .args(["check-bench", a.to_str().unwrap(), b.to_str().unwrap()])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {stdout}\nstderr: {stderr}");
+    assert!(stderr.contains("deprecated"), "{stderr}");
+    assert!(stdout.contains("bench gate PASSED"), "{stdout}");
+
+    // New spelling: same verdict, no deprecation noise.
+    let out = Command::new(env!("CARGO_BIN_EXE_sfut"))
+        .args(["bench", "gate", "pipeline", a.to_str().unwrap(), b.to_str().unwrap()])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {stdout}\nstderr: {stderr}");
+    assert!(!stderr.contains("deprecated"), "{stderr}");
+    assert!(stdout.contains("bench gate PASSED"), "{stdout}");
+
+    // An undeclared gate target is rejected up front.
+    let out = Command::new(env!("CARGO_BIN_EXE_sfut"))
+        .args(["bench", "gate", "warp", a.to_str().unwrap(), b.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown gate target"), "{stderr}");
+
+    let _ = std::fs::remove_file(&a);
+    let _ = std::fs::remove_file(&b);
+}
+
+#[test]
+fn bench_list_gates_is_machine_readable() {
+    let out =
+        Command::new(env!("CARGO_BIN_EXE_sfut")).args(["bench", "list", "gates"]).output().unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "{stdout}");
+    // ci/check_bench.sh splits these lines on whitespace.
+    assert!(stdout.contains("pipeline BENCH_pipeline.json pipeline_throughput"), "{stdout}");
+    assert!(stdout.contains("ingress BENCH_ingress.json ingress_wire"), "{stdout}");
+    assert!(stdout.contains("executor BENCH_executor.json ablation_overhead"), "{stdout}");
+}
