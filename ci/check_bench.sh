@@ -133,7 +133,19 @@ run_gate() {
 
 # One loop over the plan-declared gate set replaces the old hand-copied
 # per-target case arms (which had drifted to duplicate the invocation).
-GATE_SET="$(cargo run --release --quiet --bin sfut -- bench list gates)"
+# The listing is load-bearing: if it fails (broken build, unparseable
+# gates.plan) or comes back empty, every gate would silently skip — fail
+# the job instead. The explicit guard (rather than trusting `set -e`
+# with the command substitution) also survives this block ever being
+# moved into an `if`/`||` context where -e stops firing.
+if ! GATE_SET="$(cargo run --release --quiet --bin sfut -- bench list gates)"; then
+    echo "::error title=bench-gate::\`sfut bench list gates\` failed — cannot enumerate the gate set, failing instead of skipping every gate"
+    exit 1
+fi
+if [[ -z "${GATE_SET//[[:space:]]/}" ]]; then
+    echo "::error title=bench-gate::\`sfut bench list gates\` returned an empty gate set — ci/plans/gates.plan declares no targets, failing instead of skipping every gate"
+    exit 1
+fi
 MATCHED=0
 while read -r name baseline bench; do
     [[ -z "$name" ]] && continue

@@ -231,6 +231,64 @@
 //! is exactly the text `ok …` line; an `Err` payload is exactly one
 //! line of the failure taxonomy above — both protocols share a single
 //! formatting site, so the grammars cannot drift.
+//!
+//! # Metrics taxonomy
+//!
+//! Every metric the coordinator emits belongs to one of these families
+//! (`sfut lint` rejects names outside them — extend this list *first*
+//! when adding a family):
+//!
+//! * `jobs.<event>` — job lifecycle counters: `jobs.submitted`,
+//!   `jobs.completed`, `jobs.failed`, `jobs.panicked`,
+//!   `jobs.timed_out`, `jobs.retried`, `jobs.rejected`, and the
+//!   `jobs.queue_wait_ms` / `jobs.exec_ms` timers.
+//! * `ingress.<event>` — admission/staging counters and gauges:
+//!   `ingress.submitted`, `ingress.shed`, `ingress.timed_out`,
+//!   `ingress.migrated`, `ingress.queue_depth`,
+//!   `ingress.runner_recovered`.
+//! * `breaker.<workload>.open` — per-workload circuit-breaker gauge
+//!   (1 = open).
+//! * `shard.<id>.<stat>` — per-shard executor and queue stats:
+//!   `run_queue_depth`, `jobs_run`, `migrated_in`, `migrated_out`,
+//!   `steals`, `jobs_migrated_per_steal`, …
+//! * `wire.<stat>` — pool-wide wire/ingress totals: `wire.sessions`,
+//!   `wire.frames_in`, `wire.frames_out`, `wire.read_paused`,
+//!   `wire.protocol_errors`, …
+//! * `wire.<reactor>.<stat>` — the per-reactor shadow of the same
+//!   stats (see "Reactor pool" above).
+//! * `job.<workload>.<mode>` — per-(workload, mode) execution timers.
+//!
+//! # Configuration reference
+//!
+//! Canonical `Config` keys, exactly as accepted by `--set k=v`, config
+//! files, and the serve protocol (`sfut lint` keeps this list, the
+//! `--help` text, and the `config/mod.rs` match in sync):
+//!
+//! * Workload sizing: `primes_n`, `fateman_vars`, `fateman_degree`,
+//!   `big_factor`, `samples`, `warmup`, `scale`.
+//! * Chunking: `chunk_size`, `chunk_policy`.
+//! * Sharding/ingress: `shards`, `shard_parallelism`, `queue_depth`,
+//!   `admission`, `dispatchers`, `migrate_threshold`.
+//! * Fault handling: `deadline_ms`, `retry_max`, `retry_backoff_ms`,
+//!   `breaker_threshold`.
+//! * Engine/runtime: `artifacts_dir`, `use_kernel`, `stack_size`,
+//!   `deque`.
+//! * Wire/ingress backends: `wire`, `poller`, `reactors`, `reuseport`.
+//!
+//! # Correctness tooling
+//!
+//! The lock-free structures under the coordinator (the Chase–Lev deque
+//! feeding every shard's executor, the `Fut` ticket cells) are model-
+//! checked by the deterministic interleaving explorer in
+//! [`crate::testkit::model`] (`cargo test --features model --test
+//! model_check`; failing schedules print a seed replayable with
+//! `SFUT_MODEL_SEED`). The invariants prose can't enforce — SAFETY
+//! comments on every unsafe block, the metric and config lists above,
+//! `err`-line parsing through `testkit::wire` — are enforced by
+//! `sfut lint` as a blocking CI step, and CI's sanitizer job runs Miri
+//! and ThreadSanitizer over the same structures nightly. See the
+//! "Correctness tooling" section in the crate docs ([`crate`]) for the
+//! full tour.
 
 mod ingress;
 mod job;

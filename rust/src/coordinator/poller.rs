@@ -110,6 +110,9 @@ mod sys {
     /// `poll(2)` with EINTR retry.
     pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
         loop {
+            // SAFETY: `fds` is a live, exclusively-borrowed slice of
+            // repr(C) PollFd, so the pointer + length describe exactly
+            // the array poll(2) may read and write for its duration.
             let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, timeout_ms) };
             if rc >= 0 {
                 return Ok(rc as usize);
@@ -257,6 +260,8 @@ impl EpollBackend {
     const MAX_EVENTS: usize = 256;
 
     pub(super) fn new() -> io::Result<EpollBackend> {
+        // SAFETY: no pointer arguments; the returned fd (checked below)
+        // is owned by the EpollBackend until its Drop closes it.
         let epfd = unsafe { esys::epoll_create1(esys::EPOLL_CLOEXEC) };
         if epfd < 0 {
             return Err(io::Error::last_os_error());
@@ -276,6 +281,9 @@ impl EpollBackend {
         // DEL ignores the event argument on any kernel this runs on,
         // but pre-2.6.9 required it non-null — always pass one.
         let mut ev = esys::EpollEvent { events, data: token };
+        // SAFETY: `epfd` is the live epoll fd this backend owns, and
+        // `ev` is a stack value that outlives the call (epoll_ctl only
+        // reads it; the kernel keeps its own copy).
         let rc = unsafe { esys::epoll_ctl(self.epfd, op, fd, &mut ev) };
         if rc < 0 {
             return Err(io::Error::last_os_error());
@@ -301,6 +309,9 @@ impl Poller for EpollBackend {
     fn wait(&mut self, events: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
         events.clear();
         let n = loop {
+            // SAFETY: `buf` is a live Vec of MAX_EVENTS initialized
+            // EpollEvents owned by self — the pointer + capacity bound
+            // exactly the array epoll_wait may fill.
             let rc = unsafe {
                 esys::epoll_wait(
                     self.epfd,
@@ -318,6 +329,9 @@ impl Poller for EpollBackend {
             }
         };
         for i in 0..n {
+            // EpollEvent is repr(packed) on x86: copy the whole struct
+            // out of the buffer first so the field reads below are from
+            // an aligned local, never references into a packed array.
             let ev = self.buf[i];
             let mask = ev.events;
             let hup = mask & (esys::EPOLLERR | esys::EPOLLHUP) != 0;
@@ -338,6 +352,9 @@ impl Poller for EpollBackend {
 #[cfg(target_os = "linux")]
 impl Drop for EpollBackend {
     fn drop(&mut self) {
+        // SAFETY: this backend is the sole owner of `epfd` (created in
+        // `new`, never duplicated or exposed), so closing it here
+        // cannot invalidate anyone else's descriptor.
         unsafe {
             esys::close(self.epfd);
         }

@@ -68,6 +68,9 @@ struct FdGuard(i32);
 #[cfg(target_os = "linux")]
 impl Drop for FdGuard {
     fn drop(&mut self) {
+        // SAFETY: the guard is the fd's sole owner until `forget`
+        // defuses it — on this path ownership was never transferred,
+        // so closing cannot invalidate anyone else's descriptor.
         unsafe {
             sys::close(self.0);
         }
@@ -83,6 +86,9 @@ fn bind_one(addr: &SocketAddr) -> io::Result<TcpListener> {
         SocketAddr::V6(_) => sys::AF_INET6,
     };
     let ty = sys::SOCK_STREAM | sys::SOCK_NONBLOCK | sys::SOCK_CLOEXEC;
+    // SAFETY: no pointer arguments; the returned fd (checked below) is
+    // owned by the FdGuard until listen succeeds and ownership moves
+    // into the TcpListener.
     let fd = unsafe { sys::socket(domain, ty, 0) };
     if fd < 0 {
         return Err(io::Error::last_os_error());
@@ -90,6 +96,10 @@ fn bind_one(addr: &SocketAddr) -> io::Result<TcpListener> {
     let guard = FdGuard(fd);
     let one: i32 = 1;
     for opt in [sys::SO_REUSEADDR, sys::SO_REUSEPORT] {
+        // SAFETY: `one` is a live i32 on this stack frame and the
+        // length argument (4) matches its size; setsockopt only reads
+        // it. Options are set BEFORE bind — SO_REUSEPORT after bind
+        // would not join the listener group.
         let rc = unsafe {
             sys::setsockopt(fd, sys::SOL_SOCKET, opt, &one as *const i32 as *const u8, 4)
         };
@@ -98,15 +108,21 @@ fn bind_one(addr: &SocketAddr) -> io::Result<TcpListener> {
         }
     }
     let sa = sockaddr_bytes(addr);
+    // SAFETY: `sa` is a live byte buffer laid out as sockaddr_in{,6}
+    // (see sockaddr_bytes) and the length passed is its exact size;
+    // bind only reads it.
     let rc = unsafe { sys::bind(fd, sa.as_ptr(), sa.len() as u32) };
     if rc < 0 {
         return Err(io::Error::last_os_error());
     }
+    // SAFETY: no pointer arguments; `fd` is our guarded socket.
     let rc = unsafe { sys::listen(fd, 1024) };
     if rc < 0 {
         return Err(io::Error::last_os_error());
     }
     std::mem::forget(guard);
+    // SAFETY: the guard was just defused, so `fd` has exactly one owner
+    // again — the TcpListener takes over closing it.
     Ok(unsafe { TcpListener::from_raw_fd(fd) })
 }
 

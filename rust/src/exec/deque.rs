@@ -180,6 +180,8 @@ impl WorkerDeque {
     pub unsafe fn push(&self, job: Job) {
         match self {
             WorkerDeque::Locked(d) => d.push(job),
+            // SAFETY: forwards our own owner-only contract (above) to
+            // the Chase–Lev owner end.
             WorkerDeque::ChaseLev(d) => unsafe { d.push(job) },
         }
     }
@@ -192,6 +194,8 @@ impl WorkerDeque {
     pub unsafe fn pop(&self) -> Option<Job> {
         match self {
             WorkerDeque::Locked(d) => d.pop(),
+            // SAFETY: forwards our own owner-only contract (above) to
+            // the Chase–Lev owner end.
             WorkerDeque::ChaseLev(d) => unsafe { d.pop() },
         }
     }
@@ -223,6 +227,9 @@ impl WorkerDeque {
                 let (first, rest) = d.steal_half(MAX_STEAL_BATCH)?;
                 let moved = rest.len();
                 for job in rest {
+                    // SAFETY: the caller owns `dest` (our contract
+                    // above), so pushing onto its owner end is theirs
+                    // to do.
                     unsafe { dest.push(job) };
                 }
                 Some((first, moved))
@@ -239,6 +246,8 @@ impl WorkerDeque {
                     match d.steal() {
                         Some(job) if first.is_none() => first = Some(job),
                         Some(job) => {
+                            // SAFETY: the caller owns `dest` (our
+                            // contract above).
                             unsafe { dest.push(job) };
                             moved += 1;
                         }
@@ -271,6 +280,8 @@ impl WorkerDeque {
     pub unsafe fn drain(&self) -> Vec<Job> {
         match self {
             WorkerDeque::Locked(d) => d.drain(),
+            // SAFETY: forwards our own owner-only contract (above) to
+            // the Chase–Lev owner end.
             WorkerDeque::ChaseLev(d) => unsafe { d.drain() },
         }
     }
@@ -391,16 +402,28 @@ impl Buffer {
         self.mask + 1
     }
 
-    /// Write a slot. Caller guarantees the slot is dead (outside the
-    /// live `[top, bottom)` window) and that it is the owner.
+    /// Write a slot.
+    ///
+    /// # Safety
+    ///
+    /// Caller guarantees the slot is dead (outside the live
+    /// `[top, bottom)` window) and that it is the owner.
     unsafe fn write(&self, index: u64, job: MaybeUninit<Job>) {
-        *self.slots[(index & self.mask) as usize].get() = job;
+        // SAFETY: the slot is dead (caller contract), so no other thread
+        // interprets these bytes while we overwrite them.
+        unsafe { *self.slots[(index & self.mask) as usize].get() = job };
     }
 
-    /// Read a slot's bytes. May race a writer; the caller must only
-    /// `assume_init` the result after winning the claiming CAS.
+    /// Read a slot's bytes.
+    ///
+    /// # Safety
+    ///
+    /// May race a writer; the caller must only `assume_init` the result
+    /// after winning the claiming CAS.
     unsafe fn read(&self, index: u64) -> MaybeUninit<Job> {
-        std::ptr::read(self.slots[(index & self.mask) as usize].get())
+        // SAFETY: reading MaybeUninit bytes is always defined; the
+        // caller contract defers interpretation until the CAS is won.
+        unsafe { std::ptr::read(self.slots[(index & self.mask) as usize].get()) }
     }
 }
 
@@ -485,10 +508,14 @@ impl ChaseLevDeque {
         let b = self.bottom.load(Ordering::Relaxed);
         let t = self.top.load(Ordering::Acquire);
         let mut buf = self.buffer.load(Ordering::Relaxed);
+        // SAFETY: the owner's buffer pointer is always live (only the
+        // owner itself replaces it, in `grow`).
         if b.wrapping_sub(t) >= unsafe { (*buf).capacity() } {
             self.grow(t, b);
             buf = self.buffer.load(Ordering::Relaxed);
         }
+        // SAFETY: owner-only (our contract above) and slot `b` is
+        // outside the live window until the bottom store below.
         unsafe { (*buf).write(b, MaybeUninit::new(job)) };
         // Publish the slot before the index: a thief that observes the
         // new bottom (Acquire) must observe the written job.
@@ -516,11 +543,14 @@ impl ChaseLevDeque {
             self.bottom.store(t, Ordering::Relaxed);
             return None;
         }
+        // SAFETY: owner's buffer pointer is live; the bytes are only
+        // interpreted below once the element is provably ours.
         let job = unsafe { (*buf).read(b) };
         if len > 0 {
-            // More than one element: the bottom one is ours without
-            // synchronization (thieves are fenced off by the check
-            // above).
+            // SAFETY: more than one element — the bottom one is ours
+            // without synchronization (thieves are fenced off by the
+            // decremented bottom + SeqCst fence above), so the slot
+            // holds an initialized Job that no thief can claim.
             return Some(unsafe { job.assume_init() });
         }
         // Exactly one element: race thieves for it on `top`.
@@ -530,6 +560,8 @@ impl ChaseLevDeque {
             .is_ok();
         self.bottom.store(t.wrapping_add(1), Ordering::Relaxed);
         if won {
+            // SAFETY: the top CAS claimed the last element for us; the
+            // slot was initialized by the push that published it.
             Some(unsafe { job.assume_init() })
         } else {
             // A thief claimed it; our read is discarded uninterpreted.
@@ -553,12 +585,18 @@ impl ChaseLevDeque {
         // buffer under us.
         let _pin = self.pin();
         let buf = self.buffer.load(Ordering::SeqCst);
+        // SAFETY: the pin above keeps this buffer out of limbo
+        // reclamation for the whole dereference window (see `retire`);
+        // the bytes are interpreted only after the CAS below succeeds.
         let job = unsafe { (*buf).read(t) };
         if self
             .top
             .compare_exchange(t, t.wrapping_add(1), Ordering::SeqCst, Ordering::Relaxed)
             .is_ok()
         {
+            // SAFETY: winning the top CAS transfers ownership of slot
+            // `t` to us; the push that made it visible (Release fence →
+            // Acquire bottom load) initialized it.
             Some(unsafe { job.assume_init() })
         } else {
             // Lost to the owner or another thief: the bytes we read are
@@ -585,6 +623,7 @@ impl ChaseLevDeque {
     /// Owner-only; same contract as [`ChaseLevDeque::push`].
     pub unsafe fn drain(&self) -> Vec<Job> {
         let mut out = Vec::new();
+        // SAFETY: forwards our own owner-only contract (above) to pop.
         while let Some(job) = unsafe { self.pop() } {
             out.push(job);
         }
@@ -597,10 +636,15 @@ impl ChaseLevDeque {
     /// one will read.
     fn grow(&self, t: u64, b: u64) {
         let old = self.buffer.load(Ordering::Relaxed);
+        // SAFETY: grow is owner-only, so `old` is the live buffer.
         let new_cap = (unsafe { (*old).capacity() } as usize) * 2;
         let new = Buffer::alloc(new_cap);
         let mut i = t;
         while i != b {
+            // SAFETY: `old` stays live until `retire` below; `new` is
+            // private to us until the SeqCst publish; reads are raw
+            // bit-copies never interpreted here (stale-`t` slots are
+            // copied but unreachable).
             unsafe { (*new).write(i, (*old).read(i)) };
             i = i.wrapping_add(1);
         }
@@ -619,6 +663,10 @@ impl ChaseLevDeque {
         limbo.push(old);
         if self.pins.load(Ordering::SeqCst) == 0 {
             for p in limbo.drain(..) {
+                // SAFETY: every limbo pointer came from Buffer::alloc
+                // (Box::into_raw) and was unpublished before parking;
+                // pins == 0 under the SeqCst argument above means no
+                // thief can still hold a reference.
                 unsafe { drop(Box::from_raw(p)) };
             }
         }
@@ -638,8 +686,11 @@ impl Drop for ChaseLevDeque {
         // limbo.
         while unsafe { self.pop() }.is_some() {}
         let buf = *self.buffer.get_mut();
+        // SAFETY: &mut self — the live buffer pointer came from
+        // Buffer::alloc and nothing can still reference it.
         unsafe { drop(Box::from_raw(buf)) };
         for p in self.limbo.get_mut().unwrap().drain(..) {
+            // SAFETY: likewise for parked buffers — no thief exists.
             unsafe { drop(Box::from_raw(p)) };
         }
     }

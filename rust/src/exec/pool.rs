@@ -356,6 +356,7 @@ impl Inner {
                     // deque, so `pop` returns exactly it unless a thief
                     // already claimed it (in which case it is in flight,
                     // same as a pre-shutdown submission).
+                    // SAFETY: same owner-only argument as the push above.
                     if self.injector.is_shutdown() && unsafe { d.pop() }.is_some() {
                         LocalPush::Dropped
                     } else {

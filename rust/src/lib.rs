@@ -155,12 +155,53 @@
 //!   most one err frame and a clean close under every poller backend,
 //!   and `rust/tests/reactor_pool.rs` pins the fanout, pinning, and
 //!   drain invariants.
+//!
+//! ## Correctness tooling
+//!
+//! The lock-free core is held to its invariants by three in-tree
+//! mechanisms, none of which require external dependencies:
+//!
+//! * **Deterministic model checking** ([`testkit::model`]) — a vendored
+//!   "loom-lite": shim atomics (`ModelAtomicU64`, `ModelAtomicUsize`,
+//!   `model_fence`) that compile straight to `std::sync::atomic`
+//!   normally, but under `--features model` route every load / store /
+//!   CAS / fence through a virtual scheduler that explores thread
+//!   interleavings (bounded-preemption DFS plus seeded random
+//!   schedules). The Chase–Lev deque (grow-under-steal, wraparound
+//!   indices, pin-based buffer retirement) and the `Fut`
+//!   EMPTY→RUNNING→READY/PANICKED machine are ported onto the shims and
+//!   checked for job loss, duplication, use-after-free, and
+//!   exactly-once callback delivery by `cargo test --features model
+//!   --test model_check`. A failing schedule prints a replayable seed;
+//!   pin it with `SFUT_MODEL_SEED=<seed>` to reproduce the exact
+//!   interleaving byte-for-byte.
+//! * **Static invariant lint** ([`lint`], `sfut lint`) — a
+//!   line-oriented pass over the crate's own sources enforcing that
+//!   every `unsafe` carries a `SAFETY:` justification, metric names
+//!   match the documented taxonomy, `Config` keys stay documented in
+//!   `--help` and the coordinator docs, and integration tests parse
+//!   `err` lines through `testkit::wire` instead of ad-hoc string
+//!   matching. CI runs it as a blocking step; deliberate exceptions go
+//!   in `ci/lint_allowlist.txt`.
+//! * **Sanitizer CI** — nightly Miri over the deque and future unit
+//!   suites (`cargo miri test --lib -- exec::deque susp::future`) and
+//!   ThreadSanitizer (`RUSTFLAGS=-Zsanitizer=thread`) over the
+//!   cross-thread deque stress test under both `SFUT_DEQUE` kinds, as
+//!   named steps in `.github/workflows/ci.yml`.
+//!
+//! The crate-wide `#![deny(unsafe_op_in_unsafe_fn)]` below means every
+//! unsafe operation — even inside an `unsafe fn` — sits in an explicit
+//! `unsafe {}` block with its own `// SAFETY:` comment for the lint to
+//! check.
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod bench_harness;
 pub mod bigint;
 pub mod config;
 pub mod coordinator;
 pub mod exec;
+pub mod lint;
 pub mod logging;
 pub mod metrics;
 pub mod par;

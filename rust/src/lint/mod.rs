@@ -1,0 +1,251 @@
+//! `sfut lint` — repo-invariant static analysis for this crate's own
+//! sources.
+//!
+//! A small line-oriented pass (std only, no external parser) that walks
+//! `rust/src/**/*.rs` and `rust/tests/*.rs` and enforces the invariants
+//! the codebase documents but the compiler cannot check:
+//!
+//! * **`unsafe-safety`** — every `unsafe` block / `unsafe fn` /
+//!   `unsafe impl` in non-test source must be justified where it
+//!   stands: a trailing `// SAFETY:` on the same line, an immediately
+//!   preceding comment block containing `SAFETY:` (attributes and
+//!   adjacent `unsafe impl` lines may sit between — one argument may
+//!   cover a `Send`/`Sync` pair), or, for `unsafe fn`, a doc block with
+//!   a `# Safety` section.
+//! * **`metrics-taxonomy`** — every metric name literal passed to
+//!   `.counter(` / `.gauge(` / `.timer(` / `.histogram(` (including
+//!   `&format!(..)` forms, whose `{..}` placeholders are treated as
+//!   wildcard segments) must match the documented taxonomy (see
+//!   "Metrics taxonomy" in `coordinator/mod.rs`): `jobs.<event>`,
+//!   `ingress.<event>`, `breaker.<workload>.open`, `shard.<id>.<stat>`,
+//!   `wire.<stat>`, `wire.<reactor>.<stat>`, `job.<workload>.<mode>`.
+//! * **`config-keys`** — every `Config` key (the canonical first
+//!   literal of each `set()` match arm in `config/mod.rs`) must appear
+//!   in both the `--help` text (`main.rs`) and the `coordinator/mod.rs`
+//!   module docs, so the three never drift.
+//! * **`err-line`** — integration tests must not match wire error
+//!   lines with ad-hoc string tests (`starts_with("err..`,
+//!   `== format!("err..` and friends); they go through
+//!   `testkit::wire::ErrLine` / `parse_err_line`, the single parser the
+//!   protocol owns.
+//!
+//! In-crate `#[cfg(test)]` modules are exempt from the source rules
+//! (unit tests exercise raw corners deliberately); the `err-line` rule
+//! applies to `rust/tests/` only.
+//!
+//! Deliberate exceptions live in `ci/lint_allowlist.txt`, one per line:
+//! `<rule> <path-suffix> <message-substring|*>`. Findings print
+//! human-readable by default, one JSON object per line with `--json`;
+//! the CLI exits non-zero if any finding survives the allowlist.
+
+mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule id (`unsafe-safety`, `metrics-taxonomy`, `config-keys`,
+    /// `err-line`).
+    pub rule: &'static str,
+    /// Repo-relative path.
+    pub file: String,
+    /// 1-based line (0 for file-level findings).
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    /// `rule:file:line: message` — the human-readable form.
+    pub fn render(&self) -> String {
+        format!("{}:{}:{}: {}", self.rule, self.file, self.line, self.message)
+    }
+
+    /// One JSON object (hand-serialized; findings are plain strings).
+    pub fn render_json(&self) -> String {
+        format!(
+            "{{\"rule\":\"{}\",\"file\":\"{}\",\"line\":{},\"message\":\"{}\"}}",
+            json_escape(self.rule),
+            json_escape(&self.file),
+            self.line,
+            json_escape(&self.message)
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Deliberate exceptions: `<rule> <path-suffix> <message-substring|*>`
+/// per line; `#` starts a comment.
+pub struct Allowlist {
+    entries: Vec<(String, String, String)>,
+}
+
+impl Allowlist {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = match fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+            Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+        };
+        Ok(Self::parse(&text))
+    }
+
+    pub fn parse(text: &str) -> Self {
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.splitn(3, char::is_whitespace);
+            if let (Some(rule), Some(path), Some(token)) =
+                (parts.next(), parts.next(), parts.next())
+            {
+                entries.push((rule.to_string(), path.to_string(), token.trim().to_string()));
+            }
+        }
+        Allowlist { entries }
+    }
+
+    pub fn matches(&self, f: &Finding) -> bool {
+        self.entries.iter().any(|(rule, path, token)| {
+            rule == f.rule
+                && f.file.ends_with(path.as_str())
+                && (token == "*" || f.message.contains(token.as_str()))
+        })
+    }
+}
+
+/// Run every rule over the repo rooted at `root` (the directory holding
+/// `rust/src`), applying the allowlist at `ci/lint_allowlist.txt`.
+/// Returns surviving findings, sorted by file and line.
+pub fn run(root: &Path) -> Result<Vec<Finding>> {
+    let src_root = root.join("rust/src");
+    ensure!(
+        src_root.is_dir(),
+        "rust/src not found under {} — run `sfut lint` from the repo root",
+        root.display()
+    );
+    let mut files = Vec::new();
+    walk(&src_root, &mut files)?;
+    let tests_root = root.join("rust/tests");
+    if tests_root.is_dir() {
+        walk(&tests_root, &mut files)?;
+    }
+    files.sort();
+
+    let mut findings = Vec::new();
+    for file in &files {
+        let text =
+            fs::read_to_string(file).with_context(|| format!("reading {}", file.display()))?;
+        let lines: Vec<&str> = text.lines().collect();
+        let rel = file
+            .strip_prefix(root)
+            .unwrap_or(file)
+            .to_string_lossy()
+            .replace('\\', "/");
+        if rel.starts_with("rust/tests/") {
+            findings.extend(rules::errline_rule(&rel, &lines));
+        } else {
+            let skip = rules::cfg_test_start(&lines);
+            findings.extend(rules::unsafe_rule(&rel, &lines, skip));
+            findings.extend(rules::metrics_rule(&rel, &lines, skip));
+        }
+    }
+
+    let config_src = fs::read_to_string(root.join("rust/src/config/mod.rs"))
+        .context("reading rust/src/config/mod.rs")?;
+    let main_src =
+        fs::read_to_string(root.join("rust/src/main.rs")).context("reading rust/src/main.rs")?;
+    let coord_src = fs::read_to_string(root.join("rust/src/coordinator/mod.rs"))
+        .context("reading rust/src/coordinator/mod.rs")?;
+    findings.extend(rules::config_rule(&config_src, &main_src, &coord_src));
+
+    let allow = Allowlist::load(&root.join("ci/lint_allowlist.txt"))?;
+    let mut findings: Vec<Finding> =
+        findings.into_iter().filter(|f| !allow.matches(f)).collect();
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(findings)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allowlist_parses_and_matches() {
+        let allow = Allowlist::parse(
+            "# comment\n\nunsafe-safety src/foo.rs raw fd\nmetrics-taxonomy src/bar.rs *\n",
+        );
+        let f = Finding {
+            rule: "unsafe-safety",
+            file: "rust/src/foo.rs".into(),
+            line: 3,
+            message: "unsafe without SAFETY comment (raw fd)".into(),
+        };
+        assert!(allow.matches(&f));
+        let g = Finding { rule: "metrics-taxonomy", file: "rust/src/bar.rs".into(), line: 1, message: "anything".into() };
+        assert!(allow.matches(&g));
+        let h = Finding { rule: "err-line", file: "rust/src/foo.rs".into(), line: 1, message: "raw fd".into() };
+        assert!(!allow.matches(&h));
+    }
+
+    #[test]
+    fn json_rendering_escapes() {
+        let f = Finding {
+            rule: "err-line",
+            file: "rust/tests/a.rs".into(),
+            line: 7,
+            message: "bad \"quote\"".into(),
+        };
+        assert_eq!(
+            f.render_json(),
+            "{\"rule\":\"err-line\",\"file\":\"rust/tests/a.rs\",\"line\":7,\
+             \"message\":\"bad \\\"quote\\\"\"}"
+        );
+    }
+
+    #[test]
+    fn the_tree_lints_clean() {
+        // The repo's own invariant: the committed tree has no findings
+        // (CI runs the same thing as a blocking step). Skip quietly if
+        // the test is executed from an unexpected cwd.
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+        let findings = run(root).expect("lint run");
+        assert!(
+            findings.is_empty(),
+            "lint findings in tree:\n{}",
+            findings.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

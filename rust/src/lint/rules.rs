@@ -1,0 +1,431 @@
+//! The individual lint rules. All of them are line-oriented: a tiny
+//! lexical pass (string contents blanked, trailing `//` comments cut)
+//! is enough for the invariants checked here, and keeps the linter
+//! dependency-free. Note the linter lints its own sources too — rule
+//! needles are assembled at runtime (`format!(".{m}(")`) precisely so
+//! they never appear verbatim in this file's code.
+
+use super::Finding;
+
+/// `"` as an escape, so this file's own lexical pass never trips over
+/// a raw quote inside a char literal.
+const QUOTE: char = '\u{22}';
+
+/// Index of the first `#[cfg(test)]` line (in-crate unit-test modules
+/// run to EOF in this codebase); source rules stop there.
+pub(crate) fn cfg_test_start(lines: &[&str]) -> usize {
+    lines
+        .iter()
+        .position(|l| l.trim() == "#[cfg(test)]")
+        .unwrap_or(lines.len())
+}
+
+/// The line with string contents blanked (quotes kept) and any
+/// trailing `//` comment removed — the "is this real code?" view.
+pub(crate) fn code_part(line: &str) -> String {
+    let mut out = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_str = false;
+    let mut escape = false;
+    while let Some(c) = chars.next() {
+        if in_str {
+            if escape {
+                escape = false;
+            } else if c == '\\' {
+                escape = true;
+            } else if c == QUOTE {
+                in_str = false;
+                out.push(QUOTE);
+            }
+            continue;
+        }
+        if c == QUOTE {
+            in_str = true;
+            out.push(QUOTE);
+        } else if c == '/' && chars.peek() == Some(&'/') {
+            break;
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+fn contains_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = code[from..].find(word) {
+        let start = from + p;
+        let end = start + word.len();
+        let before_ok = start == 0
+            || !(bytes[start - 1].is_ascii_alphanumeric() || bytes[start - 1] == b'_');
+        let after_ok = end == code.len()
+            || !(bytes[end].is_ascii_alphanumeric() || bytes[end] == b'_');
+        if before_ok && after_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Rule `unsafe-safety`: see the module docs for the acceptance forms.
+pub(crate) fn unsafe_rule(file: &str, lines: &[&str], skip_from: usize) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for i in 0..lines.len().min(skip_from) {
+        if !contains_word(&code_part(lines[i]), "unsafe") {
+            continue;
+        }
+        if lines[i].contains("SAFETY:") {
+            // Trailing justification on the line itself.
+            continue;
+        }
+        if covered_above(lines, i) {
+            continue;
+        }
+        out.push(Finding {
+            rule: "unsafe-safety",
+            file: file.to_string(),
+            line: i + 1,
+            message: format!(
+                "`unsafe` without an immediately preceding `// SAFETY:` comment: `{}`",
+                lines[i].trim()
+            ),
+        });
+    }
+    out
+}
+
+/// Walk upward from line `i`: attributes are transparent, an adjacent
+/// `unsafe` line passes coverage along (one argument may cover a
+/// `Send`/`Sync` impl pair), and the first comment block decides —
+/// accepted iff it mentions `SAFETY:` (or `# Safety`, the doc-section
+/// form for `unsafe fn`).
+fn covered_above(lines: &[&str], mut i: usize) -> bool {
+    loop {
+        if i == 0 {
+            return false;
+        }
+        let mut k = i - 1;
+        while lines[k].trim().starts_with("#[") || lines[k].trim().starts_with("#![") {
+            if k == 0 {
+                return false;
+            }
+            k -= 1;
+        }
+        let t = lines[k].trim();
+        if t.starts_with("//") {
+            let mut j = k;
+            while j > 0 && lines[j - 1].trim().starts_with("//") {
+                j -= 1;
+            }
+            return lines[j..=k]
+                .iter()
+                .any(|l| l.contains("SAFETY:") || l.contains("# Safety"));
+        }
+        if contains_word(&code_part(lines[k]), "unsafe") {
+            i = k;
+            continue;
+        }
+        return false;
+    }
+}
+
+/// The documented metric-name families (`*` = one arbitrary segment).
+const FAMILIES: &[&[&str]] = &[
+    &["jobs", "*"],
+    &["ingress", "*"],
+    &["breaker", "*", "open"],
+    &["shard", "*", "*"],
+    &["wire", "*"],
+    &["wire", "*", "*"],
+    &["job", "*", "*"],
+];
+
+fn name_matches_taxonomy(name: &str) -> bool {
+    let segs: Vec<&str> = name.split('.').collect();
+    FAMILIES.iter().any(|fam| {
+        fam.len() == segs.len()
+            && fam
+                .iter()
+                .zip(&segs)
+                .all(|(f, s)| *f == "*" || *s == "*" || f == s)
+    })
+}
+
+/// `format!` placeholders (`{..}`) become `*` wildcard text.
+fn wildcard_placeholders(name: &str) -> String {
+    let mut out = String::new();
+    let mut depth = 0usize;
+    for c in name.chars() {
+        match c {
+            '{' => {
+                if depth == 0 {
+                    out.push('*');
+                }
+                depth += 1;
+            }
+            '}' => depth = depth.saturating_sub(1),
+            c if depth == 0 => out.push(c),
+            _ => {}
+        }
+    }
+    out
+}
+
+/// The first string literal's contents after byte `from`, if any.
+fn first_string_literal(raw: &str, from: usize) -> Option<String> {
+    let rest = &raw[from..];
+    let start = rest.find(QUOTE)? + 1;
+    let mut out = String::new();
+    let mut escape = false;
+    for c in rest[start..].chars() {
+        if escape {
+            escape = false;
+            out.push(c);
+        } else if c == '\\' {
+            escape = true;
+        } else if c == QUOTE {
+            return Some(out);
+        } else {
+            out.push(c);
+        }
+    }
+    None
+}
+
+/// Rule `metrics-taxonomy`: every literal metric name registered via a
+/// `.counter(`/`.gauge(`/`.timer(`/`.histogram(` method call (incl.
+/// `&format!(..)` forms) must match a documented family.
+pub(crate) fn metrics_rule(file: &str, lines: &[&str], skip_from: usize) -> Vec<Finding> {
+    let needles: Vec<String> = ["counter", "gauge", "timer", "histogram"]
+        .iter()
+        .map(|m| format!(".{m}("))
+        .collect();
+    let mut out = Vec::new();
+    for i in 0..lines.len().min(skip_from) {
+        let raw = lines[i];
+        let code = code_part(raw);
+        for needle in &needles {
+            if !code.contains(needle.as_str()) {
+                continue;
+            }
+            let Some(pos) = raw.find(needle.as_str()) else { continue };
+            // A call with no literal on the line (dynamic name or
+            // wrapped argument) is out of this rule's static reach.
+            let Some(name) = first_string_literal(raw, pos + needle.len()) else {
+                continue;
+            };
+            let normalized = wildcard_placeholders(&name);
+            if !name_matches_taxonomy(&normalized) {
+                out.push(Finding {
+                    rule: "metrics-taxonomy",
+                    file: file.to_string(),
+                    line: i + 1,
+                    message: format!(
+                        "metric name `{name}` does not match the documented taxonomy \
+                         (jobs.* / ingress.* / breaker.*.open / shard.*.* / wire.* / \
+                         wire.*.* / job.*.*)"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Rule `err-line`: integration tests must parse wire error lines via
+/// `testkit::wire` instead of ad-hoc string matching.
+pub(crate) fn errline_rule(file: &str, lines: &[&str]) -> Vec<Finding> {
+    let needles: Vec<String> = [
+        format!("starts_with({QUOTE}err"),
+        format!("contains({QUOTE}err"),
+        format!("== {QUOTE}err"),
+        format!("== format!({QUOTE}err"),
+    ]
+    .into();
+    let mut out = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        if raw.trim().starts_with("//") {
+            continue;
+        }
+        if raw.contains("parse_err_line") || raw.contains("ErrLine") {
+            continue;
+        }
+        if needles.iter().any(|n| raw.contains(n.as_str())) {
+            out.push(Finding {
+                rule: "err-line",
+                file: file.to_string(),
+                line: i + 1,
+                message: "ad-hoc err-line string match; parse it with \
+                          testkit::wire::parse_err_line / ErrLine"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Canonical `Config` keys: the first literal of every
+/// `"key" | "dotted.alias" =>` match arm in `config/mod.rs` (the dotted
+/// second literal is what distinguishes the key table from other
+/// string matches).
+pub(crate) fn config_keys(config_src: &str) -> Vec<String> {
+    let mut keys: Vec<String> = Vec::new();
+    for line in config_src.lines() {
+        let t = line.trim();
+        if !t.starts_with(QUOTE) {
+            continue;
+        }
+        let Some(end) = t[1..].find(QUOTE) else { continue };
+        let key = &t[1..1 + end];
+        let rest = t[2 + end..].trim_start();
+        let Some(rest) = rest.strip_prefix('|') else { continue };
+        let rest = rest.trim_start();
+        if !rest.starts_with(QUOTE) {
+            continue;
+        }
+        let Some(end2) = rest[1..].find(QUOTE) else { continue };
+        let alias = &rest[1..1 + end2];
+        if alias.contains('.') && !keys.iter().any(|k| k == key) {
+            keys.push(key.to_string());
+        }
+    }
+    keys
+}
+
+/// Rule `config-keys`: every canonical key must appear in the `--help`
+/// text (anywhere in `main.rs`) and in the `coordinator/mod.rs` module
+/// docs (`//!` lines).
+pub(crate) fn config_rule(config_src: &str, main_src: &str, coord_src: &str) -> Vec<Finding> {
+    let keys = config_keys(config_src);
+    let coord_docs: String = coord_src
+        .lines()
+        .filter(|l| l.trim_start().starts_with("//!"))
+        .collect::<Vec<_>>()
+        .join("\n");
+    let mut out = Vec::new();
+    for key in keys {
+        if !main_src.contains(&key) {
+            out.push(Finding {
+                rule: "config-keys",
+                file: "rust/src/main.rs".to_string(),
+                line: 0,
+                message: format!("config key `{key}` is missing from the --help text"),
+            });
+        }
+        if !coord_docs.contains(&key) {
+            out.push(Finding {
+                rule: "config-keys",
+                file: "rust/src/coordinator/mod.rs".to_string(),
+                line: 0,
+                message: format!(
+                    "config key `{key}` is missing from the module docs configuration \
+                     reference"
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn code_part_blanks_strings_and_cuts_comments() {
+        assert_eq!(code_part(r#"let x = "unsafe"; // unsafe note"#), r#"let x = ""; "#);
+        assert_eq!(code_part("unsafe { x() }"), "unsafe { x() }");
+    }
+
+    #[test]
+    fn unsafe_rule_accepts_justified_forms() {
+        let lines = vec![
+            "// SAFETY: fd is owned.",
+            "unsafe { close(fd) };",
+            "let x = unsafe { y() }; // SAFETY: y upholds z.",
+            "/// Docs.",
+            "///",
+            "/// # Safety",
+            "///",
+            "/// Owner-only.",
+            "#[inline]",
+            "pub unsafe fn push(&self) {}",
+            "// SAFETY: both impls: the pin protocol serializes access.",
+            "unsafe impl Send for T {}",
+            "unsafe impl Sync for T {}",
+        ];
+        assert!(unsafe_rule("f.rs", &lines, lines.len()).is_empty());
+    }
+
+    #[test]
+    fn unsafe_rule_flags_bare_blocks() {
+        let lines = vec!["let fd = open();", "unsafe { close(fd) };"];
+        let findings = unsafe_rule("f.rs", &lines, lines.len());
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].line, 2);
+        assert_eq!(findings[0].rule, "unsafe-safety");
+    }
+
+    #[test]
+    fn unsafe_rule_ignores_strings_comments_and_tests() {
+        let lines = vec![
+            r#"let s = "unsafe";"#,
+            "// unsafe in a comment",
+            "#[cfg(test)]",
+            "unsafe { never_checked() };",
+        ];
+        assert!(unsafe_rule("f.rs", &lines, cfg_test_start(&lines)).is_empty());
+    }
+
+    #[test]
+    fn metrics_rule_checks_taxonomy() {
+        let good = vec![
+            r#"m.counter("jobs.completed").inc();"#,
+            r#"m.gauge(&format!("shard.{sid}.queue_depth")).set(1);"#,
+            r#"m.gauge(&format!("breaker.{workload}.open")).set(1);"#,
+            r#"m.counter(&format!("wire.{r}.frames_in"));"#,
+            r#"m.timer(&format!("job.{}.{}", w, mode));"#,
+            r#"m.counter(dynamic_name).inc();"#,
+        ];
+        assert!(metrics_rule("f.rs", &good, good.len()).is_empty());
+        let bad = vec![r#"m.counter("queue.depth").inc();"#];
+        let findings = metrics_rule("f.rs", &bad, bad.len());
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].message.contains("queue.depth"));
+    }
+
+    #[test]
+    fn errline_rule_flags_adhoc_matching() {
+        let lines = vec![
+            r#"assert!(line.starts_with("err timeout"));"#,
+            r#"assert!(parse_err_line(&line) == Some(ErrLine::Timeout));"#,
+            r#"let ok = l == format!("err closed ticket={id}");"#,
+        ];
+        let findings = errline_rule("rust/tests/t.rs", &lines);
+        assert_eq!(findings.len(), 2);
+        assert_eq!(findings[0].line, 1);
+        assert_eq!(findings[1].line, 3);
+    }
+
+    #[test]
+    fn config_keys_extracted_from_match_arms() {
+        let src = r#"
+            match key {
+                "primes_n" | "primes.n" => {}
+                "shards" | "coordinator.shards" => {}
+                "framed" | "frame" | "binary" => {}
+            }
+        "#;
+        assert_eq!(config_keys(src), vec!["primes_n".to_string(), "shards".to_string()]);
+    }
+
+    #[test]
+    fn config_rule_reports_both_sides() {
+        let config = r#""alpha_key" | "a.b" => {}"#;
+        let findings = config_rule(config, "no mention", "//! no mention either");
+        assert_eq!(findings.len(), 2);
+        assert!(findings.iter().all(|f| f.message.contains("alpha_key")));
+    }
+}

@@ -23,6 +23,11 @@
 //! sfut bench report [plan]                 diff registry cells across commits
 //! sfut check-bench <a> <b>                 deprecated alias for
 //!                                          `sfut bench gate <target> <a> <b>`
+//! sfut lint [--json]                       repo-invariant static analysis over
+//!                                          rust/src + rust/tests (SAFETY comments,
+//!                                          metric-name taxonomy, config-key docs,
+//!                                          err-line hygiene); exits non-zero on
+//!                                          findings
 //! ```
 //!
 //! options:
@@ -71,6 +76,7 @@ struct Cli {
     threshold: Option<f64>,
     latency_threshold: Option<f64>,
     latency_strict: bool,
+    json: bool,
 }
 
 fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
@@ -83,6 +89,7 @@ fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
         threshold: None,
         latency_threshold: None,
         latency_strict: false,
+        json: false,
     };
     while let Some(arg) = args.next() {
         match arg.as_str() {
@@ -135,6 +142,9 @@ fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
             "--latency-strict" => {
                 cli.latency_strict = true;
             }
+            "--json" => {
+                cli.json = true;
+            }
             "--latency-threshold" => {
                 let v = args.next().context("--latency-threshold needs a number > 0")?;
                 let t: f64 = v
@@ -168,6 +178,9 @@ fn parse_args(mut args: impl Iterator<Item = String>) -> Result<Cli> {
     }
     if cli.latency_strict && !gate_command {
         bail!("--latency-strict only applies to bench gate / check-bench");
+    }
+    if cli.json && cli.command != "lint" {
+        bail!("--json only applies to lint");
     }
     Ok(cli)
 }
@@ -525,6 +538,28 @@ fn real_main() -> Result<()> {
                 cli.latency_strict || cli.latency_threshold.is_some(),
             )
         }
+        "lint" => {
+            if !cli.positional.is_empty() {
+                bail!("usage: sfut lint [--json]");
+            }
+            let root = std::env::current_dir().context("resolving cwd for sfut lint")?;
+            let findings = stream_future::lint::run(&root)?;
+            for f in &findings {
+                if cli.json {
+                    println!("{}", f.render_json());
+                } else {
+                    println!("{}", f.render());
+                }
+            }
+            if findings.is_empty() {
+                if !cli.json {
+                    println!("sfut lint: clean");
+                }
+                Ok(())
+            } else {
+                bail!("sfut lint: {} finding(s)", findings.len())
+            }
+        }
         "info" => {
             let cfg = load_config(&cli)?;
             println!("config: {cfg:#?}");
@@ -566,12 +601,19 @@ fn real_main() -> Result<()> {
                  \x20 bench list [gates]      list committed plans and gate targets\n\
                  \x20 bench report [plan]     diff registry cells across commits\n\
                  \x20 check-bench <a> <b>     deprecated alias for `bench gate`\n\
+                 \x20 lint [--json]           repo-invariant static analysis \
+                 (SAFETY comments, metric taxonomy, config-key docs, err-line hygiene)\n\
                  \n\
                  options: --config <file> | --set k=v | --scale <f> | --samples <n> | \
                  --no-kernel | --queue-depth <n> | --admission <block|shed|timeout(MS)> | \
                  --deque <chase_lev|locked> | --wire <framed|text> | \
                  --poller <poll|epoll|auto> | --reactors <n> | \
-                 --threshold <f> | --latency-threshold <f> | --latency-strict\n\
+                 --threshold <f> | --latency-threshold <f> | --latency-strict | --json\n\
+                 config keys (--set k=v): primes_n fateman_vars fateman_degree big_factor \
+                 chunk_size chunk_policy shards shard_parallelism queue_depth admission \
+                 dispatchers migrate_threshold deadline_ms retry_max retry_backoff_ms \
+                 breaker_threshold artifacts_dir use_kernel stack_size deque wire poller \
+                 reactors reuseport samples warmup scale\n\
                  workloads: {}\n\
                  modes: seq strict par(N)",
                 registry.names().join(" ")
@@ -603,6 +645,17 @@ mod tests {
     fn rejects_unknown_flags() {
         assert!(parse_args(args("run --frobnicate")).is_err());
         assert!(parse_args(args("table1 --set novalue")).is_err());
+    }
+
+    #[test]
+    fn parses_lint_command() {
+        let cli = parse_args(args("lint")).unwrap();
+        assert_eq!(cli.command, "lint");
+        assert!(!cli.json);
+        let cli = parse_args(args("lint --json")).unwrap();
+        assert!(cli.json);
+        // --json is lint-specific, mirroring the gate-flag validation.
+        assert!(parse_args(args("run primes seq --json")).is_err());
     }
 
     #[test]

@@ -7,8 +7,13 @@
 //! `SFUT_PROP_SEED=<seed>`. [`wire`] is the shared wire-protocol
 //! support: one parser for the coordinator's `err` line taxonomy (so
 //! suites don't each re-implement fragments of the grammar) and a
-//! blocking client for the framed binary protocol.
+//! blocking client for the framed binary protocol. [`model`] is the
+//! deterministic interleaving explorer ("loom-lite") for the lock-free
+//! core: shim atomics that become scheduler yield points under
+//! `--features model`, with model ports of the Chase–Lev deque and the
+//! `Fut` state machine checked by `rust/tests/model_check.rs`.
 
+pub mod model;
 pub mod prop;
 pub mod wire;
 

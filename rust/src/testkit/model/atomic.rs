@@ -1,0 +1,201 @@
+//! Shim atomics: `std::sync::atomic` normally, scheduler-routed under
+//! the `model` feature.
+//!
+//! The shims keep the full `Ordering` surface so ported code reads
+//! exactly like the production code it mirrors; under `model` the
+//! ordering is forwarded to the underlying atomic but exploration
+//! itself is over sequentially-consistent interleavings (see the
+//! module docs).
+
+use std::sync::atomic::{fence, AtomicU64, AtomicUsize, Ordering};
+
+/// Yield the virtual-scheduler floor (no-op without the `model`
+/// feature, or outside a model run).
+#[inline]
+fn hook() {
+    #[cfg(feature = "model")]
+    super::sched::yield_point();
+}
+
+/// An atomic fence that is a schedule point under the `model` feature.
+#[inline]
+pub fn model_fence(order: Ordering) {
+    hook();
+    fence(order);
+}
+
+macro_rules! model_atomic {
+    ($name:ident, $inner:ty, $prim:ty) => {
+        /// Shim atomic: a plain std atomic whose every operation is a
+        /// virtual-scheduler yield point under the `model` feature.
+        #[derive(Debug, Default)]
+        pub struct $name {
+            cell: $inner,
+        }
+
+        impl $name {
+            pub const fn new(v: $prim) -> Self {
+                Self { cell: <$inner>::new(v) }
+            }
+
+            #[inline]
+            pub fn load(&self, order: Ordering) -> $prim {
+                hook();
+                self.cell.load(order)
+            }
+
+            #[inline]
+            pub fn store(&self, v: $prim, order: Ordering) {
+                hook();
+                self.cell.store(v, order);
+            }
+
+            #[inline]
+            pub fn swap(&self, v: $prim, order: Ordering) -> $prim {
+                hook();
+                self.cell.swap(v, order)
+            }
+
+            #[inline]
+            pub fn compare_exchange(
+                &self,
+                current: $prim,
+                new: $prim,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                hook();
+                self.cell.compare_exchange(current, new, success, failure)
+            }
+
+            #[inline]
+            pub fn fetch_add(&self, v: $prim, order: Ordering) -> $prim {
+                hook();
+                self.cell.fetch_add(v, order)
+            }
+
+            #[inline]
+            pub fn fetch_sub(&self, v: $prim, order: Ordering) -> $prim {
+                hook();
+                self.cell.fetch_sub(v, order)
+            }
+        }
+    };
+}
+
+model_atomic!(ModelAtomicU64, AtomicU64, u64);
+model_atomic!(ModelAtomicUsize, AtomicUsize, usize);
+
+/// A mutex whose lock acquisition is built on [`ModelAtomicUsize`], so
+/// contention is part of the explored schedule instead of an opaque OS
+/// block (a parked `std::sync::Mutex` waiter would deadlock the
+/// cooperative scheduler: it blocks without yielding the floor).
+///
+/// It is a real spinlock in both configurations: the CAS pair provides
+/// acquire/release mutual exclusion, so the `RefCell` inside is only
+/// ever touched by the lock holder. Model scenarios keep critical
+/// sections short and single-owner where possible (the ports only
+/// contend on it deliberately).
+pub struct ModelMutex<T> {
+    locked: ModelAtomicUsize,
+    data: std::cell::RefCell<T>,
+}
+
+// SAFETY: `data` is only borrowed between winning the `locked` CAS
+// (Acquire) and the guard's release store (Release), so accesses from
+// different threads are mutually excluded and ordered; the RefCell's
+// own borrow bookkeeping therefore runs under mutual exclusion too.
+// `T: Send` is required so the protected value may move between the
+// threads that take turns holding the lock.
+unsafe impl<T: Send> Send for ModelMutex<T> {}
+// SAFETY: as above — `&ModelMutex<T>` only exposes `data` through the
+// lock protocol, which serializes all access.
+unsafe impl<T: Send> Sync for ModelMutex<T> {}
+
+impl<T> ModelMutex<T> {
+    pub fn new(value: T) -> Self {
+        ModelMutex { locked: ModelAtomicUsize::new(0), data: std::cell::RefCell::new(value) }
+    }
+
+    pub fn lock(&self) -> ModelMutexGuard<'_, T> {
+        // Each failed CAS is a yield point under `model`, so the lock
+        // holder is always schedulable and the spin terminates; without
+        // the feature this is an ordinary (short-critical-section)
+        // spinlock.
+        while self
+            .locked
+            .compare_exchange(0, 1, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            std::hint::spin_loop();
+        }
+        ModelMutexGuard { lock: self, inner: Some(self.data.borrow_mut()) }
+    }
+}
+
+pub struct ModelMutexGuard<'a, T> {
+    lock: &'a ModelMutex<T>,
+    /// `Some` until drop: the borrow must end *before* the release
+    /// store, or the next lock winner would trip the RefCell.
+    inner: Option<std::cell::RefMut<'a, T>>,
+}
+
+impl<T> std::ops::Deref for ModelMutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard alive")
+    }
+}
+
+impl<T> std::ops::DerefMut for ModelMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard alive")
+    }
+}
+
+impl<T> Drop for ModelMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        self.inner = None;
+        self.lock.locked.store(0, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shims_behave_like_std_atomics() {
+        let a = ModelAtomicU64::new(5);
+        assert_eq!(a.load(Ordering::SeqCst), 5);
+        a.store(7, Ordering::SeqCst);
+        assert_eq!(a.swap(9, Ordering::SeqCst), 7);
+        assert_eq!(a.compare_exchange(9, 11, Ordering::SeqCst, Ordering::Relaxed), Ok(9));
+        assert_eq!(a.compare_exchange(9, 13, Ordering::SeqCst, Ordering::Relaxed), Err(11));
+        assert_eq!(a.fetch_add(1, Ordering::SeqCst), 11);
+        assert_eq!(a.fetch_sub(2, Ordering::SeqCst), 12);
+        assert_eq!(a.load(Ordering::SeqCst), 10);
+        model_fence(Ordering::SeqCst);
+        let u = ModelAtomicUsize::new(1);
+        assert_eq!(u.fetch_add(2, Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn model_mutex_excludes_and_releases() {
+        let m = std::sync::Arc::new(ModelMutex::new(0u64));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = std::sync::Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    *m.lock() += 1;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*m.lock(), 4000);
+    }
+}

@@ -1,0 +1,319 @@
+//! Model port of [`crate::exec::ChaseLevDeque`] onto the shim atomics.
+//!
+//! The port is line-for-line faithful to the production algorithm —
+//! same loads, stores, CASes and fences in the same order, including
+//! the grow-under-steal retirement protocol and the wrapping-`u64`
+//! `top`/`bottom` indices — with two modeling substitutions:
+//!
+//! * **Jobs are nonzero `u64` payloads** instead of boxed closures, so
+//!   a slot is one shim atomic and a racing read is a value the
+//!   claiming CAS validates (exactly the production
+//!   `MaybeUninit`-bit-copy discipline, made checkable).
+//! * **Buffers are pre-allocated immutable rings with a `freed` flag**
+//!   instead of heap pointers. `grow` switches `current` to the next
+//!   ring and `retire` marks quiescent rings freed; a thief asserts
+//!   `freed == 0` *after* its slot read, which turns a use-after-free
+//!   into a deterministic, replayable assertion instead of a crash
+//!   that depends on the allocator.
+//!
+//! Owner-only methods (`push`/`pop`/`drain`) carry the production
+//! contract by convention — model scenarios give them to exactly one
+//! logical thread.
+
+use std::sync::atomic::Ordering;
+
+use super::atomic::{model_fence, ModelAtomicU64, ModelAtomicUsize, ModelMutex};
+
+/// Mirror of the production steal-half cap.
+pub const MAX_STEAL_BATCH: usize = 16;
+
+/// One pre-allocated ring generation.
+struct Ring {
+    mask: u64,
+    slots: Vec<ModelAtomicU64>,
+    /// Set by `retire` once the ring is quiescent; a thief observing 1
+    /// after a slot read has read freed memory in production terms.
+    freed: ModelAtomicUsize,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        assert!(cap.is_power_of_two());
+        Ring {
+            mask: cap as u64 - 1,
+            slots: (0..cap).map(|_| ModelAtomicU64::new(0)).collect(),
+            freed: ModelAtomicUsize::new(0),
+        }
+    }
+
+    fn capacity(&self) -> u64 {
+        self.mask + 1
+    }
+
+    fn write(&self, index: u64, job: u64) {
+        self.slots[(index & self.mask) as usize].store(job, Ordering::Relaxed);
+    }
+
+    fn read(&self, index: u64) -> u64 {
+        self.slots[(index & self.mask) as usize].load(Ordering::Relaxed)
+    }
+}
+
+/// The modeled Chase–Lev deque. See the module docs for the mapping to
+/// the production type.
+pub struct ModelChaseLev {
+    /// Thief end. Only ever advances (wrapping); claimed by CAS.
+    top: ModelAtomicU64,
+    /// Owner end. Owner-written; thieves read it with Acquire.
+    bottom: ModelAtomicU64,
+    /// Index into `rings` of the current generation (the production
+    /// `AtomicPtr<Buffer>`, made an index so rings can outlive
+    /// retirement and keep their `freed` flag observable).
+    current: ModelAtomicUsize,
+    /// Thieves currently inside a ring-dereference window.
+    pins: ModelAtomicUsize,
+    rings: Vec<Ring>,
+    /// Replaced ring indices awaiting quiescence (`pins == 0`).
+    /// Owner-only in practice (`retire` runs inside owner `grow`).
+    limbo: ModelMutex<Vec<usize>>,
+}
+
+impl ModelChaseLev {
+    /// A deque whose ring starts at `base_cap` slots and may grow at
+    /// most `grows` times (the scenario sizes the pre-allocation).
+    pub fn new(base_cap: usize, grows: usize) -> Self {
+        Self::with_start_index(0, base_cap, grows)
+    }
+
+    /// Start both indices at `start` — same test hook as the production
+    /// `ChaseLevDeque::with_start_index`, so wraparound across the
+    /// `u64` boundary is reachable in bounded model time.
+    pub fn with_start_index(start: u64, base_cap: usize, grows: usize) -> Self {
+        ModelChaseLev {
+            top: ModelAtomicU64::new(start),
+            bottom: ModelAtomicU64::new(start),
+            current: ModelAtomicUsize::new(0),
+            pins: ModelAtomicUsize::new(0),
+            rings: (0..=grows).map(|g| Ring::new(base_cap << g)).collect(),
+            limbo: ModelMutex::new(Vec::new()),
+        }
+    }
+
+    /// Owner push (bottom). Jobs are nonzero (0 is the unwritten-slot
+    /// sentinel).
+    pub fn push(&self, job: u64) {
+        assert!(job != 0, "model jobs are nonzero u64 payloads");
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        let mut cur = self.current.load(Ordering::Relaxed);
+        if b.wrapping_sub(t) >= self.rings[cur].capacity() {
+            self.grow(t, b, cur);
+            cur = self.current.load(Ordering::Relaxed);
+        }
+        self.rings[cur].write(b, job);
+        // Publish the slot before the index: a thief that observes the
+        // new bottom (Acquire) must observe the written job.
+        model_fence(Ordering::Release);
+        self.bottom.store(b.wrapping_add(1), Ordering::Relaxed);
+    }
+
+    /// Owner pop (bottom, LIFO).
+    pub fn pop(&self) -> Option<u64> {
+        let b = self.bottom.load(Ordering::Relaxed).wrapping_sub(1);
+        let cur = self.current.load(Ordering::Relaxed);
+        self.bottom.store(b, Ordering::Relaxed);
+        // Order the bottom decrement against thieves' top CAS: either a
+        // concurrent thief sees the reduced bottom and aborts, or we
+        // see its advanced top below.
+        model_fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        let len = b.wrapping_sub(t) as i64;
+        if len < 0 {
+            // Was empty: restore the canonical empty state.
+            self.bottom.store(t, Ordering::Relaxed);
+            return None;
+        }
+        let job = self.rings[cur].read(b);
+        if len > 0 {
+            // More than one element: the bottom one is ours without
+            // synchronization.
+            return Some(job);
+        }
+        // Exactly one element: race thieves for it on `top`.
+        let won = self
+            .top
+            .compare_exchange(t, t.wrapping_add(1), Ordering::SeqCst, Ordering::Relaxed)
+            .is_ok();
+        self.bottom.store(t.wrapping_add(1), Ordering::Relaxed);
+        won.then_some(job)
+    }
+
+    /// Thief pop (top, FIFO). `None` means empty or lost the claiming
+    /// race.
+    pub fn steal(&self) -> Option<u64> {
+        let t = self.top.load(Ordering::Acquire);
+        // Order the top load before the bottom load: pairs with the
+        // owner's pop fence.
+        model_fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if (b.wrapping_sub(t) as i64) <= 0 {
+            return None;
+        }
+        // Dereference window: pin so a concurrent grow cannot retire
+        // the ring under us.
+        self.pins.fetch_add(1, Ordering::SeqCst);
+        let cur = self.current.load(Ordering::SeqCst);
+        let ring = &self.rings[cur];
+        let job = ring.read(t);
+        // The checkable form of the production use-after-free hazard:
+        // the slot read above must have come from a ring that was not
+        // freed at read time. `retire`'s SeqCst argument (pin RMW vs
+        // buffer publish) is exactly what this assertion model-checks.
+        assert!(
+            ring.freed.load(Ordering::SeqCst) == 0,
+            "use-after-free: thief read slot {t} from a retired ring"
+        );
+        let won = self
+            .top
+            .compare_exchange(t, t.wrapping_add(1), Ordering::SeqCst, Ordering::Relaxed)
+            .is_ok();
+        self.pins.fetch_sub(1, Ordering::SeqCst);
+        // A lost CAS means the value read is not ours — discarded
+        // uninterpreted, as in production.
+        won.then_some(job)
+    }
+
+    /// Steal-half: the production `steal_batch_and_pop` loop shape — a
+    /// goal of half the observed length (capped), taken as a sequence
+    /// of single top-CAS steals, stopping at the first failure.
+    pub fn steal_half(&self) -> Vec<u64> {
+        let goal = self.len().div_ceil(2).min(MAX_STEAL_BATCH);
+        let mut out = Vec::new();
+        for _ in 0..goal.max(1) {
+            match self.steal() {
+                Some(job) => out.push(job),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Queued jobs (instantaneous snapshot).
+    pub fn len(&self) -> usize {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        (b.wrapping_sub(t) as i64).max(0) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Owner exit path: pop until empty (LIFO order).
+    pub fn drain(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        while let Some(job) = self.pop() {
+            out.push(job);
+        }
+        out
+    }
+
+    /// Owner-only: switch to the next (double-capacity) ring, copying
+    /// the live window `[t, b)`. `t` may be stale — copying a few
+    /// already-claimed slots is harmless, they are value-copies no one
+    /// will interpret.
+    fn grow(&self, t: u64, b: u64, cur: usize) {
+        let next = cur + 1;
+        assert!(
+            next < self.rings.len(),
+            "model scenario under-provisioned rings (grow #{next} requested)"
+        );
+        let mut i = t;
+        while i != b {
+            let v = self.rings[cur].read(i);
+            self.rings[next].write(i, v);
+            i = i.wrapping_add(1);
+        }
+        self.current.store(next, Ordering::SeqCst);
+        self.retire(cur);
+    }
+
+    /// Park a replaced ring; mark the limbo list freed if no thief is
+    /// pinned — the same SeqCst argument as the production `retire`: a
+    /// pin RMW not observed here is later in the SeqCst total order, so
+    /// that thief's subsequent `current` load returns the new ring.
+    fn retire(&self, old: usize) {
+        let mut limbo = self.limbo.lock();
+        limbo.push(old);
+        if self.pins.load(Ordering::SeqCst) == 0 {
+            for idx in limbo.drain(..) {
+                self.rings[idx].freed.store(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifo_pop_fifo_steal() {
+        let d = ModelChaseLev::new(4, 1);
+        for j in 1..=3 {
+            d.push(j);
+        }
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.steal(), Some(1));
+        assert_eq!(d.pop(), Some(3));
+        assert_eq!(d.pop(), Some(2));
+        assert_eq!(d.pop(), None);
+        assert_eq!(d.steal(), None);
+    }
+
+    #[test]
+    fn grow_preserves_live_window() {
+        let d = ModelChaseLev::new(2, 2);
+        for j in 1..=7 {
+            d.push(j);
+        }
+        let mut seen = Vec::new();
+        while let Some(j) = d.steal() {
+            seen.push(j);
+        }
+        assert_eq!(seen, vec![1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn wraparound_indices() {
+        let d = ModelChaseLev::with_start_index(u64::MAX - 2, 2, 2);
+        for j in 1..=6 {
+            d.push(j);
+        }
+        assert_eq!(d.len(), 6);
+        assert_eq!(d.steal(), Some(1));
+        assert_eq!(d.drain(), vec![6, 5, 4, 3, 2]);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn steal_half_takes_oldest_half() {
+        let d = ModelChaseLev::new(8, 0);
+        for j in 1..=6 {
+            d.push(j);
+        }
+        assert_eq!(d.steal_half(), vec![1, 2, 3]);
+        assert_eq!(d.drain(), vec![6, 5, 4]);
+    }
+
+    #[test]
+    fn steal_half_caps_at_batch_limit() {
+        let d = ModelChaseLev::new(64, 0);
+        for j in 1..=60 {
+            d.push(j);
+        }
+        let batch = d.steal_half();
+        assert_eq!(batch.len(), MAX_STEAL_BATCH);
+        assert_eq!(batch[0], 1);
+    }
+}

@@ -1,0 +1,261 @@
+//! Model port of the [`crate::susp::Fut`] state machine onto the shim
+//! atomics.
+//!
+//! The production machine is EMPTY → RUNNING → READY/PANICKED with the
+//! value published *before* the Release state store, a promise
+//! drop-guard that panick-completes an abandoned future, and an
+//! `on_complete` callback protocol whose obligation is **exactly-once
+//! delivery** no matter how registration races completion.
+//!
+//! The port keeps the state machine verbatim and replaces the
+//! production callback mutex with per-waiter atomic slots
+//! (0 = none, 1 = registered, 2 = delivered): the completer's sweep and
+//! the registrant's re-check both race a CAS `1 → 2`, and whoever wins
+//! delivers. That winning CAS is the same obligation the production
+//! mutex+recheck protocol discharges, made directly checkable — a
+//! double delivery or a delivery with an unpublished value is an
+//! assertion inside [`ModelFut::deliver`], found (and replayed) by the
+//! explorer.
+
+use std::cell::Cell;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use super::atomic::{ModelAtomicU64, ModelAtomicUsize};
+
+pub const EMPTY: u64 = 0;
+pub const RUNNING: u64 = 1;
+pub const READY: u64 = 2;
+pub const PANICKED: u64 = 3;
+
+/// Per-waiter callback slot states.
+const SLOT_NONE: u64 = 0;
+const SLOT_REGISTERED: u64 = 1;
+const SLOT_DELIVERED: u64 = 2;
+
+/// The modeled future. Values are nonzero `u64` payloads (0 is the
+/// unpublished sentinel, which is what makes publication order
+/// assertable).
+pub struct ModelFut {
+    state: ModelAtomicU64,
+    value: ModelAtomicU64,
+    /// One callback slot per waiter.
+    slots: Vec<ModelAtomicU64>,
+    /// Delivery counters per waiter — the exactly-once ledger.
+    deliveries: Vec<ModelAtomicUsize>,
+}
+
+impl ModelFut {
+    pub fn new(waiters: usize) -> Self {
+        ModelFut {
+            state: ModelAtomicU64::new(EMPTY),
+            value: ModelAtomicU64::new(0),
+            slots: (0..waiters).map(|_| ModelAtomicU64::new(SLOT_NONE)).collect(),
+            deliveries: (0..waiters).map(|_| ModelAtomicUsize::new(0)).collect(),
+        }
+    }
+
+    /// Claim the right to run (EMPTY → RUNNING). At most one caller
+    /// wins.
+    pub fn try_start(&self) -> bool {
+        self.state
+            .compare_exchange(EMPTY, RUNNING, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    /// Publish a result: value first, then the Release state store,
+    /// then sweep registered waiters. `v` must be nonzero.
+    pub fn complete(&self, v: u64) {
+        assert!(v != 0, "model values are nonzero u64 payloads");
+        assert!(
+            self.value.compare_exchange(0, v, Ordering::Relaxed, Ordering::Relaxed).is_ok(),
+            "double completion: value already published"
+        );
+        self.state.store(READY, Ordering::Release);
+        self.sweep();
+    }
+
+    /// Publish a panic outcome (no value), then sweep.
+    pub fn complete_panicked(&self) {
+        self.state.store(PANICKED, Ordering::Release);
+        self.sweep();
+    }
+
+    /// Completer side of delivery: claim every registered slot.
+    fn sweep(&self) {
+        for i in 0..self.slots.len() {
+            if self.slots[i]
+                .compare_exchange(
+                    SLOT_REGISTERED,
+                    SLOT_DELIVERED,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                )
+                .is_ok()
+            {
+                self.deliver(i);
+            }
+        }
+    }
+
+    /// Waiter `i` asks to be notified on completion. Exactly one
+    /// delivery happens regardless of how this races `complete`:
+    /// either the fast path fires inline, or the slot is registered
+    /// and the re-check races the completer's sweep on the `1 → 2`
+    /// CAS — the winner delivers.
+    pub fn on_complete(&self, i: usize) {
+        let s = self.state.load(Ordering::Acquire);
+        if s >= READY {
+            // Already complete: deliver inline if nobody has.
+            if self.slots[i]
+                .compare_exchange(SLOT_NONE, SLOT_DELIVERED, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                self.deliver(i);
+            }
+            return;
+        }
+        assert!(
+            self.slots[i]
+                .compare_exchange(
+                    SLOT_NONE,
+                    SLOT_REGISTERED,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed
+                )
+                .is_ok(),
+            "waiter {i} registered twice"
+        );
+        // Completion may have landed between the state load and the
+        // registration — re-check, and race the sweep for the claim.
+        let s2 = self.state.load(Ordering::Acquire);
+        if s2 >= READY
+            && self.slots[i]
+                .compare_exchange(
+                    SLOT_REGISTERED,
+                    SLOT_DELIVERED,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                )
+                .is_ok()
+        {
+            self.deliver(i);
+        }
+    }
+
+    /// The delivery ledger: asserts the two obligations the model
+    /// checks — a delivery only after completion with the value
+    /// published (publication order), and at most one per waiter
+    /// (exactly-once).
+    fn deliver(&self, i: usize) {
+        let s = self.state.load(Ordering::Acquire);
+        assert!(
+            s == READY || s == PANICKED,
+            "delivery to waiter {i} before completion (state {s})"
+        );
+        if s == READY {
+            assert!(
+                self.value.load(Ordering::Acquire) != 0,
+                "waiter {i} observed READY with unpublished value"
+            );
+        }
+        let prev = self.deliveries[i].fetch_add(1, Ordering::SeqCst);
+        assert!(prev == 0, "waiter {i} delivered twice");
+    }
+
+    pub fn state(&self) -> u64 {
+        self.state.load(Ordering::Acquire)
+    }
+
+    pub fn value(&self) -> u64 {
+        self.value.load(Ordering::Acquire)
+    }
+
+    pub fn delivery_count(&self, i: usize) -> usize {
+        self.deliveries[i].load(Ordering::SeqCst)
+    }
+}
+
+/// The promise drop-guard: single owner of the completion right. If it
+/// is dropped without completing (the production "runner died" path),
+/// the future is panick-completed so waiters are still delivered
+/// exactly once.
+pub struct ModelFutPromise {
+    fut: Arc<ModelFut>,
+    done: Cell<bool>,
+}
+
+impl ModelFutPromise {
+    /// Claim the future (EMPTY → RUNNING); `None` if someone already
+    /// has.
+    pub fn claim(fut: Arc<ModelFut>) -> Option<Self> {
+        fut.try_start().then(|| ModelFutPromise { fut, done: Cell::new(false) })
+    }
+
+    /// Complete with a value; consumes the promise.
+    pub fn complete(self, v: u64) {
+        self.fut.complete(v);
+        self.done.set(true);
+    }
+}
+
+impl Drop for ModelFutPromise {
+    fn drop(&mut self) {
+        if !self.done.get() {
+            self.fut.complete_panicked();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_then_register_delivers_inline() {
+        let f = ModelFut::new(2);
+        assert!(f.try_start());
+        assert!(!f.try_start());
+        f.complete(42);
+        assert_eq!(f.state(), READY);
+        assert_eq!(f.value(), 42);
+        f.on_complete(0);
+        f.on_complete(1);
+        assert_eq!(f.delivery_count(0), 1);
+        assert_eq!(f.delivery_count(1), 1);
+    }
+
+    #[test]
+    fn register_then_complete_sweeps() {
+        let f = ModelFut::new(2);
+        assert!(f.try_start());
+        f.on_complete(0);
+        f.on_complete(1);
+        assert_eq!(f.delivery_count(0), 0);
+        f.complete(7);
+        assert_eq!(f.delivery_count(0), 1);
+        assert_eq!(f.delivery_count(1), 1);
+    }
+
+    #[test]
+    fn promise_drop_guard_panick_completes() {
+        let f = Arc::new(ModelFut::new(1));
+        f.on_complete(0);
+        {
+            let p = ModelFutPromise::claim(Arc::clone(&f)).expect("first claim wins");
+            assert!(ModelFutPromise::claim(Arc::clone(&f)).is_none());
+            drop(p);
+        }
+        assert_eq!(f.state(), PANICKED);
+        assert_eq!(f.delivery_count(0), 1);
+    }
+
+    #[test]
+    fn promise_complete_suppresses_guard() {
+        let f = Arc::new(ModelFut::new(1));
+        let p = ModelFutPromise::claim(Arc::clone(&f)).unwrap();
+        p.complete(9);
+        assert_eq!(f.state(), READY);
+        assert_eq!(f.value(), 9);
+    }
+}

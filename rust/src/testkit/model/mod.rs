@@ -1,0 +1,271 @@
+//! Loom-lite: an in-tree deterministic interleaving explorer for the
+//! lock-free core.
+//!
+//! The executor's correctness rests on hand-rolled atomics — the
+//! Chase–Lev ring with epoch-style buffer retirement
+//! ([`crate::exec::ChaseLevDeque`]) and the `Fut` state machine
+//! ([`crate::susp::Fut`]). Stress tests explore a vanishing fraction of
+//! their interleavings; this module explores them *systematically*, the
+//! way `loom` would, without the (unvendorable) dependency.
+//!
+//! # How it works
+//!
+//! The shim types [`ModelAtomicU64`], [`ModelAtomicUsize`],
+//! [`ModelMutex`] and [`model_fence`] compile straight to
+//! `std::sync::atomic` normally. Under the `model` cargo feature every
+//! load/store/CAS/fence becomes a *yield point*: logical threads run
+//! co-operatively, one at a time, and a virtual scheduler
+//! ([`sched`]) decides who performs the next atomic operation. A
+//! complete run is therefore described exactly by its decision trace,
+//! and the explorer enumerates traces two ways:
+//!
+//! * **bounded-depth DFS with a preemption bound**
+//!   ([`explore_dfs`]) — systematic enumeration of every schedule
+//!   whose involuntary context switches stay under the bound (the
+//!   classic result: almost all concurrency bugs need ≤ 2
+//!   preemptions);
+//! * **seeded random schedules** ([`explore_random`]) — a SplitMix64
+//!   stream of schedules for bulk coverage, each one replayable from
+//!   its 64-bit seed alone.
+//!
+//! A failing run prints `SFUT_MODEL_SEED=<seed>` (the idiom of
+//! [`crate::testkit::prop`]); [`replay_seed`] re-runs exactly that
+//! interleaving, and `SFUT_MODEL_SEED` in the environment pins an
+//! entire exploration to one schedule for debugging.
+//!
+//! # What is modeled
+//!
+//! [`deque`] ports the Chase–Lev algorithm — including grow-under-steal
+//! (buffer retirement becomes an assertable `freed` flag, so a
+//! use-after-free is a *deterministic assertion*, not a crash that
+//! depends on the allocator) and the wrapping-`u64` `top`/`bottom`
+//! indices — onto the shims with `u64` payloads standing in for boxed
+//! jobs. [`fut`] ports the EMPTY → RUNNING → READY/PANICKED machine
+//! with the promise drop-guard; the production callback mutex becomes
+//! per-waiter atomic slots so exactly-once delivery is a checkable
+//! CAS-win, which is the same obligation the mutex+recheck protocol
+//! discharges. [`racy`] holds deliberately broken fixtures (publication
+//! in the wrong order, a load/store counter) that the suite uses to
+//! prove the checker *finds* bugs and that seeds replay byte-identically.
+//!
+//! Limitations, stated plainly: exploration is over *interleavings* of
+//! sequentially-consistent atomic steps (loom's default strategy too).
+//! Memory-order parameters are accepted and forwarded so the ports read
+//! like the production code, but weak-memory reorderings are out of
+//! scope — those are what the Miri/TSan CI steps are for.
+//!
+//! # Usage
+//!
+//! ```text
+//! cargo test --features model --test model_check
+//! SFUT_MODEL_SEED=0x1234 cargo test --features model --test model_check -- replays
+//! ```
+
+pub mod atomic;
+pub mod deque;
+pub mod fut;
+pub mod racy;
+#[cfg(feature = "model")]
+pub(crate) mod sched;
+
+pub use atomic::{model_fence, ModelAtomicU64, ModelAtomicUsize, ModelMutex};
+
+/// One logical thread of a modeled scenario.
+pub type LogicalThread = Box<dyn FnOnce() + Send + 'static>;
+
+/// One fresh instance of a modeled scenario: the logical threads to
+/// interleave, plus an optional post-run check that the controller
+/// runs after every thread has finished (joins synchronize, so it sees
+/// all effects). Whole-run invariants — "every pushed job was claimed
+/// exactly once" — live in the check; a panic there is a [`Failure`]
+/// with the run's trace, replayable like any other.
+pub struct Scenario {
+    pub threads: Vec<LogicalThread>,
+    pub check: Option<Box<dyn FnOnce() + Send + 'static>>,
+}
+
+impl Scenario {
+    pub fn new(threads: Vec<LogicalThread>) -> Self {
+        Scenario { threads, check: None }
+    }
+
+    pub fn with_check(
+        threads: Vec<LogicalThread>,
+        check: impl FnOnce() + Send + 'static,
+    ) -> Self {
+        Scenario { threads, check: Some(Box::new(check)) }
+    }
+}
+
+/// What one exploration produced.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Schedules actually run.
+    pub schedules: usize,
+    /// Distinct decision traces among them (DFS runs are distinct by
+    /// construction; random runs are deduplicated by trace hash).
+    pub distinct: usize,
+    /// First failing schedule, if any (exploration stops on it).
+    pub failure: Option<Failure>,
+}
+
+/// A failing schedule, replayable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Failure {
+    /// Seed that regenerates the schedule (random mode; DFS failures
+    /// carry the trace only).
+    pub seed: Option<u64>,
+    /// The decision trace: which logical thread performed each step.
+    pub trace: Vec<usize>,
+    /// The panic payload of the failing logical thread.
+    pub message: String,
+}
+
+/// Environment variable that pins exploration to one seed (printed by
+/// any failing run).
+pub const SEED_ENV: &str = "SFUT_MODEL_SEED";
+
+#[cfg(feature = "model")]
+mod explore {
+    use super::sched::{self, DfsSource, RandomSource, ScheduleSource};
+    use super::{Failure, Report, Scenario, SEED_ENV};
+    use std::collections::HashSet;
+
+    fn env_seed() -> Option<u64> {
+        let raw = std::env::var(SEED_ENV).ok()?;
+        let raw = raw.trim();
+        let parsed = raw
+            .strip_prefix("0x")
+            .map(|h| u64::from_str_radix(h, 16))
+            .unwrap_or_else(|| raw.parse());
+        parsed.ok()
+    }
+
+    fn hash_trace(trace: &[usize]) -> u64 {
+        // FNV-1a, good enough to deduplicate decision traces.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &d in trace {
+            h ^= d as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    fn run_one(
+        source: &mut dyn ScheduleSource,
+        seed: Option<u64>,
+        setup: &dyn Fn() -> Scenario,
+    ) -> Result<Vec<usize>, Failure> {
+        let scenario = setup();
+        let outcome = sched::run_schedule(source, scenario.threads);
+        let failure = outcome.failure.or_else(|| {
+            // Post-run invariant check, on the controller thread (the
+            // shims no-op their yield there). Its panic is a failure
+            // attributed to this run's trace.
+            scenario.check.and_then(|check| {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(check))
+                    .err()
+                    .map(sched::panic_message)
+            })
+        });
+        match failure {
+            None => Ok(outcome.trace),
+            Some(message) => {
+                let f = Failure { seed, trace: outcome.trace, message };
+                match f.seed {
+                    Some(s) => eprintln!(
+                        "model: schedule FAILED — replay with {SEED_ENV}={s:#x} \
+                         (trace {:?}): {}",
+                        f.trace, f.message
+                    ),
+                    None => eprintln!(
+                        "model: DFS schedule FAILED (trace {:?}): {}",
+                        f.trace, f.message
+                    ),
+                }
+                Err(f)
+            }
+        }
+    }
+
+    /// Run `schedules` seeded random interleavings of the scenario
+    /// `setup` builds (a fresh instance per schedule). Stops at the
+    /// first failure. `SFUT_MODEL_SEED` in the environment pins the
+    /// whole exploration to that single seed.
+    pub fn explore_random(
+        seed0: u64,
+        schedules: usize,
+        setup: impl Fn() -> Scenario,
+    ) -> Report {
+        if let Some(pinned) = env_seed() {
+            return replay_seed(pinned, setup);
+        }
+        let mut seen = HashSet::new();
+        let mut report = Report { schedules: 0, distinct: 0, failure: None };
+        for k in 0..schedules {
+            // Decorrelate per-run seeds so a failure replays from one
+            // 64-bit number, not (base, index).
+            let seed = sched::splitmix64(seed0 ^ (k as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            let mut source = RandomSource::new(seed);
+            report.schedules += 1;
+            match run_one(&mut source, Some(seed), &setup) {
+                Ok(trace) => {
+                    if seen.insert(hash_trace(&trace)) {
+                        report.distinct += 1;
+                    }
+                }
+                Err(f) => {
+                    report.failure = Some(f);
+                    break;
+                }
+            }
+        }
+        report
+    }
+
+    /// Systematic bounded search: every schedule reachable with at most
+    /// `preemption_bound` involuntary context switches, capped at
+    /// `max_schedules` runs. Stops at the first failure.
+    pub fn explore_dfs(
+        preemption_bound: usize,
+        max_schedules: usize,
+        setup: impl Fn() -> Scenario,
+    ) -> Report {
+        let mut source = DfsSource::new(preemption_bound);
+        let mut report = Report { schedules: 0, distinct: 0, failure: None };
+        loop {
+            if report.schedules >= max_schedules {
+                break;
+            }
+            report.schedules += 1;
+            match run_one(&mut source, None, &setup) {
+                Ok(_) => {
+                    // DFS traces are distinct by construction.
+                    report.distinct += 1;
+                }
+                Err(f) => {
+                    report.failure = Some(f);
+                    break;
+                }
+            }
+            if !source.advance() {
+                break;
+            }
+        }
+        report
+    }
+
+    /// Re-run exactly one seeded schedule (the replay path a failing
+    /// run's `SFUT_MODEL_SEED=<seed>` line points at).
+    pub fn replay_seed(seed: u64, setup: impl Fn() -> Scenario) -> Report {
+        let mut source = RandomSource::new(seed);
+        let mut report = Report { schedules: 1, distinct: 1, failure: None };
+        if let Err(f) = run_one(&mut source, Some(seed), &setup) {
+            report.failure = Some(f);
+        }
+        report
+    }
+}
+
+#[cfg(feature = "model")]
+pub use explore::{explore_dfs, explore_random, replay_seed};

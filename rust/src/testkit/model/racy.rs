@@ -1,0 +1,110 @@
+//! Deliberately racy fixtures — the model checker's own test subjects.
+//!
+//! These types contain real concurrency bugs on purpose. The model
+//! suite uses them to prove two things about the checker itself:
+//!
+//! 1. **It finds bugs.** Exploration over a fixture must produce a
+//!    failure (if the checker passes a known-broken type, the checker
+//!    is broken).
+//! 2. **Failures replay.** A random-mode failure prints a seed;
+//!    re-running with that seed must reproduce the *identical* failing
+//!    interleaving — same decision trace, same panic message,
+//!    byte-for-byte.
+//!
+//! Nothing outside the model suite should use these types.
+
+use std::sync::atomic::Ordering;
+
+use super::atomic::ModelAtomicU64;
+use super::fut::READY;
+
+/// A counter incremented with a separate load and store — the textbook
+/// lost update. Two concurrent [`RacyCounter::increment`] calls can
+/// interleave load/load/store/store and lose one increment.
+pub struct RacyCounter {
+    n: ModelAtomicU64,
+}
+
+impl RacyCounter {
+    pub fn new() -> Self {
+        RacyCounter { n: ModelAtomicU64::new(0) }
+    }
+
+    /// BUG (deliberate): read-modify-write as two independent atomic
+    /// operations instead of one `fetch_add`.
+    pub fn increment(&self) {
+        let v = self.n.load(Ordering::SeqCst);
+        self.n.store(v + 1, Ordering::SeqCst);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.n.load(Ordering::SeqCst)
+    }
+}
+
+impl Default for RacyCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A future-like publisher with the publication order inverted — the
+/// exact bug the real `Fut` protocol (value first, then the Release
+/// state store) exists to prevent. An observer that polls
+/// [`BrokenPublish::poll`] can see READY while the value is still the
+/// unpublished sentinel 0.
+pub struct BrokenPublish {
+    state: ModelAtomicU64,
+    value: ModelAtomicU64,
+}
+
+impl BrokenPublish {
+    pub fn new() -> Self {
+        BrokenPublish { state: ModelAtomicU64::new(0), value: ModelAtomicU64::new(0) }
+    }
+
+    /// BUG (deliberate): state is stored READY *before* the value is
+    /// published.
+    pub fn complete(&self, v: u64) {
+        assert!(v != 0, "model values are nonzero u64 payloads");
+        self.state.store(READY, Ordering::Release);
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// `Some(value)` once READY is observed — possibly `Some(0)` under
+    /// the buggy ordering, which is what a scenario asserts against.
+    pub fn poll(&self) -> Option<u64> {
+        if self.state.load(Ordering::Acquire) == READY {
+            Some(self.value.load(Ordering::Acquire))
+        } else {
+            None
+        }
+    }
+}
+
+impl Default for BrokenPublish {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn racy_counter_is_fine_sequentially() {
+        let c = RacyCounter::new();
+        c.increment();
+        c.increment();
+        assert_eq!(c.get(), 2);
+    }
+
+    #[test]
+    fn broken_publish_is_fine_sequentially() {
+        let p = BrokenPublish::new();
+        assert_eq!(p.poll(), None);
+        p.complete(5);
+        assert_eq!(p.poll(), Some(5));
+    }
+}

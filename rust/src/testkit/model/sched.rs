@@ -1,0 +1,300 @@
+//! The virtual scheduler behind the `model` feature.
+//!
+//! Logical threads are real OS threads run *co-operatively*: exactly
+//! one holds the floor at any moment, and it yields it back at every
+//! shim atomic operation ([`yield_point`]). The controlling thread
+//! (the test, inside [`run_schedule`]) then consults a
+//! [`ScheduleSource`] for who runs next. A complete run is thus
+//! reproduced exactly by its decision trace — the property the
+//! replay-seed machinery and the DFS both stand on.
+//!
+//! Logical threads must terminate under *any* schedule (bounded loops
+//! only — a model scenario polls a bounded number of times instead of
+//! spinning until a condition holds), because the sources' default
+//! policy is "keep running the current thread": an unbounded spin
+//! would otherwise never yield the floor in a way that lets the DFS
+//! finish a run.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::LogicalThread;
+
+/// SplitMix64 — the same tiny deterministic generator the prop harness
+/// family uses; good enough to pick schedule branches.
+pub(crate) fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Picks the next logical thread to run at each decision point.
+pub(crate) trait ScheduleSource {
+    /// `runnable` is non-empty and sorted; `prev` is the thread that
+    /// performed the previous step (None at the first step).
+    fn choose(&mut self, runnable: &[usize], prev: Option<usize>) -> usize;
+    /// A new run is starting; reset per-run state.
+    fn reset(&mut self);
+}
+
+/// Uniformly random choice from a seed; the trace is a pure function
+/// of the seed, which is what makes one-number replay possible.
+pub(crate) struct RandomSource {
+    state: u64,
+}
+
+impl RandomSource {
+    pub(crate) fn new(seed: u64) -> Self {
+        RandomSource { state: seed }
+    }
+}
+
+impl ScheduleSource for RandomSource {
+    fn choose(&mut self, runnable: &[usize], _prev: Option<usize>) -> usize {
+        self.state = splitmix64(self.state);
+        runnable[(self.state % runnable.len() as u64) as usize]
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// One explored decision point of the DFS.
+struct Frame {
+    /// The choice this run takes at this step.
+    choice: usize,
+    /// Unexplored alternatives at this step (within the preemption
+    /// bound at the time the frontier was opened).
+    alternatives: Vec<usize>,
+    /// Involuntary switches in the prefix *including* this choice.
+    preemptions: usize,
+    /// True when the previous thread could not continue here, so
+    /// picking any alternative is free (not a preemption).
+    free_choice: bool,
+}
+
+/// Depth-first enumeration of schedules with a preemption bound. The
+/// default policy is "continue the previous thread" (no preemption);
+/// each frontier records the runnable alternatives that still fit the
+/// bound, and [`DfsSource::advance`] backtracks to the deepest one.
+pub(crate) struct DfsSource {
+    bound: usize,
+    path: Vec<Frame>,
+    pos: usize,
+}
+
+impl DfsSource {
+    pub(crate) fn new(bound: usize) -> Self {
+        DfsSource { bound, path: Vec::new(), pos: 0 }
+    }
+
+    /// Move to the next unexplored prefix. Returns false when the
+    /// bounded space is exhausted.
+    pub(crate) fn advance(&mut self) -> bool {
+        // A run may terminate before consuming the whole recorded
+        // prefix (a different interleaving can finish in fewer steps);
+        // frames beyond the last consulted step belong to no run and
+        // must not be backtracked into.
+        self.path.truncate(self.pos);
+        while let Some(mut frame) = self.path.pop() {
+            if let Some(alt) = frame.alternatives.pop() {
+                // Re-derive the preemption count for the new choice:
+                // the popped frame's count was for its old
+                // (continuation) choice. Alternatives always differ
+                // from the default, so taking one costs a preemption
+                // exactly when the default was a continuation.
+                let before = self.path.last().map_or(0, |f| f.preemptions);
+                frame.preemptions = before + usize::from(!frame.free_choice);
+                frame.choice = alt;
+                self.path.push(frame);
+                return true;
+            }
+        }
+        false
+    }
+}
+
+impl ScheduleSource for DfsSource {
+    fn choose(&mut self, runnable: &[usize], prev: Option<usize>) -> usize {
+        if self.pos < self.path.len() {
+            let frame = &self.path[self.pos];
+            self.pos += 1;
+            debug_assert!(runnable.contains(&frame.choice), "DFS replay diverged");
+            return frame.choice;
+        }
+        // New frontier: default to continuing the previous thread (no
+        // preemption); fall back to the lowest runnable id.
+        let continues = prev.filter(|p| runnable.contains(p));
+        let choice = continues.unwrap_or(runnable[0]);
+        let preemptions_before = self.path.last().map_or(0, |f| f.preemptions);
+        // Alternatives cost one preemption each when the previous
+        // thread could have continued; when it could not (blocked or
+        // finished), trying a different thread is a free choice.
+        let costs_preemption = continues.is_some();
+        let alternatives = if !costs_preemption || preemptions_before < self.bound {
+            runnable.iter().copied().filter(|&r| r != choice).collect()
+        } else {
+            Vec::new()
+        };
+        self.path.push(Frame {
+            choice,
+            alternatives,
+            preemptions: preemptions_before,
+            free_choice: !costs_preemption,
+        });
+        self.pos += 1;
+        choice
+    }
+
+    fn reset(&mut self) {
+        self.pos = 0;
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum LState {
+    Ready,
+    Finished,
+}
+
+struct Central {
+    /// Which logical thread holds the floor; None = controller's turn.
+    active: Option<usize>,
+    state: Vec<LState>,
+    trace: Vec<usize>,
+    failure: Option<String>,
+}
+
+pub(crate) struct Sched {
+    central: Mutex<Central>,
+    cv: Condvar,
+}
+
+thread_local! {
+    /// The scheduler this OS thread participates in, if any. Shim
+    /// atomics consult this: unregistered threads (normal test code,
+    /// or shim use outside a model run) perform their operation
+    /// directly without yielding.
+    static CURRENT: RefCell<Option<(Arc<Sched>, usize)>> = const { RefCell::new(None) };
+}
+
+/// Yield the floor at an atomic operation. No-op outside a model run.
+pub(crate) fn yield_point() {
+    let current = CURRENT.with(|c| c.borrow().clone());
+    if let Some((sched, id)) = current {
+        sched.pause(id);
+    }
+}
+
+impl Sched {
+    fn new(n: usize) -> Self {
+        Sched {
+            central: Mutex::new(Central {
+                active: None,
+                state: vec![LState::Ready; n],
+                trace: Vec::new(),
+                failure: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Hand the floor back to the controller and wait to be granted it
+    /// again.
+    fn pause(&self, id: usize) {
+        let mut c = self.central.lock().unwrap();
+        c.active = None;
+        self.cv.notify_all();
+        while c.active != Some(id) {
+            c = self.cv.wait(c).unwrap();
+        }
+    }
+
+    fn wait_for_turn(&self, id: usize) {
+        let mut c = self.central.lock().unwrap();
+        while c.active != Some(id) {
+            c = self.cv.wait(c).unwrap();
+        }
+    }
+
+    fn finish(&self, id: usize, failure: Option<String>) {
+        let mut c = self.central.lock().unwrap();
+        c.state[id] = LState::Finished;
+        if c.failure.is_none() {
+            c.failure = failure;
+        }
+        c.active = None;
+        self.cv.notify_all();
+    }
+}
+
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "logical thread panicked (non-string payload)".to_string()
+    }
+}
+
+fn thread_main(sched: Arc<Sched>, id: usize, body: LogicalThread) {
+    CURRENT.with(|c| *c.borrow_mut() = Some((sched.clone(), id)));
+    sched.wait_for_turn(id);
+    let result = catch_unwind(AssertUnwindSafe(body));
+    CURRENT.with(|c| *c.borrow_mut() = None);
+    sched.finish(id, result.err().map(panic_message));
+}
+
+pub(crate) struct RunOutcome {
+    pub(crate) trace: Vec<usize>,
+    pub(crate) failure: Option<String>,
+}
+
+/// Run the logical threads to completion under one schedule. The
+/// calling thread acts as controller: it owns every decision point and
+/// records the trace.
+pub(crate) fn run_schedule(
+    source: &mut dyn ScheduleSource,
+    threads: Vec<LogicalThread>,
+) -> RunOutcome {
+    source.reset();
+    let n = threads.len();
+    let sched = Arc::new(Sched::new(n));
+    let handles: Vec<_> = threads
+        .into_iter()
+        .enumerate()
+        .map(|(id, body)| {
+            let s = Arc::clone(&sched);
+            std::thread::Builder::new()
+                .name(format!("model-l{id}"))
+                .spawn(move || thread_main(s, id, body))
+                .expect("spawn logical thread")
+        })
+        .collect();
+    loop {
+        let mut c = sched.central.lock().unwrap();
+        while c.active.is_some() {
+            c = sched.cv.wait(c).unwrap();
+        }
+        let runnable: Vec<usize> =
+            (0..n).filter(|&i| c.state[i] == LState::Ready).collect();
+        if runnable.is_empty() {
+            break;
+        }
+        let prev = c.trace.last().copied();
+        let choice = source.choose(&runnable, prev);
+        debug_assert!(runnable.contains(&choice), "source chose a non-runnable thread");
+        c.trace.push(choice);
+        c.active = Some(choice);
+        drop(c);
+        sched.cv.notify_all();
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let c = sched.central.lock().unwrap();
+    RunOutcome { trace: c.trace.clone(), failure: c.failure.clone() }
+}

@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 use stream_future::config::{Config, PollerKind, WireProtocol};
 use stream_future::coordinator::frame::FrameKind;
 use stream_future::coordinator::{Pipeline, TcpServer};
-use stream_future::testkit::wire::{FramedClient, SubmitReply};
+use stream_future::testkit::wire::{parse_err_line, ErrLine, FramedClient, SubmitReply};
 
 /// Smoke-sized pipeline with an explicit reactor count. `reuseport` is
 /// off so accept fanout takes the in-process handoff path: round-robin
@@ -184,7 +184,8 @@ fn pool_shutdown_drains_parked_waiter_and_joins_reactors() {
     let frames = client.drain().unwrap();
     let closed = frames.iter().any(|f| {
         f.kind == FrameKind::Err
-            && FramedClient::line_of(f).is_ok_and(|l| l == format!("err closed ticket={id}"))
+            && FramedClient::line_of(f)
+                .is_ok_and(|l| parse_err_line(&l) == Some(ErrLine::Closed { ticket: id }))
     });
     assert!(closed, "parked waiter must see the closed line, got {frames:?}");
 

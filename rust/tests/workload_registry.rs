@@ -21,6 +21,7 @@ use std::sync::Arc;
 use stream_future::config::{Config, Mode};
 use stream_future::coordinator::{serve, JobRequest, Pipeline, ResultDetail};
 use stream_future::prelude::*;
+use stream_future::testkit::wire::parse_err_line;
 use stream_future::workload::{ParamKind, ParamSpec, WorkloadError};
 
 fn small_config() -> Config {
@@ -74,7 +75,7 @@ fn unknown_names_and_malformed_params_answer_well_formed_err_lines() {
     let jobs = serve(&pipeline, script.as_bytes(), &mut out).unwrap();
     let out = String::from_utf8(out).unwrap();
     assert_eq!(jobs, 1, "{out}");
-    let errs: Vec<&str> = out.lines().filter(|l| l.starts_with("err")).collect();
+    let errs: Vec<&str> = out.lines().filter(|l| parse_err_line(l).is_some()).collect();
     assert_eq!(errs.len(), 5, "{out}");
     assert!(out.contains("unknown workload: warp"), "{out}");
     assert!(out.contains("unknown parameter: frobnicate"), "{out}");
